@@ -1,0 +1,157 @@
+//! Collaborative serving over the threaded edge server: UE threads run the
+//! front model segment + AE compression and ship real payloads to the edge
+//! thread, which decodes and completes inference — the paper's Fig. 1/2
+//! workflow with actual CNN numerics (not the analytic simulator).
+//!
+//! Reports per-stage latency, wire sizes, throughput, and split-vs-local
+//! top-1 agreement.
+//!
+//! Run: `cargo run --release --example collab_serving -- [model] [n_ues] [tasks_per_ue]`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::inference::CollabPipeline;
+use macci::coordinator::protocol::{Downlink, OffloadRequest, UeStateReport, Uplink};
+use macci::coordinator::server::{EdgeServer, ServerConfig};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+use macci::exp::fig4::smooth_images;
+use macci::runtime::artifacts::ArtifactStore;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "resnet18".into());
+    let n_ues: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let tasks: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let store = ArtifactStore::open("artifacts")?;
+    // one pipeline for the server, one per-UE front half (shares compiled
+    // executables through the runtime cache)
+    let server_pipeline = CollabPipeline::load(&store, &model)?;
+    let ue_pipeline = CollabPipeline::load(&store, &model)?;
+    let num_points = ue_pipeline.num_points();
+    let hw = ue_pipeline.meta.input_hw;
+
+    let pool = StatePool::new(
+        n_ues,
+        StateNorm {
+            lambda_tasks: tasks as f64,
+            frame_s: 0.5,
+            max_bits: 1.2e6,
+            d_max: 100.0,
+        },
+    );
+    // static decision: UE i splits at point (i mod 4) + 1
+    let actions: Vec<HybridAction> = (0..n_ues)
+        .map(|i| HybridAction::new(1 + (i % num_points), i % 2, 1.0, 1.0))
+        .collect();
+    let decisions = DecisionMaker::new(Box::new(StaticDecision {
+        actions: actions.clone(),
+    }));
+    let cfg = ServerConfig {
+        n_ues,
+        decision_interval: Duration::from_millis(20),
+        max_frames: 10_000,
+    };
+    let (server, mut downlinks) = EdgeServer::spawn(cfg, pool, decisions, Some(server_pipeline))?;
+
+    println!("=== collaborative serving: {model}, {n_ues} UEs x {tasks} tasks ===");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (ue, rx) in downlinks.drain(..).enumerate() {
+        let uplink = server.uplink.clone();
+        let images = smooth_images(tasks, hw, 100 + ue as u64);
+        let split_point = actions[ue].b;
+        // local reference logits for agreement checking are computed by
+        // the UE before offloading (demo-only; a real UE wouldn't)
+        let pipeline = CollabPipeline::load(&store, &model)?;
+        handles.push(std::thread::spawn(move || -> Result<(usize, usize, f64, f64, usize)> {
+            let mut agree = 0usize;
+            let mut done = 0usize;
+            let mut ue_compute = 0.0f64;
+            let mut wire_bits = 0usize;
+            let mut rtt = 0.0f64;
+            uplink.send(Uplink::Report(UeStateReport {
+                ue_id: ue,
+                tasks_left: tasks as u64,
+                compute_left_s: 0.0,
+                offload_left_bits: 0.0,
+                distance_m: 50.0,
+            }))?;
+            for (task, img) in images.iter().enumerate() {
+                let (encoded, timing) = pipeline.ue_half(img, split_point)?;
+                ue_compute += timing.ue_side_s();
+                wire_bits += encoded.wire_bits();
+                let sent = Instant::now();
+                uplink.send(Uplink::Offload(OffloadRequest {
+                    ue_id: ue,
+                    task_id: task as u64,
+                    b: split_point,
+                    payload: encoded.to_wire()?,
+                    calibration: Some((encoded.lo, encoded.hi)),
+                }))?;
+                // await our result (ignore decision broadcasts)
+                loop {
+                    match rx.recv_timeout(Duration::from_secs(30))? {
+                        Downlink::Result(res) => {
+                            rtt += sent.elapsed().as_secs_f64();
+                            let local = pipeline.infer_local(img)?;
+                            let am = |v: &[f32]| {
+                                v.iter()
+                                    .enumerate()
+                                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                                    .map(|(i, _)| i)
+                                    .unwrap()
+                            };
+                            if am(&res.logits) == am(&local) {
+                                agree += 1;
+                            }
+                            done += 1;
+                            break;
+                        }
+                        Downlink::Decision(_) => continue,
+                        Downlink::Shutdown => anyhow::bail!("server shut down early"),
+                    }
+                }
+            }
+            uplink.send(Uplink::Goodbye { ue_id: ue })?;
+            Ok((done, agree, ue_compute, rtt, wire_bits))
+        }));
+    }
+
+    let mut total_done = 0;
+    let mut total_agree = 0;
+    let mut total_ue = 0.0;
+    let mut total_rtt = 0.0;
+    let mut total_bits = 0usize;
+    for h in handles {
+        let (done, agree, ue_s, rtt, bits) = h.join().expect("ue thread")?;
+        total_done += done;
+        total_agree += agree;
+        total_ue += ue_s;
+        total_rtt += rtt;
+        total_bits += bits;
+    }
+    let stats = server.join();
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("served {total_done} tasks in {wall:.2}s -> {:.1} req/s", total_done as f64 / wall);
+    println!(
+        "per-task: UE half {:.2} ms | wire {:.1} kbit | round-trip {:.2} ms",
+        total_ue / total_done as f64 * 1e3,
+        total_bits as f64 / total_done as f64 / 1e3,
+        total_rtt / total_done as f64 * 1e3
+    );
+    println!(
+        "edge: {} offloads served ({} feature / {} raw), {:.2} ms avg edge compute",
+        stats.offloads_served,
+        stats.feature_offloads,
+        stats.raw_offloads,
+        stats.edge_compute_s / stats.offloads_served.max(1) as f64 * 1e3
+    );
+    println!("split-vs-local top-1 agreement: {total_agree}/{total_done}");
+    assert_eq!(total_done, n_ues * tasks, "all tasks must complete");
+    Ok(())
+}

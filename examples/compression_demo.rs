@@ -1,0 +1,83 @@
+//! Feature-compression walkthrough (paper Sec. 2): runs a real image
+//! through the split backbone at every partition point and compares the
+//! lightweight autoencoder (Pallas conv1x1 + quant kernels, AOT) against
+//! the JALAD baseline (8-bit quant + Huffman, native Rust) on:
+//!   compression rate, payload size, reconstruction error, top-1 agreement.
+//!
+//! Run: `cargo run --release --example compression_demo -- [model]`
+
+use anyhow::Result;
+use macci::compress::jalad::JaladCompressor;
+use macci::coordinator::inference::CollabPipeline;
+use macci::exp::fig4::smooth_images;
+use macci::runtime::artifacts::ArtifactStore;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let store = ArtifactStore::open("artifacts")?;
+    let pipeline = CollabPipeline::load(&store, &model)?;
+    let jalad = JaladCompressor::new();
+    let images = smooth_images(4, pipeline.meta.input_hw, 7);
+
+    println!("=== feature compression on {model} ({} classes) ===", pipeline.meta.num_classes);
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "point", "feat kbit", "AE kbit", "AE rate", "JALAD rate", "AE err", "agree"
+    );
+
+    for p in 1..=pipeline.num_points() {
+        let mut ae_bits = 0.0;
+        let mut feat_bits = 0.0;
+        let mut jalad_rate = 0.0;
+        let mut err = 0.0f64;
+        let mut agree = 0usize;
+        for img in &images {
+            let feature = pipeline.front_feature(img, p)?;
+            feat_bits += (feature.len() * 32) as f64;
+            jalad_rate += jalad.rate(&feature);
+
+            let (encoded, mut timing) = pipeline.ue_half(img, p)?;
+            ae_bits += encoded.wire_bits() as f64;
+            let logits = pipeline.edge_half(&encoded, p, &mut timing)?;
+            let local = pipeline.infer_local(img)?;
+            let am = |v: &[f32]| {
+                v.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
+            if am(&logits) == am(&local) {
+                agree += 1;
+            }
+            // reconstruction error via decode
+            let restored = decode_roundtrip(&pipeline, img, p)?;
+            let n = feature.len() as f64;
+            err += feature
+                .iter()
+                .zip(&restored)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / n;
+        }
+        let n = images.len() as f64;
+        println!(
+            "{:>6} {:>12.1} {:>12.1} {:>11.1}x {:>11.1}x {:>10.4} {:>7}/{}",
+            format!("p{p}"),
+            feat_bits / n / 1e3,
+            ae_bits / n / 1e3,
+            feat_bits / ae_bits,
+            jalad_rate / n,
+            (err / n).sqrt(),
+            agree,
+            images.len()
+        );
+    }
+    println!("\n(AE rate = paper Eq. 3 R = ch*32/(ch'*bits); JALAD measured via Huffman on 8-bit codes)");
+    Ok(())
+}
+
+fn decode_roundtrip(pipeline: &CollabPipeline, img: &[f32], p: usize) -> Result<Vec<f32>> {
+    let (encoded, _t) = pipeline.ue_half(img, p)?;
+    pipeline.decode_feature(&encoded, p)
+}

@@ -1,0 +1,82 @@
+//! End-to-end edge-learning driver — the repository's headline validation
+//! run (recorded in EXPERIMENTS.md).
+//!
+//! Trains the full MAHPPO stack (N = 5 UEs, ResNet18 profile) for several
+//! thousand frames with ALL network compute flowing through the AOT
+//! Pallas/JAX artifacts on the PJRT runtime, logs the reward curve, then
+//! evaluates the learned policy against the Local and JALAD baselines and
+//! prints the overhead-savings summary.
+//!
+//! Run: `cargo run --release --example edge_learning -- [frames] [n_ues]`
+
+use anyhow::Result;
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::profiles::DeviceProfile;
+use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+use macci::runtime::artifacts::ArtifactStore;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let frames: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8_000);
+    let n_ues: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let store = ArtifactStore::open("artifacts")?;
+    let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+    let scenario = ScenarioConfig {
+        n_ues,
+        lambda_tasks: 200.0,
+        ..Default::default()
+    };
+
+    println!("=== edge learning: MAHPPO, N = {n_ues}, {frames} frames ===");
+    let mut trainer = MahppoTrainer::new(&store, &profile, scenario.clone(), TrainConfig::default())?;
+    let report = trainer.train(frames)?;
+
+    // reward curve (sampled)
+    println!("\nreward curve (episode -> cumulative reward, smoothed):");
+    let curve = report.episode_rewards.smoothed(5);
+    let stride = (curve.ys.len() / 16).max(1);
+    for i in (0..curve.ys.len()).step_by(stride) {
+        println!("  ep {:>4}  {:>10.2}  {}", i, curve.ys[i], bar(curve.ys[i], &curve.ys));
+    }
+    println!(
+        "{} episodes over {} frames in {:.1}s ({:.0} frames/s, incl. {} PPO rounds)",
+        report.episodes,
+        report.frames,
+        report.wall_s,
+        report.frames as f64 / report.wall_s,
+        report.value_losses.ys.len(),
+    );
+
+    // evaluation vs baselines
+    let mut eval_sc = scenario.clone();
+    eval_sc.eval_mode = true;
+    trainer.env.cfg.eval_mode = true;
+    let ours = trainer.evaluate(3)?;
+
+    let mut env = MultiAgentEnv::new(profile.clone(), eval_sc.clone(), 11)?;
+    let mut local = BaselinePolicy::new(PolicyKind::Local, 0);
+    let base = evaluate_policy(&mut local, &mut env, 1)?;
+    let mut random = BaselinePolicy::new(PolicyKind::Random, 1);
+    let rand = evaluate_policy(&mut random, &mut env, 1)?;
+
+    println!("\n               latency (ms)   energy (mJ)   reward");
+    println!("  MAHPPO       {:>10.1}   {:>10.1}   {:>8.2}", ours.avg_latency * 1e3, ours.avg_energy * 1e3, ours.avg_reward);
+    println!("  Local        {:>10.1}   {:>10.1}   {:>8.2}", base.avg_latency * 1e3, base.avg_energy * 1e3, base.avg_reward);
+    println!("  Random       {:>10.1}   {:>10.1}   {:>8.2}", rand.avg_latency * 1e3, rand.avg_energy * 1e3, rand.avg_reward);
+    println!(
+        "\nsavings vs local: latency {:+.0}% | energy {:+.0}%  (paper @N=3: -56% / -72%)",
+        (ours.avg_latency / base.avg_latency - 1.0) * 100.0,
+        (ours.avg_energy / base.avg_energy - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn bar(v: f64, all: &[f64]) -> String {
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let frac = if hi > lo { (v - lo) / (hi - lo) } else { 1.0 };
+    "#".repeat(1 + (frac * 40.0) as usize)
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. open the artifact store (PJRT CPU client + manifest),
+//! 2. simulate the multi-UE environment under a baseline policy,
+//! 3. train a small MAHPPO agent for a few hundred frames,
+//! 4. compare the learned policy against full-local inference.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::profiles::DeviceProfile;
+use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+use macci::runtime::artifacts::ArtifactStore;
+
+fn main() -> Result<()> {
+    // 1. artifacts (HLO modules, profiles, trained weights)
+    let store = ArtifactStore::open("artifacts")?;
+    println!("PJRT platform: {}", store.runtime().platform());
+
+    let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+    println!(
+        "device profile: full-local inference = {:.1} ms / {:.1} mJ",
+        profile.full_local_t * 1e3,
+        profile.full_local_e * 1e3
+    );
+
+    // 2. the environment under the Local baseline
+    let scenario = ScenarioConfig {
+        n_ues: 3,
+        lambda_tasks: 50.0,
+        eval_tasks: 50,
+        eval_mode: true,
+        ..Default::default()
+    };
+    let mut env = MultiAgentEnv::new(profile.clone(), scenario.clone(), 1)?;
+    let mut local = BaselinePolicy::new(PolicyKind::Local, 0);
+    let base = evaluate_policy(&mut local, &mut env, 1)?;
+    println!(
+        "local baseline: {:.1} ms / {:.1} mJ per task",
+        base.avg_latency * 1e3,
+        base.avg_energy * 1e3
+    );
+
+    // 3. train MAHPPO briefly (N = 3)
+    let mut train_scenario = scenario.clone();
+    train_scenario.eval_mode = false;
+    let mut trainer = MahppoTrainer::new(
+        &store,
+        &profile,
+        train_scenario,
+        TrainConfig {
+            buffer_size: 512,
+            minibatch: 256,
+            ..Default::default()
+        },
+    )?;
+    println!("training MAHPPO for 2000 frames ...");
+    let report = trainer.train(2000)?;
+    println!(
+        "  {} episodes, final episode reward {:.2} ({:.1} s wall)",
+        report.episodes,
+        report.final_reward(),
+        report.wall_s
+    );
+
+    // 4. greedy evaluation vs the baseline
+    trainer.env.cfg.eval_mode = true;
+    trainer.env.cfg.eval_tasks = 50;
+    let ours = trainer.evaluate(1)?;
+    println!(
+        "MAHPPO:        {:.1} ms / {:.1} mJ per task",
+        ours.avg_latency * 1e3,
+        ours.avg_energy * 1e3
+    );
+    println!(
+        "savings vs local: latency {:+.0}%, energy {:+.0}%",
+        (1.0 - ours.avg_latency / base.avg_latency) * 100.0,
+        (1.0 - ours.avg_energy / base.avg_energy) * 100.0
+    );
+    Ok(())
+}

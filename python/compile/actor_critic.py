@@ -1,0 +1,232 @@
+"""MAHPPO actor / critic networks and PPO-clip update steps (paper Sec. 5).
+
+Architecture (paper Sec. 6.3.1 "Agent"):
+  * each of the N actors: shared trunk FC 4N->256->128 (tanh), then three
+    branch heads (64 hidden each):
+      - partition-point branch -> B_n+2 logits -> softmax        (Eq. 13)
+      - offloading-channel branch -> C logits -> softmax          (Eq. 13)
+      - transmit-power branch -> (mu, log_std) of a Gaussian      (Eq. 14)
+  * one central critic: FC 4N->256->128->64->1.
+
+Every layer routes through the Pallas `dense` kernel, so both the B=1
+serving forward and the fwd+bwd+Adam update artifacts carry the L1 kernels
+in their HLO.
+
+The *hybrid* action log-prob (used for the PPO ratio, Eq. 17/19) is the sum
+of the two categorical log-probs and the Gaussian log-prob — the three
+branches are conditionally independent given the state.
+
+Action semantics: the continuous head emits an unsquashed pre-action `a_p`;
+the environment maps it to power via p = p_max * sigmoid(a_p), which keeps
+the policy-gradient math exactly Gaussian while enforcing constraint (C3)
+0 < p <= p_max.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ParamSpec,
+    adam_step,
+    categorical_entropy,
+    gaussian_entropy,
+    gaussian_log_prob,
+)
+from .kernels.dense import dense
+
+# Network size constants (paper Sec. 6.3.1).
+TRUNK = (256, 128)
+BRANCH_HIDDEN = 64
+CRITIC = (256, 128, 64)
+
+
+@dataclass(frozen=True)
+class ActorConfig:
+    n_ues: int          # N — state is 4 vectors of length N
+    n_partition: int    # B_n + 2 discrete split choices (0..B_n+1)
+    n_channels: int     # C
+
+    @property
+    def state_dim(self) -> int:
+        return 4 * self.n_ues
+
+
+def actor_spec(cfg: ActorConfig) -> ParamSpec:
+    d = cfg.state_dim
+    return ParamSpec.build(
+        [
+            ("w_t0", (d, TRUNK[0])),
+            ("b_t0", (TRUNK[0],)),
+            ("w_t1", (TRUNK[0], TRUNK[1])),
+            ("b_t1", (TRUNK[1],)),
+            # partition-point branch
+            ("w_b0", (TRUNK[1], BRANCH_HIDDEN)),
+            ("b_b0", (BRANCH_HIDDEN,)),
+            ("w_b1", (BRANCH_HIDDEN, cfg.n_partition)),
+            ("b_b1", (cfg.n_partition,)),
+            # channel branch
+            ("w_c0", (TRUNK[1], BRANCH_HIDDEN)),
+            ("b_c0", (BRANCH_HIDDEN,)),
+            ("w_c1", (BRANCH_HIDDEN, cfg.n_channels)),
+            ("b_c1", (cfg.n_channels,)),
+            # power branch: mu and a state-dependent log_std
+            ("w_p0", (TRUNK[1], BRANCH_HIDDEN)),
+            ("b_p0", (BRANCH_HIDDEN,)),
+            ("w_p1", (BRANCH_HIDDEN, 2)),
+            ("b_p1_mu", (1,)),
+            ("b_p1_log_std", (1,)),
+        ]
+    )
+
+
+def critic_spec(cfg: ActorConfig) -> ParamSpec:
+    d = cfg.state_dim
+    return ParamSpec.build(
+        [
+            ("w_0", (d, CRITIC[0])),
+            ("b_0", (CRITIC[0],)),
+            ("w_1", (CRITIC[0], CRITIC[1])),
+            ("b_1", (CRITIC[1],)),
+            ("w_2", (CRITIC[1], CRITIC[2])),
+            ("b_2", (CRITIC[2],)),
+            ("w_3", (CRITIC[2], 1)),
+            ("b_3", (1,)),
+        ]
+    )
+
+
+def _softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def actor_forward(
+    cfg: ActorConfig, flat: jnp.ndarray, state: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """state (B, 4N) -> (probs_b (B,P), probs_c (B,C), mu (B,1), log_std (B,1))."""
+    p = actor_spec(cfg).unflatten(flat)
+    h = dense(state, p["w_t0"], p["b_t0"], "tanh")
+    h = dense(h, p["w_t1"], p["b_t1"], "tanh")
+
+    hb = dense(h, p["w_b0"], p["b_b0"], "tanh")
+    logits_b = dense(hb, p["w_b1"], p["b_b1"], "linear")
+
+    hc = dense(h, p["w_c0"], p["b_c0"], "tanh")
+    logits_c = dense(hc, p["w_c1"], p["b_c1"], "linear")
+
+    hp = dense(h, p["w_p0"], p["b_p0"], "tanh")
+    bias_p = jnp.concatenate([p["b_p1_mu"], p["b_p1_log_std"]])
+    mu_std = dense(hp, p["w_p1"], bias_p, "linear")
+    mu = mu_std[:, 0:1]
+    log_std = jnp.clip(mu_std[:, 1:2], -4.0, 1.0)
+
+    return _softmax(logits_b), _softmax(logits_c), mu, log_std
+
+
+def critic_forward(cfg: ActorConfig, flat: jnp.ndarray, state: jnp.ndarray) -> jnp.ndarray:
+    """state (B, 4N) -> value (B, 1)."""
+    p = critic_spec(cfg).unflatten(flat)
+    h = dense(state, p["w_0"], p["b_0"], "tanh")
+    h = dense(h, p["w_1"], p["b_1"], "tanh")
+    h = dense(h, p["w_2"], p["b_2"], "tanh")
+    return dense(h, p["w_3"], p["b_3"], "linear")
+
+
+def hybrid_log_prob(
+    cfg: ActorConfig,
+    flat: jnp.ndarray,
+    state: jnp.ndarray,
+    a_b: jnp.ndarray,      # (B,) int32 partition choice
+    a_c: jnp.ndarray,      # (B,) int32 channel choice
+    a_p: jnp.ndarray,      # (B,) f32 pre-squash power action
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-sample hybrid log pi(a|s) and entropy H(pi(.|s))."""
+    probs_b, probs_c, mu, log_std = actor_forward(cfg, flat, state)
+    bsz = state.shape[0]
+    idx = jnp.arange(bsz)
+    lp_b = jnp.log(jnp.clip(probs_b[idx, a_b], 1e-8, 1.0))
+    lp_c = jnp.log(jnp.clip(probs_c[idx, a_c], 1e-8, 1.0))
+    lp_p = gaussian_log_prob(a_p, mu[:, 0], log_std[:, 0])
+    logp = lp_b + lp_c + lp_p
+    ent = (
+        categorical_entropy(probs_b)
+        + categorical_entropy(probs_c)
+        + gaussian_entropy(log_std[:, 0])
+    )
+    return logp, ent
+
+
+def actor_loss(
+    cfg: ActorConfig,
+    flat: jnp.ndarray,
+    state: jnp.ndarray,
+    a_b: jnp.ndarray,
+    a_c: jnp.ndarray,
+    a_p: jnp.ndarray,
+    old_logp: jnp.ndarray,
+    adv: jnp.ndarray,
+    clip_eps: float,
+    entropy_coef: float,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Negative of Eq. (20)'s per-actor term: -(L_CLIP + zeta * H)."""
+    logp, ent = hybrid_log_prob(cfg, flat, state, a_b, a_c, a_p)
+    ratio = jnp.exp(logp - old_logp)
+    surr1 = ratio * adv
+    surr2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    l_clip = jnp.mean(jnp.minimum(surr1, surr2))          # Eq. (19)
+    entropy = jnp.mean(ent)
+    loss = -(l_clip + entropy_coef * entropy)
+    clip_frac = jnp.mean((jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32))
+    return loss, (entropy, clip_frac)
+
+
+def actor_update(
+    cfg: ActorConfig,
+    flat: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    t: jnp.ndarray,          # scalar f32, 1-based Adam step
+    lr: jnp.ndarray,         # scalar f32
+    state: jnp.ndarray,
+    a_b: jnp.ndarray,
+    a_c: jnp.ndarray,
+    a_p: jnp.ndarray,
+    old_logp: jnp.ndarray,
+    adv: jnp.ndarray,
+    clip_eps: float = 0.2,
+    entropy_coef: float = 0.001,
+):
+    """One PPO minibatch step for one actor. Returns the full tuple the Rust
+    trainer needs: (params', m', v', loss, entropy, clip_frac)."""
+    (loss, (ent, cf)), g = jax.value_and_grad(
+        lambda f: actor_loss(cfg, f, state, a_b, a_c, a_p, old_logp, adv, clip_eps, entropy_coef),
+        has_aux=True,
+    )(flat)
+    p2, m2, v2 = adam_step(flat, g, m, v, t, lr)
+    return p2, m2, v2, loss, ent, cf
+
+
+def critic_update(
+    cfg: ActorConfig,
+    flat: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    t: jnp.ndarray,
+    lr: jnp.ndarray,
+    state: jnp.ndarray,
+    returns: jnp.ndarray,    # (B,) sampled cumulative reward V' (Eq. 15)
+):
+    """One critic minibatch step minimizing Eq. (16) (MSE to V')."""
+
+    def loss_fn(f):
+        v_pred = critic_forward(cfg, f, state)[:, 0]
+        return jnp.mean((v_pred - returns) ** 2)
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    p2, m2, v2 = adam_step(flat, g, m, v, t, lr)
+    return p2, m2, v2, loss

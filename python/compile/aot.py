@@ -1,0 +1,390 @@
+"""AOT lowering: every computation the Rust runtime executes, as HLO TEXT.
+
+Interchange is HLO text, NOT serialized HloModuleProto — jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (all under artifacts/, indexed by manifest.json):
+
+  rl/actor_fwd_n{N}_b{B}.hlo.txt       (params, state)            -> 4-tuple
+  rl/critic_fwd_n{N}_b{B}.hlo.txt      (params, state)            -> 1-tuple
+  rl/actor_update_n{N}_b{B}.hlo.txt    (params, m, v, t, lr, ...) -> 6-tuple
+  rl/critic_update_n{N}_b{B}.hlo.txt   (params, m, v, t, lr, ...) -> 4-tuple
+  models/{model}_full_b{B}.hlo.txt     (weights, image)           -> logits
+  models/{model}_front_p{i}.hlo.txt    (weights, image)           -> feature
+  models/{model}_back_p{i}.hlo.txt     (weights, feature)         -> logits
+  models/{model}_ae_enc_p{i}.hlo.txt   (ae_weights, feature)      -> (codes, lo, hi)
+  models/{model}_ae_dec_p{i}.hlo.txt   (ae_weights, codes, lo, hi)-> feature'
+  weights/{model}.bin, weights/{model}_ae_p{i}.bin   flat f32 weight files
+
+Network parameters cross the boundary as ONE flat f32 vector per network
+(common.ParamSpec / tree order for backbones), so the Rust side needs no
+pytree machinery and weight constants never bloat the HLO text.
+
+Usage: python -m compile.aot --out ../artifacts [--rl-only | --models-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets, trainer
+from .actor_critic import (
+    ActorConfig,
+    actor_forward,
+    actor_spec,
+    actor_update,
+    critic_forward,
+    critic_spec,
+    critic_update,
+)
+from .autoencoder import AeConfig, ae_flatten, ae_unflatten, decode, encode
+from .backbones import build as build_backbone
+from .profile import write_profiles
+
+MODELS = ("resnet18", "vgg11", "mobilenetv2")
+N_RANGE = range(3, 11)       # paper Fig. 10: N in 3..10
+N_FULL = 5                   # the N with the full fig9 batch-size matrix
+UPDATE_BATCHES_FULL = (128, 256, 512)
+UPDATE_BATCH = 256
+N_PARTITION = 6              # b in {0..5}
+N_CHANNELS = 2
+
+
+# ----------------------------------------------------------------- lowering
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Manifest:
+    def __init__(self, root: str):
+        self.root = root
+        self.entries: List[Dict] = []
+        self.meta: Dict = {}
+
+    def add(self, name: str, rel_path: str, inputs: List[Dict], outputs: List[Dict], **extra):
+        self.entries.append(
+            {"name": name, "path": rel_path, "inputs": inputs, "outputs": outputs, **extra}
+        )
+
+    def write(self):
+        with open(os.path.join(self.root, "manifest.json"), "w") as f:
+            json.dump({"artifacts": self.entries, **self.meta}, f, indent=1)
+
+
+def emit(man: Manifest, name: str, rel: str, text: str, inputs, outputs, **extra):
+    path = os.path.join(man.root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    man.add(name, rel, inputs, outputs, **extra)
+
+
+def io(name: str, *shape, dtype: str = "f32") -> Dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+# -------------------------------------------------------------- RL artifacts
+def emit_rl(man: Manifest, log=print) -> None:
+    for n in N_RANGE:
+        cfg = ActorConfig(n_ues=n, n_partition=N_PARTITION, n_channels=N_CHANNELS)
+        aspec, cspec = actor_spec(cfg), critic_spec(cfg)
+        ap, cp = aspec.size, cspec.size
+        d = cfg.state_dim
+        t0 = time.time()
+
+        # forward (serving / rollout) at B = 1
+        emit(
+            man,
+            f"actor_fwd_n{n}_b1",
+            f"rl/actor_fwd_n{n}_b1.hlo.txt",
+            lower(lambda f, s: actor_forward(cfg, f, s), f32(ap), f32(1, d)),
+            [io("params", ap), io("state", 1, d)],
+            [io("probs_b", 1, N_PARTITION), io("probs_c", 1, N_CHANNELS), io("mu", 1, 1), io("log_std", 1, 1)],
+            n_ues=n,
+        )
+        emit(
+            man,
+            f"critic_fwd_n{n}_b1",
+            f"rl/critic_fwd_n{n}_b1.hlo.txt",
+            lower(lambda f, s: critic_forward(cfg, f, s), f32(cp), f32(1, d)),
+            [io("params", cp), io("state", 1, d)],
+            [io("value", 1, 1)],
+            n_ues=n,
+        )
+
+        batches = UPDATE_BATCHES_FULL if n == N_FULL else (UPDATE_BATCH,)
+        for b in batches:
+            emit(
+                man,
+                f"actor_update_n{n}_b{b}",
+                f"rl/actor_update_n{n}_b{b}.hlo.txt",
+                lower(
+                    lambda f, m, v, t, lr, s, ab, ac, apw, olp, adv: actor_update(
+                        cfg, f, m, v, t, lr, s, ab, ac, apw, olp, adv
+                    ),
+                    f32(ap), f32(ap), f32(ap), f32(), f32(),
+                    f32(b, d), i32(b), i32(b), f32(b), f32(b), f32(b),
+                ),
+                [
+                    io("params", ap), io("m", ap), io("v", ap), io("t"), io("lr"),
+                    io("state", b, d), io("a_b", b, dtype="i32"), io("a_c", b, dtype="i32"),
+                    io("a_p", b), io("old_logp", b), io("adv", b),
+                ],
+                [
+                    io("params", ap), io("m", ap), io("v", ap),
+                    io("loss"), io("entropy"), io("clip_frac"),
+                ],
+                n_ues=n,
+            )
+            emit(
+                man,
+                f"critic_update_n{n}_b{b}",
+                f"rl/critic_update_n{n}_b{b}.hlo.txt",
+                lower(
+                    lambda f, m, v, t, lr, s, ret: critic_update(cfg, f, m, v, t, lr, s, ret),
+                    f32(cp), f32(cp), f32(cp), f32(), f32(), f32(b, d), f32(b),
+                ),
+                [
+                    io("params", cp), io("m", cp), io("v", cp), io("t"), io("lr"),
+                    io("state", b, d), io("returns", b),
+                ],
+                [io("params", cp), io("m", cp), io("v", cp), io("loss")],
+                n_ues=n,
+            )
+        log(f"[aot] rl n={n}: actor_params={ap} critic_params={cp} ({time.time()-t0:.1f}s)")
+
+    man.meta.setdefault("rl", {})
+    man.meta["rl"] = {
+        "n_range": list(N_RANGE),
+        "n_partition": N_PARTITION,
+        "n_channels": N_CHANNELS,
+        "update_batches": {str(N_FULL): list(UPDATE_BATCHES_FULL), "default": [UPDATE_BATCH]},
+        "specs": {
+            str(n): {
+                "actor": actor_spec(ActorConfig(n, N_PARTITION, N_CHANNELS)).to_manifest(),
+                "critic": critic_spec(ActorConfig(n, N_PARTITION, N_CHANNELS)).to_manifest(),
+                "actor_size": actor_spec(ActorConfig(n, N_PARTITION, N_CHANNELS)).size,
+                "critic_size": critic_spec(ActorConfig(n, N_PARTITION, N_CHANNELS)).size,
+            }
+            for n in N_RANGE
+        },
+    }
+
+
+# ----------------------------------------------------- backbone param flatten
+def tree_leaves_sorted(params) -> List[Tuple[str, np.ndarray]]:
+    """Deterministic (path, leaf) order: sorted depth-first dict walk."""
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], f"{path}/{k}" if path else k)
+        else:
+            out.append((path, np.asarray(node, np.float32)))
+
+    walk(params, "")
+    return out
+
+
+def tree_flatten_vec(params) -> np.ndarray:
+    return np.concatenate([leaf.reshape(-1) for _, leaf in tree_leaves_sorted(params)])
+
+
+def tree_unflatten_vec(template, flat: jnp.ndarray):
+    """Rebuild the nested dict from a flat vector using template's shapes."""
+    leaves = tree_leaves_sorted(template)
+    offsets = {}
+    o = 0
+    for path, leaf in leaves:
+        offsets[path] = (o, leaf.shape)
+        o += leaf.size
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(node[k], f"{path}/{k}" if path else k) for k in sorted(node)}
+        off, shape = offsets[path]
+        n = int(np.prod(shape)) if shape else 1
+        return flat[off : off + n].reshape(shape)
+
+    return walk(template, "")
+
+
+# ----------------------------------------------------------- model artifacts
+def emit_models(man: Manifest, out_root: str, budget=None, log=print) -> None:
+    """Train backbones + AEs (once), dump weights, lower segment artifacts."""
+    budget = budget or trainer.TrainBudget()
+    comp_dir = os.path.join(out_root, "compression")
+    weights_dir = os.path.join(out_root, "weights")
+    os.makedirs(weights_dir, exist_ok=True)
+
+    selected = os.environ.get("MACCI_MODELS", ",".join(MODELS)).split(",")
+    model_meta = {}
+    for model in [m for m in MODELS if m in selected]:
+        bb, params, points, summary = trainer.run_compression_experiments(
+            model, comp_dir, budget, with_xi=(model == "resnet18"), log=log
+        )
+        template = params
+        flat = tree_flatten_vec(params)
+        wpath = os.path.join(weights_dir, f"{model}.bin")
+        flat.tofile(wpath)
+        wsize = flat.size
+        hw = bb.input_hw
+
+        def full_fn(w, x):
+            p = tree_unflatten_vec(template, w)
+            return (bb.forward(p, x),)
+
+        for b in (1, 8):
+            emit(
+                man,
+                f"{model}_full_b{b}",
+                f"models/{model}_full_b{b}.hlo.txt",
+                lower(full_fn, f32(wsize), f32(b, 3, hw, hw)),
+                [io("weights", wsize), io("image", b, 3, hw, hw)],
+                [io("logits", b, datasets.NUM_CLASSES)],
+                model=model,
+            )
+
+        pts_meta = []
+        for point in range(1, 5):
+            ch, fh, fw = bb.feature_shape(point)
+            chosen = points[point - 1]["chosen"]
+            cfg: AeConfig = chosen["cfg"]
+            ae_flat = ae_flatten({k: np.asarray(v) for k, v in chosen["params"].items()})
+            ae_path = os.path.join(weights_dir, f"{model}_ae_p{point}.bin")
+            ae_flat.tofile(ae_path)
+
+            def front_fn(w, x, point=point):
+                p = tree_unflatten_vec(template, w)
+                return (bb.forward_front(p, x, point),)
+
+            def back_fn(w, f, point=point):
+                p = tree_unflatten_vec(template, w)
+                return (bb.forward_back(p, f, point),)
+
+            def enc_fn(aw, f, cfg=cfg):
+                return encode(cfg, ae_unflatten(cfg, aw), f)
+
+            def dec_fn(aw, codes, lo, hi, cfg=cfg):
+                return (decode(cfg, ae_unflatten(cfg, aw), codes, lo, hi),)
+
+            emit(
+                man, f"{model}_front_p{point}", f"models/{model}_front_p{point}.hlo.txt",
+                lower(front_fn, f32(wsize), f32(1, 3, hw, hw)),
+                [io("weights", wsize), io("image", 1, 3, hw, hw)],
+                [io("feature", 1, ch, fh, fw)], model=model, point=point,
+            )
+            emit(
+                man, f"{model}_back_p{point}", f"models/{model}_back_p{point}.hlo.txt",
+                lower(back_fn, f32(wsize), f32(1, ch, fh, fw)),
+                [io("weights", wsize), io("feature", 1, ch, fh, fw)],
+                [io("logits", 1, datasets.NUM_CLASSES)], model=model, point=point,
+            )
+            emit(
+                man, f"{model}_ae_enc_p{point}", f"models/{model}_ae_enc_p{point}.hlo.txt",
+                lower(enc_fn, f32(ae_flat.size), f32(1, ch, fh, fw)),
+                [io("ae_weights", ae_flat.size), io("feature", 1, ch, fh, fw)],
+                [io("codes", 1, cfg.ch_r, fh, fw), io("lo"), io("hi")],
+                model=model, point=point,
+            )
+            emit(
+                man, f"{model}_ae_dec_p{point}", f"models/{model}_ae_dec_p{point}.hlo.txt",
+                lower(dec_fn, f32(ae_flat.size), f32(1, cfg.ch_r, fh, fw), f32(), f32()),
+                [io("ae_weights", ae_flat.size), io("codes", 1, cfg.ch_r, fh, fw), io("lo"), io("hi")],
+                [io("feature", 1, ch, fh, fw)], model=model, point=point,
+            )
+            pts_meta.append(
+                {
+                    "point": point, "ch": ch, "h": fh, "w": fw,
+                    "ch_r": cfg.ch_r, "bits": cfg.bits, "rate": cfg.rate,
+                    "ae_weights": f"weights/{model}_ae_p{point}.bin",
+                    "ae_weights_size": int(ae_flat.size),
+                }
+            )
+            log(f"[aot] {model} p{point}: ch={ch} ch_r={cfg.ch_r} R={cfg.rate:.1f}")
+
+        model_meta[model] = {
+            "weights": f"weights/{model}.bin",
+            "weights_size": int(wsize),
+            "input_hw": hw,
+            "num_classes": datasets.NUM_CLASSES,
+            "base_acc": summary["base_acc"],
+            "points": pts_meta,
+        }
+
+    man.meta["models"] = model_meta
+
+
+# ------------------------------------------------------------------- driver
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--rl-only", action="store_true")
+    ap.add_argument("--models-only", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    man = Manifest(out)
+    # merge with an existing manifest so rl/models halves can build separately
+    prev_path = os.path.join(out, "manifest.json")
+    prev = None
+    if os.path.exists(prev_path):
+        with open(prev_path) as f:
+            prev = json.load(f)
+
+    t0 = time.time()
+    if not args.models_only:
+        emit_rl(man)
+    if not args.rl_only:
+        emit_models(man, out)
+        write_profiles(os.path.join(out, "profiles"), os.path.join(out, "compression"))
+    else:
+        # profiles can be produced without trained compressors (defaults)
+        if not os.path.exists(os.path.join(out, "profiles", "resnet18.json")):
+            write_profiles(os.path.join(out, "profiles"), os.path.join(out, "compression"))
+
+    if prev is not None:
+        have = {e["name"] for e in man.entries}
+        for e in prev.get("artifacts", []):
+            if e["name"] not in have:
+                man.entries.append(e)
+        if "rl" not in man.meta and "rl" in prev:
+            man.meta["rl"] = prev["rl"]
+        # deep-merge models so partial (MACCI_MODELS=...) rebuilds keep the rest
+        merged = dict(prev.get("models", {}))
+        merged.update(man.meta.get("models", {}))
+        if merged:
+            man.meta["models"] = merged
+    man.write()
+    print(f"[aot] wrote {len(man.entries)} artifacts to {out} in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

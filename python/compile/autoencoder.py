@@ -1,0 +1,103 @@
+"""Lightweight autoencoder feature compressor (paper Sec. 2).
+
+Encoder = one 1x1 conv shrinking channels ch -> ch' (compression rate
+R_c = ch/ch'), decoder = one 1x1 conv restoring ch' -> ch, plus `bits`-wide
+quantization of the encoder output (R_q = 32/bits). Overall rate, Eq. (3):
+
+    R = R_c * R_q = ch * 32 / (ch' * bits)
+
+Both convs route through the Pallas `conv1x1` kernel; quantization routes
+through the Pallas `quant` kernels with a straight-through estimator during
+training so the round-off error participates in the loss (Eq. 4).
+
+Calibration: quant min/max are taken per-tensor at inference (the paper
+permits replacing them with stats from a pre-collected set; per-tensor is
+what the AOT encode artifact does, transmitting lo/hi alongside the codes —
+2 floats of overhead, negligible against the feature payload).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv1x1 import conv1x1
+from .kernels import quant as qk
+
+
+@dataclass(frozen=True)
+class AeConfig:
+    ch: int        # channels of the intermediate feature at this cut
+    ch_r: int      # reduced channels (ch' < ch)
+    bits: int = 8  # quantization bit-width c_q
+
+    @property
+    def rate(self) -> float:
+        """Overall compression rate R (Eq. 3)."""
+        return self.ch * 32.0 / (self.ch_r * self.bits)
+
+    def compressed_bits(self, h: int, w: int) -> float:
+        """Wire size of one compressed feature map (bits)."""
+        return self.ch_r * h * w * self.bits + 64.0  # + lo/hi floats
+
+
+def ae_init(cfg: AeConfig, seed: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    we = rng.normal(0.0, math.sqrt(1.0 / cfg.ch), (cfg.ch, cfg.ch_r)).astype(np.float32)
+    wd = rng.normal(0.0, math.sqrt(1.0 / cfg.ch_r), (cfg.ch_r, cfg.ch)).astype(np.float32)
+    return {
+        "w_enc": we,
+        "b_enc": np.zeros(cfg.ch_r, np.float32),
+        "w_dec": wd,
+        "b_dec": np.zeros(cfg.ch, np.float32),
+    }
+
+
+def ae_flatten(params: Dict) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(params[k], np.float32).reshape(-1) for k in ("w_enc", "b_enc", "w_dec", "b_dec")]
+    )
+
+
+def ae_unflatten(cfg: AeConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    c, cr = cfg.ch, cfg.ch_r
+    o = 0
+    out = {}
+    for name, shape in (
+        ("w_enc", (c, cr)),
+        ("b_enc", (cr,)),
+        ("w_dec", (cr, c)),
+        ("b_dec", (c,)),
+    ):
+        n = int(np.prod(shape))
+        out[name] = flat[o : o + n].reshape(shape)
+        o += n
+    return out
+
+
+def encode(cfg: AeConfig, params: Dict, feat: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """UE side: channel-reduce + quantize. Returns (codes, lo, hi)."""
+    z = conv1x1(feat, params["w_enc"], params["b_enc"])
+    lo = jnp.min(z)
+    hi = jnp.max(z)
+    codes = qk.quantize(z, lo, hi, cfg.bits)
+    return codes, lo, hi
+
+
+def decode(cfg: AeConfig, params: Dict, codes: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Edge side: dequantize + channel-restore."""
+    z = qk.dequantize(codes, lo, hi, cfg.bits)
+    return conv1x1(z, params["w_dec"], params["b_dec"])
+
+
+def reconstruct_ste(cfg: AeConfig, params: Dict, feat: jnp.ndarray) -> jnp.ndarray:
+    """Training path: encode -> (quantize with STE) -> decode."""
+    z = conv1x1(feat, params["w_enc"], params["b_enc"])
+    lo = jax.lax.stop_gradient(jnp.min(z))
+    hi = jax.lax.stop_gradient(jnp.max(z))
+    zq = qk.quantize_ste(z, lo, hi, cfg.bits)
+    return conv1x1(zq, params["w_dec"], params["b_dec"])

@@ -1,0 +1,33 @@
+"""Backbone zoo: ResNet18, VGG11, MobileNetV2 with the paper's partition points.
+
+Each backbone exposes the same structural interface (`Backbone`): an ordered
+list of coarse *modules* (the indivisible units of Sec. 3.2 — layers or
+residual blocks), four partition points chosen exactly as the paper does
+(Sec. 6.1 / 6.5), and segment-wise forward functions so the AOT path can
+lower `front_p{i}` / `back_p{i}` HLO artifacts for collaborative inference.
+
+Two scales are supported from the same architecture description:
+  * "demo"  — 32x32 input, reduced width: these are actually trained and
+    executed on the CPU PJRT runtime (serving example, compression sweeps);
+  * "paper" — 224x224 input, full width: never executed, used analytically
+    by profile.py to produce the paper-scale FLOPs/feature-size tables that
+    drive the MDP simulation (Jetson-class overhead model).
+"""
+from .base import Backbone, ModuleStat
+from .resnet import ResNet18
+from .vgg import VGG11
+from .mobilenet import MobileNetV2
+
+REGISTRY = {
+    "resnet18": ResNet18,
+    "vgg11": VGG11,
+    "mobilenetv2": MobileNetV2,
+}
+
+
+def build(name: str, scale: str = "demo", num_classes: int = 16) -> Backbone:
+    try:
+        cls = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backbone '{name}' (have {sorted(REGISTRY)})")
+    return cls(scale=scale, num_classes=num_classes)

@@ -1,0 +1,109 @@
+"""Common structural interface for all backbones.
+
+A backbone is an ordered list of coarse modules (the paper's indivisible
+inference units, Sec. 3.2). Each module reports:
+  * a forward function over (params, x, train, tape),
+  * an analytic `stat(hw)` giving FLOPs / output shape at spatial size hw —
+    used by profile.py for the paper-scale device model without executing
+    anything.
+
+Partition points are indices into the module list: partition point i means
+"UE executes modules [0, cut_i), the edge executes [cut_i, end)"; the
+intermediate feature is the output of module cut_i - 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..layers import Params, StatsTape
+
+
+@dataclass
+class ModuleStat:
+    """Analytic per-module cost at a given input spatial size."""
+
+    name: str
+    flops: float                 # multiply-accumulates * 2
+    params: int
+    out_shape: Tuple[int, int, int]  # (C, H, W) after this module
+    kind: str = "conv"           # conv | fc | pool — drives the parallelism
+    #                              factor in the device power model
+
+
+class Backbone:
+    """Base class; subclasses populate self._modules and self._points."""
+
+    name: str = "base"
+
+    def __init__(self, scale: str = "demo", num_classes: int = 16):
+        assert scale in ("demo", "paper")
+        self.scale = scale
+        self.num_classes = num_classes
+        self.input_hw = 32 if scale == "demo" else 224
+        self.width_mult = 0.5 if scale == "demo" else 1.0
+        # populated by subclass:
+        self._modules: List[Tuple[str, Callable, Callable]] = []  # (name, fwd, stat)
+        self._points: List[int] = []  # 4 cut indices into self._modules
+        self._build()
+
+    # -- subclass hooks -------------------------------------------------
+    def _build(self) -> None:
+        raise NotImplementedError
+
+    def init(self, seed: int) -> Params:
+        raise NotImplementedError
+
+    # -- structural queries ---------------------------------------------
+    @property
+    def num_modules(self) -> int:
+        return len(self._modules)
+
+    @property
+    def partition_points(self) -> List[int]:
+        """4 cut indices; partition decision b in {0..5}: 0 = raw offload,
+        1..4 = these cuts, 5 = full local."""
+        return list(self._points)
+
+    def module_stats(self) -> List[ModuleStat]:
+        """Analytic stats, chained through the network at self.input_hw."""
+        stats: List[ModuleStat] = []
+        shape = (3, self.input_hw, self.input_hw)
+        for name, _fwd, stat in self._modules:
+            st = stat(shape)
+            stats.append(st)
+            shape = st.out_shape
+        return stats
+
+    def feature_shape(self, point: int) -> Tuple[int, int, int]:
+        """(C, H, W) of the intermediate feature at partition point (1-based)."""
+        cut = self._points[point - 1]
+        return self.module_stats()[cut - 1].out_shape
+
+    # -- forwards ---------------------------------------------------------
+    def forward_range(
+        self,
+        params: Params,
+        x: jnp.ndarray,
+        start: int,
+        end: int,
+        train: bool = False,
+        tape: Optional[StatsTape] = None,
+    ) -> jnp.ndarray:
+        for name, fwd, _stat in self._modules[start:end]:
+            x = fwd(params, x, train, tape)
+        return x
+
+    def forward(self, params: Params, x, train: bool = False, tape: Optional[StatsTape] = None):
+        return self.forward_range(params, x, 0, self.num_modules, train, tape)
+
+    def forward_front(self, params: Params, x, point: int, train: bool = False, tape=None):
+        """Modules [0, cut) — the UE-side segment for partition point (1-based)."""
+        return self.forward_range(params, x, 0, self._points[point - 1], train, tape)
+
+    def forward_back(self, params: Params, feat, point: int, train: bool = False, tape=None):
+        """Modules [cut, end) — the edge-side segment."""
+        return self.forward_range(params, feat, self._points[point - 1], self.num_modules, train, tape)

@@ -1,0 +1,179 @@
+"""MobileNetV2 (Sandler et al.) with the paper's partition points.
+
+Paper Sec. 6.5: "For MobileNetV2, we select 4 partitioning points after the
+last batch normalization layer of residual blocks containing a downsampling
+layer." MobileNetV2 has four stride-2 inverted-residual blocks (the stem
+conv is also stride 2 at paper scale but is not a residual block); the cuts
+land after each of those four blocks.
+
+Modules: stem conv, 17 inverted-residual blocks, head conv + classifier.
+Demo scale halves widths and uses stride 1 in the stem (32x32 input).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..layers import (
+    Params,
+    batch_norm,
+    bn_init,
+    conv2d,
+    conv_init,
+    dense_init,
+    global_avg_pool,
+    linear,
+    relu6,
+)
+from .base import Backbone, ModuleStat
+
+# (expansion t, out channels c, repeats n, stride s) — the paper's Table 2.
+_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def _make_divisible(v: float, divisor: int = 8) -> int:
+    return max(divisor, int(v + divisor / 2) // divisor * divisor)
+
+
+class MobileNetV2(Backbone):
+    name = "mobilenetv2"
+
+    def _build(self):
+        w = self.width_mult
+        self.stem_ch = _make_divisible(32 * w)
+        self.head_ch = _make_divisible(1280 * w) if self.scale == "paper" else _make_divisible(640 * w)
+        mods = [("stem", self._stem_fwd, self._stem_stat)]
+        self._block_cfg: List[Dict] = []
+        points = []
+        cin = self.stem_ch
+        bi = 0
+        for t, c, n, s in _CFG:
+            cout = _make_divisible(c * w)
+            for i in range(n):
+                stride = s if i == 0 else 1
+                if self.scale == "demo" and len(self._block_cfg) < 2:
+                    stride = 1  # keep early resolution at 32x32 scale
+                cfg = {
+                    "idx": bi,
+                    "cin": cin,
+                    "cout": cout,
+                    "t": t,
+                    "stride": stride,
+                    "residual": stride == 1 and cin == cout,
+                }
+                self._block_cfg.append(cfg)
+                mods.append((f"blk{bi}", self._block_fwd(cfg), self._block_stat(cfg)))
+                if stride == 2:
+                    points.append(len(mods))  # cut after this downsampling block
+                cin = cout
+                bi += 1
+        mods.append(("head", self._head_fwd, self._head_stat))
+        self._modules = mods
+        # exactly 4 downsampling blocks exist at paper scale; demo scale
+        # suppresses the first two strides, so pad/truncate to 4 cuts.
+        while len(points) < 4:
+            points.insert(0, max(2, points[0] - 2) if points else 2)
+        self._points = points[:4]
+        self._last_ch = cin
+
+    # -- stem --------------------------------------------------------------
+    def _stem_fwd(self, p, x, train, tape):
+        stride = 2 if self.scale == "paper" else 1
+        x = conv2d(p["stem_conv"], x, stride=stride)
+        x = batch_norm(p["stem_bn"], x, train, tape, "stem_bn")
+        return relu6(x)
+
+    def _stem_stat(self, in_shape):
+        _, h, _ = in_shape
+        stride = 2 if self.scale == "paper" else 1
+        ho = h // stride
+        return ModuleStat("stem", 2.0 * 3 * self.stem_ch * 9 * ho * ho, 3 * self.stem_ch * 9, (self.stem_ch, ho, ho), "conv")
+
+    # -- inverted residual ---------------------------------------------------
+    def _block_fwd(self, cfg):
+        key = f"blk{cfg['idx']}"
+
+        def fwd(p, x, train, tape):
+            blk = p[key]
+            mid = cfg["cin"] * cfg["t"]
+            out = x
+            if cfg["t"] != 1:
+                out = conv2d(blk["expand"], out, stride=1)
+                out = batch_norm(blk["expand_bn"], out, train, tape, f"{key}/expand_bn")
+                out = relu6(out)
+            out = conv2d(blk["dw"], out, stride=cfg["stride"], groups=mid)
+            out = batch_norm(blk["dw_bn"], out, train, tape, f"{key}/dw_bn")
+            out = relu6(out)
+            out = conv2d(blk["project"], out, stride=1)
+            out = batch_norm(blk["project_bn"], out, train, tape, f"{key}/project_bn")
+            if cfg["residual"]:
+                out = out + x
+            return out
+
+        return fwd
+
+    def _block_stat(self, cfg):
+        def stat(in_shape):
+            cin, h, _ = in_shape
+            mid = cfg["cin"] * cfg["t"]
+            ho = h // cfg["stride"]
+            fl = 0.0
+            pr = 0
+            if cfg["t"] != 1:
+                fl += 2.0 * cin * mid * h * h
+                pr += cin * mid
+            fl += 2.0 * mid * 9 * ho * ho          # depthwise
+            pr += mid * 9
+            fl += 2.0 * mid * cfg["cout"] * ho * ho
+            pr += mid * cfg["cout"]
+            return ModuleStat(f"blk{cfg['idx']}", fl, pr, (cfg["cout"], ho, ho), "conv")
+
+        return stat
+
+    # -- head ------------------------------------------------------------------
+    def _head_fwd(self, p, x, train, tape):
+        x = conv2d(p["head_conv"], x, stride=1)
+        x = batch_norm(p["head_bn"], x, train, tape, "head_bn")
+        x = relu6(x)
+        return linear(p["fc"], global_avg_pool(x))
+
+    def _head_stat(self, in_shape):
+        cin, h, _ = in_shape
+        fl = 2.0 * cin * self.head_ch * h * h + 2.0 * self.head_ch * self.num_classes
+        pr = cin * self.head_ch + self.head_ch * self.num_classes
+        return ModuleStat("head", fl, pr, (self.num_classes, 1, 1), "fc")
+
+    def init(self, seed: int) -> Params:
+        rng = np.random.default_rng(seed)
+        params: Dict = {
+            "stem_conv": conv_init(rng, 3, self.stem_ch, 3),
+            "stem_bn": bn_init(self.stem_ch),
+        }
+        for cfg in self._block_cfg:
+            key = f"blk{cfg['idx']}"
+            mid = cfg["cin"] * cfg["t"]
+            blk: Dict = {}
+            if cfg["t"] != 1:
+                blk["expand"] = conv_init(rng, cfg["cin"], mid, 1)
+                blk["expand_bn"] = bn_init(mid)
+            # depthwise: OIHW with I = 1 (feature_group_count = mid)
+            dw = conv_init(rng, 1, mid, 3)
+            blk["dw"] = dw
+            blk["dw_bn"] = bn_init(mid)
+            blk["project"] = conv_init(rng, mid, cfg["cout"], 1)
+            blk["project_bn"] = bn_init(cfg["cout"])
+            params[key] = blk
+        params["head_conv"] = conv_init(rng, self._last_ch, self.head_ch, 1)
+        params["head_bn"] = bn_init(self.head_ch)
+        params["fc"] = dense_init(rng, self.head_ch, self.num_classes)
+        return params

@@ -1,0 +1,156 @@
+"""ResNet18 (He et al. 2016) with the paper's four partition points.
+
+The paper (Sec. 6.1) partitions ResNet18 at "the output end of the second
+layer in each stage, i.e. the batch normalization layer" — one point after
+the second basic block of each of the four stages. Modules here are the
+indivisible units of Sec. 3.2: the stem, then eight residual blocks, then
+the pooled classifier head.
+
+Demo scale uses the standard CIFAR-style stem (3x3 conv, no maxpool) at half
+width; paper scale uses the ImageNet stem (7x7/2 conv + 3x3/2 maxpool) at
+full width. Partition indices are identical in both.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..layers import (
+    Params,
+    StatsTape,
+    batch_norm,
+    bn_init,
+    conv2d,
+    conv_init,
+    dense_init,
+    global_avg_pool,
+    linear,
+    max_pool,
+    relu,
+)
+from .base import Backbone, ModuleStat
+
+
+def _conv_flops(cin, cout, k, hw_out, groups=1):
+    return 2.0 * cin * cout * k * k * hw_out * hw_out / groups
+
+
+class ResNet18(Backbone):
+    name = "resnet18"
+
+    def _build(self):
+        w = self.width_mult
+        self.stage_ch = [max(8, int(c * w)) for c in (64, 128, 256, 512)]
+        self.stem_ch = self.stage_ch[0]
+        mods = []
+
+        if self.scale == "paper":
+            mods.append(("stem", self._stem_paper_fwd, self._stem_paper_stat))
+        else:
+            mods.append(("stem", self._stem_demo_fwd, self._stem_demo_stat))
+
+        for si, ch in enumerate(self.stage_ch):
+            for bi in range(2):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                mods.append(
+                    (
+                        f"s{si}b{bi}",
+                        self._block_fwd(si, bi, stride),
+                        self._block_stat(si, bi, stride),
+                    )
+                )
+        mods.append(("head", self._head_fwd, self._head_stat))
+        self._modules = mods
+        # cut AFTER the 2nd block of each stage: module list is
+        # [stem, s0b0, s0b1, s1b0, s1b1, s2b0, s2b1, s3b0, s3b1, head]
+        self._points = [3, 5, 7, 9]
+
+    # -- stem -------------------------------------------------------------
+    def _stem_demo_fwd(self, p, x, train, tape):
+        x = conv2d(p["stem_conv"], x, stride=1)
+        x = batch_norm(p["stem_bn"], x, train, tape, "stem_bn")
+        return relu(x)
+
+    def _stem_demo_stat(self, in_shape):
+        _, h, _ = in_shape
+        return ModuleStat("stem", _conv_flops(3, self.stem_ch, 3, h), 3 * self.stem_ch * 9, (self.stem_ch, h, h), "conv")
+
+    def _stem_paper_fwd(self, p, x, train, tape):
+        x = conv2d(p["stem_conv"], x, stride=2)
+        x = batch_norm(p["stem_bn"], x, train, tape, "stem_bn")
+        x = relu(x)
+        return max_pool(x, 3, 2) if x.shape[2] >= 4 else x
+
+    def _stem_paper_stat(self, in_shape):
+        _, h, _ = in_shape
+        h2 = h // 4
+        return ModuleStat("stem", _conv_flops(3, self.stem_ch, 7, h // 2), 3 * self.stem_ch * 49, (self.stem_ch, h2, h2), "conv")
+
+    # -- residual blocks ----------------------------------------------------
+    def _block_fwd(self, si, bi, stride):
+        key = f"s{si}b{bi}"
+
+        def fwd(p, x, train, tape):
+            blk = p[key]
+            out = conv2d(blk["conv1"], x, stride=stride)
+            out = batch_norm(blk["bn1"], out, train, tape, f"{key}/bn1")
+            out = relu(out)
+            out = conv2d(blk["conv2"], out, stride=1)
+            out = batch_norm(blk["bn2"], out, train, tape, f"{key}/bn2")
+            if "down_conv" in blk:
+                x = conv2d(blk["down_conv"], x, stride=stride)
+                x = batch_norm(blk["down_bn"], x, train, tape, f"{key}/down_bn")
+            return relu(out + x)
+
+        return fwd
+
+    def _block_stat(self, si, bi, stride):
+        def stat(in_shape):
+            cin, h, _ = in_shape
+            cout = self.stage_ch[si]
+            ho = h // stride
+            fl = _conv_flops(cin, cout, 3, ho) + _conv_flops(cout, cout, 3, ho)
+            pr = cin * cout * 9 + cout * cout * 9
+            if stride != 1 or cin != cout:
+                fl += _conv_flops(cin, cout, 1, ho)
+                pr += cin * cout
+            return ModuleStat(f"s{si}b{bi}", fl, pr, (cout, ho, ho), "conv")
+
+        return stat
+
+    # -- head --------------------------------------------------------------
+    def _head_fwd(self, p, x, train, tape):
+        return linear(p["fc"], global_avg_pool(x))
+
+    def _head_stat(self, in_shape):
+        cin, _, _ = in_shape
+        return ModuleStat("head", 2.0 * cin * self.num_classes, cin * self.num_classes, (self.num_classes, 1, 1), "fc")
+
+    # -- init ----------------------------------------------------------------
+    def init(self, seed: int) -> Params:
+        rng = np.random.default_rng(seed)
+        k_stem = 7 if self.scale == "paper" else 3
+        params: Dict = {
+            "stem_conv": conv_init(rng, 3, self.stem_ch, k_stem),
+            "stem_bn": bn_init(self.stem_ch),
+        }
+        cin = self.stem_ch
+        for si, ch in enumerate(self.stage_ch):
+            for bi in range(2):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                blk: Dict = {
+                    "conv1": conv_init(rng, cin, ch, 3),
+                    "bn1": bn_init(ch),
+                    "conv2": conv_init(rng, ch, ch, 3),
+                    "bn2": bn_init(ch),
+                }
+                if stride != 1 or cin != ch:
+                    blk["down_conv"] = conv_init(rng, cin, ch, 1)
+                    blk["down_bn"] = bn_init(ch)
+                params[f"s{si}b{bi}"] = blk
+                cin = ch
+        params["fc"] = dense_init(rng, cin, self.num_classes)
+        return params

@@ -1,0 +1,103 @@
+"""VGG11 (Simonyan & Zisserman) with partition points after MaxPool layers.
+
+Paper Sec. 6.5: "For VGG11, we select 4 partitioning points after MaxPool
+layers." VGG11 has five maxpools; we cut after the first four (the fifth
+leaves only the classifier head behind, which is never a useful split).
+
+Modules: conv(+bn)+relu and maxpool units, then the classifier head. BN is
+not in the original VGG11 but stabilizes the short build-time training run;
+it is folded into the conv module (VGG-BN variant, standard in torchvision).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..layers import (
+    Params,
+    batch_norm,
+    bn_init,
+    conv2d,
+    conv_init,
+    dense_init,
+    global_avg_pool,
+    linear,
+    max_pool,
+    relu,
+)
+from .base import Backbone, ModuleStat
+
+# VGG11 config "A": (channels, then M = maxpool)
+_CFG = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+class VGG11(Backbone):
+    name = "vgg11"
+
+    def _build(self):
+        w = self.width_mult
+        mods = []
+        self._chans: List[int] = []
+        conv_idx = 0
+        pool_count = 0
+        points = []
+        for item in _CFG:
+            if item == "M":
+                mods.append((f"pool{pool_count}", self._pool_fwd, self._pool_stat))
+                pool_count += 1
+                if pool_count <= 4:
+                    points.append(len(mods))  # cut right after this pool
+            else:
+                ch = max(8, int(item * w))
+                self._chans.append(ch)
+                mods.append(
+                    (f"conv{conv_idx}", self._conv_fwd(conv_idx), self._conv_stat(conv_idx, ch))
+                )
+                conv_idx += 1
+        mods.append(("head", self._head_fwd, self._head_stat))
+        self._modules = mods
+        self._points = points
+
+    def _conv_fwd(self, i):
+        key = f"conv{i}"
+
+        def fwd(p, x, train, tape):
+            x = conv2d(p[key], x, stride=1)
+            x = batch_norm(p[f"bn{i}"], x, train, tape, f"bn{i}")
+            return relu(x)
+
+        return fwd
+
+    def _conv_stat(self, i, cout):
+        def stat(in_shape):
+            cin, h, _ = in_shape
+            return ModuleStat(f"conv{i}", 2.0 * cin * cout * 9 * h * h, cin * cout * 9, (cout, h, h), "conv")
+
+        return stat
+
+    def _pool_fwd(self, p, x, train, tape):
+        return max_pool(x, 2, 2)
+
+    def _pool_stat(self, in_shape):
+        c, h, _ = in_shape
+        return ModuleStat("pool", c * h * h, 0, (c, h // 2, h // 2), "pool")
+
+    def _head_fwd(self, p, x, train, tape):
+        return linear(p["fc"], global_avg_pool(x))
+
+    def _head_stat(self, in_shape):
+        cin, _, _ = in_shape
+        return ModuleStat("head", 2.0 * cin * self.num_classes, cin * self.num_classes, (self.num_classes, 1, 1), "fc")
+
+    def init(self, seed: int) -> Params:
+        rng = np.random.default_rng(seed)
+        params: Dict = {}
+        cin = 3
+        for i, ch in enumerate(self._chans):
+            params[f"conv{i}"] = conv_init(rng, cin, ch, 3)
+            params[f"bn{i}"] = bn_init(ch)
+            cin = ch
+        params["fc"] = dense_init(rng, cin, self.num_classes)
+        return params

@@ -1,0 +1,112 @@
+"""Shared plumbing for the compile path.
+
+Flat-parameter convention: every network artifact exchanged with the Rust
+runtime takes its parameters as ONE flat f32 vector and unflattens it
+internally. `ParamSpec` owns the (name -> shape) layout, the offsets, the
+flatten/unflatten maps and the seeded initialization, and is serialized into
+artifacts/manifest.json so the Rust side can size and checkpoint the vectors
+without any pytree knowledge.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Ordered (name, shape) layout of a network's parameters."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @staticmethod
+    def build(entries: Sequence[Tuple[str, Sequence[int]]]) -> "ParamSpec":
+        return ParamSpec(tuple((n, tuple(s)) for n, s in entries))
+
+    @property
+    def size(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.entries)
+
+    def offsets(self) -> List[Tuple[str, int, int, Tuple[int, ...]]]:
+        out, off = [], 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            out.append((name, off, n, shape))
+            off += n
+        return out
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return {
+            name: flat[off : off + n].reshape(shape)
+            for name, off, n, shape in self.offsets()
+        }
+
+    def flatten(self, params: Dict[str, np.ndarray]) -> np.ndarray:
+        return np.concatenate([np.asarray(params[n], np.float32).reshape(-1) for n, _ in self.entries])
+
+    def init(self, seed: int) -> np.ndarray:
+        """He/Xavier-style init, deterministic in `seed`.
+
+        Weights named `w*` get scaled-gaussian fan-in init; biases (`b*`)
+        start at zero except `log_std`, which starts at -0.5 so the power
+        policy explores with moderate noise.
+        """
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            if name.startswith("w"):
+                fan_in = shape[0] if len(shape) > 1 else n
+                chunks.append(rng.normal(0.0, math.sqrt(1.0 / max(fan_in, 1)), n).astype(np.float32))
+            elif "log_std" in name:
+                chunks.append(np.full(n, -0.5, np.float32))
+            else:
+                chunks.append(np.zeros(n, np.float32))
+        return np.concatenate(chunks)
+
+    def to_manifest(self) -> List[Dict]:
+        return [
+            {"name": name, "offset": off, "count": n, "shape": list(shape)}
+            for name, off, n, shape in self.offsets()
+        ]
+
+
+def gaussian_log_prob(a: jnp.ndarray, mu: jnp.ndarray, log_std: jnp.ndarray) -> jnp.ndarray:
+    """log N(a; mu, exp(log_std)^2), elementwise."""
+    std = jnp.exp(log_std)
+    z = (a - mu) / std
+    return -0.5 * z * z - log_std - 0.5 * jnp.float32(math.log(2.0 * math.pi))
+
+
+def gaussian_entropy(log_std: jnp.ndarray) -> jnp.ndarray:
+    """H of N(mu, std): 0.5 ln(2 pi e) + ln std."""
+    return 0.5 * jnp.float32(1.0 + math.log(2.0 * math.pi)) + log_std
+
+
+def categorical_entropy(probs: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    p = jnp.clip(probs, 1e-8, 1.0)
+    return -jnp.sum(p * jnp.log(p), axis=axis)
+
+
+def adam_step(
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    t: jnp.ndarray,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """One Adam step on flat vectors. `t` is the 1-based step count (f32)."""
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mhat = m2 / (1.0 - jnp.power(jnp.float32(b1), t))
+    vhat = v2 / (1.0 - jnp.power(jnp.float32(b2), t))
+    p2 = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p2, m2, v2

@@ -1,0 +1,105 @@
+"""Pallas kernel for the paper's Sec. 2.2 channel-reduction autoencoder.
+
+A 1x1 convolution over an (N, C, H, W) feature map is exactly a channel-mix
+matmul over the flattened spatial axis: (N*H*W, C) @ (C, C'). On TPU that is
+a pure MXU workload; the paper implemented it as a CUDA conv on a Jetson
+Nano, we re-think it as a matmul (DESIGN.md §Hardware-Adaptation):
+
+  * the full (C, C') weight lives in VMEM across the whole grid (worst case
+    512x512 fp32 = 1 MiB << 16 MiB VMEM);
+  * the spatial axis is tiled into blocks of `_TILE_S` rows so each grid
+    step streams one HBM tile in, runs one MXU matmul, streams one tile out
+    — the BlockSpec below *is* the HBM<->VMEM schedule the paper expressed
+    with CUDA threadblocks.
+
+custom_vjp makes the kernel differentiable so the build-time autoencoder
+training (Eq. 4) backprops through it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE_S = 256
+
+
+def _pick_tile(s: int) -> int:
+    for t in (_TILE_S, 128, 64, 32, 16, 8, 4, 2):
+        if s % t == 0 and t <= s:
+            return t
+    return s
+
+
+def _mix_kernel(x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+def _channel_mix(xf: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(S, C) @ (C, C') + b with the S axis tiled."""
+    s, c = xf.shape
+    c2 = w.shape[1]
+    ts = _pick_tile(s)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, c2), lambda i: (0, 0)),
+            pl.BlockSpec((c2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ts, c2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, c2), jnp.float32),
+        interpret=True,
+    )(xf, w, b)
+
+
+def _mm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    s = a.shape[0]
+    ts = _pick_tile(s)
+    kern = lambda a_ref, b_ref, o_ref: o_ref.__setitem__(
+        ..., jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(s // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, a.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, b.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, b.shape[1]), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def conv1x1(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """1x1 conv: x (N, C, H, W), w (C, C'), b (C',) -> (N, C', H, W)."""
+    n, c, h, wd = x.shape
+    xf = x.transpose(0, 2, 3, 1).reshape(-1, c)
+    yf = _channel_mix(xf, w, b)
+    return yf.reshape(n, h, wd, w.shape[1]).transpose(0, 3, 1, 2)
+
+
+def _conv1x1_fwd(x, w, b):
+    return conv1x1(x, w, b), (x, w)
+
+
+def _conv1x1_bwd(res, g):
+    x, w = res
+    n, c, h, wd = x.shape
+    c2 = w.shape[1]
+    gf = g.transpose(0, 2, 3, 1).reshape(-1, c2)   # (S, C')
+    xf = x.transpose(0, 2, 3, 1).reshape(-1, c)    # (S, C)
+    dxf = _mm(gf, w.T)                             # (S, C)
+    dw = _mm(xf.T, gf) if xf.shape[1] % 2 == 0 else xf.T @ gf
+    db = jnp.sum(gf, axis=0)
+    dx = dxf.reshape(n, h, wd, c).transpose(0, 3, 1, 2)
+    return dx, dw, db
+
+
+conv1x1.defvjp(_conv1x1_fwd, _conv1x1_bwd)

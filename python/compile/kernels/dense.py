@@ -1,0 +1,111 @@
+"""Fused dense (matmul + bias + activation) Pallas kernel with custom VJP.
+
+This is the L1 hot-spot of the MAHPPO actor/critic MLPs: every layer of
+every network artifact lowers through this kernel, so it appears in both the
+serving-path actor forward HLO and the training-path update HLO.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): one grid step per row-tile
+of the batch; the full (IN, OUT) weight stays resident in VMEM (the largest
+layer here is 256x128 fp32 = 128 KiB, far below the ~16 MiB VMEM budget), so
+each step is a single MXU matmul with the bias-add + activation fused into
+the epilogue on the VPU. The backward pass is two more MXU matmuls
+(dX = g @ W^T, dW = X^T @ g) expressed as Pallas kernels as well, wired up
+through jax.custom_vjp so jax.grad of the PPO losses differentiates through
+the kernels.
+
+All kernels run with interpret=True: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Row-tile size for the batch axis. 128 matches the MXU systolic dimension;
+# smaller batches fall back to a single tile.
+_TILE_B = 128
+
+
+def _tile(b: int) -> int:
+    return _TILE_B if b % _TILE_B == 0 else b
+
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One row-tile: o = act(x @ w + b). Bias/activation fused in epilogue."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pallas_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) @ (K, N) with the M axis tiled into VMEM-sized blocks."""
+    m, k = a.shape
+    n = b.shape[1]
+    tm = _tile(m)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _dense_forward(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str) -> jnp.ndarray:
+    bsz, cin = x.shape
+    cout = w.shape[1]
+    tb = _tile(bsz)
+    kern = functools.partial(_dense_fwd_kernel, activation=activation)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "linear") -> jnp.ndarray:
+    """Fused act(x @ w + b); differentiable via Pallas backward kernels."""
+    return _dense_forward(x, w, b, activation)
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    y = _dense_forward(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _dense_vjp_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "tanh":
+        g = g * (1.0 - y * y)
+    elif activation == "relu":
+        g = g * (y > 0.0).astype(g.dtype)
+    # dX = g @ W^T and dW = X^T @ g: two MXU matmuls.
+    dx = _pallas_matmul(g, w.T)
+    dw = _pallas_matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

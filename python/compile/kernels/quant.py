@@ -1,0 +1,91 @@
+"""Pallas quantize / dequantize kernels — the paper's Eq. (1) and Eq. (2).
+
+Elementwise fixed-point mapping of the encoder output to `bits`-wide integer
+codes (kept in f32 storage; the wire format is produced by the Rust side,
+which packs the codes — the *information content* is what matters for the
+compression-rate accounting, Eq. (3)).
+
+On TPU these are VPU elementwise ops fused into the same HBM pass as the
+encoder matmul epilogue; here each kernel is a single flat grid over tiles
+of the flattened feature. min/max are passed in as scalars (the paper's
+"pre-collected set of feature maps" calibration), so the kernel is a pure
+map with no global reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE = 1024
+
+
+def _pick_tile(n: int) -> int:
+    for t in (_TILE, 512, 256, 128, 64, 32, 16, 8, 4, 2):
+        if n % t == 0 and t <= n:
+            return t
+    return n
+
+
+def _quant_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int):
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    levels = jnp.float32(2**bits - 1)
+    span = jnp.maximum(hi - lo, 1e-12)
+    x = jnp.clip(x_ref[...], lo, hi)
+    o_ref[...] = jnp.round(levels * (x - lo) / span)
+
+
+def _dequant_kernel(y_ref, lo_ref, hi_ref, o_ref, *, bits: int):
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    levels = jnp.float32(2**bits - 1)
+    o_ref[...] = y_ref[...] * (hi - lo) / levels + lo
+
+
+def _elementwise(kern, x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    t = _pick_tile(n)
+    out = pl.pallas_call(
+        functools.partial(kern, bits=bits),
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(flat, lo.reshape(1), hi.reshape(1))
+    return out.reshape(shape)
+
+
+def quantize(x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. (1): round((2^bits - 1) * (clip(x) - lo) / (hi - lo))."""
+    return _elementwise(_quant_kernel, x, lo, hi, bits)
+
+
+def dequantize(y: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. (2): y * (hi - lo) / (2^bits - 1) + lo."""
+    return _elementwise(_dequant_kernel, y, lo, hi, bits)
+
+
+def quantize_ste(x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize -> dequantize with a straight-through estimator.
+
+    Used inside build-time autoencoder training so the round-off error is
+    part of the loss (Eq. 4) while gradients flow as identity through the
+    non-differentiable round(). The Pallas kernels run on a fully detached
+    copy of `x` (interpret-mode pallas_call has no JVP rule), and the STE
+    re-attaches the residual so d out / d x == identity.
+    """
+    xd = jax.lax.stop_gradient(x)
+    lo = jax.lax.stop_gradient(lo)
+    hi = jax.lax.stop_gradient(hi)
+    q = dequantize(quantize(xd, lo, hi, bits), lo, hi, bits)
+    return x + jax.lax.stop_gradient(q - xd)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references to tight tolerances.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_activation(y: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "linear":
+        return y
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "linear") -> jnp.ndarray:
+    """y = act(x @ w + b).  x: (B, IN), w: (IN, OUT), b: (OUT,)."""
+    return apply_activation(x @ w + b, activation)
+
+
+def conv1x1_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """1x1 convolution == per-pixel channel mix.
+
+    x: (N, C, H, W), w: (C, C'), b: (C',) -> (N, C', H, W).
+
+    This is the paper's Sec. 2.2 channel-reduction encoder/decoder: a conv
+    layer with kernel (C, C', 1, 1) that shrinks/restores the channel axis.
+    """
+    n, c, h, wd = x.shape
+    xf = x.transpose(0, 2, 3, 1).reshape(-1, c)  # (N*H*W, C)
+    yf = xf @ w + b
+    return yf.reshape(n, h, wd, w.shape[1]).transpose(0, 3, 1, 2)
+
+
+def quantize_ref(x: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Paper Eq. (1): y_i = round((2^cq - 1) (x_i - min) / (max - min)).
+
+    `lo`/`hi` are the calibration min/max (scalars); values outside are
+    clipped into range, matching what a fixed-point transmitter must do.
+    """
+    levels = jnp.float32(2**bits - 1)
+    span = jnp.maximum(hi - lo, 1e-12)
+    return jnp.round(levels * (jnp.clip(x, lo, hi) - lo) / span)
+
+
+def dequantize_ref(y: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Paper Eq. (2): x'_i = y_i (max - min) / (2^cq - 1) + min."""
+    levels = jnp.float32(2**bits - 1)
+    return y * (hi - lo) / levels + lo

@@ -1,0 +1,132 @@
+"""Minimal pure-JAX NN layers for the build-time backbones.
+
+No flax/haiku — parameters are plain nested dicts of jnp arrays, and every
+layer is a pure function. BatchNorm carries running statistics explicitly:
+`train=True` uses batch statistics and returns updated running stats through
+the `StatsTape` side channel; `train=False` uses the stored running stats
+(this is the mode all AOT-lowered inference artifacts use).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, "jnp.ndarray | Params"]
+
+
+class StatsTape:
+    """Collects BatchNorm running-stat updates during a training forward."""
+
+    def __init__(self, momentum: float = 0.9):
+        self.momentum = momentum
+        self.updates: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    def record(self, path: str, mean: jnp.ndarray, var: jnp.ndarray) -> None:
+        self.updates[path] = (mean, var)
+
+
+def conv_init(rng: np.random.Generator, cin: int, cout: int, k: int) -> Params:
+    fan_in = cin * k * k
+    w = rng.normal(0.0, math.sqrt(2.0 / fan_in), (cout, cin, k, k)).astype(np.float32)
+    return {"w": jnp.asarray(w)}
+
+
+def bn_init(ch: int) -> Params:
+    return {
+        "scale": jnp.ones(ch, jnp.float32),
+        "bias": jnp.zeros(ch, jnp.float32),
+        "mean": jnp.zeros(ch, jnp.float32),
+        "var": jnp.ones(ch, jnp.float32),
+    }
+
+
+def dense_init(rng: np.random.Generator, cin: int, cout: int) -> Params:
+    w = rng.normal(0.0, math.sqrt(1.0 / cin), (cin, cout)).astype(np.float32)
+    return {"w": jnp.asarray(w), "b": jnp.zeros(cout, jnp.float32)}
+
+
+def conv2d(p: Params, x: jnp.ndarray, stride: int = 1, padding: str = "SAME", groups: int = 1) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def batch_norm(
+    p: Params,
+    x: jnp.ndarray,
+    train: bool,
+    tape: Optional[StatsTape] = None,
+    path: str = "",
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    if train:
+        mean = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        if tape is not None:
+            tape.record(path, mean, var)
+    else:
+        mean, var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean[None, :, None, None]) * (inv * p["scale"])[None, :, None, None] + p["bias"][None, :, None, None]
+
+
+def apply_stats_updates(params: Params, tape: StatsTape) -> Params:
+    """Fold the tape's batch stats into the running stats (momentum EMA)."""
+
+    def set_path(tree: Params, path: List[str], mean, var):
+        node = tree
+        for k in path[:-1]:
+            node = node[k]
+        bn = dict(node[path[-1]])
+        m = tape.momentum
+        bn["mean"] = m * bn["mean"] + (1 - m) * mean
+        bn["var"] = m * bn["var"] + (1 - m) * var
+        node[path[-1]] = bn
+
+    out = _deep_copy_dicts(params)  # copy the dict spine; leaves are shared
+    for path, (mean, var) in tape.updates.items():
+        set_path(out, path.split("/"), mean, var)
+    return out
+
+
+def _deep_copy_dicts(p):
+    if isinstance(p, dict):
+        return {k: _deep_copy_dicts(v) for k, v in p.items()}
+    return p
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def max_pool(x: jnp.ndarray, k: int = 2, stride: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, stride, stride), "VALID"
+    )
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(2, 3))
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over the batch; labels are int32 class ids."""
+    z = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    return -jnp.mean(z[jnp.arange(logits.shape[0]), labels])

@@ -1,0 +1,239 @@
+"""Device overhead model — the substitute for the paper's Jetson Nano +
+high-voltage power monitor testbed (Fig. 6; DESIGN.md §Substitutions).
+
+The MDP (Sec. 3.4) consumes, per UE model and partition decision b:
+  t_f(b)  local inference latency        e_f(b)  local inference energy
+  t_c(b)  feature compression latency    e_c(b)  compression energy
+  f(b)    offloaded payload size in bits
+
+The paper measures these on hardware; we compute them analytically from the
+REAL architectures' per-module FLOPs (backbones/*.py `module_stats`, paper
+scale: 224x224 input, full width) through a calibrated Jetson-Nano-class
+device model:
+
+  latency(module)  = flops / (peak * util(kind)) + dispatch_overhead
+  power(module)    = p_idle_active + p_dyn * util(kind)
+  energy(module)   = latency * power
+
+`util` is the achievable fraction of peak for the module kind: wide convs
+keep the GPU busy (high util -> high power, low latency), depthwise convs
+and FC layers underutilize it. This reproduces the paper's Fig. 7 topology,
+including its counter-intuitive finding that running only the first 4 stages
+can cost MORE energy than the whole network (high-parallelism conv prefix
+draws more average power than the tail).
+
+Calibration anchors (paper Sec. 6.3.1): full-local ResNet18 latency ~50 ms
+(T0 = 0.5 s is "about 10x larger"), beta = 0.47 = latency/energy ratio =>
+full-local energy ~107 mJ at ~2.1 W of active inference power on the 5 W
+Jetson power mode.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, asdict
+from typing import Dict, List, Optional
+
+from .backbones import build
+from .autoencoder import AeConfig
+
+# ------------------------------------------------------------------ device
+@dataclass(frozen=True)
+class DeviceModel:
+    """Jetson-Nano-class UE in 5 W mode, DVFS off."""
+
+    peak_flops: float = 118e9      # fp32-equivalent sustained peak, 5 W mode
+    util_conv: float = 0.75        # wide convolutions: near-full occupancy
+    util_dwconv: float = 0.25      # depthwise: memory-bound
+    util_fc: float = 0.30          # small GEMV tails
+    util_pool: float = 0.15
+    util_ae: float = 0.60          # 1x1 conv channel mix (matmul-shaped)
+    dispatch_s: float = 120e-6     # per-module kernel launch + sync
+    p_active_base: float = 0.9     # W above idle when any kernel runs
+    p_dyn: float = 2.0             # W * util on top of base
+    # JALAD-style entropy coding runs on the CPU cores:
+    cpu_code_bps: float = 30e6 * 8  # bits/s through the Huffman coder
+    cpu_power: float = 1.4          # W while entropy coding
+
+    def util(self, kind: str) -> float:
+        return {
+            "conv": self.util_conv,
+            "dwconv": self.util_dwconv,
+            "fc": self.util_fc,
+            "pool": self.util_pool,
+            "ae": self.util_ae,
+        }[kind]
+
+    def module_cost(self, flops: float, kind: str) -> Dict[str, float]:
+        u = self.util(kind)
+        lat = flops / (self.peak_flops * u) + self.dispatch_s
+        power = self.p_active_base + self.p_dyn * u
+        return {"latency": lat, "power": power, "energy": lat * power}
+
+
+# --------------------------------------------------------------- profiles
+INPUT_BITS = 224 * 224 * 3 * 8  # raw 8-bit RGB frame offloaded when b = 0
+
+# Channel-reduction factors per partition point for the *paper-geometry*
+# simulation profile: the paper's Fig. 4 shows the AE's achievable rate
+# DECREASING with depth (shallow features are the most channel-redundant),
+# with overall rates R ~ up to >100x at point 1 down to ~16x at point 4.
+# R_c = [32, 16, 8, 4] with 8-bit quantization gives R = [128, 64, 32, 16],
+# matching that geometry. The demo-scale measured rates (trainer.py sweep on
+# the synthetic task) are emitted as a separate `{model}_measured.json`
+# profile; the synthetic task's features are less redundant than
+# Caltech-101's, so its rates are conservative (see DESIGN.md
+# §Substitutions).
+PAPER_RC = [32, 16, 8, 4]
+
+
+def build_profile(
+    model: str,
+    chosen_rates: Optional[List[Dict]] = None,
+    device: Optional[DeviceModel] = None,
+) -> Dict:
+    """Per-partition-decision overhead table for one model at paper scale.
+
+    `chosen_rates`: per point, {"ch_r": int, "bits": int} from the demo-scale
+    compression sweep (trainer.py); if absent, R_c = 4 / 8-bit defaults are
+    used. Returns the JSON-serializable profile the Rust side loads.
+    """
+    device = device or DeviceModel()
+    bb = build(model, "paper")
+    stats = bb.module_stats()
+    points = bb.partition_points  # 4 cut indices
+    n_choices = len(points) + 2   # b in {0, 1..4, 5}
+
+    # cumulative local-inference latency/energy after each module
+    cum = [{"latency": 0.0, "energy": 0.0}]
+    for st in stats:
+        kind = st.kind
+        if model == "mobilenetv2" and kind == "conv" and "blk" in st.name:
+            kind = "dwconv"  # inverted residuals are depthwise-dominated
+        c = device.module_cost(st.flops, kind)
+        cum.append(
+            {
+                "latency": cum[-1]["latency"] + c["latency"],
+                "energy": cum[-1]["energy"] + c["energy"],
+            }
+        )
+
+    full = cum[-1]
+    entries = []
+    for b in range(n_choices):
+        if b == 0:  # offload raw input
+            entries.append(
+                {
+                    "b": 0,
+                    "t_f": 0.0,
+                    "e_f": 0.0,
+                    "t_c": 0.0,
+                    "e_c": 0.0,
+                    "bits": float(INPUT_BITS),
+                }
+            )
+        elif b == n_choices - 1:  # full local
+            entries.append(
+                {
+                    "b": b,
+                    "t_f": full["latency"],
+                    "e_f": full["energy"],
+                    "t_c": 0.0,
+                    "e_c": 0.0,
+                    "bits": 0.0,
+                }
+            )
+        else:  # split at point b
+            cut = points[b - 1]
+            ch, h, w = bb.feature_shape(b)
+            if chosen_rates is not None:
+                sel = chosen_rates[b - 1]
+                cfg = AeConfig(ch=ch, ch_r=sel["ch_r_paper"], bits=sel.get("bits", 8))
+            else:
+                cfg = AeConfig(ch=ch, ch_r=max(1, ch // PAPER_RC[b - 1]), bits=8)
+            # AE encoder cost: 1x1 conv ch->ch' over h*w + quantization pass
+            enc_flops = 2.0 * ch * cfg.ch_r * h * w + 4.0 * cfg.ch_r * h * w
+            c = device.module_cost(enc_flops, "ae")
+            entries.append(
+                {
+                    "b": b,
+                    "t_f": cum[cut]["latency"],
+                    "e_f": cum[cut]["energy"],
+                    "t_c": c["latency"],
+                    "e_c": c["energy"],
+                    "bits": cfg.compressed_bits(h, w),
+                    "feature": {"ch": ch, "ch_r": cfg.ch_r, "h": h, "w": w, "rate": cfg.rate},
+                }
+            )
+
+    # JALAD baseline: 8-bit quant + entropy coding of the RAW feature map.
+    jalad = []
+    for b in range(1, n_choices - 1):
+        ch, h, w = bb.feature_shape(b)
+        raw_bits = ch * h * w * 8.0
+        # entropy coding achieves ~2.2x on 8-bit quantized conv features
+        # (JALAD reports ~18x vs fp32 == ~4.5x over the 8-bit codes early,
+        # improving with depth as features sparsify — modeled linearly).
+        ec_gain = 1.6 + 0.5 * b
+        code_lat = raw_bits / device.cpu_code_bps
+        jalad.append(
+            {
+                "b": b,
+                "t_c": code_lat,
+                "e_c": code_lat * device.cpu_power,
+                "bits": raw_bits / ec_gain,
+                "rate": 32.0 / 8.0 * ec_gain,
+            }
+        )
+
+    return {
+        "model": model,
+        "scale": "paper",
+        "input_bits": float(INPUT_BITS),
+        "full_local": {"t": full["latency"], "e": full["energy"]},
+        "n_partition_choices": n_choices,
+        "entries": entries,
+        "jalad": jalad,
+        "device": asdict(device),
+        "modules": [
+            {"name": s.name, "flops": s.flops, "kind": s.kind, "out": list(s.out_shape)}
+            for s in stats
+        ],
+    }
+
+
+def write_profiles(out_dir: str, compression_dir: Optional[str] = None, log=print) -> None:
+    """Emit two profile variants per model:
+
+    * `{model}.json` — paper-geometry compression rates (PAPER_RC); the
+      default for the MDP experiments, reproducing the paper's regime.
+    * `{model}_measured.json` — rates measured by the demo-scale sweep
+      (only when compression summaries exist); used for the measured-rate
+      ablation.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    for model in ("resnet18", "vgg11", "mobilenetv2"):
+        prof = build_profile(model, None)
+        path = os.path.join(out_dir, f"{model}.json")
+        with open(path, "w") as f:
+            json.dump(prof, f, indent=1)
+        log(
+            f"[profile] {model}: full-local t={prof['full_local']['t']*1e3:.1f} ms "
+            f"e={prof['full_local']['e']*1e3:.1f} mJ -> {path}"
+        )
+        if compression_dir:
+            cpath = os.path.join(compression_dir, f"{model}.json")
+            if os.path.exists(cpath):
+                with open(cpath) as f:
+                    summary = json.load(f)
+                chosen = []
+                bb = build(model, "paper")
+                for p in summary["points"]:
+                    # map the demo-scale chosen R_c onto paper-scale channels
+                    rc = max(2.0, p["ch"] / p["chosen"]["ch_r"])
+                    ch_paper = bb.feature_shape(p["point"])[0]
+                    chosen.append({"ch_r_paper": max(1, int(round(ch_paper / rc))), "bits": 8})
+                mprof = build_profile(model, chosen)
+                mpath = os.path.join(out_dir, f"{model}_measured.json")
+                with open(mpath, "w") as f:
+                    json.dump(mprof, f, indent=1)

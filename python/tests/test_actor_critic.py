@@ -1,0 +1,143 @@
+"""L2 correctness: actor/critic networks, hybrid log-probs, PPO updates."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.actor_critic import (
+    ActorConfig,
+    actor_forward,
+    actor_loss,
+    actor_spec,
+    actor_update,
+    critic_forward,
+    critic_spec,
+    critic_update,
+    hybrid_log_prob,
+)
+
+CFG = ActorConfig(n_ues=5, n_partition=6, n_channels=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(actor_spec(CFG).init(0))
+
+
+@pytest.fixture(scope="module")
+def cparams():
+    return jnp.asarray(critic_spec(CFG).init(1))
+
+
+def states(b, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(b, CFG.state_dim)), jnp.float32)
+
+
+def test_spec_sizes_consistent():
+    spec = actor_spec(CFG)
+    assert spec.size == sum(int(np.prod(s)) for _, s in spec.entries)
+    offs = spec.offsets()
+    assert offs[0][1] == 0
+    for (_, o1, n1, _), (_, o2, _, _2) in zip(offs, offs[1:]):
+        assert o2 == o1 + n1
+
+
+def test_actor_outputs_valid_distributions(params):
+    pb, pc, mu, ls = actor_forward(CFG, params, states(16))
+    assert pb.shape == (16, 6) and pc.shape == (16, 2)
+    np.testing.assert_allclose(pb.sum(-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(pc.sum(-1), 1.0, rtol=1e-5)
+    assert bool(jnp.all(pb >= 0)) and bool(jnp.all(pc >= 0))
+    assert bool(jnp.all(ls >= -4.0)) and bool(jnp.all(ls <= 1.0))
+
+
+def test_hybrid_log_prob_decomposes(params):
+    s = states(8)
+    ab = jnp.arange(8, dtype=jnp.int32) % 6
+    ac = jnp.arange(8, dtype=jnp.int32) % 2
+    ap = jnp.linspace(-1, 1, 8, dtype=jnp.float32)
+    logp, ent = hybrid_log_prob(CFG, params, s, ab, ac, ap)
+    pb, pc, mu, ls = actor_forward(CFG, params, s)
+    for i in range(8):
+        std = float(jnp.exp(ls[i, 0]))
+        z = (float(ap[i]) - float(mu[i, 0])) / std
+        lp = (
+            np.log(max(float(pb[i, ab[i]]), 1e-8))
+            + np.log(max(float(pc[i, ac[i]]), 1e-8))
+            + (-0.5 * z * z - float(ls[i, 0]) - 0.5 * np.log(2 * np.pi))
+        )
+        np.testing.assert_allclose(float(logp[i]), lp, rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(ent > 0.0))
+
+
+def test_actor_loss_zero_adv_gives_entropy_only(params):
+    s = states(4)
+    ab = jnp.zeros(4, jnp.int32)
+    ac = jnp.zeros(4, jnp.int32)
+    ap = jnp.zeros(4, jnp.float32)
+    logp, _ = hybrid_log_prob(CFG, params, s, ab, ac, ap)
+    loss, (ent, cf) = actor_loss(CFG, params, s, ab, ac, ap, logp, jnp.zeros(4), 0.2, 0.001)
+    # with adv = 0 and ratio = 1: loss = -(0 + zeta*H)
+    np.testing.assert_allclose(float(loss), -0.001 * float(ent), rtol=1e-4)
+    assert float(cf) == 0.0
+
+
+def test_actor_update_improves_selected_action_probability(params):
+    s = states(64, seed=3)
+    ab = jnp.full(64, 3, jnp.int32)
+    ac = jnp.full(64, 1, jnp.int32)
+    ap = jnp.zeros(64, jnp.float32)
+    logp, _ = hybrid_log_prob(CFG, params, s, ab, ac, ap)
+    adv = jnp.ones(64, jnp.float32)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    p = params
+    for t in range(1, 6):
+        p, m, v, loss, ent, cf = actor_update(
+            CFG, p, m, v, jnp.float32(t), jnp.float32(3e-3), s, ab, ac, ap, logp, adv
+        )
+    pb_new, pc_new, _, _ = actor_forward(CFG, p, s)
+    pb_old, pc_old, _, _ = actor_forward(CFG, params, s)
+    assert float(pb_new[:, 3].mean()) > float(pb_old[:, 3].mean())
+    assert float(pc_new[:, 1].mean()) > float(pc_old[:, 1].mean())
+
+
+def test_critic_update_fits_constant_target(cparams):
+    s = states(32, seed=5)
+    target = jnp.full(32, -2.5, jnp.float32)
+    p, m, v = cparams, jnp.zeros_like(cparams), jnp.zeros_like(cparams)
+    first = None
+    for t in range(1, 40):
+        p, m, v, loss = critic_update(
+            CFG, p, m, v, jnp.float32(t), jnp.float32(1e-2), s, target
+        )
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.2, (first, float(loss))
+    pred = critic_forward(CFG, p, s)
+    assert abs(float(pred.mean()) + 2.5) < 0.6
+
+
+def test_update_is_deterministic(params):
+    s = states(8, seed=9)
+    args = (
+        jnp.zeros(8, jnp.int32),
+        jnp.ones(8, jnp.int32),
+        jnp.zeros(8, jnp.float32),
+        jnp.zeros(8, jnp.float32),
+        jnp.ones(8, jnp.float32),
+    )
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    o1 = actor_update(CFG, params, m, v, jnp.float32(1), jnp.float32(1e-4), s, *args)
+    o2 = actor_update(CFG, params, m, v, jnp.float32(1), jnp.float32(1e-4), s, *args)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+
+
+@pytest.mark.parametrize("n", [3, 7, 10])
+def test_other_ue_counts(n):
+    cfg = ActorConfig(n_ues=n, n_partition=6, n_channels=2)
+    p = jnp.asarray(actor_spec(cfg).init(2))
+    s = jnp.zeros((2, cfg.state_dim), jnp.float32)
+    pb, pc, mu, ls = actor_forward(cfg, p, s)
+    assert pb.shape == (2, 6)
+    np.testing.assert_allclose(pb.sum(-1), 1.0, rtol=1e-5)

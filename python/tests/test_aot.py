@@ -1,0 +1,83 @@
+"""AOT pipeline: HLO-text lowering, manifest consistency, weight files.
+
+Fast checks only — full artifact generation is `make artifacts`. If an
+artifacts/ tree exists these tests validate it; the lowering smoke test
+always runs.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.actor_critic import ActorConfig, actor_forward, actor_spec
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_produces_parseable_hlo_text():
+    cfg = ActorConfig(n_ues=3, n_partition=6, n_channels=2)
+    spec = actor_spec(cfg)
+    text = aot.lower(
+        lambda f, s: actor_forward(cfg, f, s),
+        aot.f32(spec.size),
+        aot.f32(1, cfg.state_dim),
+    )
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # tuple-rooted (return_tuple=True) so the rust side can decompose
+    assert "tuple(" in text.replace(" ", "")
+
+
+def test_tree_flatten_roundtrip():
+    tree = {"b": {"x": np.ones((2, 2), np.float32)}, "a": np.arange(3, dtype=np.float32)}
+    flat = aot.tree_flatten_vec(tree)
+    assert flat.shape == (7,)
+    back = aot.tree_unflatten_vec(tree, jnp.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(back["a"]), tree["a"])
+    np.testing.assert_array_equal(np.asarray(back["b"]["x"]), tree["b"]["x"])
+    # deterministic order: 'a' before 'b'
+    assert flat[0] == 0.0 and flat[1] == 1.0
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+
+
+@needs_artifacts
+def test_manifest_artifacts_exist_on_disk():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert len(man["artifacts"]) >= 40
+    for e in man["artifacts"]:
+        path = os.path.join(ARTIFACTS, e["path"])
+        assert os.path.exists(path), e["name"]
+        assert e["inputs"] and e["outputs"]
+
+
+@needs_artifacts
+def test_manifest_rl_specs_match_sizes():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    for n_str, spec in man["rl"]["specs"].items():
+        cfg = ActorConfig(int(n_str), man["rl"]["n_partition"], man["rl"]["n_channels"])
+        assert spec["actor_size"] == actor_spec(cfg).size
+        total = sum(e["count"] for e in spec["actor"])
+        assert total == spec["actor_size"]
+
+
+@needs_artifacts
+def test_weight_files_match_declared_sizes():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    for name, m in man.get("models", {}).items():
+        w = os.path.join(ARTIFACTS, m["weights"])
+        assert os.path.getsize(w) == m["weights_size"] * 4, name
+        for p in m["points"]:
+            ae = os.path.join(ARTIFACTS, p["ae_weights"])
+            assert os.path.getsize(ae) == p["ae_weights_size"] * 4

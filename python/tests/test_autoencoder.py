@@ -1,0 +1,87 @@
+"""Autoencoder compressor: rate math (Eq. 3), roundtrip, training signal."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.autoencoder import (
+    AeConfig,
+    ae_flatten,
+    ae_init,
+    ae_unflatten,
+    decode,
+    encode,
+    reconstruct_ste,
+)
+
+
+def test_rate_formula_eq3():
+    cfg = AeConfig(ch=64, ch_r=8, bits=8)
+    assert cfg.rate == 64 * 32 / (8 * 8)  # = 32x
+    assert AeConfig(ch=512, ch_r=512, bits=32).rate == 1.0
+
+
+def test_compressed_bits_accounting():
+    cfg = AeConfig(ch=64, ch_r=16, bits=8)
+    assert cfg.compressed_bits(10, 10) == 16 * 100 * 8 + 64
+
+
+def test_flatten_unflatten_roundtrip():
+    cfg = AeConfig(ch=12, ch_r=3, bits=8)
+    p = ae_init(cfg, 0)
+    flat = ae_flatten(p)
+    back = ae_unflatten(cfg, jnp.asarray(flat))
+    for k in p:
+        np.testing.assert_allclose(np.asarray(back[k]), p[k], atol=0)
+
+
+def test_encode_decode_shapes_and_codes():
+    cfg = AeConfig(ch=8, ch_r=2, bits=8)
+    p = {k: jnp.asarray(v) for k, v in ae_init(cfg, 1).items()}
+    feat = jnp.asarray(np.random.default_rng(0).normal(size=(1, 8, 4, 4)), jnp.float32)
+    codes, lo, hi = encode(cfg, p, feat)
+    assert codes.shape == (1, 2, 4, 4)
+    c = np.asarray(codes)
+    assert np.all(c == np.round(c)) and c.min() >= 0 and c.max() <= 255
+    restored = decode(cfg, p, codes, lo, hi)
+    assert restored.shape == feat.shape
+
+
+def test_identityish_ae_reconstructs():
+    """With ch_r = ch and identity-ish weights, reconstruction is near-exact
+    (up to 8-bit quantization)."""
+    cfg = AeConfig(ch=4, ch_r=4, bits=8)
+    p = {
+        "w_enc": jnp.eye(4),
+        "b_enc": jnp.zeros(4),
+        "w_dec": jnp.eye(4),
+        "b_dec": jnp.zeros(4),
+    }
+    feat = jnp.asarray(np.random.default_rng(1).uniform(-1, 1, (1, 4, 6, 6)), jnp.float32)
+    codes, lo, hi = encode(cfg, p, feat)
+    restored = decode(cfg, p, codes, lo, hi)
+    step = float(hi - lo) / 255
+    assert float(jnp.max(jnp.abs(restored - feat))) <= step / 2 + 1e-5
+
+
+def test_training_reduces_reconstruction_error():
+    cfg = AeConfig(ch=16, ch_r=4, bits=8)
+    params = {k: jnp.asarray(v) for k, v in ae_init(cfg, 2).items()}
+    rng = np.random.default_rng(3)
+    # low-rank features: 4 latent channels mixed into 16 -> perfectly
+    # compressible at R_c = 4
+    basis = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    lat = jnp.asarray(rng.normal(size=(8, 4, 8, 8)), jnp.float32)
+    feat = jnp.einsum("nchw,ck->nkhw", lat, basis)
+
+    def loss_fn(p):
+        return jnp.mean((reconstruct_ste(cfg, p, feat) - feat) ** 2)
+
+    loss0 = float(loss_fn(params))
+    lr = 3e-2
+    grad = jax.jit(jax.grad(loss_fn))
+    for _ in range(60):
+        g = grad(params)
+        params = {k: params[k] - lr * g[k] for k in params}
+    loss1 = float(loss_fn(params))
+    assert loss1 < loss0 * 0.2, (loss0, loss1)

@@ -1,0 +1,63 @@
+"""Backbone structural tests: shapes, split consistency, analytic stats."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.backbones import build, REGISTRY
+
+MODELS = sorted(REGISTRY)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_four_partition_points(model):
+    for scale in ("demo", "paper"):
+        bb = build(model, scale)
+        assert len(bb.partition_points) == 4
+        assert all(0 < p < bb.num_modules for p in bb.partition_points)
+        assert sorted(bb.partition_points) == bb.partition_points
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_module_stats_chain(model):
+    bb = build(model, "paper")
+    stats = bb.module_stats()
+    assert len(stats) == bb.num_modules
+    assert all(s.flops > 0 for s in stats)
+    # final module produces the classifier output
+    assert stats[-1].out_shape[0] == bb.num_classes
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_front_back_split_equals_full(model):
+    bb = build(model, "demo")
+    params = bb.init(0)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 32, 32)), jnp.float32)
+    full = bb.forward(params, x)
+    assert full.shape == (2, bb.num_classes)
+    for p in range(1, 5):
+        feat = bb.forward_front(params, x, p)
+        ch, h, w = bb.feature_shape(p)
+        assert feat.shape == (2, ch, h, w), (model, p)
+        out = bb.forward_back(params, feat, p)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+def test_paper_scale_flops_anchor():
+    """Sanity anchors against published FLOPs (2*MACs)."""
+    r = sum(s.flops for s in build("resnet18", "paper").module_stats()) / 1e9
+    v = sum(s.flops for s in build("vgg11", "paper").module_stats()) / 1e9
+    m = sum(s.flops for s in build("mobilenetv2", "paper").module_stats()) / 1e9
+    assert 3.0 < r < 4.5, r      # ResNet18 ~3.6 GFLOPs
+    assert 13.0 < v < 17.0, v    # VGG11 ~15.2 GFLOPs
+    assert 0.4 < m < 0.8, m      # MobileNetV2 ~0.6 GFLOPs
+
+
+def test_feature_shapes_paper_scale():
+    bb = build("resnet18", "paper")
+    assert bb.feature_shape(1) == (64, 56, 56)
+    assert bb.feature_shape(4) == (512, 7, 7)
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(KeyError):
+        build("alexnet")

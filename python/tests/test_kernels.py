@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is THE core correctness signal for everything the AOT artifacts execute.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense
+from compile.kernels.conv1x1 import conv1x1
+from compile.kernels import quant
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(rng, shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- dense
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 3, 8, 128, 256]),
+    cin=st.sampled_from([1, 4, 20, 64, 256]),
+    cout=st.sampled_from([1, 2, 6, 64, 128]),
+    act=st.sampled_from(["linear", "tanh", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(b, cin, cout, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = arr(rng, (b, cin)), arr(rng, (cin, cout)), arr(rng, (cout,))
+    got = dense(x, w, bias, act)
+    want = ref.dense_ref(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_grad_matches_jnp_grad():
+    rng = np.random.default_rng(0)
+    x, w, b = arr(rng, (8, 16)), arr(rng, (16, 4)), arr(rng, (4,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(dense(x, w, b, "tanh") ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, "tanh") ** 2)
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+def test_dense_under_jit():
+    rng = np.random.default_rng(1)
+    x, w, b = arr(rng, (128, 20)), arr(rng, (20, 6)), arr(rng, (6,))
+    got = jax.jit(lambda *a: dense(*a, "relu"))(x, w, b)
+    np.testing.assert_allclose(got, ref.dense_ref(x, w, b, "relu"), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- conv1x1
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([1, 3, 16, 64]),
+    c2=st.sampled_from([1, 2, 8, 32]),
+    hw=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1x1_matches_ref(n, c, c2, hw, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = arr(rng, (n, c, hw, hw)), arr(rng, (c, c2)), arr(rng, (c2,))
+    got = conv1x1(x, w, b)
+    want = ref.conv1x1_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1x1_equals_lax_conv():
+    """Cross-check against an actual 1x1 convolution."""
+    rng = np.random.default_rng(3)
+    x, w, b = arr(rng, (2, 8, 5, 5)), arr(rng, (8, 4)), arr(rng, (4,))
+    got = conv1x1(x, w, b)
+    kernel = w.T.reshape(4, 8, 1, 1)  # OIHW
+    want = jax.lax.conv_general_dilated(
+        x, kernel, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    ) + b[None, :, None, None]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv1x1_grads_flow():
+    rng = np.random.default_rng(4)
+    x, w, b = arr(rng, (2, 6, 4, 4)), arr(rng, (6, 3)), arr(rng, (3,))
+
+    def loss(w, b):
+        return jnp.mean((conv1x1(x, w, b) - 1.0) ** 2)
+
+    def loss_ref(w, b):
+        return jnp.mean((ref.conv1x1_ref(x, w, b) - 1.0) ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1))(w, b)
+    ge = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+    for a, e in zip(g, ge):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- quant
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 4, 100, 1024, 1000]),
+    bits=st.sampled_from([2, 4, 8, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_roundtrip_matches_ref(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (n,), -5.0, 5.0)
+    lo, hi = jnp.min(x), jnp.max(x)
+    q = quant.quantize(x, lo, hi, bits)
+    q_ref = ref.quantize_ref(x, lo, hi, bits)
+    np.testing.assert_allclose(q, q_ref, atol=0.0)
+    d = quant.dequantize(q, lo, hi, bits)
+    d_ref = ref.dequantize_ref(q_ref, lo, hi, bits)
+    np.testing.assert_allclose(d, d_ref, rtol=1e-6, atol=1e-6)
+    # round-off bounded by half a step
+    step = float(hi - lo) / (2**bits - 1)
+    assert float(jnp.max(jnp.abs(d - x))) <= step / 2 + 1e-5
+
+
+def test_quant_codes_are_integers_in_range():
+    rng = np.random.default_rng(7)
+    x = arr(rng, (512,), -1.0, 1.0)
+    q = np.asarray(quant.quantize(x, jnp.float32(-1), jnp.float32(1), 8))
+    assert np.all(q == np.round(q))
+    assert q.min() >= 0 and q.max() <= 255
+
+
+def test_quantize_ste_identity_gradient():
+    rng = np.random.default_rng(8)
+    x = arr(rng, (64,), -2.0, 2.0)
+    g = jax.grad(lambda v: jnp.sum(quant.quantize_ste(v, jnp.min(v), jnp.max(v), 8)))(x)
+    np.testing.assert_allclose(g, jnp.ones_like(x), atol=1e-6)
+
+
+def test_quant_degenerate_range():
+    x = jnp.zeros(16)
+    q = quant.quantize(x, jnp.float32(0), jnp.float32(0), 8)
+    assert bool(jnp.all(jnp.isfinite(q)))

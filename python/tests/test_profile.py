@@ -1,0 +1,69 @@
+"""Device-profile model: structure, calibration anchors, JALAD entries."""
+import pytest
+
+from compile.profile import DeviceModel, build_profile
+
+
+@pytest.mark.parametrize("model", ["resnet18", "vgg11", "mobilenetv2"])
+def test_profile_structure(model):
+    p = build_profile(model)
+    assert p["n_partition_choices"] == 6
+    assert len(p["entries"]) == 6
+    # b = 0: no local compute, raw input payload
+    e0 = p["entries"][0]
+    assert e0["t_f"] == 0.0 and e0["bits"] == p["input_bits"]
+    # b = 5: full local, no payload
+    e5 = p["entries"][5]
+    assert e5["bits"] == 0.0
+    assert abs(e5["t_f"] - p["full_local"]["t"]) < 1e-9
+    # cumulative latency is monotone across cuts
+    t = [p["entries"][b]["t_f"] for b in range(1, 6)]
+    assert all(a <= b + 1e-12 for a, b in zip(t, t[1:]))
+    # payloads roughly non-increasing with depth (paper-geometry rates keep
+    # them near-constant; integer channel rounding allows small upticks)
+    bits = [p["entries"][b]["bits"] for b in range(1, 5)]
+    assert all(later <= earlier * 1.5 for earlier, later in zip(bits, bits[1:]))
+
+
+def test_resnet18_calibration_anchor():
+    """T0 = 0.5 s is ~10x full-local latency; beta ~ latency/energy ~ 0.47."""
+    p = build_profile("resnet18")
+    t, e = p["full_local"]["t"], p["full_local"]["e"]
+    assert 0.03 < t < 0.07, t          # ~50 ms
+    assert 0.3 < t / e < 0.6, t / e    # beta anchor
+
+
+def test_jalad_entries_heavier_than_ae():
+    p = build_profile("resnet18")
+    for je in p["jalad"]:
+        ae = p["entries"][je["b"]]
+        assert je["bits"] > ae["bits"], je
+        assert je["t_c"] > ae["t_c"], je
+
+
+def test_fig7_energy_observation():
+    """Paper: overhead below full-local at every cut except energy at the
+    last cut (which exceeds it)."""
+    p = build_profile("resnet18")
+    full_t, full_e = p["full_local"]["t"], p["full_local"]["e"]
+    for b in range(1, 4):
+        e = p["entries"][b]
+        assert e["t_f"] + e["t_c"] < full_t
+        assert e["e_f"] + e["e_c"] < full_e
+    last = p["entries"][4]
+    assert last["e_f"] + last["e_c"] > full_e * 0.99
+
+
+def test_device_knobs_affect_costs():
+    fast = DeviceModel(peak_flops=300e9)
+    slow = DeviceModel(peak_flops=50e9)
+    pf = build_profile("resnet18", device=fast)
+    ps = build_profile("resnet18", device=slow)
+    assert pf["full_local"]["t"] < ps["full_local"]["t"]
+
+
+def test_chosen_rates_override():
+    rates = [{"ch_r_paper": 4, "bits": 8}] * 4
+    p = build_profile("resnet18", chosen_rates=rates)
+    for b in range(1, 5):
+        assert p["entries"][b]["feature"]["ch_r"] == 4

@@ -1,0 +1,57 @@
+//! Compression benches: quantizer, bit-packing, Huffman, JALAD pipeline.
+//! (Paper-table relevance: Fig. 4 rates + the t_c overheads of Fig. 7.)
+
+use macci::compress::huffman::HuffmanCoder;
+use macci::compress::jalad::JaladCompressor;
+use macci::compress::quant::{calibrate, Quantizer};
+use macci::util::bench::{black_box, Bench};
+use macci::util::rng::Rng;
+
+fn feature(n: usize, sparsity: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.f64() < sparsity {
+                0.0
+            } else {
+                rng.normal().abs() as f32
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("compress");
+    // p2-sized resnet18 feature at paper scale: 128 x 28 x 28
+    let feat = feature(128 * 28 * 28, 0.6, 1);
+    let (lo, hi) = calibrate(&feat);
+    let q8 = Quantizer::new(8).unwrap();
+
+    b.run("calibrate_100k", || {
+        black_box(calibrate(black_box(&feat)));
+    });
+    b.run("quantize8_100k", || {
+        black_box(q8.quantize(black_box(&feat), lo, hi));
+    });
+    let codes = q8.quantize(&feat, lo, hi);
+    b.run("dequantize8_100k", || {
+        black_box(q8.dequantize(black_box(&codes), lo, hi));
+    });
+    b.run("pack8_100k", || {
+        black_box(q8.pack(black_box(&codes)));
+    });
+    let bytes: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+    let coder = HuffmanCoder::new();
+    b.run("huffman_encode_100k", || {
+        black_box(coder.encode(black_box(&bytes)));
+    });
+    let block = coder.encode(&bytes);
+    b.run("huffman_decode_100k", || {
+        black_box(coder.decode(black_box(&block)).unwrap());
+    });
+    let jalad = JaladCompressor::new();
+    b.run("jalad_pipeline_100k", || {
+        black_box(jalad.compress(black_box(&feat)));
+    });
+    b.report();
+}

@@ -1,0 +1,87 @@
+//! End-to-end benches: one full training frame (decision + env step) and
+//! one PPO round — the unit costs of every Fig. 8-13 run — plus the
+//! collaborative-inference serving path (real CNN artifacts).
+
+use macci::coordinator::inference::CollabPipeline;
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::exp::fig4::smooth_images;
+use macci::profiles::DeviceProfile;
+use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+use macci::runtime::artifacts::ArtifactStore;
+use macci::util::bench::{black_box, Bench};
+
+fn main() {
+    let store = match ArtifactStore::open("artifacts") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping e2e benches: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bench::new("e2e");
+
+    // full training-frame cost: policy inference x5 + critic + env step,
+    // measured through a real trainer by running short train() bursts
+    let profile = match DeviceProfile::load("artifacts/profiles/resnet18.json") {
+        Ok(p) => p,
+        Err(_) => DeviceProfile::synthetic(),
+    };
+    let scenario = ScenarioConfig {
+        n_ues: 5,
+        lambda_tasks: 1e9,
+        max_frames: usize::MAX,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        buffer_size: 64,
+        minibatch: 256, // never reached inside one frame burst
+        ..Default::default()
+    };
+    let _ = cfg;
+
+    let mut env = MultiAgentEnv::new(profile.clone(), scenario.clone(), 1).unwrap();
+    let mut trainer = MahppoTrainer::new(
+        &store,
+        &profile,
+        scenario,
+        TrainConfig {
+            buffer_size: 256,
+            minibatch: 256,
+            reuse: 10,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // warm the executable cache
+    let _ = trainer.train(8).unwrap();
+
+    b.run("train_frame_n5", || {
+        // 16 frames per iteration to amortize the Bench overhead; the
+        // per-frame figure is this / 16 (buffer fills trigger PPO rounds
+        // every 256 frames and are included pro-rata, as in real runs)
+        black_box(trainer.train(16).unwrap());
+    });
+
+    let actions: macci::env::Action = (0..5)
+        .map(|i| macci::env::HybridAction::new(2, i % 2, 1.0, 1.0))
+        .collect();
+    b.run("env_frame_only_n5", || {
+        black_box(env.step(black_box(&actions)));
+    });
+
+    // serving path on real CNN artifacts
+    if let Ok(pipeline) = CollabPipeline::load(&store, "resnet18") {
+        let img = &smooth_images(1, pipeline.meta.input_hw, 5)[0];
+        b.run("serve_local_full", || {
+            black_box(pipeline.infer_local(black_box(img)).unwrap());
+        });
+        for p in [1usize, 2, 4] {
+            b.run(&format!("serve_split_p{p}"), || {
+                black_box(pipeline.infer_split(black_box(img), p).unwrap());
+            });
+        }
+    }
+
+    b.report();
+}

@@ -1,0 +1,63 @@
+//! L3 hot-path benches: environment stepping and the channel model.
+//! (Paper-table relevance: every training frame of Figs. 8-13 pays these.)
+
+use macci::env::channel::{ChannelModel, Transmitter};
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::env::{Action, HybridAction};
+use macci::profiles::DeviceProfile;
+use macci::util::bench::{black_box, Bench};
+use macci::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("env");
+
+    // channel model Eq. 5 at several transmitter counts
+    for n in [2usize, 5, 10] {
+        let model = ChannelModel {
+            bandwidth_hz: 1e6,
+            noise_w: 1e-9,
+            n_channels: 2,
+        };
+        let mut rng = Rng::new(1);
+        let txs: Vec<Transmitter> = (0..n)
+            .map(|i| Transmitter {
+                ue: i,
+                channel: i % 2,
+                power_w: rng.uniform(0.1, 1.0),
+                gain: rng.uniform(1.0, 100.0).powf(-3.0),
+            })
+            .collect();
+        b.run(&format!("uplink_rates_n{n}"), || {
+            black_box(model.rates(black_box(&txs)));
+        });
+    }
+
+    // full env.step under three policies
+    for (name, bsel) in [("local", 5usize), ("split2", 2), ("raw", 0)] {
+        let cfg = ScenarioConfig {
+            n_ues: 5,
+            lambda_tasks: 1e9, // never exhausts mid-bench
+            ..Default::default()
+        };
+        let mut env = MultiAgentEnv::new(DeviceProfile::synthetic(), cfg, 3).unwrap();
+        let actions: Action = (0..5)
+            .map(|i| HybridAction::new(bsel, i % 2, 1.0, 1.0))
+            .collect();
+        b.run(&format!("env_step_{name}"), || {
+            black_box(env.step(black_box(&actions)));
+        });
+    }
+
+    // state encoding alone
+    let cfg = ScenarioConfig {
+        n_ues: 10,
+        ..Default::default()
+    };
+    let env = MultiAgentEnv::new(DeviceProfile::synthetic(), cfg, 4).unwrap();
+    b.run("state_encode_n10", || {
+        black_box(env.state());
+    });
+
+    b.report();
+}

@@ -1,0 +1,80 @@
+//! RL plumbing benches: sampling, GAE, buffer ops (pure Rust, no PJRT).
+
+use macci::rl::buffer::{TrajectoryBuffer, Transition};
+use macci::rl::gae;
+use macci::rl::sampling;
+use macci::runtime::nets::ActorOutput;
+use macci::util::bench::{black_box, Bench};
+use macci::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("rl");
+    let mut rng = Rng::new(1);
+
+    let out = ActorOutput {
+        probs_b: vec![0.3, 0.2, 0.1, 0.15, 0.15, 0.1],
+        probs_c: vec![0.6, 0.4],
+        mu: 0.2,
+        log_std: -0.5,
+    };
+    b.run("sample_hybrid", || {
+        black_box(sampling::sample_hybrid(black_box(&out), &mut rng));
+    });
+
+    let n = 1024;
+    let rewards: Vec<f64> = (0..n).map(|i| -1.0 - (i % 13) as f64 * 0.1).collect();
+    let values: Vec<f32> = (0..n).map(|i| -((i % 7) as f32)).collect();
+    let mut dones = vec![false; n];
+    for i in (63..n).step_by(64) {
+        dones[i] = true;
+    }
+    b.run("gae_1024", || {
+        black_box(gae::gae_advantages(
+            black_box(&rewards),
+            black_box(&values),
+            black_box(&dones),
+            0.95,
+            0.95,
+            0.0,
+        ));
+    });
+    b.run("returns_1024", || {
+        black_box(gae::discounted_returns(
+            black_box(&rewards),
+            black_box(&dones),
+            0.95,
+            0.0,
+        ));
+    });
+
+    // buffer fill + minibatch gather
+    let make_t = |i: usize| Transition {
+        state: vec![0.1; 20],
+        a_b: vec![(i % 6) as i32; 5],
+        a_c: vec![(i % 2) as i32; 5],
+        a_p: vec![0.1; 5],
+        log_prob: vec![-1.5; 5],
+        reward: -1.0,
+        value: -0.5,
+        done: i % 64 == 63,
+    };
+    let mut buf = TrajectoryBuffer::new(1024, 5);
+    for i in 0..1024 {
+        buf.push(make_t(i));
+    }
+    buf.finish(0.95, 0.95, 0.0, true);
+    let mut rng2 = Rng::new(2);
+    b.run("minibatch_256_of_1024", || {
+        black_box(buf.sample_minibatch(256, &mut rng2));
+    });
+
+    b.run("buffer_push_1024", || {
+        let mut buf = TrajectoryBuffer::new(1024, 5);
+        for i in 0..1024 {
+            buf.push(make_t(i));
+        }
+        black_box(buf.len());
+    });
+
+    b.report();
+}

@@ -1,0 +1,70 @@
+//! PJRT runtime benches: the artifact executions on every hot path.
+//! Skipped silently when artifacts are absent.
+//!
+//! Paper-table relevance: actor_fwd dominates the per-frame decision cost
+//! (Figs. 8-13 training wall time); *_update dominates the PPO rounds.
+
+use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::nets::{ActorNet, CriticNet};
+use macci::util::bench::{black_box, Bench};
+use macci::util::rng::Rng;
+
+fn main() {
+    let store = match ArtifactStore::open("artifacts") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping runtime benches: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bench::new("runtime");
+    let mut rng = Rng::new(1);
+
+    let mut actor = ActorNet::new(&store, 5, 1).unwrap();
+    let mut critic = CriticNet::new(&store, 5, 2).unwrap();
+    let state: Vec<f32> = (0..20).map(|_| rng.f32()).collect();
+
+    b.run("actor_fwd_b1_n5", || {
+        black_box(actor.forward(black_box(&state)).unwrap());
+    });
+    b.run("actor_fwd_b1_n5_uncached", || {
+        // §Perf baseline: rebuilds the 64k-float params literal per call
+        black_box(actor.forward_uncached(black_box(&state)).unwrap());
+    });
+    b.run("critic_fwd_b1_n5", || {
+        black_box(critic.value(black_box(&state)).unwrap());
+    });
+
+    // a full 5-actor decision (what one env frame costs in net evals)
+    let mut actors: Vec<ActorNet> = (0..5).map(|i| ActorNet::new(&store, 5, i).unwrap()).collect();
+    b.run("joint_decision_n5", || {
+        for a in actors.iter_mut() {
+            black_box(a.forward(black_box(&state)).unwrap());
+        }
+        black_box(critic.value(black_box(&state)).unwrap());
+    });
+
+    // PPO minibatch updates at B = 256
+    let bsz = 256;
+    let states: Vec<f32> = (0..bsz * 20).map(|_| rng.f32()).collect();
+    let a_b = vec![2i32; bsz];
+    let a_c = vec![1i32; bsz];
+    let a_p = vec![0.1f32; bsz];
+    let olp = vec![-2.0f32; bsz];
+    let adv = vec![0.5f32; bsz];
+    let returns = vec![-1.0f32; bsz];
+    let mut actor_mut = ActorNet::new(&store, 5, 3).unwrap();
+    let mut critic_mut = CriticNet::new(&store, 5, 4).unwrap();
+    b.run("actor_update_b256_n5", || {
+        black_box(
+            actor_mut
+                .update(1e-4, &states, &a_b, &a_c, &a_p, &olp, &adv)
+                .unwrap(),
+        );
+    });
+    b.run("critic_update_b256_n5", || {
+        black_box(critic_mut.update(1e-4, &states, &returns).unwrap());
+    });
+
+    b.report();
+}

@@ -1,0 +1,141 @@
+//! Autoencoder compressor handle — drives the AOT `ae_enc`/`ae_dec`
+//! artifacts (Pallas conv1x1 + quant kernels) on the serving path.
+//!
+//! The UE-side `encode` produces integer codes + per-tensor (lo, hi); the
+//! wire payload is the bit-packed codes (compress/quant.rs) plus the two
+//! calibration floats. The edge-side `decode` restores the feature for the
+//! back-segment of the split backbone.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::quant::Quantizer;
+use crate::runtime::artifacts::{ArtifactStore, PointMeta};
+use crate::runtime::client::Executable;
+use crate::runtime::tensor::{f32_literal, scalar_literal};
+
+/// A compressed intermediate feature ready for the uplink.
+#[derive(Debug, Clone)]
+pub struct EncodedFeature {
+    /// Quantized codes (f32 storage of integers, straight from the kernel).
+    pub codes: Vec<f32>,
+    pub shape: Vec<usize>,
+    pub lo: f32,
+    pub hi: f32,
+    pub bits: u32,
+}
+
+impl EncodedFeature {
+    /// Wire size in bits: packed codes + calibration floats.
+    pub fn wire_bits(&self) -> usize {
+        self.codes.len() * self.bits as usize + 64
+    }
+
+    /// Bit-pack into the uplink byte payload.
+    pub fn to_wire(&self) -> Result<Vec<u8>> {
+        let q = Quantizer::new(self.bits)?;
+        let ints: Vec<u16> = self.codes.iter().map(|&c| c as u16).collect();
+        Ok(q.pack(&ints))
+    }
+
+    /// Rebuild the f32 code tensor from a wire payload.
+    pub fn from_wire(
+        bytes: &[u8],
+        shape: Vec<usize>,
+        lo: f32,
+        hi: f32,
+        bits: u32,
+    ) -> Result<EncodedFeature> {
+        let n: usize = shape.iter().product();
+        let q = Quantizer::new(bits)?;
+        let ints = q.unpack(bytes, n)?;
+        Ok(EncodedFeature {
+            codes: ints.iter().map(|&c| c as f32).collect(),
+            shape,
+            lo,
+            hi,
+            bits,
+        })
+    }
+}
+
+/// The (model, partition-point) AE compressor: encode on the "UE", decode
+/// on the "edge" — both as compiled XLA executables.
+pub struct AeCompressor {
+    pub meta: PointMeta,
+    enc: Arc<Executable>,
+    dec: Arc<Executable>,
+    weights: Vec<f32>,
+}
+
+impl AeCompressor {
+    pub fn load(store: &ArtifactStore, model: &str, point: usize) -> Result<AeCompressor> {
+        let m = store.model(model)?;
+        let meta = m
+            .points
+            .iter()
+            .find(|p| p.point == point)
+            .ok_or_else(|| anyhow!("model '{model}' has no partition point {point}"))?
+            .clone();
+        Ok(AeCompressor {
+            enc: store.load(&format!("{model}_ae_enc_p{point}"))?,
+            dec: store.load(&format!("{model}_ae_dec_p{point}"))?,
+            weights: store.ae_weights(model, point)?,
+            meta,
+        })
+    }
+
+    /// Compression rate R = ch·32 / (ch'·bits) (Eq. 3).
+    pub fn rate(&self) -> f64 {
+        self.meta.rate
+    }
+
+    /// UE side: feature (1, ch, h, w) -> codes (1, ch', h, w) + lo/hi.
+    pub fn encode(&self, feature: &[f32]) -> Result<EncodedFeature> {
+        let m = &self.meta;
+        let outs = self.enc.call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(feature, &[1, m.ch, m.h, m.w])?,
+        ])?;
+        Ok(EncodedFeature {
+            codes: outs[0].clone().into_f32s()?,
+            shape: vec![1, m.ch_r, m.h, m.w],
+            lo: outs[1].scalar()?,
+            hi: outs[2].scalar()?,
+            bits: m.bits as u32,
+        })
+    }
+
+    /// Edge side: codes -> restored feature (1, ch, h, w).
+    pub fn decode(&self, enc: &EncodedFeature) -> Result<Vec<f32>> {
+        let outs = self.dec.call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(&enc.codes, &enc.shape)?,
+            scalar_literal(enc.lo),
+            scalar_literal(enc.hi),
+        ])?;
+        outs[0].clone().into_f32s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip_without_artifacts() {
+        let enc = EncodedFeature {
+            codes: vec![0.0, 255.0, 17.0, 128.0],
+            shape: vec![1, 1, 2, 2],
+            lo: -1.0,
+            hi: 3.0,
+            bits: 8,
+        };
+        let wire = enc.to_wire().unwrap();
+        assert_eq!(wire.len(), 4);
+        let back = EncodedFeature::from_wire(&wire, enc.shape.clone(), -1.0, 3.0, 8).unwrap();
+        assert_eq!(back.codes, enc.codes);
+        assert_eq!(enc.wire_bits(), 4 * 8 + 64);
+    }
+}

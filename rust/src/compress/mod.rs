@@ -1,0 +1,15 @@
+//! Feature compression substrates (paper Sec. 2 + the JALAD baseline).
+//!
+//! * [`quant`] — Eq. (1)/(2) fixed-point quantization, bit-packing for the
+//!   wire, mirrored against the Pallas kernels (same formulas).
+//! * [`huffman`] — canonical Huffman coder over quantized bytes: the
+//!   entropy-coding stage of the JALAD baseline, measured for real.
+//! * [`jalad`] — the JALAD compressor model (8-bit quant + Huffman) used by
+//!   both the serving path and the Fig. 4 comparison.
+//! * [`ae`] — the autoencoder compressor handle driving the AOT encode/
+//!   decode artifacts on the serving path.
+
+pub mod ae;
+pub mod huffman;
+pub mod jalad;
+pub mod quant;

@@ -1,0 +1,202 @@
+//! Fixed-point quantization — Rust mirror of the Pallas kernels
+//! (python/compile/kernels/quant.py), Eqs. (1)/(2) of the paper.
+//!
+//! The serving path uses the AOT kernels; this module provides the wire
+//! format (bit-packing integer codes) plus a native implementation used by
+//! the JALAD baseline, tests and benches. Formulas match the kernels
+//! exactly so cross-validation tests can compare them elementwise.
+
+use anyhow::{bail, Result};
+
+/// A quantizer for a fixed bit-width (1..=16).
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub bits: u32,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32) -> Result<Quantizer> {
+        if bits == 0 || bits > 16 {
+            bail!("bit-width {bits} out of range 1..=16");
+        }
+        Ok(Quantizer { bits })
+    }
+
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Eq. (1): y_i = round((2^cq − 1)(clip(x_i) − lo) / (hi − lo)).
+    pub fn quantize(&self, x: &[f32], lo: f32, hi: f32) -> Vec<u16> {
+        let levels = self.levels() as f32;
+        let span = (hi - lo).max(1e-12);
+        x.iter()
+            .map(|&v| {
+                let c = v.clamp(lo, hi);
+                (levels * (c - lo) / span).round() as u16
+            })
+            .collect()
+    }
+
+    /// Eq. (2): x'_i = y_i (hi − lo) / (2^cq − 1) + lo.
+    pub fn dequantize(&self, y: &[u16], lo: f32, hi: f32) -> Vec<f32> {
+        let levels = self.levels() as f32;
+        y.iter()
+            .map(|&q| q as f32 * (hi - lo) / levels + lo)
+            .collect()
+    }
+
+    /// Pack codes LSB-first into a byte stream (the uplink payload).
+    pub fn pack(&self, codes: &[u16]) -> Vec<u8> {
+        let total_bits = codes.len() * self.bits as usize;
+        let mut out = vec![0u8; total_bits.div_ceil(8)];
+        let mut bitpos = 0usize;
+        for &c in codes {
+            debug_assert!(c as u32 <= self.levels());
+            for k in 0..self.bits as usize {
+                if (c >> k) & 1 == 1 {
+                    out[(bitpos + k) / 8] |= 1 << ((bitpos + k) % 8);
+                }
+            }
+            bitpos += self.bits as usize;
+        }
+        out
+    }
+
+    /// Inverse of [`Quantizer::pack`]; `n` is the number of codes.
+    pub fn unpack(&self, bytes: &[u8], n: usize) -> Result<Vec<u16>> {
+        let need = (n * self.bits as usize).div_ceil(8);
+        if bytes.len() < need {
+            bail!("need {need} bytes for {n} codes, got {}", bytes.len());
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut bitpos = 0usize;
+        for _ in 0..n {
+            let mut c = 0u16;
+            for k in 0..self.bits as usize {
+                if (bytes[(bitpos + k) / 8] >> ((bitpos + k) % 8)) & 1 == 1 {
+                    c |= 1 << k;
+                }
+            }
+            out.push(c);
+            bitpos += self.bits as usize;
+        }
+        Ok(out)
+    }
+
+    /// Max absolute reconstruction error: half a quantization step.
+    pub fn max_error(&self, lo: f32, hi: f32) -> f32 {
+        0.5 * (hi - lo) / self.levels() as f32
+    }
+}
+
+/// min/max calibration over a sample of feature values.
+pub fn calibrate(x: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() || lo >= hi {
+        (0.0, 1.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        forall(
+            31,
+            200,
+            |g| {
+                let n = g.usize_in(1, 64);
+                let bits = 2 + (g.rng.next_u64() % 8) as u32;
+                (g.vec_f32(n, -4.0, 4.0), bits)
+            },
+            |(x, bits)| {
+                let q = Quantizer::new(*bits).unwrap();
+                let (lo, hi) = calibrate(x);
+                let codes = q.quantize(x, lo, hi);
+                let x2 = q.dequantize(&codes, lo, hi);
+                let tol = q.max_error(lo, hi) * 1.001 + 1e-6;
+                for (a, b) in x.iter().zip(&x2) {
+                    // values outside the calibration range are clipped by
+                    // design (Eq. 1); the bound applies to the clipped value
+                    let a = a.clamp(lo, hi);
+                    if (a - b).abs() > tol {
+                        return Err(format!("{a} vs {b} (tol {tol}, bits {bits})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        forall(
+            32,
+            200,
+            |g| {
+                let bits = 1 + (g.rng.next_u64() % 12) as u32;
+                let n = g.usize_in(1, 100);
+                let max = (1u32 << bits) - 1;
+                let codes: Vec<u16> = (0..n)
+                    .map(|_| (g.rng.next_u64() % (max as u64 + 1)) as u16)
+                    .collect();
+                (codes, bits)
+            },
+            |(codes, bits)| {
+                let q = Quantizer::new(*bits).unwrap();
+                let packed = q.pack(codes);
+                if packed.len() != (codes.len() * *bits as usize).div_ceil(8) {
+                    return Err("wrong packed size".into());
+                }
+                let back = q.unpack(&packed, codes.len()).map_err(|e| e.to_string())?;
+                if &back != codes {
+                    return Err("codes mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_paper_formula_exactly() {
+        // hand-computed: x = 0.5 in [0,1] at 2 bits -> round(3*0.5)=2 -> 2/3
+        let q = Quantizer::new(2).unwrap();
+        let codes = q.quantize(&[0.5], 0.0, 1.0);
+        assert_eq!(codes, vec![2]);
+        let back = q.dequantize(&codes, 0.0, 1.0);
+        assert!((back[0] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clipping_outside_calibration() {
+        let q = Quantizer::new(8).unwrap();
+        let codes = q.quantize(&[-10.0, 10.0], 0.0, 1.0);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[1], 255);
+    }
+
+    #[test]
+    fn degenerate_calibration() {
+        assert_eq!(calibrate(&[]), (0.0, 1.0));
+        assert_eq!(calibrate(&[2.0, 2.0]), (0.0, 1.0));
+        let (lo, hi) = calibrate(&[1.0, -1.0]);
+        assert_eq!((lo, hi), (-1.0, 1.0));
+    }
+
+    #[test]
+    fn invalid_bitwidths_rejected() {
+        assert!(Quantizer::new(0).is_err());
+        assert!(Quantizer::new(17).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! The decision maker deployed at the edge (Sec. 3.1): maps the assembled
+//! state-pool vector to a joint [`FrameDecision`] each frame.
+//!
+//! Wraps either trained MAHPPO actor networks (greedy at serving time) or
+//! a baseline policy; the serving loop doesn't care which.
+
+use anyhow::Result;
+
+use super::protocol::FrameDecision;
+use crate::env::HybridAction;
+use crate::rl::sampling;
+use crate::runtime::artifacts::ArtifactStore;
+use crate::runtime::nets::ActorNet;
+
+/// A serving-time decision source.
+pub trait DecisionSource: Send {
+    fn decide(&mut self, state: &[f32]) -> Result<Vec<HybridAction>>;
+}
+
+/// Greedy MAHPPO actors (the trained agent, deployed).
+pub struct ActorDecision {
+    actors: Vec<ActorNet>,
+    p_max: f64,
+    n_choices: usize,
+}
+
+impl ActorDecision {
+    pub fn new(store: &ArtifactStore, n_ues: usize, p_max: f64, seed: u64) -> Result<ActorDecision> {
+        let rl = store.rl()?;
+        let actors = (0..n_ues)
+            .map(|i| ActorNet::new(store, n_ues, seed.wrapping_add(i as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ActorDecision {
+            actors,
+            p_max,
+            n_choices: rl.n_partition,
+        })
+    }
+
+    /// Deploy trained actors (moves the nets out of a trainer).
+    pub fn from_actors(actors: Vec<ActorNet>, p_max: f64, n_choices: usize) -> ActorDecision {
+        ActorDecision {
+            actors,
+            p_max,
+            n_choices,
+        }
+    }
+}
+
+impl DecisionSource for ActorDecision {
+    fn decide(&mut self, state: &[f32]) -> Result<Vec<HybridAction>> {
+        let mut out = Vec::with_capacity(self.actors.len());
+        for actor in self.actors.iter_mut() {
+            let o = actor.forward(state)?;
+            let g = sampling::greedy_hybrid(&o);
+            out.push(HybridAction::new(
+                g.b.min(self.n_choices - 1),
+                g.c,
+                g.p_raw,
+                self.p_max,
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// A fixed decision (Local / FixedSplit serving baselines).
+pub struct StaticDecision {
+    pub actions: Vec<HybridAction>,
+}
+
+impl DecisionSource for StaticDecision {
+    fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
+        Ok(self.actions.clone())
+    }
+}
+
+/// The per-frame decision maker: numbers frames and delegates to a source.
+pub struct DecisionMaker {
+    source: Box<dyn DecisionSource>,
+    frame: usize,
+}
+
+impl DecisionMaker {
+    pub fn new(source: Box<dyn DecisionSource>) -> DecisionMaker {
+        DecisionMaker { source, frame: 0 }
+    }
+
+    pub fn next_decision(&mut self, state: &[f32]) -> Result<FrameDecision> {
+        let actions = self.source.decide(state)?;
+        let d = FrameDecision {
+            frame: self.frame,
+            actions,
+        };
+        self.frame += 1;
+        Ok(d)
+    }
+
+    pub fn frames_issued(&self) -> usize {
+        self.frame
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_source_numbers_frames() {
+        let a = vec![HybridAction::new(5, 0, 0.0, 1.0); 3];
+        let mut dm = DecisionMaker::new(Box::new(StaticDecision { actions: a }));
+        let d0 = dm.next_decision(&[0.0; 12]).unwrap();
+        let d1 = dm.next_decision(&[0.0; 12]).unwrap();
+        assert_eq!(d0.frame, 0);
+        assert_eq!(d1.frame, 1);
+        assert_eq!(d1.actions.len(), 3);
+        assert_eq!(dm.frames_issued(), 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! The collaborative-inference pipeline over real AOT model segments
+//! (paper Fig. 1): UE-side front segment → AE encode (Pallas conv1x1 +
+//! quant kernels) → wire → edge-side AE decode → back segment.
+//!
+//! Every stage is a compiled XLA executable; this module wires them
+//! together per partition decision and reports per-stage timings so the
+//! serving example can print real latency/throughput numbers.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::protocol::{InferenceResult, OffloadRequest};
+use crate::compress::ae::{AeCompressor, EncodedFeature};
+use crate::runtime::artifacts::{ArtifactStore, ModelMeta};
+use crate::runtime::client::Executable;
+use crate::runtime::tensor::f32_literal;
+
+/// Per-stage timing of one collaborative inference (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineTiming {
+    pub front_s: f64,
+    pub encode_s: f64,
+    pub wire_bits: usize,
+    pub decode_s: f64,
+    pub back_s: f64,
+}
+
+impl PipelineTiming {
+    pub fn ue_side_s(&self) -> f64 {
+        self.front_s + self.encode_s
+    }
+
+    pub fn edge_side_s(&self) -> f64 {
+        self.decode_s + self.back_s
+    }
+}
+
+/// The full collaborative pipeline for one model: all four cuts plus the
+/// full-model path, selected per request.
+pub struct CollabPipeline {
+    pub meta: ModelMeta,
+    weights: Vec<f32>,
+    full: Arc<Executable>,
+    fronts: Vec<Arc<Executable>>,
+    backs: Vec<Arc<Executable>>,
+    compressors: Vec<AeCompressor>,
+}
+
+impl CollabPipeline {
+    pub fn load(store: &ArtifactStore, model: &str) -> Result<CollabPipeline> {
+        let meta = store.model(model)?.clone();
+        let weights = store.model_weights(model)?;
+        let full = store.load(&format!("{model}_full_b1"))?;
+        let mut fronts = Vec::new();
+        let mut backs = Vec::new();
+        let mut compressors = Vec::new();
+        for p in 1..=meta.points.len() {
+            fronts.push(store.load(&format!("{model}_front_p{p}"))?);
+            backs.push(store.load(&format!("{model}_back_p{p}"))?);
+            compressors.push(AeCompressor::load(store, model, p)?);
+        }
+        Ok(CollabPipeline {
+            meta,
+            weights,
+            full,
+            fronts,
+            backs,
+            compressors,
+        })
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.fronts.len()
+    }
+
+    fn image_shape(&self) -> Vec<usize> {
+        vec![1, 3, self.meta.input_hw, self.meta.input_hw]
+    }
+
+    /// Full on-device inference (the b = B+1 decision).
+    pub fn infer_local(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.full.call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(image, &self.image_shape())?,
+        ])?;
+        outs[0].clone().into_f32s()
+    }
+
+    /// Raw intermediate feature at point `p` (no compression) — used by
+    /// the JALAD measurement path and numerics tests.
+    pub fn front_feature(&self, image: &[f32], p: usize) -> Result<Vec<f32>> {
+        let idx = p
+            .checked_sub(1)
+            .filter(|&i| i < self.fronts.len())
+            .ok_or_else(|| anyhow!("partition point {p} out of range"))?;
+        let outs = self.fronts[idx].call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(image, &self.image_shape())?,
+        ])?;
+        outs[0].clone().into_f32s()
+    }
+
+    /// UE half for partition point `p` (1-based): front segment + encode.
+    pub fn ue_half(&self, image: &[f32], p: usize) -> Result<(EncodedFeature, PipelineTiming)> {
+        let idx = p
+            .checked_sub(1)
+            .filter(|&i| i < self.fronts.len())
+            .ok_or_else(|| anyhow!("partition point {p} out of range"))?;
+        let mut timing = PipelineTiming::default();
+
+        let t = Instant::now();
+        let outs = self.fronts[idx].call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(image, &self.image_shape())?,
+        ])?;
+        let feature = outs[0].clone().into_f32s()?;
+        timing.front_s = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let encoded = self.compressors[idx].encode(&feature)?;
+        timing.encode_s = t.elapsed().as_secs_f64();
+        timing.wire_bits = encoded.wire_bits();
+        Ok((encoded, timing))
+    }
+
+    /// Decode a compressed feature back to (1, ch, h, w) without running
+    /// the back segment (reconstruction-error measurement).
+    pub fn decode_feature(&self, encoded: &EncodedFeature, p: usize) -> Result<Vec<f32>> {
+        let idx = p
+            .checked_sub(1)
+            .filter(|&i| i < self.compressors.len())
+            .ok_or_else(|| anyhow!("partition point {p} out of range"))?;
+        self.compressors[idx].decode(encoded)
+    }
+
+    /// Edge half for partition point `p`: decode + back segment.
+    pub fn edge_half(
+        &self,
+        encoded: &EncodedFeature,
+        p: usize,
+        timing: &mut PipelineTiming,
+    ) -> Result<Vec<f32>> {
+        let idx = p
+            .checked_sub(1)
+            .filter(|&i| i < self.backs.len())
+            .ok_or_else(|| anyhow!("partition point {p} out of range"))?;
+        let t = Instant::now();
+        let feature = self.compressors[idx].decode(encoded)?;
+        timing.decode_s = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let pm = &self.compressors[idx].meta;
+        let outs = self.backs[idx].call(&[
+            f32_literal(&self.weights, &[self.weights.len()])?,
+            f32_literal(&feature, &[1, pm.ch, pm.h, pm.w])?,
+        ])?;
+        let logits = outs[0].clone().into_f32s()?;
+        timing.back_s = t.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// Whole split inference at point `p` (UE + edge halves in-process).
+    pub fn infer_split(&self, image: &[f32], p: usize) -> Result<(Vec<f32>, PipelineTiming)> {
+        let (encoded, mut timing) = self.ue_half(image, p)?;
+        let logits = self.edge_half(&encoded, p, &mut timing)?;
+        Ok((logits, timing))
+    }
+
+    /// Serve an [`OffloadRequest`] arriving at the edge over the wire
+    /// format (used by the threaded server).
+    pub fn serve_offload(&self, req: &OffloadRequest) -> Result<InferenceResult> {
+        let t0 = Instant::now();
+        let logits = if req.b == 0 {
+            // raw input: payload is the f32 image bytes
+            let image: Vec<f32> = req
+                .payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            // the edge runs the whole model
+            self.infer_local(&image)?
+        } else {
+            let idx = req.b - 1;
+            let pm = &self.compressors[idx].meta;
+            let (lo, hi) = req
+                .calibration
+                .ok_or_else(|| anyhow!("feature offload without calibration"))?;
+            let encoded = EncodedFeature::from_wire(
+                &req.payload,
+                vec![1, pm.ch_r, pm.h, pm.w],
+                lo,
+                hi,
+                pm.bits as u32,
+            )?;
+            let mut timing = PipelineTiming::default();
+            self.edge_half(&encoded, req.b, &mut timing)?
+        };
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(InferenceResult {
+            ue_id: req.ue_id,
+            task_id: req.task_id,
+            logits,
+            argmax,
+            edge_latency_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

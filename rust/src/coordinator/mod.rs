@@ -1,0 +1,25 @@
+//! The edge-server coordinator (paper Sec. 3.1 workflow).
+//!
+//! A fixed-frequency decision loop runs at the edge: at the end of each
+//! frame every UE reports its state; the decision maker (a trained MAHPPO
+//! agent or a baseline) computes the next joint action; decisions are
+//! broadcast back; UEs execute tasks locally and/or offload (compressed)
+//! features which the edge completes through the back model segment.
+//!
+//! * [`protocol`] — the UE ⇄ server message types.
+//! * [`state_pool`] — "the edge server collects and stores the states of
+//!   all UEs" (Sec. 3.1): assembly of the global state vector.
+//! * [`decision`] — policy wrapper producing per-frame joint actions.
+//! * [`inference`] — the collaborative-inference pipeline over real AOT
+//!   model segments: front → AE-encode → wire → AE-decode → back.
+//! * [`batcher`] — dynamic batching of edge-side full-model executions for
+//!   raw-input offloads.
+//! * [`server`] — the threaded event loop tying it together (std threads +
+//!   mpsc; tokio is unavailable in the offline build).
+
+pub mod batcher;
+pub mod decision;
+pub mod inference;
+pub mod protocol;
+pub mod server;
+pub mod state_pool;

@@ -1,0 +1,93 @@
+//! UE ⇄ edge-server message types (Sec. 3.1 workflow).
+//!
+//! In a real deployment these cross the radio; here they cross mpsc
+//! channels between UE threads and the server loop, but the schema is the
+//! same: state reports up, per-frame decisions down, offloaded payloads up,
+//! inference results down.
+
+use crate::env::HybridAction;
+
+/// One UE's per-frame state report (the four Sec. 4.3 components).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UeStateReport {
+    pub ue_id: usize,
+    /// Remaining (uncompleted) tasks — k_t.
+    pub tasks_left: u64,
+    /// Remaining local compute time of the in-flight task (s) — l_t.
+    pub compute_left_s: f64,
+    /// Remaining offload payload of the in-flight task (bits) — n_t.
+    pub offload_left_bits: f64,
+    /// Distance to the BS (m) — d.
+    pub distance_m: f64,
+}
+
+/// The decision broadcast for one frame.
+#[derive(Debug, Clone)]
+pub struct FrameDecision {
+    pub frame: usize,
+    /// One hybrid action per UE, indexed by ue_id.
+    pub actions: Vec<HybridAction>,
+}
+
+/// An offloaded payload arriving at the edge.
+#[derive(Debug, Clone)]
+pub struct OffloadRequest {
+    pub ue_id: usize,
+    pub task_id: u64,
+    /// Partition decision used by the UE: 0 = raw input, 1..=4 = AE-coded
+    /// feature at that cut.
+    pub b: usize,
+    /// Wire payload (packed codes or raw image bytes).
+    pub payload: Vec<u8>,
+    /// AE calibration (lo, hi) when b >= 1.
+    pub calibration: Option<(f32, f32)>,
+}
+
+/// Edge-side inference result returned to the UE.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub ue_id: usize,
+    pub task_id: u64,
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// Server-side processing time (s).
+    pub edge_latency_s: f64,
+}
+
+/// Server -> UE control messages.
+#[derive(Debug, Clone)]
+pub enum Downlink {
+    Decision(FrameDecision),
+    Result(InferenceResult),
+    Shutdown,
+}
+
+/// UE -> server messages.
+#[derive(Debug, Clone)]
+pub enum Uplink {
+    Report(UeStateReport),
+    Offload(OffloadRequest),
+    /// UE finished all tasks and is leaving the system.
+    Goodbye { ue_id: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips_through_enum() {
+        let r = UeStateReport {
+            ue_id: 3,
+            tasks_left: 17,
+            compute_left_s: 0.02,
+            offload_left_bits: 1e5,
+            distance_m: 50.0,
+        };
+        let up = Uplink::Report(r);
+        match up {
+            Uplink::Report(r2) => assert_eq!(r2, r),
+            _ => panic!("wrong variant"),
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The threaded edge-server event loop (Sec. 3.1 workflow, Fig. 2a).
+//!
+//! One server thread owns the state pool, the decision maker and the
+//! offload executor; each UE is a client holding an `mpsc::Sender<Uplink>`
+//! and its own downlink receiver. Per tick the server:
+//!
+//! 1. drains uplink messages (state reports, offloaded payloads, goodbyes);
+//! 2. if a decision interval elapsed, assembles the state pool and
+//!    broadcasts the next [`FrameDecision`];
+//! 3. serves offloaded inferences (through the collaborative pipeline) and
+//!    returns results on the owning UE's downlink.
+//!
+//! std threads + mpsc stand in for tokio (offline build — see DESIGN.md);
+//! the loop structure is identical to an async reactor with a timer.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::decision::DecisionMaker;
+use super::inference::CollabPipeline;
+use super::protocol::{Downlink, Uplink};
+use super::state_pool::StatePool;
+
+/// Server-side counters (exposed after shutdown).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub frames: usize,
+    pub reports: usize,
+    pub offloads_served: usize,
+    pub raw_offloads: usize,
+    pub feature_offloads: usize,
+    pub edge_compute_s: f64,
+}
+
+/// Handle to a running edge server.
+pub struct EdgeServer {
+    pub uplink: Sender<Uplink>,
+    handle: Option<JoinHandle<ServerStats>>,
+}
+
+/// Everything the server thread needs.
+pub struct ServerConfig {
+    pub n_ues: usize,
+    /// Real-time decision interval (scaled-down T0 for the demo loop).
+    pub decision_interval: Duration,
+    /// Stop after this many decision frames even if UEs linger.
+    pub max_frames: usize,
+}
+
+impl EdgeServer {
+    /// Spawn the server thread. `downlinks[ue_id]` receives that UE's
+    /// decisions and inference results. `pipeline` may be `None` for a
+    /// decision-only server (pure scheduling, no model serving).
+    pub fn spawn(
+        cfg: ServerConfig,
+        mut pool: StatePool,
+        mut decisions: DecisionMaker,
+        pipeline: Option<CollabPipeline>,
+    ) -> Result<(EdgeServer, Vec<Receiver<Downlink>>)> {
+        let (uplink_tx, uplink_rx) = channel::<Uplink>();
+        let mut downlink_txs: Vec<Sender<Downlink>> = Vec::with_capacity(cfg.n_ues);
+        let mut downlink_rxs: Vec<Receiver<Downlink>> = Vec::with_capacity(cfg.n_ues);
+        for _ in 0..cfg.n_ues {
+            let (tx, rx) = channel();
+            downlink_txs.push(tx);
+            downlink_rxs.push(rx);
+        }
+
+        let handle = std::thread::Builder::new()
+            .name("edge-server".into())
+            .spawn(move || {
+                server_loop(cfg, uplink_rx, downlink_txs, &mut pool, &mut decisions, pipeline)
+            })?;
+
+        Ok((
+            EdgeServer {
+                uplink: uplink_tx,
+                handle: Some(handle),
+            },
+            downlink_rxs,
+        ))
+    }
+
+    /// Wait for the server loop to exit and collect its stats.
+    pub fn join(mut self) -> ServerStats {
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+fn server_loop(
+    cfg: ServerConfig,
+    uplink: Receiver<Uplink>,
+    downlinks: Vec<Sender<Downlink>>,
+    pool: &mut StatePool,
+    decisions: &mut DecisionMaker,
+    pipeline: Option<CollabPipeline>,
+) -> ServerStats {
+    let mut stats = ServerStats::default();
+    let mut alive: HashMap<usize, bool> = (0..downlinks.len()).map(|i| (i, true)).collect();
+    let mut last_decision = Instant::now();
+    // issue an initial decision as soon as the first full pool assembles
+    let mut first_decision_done = false;
+
+    loop {
+        // -- drain the uplink --
+        loop {
+            match uplink.try_recv() {
+                Ok(Uplink::Report(r)) => {
+                    stats.reports += 1;
+                    pool.ingest(r);
+                }
+                Ok(Uplink::Offload(req)) => {
+                    if let Some(pipe) = pipeline.as_ref() {
+                        if req.b == 0 {
+                            stats.raw_offloads += 1;
+                        } else {
+                            stats.feature_offloads += 1;
+                        }
+                        match pipe.serve_offload(&req) {
+                            Ok(result) => {
+                                stats.offloads_served += 1;
+                                stats.edge_compute_s += result.edge_latency_s;
+                                if let Some(tx) = downlinks.get(req.ue_id) {
+                                    let _ = tx.send(Downlink::Result(result));
+                                }
+                            }
+                            Err(e) => log::error!("offload from UE {}: {e:#}", req.ue_id),
+                        }
+                    }
+                }
+                Ok(Uplink::Goodbye { ue_id }) => {
+                    alive.insert(ue_id, false);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        // -- all UEs done? --
+        if alive.values().all(|&a| !a) {
+            break;
+        }
+        if stats.frames >= cfg.max_frames {
+            break;
+        }
+
+        // -- decision tick --
+        let due = last_decision.elapsed() >= cfg.decision_interval;
+        let ready = pool.complete() || first_decision_done;
+        if (due && ready) || (!first_decision_done && pool.complete()) {
+            let state = pool.assemble();
+            match decisions.next_decision(&state) {
+                Ok(d) => {
+                    stats.frames += 1;
+                    first_decision_done = true;
+                    for (i, tx) in downlinks.iter().enumerate() {
+                        if alive.get(&i).copied().unwrap_or(false) {
+                            let _ = tx.send(Downlink::Decision(d.clone()));
+                        }
+                    }
+                }
+                Err(e) => log::error!("decision failed: {e:#}"),
+            }
+            last_decision = Instant::now();
+        }
+
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
+    for tx in &downlinks {
+        let _ = tx.send(Downlink::Shutdown);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::decision::StaticDecision;
+    use crate::coordinator::protocol::UeStateReport;
+    use crate::coordinator::state_pool::StateNorm;
+    use crate::env::HybridAction;
+
+    #[test]
+    fn decision_only_server_round() {
+        let n = 3;
+        let pool = StatePool::new(
+            n,
+            StateNorm {
+                lambda_tasks: 10.0,
+                frame_s: 0.5,
+                max_bits: 1e6,
+                d_max: 100.0,
+            },
+        );
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
+        }));
+        let cfg = ServerConfig {
+            n_ues: n,
+            decision_interval: Duration::from_millis(5),
+            max_frames: 3,
+        };
+        let (server, downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
+
+        // all UEs report, then await decisions
+        for ue in 0..n {
+            server
+                .uplink
+                .send(Uplink::Report(UeStateReport {
+                    ue_id: ue,
+                    tasks_left: 5,
+                    compute_left_s: 0.0,
+                    offload_left_bits: 0.0,
+                    distance_m: 40.0,
+                }))
+                .unwrap();
+        }
+        let mut got = 0;
+        for rx in &downlinks {
+            if let Ok(Downlink::Decision(d)) = rx.recv_timeout(Duration::from_secs(2)) {
+                assert_eq!(d.actions.len(), n);
+                got += 1;
+            }
+        }
+        assert_eq!(got, n, "every UE receives the broadcast");
+        for ue in 0..n {
+            server.uplink.send(Uplink::Goodbye { ue_id: ue }).unwrap();
+        }
+        let stats = server.join();
+        assert!(stats.frames >= 1);
+        assert_eq!(stats.reports, n);
+    }
+}

@@ -1,0 +1,159 @@
+//! The state pool (Sec. 3.1): "the edge server collects and stores the
+//! states of all UEs. We term the collection of all UE states the state
+//! pool." Assembles the normalized 4N state vector the decision maker
+//! consumes, tolerating missing/stale reports (last value is held).
+
+use super::protocol::UeStateReport;
+
+/// Normalization constants — must match `env::mdp::MultiAgentEnv::state`.
+#[derive(Debug, Clone, Copy)]
+pub struct StateNorm {
+    pub lambda_tasks: f64,
+    pub frame_s: f64,
+    pub max_bits: f64,
+    pub d_max: f64,
+}
+
+pub struct StatePool {
+    n_ues: usize,
+    norm: StateNorm,
+    reports: Vec<Option<UeStateReport>>,
+    /// Number of fresh reports since the last assemble().
+    fresh: usize,
+}
+
+impl StatePool {
+    pub fn new(n_ues: usize, norm: StateNorm) -> StatePool {
+        StatePool {
+            n_ues,
+            norm,
+            reports: vec![None; n_ues],
+            fresh: 0,
+        }
+    }
+
+    pub fn ingest(&mut self, r: UeStateReport) {
+        if r.ue_id < self.n_ues {
+            if self.reports[r.ue_id].is_none() {
+                self.fresh += 1;
+            }
+            self.reports[r.ue_id] = Some(r);
+        }
+    }
+
+    /// All UEs have reported at least once since the last drain?
+    pub fn complete(&self) -> bool {
+        self.reports.iter().all(|r| r.is_some())
+    }
+
+    pub fn fresh_count(&self) -> usize {
+        self.fresh
+    }
+
+    /// Assemble the normalized `{k, l, n, d}` state vector. Missing reports
+    /// contribute zeros (a UE that never reported looks "done").
+    pub fn assemble(&mut self) -> Vec<f32> {
+        let n = self.n_ues;
+        let mut s = Vec::with_capacity(4 * n);
+        let k_norm = self.norm.lambda_tasks.max(1.0);
+        for i in 0..n {
+            s.push(
+                self.reports[i]
+                    .map(|r| (r.tasks_left as f64 / k_norm) as f32)
+                    .unwrap_or(0.0),
+            );
+        }
+        for i in 0..n {
+            s.push(
+                self.reports[i]
+                    .map(|r| (r.compute_left_s / self.norm.frame_s) as f32)
+                    .unwrap_or(0.0),
+            );
+        }
+        for i in 0..n {
+            s.push(
+                self.reports[i]
+                    .map(|r| (r.offload_left_bits / self.norm.max_bits.max(1.0)) as f32)
+                    .unwrap_or(0.0),
+            );
+        }
+        for i in 0..n {
+            s.push(
+                self.reports[i]
+                    .map(|r| (r.distance_m / self.norm.d_max) as f32)
+                    .unwrap_or(0.0),
+            );
+        }
+        self.fresh = 0;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm() -> StateNorm {
+        StateNorm {
+            lambda_tasks: 200.0,
+            frame_s: 0.5,
+            max_bits: 1.2e6,
+            d_max: 100.0,
+        }
+    }
+
+    fn report(ue: usize, k: u64) -> UeStateReport {
+        UeStateReport {
+            ue_id: ue,
+            tasks_left: k,
+            compute_left_s: 0.25,
+            offload_left_bits: 6e5,
+            distance_m: 50.0,
+        }
+    }
+
+    #[test]
+    fn assembles_in_block_layout() {
+        let mut pool = StatePool::new(2, norm());
+        pool.ingest(report(0, 100));
+        pool.ingest(report(1, 200));
+        assert!(pool.complete());
+        let s = pool.assemble();
+        assert_eq!(s.len(), 8);
+        assert!((s[0] - 0.5).abs() < 1e-6); // k0 = 100/200
+        assert!((s[1] - 1.0).abs() < 1e-6); // k1
+        assert!((s[2] - 0.5).abs() < 1e-6); // l0 = .25/.5
+        assert!((s[4] - 0.5).abs() < 1e-6); // n0 = 6e5/1.2e6
+        assert!((s[6] - 0.5).abs() < 1e-6); // d0
+    }
+
+    #[test]
+    fn missing_reports_are_zero() {
+        let mut pool = StatePool::new(3, norm());
+        pool.ingest(report(1, 100));
+        assert!(!pool.complete());
+        let s = pool.assemble();
+        assert_eq!(s[0], 0.0);
+        assert!(s[1] > 0.0);
+        assert_eq!(s[2], 0.0);
+    }
+
+    #[test]
+    fn stale_reports_held_and_fresh_counter() {
+        let mut pool = StatePool::new(2, norm());
+        pool.ingest(report(0, 10));
+        assert_eq!(pool.fresh_count(), 1);
+        let _ = pool.assemble();
+        assert_eq!(pool.fresh_count(), 0);
+        // after drain, the old report is still held
+        let s = pool.assemble();
+        assert!(s[0] > 0.0);
+    }
+
+    #[test]
+    fn out_of_range_ue_ignored() {
+        let mut pool = StatePool::new(2, norm());
+        pool.ingest(report(7, 10));
+        assert!(!pool.complete());
+    }
+}

@@ -1,0 +1,161 @@
+//! Wireless uplink model — Eq. (5) with co-channel interference.
+//!
+//! r_n = ω_{c_n} log2(1 + p_n g_n / (σ_{c_n} + Σ_{i co-channel, offloading} p_i g_i))
+//!
+//! The paper's formula sums interference over all offloading UEs; since σ
+//! is per-channel and C = 2 channels otherwise have no effect, we restrict
+//! the sum to UEs transmitting on the *same* channel (see DESIGN.md
+//! §Substitutions — "ambiguities resolved").
+
+use super::scenario::ScenarioConfig;
+
+/// A transmitting UE as seen by the channel model.
+#[derive(Debug, Clone, Copy)]
+pub struct Transmitter {
+    pub ue: usize,
+    pub channel: usize,
+    pub power_w: f64,
+    pub gain: f64,
+}
+
+/// Computes uplink rates for the current set of transmitters.
+#[derive(Debug, Clone)]
+pub struct ChannelModel {
+    pub bandwidth_hz: f64,
+    pub noise_w: f64,
+    pub n_channels: usize,
+}
+
+impl ChannelModel {
+    pub fn new(cfg: &ScenarioConfig) -> ChannelModel {
+        ChannelModel {
+            bandwidth_hz: cfg.bandwidth_hz,
+            noise_w: cfg.noise_w,
+            n_channels: cfg.n_channels,
+        }
+    }
+
+    /// Uplink rate (bits/s) for every transmitter, Eq. (5).
+    ///
+    /// O(T) per call: received powers are accumulated per channel once,
+    /// then each transmitter subtracts its own contribution.
+    pub fn rates(&self, txs: &[Transmitter]) -> Vec<f64> {
+        let mut per_channel = vec![0.0f64; self.n_channels];
+        for t in txs {
+            debug_assert!(t.channel < self.n_channels);
+            per_channel[t.channel] += t.power_w * t.gain;
+        }
+        txs.iter()
+            .map(|t| {
+                let signal = t.power_w * t.gain;
+                let interference = per_channel[t.channel] - signal;
+                let sinr = signal / (self.noise_w + interference);
+                self.bandwidth_hz * (1.0 + sinr).log2()
+            })
+            .collect()
+    }
+
+    /// Rate of a single transmitter given explicit interference (W).
+    pub fn rate_with_interference(&self, power_w: f64, gain: f64, interference_w: f64) -> f64 {
+        let sinr = power_w * gain / (self.noise_w + interference_w);
+        self.bandwidth_hz * (1.0 + sinr).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn model() -> ChannelModel {
+        ChannelModel {
+            bandwidth_hz: 1e6,
+            noise_w: 1e-9,
+            n_channels: 2,
+        }
+    }
+
+    fn tx(ue: usize, channel: usize, power_w: f64, d: f64) -> Transmitter {
+        Transmitter {
+            ue,
+            channel,
+            power_w,
+            gain: d.powf(-3.0),
+        }
+    }
+
+    #[test]
+    fn single_transmitter_no_interference() {
+        let m = model();
+        let r = m.rates(&[tx(0, 0, 1.0, 50.0)]);
+        // SNR = 1 * 50^-3 / 1e-9 = 8000 -> rate = 1e6 * log2(8001)
+        let expect = 1e6 * (1.0f64 + 8e-6 / 1e-9).log2();
+        assert!((r[0] - expect).abs() / expect < 1e-9, "{} vs {expect}", r[0]);
+    }
+
+    #[test]
+    fn co_channel_interference_reduces_rate() {
+        let m = model();
+        let solo = m.rates(&[tx(0, 0, 1.0, 50.0)])[0];
+        let both_same = m.rates(&[tx(0, 0, 1.0, 50.0), tx(1, 0, 1.0, 40.0)]);
+        let both_diff = m.rates(&[tx(0, 0, 1.0, 50.0), tx(1, 1, 1.0, 40.0)]);
+        assert!(both_same[0] < solo);
+        // different channels do not interfere
+        assert!((both_diff[0] - solo).abs() / solo < 1e-12);
+    }
+
+    #[test]
+    fn rates_match_direct_formula() {
+        // property: per-channel accumulation == direct pairwise sum
+        forall(
+            42,
+            200,
+            |g| {
+                let n = g.usize_in(1, 8);
+                (0..n)
+                    .map(|i| {
+                        tx(
+                            i,
+                            g.usize_in(0, 2).min(1),
+                            g.f64_in(0.01, 1.0),
+                            g.f64_in(1.0, 100.0),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |txs| {
+                let m = model();
+                let fast = m.rates(txs);
+                for (i, t) in txs.iter().enumerate() {
+                    let interference: f64 = txs
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, o)| *j != i && o.channel == t.channel)
+                        .map(|(_, o)| o.power_w * o.gain)
+                        .sum();
+                    let direct = m.rate_with_interference(t.power_w, t.gain, interference);
+                    let rel = (fast[i] - direct).abs() / direct.max(1.0);
+                    if rel > 1e-9 {
+                        return Err(format!("ue {i}: {} vs {direct}", fast[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_power_more_rate_monotone() {
+        let m = model();
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let d = rng.uniform(1.0, 100.0);
+            let p1 = rng.uniform(0.01, 0.5);
+            let p2 = p1 + rng.uniform(0.01, 0.5);
+            let r1 = m.rates(&[tx(0, 0, p1, d)])[0];
+            let r2 = m.rates(&[tx(0, 0, p2, d)])[0];
+            assert!(r2 > r1);
+        }
+    }
+}

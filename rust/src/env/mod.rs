@@ -1,0 +1,62 @@
+//! Multi-UE collaborative-inference environment (paper Secs. 3–4).
+//!
+//! * [`scenario`] — scenario configuration (N, C, bandwidth, β, T0, …).
+//! * [`channel`] — the wireless uplink model, Eq. (5), with co-channel
+//!   interference between simultaneously offloading UEs.
+//! * [`ue`] — per-UE task state machine (compute → compress → offload),
+//!   driven by the device overhead profile.
+//! * [`mdp`] — the frame-stepped MDP: state (Sec. 4.3), event-driven
+//!   intra-frame simulation, reward Eq. (12), episode bookkeeping.
+
+pub mod channel;
+pub mod mdp;
+pub mod scenario;
+pub mod ue;
+
+/// One UE's hybrid action (Sec. 3.3): partition point `b`, offloading
+/// channel `c` (0-based internally) and transmit power.
+///
+/// `p_raw` is the unsquashed Gaussian sample the actor emitted — stored so
+/// PPO can recompute its log-probability; `p_watts = p_max * sigmoid(p_raw)`
+/// is what the radio actually uses (constraint C3: 0 < p ≤ p_max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridAction {
+    pub b: usize,
+    pub c: usize,
+    pub p_raw: f32,
+    pub p_watts: f64,
+}
+
+impl HybridAction {
+    /// Map a raw Gaussian power action into (0, p_max].
+    pub fn squash_power(p_raw: f32, p_max: f64) -> f64 {
+        let s = 1.0 / (1.0 + (-p_raw as f64).exp());
+        (p_max * s).max(p_max * 1e-4)
+    }
+
+    pub fn new(b: usize, c: usize, p_raw: f32, p_max: f64) -> HybridAction {
+        HybridAction {
+            b,
+            c,
+            p_raw,
+            p_watts: Self::squash_power(p_raw, p_max),
+        }
+    }
+}
+
+/// Joint action: one [`HybridAction`] per UE.
+pub type Action = Vec<HybridAction>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_squash_respects_c3() {
+        for raw in [-100.0f32, -2.0, 0.0, 2.0, 100.0] {
+            let p = HybridAction::squash_power(raw, 1.0);
+            assert!(p > 0.0 && p <= 1.0, "raw {raw} -> {p}");
+        }
+        assert!((HybridAction::squash_power(0.0, 2.0) - 1.0).abs() < 1e-9);
+    }
+}

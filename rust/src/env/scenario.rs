@@ -1,0 +1,134 @@
+//! Scenario configuration — the environment constants of Sec. 6.3.1.
+
+/// All environment constants. Defaults are the paper's Sec. 6.3.1 settings.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Number of UEs (N). Paper default 5, sweeps 3..10 (Fig. 10/11).
+    pub n_ues: usize,
+    /// Number of offloading channels (C). Paper: 2.
+    pub n_channels: usize,
+    /// Per-channel bandwidth ω (Hz). Paper: 1 MHz, static channels.
+    pub bandwidth_hz: f64,
+    /// Background noise power σ (W). Paper: 1e-9.
+    pub noise_w: f64,
+    /// Path-loss exponent l in g = d^{-l}. Paper: 3 (urban cellular).
+    pub path_loss_exp: f64,
+    /// Maximum transmit power p_max (W) — constraint (C3). Not stated in
+    /// the paper; 1 W (see DESIGN.md §Substitutions).
+    pub p_max: f64,
+    /// Duration of one time frame T0 (s). Paper: 0.5 (3.0 for JALAD runs).
+    pub frame_s: f64,
+    /// Latency/energy balance β in Eq. (10)/(12). Paper: 0.47.
+    pub beta: f64,
+    /// Poisson parameter λ_p for the per-UE task count. Paper: 200.
+    pub lambda_tasks: f64,
+    /// UE–BS distance range (m): d_n ~ U[d_min, d_max]. Paper: [1, 100].
+    pub d_min: f64,
+    pub d_max: f64,
+    /// Evaluation mode (Sec. 6.3.1): fixed d = 50 m and K = 200 tasks for
+    /// fair comparison between trained agents.
+    pub eval_mode: bool,
+    pub eval_distance: f64,
+    pub eval_tasks: u64,
+    /// Safety cap on frames per episode (no-progress guard).
+    pub max_frames: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            n_ues: 5,
+            n_channels: 2,
+            bandwidth_hz: 1e6,
+            noise_w: 1e-9,
+            path_loss_exp: 3.0,
+            p_max: 1.0,
+            frame_s: 0.5,
+            beta: 0.47,
+            lambda_tasks: 200.0,
+            d_min: 1.0,
+            d_max: 100.0,
+            eval_mode: false,
+            eval_distance: 50.0,
+            eval_tasks: 200,
+            max_frames: 100_000,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// The paper's JALAD-baseline setting: time frame relaxed to 3 s
+    /// (Sec. 6.3.1 "Baselines") to help convergence.
+    pub fn jalad_frame(mut self) -> Self {
+        self.frame_s = 3.0;
+        self
+    }
+
+    /// Evaluation variant (d = 50 m, K = 200) of this scenario.
+    pub fn eval(mut self) -> Self {
+        self.eval_mode = true;
+        self
+    }
+
+    /// Quick-run variant for tests: few tasks, so episodes are short.
+    pub fn quick(mut self, lambda: f64) -> Self {
+        self.lambda_tasks = lambda;
+        self.eval_tasks = lambda.max(1.0) as u64;
+        self
+    }
+
+    /// Channel gain for a UE at distance d (g = d^{-l}).
+    pub fn gain(&self, d: f64) -> f64 {
+        d.max(self.d_min).powf(-self.path_loss_exp)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_ues >= 1, "need at least one UE");
+        anyhow::ensure!(self.n_channels >= 1, "need at least one channel");
+        anyhow::ensure!(self.bandwidth_hz > 0.0, "bandwidth must be positive");
+        anyhow::ensure!(self.noise_w > 0.0, "noise must be positive");
+        anyhow::ensure!(self.p_max > 0.0, "p_max must be positive");
+        anyhow::ensure!(self.frame_s > 0.0, "frame must be positive");
+        anyhow::ensure!(self.beta >= 0.0, "beta must be non-negative");
+        anyhow::ensure!(self.d_min > 0.0 && self.d_max >= self.d_min, "bad distance range");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ScenarioConfig::default();
+        assert_eq!(c.n_ues, 5);
+        assert_eq!(c.n_channels, 2);
+        assert_eq!(c.bandwidth_hz, 1e6);
+        assert_eq!(c.noise_w, 1e-9);
+        assert_eq!(c.path_loss_exp, 3.0);
+        assert_eq!(c.frame_s, 0.5);
+        assert_eq!(c.beta, 0.47);
+        assert_eq!(c.lambda_tasks, 200.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn gain_decays_with_distance() {
+        let c = ScenarioConfig::default();
+        assert!(c.gain(1.0) > c.gain(10.0));
+        assert!((c.gain(10.0) - 1e-3).abs() < 1e-12);
+        // distances below d_min are clamped
+        assert_eq!(c.gain(0.1), c.gain(1.0));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ScenarioConfig::default();
+        c.n_ues = 0;
+        assert!(c.validate().is_err());
+        let mut c = ScenarioConfig::default();
+        c.noise_w = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

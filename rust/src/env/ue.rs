@@ -1,0 +1,326 @@
+//! Per-UE task state machine.
+//!
+//! A task executes in (up to) two phases, per the partition decision `b`
+//! latched at task start (Sec. 4.3 — `b`/`c` take effect when a new task
+//! starts, transmit power immediately):
+//!
+//! * **Compute** — local inference of the front segment plus feature
+//!   compression: duration `t_f(b) + t_c(b)`, energy `e_f(b) + e_c(b)`
+//!   accrued proportionally over the phase.
+//! * **Offload** — transmitting `bits(b)` over the shared uplink at the
+//!   instantaneous rate from the channel model; energy `p · dt` (Eq. 9).
+//!
+//! `b = 0` skips Compute (raw-input offload); `b = B+1` skips Offload
+//! (full-local). Per-task latency/energy are accumulated so the experiment
+//! harness can report the paper's "averaged inference overhead" (Fig. 11).
+
+use super::HybridAction;
+use crate::profiles::DeviceProfile;
+
+/// Execution phase of the UE's current task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// No task in flight (between tasks, or all done).
+    Idle,
+    /// Local compute (+compression): `remaining_s` of `total_s` left.
+    Compute {
+        remaining_s: f64,
+        total_s: f64,
+        /// Total energy of the whole compute phase (accrued pro rata).
+        total_energy: f64,
+    },
+    /// Uplink transmission: `remaining_bits` still to send.
+    Offload { remaining_bits: f64 },
+}
+
+/// Aggregate per-episode task accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskTotals {
+    pub completed: u64,
+    pub latency_sum: f64,
+    pub energy_sum: f64,
+}
+
+impl TaskTotals {
+    pub fn avg_latency(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.completed as f64
+        }
+    }
+
+    pub fn avg_energy(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.energy_sum / self.completed as f64
+        }
+    }
+}
+
+/// One user equipment.
+#[derive(Debug, Clone)]
+pub struct Ue {
+    pub id: usize,
+    pub distance: f64,
+    pub gain: f64,
+    pub tasks_left: u64,
+    pub phase: Phase,
+    /// Decision latched for the task currently in flight.
+    pub decision: HybridAction,
+    /// Decision that will latch at the next task start (updated per frame).
+    pub pending: HybridAction,
+    /// Per-task accumulators for the task in flight.
+    cur_latency: f64,
+    cur_energy: f64,
+    /// Energy spent in the current frame (reward Eq. 12 input).
+    pub frame_energy: f64,
+    pub totals: TaskTotals,
+}
+
+impl Ue {
+    pub fn new(id: usize, distance: f64, gain: f64, tasks: u64, default_action: HybridAction) -> Ue {
+        Ue {
+            id,
+            distance,
+            gain,
+            tasks_left: tasks,
+            phase: Phase::Idle,
+            decision: default_action,
+            pending: default_action,
+            cur_latency: 0.0,
+            cur_energy: 0.0,
+            frame_energy: 0.0,
+            totals: TaskTotals::default(),
+        }
+    }
+
+    /// All tasks done and nothing in flight?
+    pub fn finished(&self) -> bool {
+        self.tasks_left == 0 && self.phase == Phase::Idle
+    }
+
+    /// Transmit power takes effect immediately (Sec. 4.3); `b`/`c` latch at
+    /// the next task start.
+    pub fn apply_action(&mut self, a: HybridAction) {
+        self.pending = a;
+        self.decision.p_raw = a.p_raw;
+        self.decision.p_watts = a.p_watts;
+    }
+
+    /// Pop the next task and enter its first phase. No-op unless Idle with
+    /// tasks remaining.
+    pub fn maybe_start_task(&mut self, profile: &DeviceProfile) {
+        if self.phase != Phase::Idle || self.tasks_left == 0 {
+            return;
+        }
+        self.tasks_left -= 1;
+        self.decision = self.pending;
+        self.cur_latency = 0.0;
+        self.cur_energy = 0.0;
+        let e = profile.entry(self.decision.b.min(profile.n_choices - 1));
+        let compute_s = e.t_f + e.t_c;
+        let compute_j = e.e_f + e.e_c;
+        self.phase = if compute_s > 0.0 {
+            Phase::Compute {
+                remaining_s: compute_s,
+                total_s: compute_s,
+                total_energy: compute_j,
+            }
+        } else if e.bits > 0.0 {
+            Phase::Offload {
+                remaining_bits: e.bits,
+            }
+        } else {
+            // degenerate zero-cost task: complete instantly
+            self.complete_task();
+            Phase::Idle
+        };
+    }
+
+    /// Currently transmitting?
+    pub fn offloading(&self) -> bool {
+        matches!(self.phase, Phase::Offload { .. })
+    }
+
+    /// Time until the current phase completes at the given uplink rate
+    /// (f64::INFINITY when not active or rate is zero).
+    pub fn time_to_completion(&self, rate_bps: f64) -> f64 {
+        match self.phase {
+            Phase::Idle => f64::INFINITY,
+            Phase::Compute { remaining_s, .. } => remaining_s,
+            Phase::Offload { remaining_bits } => {
+                if rate_bps > 0.0 {
+                    remaining_bits / rate_bps
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+
+    /// Advance the in-flight phase by `dt` seconds; returns `true` if the
+    /// task completed during this interval. Transitions Compute → Offload
+    /// when the compute phase drains and a payload exists.
+    pub fn advance(&mut self, dt: f64, rate_bps: f64, profile: &DeviceProfile) -> bool {
+        match self.phase {
+            Phase::Idle => false,
+            Phase::Compute {
+                remaining_s,
+                total_s,
+                total_energy,
+            } => {
+                let used = dt.min(remaining_s);
+                let de = if total_s > 0.0 {
+                    total_energy * used / total_s
+                } else {
+                    0.0
+                };
+                self.cur_latency += used;
+                self.cur_energy += de;
+                self.frame_energy += de;
+                let left = remaining_s - used;
+                if left > 1e-12 {
+                    self.phase = Phase::Compute {
+                        remaining_s: left,
+                        total_s,
+                        total_energy,
+                    };
+                    false
+                } else {
+                    let bits = profile.entry(self.decision.b.min(profile.n_choices - 1)).bits;
+                    if bits > 0.0 {
+                        self.phase = Phase::Offload {
+                            remaining_bits: bits,
+                        };
+                        false
+                    } else {
+                        self.complete_task();
+                        true
+                    }
+                }
+            }
+            Phase::Offload { remaining_bits } => {
+                let sent = rate_bps * dt;
+                let de = self.decision.p_watts * dt;
+                self.cur_latency += dt;
+                self.cur_energy += de;
+                self.frame_energy += de;
+                let left = remaining_bits - sent;
+                if left > 1e-6 {
+                    self.phase = Phase::Offload {
+                        remaining_bits: left,
+                    };
+                    false
+                } else {
+                    self.complete_task();
+                    true
+                }
+            }
+        }
+    }
+
+    fn complete_task(&mut self) {
+        self.totals.completed += 1;
+        self.totals.latency_sum += self.cur_latency;
+        self.totals.energy_sum += self.cur_energy;
+        self.phase = Phase::Idle;
+    }
+
+    /// Remaining local compute time of the in-flight task (state `l_t`).
+    pub fn remaining_compute_s(&self) -> f64 {
+        match self.phase {
+            Phase::Compute { remaining_s, .. } => remaining_s,
+            _ => 0.0,
+        }
+    }
+
+    /// Remaining offload payload of the in-flight task (state `n_t`).
+    pub fn remaining_offload_bits(&self) -> f64 {
+        match self.phase {
+            Phase::Offload { remaining_bits } => remaining_bits,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn action(b: usize) -> HybridAction {
+        HybridAction::new(b, 0, 0.0, 1.0)
+    }
+
+    fn ue(b: usize, tasks: u64) -> Ue {
+        Ue::new(0, 50.0, 8e-6, tasks, action(b))
+    }
+
+    #[test]
+    fn full_local_task_lifecycle() {
+        let p = DeviceProfile::synthetic();
+        let mut u = ue(5, 1);
+        u.maybe_start_task(&p);
+        assert!(matches!(u.phase, Phase::Compute { .. }));
+        // full local takes 0.05 s; advance in two halves
+        assert!(!u.advance(0.025, 0.0, &p));
+        assert!(u.advance(0.05, 0.0, &p));
+        assert!(u.finished());
+        assert_eq!(u.totals.completed, 1);
+        assert!((u.totals.latency_sum - 0.05).abs() < 1e-9);
+        assert!((u.totals.energy_sum - 0.107).abs() < 1e-9);
+    }
+
+    #[test]
+    fn raw_offload_skips_compute() {
+        let p = DeviceProfile::synthetic();
+        let mut u = ue(0, 1);
+        u.maybe_start_task(&p);
+        assert!(u.offloading());
+        // 1.2e6 bits at 1.2e7 bps -> 0.1 s, at 0.5 W (sigmoid(0) * 1W)
+        assert!(u.advance(0.1, 1.2e7, &p));
+        assert!((u.totals.latency_sum - 0.1).abs() < 1e-9);
+        assert!((u.totals.energy_sum - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_task_two_phases() {
+        let p = DeviceProfile::synthetic();
+        let mut u = ue(2, 1);
+        u.maybe_start_task(&p);
+        let e = p.entry(2);
+        let compute = e.t_f + e.t_c;
+        assert!(!u.advance(compute, 0.0, &p));
+        assert!(u.offloading());
+        assert_eq!(u.remaining_offload_bits(), e.bits);
+        assert!(u.advance(e.bits / 1e6, 1e6, &p));
+        assert_eq!(u.totals.completed, 1);
+    }
+
+    #[test]
+    fn decision_latches_at_task_start_power_immediate() {
+        let p = DeviceProfile::synthetic();
+        let mut u = ue(5, 2);
+        u.maybe_start_task(&p);
+        // mid-task action change: power applies now, b/c at next task
+        u.apply_action(HybridAction::new(1, 1, 2.0, 1.0));
+        assert_eq!(u.decision.b, 5, "b must not change mid-task");
+        assert!(u.decision.p_watts > 0.8, "power applies immediately");
+        // finish task 1; task 2 must use b=1
+        assert!(u.advance(0.06, 0.0, &p));
+        u.maybe_start_task(&p);
+        assert_eq!(u.decision.b, 1);
+    }
+
+    #[test]
+    fn frame_energy_accrues_and_resets_externally() {
+        let p = DeviceProfile::synthetic();
+        let mut u = ue(5, 1);
+        u.maybe_start_task(&p);
+        u.advance(0.025, 0.0, &p);
+        assert!(u.frame_energy > 0.0);
+        let half = u.frame_energy;
+        assert!((half - 0.107 / 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,221 @@
+//! Shared experiment plumbing: context (artifact store, profiles, budgets),
+//! training helpers and table printing.
+
+use anyhow::{anyhow, Result};
+
+use crate::env::scenario::ScenarioConfig;
+use crate::metrics::Series;
+use crate::profiles::DeviceProfile;
+use crate::rl::mahppo::{EvalStats, MahppoTrainer, TrainConfig, TrainReport};
+use crate::runtime::artifacts::ArtifactStore;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Everything a figure runner needs.
+pub struct ExpContext {
+    pub store: ArtifactStore,
+    pub results_dir: String,
+    /// Training frames per run (figures scale this).
+    pub frames: usize,
+    /// Independent seeds per configuration (paper: 5).
+    pub seeds: usize,
+    /// Episodes per evaluation.
+    pub eval_episodes: usize,
+    /// Poisson task-count parameter (paper: 200; smaller = faster runs).
+    pub lambda_tasks: f64,
+    /// Quick mode: tiny budgets for smoke-testing the full harness.
+    pub quick: bool,
+}
+
+impl ExpContext {
+    pub fn new(store: ArtifactStore, quick: bool) -> ExpContext {
+        if quick {
+            ExpContext {
+                store,
+                results_dir: "results".into(),
+                frames: 600,
+                seeds: 1,
+                eval_episodes: 1,
+                lambda_tasks: 40.0,
+                quick,
+            }
+        } else {
+            ExpContext {
+                store,
+                results_dir: "results".into(),
+                frames: 6_000,
+                seeds: 2,
+                eval_episodes: 3,
+                lambda_tasks: 200.0,
+                quick,
+            }
+        }
+    }
+
+    /// Load the paper-scale device profile for a model.
+    pub fn profile(&self, model: &str) -> Result<DeviceProfile> {
+        let path = self.store.root.join("profiles").join(format!("{model}.json"));
+        DeviceProfile::load(&path)
+            .map_err(|e| anyhow!("profile for {model} ({}): {e:#}", path.display()))
+    }
+
+    /// Compression summary JSON written by the build-time trainer.
+    pub fn compression_summary(&self, model: &str) -> Result<Json> {
+        Json::parse_file(
+            self.store
+                .root
+                .join("compression")
+                .join(format!("{model}.json")),
+        )
+    }
+
+    /// The default training scenario for a figure run.
+    pub fn scenario(&self, n_ues: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            n_ues,
+            lambda_tasks: self.lambda_tasks,
+            eval_tasks: self.lambda_tasks as u64,
+            ..Default::default()
+        }
+    }
+
+    /// Train one MAHPPO agent; returns the trainer (for evaluation) and its
+    /// report (for curves).
+    pub fn train_agent(
+        &self,
+        profile: &DeviceProfile,
+        mut scenario: ScenarioConfig,
+        cfg: TrainConfig,
+    ) -> Result<(MahppoTrainer, TrainReport)> {
+        scenario.lambda_tasks = self.lambda_tasks;
+        let mut t = MahppoTrainer::new(&self.store, profile, scenario, cfg)?;
+        let report = t.train(self.frames)?;
+        Ok((t, report))
+    }
+
+    /// Train with several seeds, returning per-seed reports.
+    pub fn train_seeds(
+        &self,
+        profile: &DeviceProfile,
+        scenario: &ScenarioConfig,
+        base: TrainConfig,
+    ) -> Result<Vec<TrainReport>> {
+        (0..self.seeds)
+            .map(|s| {
+                let cfg = TrainConfig {
+                    seed: base.seed + s as u64 * 7919,
+                    ..base.clone()
+                };
+                let (_t, r) = self.train_agent(profile, scenario.clone(), cfg)?;
+                Ok(r)
+            })
+            .collect()
+    }
+
+    /// Train, then greedy-evaluate in eval mode (d = 50, K fixed).
+    pub fn train_and_eval(
+        &self,
+        profile: &DeviceProfile,
+        scenario: ScenarioConfig,
+        cfg: TrainConfig,
+    ) -> Result<(TrainReport, EvalStats)> {
+        let (mut t, report) = self.train_agent(profile, scenario.clone(), cfg)?;
+        // switch the trainer's env into eval mode for a fair comparison
+        t.env.cfg.eval_mode = true;
+        t.env.cfg.eval_tasks = self.lambda_tasks as u64;
+        let stats = t.evaluate(self.eval_episodes)?;
+        Ok((report, stats))
+    }
+}
+
+/// Average several per-episode reward curves into one mean series (curves
+/// may have different lengths; we truncate to the shortest).
+pub fn mean_curve(name: &str, reports: &[TrainReport]) -> Series {
+    let min_len = reports
+        .iter()
+        .map(|r| r.episode_rewards.ys.len())
+        .min()
+        .unwrap_or(0);
+    let mut s = Series::new(name);
+    for i in 0..min_len {
+        let vals: Vec<f64> = reports.iter().map(|r| r.episode_rewards.ys[i]).collect();
+        s.push(i as f64, stats::mean(&vals));
+    }
+    s.smoothed(5)
+}
+
+/// Fixed-width table printer for figure output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                out.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", out.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn fmt_ms(s: f64) -> String {
+    format!("{:.1}", s * 1e3)
+}
+
+pub fn fmt_mj(j: f64) -> String {
+    format!("{:.1}", j * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_curve_truncates_and_averages() {
+        let mut r1 = TrainReport::default();
+        let mut r2 = TrainReport::default();
+        for i in 0..5 {
+            r1.episode_rewards.push(i as f64, 1.0);
+        }
+        for i in 0..3 {
+            r2.episode_rewards.push(i as f64, 3.0);
+        }
+        let m = mean_curve("m", &[r1, r2]);
+        assert_eq!(m.ys.len(), 3);
+        assert!((m.ys[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+}

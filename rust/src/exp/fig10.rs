@@ -1,0 +1,48 @@
+//! Fig. 10 — convergence across UE counts N = 3…10 with C = 2 channels
+//! fixed. More UEs ⇒ more interference ⇒ slower convergence and a lower
+//! convergent reward (fixed channel resources).
+
+use anyhow::Result;
+
+use super::common::{mean_curve, ExpContext};
+use crate::metrics::Report;
+use crate::rl::mahppo::TrainConfig;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let ns: Vec<usize> = if ctx.quick { vec![3, 5] } else { (3..=10).collect() };
+    run_for_model(ctx, "resnet18", "fig10", &ns)
+}
+
+pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str, ns: &[usize]) -> Result<()> {
+    let profile = ctx.profile(model)?;
+
+    let mut report = Report::new(format!("Fig. 10 — convergence per UE count ({model})"));
+    let mut finals = Vec::new();
+    for &n in ns {
+        println!("[fig10] training N = {n}");
+        let scenario = ctx.scenario(n);
+        let runs = ctx.train_seeds(&profile, &scenario, TrainConfig::default())?;
+        let mut curve = mean_curve(&format!("n{n}"), &runs);
+        curve.name = format!("n{n}");
+        let f = curve.tail_mean(10);
+        println!("  N = {n}: final reward {f:9.2} over {} episodes", curve.ys.len());
+        finals.push((n, f));
+        report.add_series(curve);
+    }
+
+    // paper check: convergent value tends to decrease with N
+    let decreasing_pairs = finals
+        .windows(2)
+        .filter(|w| w[1].1 <= w[0].1 + 0.05 * w[0].1.abs())
+        .count();
+    println!(
+        "\nfinal-reward trend: {}/{} adjacent N pairs non-increasing (paper: larger N converges lower)",
+        decreasing_pairs,
+        finals.len().saturating_sub(1)
+    );
+    for (n, f) in &finals {
+        report.fact(format!("final_n{n}"), *f);
+    }
+    report.write(&ctx.results_dir, slug)?;
+    Ok(())
+}

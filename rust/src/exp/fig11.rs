@@ -1,0 +1,118 @@
+//! Fig. 11 — averaged per-task inference latency and energy across UE
+//! counts, MAHPPO vs Local vs JALAD, plus the paper's headline numbers:
+//! at N = 3, MAHPPO cuts up to 56% of latency and 72% of energy vs the
+//! full-local strategy.
+//!
+//! Each MAHPPO/JALAD point trains an agent at that N and then greedy-
+//! evaluates it in eval mode (d = 50 m, fixed task count).
+
+use anyhow::Result;
+
+use super::common::{fmt_mj, fmt_ms, ExpContext, Table};
+use crate::env::mdp::MultiAgentEnv;
+use crate::metrics::{Report, Series};
+use crate::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use crate::rl::mahppo::TrainConfig;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let ns: Vec<usize> = if ctx.quick { vec![3, 5] } else { vec![3, 4, 5, 6, 8, 10] };
+    run_for_model(ctx, "resnet18", "fig11", &ns)
+}
+
+pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str, ns: &[usize]) -> Result<()> {
+    let profile = ctx.profile(model)?;
+
+    let mut table = Table::new(&[
+        "N",
+        "MAHPPO t (ms)",
+        "Local t",
+        "JALAD t",
+        "MAHPPO e (mJ)",
+        "Local e",
+        "JALAD e",
+        "t saved",
+        "e saved",
+    ]);
+    let mut report = Report::new(format!("Fig. 11 — averaged inference overhead ({model})"));
+    let mut s_lat = Series::new("mahppo_latency_ms");
+    let mut s_en = Series::new("mahppo_energy_mj");
+    let mut s_lat_local = Series::new("local_latency_ms");
+    let mut s_en_local = Series::new("local_energy_mj");
+    let mut s_lat_jalad = Series::new("jalad_latency_ms");
+    let mut s_en_jalad = Series::new("jalad_energy_mj");
+    let mut headline: Option<(f64, f64)> = None;
+
+    for &n in ns {
+        println!("[fig11] N = {n}: training + evaluating MAHPPO");
+        let (_report, ours) =
+            ctx.train_and_eval(&profile, ctx.scenario(n), TrainConfig::default())?;
+
+        println!("[fig11] N = {n}: training + evaluating JALAD variant");
+        let jalad_profile = profile.jalad_variant();
+        let (_jr, jalad) = ctx.train_and_eval(
+            &jalad_profile,
+            ctx.scenario(n).jalad_frame(),
+            TrainConfig::default(),
+        )?;
+
+        // Local baseline needs no training
+        let mut env = MultiAgentEnv::new(
+            profile.clone(),
+            {
+                let mut s = ctx.scenario(n);
+                s.eval_mode = true;
+                s.eval_tasks = ctx.lambda_tasks as u64;
+                s
+            },
+            7,
+        )?;
+        let mut local = BaselinePolicy::new(PolicyKind::Local, 0);
+        let loc = evaluate_policy(&mut local, &mut env, ctx.eval_episodes)?;
+
+        let t_saved = 1.0 - ours.avg_latency / loc.avg_latency.max(1e-12);
+        let e_saved = 1.0 - ours.avg_energy / loc.avg_energy.max(1e-12);
+        if n == 3 {
+            headline = Some((t_saved, e_saved));
+        }
+
+        s_lat.push(n as f64, ours.avg_latency * 1e3);
+        s_en.push(n as f64, ours.avg_energy * 1e3);
+        s_lat_local.push(n as f64, loc.avg_latency * 1e3);
+        s_en_local.push(n as f64, loc.avg_energy * 1e3);
+        s_lat_jalad.push(n as f64, jalad.avg_latency * 1e3);
+        s_en_jalad.push(n as f64, jalad.avg_energy * 1e3);
+
+        table.row(vec![
+            n.to_string(),
+            fmt_ms(ours.avg_latency),
+            fmt_ms(loc.avg_latency),
+            fmt_ms(jalad.avg_latency),
+            fmt_mj(ours.avg_energy),
+            fmt_mj(loc.avg_energy),
+            fmt_mj(jalad.avg_energy),
+            format!("{:.0}%", t_saved * 100.0),
+            format!("{:.0}%", e_saved * 100.0),
+        ]);
+    }
+
+    println!("\nFig. 11 ({model}): averaged per-task inference overhead");
+    table.print();
+    if let Some((t, e)) = headline {
+        println!(
+            "\nHEADLINE @ N=3: latency saved {:.0}% (paper: up to 56%), energy saved {:.0}% (paper: up to 72%)",
+            t * 100.0,
+            e * 100.0
+        );
+        report.fact("headline_latency_saved", t);
+        report.fact("headline_energy_saved", e);
+    }
+
+    report.add_series(s_lat);
+    report.add_series(s_en);
+    report.add_series(s_lat_local);
+    report.add_series(s_en_local);
+    report.add_series(s_lat_jalad);
+    report.add_series(s_en_jalad);
+    report.write(&ctx.results_dir, slug)?;
+    Ok(())
+}

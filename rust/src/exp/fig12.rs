@@ -1,0 +1,70 @@
+//! Fig. 12 — impact of the β hyperparameter (Eq. 10/12): larger β weights
+//! energy more heavily, trading inference latency for energy savings.
+//! N = 5; each β is trained with `seeds` independent runs; mean ± std of
+//! the evaluated latency/energy are reported (the paper's shaded belts).
+
+use anyhow::Result;
+
+use super::common::{ExpContext, Table};
+use crate::metrics::{Report, Series};
+use crate::rl::mahppo::TrainConfig;
+use crate::util::stats;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let profile = ctx.profile("resnet18")?;
+    let betas: Vec<f64> = if ctx.quick {
+        vec![0.1, 10.0]
+    } else {
+        vec![0.01, 0.1, 1.0, 10.0, 100.0, 1000.0]
+    };
+
+    let mut table = Table::new(&["beta", "latency ms (±std)", "energy mJ (±std)"]);
+    let mut report = Report::new("Fig. 12 — beta trade-off (N=5)");
+    let mut s_lat = Series::new("latency_ms");
+    let mut s_lat_std = Series::new("latency_ms_std");
+    let mut s_en = Series::new("energy_mj");
+    let mut s_en_std = Series::new("energy_mj_std");
+
+    for &beta in &betas {
+        let mut lats = Vec::new();
+        let mut ens = Vec::new();
+        for s in 0..ctx.seeds {
+            let mut scenario = ctx.scenario(5);
+            scenario.beta = beta;
+            let cfg = TrainConfig {
+                seed: 100 + s as u64 * 7919,
+                ..Default::default()
+            };
+            let (_r, stats) = ctx.train_and_eval(&profile, scenario, cfg)?;
+            lats.push(stats.avg_latency * 1e3);
+            ens.push(stats.avg_energy * 1e3);
+        }
+        let (lm, ls) = (stats::mean(&lats), stats::std(&lats));
+        let (em, es) = (stats::mean(&ens), stats::std(&ens));
+        println!("[fig12] beta {beta:>7}: t = {lm:.1} ± {ls:.1} ms, e = {em:.1} ± {es:.1} mJ");
+        table.row(vec![
+            format!("{beta}"),
+            format!("{lm:.1} ± {ls:.1}"),
+            format!("{em:.1} ± {es:.1}"),
+        ]);
+        let x = beta.log10();
+        s_lat.push(x, lm);
+        s_lat_std.push(x, ls);
+        s_en.push(x, em);
+        s_en_std.push(x, es);
+    }
+
+    println!("\nFig. 12: beta sweep (x-axis log10(beta))");
+    table.print();
+    // shape check: latency should rise and energy fall as beta grows
+    let lat_up = s_lat.ys.last().unwrap_or(&0.0) >= s_lat.ys.first().unwrap_or(&0.0);
+    let en_down = s_en.ys.last().unwrap_or(&0.0) <= s_en.ys.first().unwrap_or(&0.0);
+    println!("shape: latency non-decreasing in beta: {lat_up}, energy non-increasing: {en_down}");
+
+    report.add_series(s_lat);
+    report.add_series(s_lat_std);
+    report.add_series(s_en);
+    report.add_series(s_en_std);
+    report.write(&ctx.results_dir, "fig12")?;
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Fig. 13 — the whole evaluation replicated on VGG11 and MobileNetV2:
+//! (a,b) compression rates, (c,d) convergence per UE count, (e,f) averaged
+//! inference overhead per UE count. Reuses the fig4/fig10/fig11 runners
+//! parameterized by model.
+
+use anyhow::Result;
+
+use super::common::ExpContext;
+use super::{fig10, fig11, fig4, fig7};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    for model in ["vgg11", "mobilenetv2"] {
+        if ctx.store.model(model).is_err() {
+            println!("[fig13] skipping {model}: not in artifacts (run `make artifacts-models`)");
+            continue;
+        }
+        println!("\n--- Fig. 13: {model} ---");
+        // lighter N grids than the resnet18 figures — fig13 covers 2 models
+        let ns: Vec<usize> = if ctx.quick { vec![3] } else { vec![3, 5, 8, 10] };
+        fig4::run_for_model(ctx, model, &format!("fig13_{model}_compression"))?;
+        fig7::run_for_model(ctx, model, &format!("fig13_{model}_overhead_points"))?;
+        fig10::run_for_model(ctx, model, &format!("fig13_{model}_convergence"), &ns)?;
+        fig11::run_for_model(ctx, model, &format!("fig13_{model}_overhead"), &ns)?;
+    }
+    Ok(())
+}

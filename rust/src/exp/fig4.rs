@@ -1,0 +1,99 @@
+//! Fig. 4 — compression-rate comparison of the lightweight autoencoder vs
+//! JALAD at the four ResNet18 partition points.
+//!
+//! AE rates come from the build-time sweep (max rate under the 2% accuracy
+//! bound, artifacts/compression/resnet18.json). JALAD rates are *measured
+//! live*: real intermediate features are produced by the AOT front-segment
+//! executables on synthetic inputs and pushed through the 8-bit-quant +
+//! Huffman pipeline (compress/jalad.rs).
+
+use anyhow::Result;
+
+use super::common::{ExpContext, Table};
+use crate::compress::jalad::JaladCompressor;
+use crate::coordinator::inference::CollabPipeline;
+use crate::metrics::{Report, Series};
+use crate::util::rng::Rng;
+
+/// Smooth pseudo-image batch (low-frequency noise) — stands in for dataset
+/// samples when measuring feature statistics in Rust.
+pub fn smooth_images(n: usize, hw: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            // upsampled 4x4 random field + noise, like the python dataset
+            let mut low = [[0.0f32; 4]; 4];
+            let mut img = vec![0.0f32; 3 * hw * hw];
+            for c in 0..3 {
+                for cell in low.iter_mut().flatten() {
+                    *cell = rng.normal() as f32;
+                }
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let v = low[y * 4 / hw][x * 4 / hw] + 0.25 * rng.normal() as f32;
+                        img[c * hw * hw + y * hw + x] = v;
+                    }
+                }
+            }
+            img
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    run_for_model(ctx, "resnet18", "fig4")
+}
+
+pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str) -> Result<()> {
+    let summary = ctx.compression_summary(model)?;
+    let pipeline = CollabPipeline::load(&ctx.store, model)?;
+    let jalad = JaladCompressor::new();
+    let images = smooth_images(if ctx.quick { 2 } else { 8 }, pipeline.meta.input_hw, 42);
+
+    let mut table = Table::new(&["point", "AE rate (ours)", "JALAD rate", "AE acc drop"]);
+    let mut ae_series = Series::new("ae_rate");
+    let mut jalad_series = Series::new("jalad_rate");
+    let mut report = Report::new("Fig. 4 — intermediate feature compression rate");
+
+    for (i, p) in summary.req("points")?.as_arr()?.iter().enumerate() {
+        let point = p.usize_of("point")?;
+        let chosen = p.req("chosen")?;
+        let ae_rate = chosen.f64_of("rate")?;
+        let acc_drop = chosen.f64_of("acc_drop")?;
+
+        // measure JALAD on real features from the front segment
+        let mut jr = 0.0;
+        for img in &images {
+            let feature = pipeline.front_feature(img, point)?;
+            jr += jalad.rate(&feature);
+        }
+        jr /= images.len() as f64;
+
+        ae_series.push(point as f64, ae_rate);
+        jalad_series.push(point as f64, jr);
+        table.row(vec![
+            format!("p{point}"),
+            format!("{ae_rate:.1}x"),
+            format!("{jr:.1}x"),
+            format!("{:+.3}", acc_drop),
+        ]);
+        let _ = i;
+    }
+
+    println!("Fig. 4 ({model}): compression rate, AE (ours) vs JALAD");
+    table.print();
+    let ae_first = ae_series.ys.first().copied().unwrap_or(0.0);
+    let ja_first = jalad_series.ys.first().copied().unwrap_or(1.0);
+    println!(
+        "shape check: AE beats JALAD at p1 ({:.1}x vs {:.1}x) and decays with depth: {}",
+        ae_first,
+        ja_first,
+        ae_series.ys.windows(2).all(|w| w[1] <= w[0] + 1e-9)
+    );
+
+    report.add_series(ae_series);
+    report.add_series(jalad_series);
+    report.fact("base_acc", summary.f64_of("base_acc")?);
+    report.write(&ctx.results_dir, slug)?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig. 5 — impact of the ξ balancing hyperparameter in the AE loss
+//! (Eq. 4) on task accuracy, per partition point.
+//!
+//! The sweep itself runs at build time (trainer.py ξ-sweep, recorded in
+//! artifacts/compression/resnet18.json); this runner renders the table and
+//! checks the paper's conclusion (ξ = 0.1 best or near-best everywhere).
+
+use anyhow::Result;
+
+use super::common::{ExpContext, Table};
+use crate::metrics::{Report, Series};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let summary = ctx.compression_summary("resnet18")?;
+    let sweep = summary.req("xi_sweep")?.as_arr()?;
+    if sweep.is_empty() {
+        println!("Fig. 5: no ξ sweep in artifacts (trainer ran without --with-xi)");
+        return Ok(());
+    }
+
+    let mut xis: Vec<f64> = Vec::new();
+    for e in sweep {
+        let x = e.f64_of("xi")?;
+        if !xis.contains(&x) {
+            xis.push(x);
+        }
+    }
+
+    let mut table = Table::new(&["point", "xi", "accuracy"]);
+    let mut report = Report::new("Fig. 5 — xi settings vs accuracy");
+    let mut by_xi: Vec<(f64, Series)> = xis
+        .iter()
+        .map(|&x| (x, Series::new(format!("xi_{x}"))))
+        .collect();
+
+    let mut best_count_01 = 0usize;
+    for point in 1..=4usize {
+        let mut best = (f64::NEG_INFINITY, -1.0);
+        for e in sweep {
+            if e.usize_of("point")? != point {
+                continue;
+            }
+            let xi = e.f64_of("xi")?;
+            let acc = e.f64_of("acc")?;
+            table.row(vec![
+                format!("p{point}"),
+                format!("{xi}"),
+                format!("{acc:.3}"),
+            ]);
+            if let Some((_, s)) = by_xi.iter_mut().find(|(x, _)| *x == xi) {
+                s.push(point as f64, acc);
+            }
+            if acc > best.0 {
+                best = (acc, xi);
+            }
+        }
+        // count points where xi = 0.1 is within 1% of the best
+        if let Some(e) = sweep.iter().find(|e| {
+            e.usize_of("point").ok() == Some(point) && e.f64_of("xi").ok() == Some(0.1)
+        }) {
+            if e.f64_of("acc")? >= best.0 - 0.01 {
+                best_count_01 += 1;
+            }
+        }
+    }
+
+    println!("Fig. 5 (resnet18): accuracy per xi setting");
+    table.print();
+    println!("xi = 0.1 within 1% of best at {best_count_01}/4 points (paper: best or near-best everywhere)");
+
+    for (_, s) in by_xi {
+        report.add_series(s);
+    }
+    report.fact("xi01_near_best_points", best_count_01 as f64);
+    report.write(&ctx.results_dir, "fig5")?;
+    Ok(())
+}

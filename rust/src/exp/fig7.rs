@@ -1,0 +1,97 @@
+//! Fig. 7 — latency and energy of executing the front segment + feature
+//! compression on the UE, per partition point, vs full-local inference.
+//!
+//! Rendered from the analytic device profile (the Jetson-Nano substitute,
+//! see DESIGN.md §Substitutions), including the JALAD comparison the paper
+//! discusses (entropy coding making most cuts worse than full local).
+
+use anyhow::Result;
+
+use super::common::{fmt_mj, fmt_ms, ExpContext, Table};
+use crate::metrics::{Report, Series};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    run_for_model(ctx, "resnet18", "fig7")
+}
+
+pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str) -> Result<()> {
+    let profile = ctx.profile(model)?;
+    let jalad = profile.jalad_variant();
+
+    let mut table = Table::new(&[
+        "decision",
+        "t_f (ms)",
+        "t_c (ms)",
+        "t total",
+        "e_f (mJ)",
+        "e_c (mJ)",
+        "e total",
+        "JALAD t_c",
+        "JALAD e total",
+    ]);
+    let mut lat = Series::new("latency_ms");
+    let mut en = Series::new("energy_mj");
+    let mut jalad_en = Series::new("jalad_energy_mj");
+
+    for b in 1..profile.n_choices - 1 {
+        let e = profile.entry(b);
+        let je = jalad.entry(b);
+        let t_tot = e.t_f + e.t_c;
+        let e_tot = e.e_f + e.e_c;
+        lat.push(b as f64, t_tot * 1e3);
+        en.push(b as f64, e_tot * 1e3);
+        jalad_en.push(b as f64, (je.e_f + je.e_c) * 1e3);
+        table.row(vec![
+            format!("p{b}"),
+            fmt_ms(e.t_f),
+            fmt_ms(e.t_c),
+            fmt_ms(t_tot),
+            fmt_mj(e.e_f),
+            fmt_mj(e.e_c),
+            fmt_mj(e_tot),
+            fmt_ms(je.t_c),
+            fmt_mj(je.e_f + je.e_c),
+        ]);
+    }
+    table.row(vec![
+        "full local".into(),
+        fmt_ms(profile.full_local_t),
+        "0.0".into(),
+        fmt_ms(profile.full_local_t),
+        fmt_mj(profile.full_local_e),
+        "0.0".into(),
+        fmt_mj(profile.full_local_e),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    println!("Fig. 7 ({model}): UE-side overhead per partition point (gray line = full local)");
+    table.print();
+
+    // the paper's observations:
+    let cuts_below_local = (1..profile.n_choices - 1)
+        .filter(|&b| {
+            let e = profile.entry(b);
+            e.t_f + e.t_c < profile.full_local_t
+        })
+        .count();
+    let last = profile.entry(profile.n_choices - 2);
+    println!(
+        "latency below full-local at {cuts_below_local}/{} cuts; energy at last cut \
+         {} full-local ({} vs {} mJ) — paper: exceeds it",
+        profile.n_choices - 2,
+        if last.e_f + last.e_c > profile.full_local_e { "EXCEEDS" } else { "below" },
+        fmt_mj(last.e_f + last.e_c),
+        fmt_mj(profile.full_local_e),
+    );
+
+    let mut report = Report::new(format!("Fig. 7 — local overhead ({model})"));
+    report.fact("full_local_ms", profile.full_local_t * 1e3);
+    report.fact("full_local_mj", profile.full_local_e * 1e3);
+    report.fact("cuts_below_local", cuts_below_local as f64);
+    report.add_series(lat);
+    report.add_series(en);
+    report.add_series(jalad_en);
+    report.write(&ctx.results_dir, slug)?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig. 9 — hyperparameter sensitivity of MAHPPO (N = 5, ResNet18):
+//! (a) learning rate, (b) sample reuse time K, (c) memory size ‖M‖ reward,
+//! (d) memory size value loss. Batch size follows ‖M‖/4 as in common PPO
+//! implementations (the AOT artifacts ship B ∈ {128, 256, 512} for N = 5).
+
+use anyhow::Result;
+
+use super::common::{mean_curve, ExpContext};
+use crate::metrics::{Report, Series};
+use crate::rl::mahppo::TrainConfig;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let profile = ctx.profile("resnet18")?;
+    let scenario = ctx.scenario(5);
+    let mut report = Report::new("Fig. 9 — hyperparameter sweeps (N=5)");
+
+    // (a) learning rate
+    println!("[fig9a] learning-rate sweep");
+    for lr in [1e-3f32, 1e-4, 1e-5] {
+        let cfg = TrainConfig { lr, ..Default::default() };
+        let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
+        let mut curve = mean_curve(&format!("lr_{lr:e}"), &runs);
+        curve.name = format!("lr_{lr:e}");
+        println!("  lr {lr:>7e}: final reward {:9.2}", curve.tail_mean(10));
+        report.add_series(curve);
+    }
+
+    // (b) sample reuse time
+    println!("[fig9b] sample-reuse sweep");
+    for reuse in [1usize, 5, 20, 80] {
+        let cfg = TrainConfig { reuse, ..Default::default() };
+        let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
+        let curve = {
+            let mut c = mean_curve(&format!("reuse_{reuse}"), &runs);
+            c.name = format!("reuse_{reuse}");
+            c
+        };
+        println!("  K = {reuse:>2}: final reward {:9.2}", curve.tail_mean(10));
+        report.add_series(curve);
+    }
+
+    // (c)+(d) memory size (batch = |M|/4)
+    println!("[fig9cd] memory-size sweep");
+    for mem in [512usize, 1024, 2048] {
+        let cfg = TrainConfig {
+            buffer_size: mem,
+            minibatch: mem / 4,
+            ..Default::default()
+        };
+        let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
+        let mut reward = mean_curve(&format!("mem_{mem}"), &runs);
+        reward.name = format!("mem_{mem}_reward");
+        // value loss: average the per-round loss series across seeds
+        let mut vloss = Series::new(format!("mem_{mem}_value_loss"));
+        let min_len = runs
+            .iter()
+            .map(|r| r.value_losses.ys.len())
+            .min()
+            .unwrap_or(0);
+        for i in 0..min_len {
+            let mean: f64 = runs.iter().map(|r| r.value_losses.ys[i]).sum::<f64>()
+                / runs.len() as f64;
+            vloss.push(runs[0].value_losses.xs[i], mean);
+        }
+        println!(
+            "  |M| = {mem:>4}: final reward {:9.2}, last value loss {:.4}",
+            reward.tail_mean(10),
+            vloss.last().unwrap_or(f64::NAN)
+        );
+        report.add_series(reward);
+        report.add_series(vloss);
+    }
+
+    report.write(&ctx.results_dir, "fig9")?;
+    println!("fig9 series written to results/fig9.{{json,csv}}");
+    Ok(())
+}

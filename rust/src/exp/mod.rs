@@ -1,0 +1,55 @@
+//! Experiment harness: one runner per figure of the paper's evaluation
+//! (Sec. 6). Each runner regenerates the corresponding rows/series, prints
+//! them as a table and writes `results/<fig>.json` + `.csv`.
+//!
+//! | runner | paper figure |
+//! |--------|--------------|
+//! | [`fig4`]  | AE vs JALAD compression rate, ResNet18 |
+//! | [`fig5`]  | ξ settings vs accuracy |
+//! | [`fig7`]  | per-point local latency/energy overhead |
+//! | [`fig8`]  | MAHPPO vs Local vs JALAD convergence |
+//! | [`fig9`]  | lr / sample-reuse / memory-size sweeps |
+//! | [`fig10`] | convergence across UE counts |
+//! | [`fig11`] | avg inference overhead across UE counts (+ headline) |
+//! | [`fig12`] | β sweep latency/energy trade-off |
+//! | [`fig13`] | VGG11 + MobileNetV2 replications |
+
+pub mod common;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use anyhow::{bail, Result};
+
+use common::ExpContext;
+
+/// Dispatch an experiment by name ("fig4" … "fig13", "headline", "all").
+pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
+    match name {
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" | "headline" => fig11::run(ctx),
+        "fig12" => fig12::run(ctx),
+        "fig13" => fig13::run(ctx),
+        "all" => {
+            for f in [
+                "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+            ] {
+                println!("\n================ {f} ================");
+                run(f, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (try fig4..fig13, headline, all)"),
+    }
+}

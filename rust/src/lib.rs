@@ -1,0 +1,60 @@
+//! # macci — Multi-Agent Collaborative Inference (MAHPPO)
+//!
+//! Production-quality reproduction of *"Multi-Agent Collaborative Inference
+//! via DNN Decoupling: Intermediate Feature Compression and Edge Learning"*
+//! (Hao et al., 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the edge-server coordinator: the multi-UE MDP
+//!   environment (wireless channel Eq. 5, task state machines, reward
+//!   Eq. 12), the MAHPPO trainer (Sec. 5), baseline policies, the
+//!   collaborative-inference serving path, and one experiment runner per
+//!   paper figure.
+//! * **L2 (python/compile, build-time only)** — JAX actor/critic networks,
+//!   backbone CNNs, the autoencoder compressor; AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (fused dense,
+//!   1x1-conv channel mix, quantize/dequantize) that lower inside the L2
+//!   HLO.
+//!
+//! Python never runs at inference or training time: the [`runtime`] module
+//! loads `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and all
+//! hot paths are pure Rust + compiled XLA executables.
+//!
+//! ```no_run
+//! use macci::prelude::*;
+//!
+//! let arts = ArtifactStore::open("artifacts")?;
+//! let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+//! let cfg = ScenarioConfig { n_ues: 5, ..Default::default() };
+//! let mut trainer = MahppoTrainer::new(&arts, &profile, cfg, TrainConfig::default())?;
+//! let report = trainer.train(2_000)?;
+//! println!("final avg reward: {:.3}", report.final_reward());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The offline build constraint (no crates.io) means common substrates are
+//! implemented in-repo: [`util::json`], [`util::rng`], [`util::cli`],
+//! [`util::bench`], [`util::check`].
+
+pub mod compress;
+pub mod coordinator;
+pub mod env;
+pub mod exp;
+pub mod metrics;
+pub mod profiles;
+pub mod rl;
+pub mod runtime;
+pub mod util;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::compress::{huffman::HuffmanCoder, jalad::JaladCompressor, quant::Quantizer};
+    pub use crate::coordinator::{inference::CollabPipeline, server::EdgeServer};
+    pub use crate::env::{mdp::MultiAgentEnv, scenario::ScenarioConfig, Action, HybridAction};
+    pub use crate::profiles::DeviceProfile;
+    pub use crate::rl::baselines::{BaselinePolicy, PolicyKind};
+    pub use crate::rl::mahppo::{MahppoTrainer, TrainConfig, TrainReport};
+    pub use crate::runtime::{artifacts::ArtifactStore, client::Runtime};
+    pub use crate::util::rng::Rng;
+}
+
+

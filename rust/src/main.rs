@@ -1,0 +1,263 @@
+//! `macci` — the launcher CLI.
+//!
+//! ```text
+//! macci exp <fig4..fig13|headline|all> [--quick] [--frames N] [--seeds K]
+//! macci train  [--n-ues 5] [--frames 6000] [--beta 0.47] [--lr 1e-4] [--model resnet18]
+//! macci eval   [--n-ues 5] [--policy local|random|edge_raw|split<k>]
+//! macci serve  [--model resnet18] [--n-ues 3] [--tasks 16]
+//! macci info                       # artifact + profile inventory
+//! ```
+
+use anyhow::{bail, Result};
+
+use macci::coordinator::inference::CollabPipeline;
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::exp::{self, common::ExpContext};
+use macci::profiles::DeviceProfile;
+use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+use macci::runtime::artifacts::ArtifactStore;
+use macci::util::cli::Args;
+
+const USAGE: &str = "\
+macci — Multi-Agent Collaborative Inference (MAHPPO) coordinator
+
+USAGE:
+  macci exp <fig4|fig5|fig7|fig8|fig9|fig10|fig11|fig12|fig13|headline|all>
+            [--quick] [--frames N] [--seeds K] [--lambda L] [--eval-episodes E]
+  macci train [--n-ues 5] [--frames 6000] [--beta 0.47] [--lr 1e-4]
+              [--model resnet18] [--seed 0] [--out results/train.json]
+  macci eval  [--n-ues 5] [--policy local|random|edge_raw|split2] [--episodes 3]
+  macci serve [--model resnet18] [--n-ues 3] [--tasks 16] [--point 2]
+  macci info
+
+Artifacts are read from ./artifacts (run `make artifacts` first).";
+
+fn main() {
+    env_logger_init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_init() {
+    // minimal logger: MACCI_LOG=debug enables debug lines on stderr
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("MACCI_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn open_store() -> Result<ArtifactStore> {
+    ArtifactStore::open("artifacts")
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let store = open_store()?;
+    let mut ctx = ExpContext::new(store, args.has("quick"));
+    ctx.frames = args.usize_or("frames", ctx.frames)?;
+    ctx.seeds = args.usize_or("seeds", ctx.seeds)?;
+    ctx.lambda_tasks = args.f64_or("lambda", ctx.lambda_tasks)?;
+    ctx.eval_episodes = args.usize_or("eval-episodes", ctx.eval_episodes)?;
+    exp::run(name, &ctx)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let store = open_store()?;
+    let model = args.str_or("model", "resnet18");
+    let profile = DeviceProfile::load(store.root.join("profiles").join(format!("{model}.json")))?;
+    let scenario = ScenarioConfig {
+        n_ues: args.usize_or("n-ues", 5)?,
+        beta: args.f64_or("beta", 0.47)?,
+        lambda_tasks: args.f64_or("lambda", 200.0)?,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        lr: args.f64_or("lr", 1e-4)? as f32,
+        buffer_size: args.usize_or("buffer", 1024)?,
+        minibatch: args.usize_or("batch", 256)?,
+        reuse: args.usize_or("reuse", 10)?,
+        seed: args.u64_or("seed", 0)?,
+        ..Default::default()
+    };
+    let frames = args.usize_or("frames", 6000)?;
+    println!(
+        "training MAHPPO: model={model} N={} frames={frames} beta={} lr={}",
+        scenario.n_ues, scenario.beta, cfg.lr
+    );
+    let mut trainer = MahppoTrainer::new(&store, &profile, scenario, cfg)?;
+    let report = trainer.train(frames)?;
+    println!(
+        "done: {} episodes, final reward {:.2}, {:.1}s wall",
+        report.episodes,
+        report.final_reward(),
+        report.wall_s
+    );
+    let out = args.str_or("out", "results/train.json");
+    let r = report.into_report("training run");
+    let slug = std::path::Path::new(&out)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("train")
+        .to_string();
+    let dir = std::path::Path::new(&out)
+        .parent()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "results".into());
+    r.write(dir, &slug)?;
+    println!("wrote {out}");
+
+    // post-training greedy evaluation
+    trainer.env.cfg.eval_mode = true;
+    let stats = trainer.evaluate(args.usize_or("episodes", 2)?)?;
+    println!(
+        "greedy eval: avg latency {:.1} ms, avg energy {:.1} mJ, reward {:.2}",
+        stats.avg_latency * 1e3,
+        stats.avg_energy * 1e3,
+        stats.avg_reward
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let store = open_store()?;
+    let model = args.str_or("model", "resnet18");
+    let profile = DeviceProfile::load(store.root.join("profiles").join(format!("{model}.json")))?;
+    let scenario = ScenarioConfig {
+        n_ues: args.usize_or("n-ues", 5)?,
+        eval_mode: true,
+        lambda_tasks: args.f64_or("lambda", 200.0)?,
+        eval_tasks: args.u64_or("tasks", 200)?,
+        ..Default::default()
+    };
+    let policy_name = args.str_or("policy", "local");
+    let kind = match policy_name.as_str() {
+        "local" => PolicyKind::Local,
+        "random" => PolicyKind::Random,
+        "edge_raw" => PolicyKind::EdgeRaw,
+        s if s.starts_with("split") => PolicyKind::FixedSplit(s[5..].parse().unwrap_or(2)),
+        other => bail!("unknown policy '{other}'"),
+    };
+    let mut env = MultiAgentEnv::new(profile, scenario, args.u64_or("seed", 0)?)?;
+    let mut policy = BaselinePolicy::new(kind, 1);
+    let stats = evaluate_policy(&mut policy, &mut env, args.usize_or("episodes", 3)?)?;
+    println!(
+        "{policy_name}: avg latency {:.1} ms, avg energy {:.1} mJ, reward {:.2} ({} episodes)",
+        stats.avg_latency * 1e3,
+        stats.avg_energy * 1e3,
+        stats.avg_reward,
+        stats.episodes
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // small in-process serving demo; the full threaded pipeline lives in
+    // examples/collab_serving.rs
+    let store = open_store()?;
+    let model = args.str_or("model", "resnet18");
+    let pipeline = CollabPipeline::load(&store, &model)?;
+    let point = args.usize_or("point", 2)?;
+    let tasks = args.usize_or("tasks", 8)?;
+    let images = macci::exp::fig4::smooth_images(tasks, pipeline.meta.input_hw, 3);
+    println!("serving {tasks} requests through {model} split at p{point}");
+    let mut total = macci::coordinator::inference::PipelineTiming::default();
+    let mut agree = 0usize;
+    for img in &images {
+        let (logits, t) = pipeline.infer_split(img, point)?;
+        let local = pipeline.infer_local(img)?;
+        let am = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        if am(&logits) == am(&local) {
+            agree += 1;
+        }
+        total.front_s += t.front_s;
+        total.encode_s += t.encode_s;
+        total.decode_s += t.decode_s;
+        total.back_s += t.back_s;
+        total.wire_bits += t.wire_bits;
+    }
+    let n = tasks as f64;
+    println!(
+        "per-request: front {:.2} ms | encode {:.2} ms | wire {:.1} kbit (R={:.0}x) | decode {:.2} ms | back {:.2} ms",
+        total.front_s / n * 1e3,
+        total.encode_s / n * 1e3,
+        total.wire_bits as f64 / n / 1e3,
+        32.0 * 3.0 * (pipeline.meta.input_hw * pipeline.meta.input_hw) as f64 / (total.wire_bits as f64 / n),
+        total.decode_s / n * 1e3,
+        total.back_s / n * 1e3,
+    );
+    println!("split-vs-local top-1 agreement: {agree}/{tasks}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let store = open_store()?;
+    println!("platform: {}", store.runtime().platform());
+    println!("artifacts ({}):", store.names().len());
+    for n in store.names() {
+        println!("  {n}");
+    }
+    if let Ok(rl) = store.rl() {
+        println!(
+            "rl: N in {:?}, {} partition choices, {} channels",
+            rl.n_range, rl.n_partition, rl.n_channels
+        );
+    }
+    for m in store.model_names() {
+        let meta = store.model(m)?;
+        println!(
+            "model {m}: {}x{} input, {} classes, base acc {:.3}, {} cut points",
+            meta.input_hw,
+            meta.input_hw,
+            meta.num_classes,
+            meta.base_acc,
+            meta.points.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Metrics recording: training curves, per-frame diagnostics, CSV/JSON
+//! emission for the experiment harness (every figure writes through here).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// A named series of (x, y) points — one curve on a paper figure.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    pub fn smoothed(&self, window: usize) -> Series {
+        Series {
+            name: self.name.clone(),
+            xs: self.xs.clone(),
+            ys: stats::smooth(&self.ys, window),
+        }
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.ys.last().copied()
+    }
+
+    /// Mean of the final `k` values — the "convergent value" of a curve.
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.ys.is_empty() {
+            return 0.0;
+        }
+        let lo = self.ys.len().saturating_sub(k);
+        stats::mean(&self.ys[lo..])
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("x", self.xs.iter().map(|&v| Json::Num(v)).collect::<Vec<_>>())
+            .set("y", self.ys.iter().map(|&v| Json::Num(v)).collect::<Vec<_>>())
+    }
+}
+
+/// A figure-shaped collection of series plus free-form scalar facts.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub series: Vec<Series>,
+    pub facts: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Report {
+        Report {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_series(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    pub fn fact(&mut self, name: impl Into<String>, value: f64) {
+        self.facts.push((name.into(), value));
+    }
+
+    pub fn series_named(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Write `results/<slug>.json` + `results/<slug>.csv`.
+    pub fn write(&self, dir: impl AsRef<Path>, slug: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut j = Json::obj().set("title", self.title.as_str());
+        j = j.set(
+            "series",
+            Json::Arr(self.series.iter().map(|s| s.to_json()).collect()),
+        );
+        let mut facts = Json::obj();
+        for (k, v) in &self.facts {
+            facts = facts.set(k, *v);
+        }
+        j = j.set("facts", facts);
+        j.write_file(dir.join(format!("{slug}.json")))?;
+        std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv())?;
+        Ok(())
+    }
+
+    /// Long-format CSV: series,x,y
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,x,y\n");
+        for s in &self.series {
+            for (x, y) in s.xs.iter().zip(&s.ys) {
+                out.push_str(&format!("{},{x},{y}\n", s.name));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::new("r");
+        for i in 0..10 {
+            s.push(i as f64, if i < 8 { 0.0 } else { 4.0 });
+        }
+        assert_eq!(s.tail_mean(2), 4.0);
+        assert_eq!(s.last(), Some(4.0));
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("Fig. X");
+        let mut s = Series::new("mahppo");
+        s.push(0.0, -1.0);
+        s.push(1.0, -0.5);
+        r.add_series(s);
+        r.fact("headline", 0.56);
+        let dir = std::env::temp_dir().join("macci_report_test");
+        r.write(&dir, "figx").unwrap();
+        let j = Json::parse_file(dir.join("figx.json")).unwrap();
+        assert_eq!(j.str_of("title").unwrap(), "Fig. X");
+        let csv = std::fs::read_to_string(dir.join("figx.csv")).unwrap();
+        assert!(csv.contains("mahppo,0,-1"));
+    }
+}

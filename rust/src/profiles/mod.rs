@@ -1,0 +1,229 @@
+//! Device overhead profiles — the per-partition-decision latency/energy/
+//! payload tables produced by `python/compile/profile.py` (the substitute
+//! for the paper's Jetson Nano measurements, Fig. 6/7).
+//!
+//! The MDP environment consumes [`DeviceProfile::entry`] per partition
+//! decision `b`: local-inference latency/energy `t_f`/`e_f`, compression
+//! latency/energy `t_c`/`e_c` and payload size `bits` (Sec. 3.4, Eqs. 6-9).
+//! `jalad` entries model the JALAD baseline compressor at the same cuts.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Overhead of one partition decision `b` ∈ {0..B+1}.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverheadEntry {
+    pub b: usize,
+    /// Local inference latency (s) — `t_n^f` in Eq. (7).
+    pub t_f: f64,
+    /// Local inference energy (J) — `e_n^f` in Eq. (8).
+    pub e_f: f64,
+    /// Feature compression latency (s) — `t_n^c`.
+    pub t_c: f64,
+    /// Feature compression energy (J) — `e_n^c`.
+    pub e_c: f64,
+    /// Payload transmitted uplink (bits) — `f_n` in Eq. (6).
+    pub bits: f64,
+}
+
+/// The JALAD baseline's compression overhead at one cut.
+#[derive(Debug, Clone, Copy)]
+pub struct JaladEntry {
+    pub b: usize,
+    pub t_c: f64,
+    pub e_c: f64,
+    pub bits: f64,
+    pub rate: f64,
+}
+
+/// Per-model device profile (paper-scale analytic tables).
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub model: String,
+    /// Number of partition choices: b in {0, 1..B, B+1}.
+    pub n_choices: usize,
+    pub entries: Vec<OverheadEntry>,
+    pub jalad: Vec<JaladEntry>,
+    pub full_local_t: f64,
+    pub full_local_e: f64,
+    pub input_bits: f64,
+}
+
+impl DeviceProfile {
+    pub fn load(path: impl AsRef<Path>) -> Result<DeviceProfile> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeviceProfile> {
+        let entries = j
+            .req("entries")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(OverheadEntry {
+                    b: e.usize_of("b")?,
+                    t_f: e.f64_of("t_f")?,
+                    e_f: e.f64_of("e_f")?,
+                    t_c: e.f64_of("t_c")?,
+                    e_c: e.f64_of("e_c")?,
+                    bits: e.f64_of("bits")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let jalad = j
+            .req("jalad")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(JaladEntry {
+                    b: e.usize_of("b")?,
+                    t_c: e.f64_of("t_c")?,
+                    e_c: e.f64_of("e_c")?,
+                    bits: e.f64_of("bits")?,
+                    rate: e.f64_of("rate")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n_choices = j.usize_of("n_partition_choices")?;
+        if entries.len() != n_choices {
+            bail!(
+                "profile has {} entries but claims {} partition choices",
+                entries.len(),
+                n_choices
+            );
+        }
+        let full = j.req("full_local")?;
+        Ok(DeviceProfile {
+            model: j.str_of("model")?.to_string(),
+            n_choices,
+            entries,
+            jalad,
+            full_local_t: full.f64_of("t")?,
+            full_local_e: full.f64_of("e")?,
+            input_bits: j.f64_of("input_bits")?,
+        })
+    }
+
+    /// Overhead for partition decision `b` (panics on out-of-range — the
+    /// action space is validated upstream).
+    pub fn entry(&self, b: usize) -> &OverheadEntry {
+        &self.entries[b]
+    }
+
+    /// The full-local decision index (B + 1).
+    pub fn local_choice(&self) -> usize {
+        self.n_choices - 1
+    }
+
+    /// A variant of this profile where partition cuts use the JALAD
+    /// compressor instead of the autoencoder (paper baseline; raw-input and
+    /// full-local decisions are unchanged).
+    pub fn jalad_variant(&self) -> DeviceProfile {
+        let mut out = self.clone();
+        for je in &self.jalad {
+            let e = &mut out.entries[je.b];
+            e.t_c = je.t_c;
+            e.e_c = je.e_c;
+            e.bits = je.bits;
+        }
+        out.model = format!("{}+jalad", self.model);
+        out
+    }
+
+    /// Largest payload over all decisions (used for state normalization).
+    pub fn max_bits(&self) -> f64 {
+        self.entries.iter().map(|e| e.bits).fold(0.0, f64::max)
+    }
+
+    /// Synthetic profile for unit tests (no artifact files needed):
+    /// monotone compute costs, geometrically shrinking payloads.
+    pub fn synthetic() -> DeviceProfile {
+        let full_t = 0.05;
+        let full_e = 0.107;
+        let n_choices = 6;
+        let mut entries = Vec::new();
+        for b in 0..n_choices {
+            let frac = b as f64 / (n_choices - 1) as f64;
+            let (t_f, e_f) = if b == 0 { (0.0, 0.0) } else { (full_t * frac, full_e * frac) };
+            let bits = match b {
+                0 => 1.2e6,
+                5 => 0.0,
+                _ => 4.0e5 / 2f64.powi(b as i32 - 1),
+            };
+            let (t_c, e_c) = if b == 0 || b == 5 { (0.0, 0.0) } else { (2e-4, 4e-4) };
+            entries.push(OverheadEntry { b, t_f, e_f, t_c, e_c, bits });
+        }
+        let jalad = (1..5)
+            .map(|b| JaladEntry {
+                b,
+                t_c: 5e-3,
+                e_c: 7e-3,
+                bits: 8.0e5 / 2f64.powi(b as i32 - 1),
+                rate: 8.0,
+            })
+            .collect();
+        DeviceProfile {
+            model: "synthetic".into(),
+            n_choices,
+            entries,
+            jalad,
+            full_local_t: full_t,
+            full_local_e: full_e,
+            input_bits: 1.2e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_consistent() {
+        let p = DeviceProfile::synthetic();
+        assert_eq!(p.n_choices, 6);
+        assert_eq!(p.local_choice(), 5);
+        assert_eq!(p.entry(5).bits, 0.0);
+        assert_eq!(p.entry(0).t_f, 0.0);
+        assert!(p.max_bits() >= 1.2e6);
+    }
+
+    #[test]
+    fn jalad_variant_swaps_cut_entries_only() {
+        let p = DeviceProfile::synthetic();
+        let jv = p.jalad_variant();
+        assert_eq!(jv.entry(0).bits, p.entry(0).bits);
+        assert_eq!(jv.entry(5).bits, p.entry(5).bits);
+        assert!(jv.entry(1).bits > p.entry(1).bits);
+        assert!(jv.entry(1).t_c > p.entry(1).t_c);
+    }
+
+    #[test]
+    fn parses_profile_json() {
+        let j = Json::parse(
+            r#"{"model":"m","n_partition_choices":2,
+                "entries":[{"b":0,"t_f":0,"e_f":0,"t_c":0,"e_c":0,"bits":10},
+                           {"b":1,"t_f":1,"e_f":2,"t_c":0,"e_c":0,"bits":0}],
+                "jalad":[],"full_local":{"t":1,"e":2},"input_bits":10}"#,
+        )
+        .unwrap();
+        let p = DeviceProfile::from_json(&j).unwrap();
+        assert_eq!(p.model, "m");
+        assert_eq!(p.entry(1).e_f, 2.0);
+    }
+
+    #[test]
+    fn entry_count_mismatch_rejected() {
+        let j = Json::parse(
+            r#"{"model":"m","n_partition_choices":3,
+                "entries":[{"b":0,"t_f":0,"e_f":0,"t_c":0,"e_c":0,"bits":0}],
+                "jalad":[],"full_local":{"t":1,"e":2},"input_bits":10}"#,
+        )
+        .unwrap();
+        assert!(DeviceProfile::from_json(&j).is_err());
+    }
+}

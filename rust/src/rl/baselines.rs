@@ -1,0 +1,208 @@
+//! Baseline policies and the shared [`Policy`] trait used for evaluation.
+//!
+//! Paper baselines (Sec. 6.3.1): **Local** (everything on-device, no edge)
+//! and **JALAD** (same MAHPPO agent, JALAD compressor profile — built via
+//! [`crate::profiles::DeviceProfile::jalad_variant`], not here). The extra
+//! Random / FixedSplit / EdgeRaw policies serve as sanity anchors and for
+//! ablations.
+
+use anyhow::Result;
+
+use super::mahppo::EvalStats;
+use crate::env::mdp::MultiAgentEnv;
+use crate::env::{Action, HybridAction};
+use crate::util::rng::Rng;
+
+/// Anything that can drive the joint environment.
+pub trait Policy {
+    fn act(&mut self, state: &[f32], env: &MultiAgentEnv) -> Result<Action>;
+    fn name(&self) -> &str;
+}
+
+/// Which built-in baseline to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Execute every task fully on the UE (paper's "Local").
+    Local,
+    /// Uniform-random partition/channel, random power.
+    Random,
+    /// Offload the raw input (b = 0) at full power.
+    EdgeRaw,
+    /// Always split at a fixed partition point.
+    FixedSplit(usize),
+}
+
+/// A stateless/heuristic baseline policy.
+pub struct BaselinePolicy {
+    kind: PolicyKind,
+    rng: Rng,
+    label: String,
+}
+
+impl BaselinePolicy {
+    pub fn new(kind: PolicyKind, seed: u64) -> BaselinePolicy {
+        let label = match kind {
+            PolicyKind::Local => "local".to_string(),
+            PolicyKind::Random => "random".to_string(),
+            PolicyKind::EdgeRaw => "edge_raw".to_string(),
+            PolicyKind::FixedSplit(b) => format!("fixed_split_{b}"),
+        };
+        BaselinePolicy {
+            kind,
+            rng: Rng::new(seed),
+            label,
+        }
+    }
+}
+
+impl Policy for BaselinePolicy {
+    fn act(&mut self, _state: &[f32], env: &MultiAgentEnv) -> Result<Action> {
+        let n = env.n_ues();
+        let n_choices = env.profile.n_choices;
+        let n_channels = env.cfg.n_channels;
+        let p_max = env.cfg.p_max;
+        let action = (0..n)
+            .map(|i| match self.kind {
+                PolicyKind::Local => {
+                    HybridAction::new(env.profile.local_choice(), 0, 0.0, p_max)
+                }
+                PolicyKind::Random => HybridAction::new(
+                    self.rng.below(n_choices),
+                    self.rng.below(n_channels),
+                    self.rng.normal() as f32,
+                    p_max,
+                ),
+                PolicyKind::EdgeRaw => HybridAction::new(0, i % n_channels, 10.0, p_max),
+                PolicyKind::FixedSplit(b) => {
+                    HybridAction::new(b.min(n_choices - 1), i % n_channels, 2.0, p_max)
+                }
+            })
+            .collect();
+        Ok(action)
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Roll a policy through `episodes` full episodes; aggregates per-task
+/// latency/energy (Fig. 11 metrics) and episode rewards (Fig. 8 scale).
+pub fn evaluate_policy(
+    policy: &mut dyn Policy,
+    env: &mut MultiAgentEnv,
+    episodes: usize,
+) -> Result<EvalStats> {
+    let mut stats = EvalStats::default();
+    for _ in 0..episodes {
+        let mut state = env.reset();
+        let mut ep_reward = 0.0;
+        loop {
+            let action = policy.act(&state, env)?;
+            let r = env.step(&action);
+            ep_reward += r.reward;
+            if r.done {
+                break;
+            }
+            state = r.state;
+        }
+        let t = env.totals();
+        stats.avg_latency += t.avg_latency();
+        stats.avg_energy += t.avg_energy();
+        stats.avg_reward += ep_reward;
+        stats.episodes += 1;
+    }
+    let e = stats.episodes.max(1) as f64;
+    stats.avg_latency /= e;
+    stats.avg_energy /= e;
+    stats.avg_reward /= e;
+    Ok(stats)
+}
+
+/// Cumulative-reward trace of a policy (baseline curves on Fig. 8).
+pub fn reward_trace(
+    policy: &mut dyn Policy,
+    env: &mut MultiAgentEnv,
+    episodes: usize,
+) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(episodes);
+    for _ in 0..episodes {
+        let mut state = env.reset();
+        let mut ep_reward = 0.0;
+        loop {
+            let action = policy.act(&state, env)?;
+            let r = env.step(&action);
+            ep_reward += r.reward;
+            if r.done {
+                break;
+            }
+            state = r.state;
+        }
+        out.push(ep_reward);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::scenario::ScenarioConfig;
+    use crate::profiles::DeviceProfile;
+
+    fn env(n: usize) -> MultiAgentEnv {
+        let cfg = ScenarioConfig {
+            n_ues: n,
+            ..Default::default()
+        }
+        .quick(4.0);
+        MultiAgentEnv::new(DeviceProfile::synthetic(), cfg, 5).unwrap()
+    }
+
+    #[test]
+    fn local_policy_matches_profile_costs() {
+        let mut e = env(3);
+        let mut p = BaselinePolicy::new(PolicyKind::Local, 0);
+        let stats = evaluate_policy(&mut p, &mut e, 2).unwrap();
+        assert!((stats.avg_latency - 0.05).abs() < 1e-9);
+        assert!((stats.avg_energy - 0.107).abs() < 1e-9);
+        assert!(stats.avg_reward < 0.0);
+    }
+
+    #[test]
+    fn random_policy_obeys_action_space() {
+        let mut e = env(4);
+        let mut p = BaselinePolicy::new(PolicyKind::Random, 1);
+        for _ in 0..50 {
+            let s = e.state();
+            let a = p.act(&s, &e).unwrap();
+            for h in &a {
+                assert!(h.b < e.profile.n_choices);
+                assert!(h.c < e.cfg.n_channels);
+                assert!(h.p_watts > 0.0 && h.p_watts <= e.cfg.p_max);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_split_beats_local_at_close_range() {
+        // at eval distance 50 m with few UEs, splitting at a deep cut
+        // should cost less energy than full local on the synthetic profile
+        let cfg = ScenarioConfig {
+            n_ues: 2,
+            eval_mode: true,
+            eval_tasks: 10,
+            ..Default::default()
+        };
+        let mut e = MultiAgentEnv::new(DeviceProfile::synthetic(), cfg, 9).unwrap();
+        let mut local_p = BaselinePolicy::new(PolicyKind::Local, 0);
+        let l = evaluate_policy(&mut local_p, &mut e, 1).unwrap();
+        let mut split = BaselinePolicy::new(PolicyKind::FixedSplit(2), 0);
+        let s = evaluate_policy(&mut split, &mut e, 1).unwrap();
+        assert!(
+            s.avg_energy < l.avg_energy,
+            "split {} vs local {}",
+            s.avg_energy,
+            l.avg_energy
+        );
+    }
+}

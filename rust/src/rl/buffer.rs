@@ -1,0 +1,212 @@
+//! The trajectory buffer **M** of Algorithm 1.
+//!
+//! Stores joint transitions (state, per-UE hybrid actions + log-probs,
+//! reward, critic value, done). Once full, [`TrajectoryBuffer::finish`]
+//! computes returns (Eq. 15) and GAE advantages (Eq. 18), after which
+//! minibatches can be drawn for the PPO epochs; `clear` empties it for the
+//! next collection round ("Clear memories in M").
+
+use super::gae;
+use crate::util::rng::Rng;
+
+/// One joint environment transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    /// Per-UE discrete partition choices.
+    pub a_b: Vec<i32>,
+    /// Per-UE discrete channel choices.
+    pub a_c: Vec<i32>,
+    /// Per-UE raw (pre-squash) power actions.
+    pub a_p: Vec<f32>,
+    /// Per-UE hybrid log π_old(a|s).
+    pub log_prob: Vec<f32>,
+    pub reward: f64,
+    pub value: f32,
+    pub done: bool,
+}
+
+/// A minibatch view, columnar per actor.
+#[derive(Debug, Clone, Default)]
+pub struct Minibatch {
+    /// Flattened states (batch × state_dim).
+    pub states: Vec<f32>,
+    /// `returns[i]` — critic regression targets.
+    pub returns: Vec<f32>,
+    /// Per-actor columns, each `batch` long: indexed `[ue][i]`.
+    pub a_b: Vec<Vec<i32>>,
+    pub a_c: Vec<Vec<i32>>,
+    pub a_p: Vec<Vec<f32>>,
+    pub old_logp: Vec<Vec<f32>>,
+    pub adv: Vec<f32>,
+}
+
+pub struct TrajectoryBuffer {
+    pub capacity: usize,
+    pub n_ues: usize,
+    pub state_dim: usize,
+    transitions: Vec<Transition>,
+    returns: Vec<f32>,
+    advantages: Vec<f32>,
+    finished: bool,
+}
+
+impl TrajectoryBuffer {
+    pub fn new(capacity: usize, n_ues: usize) -> TrajectoryBuffer {
+        TrajectoryBuffer {
+            capacity,
+            n_ues,
+            state_dim: 4 * n_ues,
+            transitions: Vec::with_capacity(capacity),
+            returns: Vec::new(),
+            advantages: Vec::new(),
+            finished: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.transitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.transitions.len() >= self.capacity
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        debug_assert_eq!(t.state.len(), self.state_dim);
+        debug_assert_eq!(t.a_b.len(), self.n_ues);
+        debug_assert!(!self.is_full(), "buffer overflow — check is_full() first");
+        self.transitions.push(t);
+        self.finished = false;
+    }
+
+    /// Compute returns + advantages. `bootstrap` is V(s_T) of the state
+    /// following the last stored transition (0.0 if it was terminal).
+    pub fn finish(&mut self, gamma: f64, lam: f64, bootstrap: f64, normalize_adv: bool) {
+        let rewards: Vec<f64> = self.transitions.iter().map(|t| t.reward).collect();
+        let values: Vec<f32> = self.transitions.iter().map(|t| t.value).collect();
+        let dones: Vec<bool> = self.transitions.iter().map(|t| t.done).collect();
+        self.returns = gae::discounted_returns(&rewards, &dones, gamma, bootstrap);
+        self.advantages = gae::gae_advantages(&rewards, &values, &dones, gamma, lam, bootstrap);
+        if normalize_adv {
+            gae::normalize(&mut self.advantages);
+        }
+        self.finished = true;
+    }
+
+    /// Draw a uniform minibatch of `batch` transitions (Algorithm 1's
+    /// "Sample B samples from M"). Requires `finish` first.
+    pub fn sample_minibatch(&self, batch: usize, rng: &mut Rng) -> Minibatch {
+        assert!(self.finished, "call finish() before sampling");
+        assert!(batch <= self.len(), "batch {batch} > buffer {}", self.len());
+        let idx = rng.sample_indices(self.len(), batch);
+        self.gather(&idx)
+    }
+
+    fn gather(&self, idx: &[usize]) -> Minibatch {
+        let n = self.n_ues;
+        let mut mb = Minibatch {
+            states: Vec::with_capacity(idx.len() * self.state_dim),
+            returns: Vec::with_capacity(idx.len()),
+            a_b: vec![Vec::with_capacity(idx.len()); n],
+            a_c: vec![Vec::with_capacity(idx.len()); n],
+            a_p: vec![Vec::with_capacity(idx.len()); n],
+            old_logp: vec![Vec::with_capacity(idx.len()); n],
+            adv: Vec::with_capacity(idx.len()),
+        };
+        for &i in idx {
+            let t = &self.transitions[i];
+            mb.states.extend_from_slice(&t.state);
+            mb.returns.push(self.returns[i]);
+            mb.adv.push(self.advantages[i]);
+            for u in 0..n {
+                mb.a_b[u].push(t.a_b[u]);
+                mb.a_c[u].push(t.a_c[u]);
+                mb.a_p[u].push(t.a_p[u]);
+                mb.old_logp[u].push(t.log_prob[u]);
+            }
+        }
+        mb
+    }
+
+    /// "Clear memories in M."
+    pub fn clear(&mut self) {
+        self.transitions.clear();
+        self.returns.clear();
+        self.advantages.clear();
+        self.finished = false;
+    }
+
+    pub fn mean_value(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.transitions.iter().map(|t| t.value as f64).sum::<f64>() / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transition(n: usize, reward: f64, done: bool) -> Transition {
+        Transition {
+            state: vec![0.5; 4 * n],
+            a_b: vec![1; n],
+            a_c: vec![0; n],
+            a_p: vec![0.1; n],
+            log_prob: vec![-1.0; n],
+            reward,
+            value: 0.0,
+            done,
+        }
+    }
+
+    #[test]
+    fn fill_finish_sample_clear() {
+        let mut buf = TrajectoryBuffer::new(8, 3);
+        for i in 0..8 {
+            buf.push(transition(3, -(i as f64), i == 7));
+        }
+        assert!(buf.is_full());
+        buf.finish(0.95, 0.95, 0.0, true);
+        let mut rng = Rng::new(1);
+        let mb = buf.sample_minibatch(4, &mut rng);
+        assert_eq!(mb.states.len(), 4 * 12);
+        assert_eq!(mb.a_b.len(), 3);
+        assert_eq!(mb.a_b[0].len(), 4);
+        assert_eq!(mb.adv.len(), 4);
+        buf.clear();
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finish")]
+    fn sampling_unfinished_panics() {
+        let mut buf = TrajectoryBuffer::new(4, 2);
+        buf.push(transition(2, 0.0, false));
+        let mut rng = Rng::new(1);
+        let _ = buf.sample_minibatch(1, &mut rng);
+    }
+
+    #[test]
+    fn minibatch_columns_align() {
+        let mut buf = TrajectoryBuffer::new(4, 2);
+        for i in 0..4 {
+            let mut t = transition(2, i as f64, i == 3);
+            t.a_b = vec![i as i32, (i + 10) as i32];
+            buf.push(t);
+        }
+        buf.finish(0.9, 0.9, 0.0, false);
+        let mut rng = Rng::new(2);
+        let mb = buf.sample_minibatch(4, &mut rng);
+        for k in 0..4 {
+            // actor 1's b action is always actor 0's + 10
+            assert_eq!(mb.a_b[1][k], mb.a_b[0][k] + 10);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Returns (Eq. 15) and generalized advantage estimation (Eq. 18).
+//!
+//! The buffer may span several episodes and may end mid-episode; `done`
+//! flags delimit episodes, and a `bootstrap` value V(s_T) continues the
+//! tail when the last transition is not terminal (the paper sets
+//! V(s_{t+1}) = 0 past the horizon; mid-buffer truncation bootstraps with
+//! the critic as is standard for PPO).
+
+/// Discounted sampled returns V'(s_t) = Σ_{t'≥t} γ^{t'-t} r_{t'} (Eq. 15).
+pub fn discounted_returns(rewards: &[f64], dones: &[bool], gamma: f64, bootstrap: f64) -> Vec<f32> {
+    let n = rewards.len();
+    let mut out = vec![0.0f32; n];
+    let mut acc = bootstrap;
+    for t in (0..n).rev() {
+        if dones[t] {
+            acc = 0.0;
+        }
+        acc = rewards[t] + gamma * acc;
+        out[t] = acc as f32;
+    }
+    out
+}
+
+/// GAE(γ, λ) advantages (Eq. 18): Â_t = Σ (γλ)^k δ_{t+k},
+/// δ_t = r_t + γ V(s_{t+1}) − V(s_t), episode-delimited.
+pub fn gae_advantages(
+    rewards: &[f64],
+    values: &[f32],
+    dones: &[bool],
+    gamma: f64,
+    lam: f64,
+    bootstrap: f64,
+) -> Vec<f32> {
+    let n = rewards.len();
+    assert_eq!(values.len(), n);
+    assert_eq!(dones.len(), n);
+    let mut adv = vec![0.0f32; n];
+    let mut gae = 0.0f64;
+    for t in (0..n).rev() {
+        let (next_v, next_nonterminal) = if dones[t] {
+            (0.0, 0.0)
+        } else if t + 1 < n {
+            (values[t + 1] as f64, 1.0)
+        } else {
+            (bootstrap, 1.0)
+        };
+        let delta = rewards[t] + gamma * next_v - values[t] as f64;
+        gae = delta + gamma * lam * next_nonterminal * gae;
+        if dones[t] {
+            gae = delta;
+        }
+        adv[t] = gae as f32;
+    }
+    adv
+}
+
+/// Normalize advantages to zero mean / unit std (standard PPO practice;
+/// stabilizes the shared-trajectory multi-actor updates).
+pub fn normalize(adv: &mut [f32]) {
+    if adv.len() < 2 {
+        return;
+    }
+    let n = adv.len() as f64;
+    let mean = adv.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = adv.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-8);
+    for x in adv.iter_mut() {
+        *x = ((*x as f64 - mean) / std) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn returns_single_episode() {
+        let r = [1.0, 1.0, 1.0];
+        let d = [false, false, true];
+        let v = discounted_returns(&r, &d, 0.5, 99.0);
+        // episode ends at t=2 so bootstrap is ignored
+        assert!((v[2] - 1.0).abs() < 1e-6);
+        assert!((v[1] - 1.5).abs() < 1e-6);
+        assert!((v[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn returns_bootstrap_on_truncation() {
+        let r = [1.0];
+        let d = [false];
+        let v = discounted_returns(&r, &d, 0.9, 10.0);
+        assert!((v[0] - 10.0).abs() < 1e-5); // 1 + 0.9 * 10 = 10
+    }
+
+    #[test]
+    fn episode_boundary_blocks_flow() {
+        let r = [5.0, 1.0];
+        let d = [true, true];
+        let v = discounted_returns(&r, &d, 0.9, 0.0);
+        assert!((v[0] - 5.0).abs() < 1e-6, "no leakage across done");
+        assert!((v[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_with_lambda_one_matches_returns_minus_values() {
+        // λ = 1 ⇒ Â_t = V'(s_t) − V(s_t) (telescoping), per episode
+        forall(
+            21,
+            100,
+            |g| {
+                let n = g.usize_in(2, 20);
+                let rewards: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+                let values: Vec<f32> = (0..n).map(|_| g.f64_in(-1.0, 1.0) as f32).collect();
+                let mut dones = vec![false; n];
+                dones[n - 1] = true;
+                (rewards, values, dones)
+            },
+            |(rewards, values, dones)| {
+                let gamma = 0.95;
+                let adv = gae_advantages(rewards, values, dones, gamma, 1.0, 0.0);
+                let ret = discounted_returns(rewards, dones, gamma, 0.0);
+                for t in 0..rewards.len() {
+                    let expect = ret[t] - values[t];
+                    if (adv[t] - expect).abs() > 1e-3 {
+                        return Err(format!("t={t}: {} vs {expect}", adv[t]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gae_lambda_zero_is_td_error() {
+        let rewards = [1.0, -1.0, 0.5];
+        let values = [0.2f32, 0.1, -0.3];
+        let dones = [false, false, true];
+        let adv = gae_advantages(&rewards, &values, &dones, 0.9, 0.0, 0.0);
+        assert!((adv[0] - (1.0 + 0.9 * 0.1 - 0.2) as f32).abs() < 1e-6);
+        assert!((adv[2] - (0.5 - (-0.3)) as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalization_is_standard() {
+        let mut adv = vec![1.0f32, 2.0, 3.0, 4.0];
+        normalize(&mut adv);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = adv.iter().map(|x| x * x).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+}

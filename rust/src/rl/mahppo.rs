@@ -1,0 +1,311 @@
+//! The MAHPPO trainer — Algorithm 1 of the paper.
+//!
+//! N actor networks (one per UE) and one central critic, all executing as
+//! AOT-compiled XLA artifacts via PJRT; the environment, sampling, GAE and
+//! the minibatch loop live here in Rust. Python is never invoked.
+//!
+//! One `train(steps)` call runs:
+//! ```text
+//! loop until `steps` environment frames consumed:
+//!   collect transitions until M is full (sampling from π_old)
+//!   compute returns (Eq. 15) + GAE (Eq. 18)
+//!   for e in 1 ..= K·(|M|/B):
+//!     draw minibatch B
+//!     critic Adam step on Eq. (16)
+//!     per-actor Adam step on Eq. (20)   [PPO-clip + entropy bonus]
+//!   clear M
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::buffer::{Minibatch, TrajectoryBuffer, Transition};
+use super::sampling;
+use crate::env::mdp::MultiAgentEnv;
+use crate::env::scenario::ScenarioConfig;
+use crate::env::{Action, HybridAction};
+use crate::metrics::{Report, Series};
+use crate::profiles::DeviceProfile;
+use crate::runtime::artifacts::ArtifactStore;
+use crate::runtime::nets::{ActorNet, CriticNet};
+use crate::util::rng::Rng;
+
+/// Training hyperparameters (paper Sec. 6.3.1 "Agent" defaults).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Memory buffer size ‖M‖.
+    pub buffer_size: usize,
+    /// Minibatch size B (paper: ‖M‖/4).
+    pub minibatch: usize,
+    /// Sample reuse time K.
+    pub reuse: usize,
+    /// Discount γ.
+    pub gamma: f64,
+    /// GAE λ.
+    pub lam: f64,
+    /// Adam learning rate α (same for critic and actors).
+    pub lr: f32,
+    /// Normalize advantages per buffer (standard PPO practice).
+    pub normalize_adv: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            buffer_size: 1024,
+            minibatch: 256,
+            reuse: 10,
+            gamma: 0.95,
+            lam: 0.95,
+            lr: 1e-4,
+            normalize_adv: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the experiment harness needs from one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// Cumulative reward per completed episode (paper Fig. 8/10 curves).
+    pub episode_rewards: Series,
+    /// Critic loss per update round (paper Fig. 9d).
+    pub value_losses: Series,
+    /// Mean actor entropy per update round.
+    pub entropies: Series,
+    /// Mean actor clip fraction per update round.
+    pub clip_fracs: Series,
+    pub frames: usize,
+    pub episodes: usize,
+    pub wall_s: f64,
+}
+
+impl TrainReport {
+    /// Convergent value: mean cumulative reward over the last 10 episodes.
+    pub fn final_reward(&self) -> f64 {
+        self.episode_rewards.tail_mean(10)
+    }
+
+    pub fn into_report(self, title: &str) -> Report {
+        let mut r = Report::new(title);
+        r.fact("frames", self.frames as f64);
+        r.fact("episodes", self.episodes as f64);
+        r.fact("final_reward", self.final_reward());
+        r.fact("wall_s", self.wall_s);
+        r.add_series(self.episode_rewards);
+        r.add_series(self.value_losses);
+        r.add_series(self.entropies);
+        r.add_series(self.clip_fracs);
+        r
+    }
+}
+
+/// The MAHPPO agent: N actors + central critic + environment.
+pub struct MahppoTrainer {
+    pub env: MultiAgentEnv,
+    pub actors: Vec<ActorNet>,
+    pub critic: CriticNet,
+    pub cfg: TrainConfig,
+    rng: Rng,
+}
+
+impl MahppoTrainer {
+    pub fn new(
+        store: &ArtifactStore,
+        profile: &DeviceProfile,
+        scenario: ScenarioConfig,
+        cfg: TrainConfig,
+    ) -> Result<MahppoTrainer> {
+        let n = scenario.n_ues;
+        let env = MultiAgentEnv::new(profile.clone(), scenario, cfg.seed)?;
+        let actors = (0..n)
+            .map(|i| ActorNet::new(store, n, cfg.seed.wrapping_add(1000 + i as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        let critic = CriticNet::new(store, n, cfg.seed.wrapping_add(7777))?;
+        Ok(MahppoTrainer {
+            env,
+            actors,
+            critic,
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed.wrapping_add(42)),
+        })
+    }
+
+    /// Sample the joint action from the current policies.
+    fn act(&mut self, state: &[f32]) -> Result<(Action, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let n = self.env.n_ues();
+        let p_max = self.env.cfg.p_max;
+        let n_choices = self.env.profile.n_choices;
+        let mut action: Action = Vec::with_capacity(n);
+        let (mut ab, mut ac, mut ap, mut lp) = (
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+        );
+        for actor in self.actors.iter_mut() {
+            let out = actor.forward(state)?;
+            let s = sampling::sample_hybrid(&out, &mut self.rng);
+            let b = s.b.min(n_choices - 1);
+            action.push(HybridAction::new(b, s.c, s.p_raw, p_max));
+            ab.push(s.b as i32);
+            ac.push(s.c as i32);
+            ap.push(s.p_raw);
+            lp.push(s.log_prob);
+        }
+        Ok((action, ab, ac, ap, lp))
+    }
+
+    /// Run Algorithm 1 for (at least) `total_frames` environment frames.
+    pub fn train(&mut self, total_frames: usize) -> Result<TrainReport> {
+        let t0 = Instant::now();
+        let n = self.env.n_ues();
+        let mut buf = TrajectoryBuffer::new(self.cfg.buffer_size, n);
+        let mut report = TrainReport::default();
+        report.episode_rewards = Series::new("episode_reward");
+        report.value_losses = Series::new("value_loss");
+        report.entropies = Series::new("entropy");
+        report.clip_fracs = Series::new("clip_frac");
+
+        let mut state = self.env.reset();
+        let mut ep_reward = 0.0f64;
+        let mut frames = 0usize;
+
+        while frames < total_frames {
+            // ---- collect one buffer of experience ----
+            while !buf.is_full() {
+                let (action, a_b, a_c, a_p, log_prob) = self.act(&state)?;
+                let value = self.critic.value(&state)?;
+                let r = self.env.step(&action);
+                ep_reward += r.reward;
+                frames += 1;
+                buf.push(Transition {
+                    state: std::mem::take(&mut state),
+                    a_b,
+                    a_c,
+                    a_p,
+                    log_prob,
+                    reward: r.reward,
+                    value,
+                    done: r.done,
+                });
+                if r.done {
+                    report
+                        .episode_rewards
+                        .push(report.episodes as f64, ep_reward);
+                    report.episodes += 1;
+                    ep_reward = 0.0;
+                    state = self.env.reset();
+                } else {
+                    state = r.state;
+                }
+            }
+
+            // ---- returns + advantages ----
+            let bootstrap = if buf.is_empty() {
+                0.0
+            } else {
+                self.critic.value(&state)? as f64
+            };
+            buf.finish(self.cfg.gamma, self.cfg.lam, bootstrap, self.cfg.normalize_adv);
+
+            // ---- PPO epochs: K * (|M| / B) minibatches ----
+            let rounds = self.cfg.reuse * (self.cfg.buffer_size / self.cfg.minibatch).max(1);
+            let mut vloss_acc = 0.0f64;
+            let mut ent_acc = 0.0f64;
+            let mut clip_acc = 0.0f64;
+            for _ in 0..rounds {
+                let mb = buf.sample_minibatch(self.cfg.minibatch, &mut self.rng);
+                vloss_acc += self.update_critic(&mb)? as f64;
+                let (ent, clip) = self.update_actors(&mb)?;
+                ent_acc += ent as f64;
+                clip_acc += clip as f64;
+            }
+            let r = rounds as f64;
+            report
+                .value_losses
+                .push(frames as f64, vloss_acc / r);
+            report.entropies.push(frames as f64, ent_acc / r);
+            report.clip_fracs.push(frames as f64, clip_acc / r);
+            buf.clear();
+        }
+
+        report.frames = frames;
+        report.wall_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    fn update_critic(&mut self, mb: &Minibatch) -> Result<f32> {
+        self.critic.update(self.cfg.lr, &mb.states, &mb.returns)
+    }
+
+    fn update_actors(&mut self, mb: &Minibatch) -> Result<(f32, f32)> {
+        let mut ent = 0.0f32;
+        let mut clip = 0.0f32;
+        let n = self.actors.len();
+        for (u, actor) in self.actors.iter_mut().enumerate() {
+            let stats = actor.update(
+                self.cfg.lr,
+                &mb.states,
+                &mb.a_b[u],
+                &mb.a_c[u],
+                &mb.a_p[u],
+                &mb.old_logp[u],
+                &mb.adv,
+            )?;
+            ent += stats.entropy;
+            clip += stats.clip_frac;
+        }
+        Ok((ent / n as f32, clip / n as f32))
+    }
+
+    /// Greedy evaluation over `episodes` episodes in eval mode; returns
+    /// (avg per-task latency, avg per-task energy, avg episode reward).
+    pub fn evaluate(&mut self, episodes: usize) -> Result<EvalStats> {
+        let mut stats = EvalStats::default();
+        for _ in 0..episodes {
+            let mut state = self.env.reset();
+            let mut ep_reward = 0.0;
+            loop {
+                let mut action: Action = Vec::with_capacity(self.actors.len());
+                for actor in self.actors.iter_mut() {
+                    let out = actor.forward(&state)?;
+                    let g = sampling::greedy_hybrid(&out);
+                    action.push(HybridAction::new(
+                        g.b.min(self.env.profile.n_choices - 1),
+                        g.c,
+                        g.p_raw,
+                        self.env.cfg.p_max,
+                    ));
+                }
+                let r = self.env.step(&action);
+                ep_reward += r.reward;
+                if r.done {
+                    break;
+                }
+                state = r.state;
+            }
+            let t = self.env.totals();
+            stats.avg_latency += t.avg_latency();
+            stats.avg_energy += t.avg_energy();
+            stats.avg_reward += ep_reward;
+            stats.episodes += 1;
+        }
+        let e = stats.episodes.max(1) as f64;
+        stats.avg_latency /= e;
+        stats.avg_energy /= e;
+        stats.avg_reward /= e;
+        Ok(stats)
+    }
+}
+
+/// Greedy-policy evaluation summary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalStats {
+    pub avg_latency: f64,
+    pub avg_energy: f64,
+    pub avg_reward: f64,
+    pub episodes: usize,
+}

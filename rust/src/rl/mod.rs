@@ -1,0 +1,19 @@
+//! MAHPPO — multi-agent hybrid-action PPO (paper Sec. 5).
+//!
+//! * [`sampling`] — hybrid action sampling and log-probabilities matching
+//!   the jax formulas bit-for-formula (categorical over partition/channel,
+//!   Gaussian over power; Eqs. 13/14).
+//! * [`buffer`] — the trajectory buffer **M** of Algorithm 1.
+//! * [`gae`] — sampled returns (Eq. 15) and generalized advantage
+//!   estimation (Eq. 18).
+//! * [`mahppo`] — the trainer: N actor networks + one central critic,
+//!   rollout collection, PPO-clip minibatch updates through the AOT
+//!   artifacts (Algorithm 1).
+//! * [`baselines`] — Local / Random / FixedSplit / EdgeRaw policies and the
+//!   shared [`baselines::Policy`] trait used by evaluation.
+
+pub mod baselines;
+pub mod buffer;
+pub mod gae;
+pub mod mahppo;
+pub mod sampling;

@@ -1,0 +1,171 @@
+//! Hybrid action sampling + log-probabilities (Eqs. 13/14).
+//!
+//! The Rust side samples actions during rollout and records `old_logp`; the
+//! update artifacts recompute `logp` under the new parameters in jax. The
+//! two implementations must agree *formula-for-formula* (not bitwise):
+//!
+//!   log π(a|s) = log p_b[a_b] + log p_c[a_c] + log N(a_p; μ, σ)
+//!   log N(a; μ, σ) = -0.5 z² − log σ − 0.5 ln(2π),  z = (a − μ)/σ
+//!
+//! with probabilities clamped to ≥ 1e-8 exactly as in
+//! python/compile/actor_critic.py::hybrid_log_prob.
+
+use crate::env::HybridAction;
+use crate::runtime::nets::ActorOutput;
+use crate::util::rng::Rng;
+
+const LOG_2PI: f32 = 1.837_877_1;
+/// Matches the jnp.clip in actor_forward / hybrid_log_prob.
+const PROB_FLOOR: f32 = 1e-8;
+
+/// Gaussian log-density with the same parameterization as the jax side.
+pub fn gaussian_log_prob(a: f32, mu: f32, log_std: f32) -> f32 {
+    let std = log_std.exp();
+    let z = (a - mu) / std;
+    -0.5 * z * z - log_std - 0.5 * LOG_2PI
+}
+
+pub fn categorical_log_prob(probs: &[f32], idx: usize) -> f32 {
+    probs[idx].max(PROB_FLOOR).ln()
+}
+
+/// A sampled hybrid action plus everything PPO needs to learn from it.
+#[derive(Debug, Clone, Copy)]
+pub struct SampledAction {
+    pub b: usize,
+    pub c: usize,
+    pub p_raw: f32,
+    pub log_prob: f32,
+}
+
+/// Sample from one actor's output distributions (Eqs. 13/14).
+pub fn sample_hybrid(out: &ActorOutput, rng: &mut Rng) -> SampledAction {
+    let b = rng.categorical(&out.probs_b);
+    let c = rng.categorical(&out.probs_c);
+    let std = out.log_std.exp();
+    let p_raw = out.mu + std * rng.normal() as f32;
+    let log_prob = categorical_log_prob(&out.probs_b, b)
+        + categorical_log_prob(&out.probs_c, c)
+        + gaussian_log_prob(p_raw, out.mu, out.log_std);
+    SampledAction {
+        b,
+        c,
+        p_raw,
+        log_prob,
+    }
+}
+
+/// Deterministic (evaluation) action: argmax categories, mean power.
+pub fn greedy_hybrid(out: &ActorOutput) -> SampledAction {
+    let b = argmax(&out.probs_b);
+    let c = argmax(&out.probs_c);
+    let p_raw = out.mu;
+    let log_prob = categorical_log_prob(&out.probs_b, b)
+        + categorical_log_prob(&out.probs_c, c)
+        + gaussian_log_prob(p_raw, out.mu, out.log_std);
+    SampledAction {
+        b,
+        c,
+        p_raw,
+        log_prob,
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl SampledAction {
+    pub fn to_hybrid(self, p_max: f64) -> HybridAction {
+        HybridAction::new(self.b, self.c, self.p_raw, p_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn out(probs_b: Vec<f32>, probs_c: Vec<f32>, mu: f32, log_std: f32) -> ActorOutput {
+        ActorOutput {
+            probs_b,
+            probs_c,
+            mu,
+            log_std,
+        }
+    }
+
+    #[test]
+    fn gaussian_logp_matches_closed_form() {
+        // N(0,1) at 0: -0.5 ln(2π) ≈ -0.9189
+        assert!((gaussian_log_prob(0.0, 0.0, 0.0) + 0.918_938_5).abs() < 1e-5);
+        // symmetric
+        assert!(
+            (gaussian_log_prob(1.0, 0.0, 0.0) - gaussian_log_prob(-1.0, 0.0, 0.0)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn sampled_actions_follow_distribution() {
+        let o = out(vec![0.7, 0.3], vec![1.0, 0.0], 0.5, -1.0);
+        let mut rng = Rng::new(3);
+        let mut count_b0 = 0;
+        let mut p_sum = 0.0f64;
+        let n = 20_000;
+        for _ in 0..n {
+            let s = sample_hybrid(&o, &mut rng);
+            if s.b == 0 {
+                count_b0 += 1;
+            }
+            assert_eq!(s.c, 0, "zero-prob channel never sampled");
+            p_sum += s.p_raw as f64;
+        }
+        let frac = count_b0 as f64 / n as f64;
+        assert!((frac - 0.7).abs() < 0.02, "b=0 frequency {frac}");
+        assert!((p_sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn greedy_takes_mode() {
+        let o = out(vec![0.1, 0.2, 0.7], vec![0.6, 0.4], -0.3, 0.0);
+        let g = greedy_hybrid(&o);
+        assert_eq!((g.b, g.c), (2, 0));
+        assert_eq!(g.p_raw, -0.3);
+    }
+
+    #[test]
+    fn log_prob_is_consistent_with_parts() {
+        forall(
+            11,
+            300,
+            |g| {
+                let pb = g.f64_in(0.05, 0.95) as f32;
+                let pc = g.f64_in(0.05, 0.95) as f32;
+                (
+                    out(vec![pb, 1.0 - pb], vec![pc, 1.0 - pc], g.f64_in(-2.0, 2.0) as f32, g.f64_in(-2.0, 0.5) as f32),
+                    g.rng.next_u64(),
+                )
+            },
+            |(o, seed)| {
+                let mut rng = Rng::new(*seed);
+                let s = sample_hybrid(o, &mut rng);
+                let expect = categorical_log_prob(&o.probs_b, s.b)
+                    + categorical_log_prob(&o.probs_c, s.c)
+                    + gaussian_log_prob(s.p_raw, o.mu, o.log_std);
+                if (s.log_prob - expect).abs() > 1e-6 {
+                    return Err(format!("{} vs {expect}", s.log_prob));
+                }
+                if !s.log_prob.is_finite() {
+                    return Err("non-finite log prob".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

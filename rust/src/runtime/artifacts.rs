@@ -1,0 +1,293 @@
+//! The artifact store: `artifacts/manifest.json` index over everything the
+//! compile path produced — HLO modules, their I/O signatures, network
+//! parameter layouts, trained weight files and model metadata.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::client::{Executable, Runtime};
+use super::tensor::load_f32_bin;
+use crate::util::json::Json;
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Per-N RL metadata (parameter vector sizes).
+#[derive(Debug, Clone)]
+pub struct RlMeta {
+    pub n_range: Vec<usize>,
+    pub n_partition: usize,
+    pub n_channels: usize,
+    pub actor_size: HashMap<usize, usize>,
+    pub critic_size: HashMap<usize, usize>,
+    pub update_batches: HashMap<usize, Vec<usize>>,
+    pub default_update_batch: usize,
+}
+
+/// One partition point of a trained backbone.
+#[derive(Debug, Clone)]
+pub struct PointMeta {
+    pub point: usize,
+    pub ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ch_r: usize,
+    pub bits: usize,
+    pub rate: f64,
+    pub ae_weights: PathBuf,
+    pub ae_weights_size: usize,
+}
+
+/// A trained demo-scale backbone with its AE compressors.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub weights: PathBuf,
+    pub weights_size: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub base_acc: f64,
+    pub points: Vec<PointMeta>,
+}
+
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    runtime: Runtime,
+    by_name: HashMap<String, ArtifactMeta>,
+    rl: Option<RlMeta>,
+    models: HashMap<String, ModelMeta>,
+}
+
+impl ArtifactStore {
+    /// Open `root/manifest.json` and create the PJRT runtime.
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactStore> {
+        Self::with_runtime(root, Runtime::cpu()?)
+    }
+
+    pub fn with_runtime(root: impl AsRef<Path>, runtime: Runtime) -> Result<ArtifactStore> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        if !manifest_path.exists() {
+            bail!(
+                "no manifest at {} — run `make artifacts` first",
+                manifest_path.display()
+            );
+        }
+        let man = Json::parse_file(&manifest_path)?;
+
+        let mut by_name = HashMap::new();
+        for e in man.req("artifacts")?.as_arr()? {
+            let meta = ArtifactMeta {
+                name: e.str_of("name")?.to_string(),
+                path: root.join(e.str_of("path")?),
+                inputs: parse_ios(e.req("inputs")?)?,
+                outputs: parse_ios(e.req("outputs")?)?,
+            };
+            by_name.insert(meta.name.clone(), meta);
+        }
+
+        let rl = match man.get("rl") {
+            Some(rl) => Some(parse_rl(rl)?),
+            None => None,
+        };
+
+        let mut models = HashMap::new();
+        if let Some(Json::Obj(pairs)) = man.get("models") {
+            for (name, m) in pairs {
+                models.insert(name.clone(), parse_model(name, m, &root)?);
+            }
+        }
+
+        Ok(ArtifactStore {
+            root,
+            runtime,
+            by_name,
+            rl,
+            models,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_name.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have {})", self.by_name.len()))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    /// Load + compile (memoized) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        let meta = self.meta(name)?;
+        self.runtime.load(&meta.path)
+    }
+
+    pub fn rl(&self) -> Result<&RlMeta> {
+        self.rl
+            .as_ref()
+            .ok_or_else(|| anyhow!("manifest has no RL metadata — run `make artifacts-rl`"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model '{name}' not in manifest — run `make artifacts-models`")
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Load a model's flat weight vector.
+    pub fn model_weights(&self, name: &str) -> Result<Vec<f32>> {
+        let m = self.model(name)?;
+        load_f32_bin(&m.weights, m.weights_size)
+    }
+
+    /// Load the AE weights for (model, point).
+    pub fn ae_weights(&self, model: &str, point: usize) -> Result<Vec<f32>> {
+        let m = self.model(model)?;
+        let p = m
+            .points
+            .iter()
+            .find(|p| p.point == point)
+            .ok_or_else(|| anyhow!("model '{model}' has no point {point}"))?;
+        load_f32_bin(&p.ae_weights, p.ae_weights_size)
+    }
+
+    /// The update minibatch sizes available for a given N.
+    pub fn update_batches(&self, n_ues: usize) -> Result<Vec<usize>> {
+        let rl = self.rl()?;
+        Ok(rl
+            .update_batches
+            .get(&n_ues)
+            .cloned()
+            .unwrap_or_else(|| vec![rl.default_update_batch]))
+    }
+}
+
+fn parse_ios(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|io| {
+            Ok(IoSpec {
+                name: io.str_of("name")?.to_string(),
+                shape: io
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: io
+                    .get("dtype")
+                    .and_then(|d| d.as_str().ok())
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_rl(j: &Json) -> Result<RlMeta> {
+    let n_range = j
+        .req("n_range")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let mut actor_size = HashMap::new();
+    let mut critic_size = HashMap::new();
+    if let Json::Obj(pairs) = j.req("specs")? {
+        for (k, v) in pairs {
+            let n: usize = k.parse()?;
+            actor_size.insert(n, v.usize_of("actor_size")?);
+            critic_size.insert(n, v.usize_of("critic_size")?);
+        }
+    }
+    let mut update_batches = HashMap::new();
+    let mut default_update_batch = 256;
+    if let Some(Json::Obj(pairs)) = j.get("update_batches") {
+        for (k, v) in pairs {
+            if k == "default" {
+                default_update_batch = v.as_arr()?[0].as_usize()?;
+            } else {
+                update_batches.insert(
+                    k.parse()?,
+                    v.as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                );
+            }
+        }
+    }
+    Ok(RlMeta {
+        n_range,
+        n_partition: j.usize_of("n_partition")?,
+        n_channels: j.usize_of("n_channels")?,
+        actor_size,
+        critic_size,
+        update_batches,
+        default_update_batch,
+    })
+}
+
+fn parse_model(name: &str, m: &Json, root: &Path) -> Result<ModelMeta> {
+    let points = m
+        .req("points")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(PointMeta {
+                point: p.usize_of("point")?,
+                ch: p.usize_of("ch")?,
+                h: p.usize_of("h")?,
+                w: p.usize_of("w")?,
+                ch_r: p.usize_of("ch_r")?,
+                bits: p.usize_of("bits")?,
+                rate: p.f64_of("rate")?,
+                ae_weights: root.join(p.str_of("ae_weights")?),
+                ae_weights_size: p.usize_of("ae_weights_size")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        name: name.to_string(),
+        weights: root.join(m.str_of("weights")?),
+        weights_size: m.usize_of("weights_size")?,
+        input_hw: m.usize_of("input_hw")?,
+        num_classes: m.usize_of("num_classes")?,
+        base_acc: m.f64_of("base_acc")?,
+        points,
+    })
+}

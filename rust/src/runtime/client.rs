@@ -1,0 +1,183 @@
+//! PJRT CPU client wrapper with an executable cache.
+//!
+//! HLO *text* is the interchange format (see DESIGN.md): jax >= 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids, so text round-trips cleanly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use once_cell::sync::Lazy;
+
+use super::tensor::TensorView;
+
+/// Process-wide XLA lock.
+///
+/// The `xla` crate's wrappers hold `Rc` refcounts and raw PJRT pointers and
+/// are therefore `!Send`/`!Sync`. The underlying PJRT C API is thread-safe,
+/// but the `Rc<PjRtClientInternal>` refcount is not: every client clone
+/// (which happens inside `execute` when output buffers are wrapped) must be
+/// serialized. All compile and execute calls take this lock, making it
+/// sound to move/share [`Runtime`] and [`Executable`] across threads — see
+/// the `unsafe impl`s below. On the single-core target this serialization
+/// costs nothing; a multi-core port would switch to one client per thread.
+static XLA_LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+/// Process-wide PJRT runtime. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+// SAFETY: every path that touches the wrapped PJRT objects (compile in
+// `Runtime::load`, execute + literal readback in `Executable::call`) holds
+// the process-wide XLA_LOCK, serializing all Rc refcount mutations and C
+// API calls. No other method exposes the inner xla types.
+unsafe impl Send for RuntimeInner {}
+unsafe impl Sync for RuntimeInner {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable identity for error messages.
+    name: String,
+    /// Cumulative execution statistics (perf pass).
+    stats: Mutex<ExecStats>,
+}
+
+#[derive(Default, Clone, Copy, Debug)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client. One per process is plenty.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            inner: Arc::new(RuntimeInner {
+                client,
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, memoized on the canonical path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        let path = path.as_ref();
+        let key = path
+            .canonicalize()
+            .unwrap_or_else(|_| path.to_path_buf());
+        if let Some(exe) = self.inner.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let _xla = XLA_LOCK.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        log::debug!(
+            "compiled {} in {:.1} ms",
+            path.display(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let exe = Arc::new(Executable {
+            exe,
+            name: path.display().to_string(),
+            stats: Mutex::new(ExecStats::default()),
+        });
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn cache_len(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with f32/i32 tensor inputs; returns all outputs of the
+    /// module's result tuple as [`TensorView`]s (host copies).
+    ///
+    /// Every artifact is lowered with `return_tuple=True`, so the single
+    /// output buffer is always a tuple literal — including 1-output
+    /// modules.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<TensorView>> {
+        self.call_impl(|exe| exe.execute::<xla::Literal>(inputs))
+    }
+
+    /// Like [`Executable::call`] but borrowing the input literals — lets
+    /// hot paths keep device-format copies of loop-invariant inputs (e.g.
+    /// network parameters between PPO updates) instead of re-copying them
+    /// every call (§Perf).
+    pub fn call_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<TensorView>> {
+        self.call_impl(|exe| exe.execute::<&xla::Literal>(inputs))
+    }
+
+    fn call_impl<F>(&self, run: F) -> Result<Vec<TensorView>>
+    where
+        F: FnOnce(
+            &xla::PjRtLoadedExecutable,
+        ) -> std::result::Result<Vec<Vec<xla::PjRtBuffer>>, xla::Error>,
+    {
+        let t0 = Instant::now();
+        let _xla = XLA_LOCK.lock().unwrap();
+        let result = run(&self.exe).map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let buf = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: reading result: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: decomposing result tuple: {e:?}", self.name))?;
+        let views = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, l)| {
+                TensorView::from_literal(l)
+                    .with_context(|| format!("{}: output {i}", self.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dt = t0.elapsed().as_nanos() as u64;
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_ns += dt;
+        Ok(views)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request/training path.
+//!
+//! * [`client`] — the PJRT CPU client plus an executable cache (each HLO
+//!   module is parsed + compiled exactly once per process).
+//! * [`artifacts`] — the `artifacts/manifest.json` index: artifact names,
+//!   I/O signatures, network parameter layouts, model/weight metadata.
+//! * [`tensor`] — `Vec<f32>` ⇄ `xla::Literal` conversion helpers with shape
+//!   checks at the boundary.
+//! * [`nets`] — typed handles over the actor/critic artifacts (forward and
+//!   PPO-update calls) and backbone/AE segment executables.
+
+pub mod artifacts;
+pub mod client;
+pub mod nets;
+pub mod tensor;

@@ -1,0 +1,178 @@
+//! Host-side tensors and `xla::Literal` conversion.
+//!
+//! The runtime boundary is deliberately narrow: everything crossing it is
+//! an f32 or i32 dense tensor. `TensorView` owns a host copy of an output;
+//! `to_literal` builds inputs with shape checks so a mismatched artifact
+//! fails loudly at the call site instead of inside XLA.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A host tensor read back from the device (always f32 or i32 here).
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Default for TensorView {
+    /// Empty f32 tensor — lets hot paths `std::mem::take` outputs out of a
+    /// result vector without cloning the payload.
+    fn default() -> Self {
+        TensorView {
+            shape: vec![0],
+            data: Data::F32(Vec::new()),
+        }
+    }
+}
+
+impl TensorView {
+    pub fn from_literal(lit: xla::Literal) -> Result<TensorView> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => Data::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading f32 literal: {e:?}"))?,
+            ),
+            xla::ElementType::S32 => Data::I32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow!("reading i32 literal: {e:?}"))?,
+            ),
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        Ok(TensorView { shape: dims, data })
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (errors on dtype mismatch).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Consume into an owned f32 vec.
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// The single scalar value of a 0-d / 1-element tensor.
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// Build an f32 literal of the given shape (checked).
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    if count != data.len() {
+        bail!(
+            "shape {:?} needs {count} elements, got {}",
+            shape,
+            data.len()
+        );
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape (checked).
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    if count != data.len() {
+        bail!(
+            "shape {:?} needs {count} elements, got {}",
+            shape,
+            data.len()
+        );
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+/// Scalar f32 literal (0-d).
+pub fn scalar_literal(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Load a flat-f32 weight file written by the compile path (`.bin`,
+/// little-endian f32, no header).
+pub fn load_f32_bin(path: impl AsRef<std::path::Path>, expected: usize) -> Result<Vec<f32>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: size {} not a multiple of 4", path.display(), bytes.len());
+    }
+    let n = bytes.len() / 4;
+    if expected != 0 && n != expected {
+        bail!(
+            "{}: expected {expected} f32 values, found {n}",
+            path.display()
+        );
+    }
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(i32_literal(&[1, 2, 3], &[2]).is_err());
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("macci_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals: Vec<f32> = vec![1.5, -2.25, 0.0, 3.0e7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(load_f32_bin(&path, 4).unwrap(), vals);
+        assert!(load_f32_bin(&path, 5).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage inside a `harness = false` bench binary:
+//! ```no_run
+//! use macci::util::bench::Bench;
+//! let mut b = Bench::new("channel");
+//! b.run("uplink_rate", || { /* work */ });
+//! b.report();
+//! ```
+//! Each case is warmed up, then timed over adaptively-chosen batches until
+//! the target wall time is reached; mean / p50 / p99 per-iteration times are
+//! reported, and results are appended to `results/bench.json` so the perf
+//! pass (EXPERIMENTS.md §Perf) can diff before/after.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats;
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+pub struct Bench {
+    group: String,
+    target: Duration,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench {
+            group: group.to_string(),
+            target: Duration::from_millis(
+                std::env::var("MACCI_BENCH_MS")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(700),
+            ),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        // Warmup + estimate per-iter cost.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.target / 10 || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est = t0.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Sample batches: aim for ~60 samples over the target duration.
+        let batch = ((self.target.as_secs_f64() / 60.0 / est).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.target && samples.len() < 400 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64 * 1e9);
+            total_iters += batch;
+        }
+
+        let res = CaseResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p99_ns: stats::percentile(&samples, 99.0),
+        };
+        println!(
+            "{:>34}  mean {:>12}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            format!("{}/{}", self.group, res.name),
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p99_ns),
+            res.iters
+        );
+        self.results.push(res);
+    }
+
+    /// Append results to results/bench.json (keyed by group/case).
+    pub fn report(&self) {
+        let path = std::path::Path::new("results/bench.json");
+        let mut root = if path.exists() {
+            Json::parse_file(path).unwrap_or_else(|_| Json::obj())
+        } else {
+            Json::obj()
+        };
+        for r in &self.results {
+            let key = format!("{}/{}", self.group, r.name);
+            let entry = Json::obj()
+                .set("mean_ns", r.mean_ns)
+                .set("p50_ns", r.p50_ns)
+                .set("p99_ns", r.p99_ns)
+                .set("iters", r.iters);
+            if let Json::Obj(ref mut pairs) = root {
+                pairs.retain(|(k, _)| k != &key);
+                pairs.push((key, entry));
+            }
+        }
+        let _ = root.write_file(path);
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(12_500.0), "12.50 µs");
+        assert_eq!(fmt_ns(12_500_000.0), "12.50 ms");
+    }
+
+    #[test]
+    fn bench_runs_fast_case() {
+        std::env::set_var("MACCI_BENCH_MS", "30");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        b.run("add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a simple halving shrink over
+//! the generator's size parameter and reports the smallest failing case's
+//! seed so the exact input can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Context handed to generators: an RNG plus a "size" hint that shrinks.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        lo + self.rng.below((hi - lo).max(1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| self.rng.uniform(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics (with replay info) on
+/// the first failure after shrinking the size parameter.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut failure: Option<(usize, String, T)> = None;
+        // try full size first, then shrink the size hint on failure
+        let mut size = 64usize;
+        loop {
+            let mut crng = Rng::new(case_seed);
+            let mut g = Gen {
+                rng: &mut crng,
+                size,
+            };
+            let input = generate(&mut g);
+            match prop(&input) {
+                Ok(()) => {
+                    if failure.is_some() {
+                        break; // shrunk too far; report the last failure
+                    }
+                    break;
+                }
+                Err(msg) => {
+                    failure = Some((size, msg, input));
+                    if size <= 1 {
+                        break;
+                    }
+                    size /= 2;
+                }
+            }
+        }
+        if let Some((size, msg, input)) = failure {
+            panic!(
+                "property failed (case {case}, replay seed {case_seed:#x}, size {size}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            1,
+            50,
+            |g| {
+                let len = g.usize_in(1, 32);
+                g.vec_f32(len, -1.0, 1.0)
+            },
+            |v| {
+                if v.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(
+            2,
+            10,
+            |g| g.usize_in(0, 100),
+            |&x| if x < 1000 && x % 97 != 13 { Ok(()) } else { Err("hit".into()) },
+        );
+        // force at least one failing draw
+        forall(3, 1000, |g| g.usize_in(0, 100), |&x| {
+            if x % 7 != 3 {
+                Ok(())
+            } else {
+                Err("x % 7 == 3".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 0.0).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (main).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects a number, got '{v}': {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--betas 0.01,0.1,1`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{key} element '{x}': {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{key} element '{x}': {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("exp fig8 --steps 500 --fast --beta=0.47");
+        assert_eq!(a.positional, vec!["exp", "fig8"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 500);
+        assert!(a.has("fast"));
+        assert_eq!(a.f64_or("beta", 0.0).unwrap(), 0.47);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("--betas 0.01,0.1,1");
+        assert_eq!(a.f64_list("betas", &[]).unwrap(), vec![0.01, 0.1, 1.0]);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.str_or("model", "resnet18"), "resnet18");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("--offset -3.5");
+        // "-3.5" does not start with "--" so it is consumed as the value
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--steps abc");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! In-repo substrates for the offline build: JSON, RNG, CLI parsing,
+//! a micro-benchmark harness and a property-testing helper.
+//!
+//! These exist because the build is fully offline (vendored crates only) —
+//! serde_json / rand / clap / criterion / proptest are not available, and
+//! each of these modules implements the subset this project needs, with
+//! unit tests alongside.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Small statistics helpers shared by metrics, benches and experiments.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) via nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Sliding-window average used to smooth reward curves (paper smooths with
+/// the 5 nearest values; window = 5 reproduces that).
+pub fn smooth(xs: &[f64], window: usize) -> Vec<f64> {
+    if window <= 1 || xs.is_empty() {
+        return xs.to_vec();
+    }
+    let half = window / 2;
+    (0..xs.len())
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(xs.len());
+            mean(&xs[lo..hi])
+        })
+        .collect()
+}
+
+/// Exponential moving average.
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        acc = Some(match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        });
+        out.push(acc.unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std(&xs) - 1.118).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn smoothing_preserves_length_and_mean_of_constant() {
+        let xs = vec![2.0; 10];
+        let s = smooth(&xs, 5);
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|&x| (x - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn ema_converges() {
+        let xs = vec![1.0; 50];
+        let e = ema(&xs, 0.1);
+        assert!((e[49] - 1.0).abs() < 1e-9);
+    }
+}

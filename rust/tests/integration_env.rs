@@ -1,0 +1,162 @@
+//! Environment integration over the real paper-scale device profiles.
+//! Requires artifacts/profiles (run `make artifacts-rl` at minimum).
+
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::env::{Action, HybridAction};
+use macci::profiles::DeviceProfile;
+use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use macci::util::check::forall;
+use macci::util::rng::Rng;
+
+fn profile() -> Option<DeviceProfile> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/profiles/resnet18.json");
+    if !p.exists() {
+        eprintln!("skipping: no profiles");
+        return None;
+    }
+    Some(DeviceProfile::load(p).unwrap())
+}
+
+#[test]
+fn local_policy_reproduces_profile_anchors() {
+    let Some(profile) = profile() else { return };
+    let cfg = ScenarioConfig {
+        n_ues: 3,
+        eval_mode: true,
+        eval_tasks: 20,
+        ..Default::default()
+    };
+    let full_t = profile.full_local_t;
+    let full_e = profile.full_local_e;
+    let mut env = MultiAgentEnv::new(profile, cfg, 1).unwrap();
+    let mut p = BaselinePolicy::new(PolicyKind::Local, 0);
+    let stats = evaluate_policy(&mut p, &mut env, 1).unwrap();
+    assert!((stats.avg_latency - full_t).abs() < 1e-9);
+    assert!((stats.avg_energy - full_e).abs() < 1e-9);
+}
+
+#[test]
+fn energy_accounting_conserved_under_random_policies() {
+    // frame-level E_t sums must equal the per-task totals at episode end
+    // (no energy is lost or double-counted), for arbitrary action streams
+    let Some(profile) = profile() else { return };
+    forall(
+        7,
+        12,
+        |g| g.rng.next_u64(),
+        |&seed| {
+            let cfg = ScenarioConfig {
+                n_ues: 3,
+                lambda_tasks: 8.0,
+                ..Default::default()
+            };
+            let mut env = MultiAgentEnv::new(profile.clone(), cfg, seed).unwrap();
+            let mut rng = Rng::new(seed ^ 0xabc);
+            let mut frame_energy_sum = 0.0;
+            let mut frames = 0;
+            while !env.done() && frames < 5000 {
+                let a: Action = (0..3)
+                    .map(|_| {
+                        HybridAction::new(
+                            rng.below(env.profile.n_choices),
+                            rng.below(2),
+                            rng.normal() as f32,
+                            1.0,
+                        )
+                    })
+                    .collect();
+                let r = env.step(&a);
+                frame_energy_sum += r.info.energy;
+                frames += 1;
+            }
+            let totals = env.totals();
+            // all tasks completed => per-task energy sum == frame energy sum
+            if env.done() && frames < 5000 {
+                let diff = (totals.energy_sum - frame_energy_sum).abs();
+                if diff > 1e-6 * frame_energy_sum.max(1.0) {
+                    return Err(format!(
+                        "energy mismatch: tasks {} vs frames {}",
+                        totals.energy_sum, frame_energy_sum
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn latency_lower_bound_is_profile_compute_time() {
+    // no task can finish faster than its decision's compute time
+    let Some(profile) = profile() else { return };
+    let cfg = ScenarioConfig {
+        n_ues: 2,
+        eval_mode: true,
+        eval_tasks: 10,
+        ..Default::default()
+    };
+    let min_t = profile.entry(1).t_f + profile.entry(1).t_c;
+    let mut env = MultiAgentEnv::new(profile, cfg, 5).unwrap();
+    let acts: Action = (0..2).map(|i| HybridAction::new(1, i, 3.0, 1.0)).collect();
+    let mut frames = 0;
+    while !env.done() && frames < 10_000 {
+        env.step(&acts);
+        frames += 1;
+    }
+    let t = env.totals();
+    assert!(t.completed > 0);
+    assert!(
+        t.avg_latency() >= min_t,
+        "avg latency {} below compute floor {min_t}",
+        t.avg_latency()
+    );
+}
+
+#[test]
+fn more_ues_same_channels_is_never_faster() {
+    // fixed-split offloading with more co-channel UEs must not reduce
+    // average latency (monotone interference)
+    let Some(profile) = profile() else { return };
+    let avg = |n: usize| {
+        let cfg = ScenarioConfig {
+            n_ues: n,
+            eval_mode: true,
+            eval_tasks: 20,
+            ..Default::default()
+        };
+        let mut env = MultiAgentEnv::new(profile.clone(), cfg, 3).unwrap();
+        let acts: Action = (0..n).map(|_| HybridAction::new(1, 0, 2.0, 1.0)).collect();
+        let mut frames = 0;
+        while !env.done() && frames < 20_000 {
+            env.step(&acts);
+            frames += 1;
+        }
+        env.totals().avg_latency()
+    };
+    let a2 = avg(2);
+    let a5 = avg(5);
+    assert!(
+        a5 >= a2 * 0.99,
+        "5 UEs ({a5}) should not beat 2 UEs ({a2}) on one channel"
+    );
+}
+
+#[test]
+fn beta_zero_reward_counts_only_time() {
+    let Some(profile) = profile() else { return };
+    let cfg = ScenarioConfig {
+        n_ues: 2,
+        beta: 0.0,
+        lambda_tasks: 5.0,
+        ..Default::default()
+    };
+    let mut env = MultiAgentEnv::new(profile.clone(), cfg, 9).unwrap();
+    let acts: Action = (0..2)
+        .map(|_| HybridAction::new(profile.local_choice(), 0, 0.0, 1.0))
+        .collect();
+    let r = env.step(&acts);
+    let k = r.info.completed.max(1) as f64;
+    assert!((r.reward - (-0.5 / k)).abs() < 1e-12);
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime executing real AOT artifacts.
+//!
+//! These tests need `artifacts/manifest.json` (run `make artifacts-rl`).
+//! They are skipped (not failed) when artifacts are absent so `cargo test`
+//! stays usable on a fresh checkout.
+
+use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::nets::{ActorNet, CriticNet};
+use macci::util::rng::Rng;
+
+fn store() -> Option<ArtifactStore> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {}", root.display());
+        return None;
+    }
+    Some(ArtifactStore::open(root).expect("artifact store"))
+}
+
+#[test]
+fn actor_forward_produces_distributions() {
+    let Some(store) = store() else { return };
+    let mut actor = ActorNet::new(&store, 5, 1).unwrap();
+    let state = vec![0.25f32; 20];
+    let out = actor.forward(&state).unwrap();
+    assert_eq!(out.probs_b.len(), 6);
+    assert_eq!(out.probs_c.len(), 2);
+    let sum_b: f32 = out.probs_b.iter().sum();
+    let sum_c: f32 = out.probs_c.iter().sum();
+    assert!((sum_b - 1.0).abs() < 1e-4, "probs_b sums to {sum_b}");
+    assert!((sum_c - 1.0).abs() < 1e-4, "probs_c sums to {sum_c}");
+    assert!(out.probs_b.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    assert!(out.log_std <= 1.0 && out.log_std >= -4.0);
+}
+
+#[test]
+fn actor_forward_is_deterministic() {
+    let Some(store) = store() else { return };
+    let mut actor = ActorNet::new(&store, 3, 7).unwrap();
+    let state = vec![0.5f32; 12];
+    let a = actor.forward(&state).unwrap();
+    let b = actor.forward(&state).unwrap();
+    assert_eq!(a.probs_b, b.probs_b);
+    assert_eq!(a.mu, b.mu);
+}
+
+#[test]
+fn critic_value_finite_and_state_sensitive() {
+    let Some(store) = store() else { return };
+    let mut critic = CriticNet::new(&store, 5, 3).unwrap();
+    let v0 = critic.value(&vec![0.0f32; 20]).unwrap();
+    let v1 = critic.value(&vec![1.0f32; 20]).unwrap();
+    assert!(v0.is_finite() && v1.is_finite());
+    assert_ne!(v0, v1, "critic must react to the state");
+}
+
+#[test]
+fn actor_update_moves_params_toward_advantage() {
+    let Some(store) = store() else { return };
+    let mut actor = ActorNet::new(&store, 5, 11).unwrap();
+    let b = 256usize;
+    let mut rng = Rng::new(5);
+    let states: Vec<f32> = (0..b * 20).map(|_| rng.f32()).collect();
+    // pick action (b=2, c=1) everywhere with positive advantage: its
+    // probability must increase after a few updates
+    let a_b = vec![2i32; b];
+    let a_c = vec![1i32; b];
+    let a_p = vec![0.3f32; b];
+    let probe = vec![0.5f32; 20];
+    let before = actor.forward(&probe).unwrap();
+    // old_logp from the current policy (ratio starts at ~1)
+    let mut old_logp = vec![0.0f32; b];
+    for i in 0..b {
+        let st = &states[i * 20..(i + 1) * 20];
+        let out = actor.forward(st).unwrap();
+        old_logp[i] = out.probs_b[2].max(1e-8).ln()
+            + out.probs_c[1].max(1e-8).ln()
+            + macci::rl::sampling::gaussian_log_prob(0.3, out.mu, out.log_std);
+    }
+    let adv = vec![1.0f32; b];
+    let mut last_stats = Default::default();
+    for _ in 0..5 {
+        last_stats = actor
+            .update(3e-3, &states, &a_b, &a_c, &a_p, &old_logp, &adv)
+            .unwrap();
+    }
+    let after = actor.forward(&probe).unwrap();
+    assert!(
+        after.probs_b[2] > before.probs_b[2],
+        "p(b=2) {} -> {} should increase",
+        before.probs_b[2],
+        after.probs_b[2]
+    );
+    assert!(
+        after.probs_c[1] > before.probs_c[1],
+        "p(c=1) {} -> {} should increase",
+        before.probs_c[1],
+        after.probs_c[1]
+    );
+    assert!(last_stats.entropy.is_finite());
+    assert_eq!(actor.steps(), 5);
+}
+
+#[test]
+fn critic_update_reduces_value_loss() {
+    let Some(store) = store() else { return };
+    let mut critic = CriticNet::new(&store, 5, 13).unwrap();
+    let b = 256usize;
+    let mut rng = Rng::new(6);
+    let states: Vec<f32> = (0..b * 20).map(|_| rng.f32()).collect();
+    let returns: Vec<f32> = (0..b).map(|i| -1.0 - (i % 7) as f32 * 0.1).collect();
+    let first = critic.update(1e-2, &states, &returns).unwrap();
+    let mut last = first;
+    for _ in 0..20 {
+        last = critic.update(1e-2, &states, &returns).unwrap();
+    }
+    assert!(
+        last < first * 0.5,
+        "value loss should drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn rl_metadata_covers_paper_range() {
+    let Some(store) = store() else { return };
+    let rl = store.rl().unwrap();
+    assert_eq!(rl.n_range, (3..=10).collect::<Vec<_>>());
+    assert_eq!(rl.n_partition, 6);
+    assert_eq!(rl.n_channels, 2);
+    // N=5 has the fig9 batch matrix
+    let batches = store.update_batches(5).unwrap();
+    assert!(batches.contains(&128) && batches.contains(&256) && batches.contains(&512));
+}

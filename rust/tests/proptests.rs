@@ -1,0 +1,218 @@
+//! Property tests over the coordinator invariants: routing/state assembly,
+//! batching policy, buffer/GAE math, action-space mapping — pure Rust, no
+//! artifacts needed.
+
+use macci::coordinator::protocol::UeStateReport;
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::mdp::MultiAgentEnv;
+use macci::env::scenario::ScenarioConfig;
+use macci::env::{Action, HybridAction};
+use macci::profiles::DeviceProfile;
+use macci::rl::buffer::{TrajectoryBuffer, Transition};
+use macci::rl::gae;
+use macci::util::check::forall;
+use macci::util::rng::Rng;
+
+#[test]
+fn state_pool_matches_env_state_encoding() {
+    // for arbitrary UE states, the server-side StatePool must assemble the
+    // same vector the in-process env produces from identical raw values
+    forall(
+        1,
+        50,
+        |g| {
+            let n = g.usize_in(1, 10).clamp(1, 10);
+            let reports: Vec<UeStateReport> = (0..n)
+                .map(|ue_id| UeStateReport {
+                    ue_id,
+                    tasks_left: g.usize_in(0, 300) as u64,
+                    compute_left_s: g.f64_in(0.0, 0.5),
+                    offload_left_bits: g.f64_in(0.0, 1.2e6),
+                    distance_m: g.f64_in(1.0, 100.0),
+                })
+                .collect();
+            reports
+        },
+        |reports| {
+            let n = reports.len();
+            let norm = StateNorm {
+                lambda_tasks: 200.0,
+                frame_s: 0.5,
+                max_bits: 1.2e6,
+                d_max: 100.0,
+            };
+            let mut pool = StatePool::new(n, norm);
+            for r in reports {
+                pool.ingest(*r);
+            }
+            let s = pool.assemble();
+            if s.len() != 4 * n {
+                return Err(format!("bad state length {}", s.len()));
+            }
+            for (i, r) in reports.iter().enumerate() {
+                let checks = [
+                    (s[i], r.tasks_left as f64 / 200.0),
+                    (s[n + i], r.compute_left_s / 0.5),
+                    (s[2 * n + i], r.offload_left_bits / 1.2e6),
+                    (s[3 * n + i], r.distance_m / 100.0),
+                ];
+                for (got, want) in checks {
+                    if (got as f64 - want).abs() > 1e-6 {
+                        return Err(format!("ue {i}: {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn env_step_preserves_task_conservation() {
+    // tasks never appear or vanish: completed + remaining + in-flight is
+    // constant through arbitrary action sequences
+    forall(
+        3,
+        15,
+        |g| g.rng.next_u64(),
+        |&seed| {
+            let cfg = ScenarioConfig {
+                n_ues: 4,
+                lambda_tasks: 12.0,
+                ..Default::default()
+            };
+            let mut env =
+                MultiAgentEnv::new(DeviceProfile::synthetic(), cfg, seed).unwrap();
+            let initial: u64 = env.ues().iter().map(|u| u.tasks_left).sum();
+            let mut rng = Rng::new(seed ^ 0x55);
+            let mut completed = 0u64;
+            for _ in 0..200 {
+                if env.done() {
+                    break;
+                }
+                let a: Action = (0..4)
+                    .map(|_| {
+                        HybridAction::new(rng.below(6), rng.below(2), rng.normal() as f32, 1.0)
+                    })
+                    .collect();
+                let r = env.step(&a);
+                completed += r.info.completed;
+                let remaining: u64 = env.ues().iter().map(|u| u.tasks_left).sum();
+                let in_flight = env
+                    .ues()
+                    .iter()
+                    .filter(|u| u.phase != macci::env::ue::Phase::Idle)
+                    .count() as u64;
+                let total = completed + remaining + in_flight;
+                if total != initial {
+                    return Err(format!(
+                        "task conservation broken: {completed}+{remaining}+{in_flight} != {initial}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn buffer_minibatch_indices_are_consistent() {
+    // advantages and returns drawn into a minibatch must correspond to the
+    // same transitions as the action columns
+    forall(
+        5,
+        30,
+        |g| (g.usize_in(4, 64).max(4), g.rng.next_u64()),
+        |&(cap, seed)| {
+            let n_ues = 3;
+            let mut buf = TrajectoryBuffer::new(cap, n_ues);
+            for i in 0..cap {
+                buf.push(Transition {
+                    // encode the index into the state so we can check joins
+                    state: vec![i as f32; 4 * n_ues],
+                    a_b: vec![i as i32; n_ues],
+                    a_c: vec![0; n_ues],
+                    a_p: vec![i as f32; n_ues],
+                    log_prob: vec![0.0; n_ues],
+                    reward: i as f64,
+                    value: 0.0,
+                    done: i + 1 == cap,
+                })
+            }
+            buf.finish(0.0, 0.0, 0.0, false); // gamma = 0 => return == reward
+            let mut rng = Rng::new(seed);
+            let b = (cap / 2).max(1);
+            let mb = buf.sample_minibatch(b, &mut rng);
+            for k in 0..b {
+                let idx = mb.a_b[0][k] as usize;
+                if mb.states[k * 4 * n_ues] as usize != idx {
+                    return Err("state column misaligned".into());
+                }
+                if (mb.returns[k] - idx as f32).abs() > 1e-6 {
+                    return Err(format!(
+                        "return misaligned: {} vs {idx}",
+                        mb.returns[k]
+                    ));
+                }
+                if (mb.a_p[2][k] - idx as f32).abs() > 1e-6 {
+                    return Err("per-actor column misaligned".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gae_is_shift_invariant_in_rewards_only_through_values() {
+    // adding a constant c to all rewards shifts returns by c/(1-gamma) in
+    // the infinite-horizon limit; for a single finite episode the *relative
+    // ordering* of advantages under identical values must be preserved when
+    // rewards are scaled by a positive constant
+    forall(
+        9,
+        40,
+        |g| {
+            let n = g.usize_in(2, 32).max(2);
+            let rewards: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 0.0)).collect();
+            let values: Vec<f32> = vec![0.0; n];
+            (rewards, values, g.f64_in(0.5, 3.0))
+        },
+        |(rewards, values, scale)| {
+            let n = rewards.len();
+            let mut dones = vec![false; n];
+            dones[n - 1] = true;
+            let a1 = gae::gae_advantages(rewards, values, &dones, 0.95, 0.95, 0.0);
+            let scaled: Vec<f64> = rewards.iter().map(|r| r * scale).collect();
+            let a2 = gae::gae_advantages(&scaled, values, &dones, 0.95, 0.95, 0.0);
+            // positive scaling preserves sign and ordering
+            for i in 0..n {
+                for j in 0..n {
+                    if (a1[i] > a1[j]) != (a2[i] > a2[j])
+                        && (a1[i] - a1[j]).abs() > 1e-4
+                        && (a2[i] - a2[j]).abs() > 1e-4
+                    {
+                        return Err(format!("ordering flipped at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hybrid_action_power_always_feasible() {
+    forall(
+        11,
+        200,
+        |g| (g.f64_in(-50.0, 50.0) as f32, g.f64_in(0.1, 5.0)),
+        |&(raw, p_max)| {
+            let a = HybridAction::new(0, 0, raw, p_max);
+            if a.p_watts <= 0.0 || a.p_watts > p_max {
+                return Err(format!("power {} outside (0, {p_max}]", a.p_watts));
+            }
+            Ok(())
+        },
+    );
+}
