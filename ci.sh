@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI: tier-1 (build + test) plus hygiene and the perf baseline.
+# Fully offline — every dependency is an in-tree path crate.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: test =="
+cargo test -q
+
+echo "== rustfmt =="
+cargo fmt --check
+
+echo "== clippy =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== PJRT path compile-check (xla stub) =="
+cargo build --release --features xla-pjrt
+
+echo "== quickstart (native backend, end-to-end) =="
+cargo run --release --example quickstart
+
+echo "== perf baseline (BENCH_runtime.json) =="
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_runtime
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_e2e
+
+echo "CI OK"

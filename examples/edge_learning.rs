@@ -2,10 +2,11 @@
 //! run (recorded in EXPERIMENTS.md).
 //!
 //! Trains the full MAHPPO stack (N = 5 UEs, ResNet18 profile) for several
-//! thousand frames with ALL network compute flowing through the AOT
-//! Pallas/JAX artifacts on the PJRT runtime, logs the reward curve, then
-//! evaluates the learned policy against the Local and JALAD baselines and
-//! prints the overhead-savings summary.
+//! thousand frames with ALL network compute flowing through the artifact
+//! executables on the configured backend (native interpreter by default,
+//! PJRT with `--features xla-pjrt`), logs the reward curve, then evaluates
+//! the learned policy against the Local and JALAD baselines and prints the
+//! overhead-savings summary.
 //!
 //! Run: `cargo run --release --example edge_learning -- [frames] [n_ues]`
 
@@ -23,7 +24,7 @@ fn main() -> Result<()> {
     let n_ues: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
 
     let store = ArtifactStore::open("artifacts")?;
-    let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+    let profile = DeviceProfile::load_or_synthetic("artifacts/profiles/resnet18.json")?;
     let scenario = ScenarioConfig {
         n_ues,
         lambda_tasks: 200.0,

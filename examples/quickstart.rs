@@ -1,11 +1,13 @@
 //! Quickstart: the smallest end-to-end tour of the public API.
 //!
-//! 1. open the artifact store (PJRT CPU client + manifest),
+//! 1. open the artifact store (native backend by default; synthesizes the
+//!    built-in RL demo manifest when no artifacts exist on disk),
 //! 2. simulate the multi-UE environment under a baseline policy,
 //! 3. train a small MAHPPO agent for a few hundred frames,
 //! 4. compare the learned policy against full-local inference.
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! Run: `cargo run --release --example quickstart` — works fully offline;
+//! `make artifacts` + `--features xla-pjrt` switches to compiled HLO.
 
 use anyhow::Result;
 use macci::env::mdp::MultiAgentEnv;
@@ -16,11 +18,11 @@ use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
 use macci::runtime::artifacts::ArtifactStore;
 
 fn main() -> Result<()> {
-    // 1. artifacts (HLO modules, profiles, trained weights)
+    // 1. artifacts (network layouts, profiles, trained weights)
     let store = ArtifactStore::open("artifacts")?;
-    println!("PJRT platform: {}", store.runtime().platform());
+    println!("backend: {}", store.backend_name());
 
-    let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+    let profile = DeviceProfile::load_or_synthetic("artifacts/profiles/resnet18.json")?;
     println!(
         "device profile: full-local inference = {:.1} ms / {:.1} mJ",
         profile.full_local_t * 1e3,

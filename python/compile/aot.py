@@ -306,18 +306,20 @@ def emit_models(man: Manifest, out_root: str, budget=None, log=print) -> None:
                 [io("weights", wsize), io("feature", 1, ch, fh, fw)],
                 [io("logits", 1, datasets.NUM_CLASSES)], model=model, point=point,
             )
+            # `bits` rides along so backends can run the quant kernels
+            # without consulting the models section (native interpreter)
             emit(
                 man, f"{model}_ae_enc_p{point}", f"models/{model}_ae_enc_p{point}.hlo.txt",
                 lower(enc_fn, f32(ae_flat.size), f32(1, ch, fh, fw)),
                 [io("ae_weights", ae_flat.size), io("feature", 1, ch, fh, fw)],
                 [io("codes", 1, cfg.ch_r, fh, fw), io("lo"), io("hi")],
-                model=model, point=point,
+                model=model, point=point, bits=cfg.bits,
             )
             emit(
                 man, f"{model}_ae_dec_p{point}", f"models/{model}_ae_dec_p{point}.hlo.txt",
                 lower(dec_fn, f32(ae_flat.size), f32(1, cfg.ch_r, fh, fw), f32(), f32()),
                 [io("ae_weights", ae_flat.size), io("codes", 1, cfg.ch_r, fh, fw), io("lo"), io("hi")],
-                [io("feature", 1, ch, fh, fw)], model=model, point=point,
+                [io("feature", 1, ch, fh, fw)], model=model, point=point, bits=cfg.bits,
             )
             pts_meta.append(
                 {

@@ -23,10 +23,8 @@ fn main() {
 
     // full training-frame cost: policy inference x5 + critic + env step,
     // measured through a real trainer by running short train() bursts
-    let profile = match DeviceProfile::load("artifacts/profiles/resnet18.json") {
-        Ok(p) => p,
-        Err(_) => DeviceProfile::synthetic(),
-    };
+    let profile =
+        DeviceProfile::load_or_synthetic("artifacts/profiles/resnet18.json").expect("device profile");
     let scenario = ScenarioConfig {
         n_ues: 5,
         lambda_tasks: 1e9,

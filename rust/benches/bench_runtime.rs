@@ -1,5 +1,7 @@
-//! PJRT runtime benches: the artifact executions on every hot path.
-//! Skipped silently when artifacts are absent.
+//! Runtime benches: the artifact executions on every hot path, on whatever
+//! backend the store resolves (native interpreter by default, so this runs
+//! fully offline). Results also land in BENCH_runtime.json as the perf
+//! baseline for the scaling roadmap.
 //!
 //! Paper-table relevance: actor_fwd dominates the per-frame decision cost
 //! (Figs. 8-13 training wall time); *_update dominates the PPO rounds.
@@ -18,6 +20,7 @@ fn main() {
         }
     };
     let mut b = Bench::new("runtime");
+    println!("backend: {}", store.backend_name());
     let mut rng = Rng::new(1);
 
     let mut actor = ActorNet::new(&store, 5, 1).unwrap();
@@ -67,4 +70,6 @@ fn main() {
     });
 
     b.report();
+    // perf-trajectory baseline (diffed across PRs, see ci.sh)
+    b.merge_into("BENCH_runtime.json");
 }

@@ -1,5 +1,6 @@
-//! Autoencoder compressor handle — drives the AOT `ae_enc`/`ae_dec`
-//! artifacts (Pallas conv1x1 + quant kernels) on the serving path.
+//! Autoencoder compressor handle — drives the `ae_enc`/`ae_dec` artifacts
+//! (Pallas conv1x1 + quant kernels, or their native Rust ports) on the
+//! serving path.
 //!
 //! The UE-side `encode` produces integer codes + per-tensor (lo, hi); the
 //! wire payload is the bit-packed codes (compress/quant.rs) plus the two
@@ -12,8 +13,8 @@ use anyhow::{anyhow, Result};
 
 use super::quant::Quantizer;
 use crate::runtime::artifacts::{ArtifactStore, PointMeta};
-use crate::runtime::client::Executable;
-use crate::runtime::tensor::{f32_literal, scalar_literal};
+use crate::runtime::backend::Executable;
+use crate::runtime::tensor::TensorView;
 
 /// A compressed intermediate feature ready for the uplink.
 #[derive(Debug, Clone)]
@@ -61,12 +62,13 @@ impl EncodedFeature {
 }
 
 /// The (model, partition-point) AE compressor: encode on the "UE", decode
-/// on the "edge" — both as compiled XLA executables.
+/// on the "edge" — both as backend executables.
 pub struct AeCompressor {
     pub meta: PointMeta,
-    enc: Arc<Executable>,
-    dec: Arc<Executable>,
-    weights: Vec<f32>,
+    enc: Arc<dyn Executable>,
+    dec: Arc<dyn Executable>,
+    /// AE weight vector, pre-wrapped as a backend input (loop-invariant).
+    weights: TensorView,
 }
 
 impl AeCompressor {
@@ -78,10 +80,12 @@ impl AeCompressor {
             .find(|p| p.point == point)
             .ok_or_else(|| anyhow!("model '{model}' has no partition point {point}"))?
             .clone();
+        let weights = store.ae_weights(model, point)?;
+        let weights = TensorView::f32(weights, vec![meta.ae_weights_size])?;
         Ok(AeCompressor {
             enc: store.load(&format!("{model}_ae_enc_p{point}"))?,
             dec: store.load(&format!("{model}_ae_dec_p{point}"))?,
-            weights: store.ae_weights(model, point)?,
+            weights,
             meta,
         })
     }
@@ -94,10 +98,8 @@ impl AeCompressor {
     /// UE side: feature (1, ch, h, w) -> codes (1, ch', h, w) + lo/hi.
     pub fn encode(&self, feature: &[f32]) -> Result<EncodedFeature> {
         let m = &self.meta;
-        let outs = self.enc.call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(feature, &[1, m.ch, m.h, m.w])?,
-        ])?;
+        let feature = TensorView::f32(feature.to_vec(), vec![1, m.ch, m.h, m.w])?;
+        let outs = self.enc.call_refs(&[&self.weights, &feature])?;
         Ok(EncodedFeature {
             codes: outs[0].clone().into_f32s()?,
             shape: vec![1, m.ch_r, m.h, m.w],
@@ -109,12 +111,10 @@ impl AeCompressor {
 
     /// Edge side: codes -> restored feature (1, ch, h, w).
     pub fn decode(&self, enc: &EncodedFeature) -> Result<Vec<f32>> {
-        let outs = self.dec.call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(&enc.codes, &enc.shape)?,
-            scalar_literal(enc.lo),
-            scalar_literal(enc.hi),
-        ])?;
+        let codes = TensorView::f32(enc.codes.clone(), enc.shape.clone())?;
+        let lo = TensorView::from_scalar(enc.lo);
+        let hi = TensorView::from_scalar(enc.hi);
+        let outs = self.dec.call_refs(&[&self.weights, &codes, &lo, &hi])?;
         outs[0].clone().into_f32s()
     }
 }

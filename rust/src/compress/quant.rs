@@ -169,6 +169,30 @@ mod tests {
     }
 
     #[test]
+    fn non_byte_aligned_widths_roundtrip_across_byte_boundaries() {
+        // explicit Eq. 1/2 wire cases: widths that straddle byte edges
+        for bits in [3u32, 5, 7, 11, 13] {
+            let q = Quantizer::new(bits).unwrap();
+            let max = (1u32 << bits) - 1;
+            // all-ones, all-zeros, and a ramp exercising every bit lane
+            let patterns: [Vec<u16>; 3] = [
+                vec![max as u16; 17],
+                vec![0u16; 17],
+                (0..17u32).map(|i| (i * 37 % (max + 1)) as u16).collect(),
+            ];
+            for codes in &patterns {
+                let packed = q.pack(codes);
+                assert_eq!(packed.len(), (codes.len() * bits as usize).div_ceil(8));
+                let back = q.unpack(&packed, codes.len()).unwrap();
+                assert_eq!(&back, codes, "bits={bits}");
+            }
+            // short buffer must error, not read out of bounds
+            let packed = q.pack(&patterns[0]);
+            assert!(q.unpack(&packed[..packed.len() - 1], 17).is_err());
+        }
+    }
+
+    #[test]
     fn matches_paper_formula_exactly() {
         // hand-computed: x = 0.5 in [0,1] at 2 bits -> round(3*0.5)=2 -> 2/3
         let q = Quantizer::new(2).unwrap();

@@ -14,8 +14,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::runtime::artifacts::ArtifactStore;
-use crate::runtime::client::Executable;
-use crate::runtime::tensor::f32_literal;
+use crate::runtime::backend::Executable;
+use crate::runtime::tensor::TensorView;
 
 /// One queued full-model inference.
 #[derive(Debug, Clone)]
@@ -37,9 +37,10 @@ pub struct BatchOutput {
 }
 
 pub struct DynamicBatcher {
-    exe_b8: Arc<Executable>,
-    exe_b1: Arc<Executable>,
-    weights: Arc<Vec<f32>>,
+    exe_b8: Arc<dyn Executable>,
+    exe_b1: Arc<dyn Executable>,
+    /// Model weight vector, pre-wrapped as a backend input (loop-invariant).
+    weights: TensorView,
     image_elems: usize,
     image_shape1: Vec<usize>,
     num_classes: usize,
@@ -52,10 +53,11 @@ impl DynamicBatcher {
     pub fn new(store: &ArtifactStore, model: &str, max_wait: Duration) -> Result<DynamicBatcher> {
         let meta = store.model(model)?;
         let hw = meta.input_hw;
+        let weights = TensorView::f32(store.model_weights(model)?, vec![meta.weights_size])?;
         Ok(DynamicBatcher {
             exe_b8: store.load(&format!("{model}_full_b8"))?,
             exe_b1: store.load(&format!("{model}_full_b1"))?,
-            weights: Arc::new(store.model_weights(model)?),
+            weights,
             image_elems: 3 * hw * hw,
             image_shape1: vec![1, 3, hw, hw],
             num_classes: meta.num_classes,
@@ -107,10 +109,8 @@ impl DynamicBatcher {
                 self.image_shape1[2],
                 self.image_shape1[3],
             ];
-            let outs = self.exe_b8.call(&[
-                f32_literal(&self.weights, &[self.weights.len()])?,
-                f32_literal(&flat, &hw_shape)?,
-            ])?;
+            let batch = TensorView::f32(flat, hw_shape)?;
+            let outs = self.exe_b8.call_refs(&[&self.weights, &batch])?;
             let all = outs[0].clone().into_f32s()?;
             items
                 .iter()
@@ -120,10 +120,8 @@ impl DynamicBatcher {
         } else {
             let mut out = Vec::with_capacity(items.len());
             for it in &items {
-                let outs = self.exe_b1.call(&[
-                    f32_literal(&self.weights, &[self.weights.len()])?,
-                    f32_literal(&it.image, &self.image_shape1)?,
-                ])?;
+                let image = TensorView::f32(it.image.clone(), self.image_shape1.clone())?;
+                let outs = self.exe_b1.call_refs(&[&self.weights, &image])?;
                 out.push(outs[0].clone().into_f32s()?);
             }
             out

@@ -1,10 +1,11 @@
 //! The collaborative-inference pipeline over real AOT model segments
-//! (paper Fig. 1): UE-side front segment → AE encode (Pallas conv1x1 +
-//! quant kernels) → wire → edge-side AE decode → back segment.
+//! (paper Fig. 1): UE-side front segment → AE encode (conv1x1 + quant
+//! kernels) → wire → edge-side AE decode → back segment.
 //!
-//! Every stage is a compiled XLA executable; this module wires them
-//! together per partition decision and reports per-stage timings so the
-//! serving example can print real latency/throughput numbers.
+//! Every stage is a backend executable (PJRT-compiled XLA for the CNN
+//! segments; the AE stages also run on the native interpreter); this module
+//! wires them together per partition decision and reports per-stage timings
+//! so the serving example can print real latency/throughput numbers.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,8 +15,8 @@ use anyhow::{anyhow, Result};
 use super::protocol::{InferenceResult, OffloadRequest};
 use crate::compress::ae::{AeCompressor, EncodedFeature};
 use crate::runtime::artifacts::{ArtifactStore, ModelMeta};
-use crate::runtime::client::Executable;
-use crate::runtime::tensor::f32_literal;
+use crate::runtime::backend::Executable;
+use crate::runtime::tensor::TensorView;
 
 /// Per-stage timing of one collaborative inference (seconds).
 #[derive(Debug, Clone, Copy, Default)]
@@ -41,10 +42,11 @@ impl PipelineTiming {
 /// full-model path, selected per request.
 pub struct CollabPipeline {
     pub meta: ModelMeta,
-    weights: Vec<f32>,
-    full: Arc<Executable>,
-    fronts: Vec<Arc<Executable>>,
-    backs: Vec<Arc<Executable>>,
+    /// Model weight vector, pre-wrapped as a backend input (loop-invariant).
+    weights: TensorView,
+    full: Arc<dyn Executable>,
+    fronts: Vec<Arc<dyn Executable>>,
+    backs: Vec<Arc<dyn Executable>>,
     compressors: Vec<AeCompressor>,
 }
 
@@ -52,6 +54,7 @@ impl CollabPipeline {
     pub fn load(store: &ArtifactStore, model: &str) -> Result<CollabPipeline> {
         let meta = store.model(model)?.clone();
         let weights = store.model_weights(model)?;
+        let weights = TensorView::f32(weights, vec![meta.weights_size])?;
         let full = store.load(&format!("{model}_full_b1"))?;
         let mut fronts = Vec::new();
         let mut backs = Vec::new();
@@ -81,10 +84,8 @@ impl CollabPipeline {
 
     /// Full on-device inference (the b = B+1 decision).
     pub fn infer_local(&self, image: &[f32]) -> Result<Vec<f32>> {
-        let outs = self.full.call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(image, &self.image_shape())?,
-        ])?;
+        let image = TensorView::f32(image.to_vec(), self.image_shape())?;
+        let outs = self.full.call_refs(&[&self.weights, &image])?;
         outs[0].clone().into_f32s()
     }
 
@@ -95,10 +96,8 @@ impl CollabPipeline {
             .checked_sub(1)
             .filter(|&i| i < self.fronts.len())
             .ok_or_else(|| anyhow!("partition point {p} out of range"))?;
-        let outs = self.fronts[idx].call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(image, &self.image_shape())?,
-        ])?;
+        let image = TensorView::f32(image.to_vec(), self.image_shape())?;
+        let outs = self.fronts[idx].call_refs(&[&self.weights, &image])?;
         outs[0].clone().into_f32s()
     }
 
@@ -111,10 +110,8 @@ impl CollabPipeline {
         let mut timing = PipelineTiming::default();
 
         let t = Instant::now();
-        let outs = self.fronts[idx].call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(image, &self.image_shape())?,
-        ])?;
+        let image = TensorView::f32(image.to_vec(), self.image_shape())?;
+        let outs = self.fronts[idx].call_refs(&[&self.weights, &image])?;
         let feature = outs[0].clone().into_f32s()?;
         timing.front_s = t.elapsed().as_secs_f64();
 
@@ -152,10 +149,8 @@ impl CollabPipeline {
 
         let t = Instant::now();
         let pm = &self.compressors[idx].meta;
-        let outs = self.backs[idx].call(&[
-            f32_literal(&self.weights, &[self.weights.len()])?,
-            f32_literal(&feature, &[1, pm.ch, pm.h, pm.w])?,
-        ])?;
+        let feature = TensorView::f32(feature, vec![1, pm.ch, pm.h, pm.w])?;
+        let outs = self.backs[idx].call_refs(&[&self.weights, &feature])?;
         let logits = outs[0].clone().into_f32s()?;
         timing.back_s = t.elapsed().as_secs_f64();
         Ok(logits)

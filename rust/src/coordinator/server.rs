@@ -107,6 +107,8 @@ fn server_loop(
     let mut last_decision = Instant::now();
     // issue an initial decision as soon as the first full pool assembles
     let mut first_decision_done = false;
+    // set when every uplink sender is gone: no client can ever speak again
+    let mut uplink_disconnected = false;
 
     loop {
         // -- drain the uplink --
@@ -139,11 +141,20 @@ fn server_loop(
                     alive.insert(ue_id, false);
                 }
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // every sender clone dropped: treat full disconnection
+                    // as shutdown instead of busy-spinning to max_frames
+                    uplink_disconnected = true;
+                    break;
+                }
             }
         }
 
-        // -- all UEs done? --
+        // -- all UEs done or gone? --
+        if uplink_disconnected {
+            log::debug!("uplink fully disconnected — shutting down");
+            break;
+        }
         if alive.values().all(|&a| !a) {
             break;
         }
@@ -237,5 +248,51 @@ mod tests {
         let stats = server.join();
         assert!(stats.frames >= 1);
         assert_eq!(stats.reports, n);
+    }
+
+    #[test]
+    fn dropped_uplink_without_goodbye_shuts_down() {
+        let n = 2;
+        let pool = StatePool::new(
+            n,
+            StateNorm {
+                lambda_tasks: 10.0,
+                frame_s: 0.5,
+                max_bits: 1e6,
+                d_max: 100.0,
+            },
+        );
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
+        }));
+        let cfg = ServerConfig {
+            n_ues: n,
+            decision_interval: Duration::from_millis(5),
+            // huge frame budget: only disconnection can end the loop quickly
+            max_frames: usize::MAX,
+        };
+        let (server, _downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
+        server
+            .uplink
+            .send(Uplink::Report(UeStateReport {
+                ue_id: 0,
+                tasks_left: 1,
+                compute_left_s: 0.0,
+                offload_left_bits: 0.0,
+                distance_m: 40.0,
+            }))
+            .unwrap();
+        // UEs vanish without a Goodbye: dropping the only sender must shut
+        // the server down promptly instead of spinning to max_frames
+        drop(server.uplink.clone()); // exercise clone-then-drop too
+        let EdgeServer { uplink, handle } = server;
+        drop(uplink);
+        let t0 = std::time::Instant::now();
+        let stats = handle.unwrap().join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "server must exit promptly on full disconnection"
+        );
+        assert_eq!(stats.reports, 1);
     }
 }

@@ -13,17 +13,25 @@
 //!   backbone CNNs, the autoencoder compressor; AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused dense,
 //!   1x1-conv channel mix, quantize/dequantize) that lower inside the L2
-//!   HLO.
+//!   HLO — with 1:1 Rust ports in [`runtime::native::kernels`].
 //!
-//! Python never runs at inference or training time: the [`runtime`] module
-//! loads `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and all
-//! hot paths are pure Rust + compiled XLA executables.
+//! Execution is **pluggable** behind [`runtime::backend::Backend`]:
+//!
+//! * The default **native backend** interprets the actor/critic/
+//!   autoencoder artifacts directly from their flat-f32 weights and
+//!   manifest layouts in pure Rust — `cargo build && cargo test` and the
+//!   quickstart run fully offline with zero generated files.
+//! * The **PJRT backend** (cargo feature `xla-pjrt`, `MACCI_BACKEND=xla`)
+//!   compiles the AOT `artifacts/*.hlo.txt` through the PJRT C API and is
+//!   required for the CNN backbone segments. In the offline tree the `xla`
+//!   dependency is an API-compatible stub; point it at the real crate to
+//!   execute.
 //!
 //! ```no_run
 //! use macci::prelude::*;
 //!
-//! let arts = ArtifactStore::open("artifacts")?;
-//! let profile = DeviceProfile::load("artifacts/profiles/resnet18.json")?;
+//! let arts = ArtifactStore::open("artifacts")?; // native demo manifest if absent
+//! let profile = DeviceProfile::load_or_synthetic("artifacts/profiles/resnet18.json")?;
 //! let cfg = ScenarioConfig { n_ues: 5, ..Default::default() };
 //! let mut trainer = MahppoTrainer::new(&arts, &profile, cfg, TrainConfig::default())?;
 //! let report = trainer.train(2_000)?;
@@ -33,7 +41,8 @@
 //!
 //! The offline build constraint (no crates.io) means common substrates are
 //! implemented in-repo: [`util::json`], [`util::rng`], [`util::cli`],
-//! [`util::bench`], [`util::check`].
+//! [`util::bench`], [`util::check`], plus the vendored `anyhow`/`log`/
+//! `once_cell` shims under `rust/vendor/` (see DESIGN.md §Substitutions).
 
 pub mod compress;
 pub mod coordinator;
@@ -53,8 +62,8 @@ pub mod prelude {
     pub use crate::profiles::DeviceProfile;
     pub use crate::rl::baselines::{BaselinePolicy, PolicyKind};
     pub use crate::rl::mahppo::{MahppoTrainer, TrainConfig, TrainReport};
-    pub use crate::runtime::{artifacts::ArtifactStore, client::Runtime};
+    pub use crate::runtime::backend::{Backend, Executable};
+    pub use crate::runtime::native::NativeBackend;
+    pub use crate::runtime::{artifacts::ArtifactStore, tensor::TensorView};
     pub use crate::util::rng::Rng;
 }
-
-

@@ -104,7 +104,8 @@ fn cmd_exp(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let store = open_store()?;
     let model = args.str_or("model", "resnet18");
-    let profile = DeviceProfile::load(store.root.join("profiles").join(format!("{model}.json")))?;
+    let profile =
+        DeviceProfile::load_or_synthetic(store.root.join("profiles").join(format!("{model}.json")))?;
     let scenario = ScenarioConfig {
         n_ues: args.usize_or("n-ues", 5)?,
         beta: args.f64_or("beta", 0.47)?,
@@ -161,7 +162,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let store = open_store()?;
     let model = args.str_or("model", "resnet18");
-    let profile = DeviceProfile::load(store.root.join("profiles").join(format!("{model}.json")))?;
+    let profile =
+        DeviceProfile::load_or_synthetic(store.root.join("profiles").join(format!("{model}.json")))?;
     let scenario = ScenarioConfig {
         n_ues: args.usize_or("n-ues", 5)?,
         eval_mode: true,
@@ -237,7 +239,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     let store = open_store()?;
-    println!("platform: {}", store.runtime().platform());
+    println!("backend: {}", store.backend_name());
     println!("artifacts ({}):", store.names().len());
     for n in store.names() {
         println!("  {n}");

@@ -58,6 +58,23 @@ impl DeviceProfile {
         Self::from_json(&j)
     }
 
+    /// Load `path`, falling back to [`DeviceProfile::synthetic`] (with a
+    /// stderr note) when the profile file does not exist — keeps the
+    /// offline native build usable end-to-end. A profile that exists but
+    /// fails to parse is still a hard error: evaluating against a silently
+    /// wrong device table would corrupt every reported number.
+    pub fn load_or_synthetic(path: impl AsRef<Path>) -> Result<DeviceProfile> {
+        let path = path.as_ref();
+        if path.exists() {
+            return Self::load(path);
+        }
+        eprintln!(
+            "note: no device profile at {} — using the synthetic profile",
+            path.display()
+        );
+        Ok(DeviceProfile::synthetic())
+    }
+
     pub fn from_json(j: &Json) -> Result<DeviceProfile> {
         let entries = j
             .req("entries")?

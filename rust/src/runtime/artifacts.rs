@@ -1,16 +1,33 @@
-//! The artifact store: `artifacts/manifest.json` index over everything the
-//! compile path produced — HLO modules, their I/O signatures, network
-//! parameter layouts, trained weight files and model metadata.
+//! The artifact store: the `artifacts/manifest.json` index over everything
+//! the compile path produced — artifact I/O signatures, network parameter
+//! layouts, trained weight files and model metadata — plus the executable
+//! cache over the selected [`Backend`].
+//!
+//! Offline-first: when no manifest exists and the native backend is
+//! selected, the store synthesizes the built-in RL demo manifest (the same
+//! layouts `python/compile/aot.py` would emit, computed by
+//! [`crate::runtime::spec`]), so training and the quickstart run with zero
+//! generated files.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::client::{Executable, Runtime};
+use super::backend::{default_backend, Backend, Executable};
+use super::native::NativeBackend;
+use super::spec::{actor_layout, critic_layout, parse_spec, spec_size, SpecEntry};
 use super::tensor::load_f32_bin;
 use crate::util::json::Json;
+
+// Paper-scale RL artifact matrix — keep in sync with python/compile/aot.py.
+const N_RANGE: std::ops::RangeInclusive<usize> = 3..=10;
+const N_FULL: usize = 5;
+const UPDATE_BATCHES_FULL: [usize; 3] = [128, 256, 512];
+const UPDATE_BATCH: usize = 256;
+const N_PARTITION: usize = 6;
+const N_CHANNELS: usize = 2;
 
 /// One tensor in an artifact signature.
 #[derive(Debug, Clone)]
@@ -20,16 +37,41 @@ pub struct IoSpec {
     pub dtype: String, // "f32" | "i32"
 }
 
-/// One AOT-compiled HLO module.
+impl IoSpec {
+    fn f32(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "f32".into(),
+        }
+    }
+
+    fn i32(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "i32".into(),
+        }
+    }
+}
+
+/// One AOT-compiled artifact (HLO module on the PJRT backend, interpreted
+/// program on the native backend).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
     pub name: String,
     pub path: PathBuf,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
+    /// Flat-parameter layout for network artifacts (from `rl.specs`); the
+    /// native backend executes from it.
+    pub spec: Option<Arc<Vec<SpecEntry>>>,
+    /// Quantization bit-width for AE encode/decode artifacts (from the
+    /// `models` section).
+    pub bits: Option<usize>,
 }
 
-/// Per-N RL metadata (parameter vector sizes).
+/// Per-N RL metadata (parameter layouts and vector sizes).
 #[derive(Debug, Clone)]
 pub struct RlMeta {
     pub n_range: Vec<usize>,
@@ -37,6 +79,8 @@ pub struct RlMeta {
     pub n_channels: usize,
     pub actor_size: HashMap<usize, usize>,
     pub critic_size: HashMap<usize, usize>,
+    pub actor_spec: HashMap<usize, Arc<Vec<SpecEntry>>>,
+    pub critic_spec: HashMap<usize, Arc<Vec<SpecEntry>>>,
     pub update_batches: HashMap<usize, Vec<usize>>,
     pub default_update_batch: usize,
 }
@@ -69,24 +113,36 @@ pub struct ModelMeta {
 
 pub struct ArtifactStore {
     pub root: PathBuf,
-    runtime: Runtime,
+    backend: Arc<dyn Backend>,
     by_name: HashMap<String, ArtifactMeta>,
+    exe_cache: Mutex<HashMap<String, Arc<dyn Executable>>>,
     rl: Option<RlMeta>,
     models: HashMap<String, ModelMeta>,
 }
 
 impl ArtifactStore {
-    /// Open `root/manifest.json` and create the PJRT runtime.
+    /// Open `root/manifest.json` on the process-default backend
+    /// (`MACCI_BACKEND`, native unless overridden). Without a manifest the
+    /// native backend falls back to the built-in RL demo manifest.
     pub fn open(root: impl AsRef<Path>) -> Result<ArtifactStore> {
-        Self::with_runtime(root, Runtime::cpu()?)
+        Self::with_backend(root, default_backend()?)
     }
 
-    pub fn with_runtime(root: impl AsRef<Path>, runtime: Runtime) -> Result<ArtifactStore> {
+    /// Open on an explicit backend.
+    pub fn with_backend(root: impl AsRef<Path>, backend: Arc<dyn Backend>) -> Result<ArtifactStore> {
         let root = root.as_ref().to_path_buf();
         let manifest_path = root.join("manifest.json");
         if !manifest_path.exists() {
+            if backend.name() == "native" {
+                log::info!(
+                    "no manifest at {} — using the built-in native RL demo manifest",
+                    manifest_path.display()
+                );
+                return Ok(Self::native_manifest(root, backend));
+            }
             bail!(
-                "no manifest at {} — run `make artifacts` first",
+                "no manifest at {} — run `make artifacts` first (the native backend \
+                 synthesizes a demo manifest automatically)",
                 manifest_path.display()
             );
         }
@@ -99,6 +155,11 @@ impl ArtifactStore {
                 path: root.join(e.str_of("path")?),
                 inputs: parse_ios(e.req("inputs")?)?,
                 outputs: parse_ios(e.req("outputs")?)?,
+                spec: None,
+                // AE entries carry their quantization width directly
+                // (aot.py stamps it); older manifests get it backfilled
+                // from the models section below
+                bits: e.get("bits").and_then(|b| b.as_usize().ok()),
             };
             by_name.insert(meta.name.clone(), meta);
         }
@@ -115,17 +176,180 @@ impl ArtifactStore {
             }
         }
 
+        // Attach parameter layouts to the RL artifacts and bit-widths to
+        // the AE artifacts so a backend can execute them without re-reading
+        // the manifest.
+        if let Some(rl) = &rl {
+            for (name, meta) in by_name.iter_mut() {
+                let specs = if name.starts_with("actor_") {
+                    &rl.actor_spec
+                } else if name.starts_with("critic_") {
+                    &rl.critic_spec
+                } else {
+                    continue;
+                };
+                if let Some(n) = parse_n_ues(name) {
+                    meta.spec = specs.get(&n).cloned();
+                }
+            }
+        }
+        for m in models.values() {
+            for p in &m.points {
+                for kind in ["enc", "dec"] {
+                    let key = format!("{}_ae_{kind}_p{}", m.name, p.point);
+                    if let Some(meta) = by_name.get_mut(&key) {
+                        meta.bits.get_or_insert(p.bits);
+                    }
+                }
+            }
+        }
+
         Ok(ArtifactStore {
             root,
-            runtime,
+            backend,
             by_name,
+            exe_cache: Mutex::new(HashMap::new()),
             rl,
             models,
         })
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// The built-in RL-only store on the native backend: the same artifact
+    /// matrix `python/compile/aot.py --rl-only` emits, with layouts
+    /// synthesized by [`crate::runtime::spec`]. Needs no files on disk.
+    pub fn native_demo() -> ArtifactStore {
+        Self::native_manifest(PathBuf::from("artifacts"), Arc::new(NativeBackend::new()))
+    }
+
+    fn native_manifest(root: PathBuf, backend: Arc<dyn Backend>) -> ArtifactStore {
+        let mut by_name = HashMap::new();
+        let mut rl = RlMeta {
+            n_range: N_RANGE.collect(),
+            n_partition: N_PARTITION,
+            n_channels: N_CHANNELS,
+            actor_size: HashMap::new(),
+            critic_size: HashMap::new(),
+            actor_spec: HashMap::new(),
+            critic_spec: HashMap::new(),
+            update_batches: HashMap::new(),
+            default_update_batch: UPDATE_BATCH,
+        };
+        rl.update_batches
+            .insert(N_FULL, UPDATE_BATCHES_FULL.to_vec());
+
+        for n in N_RANGE {
+            let aspec = Arc::new(actor_layout(n, N_PARTITION, N_CHANNELS));
+            let cspec = Arc::new(critic_layout(n));
+            let (ap, cp) = (spec_size(&aspec), spec_size(&cspec));
+            let d = 4 * n;
+            rl.actor_size.insert(n, ap);
+            rl.critic_size.insert(n, cp);
+            rl.actor_spec.insert(n, aspec.clone());
+            rl.critic_spec.insert(n, cspec.clone());
+
+            let mut add = |name: String, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>, spec: &Arc<Vec<SpecEntry>>| {
+                by_name.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        path: PathBuf::from(format!("native:{name}")),
+                        name,
+                        inputs,
+                        outputs,
+                        spec: Some(spec.clone()),
+                        bits: None,
+                    },
+                );
+            };
+
+            add(
+                format!("actor_fwd_n{n}_b1"),
+                vec![IoSpec::f32("params", &[ap]), IoSpec::f32("state", &[1, d])],
+                vec![
+                    IoSpec::f32("probs_b", &[1, N_PARTITION]),
+                    IoSpec::f32("probs_c", &[1, N_CHANNELS]),
+                    IoSpec::f32("mu", &[1, 1]),
+                    IoSpec::f32("log_std", &[1, 1]),
+                ],
+                &aspec,
+            );
+            add(
+                format!("critic_fwd_n{n}_b1"),
+                vec![IoSpec::f32("params", &[cp]), IoSpec::f32("state", &[1, d])],
+                vec![IoSpec::f32("value", &[1, 1])],
+                &cspec,
+            );
+
+            let batches: &[usize] = if n == N_FULL {
+                &UPDATE_BATCHES_FULL
+            } else {
+                &[UPDATE_BATCH]
+            };
+            for &b in batches {
+                add(
+                    format!("actor_update_n{n}_b{b}"),
+                    vec![
+                        IoSpec::f32("params", &[ap]),
+                        IoSpec::f32("m", &[ap]),
+                        IoSpec::f32("v", &[ap]),
+                        IoSpec::f32("t", &[]),
+                        IoSpec::f32("lr", &[]),
+                        IoSpec::f32("state", &[b, d]),
+                        IoSpec::i32("a_b", &[b]),
+                        IoSpec::i32("a_c", &[b]),
+                        IoSpec::f32("a_p", &[b]),
+                        IoSpec::f32("old_logp", &[b]),
+                        IoSpec::f32("adv", &[b]),
+                    ],
+                    vec![
+                        IoSpec::f32("params", &[ap]),
+                        IoSpec::f32("m", &[ap]),
+                        IoSpec::f32("v", &[ap]),
+                        IoSpec::f32("loss", &[]),
+                        IoSpec::f32("entropy", &[]),
+                        IoSpec::f32("clip_frac", &[]),
+                    ],
+                    &aspec,
+                );
+                add(
+                    format!("critic_update_n{n}_b{b}"),
+                    vec![
+                        IoSpec::f32("params", &[cp]),
+                        IoSpec::f32("m", &[cp]),
+                        IoSpec::f32("v", &[cp]),
+                        IoSpec::f32("t", &[]),
+                        IoSpec::f32("lr", &[]),
+                        IoSpec::f32("state", &[b, d]),
+                        IoSpec::f32("returns", &[b]),
+                    ],
+                    vec![
+                        IoSpec::f32("params", &[cp]),
+                        IoSpec::f32("m", &[cp]),
+                        IoSpec::f32("v", &[cp]),
+                        IoSpec::f32("loss", &[]),
+                    ],
+                    &cspec,
+                );
+            }
+        }
+
+        ArtifactStore {
+            root,
+            backend,
+            by_name,
+            exe_cache: Mutex::new(HashMap::new()),
+            rl: Some(rl),
+            models: HashMap::new(),
+        }
+    }
+
+    /// The backend this store executes on.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Short backend identifier ("native", "xla-pjrt", ...).
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -144,10 +368,23 @@ impl ArtifactStore {
         self.by_name.contains_key(name)
     }
 
-    /// Load + compile (memoized) an artifact by manifest name.
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+    /// Load (memoized) an artifact by manifest name on this store's backend.
+    pub fn load(&self, name: &str) -> Result<Arc<dyn Executable>> {
+        if let Some(exe) = self.exe_cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
         let meta = self.meta(name)?;
-        self.runtime.load(&meta.path)
+        let exe = self.backend.load(meta)?;
+        self.exe_cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct executables loaded so far.
+    pub fn loaded_len(&self) -> usize {
+        self.exe_cache.lock().unwrap().len()
     }
 
     pub fn rl(&self) -> Result<&RlMeta> {
@@ -196,6 +433,18 @@ impl ArtifactStore {
     }
 }
 
+/// Extract N from artifact names shaped `..._n{N}_b{B}` / `..._n{N}_...`.
+fn parse_n_ues(name: &str) -> Option<usize> {
+    for part in name.split('_') {
+        if let Some(digits) = part.strip_prefix('n') {
+            if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+                return digits.parse().ok();
+            }
+        }
+    }
+    None
+}
+
 fn parse_ios(j: &Json) -> Result<Vec<IoSpec>> {
     j.as_arr()?
         .iter()
@@ -227,11 +476,19 @@ fn parse_rl(j: &Json) -> Result<RlMeta> {
         .collect::<Result<Vec<_>>>()?;
     let mut actor_size = HashMap::new();
     let mut critic_size = HashMap::new();
+    let mut actor_spec = HashMap::new();
+    let mut critic_spec = HashMap::new();
     if let Json::Obj(pairs) = j.req("specs")? {
         for (k, v) in pairs {
             let n: usize = k.parse()?;
             actor_size.insert(n, v.usize_of("actor_size")?);
             critic_size.insert(n, v.usize_of("critic_size")?);
+            if let Some(a) = v.get("actor") {
+                actor_spec.insert(n, Arc::new(parse_spec(a)?));
+            }
+            if let Some(c) = v.get("critic") {
+                critic_spec.insert(n, Arc::new(parse_spec(c)?));
+            }
         }
     }
     let mut update_batches = HashMap::new();
@@ -257,6 +514,8 @@ fn parse_rl(j: &Json) -> Result<RlMeta> {
         n_channels: j.usize_of("n_channels")?,
         actor_size,
         critic_size,
+        actor_spec,
+        critic_spec,
         update_batches,
         default_update_batch,
     })
@@ -290,4 +549,46 @@ fn parse_model(name: &str, m: &Json, root: &Path) -> Result<ModelMeta> {
         base_acc: m.f64_of("base_acc")?,
         points,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_demo_manifest_covers_paper_range() {
+        let store = ArtifactStore::native_demo();
+        assert_eq!(store.backend_name(), "native");
+        let rl = store.rl().unwrap();
+        assert_eq!(rl.n_range, (3..=10).collect::<Vec<_>>());
+        assert_eq!(rl.n_partition, 6);
+        assert_eq!(rl.n_channels, 2);
+        for n in 3..=10usize {
+            assert!(store.has(&format!("actor_fwd_n{n}_b1")));
+            assert!(store.has(&format!("critic_update_n{n}_b256")));
+        }
+        assert!(store.has("actor_update_n5_b512"));
+        assert!(!store.has("actor_update_n3_b512"));
+        let batches = store.update_batches(5).unwrap();
+        assert_eq!(batches, vec![128, 256, 512]);
+        assert_eq!(store.update_batches(7).unwrap(), vec![256]);
+    }
+
+    #[test]
+    fn native_demo_artifacts_load_and_cache() {
+        let store = ArtifactStore::native_demo();
+        assert_eq!(store.loaded_len(), 0);
+        let a = store.load("actor_fwd_n3_b1").unwrap();
+        let b = store.load("actor_fwd_n3_b1").unwrap();
+        assert_eq!(store.loaded_len(), 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(store.load("nope").is_err());
+    }
+
+    #[test]
+    fn n_ues_name_parsing() {
+        assert_eq!(parse_n_ues("actor_fwd_n5_b1"), Some(5));
+        assert_eq!(parse_n_ues("critic_update_n10_b256"), Some(10));
+        assert_eq!(parse_n_ues("resnet18_front_p2"), None);
+    }
 }

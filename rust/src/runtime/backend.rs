@@ -1,0 +1,101 @@
+//! The execution-substrate seam.
+//!
+//! Every compiled artifact is driven through the [`Backend`] /
+//! [`Executable`] trait pair, so the serving and training layers are
+//! agnostic to *how* an artifact runs:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — the default: a pure-Rust
+//!   interpreter that executes the actor/critic/autoencoder artifacts from
+//!   their flat-f32 weights and manifest layouts (no external runtime,
+//!   fully offline).
+//! * `runtime::client::PjrtBackend` (cargo feature `xla-pjrt`) — compiles
+//!   the AOT HLO-text artifacts through the PJRT C API; required for the
+//!   CNN backbone segments.
+//!
+//! Future backends (GPU, remote execution, sharded serving) plug into the
+//! same seam — see ROADMAP.md.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifacts::ArtifactMeta;
+use super::tensor::TensorView;
+
+/// Cumulative execution statistics of one executable (perf pass).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+/// A loaded artifact ready to execute.
+pub trait Executable: Send + Sync {
+    /// Human-readable identity for error messages.
+    fn name(&self) -> &str;
+
+    /// Execute with borrowed inputs; returns all outputs of the artifact's
+    /// result tuple as host tensors. Borrowing lets hot paths keep
+    /// loop-invariant inputs (e.g. network parameters between PPO updates)
+    /// alive across thousands of calls; the native backend reads them
+    /// zero-copy. (The PJRT backend currently re-marshals inputs to device
+    /// literals per call — a device-side input cache is future work, see
+    /// DESIGN.md §Perf.)
+    fn call_refs(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>>;
+
+    /// Cumulative execution statistics.
+    fn stats(&self) -> ExecStats;
+}
+
+impl dyn Executable {
+    /// Convenience wrapper over [`Executable::call_refs`] for owned inputs.
+    pub fn call(&self, inputs: &[TensorView]) -> Result<Vec<TensorView>> {
+        let refs: Vec<&TensorView> = inputs.iter().collect();
+        self.call_refs(&refs)
+    }
+}
+
+/// An execution substrate: turns artifact metadata into executables.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("native", "xla-pjrt", ...).
+    fn name(&self) -> &str;
+
+    /// Load/compile one artifact into an executable.
+    fn load(&self, meta: &ArtifactMeta) -> Result<Arc<dyn Executable>>;
+}
+
+/// The process-default backend. `MACCI_BACKEND=native|xla` overrides;
+/// native is the default (and the only choice without the `xla-pjrt`
+/// cargo feature).
+pub fn default_backend() -> Result<Arc<dyn Backend>> {
+    let choice = std::env::var("MACCI_BACKEND").unwrap_or_default();
+    match choice.as_str() {
+        "" | "native" => Ok(Arc::new(super::native::NativeBackend::new())),
+        "xla" | "pjrt" | "xla-pjrt" => pjrt_backend(),
+        other => anyhow::bail!("unknown MACCI_BACKEND '{other}' (expected native or xla)"),
+    }
+}
+
+#[cfg(feature = "xla-pjrt")]
+fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(super::client::PjrtBackend::new()?))
+}
+
+#[cfg(not(feature = "xla-pjrt"))]
+fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    anyhow::bail!("MACCI_BACKEND=xla requires building with `--features xla-pjrt`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_native_without_env() {
+        // MACCI_BACKEND is not set under `cargo test`; the default resolves
+        // to the native interpreter.
+        if std::env::var("MACCI_BACKEND").is_err() {
+            assert_eq!(default_backend().unwrap().name(), "native");
+        }
+    }
+}

@@ -1,8 +1,12 @@
-//! PJRT CPU client wrapper with an executable cache.
+//! PJRT CPU backend (cargo feature `xla-pjrt`) — compiles and executes the
+//! AOT HLO-text artifacts through the PJRT C API, with an executable cache.
 //!
-//! HLO *text* is the interchange format (see DESIGN.md): jax >= 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-//! text parser reassigns ids, so text round-trips cleanly.
+//! HLO *text* is the interchange format (see DESIGN.md §Substitutions):
+//! jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids, so text round-trips
+//! cleanly. In the offline tree the `xla` dependency resolves to an
+//! API-compatible stub (rust/vendor/xla-stub) so this path stays
+//! compilable; point it at the real crate to execute.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,7 +16,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 use once_cell::sync::Lazy;
 
-use super::tensor::TensorView;
+use super::artifacts::ArtifactMeta;
+use super::backend::{Backend, ExecStats, Executable};
+use super::tensor::{Data, TensorView};
 
 /// Process-wide XLA lock.
 ///
@@ -21,10 +27,39 @@ use super::tensor::TensorView;
 /// but the `Rc<PjRtClientInternal>` refcount is not: every client clone
 /// (which happens inside `execute` when output buffers are wrapped) must be
 /// serialized. All compile and execute calls take this lock, making it
-/// sound to move/share [`Runtime`] and [`Executable`] across threads — see
-/// the `unsafe impl`s below. On the single-core target this serialization
-/// costs nothing; a multi-core port would switch to one client per thread.
+/// sound to move/share [`Runtime`] and [`PjrtExecutable`] across threads —
+/// see the `unsafe impl`s below. On the single-core target this
+/// serialization costs nothing; a multi-core port would switch to one
+/// client per thread.
 static XLA_LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+/// [`Backend`] over the process-wide PJRT runtime.
+pub struct PjrtBackend {
+    runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            runtime: Runtime::cpu()?,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        "xla-pjrt"
+    }
+
+    fn load(&self, meta: &ArtifactMeta) -> Result<Arc<dyn Executable>> {
+        let exe: Arc<dyn Executable> = self.runtime.load(&meta.path)?;
+        Ok(exe)
+    }
+}
 
 /// Process-wide PJRT runtime. Cheap to clone (Arc inside).
 #[derive(Clone)]
@@ -34,31 +69,25 @@ pub struct Runtime {
 
 struct RuntimeInner {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+    cache: Mutex<HashMap<PathBuf, Arc<PjrtExecutable>>>,
 }
 
 // SAFETY: every path that touches the wrapped PJRT objects (compile in
-// `Runtime::load`, execute + literal readback in `Executable::call`) holds
-// the process-wide XLA_LOCK, serializing all Rc refcount mutations and C
-// API calls. No other method exposes the inner xla types.
+// `Runtime::load`, execute + literal readback in `PjrtExecutable::call_refs`)
+// holds the process-wide XLA_LOCK, serializing all Rc refcount mutations and
+// C API calls. No other method exposes the inner xla types.
 unsafe impl Send for RuntimeInner {}
 unsafe impl Sync for RuntimeInner {}
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
+unsafe impl Send for PjrtExecutable {}
+unsafe impl Sync for PjrtExecutable {}
 
 /// A compiled HLO module ready to execute.
-pub struct Executable {
+pub struct PjrtExecutable {
     exe: xla::PjRtLoadedExecutable,
     /// Human-readable identity for error messages.
     name: String,
     /// Cumulative execution statistics (perf pass).
     stats: Mutex<ExecStats>,
-}
-
-#[derive(Default, Clone, Copy, Debug)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_ns: u64,
 }
 
 impl Runtime {
@@ -78,11 +107,9 @@ impl Runtime {
     }
 
     /// Load + compile an HLO text file, memoized on the canonical path.
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<PjrtExecutable>> {
         let path = path.as_ref();
-        let key = path
-            .canonicalize()
-            .unwrap_or_else(|_| path.to_path_buf());
+        let key = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
         if let Some(exe) = self.inner.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
@@ -101,16 +128,12 @@ impl Runtime {
             path.display(),
             t0.elapsed().as_secs_f64() * 1e3
         );
-        let exe = Arc::new(Executable {
+        let exe = Arc::new(PjrtExecutable {
             exe,
             name: path.display().to_string(),
             stats: Mutex::new(ExecStats::default()),
         });
-        self.inner
-            .cache
-            .lock()
-            .unwrap()
-            .insert(key, exe.clone());
+        self.inner.cache.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -120,34 +143,70 @@ impl Runtime {
     }
 }
 
-impl Executable {
+/// Build a device literal from a host tensor.
+fn to_literal(t: &TensorView) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => {
+            if t.shape.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::vec1(v)
+        }
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {:?}: {e:?}", t.shape))
+}
+
+/// Read a device literal back into a host tensor.
+fn from_literal(lit: xla::Literal) -> Result<TensorView> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => Data::F32(
+            lit.to_vec::<f32>()
+                .map_err(|e| anyhow!("reading f32 literal: {e:?}"))?,
+        ),
+        xla::ElementType::S32 => Data::I32(
+            lit.to_vec::<i32>()
+                .map_err(|e| anyhow!("reading i32 literal: {e:?}"))?,
+        ),
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    };
+    Ok(TensorView { shape: dims, data })
+}
+
+impl Executable for PjrtExecutable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
     /// Execute with f32/i32 tensor inputs; returns all outputs of the
-    /// module's result tuple as [`TensorView`]s (host copies).
+    /// module's result tuple as host tensors.
     ///
     /// Every artifact is lowered with `return_tuple=True`, so the single
     /// output buffer is always a tuple literal — including 1-output
     /// modules.
-    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<TensorView>> {
-        self.call_impl(|exe| exe.execute::<xla::Literal>(inputs))
-    }
+    fn call_refs(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| to_literal(t).with_context(|| format!("{}: input {i}", self.name)))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
 
-    /// Like [`Executable::call`] but borrowing the input literals — lets
-    /// hot paths keep device-format copies of loop-invariant inputs (e.g.
-    /// network parameters between PPO updates) instead of re-copying them
-    /// every call (§Perf).
-    pub fn call_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<TensorView>> {
-        self.call_impl(|exe| exe.execute::<&xla::Literal>(inputs))
-    }
-
-    fn call_impl<F>(&self, run: F) -> Result<Vec<TensorView>>
-    where
-        F: FnOnce(
-            &xla::PjRtLoadedExecutable,
-        ) -> std::result::Result<Vec<Vec<xla::PjRtBuffer>>, xla::Error>,
-    {
         let t0 = Instant::now();
         let _xla = XLA_LOCK.lock().unwrap();
-        let result = run(&self.exe).map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
         let buf = result
             .first()
             .and_then(|r| r.first())
@@ -161,10 +220,7 @@ impl Executable {
         let views = parts
             .into_iter()
             .enumerate()
-            .map(|(i, l)| {
-                TensorView::from_literal(l)
-                    .with_context(|| format!("{}: output {i}", self.name))
-            })
+            .map(|(i, l)| from_literal(l).with_context(|| format!("{}: output {i}", self.name)))
             .collect::<Result<Vec<_>>>()?;
         let dt = t0.elapsed().as_nanos() as u64;
         let mut s = self.stats.lock().unwrap();
@@ -173,11 +229,7 @@ impl Executable {
         Ok(views)
     }
 
-    pub fn stats(&self) -> ExecStats {
+    fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
-    }
-
-    pub fn name(&self) -> &str {
-        &self.name
     }
 }

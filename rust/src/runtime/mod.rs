@@ -1,16 +1,28 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the request/training path.
+//! The runtime layer: pluggable execution of the AOT artifacts produced by
+//! `python/compile/aot.py`.
 //!
-//! * [`client`] — the PJRT CPU client plus an executable cache (each HLO
-//!   module is parsed + compiled exactly once per process).
+//! * [`backend`] — the [`backend::Backend`] / [`backend::Executable`] seam
+//!   every execution substrate implements.
+//! * [`native`] — the default pure-Rust interpreter: executes the
+//!   actor/critic/autoencoder artifacts from flat-f32 weights and manifest
+//!   layouts, fully offline.
+//! * `client` (cargo feature `xla-pjrt`) — the PJRT CPU client plus an
+//!   executable cache (each HLO module is parsed + compiled exactly once
+//!   per process); required for the CNN backbone segments.
 //! * [`artifacts`] — the `artifacts/manifest.json` index: artifact names,
-//!   I/O signatures, network parameter layouts, model/weight metadata.
-//! * [`tensor`] — `Vec<f32>` ⇄ `xla::Literal` conversion helpers with shape
-//!   checks at the boundary.
+//!   I/O signatures, network parameter layouts, model/weight metadata,
+//!   plus the built-in native demo manifest.
+//! * [`spec`] — flat-parameter layouts (the Rust `ParamSpec` mirror).
+//! * [`tensor`] — the host tensors crossing the backend boundary, with
+//!   shape checks at the edge.
 //! * [`nets`] — typed handles over the actor/critic artifacts (forward and
-//!   PPO-update calls) and backbone/AE segment executables.
+//!   PPO-update calls).
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "xla-pjrt")]
 pub mod client;
+pub mod native;
 pub mod nets;
+pub mod spec;
 pub mod tensor;

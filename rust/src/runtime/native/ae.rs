@@ -1,0 +1,142 @@
+//! Native execution of the autoencoder compressor artifacts
+//! (`{model}_ae_enc_p{i}` / `{model}_ae_dec_p{i}`): 1x1-conv channel
+//! reduce/restore + Eq. (1)/(2) quantization, mirroring
+//! `python/compile/autoencoder.py` `encode`/`decode` over the flat weight
+//! layout (`w_enc, b_enc, w_dec, b_dec`).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::kernels::{conv1x1, dequantize, quantize};
+use super::{expect_inputs, f32_in, scalar_in};
+use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::tensor::TensorView;
+
+/// A (model, partition-point) AE compressor resolved from the manifest:
+/// feature geometry, reduced channels and quantization bit-width.
+pub(super) struct AeProgram {
+    ch: usize,
+    ch_r: usize,
+    h: usize,
+    w: usize,
+    bits: usize,
+    weights_len: usize,
+}
+
+impl AeProgram {
+    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<AeProgram> {
+        let bits = meta.bits.ok_or_else(|| {
+            anyhow!("no quantization bit-width attached (manifest models section missing?)")
+        })?;
+        if bits == 0 || bits > 16 {
+            bail!("bit-width {bits} out of range 1..=16");
+        }
+        // enc: inputs [ae_weights, feature(1,ch,h,w)], outputs [codes(1,ch_r,h,w), lo, hi]
+        // dec: inputs [ae_weights, codes(1,ch_r,h,w), lo, hi], outputs [feature(1,ch,h,w)]
+        let is_enc = meta.name.contains("_ae_enc_p");
+        let weights_len: usize = meta
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("missing ae_weights input spec"))?
+            .shape
+            .iter()
+            .product();
+        let (feat_shape, codes_shape) = if is_enc {
+            (
+                meta.inputs.get(1).map(|io| io.shape.clone()),
+                meta.outputs.first().map(|io| io.shape.clone()),
+            )
+        } else {
+            (
+                meta.outputs.first().map(|io| io.shape.clone()),
+                meta.inputs.get(1).map(|io| io.shape.clone()),
+            )
+        };
+        let feat = feat_shape.ok_or_else(|| anyhow!("missing feature I/O spec"))?;
+        let codes = codes_shape.ok_or_else(|| anyhow!("missing codes I/O spec"))?;
+        if feat.len() != 4 || codes.len() != 4 || feat[2] != codes[2] || feat[3] != codes[3] {
+            bail!("unexpected AE I/O shapes (feature {feat:?}, codes {codes:?})");
+        }
+        let prog = AeProgram {
+            ch: feat[1],
+            ch_r: codes[1],
+            h: feat[2],
+            w: feat[3],
+            bits,
+            weights_len,
+        };
+        let expect = prog.ch * prog.ch_r + prog.ch_r + prog.ch_r * prog.ch + prog.ch;
+        if weights_len != expect {
+            bail!(
+                "ae weight vector has {weights_len} values, layout needs {expect} \
+                 (ch={}, ch'={})",
+                prog.ch,
+                prog.ch_r
+            );
+        }
+        Ok(prog)
+    }
+
+    /// Offsets of (w_enc, b_enc, w_dec, b_dec) in the flat weight vector —
+    /// the `ae_flatten` order of python/compile/autoencoder.py.
+    fn split<'a>(&self, weights: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (c, cr) = (self.ch, self.ch_r);
+        let w_enc = &weights[0..c * cr];
+        let b_enc = &weights[c * cr..c * cr + cr];
+        let o = c * cr + cr;
+        let w_dec = &weights[o..o + cr * c];
+        let b_dec = &weights[o + cr * c..o + cr * c + c];
+        (w_enc, b_enc, w_dec, b_dec)
+    }
+
+    fn check_weights<'a>(&self, inputs: &'a [&TensorView], what: &str) -> Result<&'a [f32]> {
+        let weights = f32_in(inputs, 0, what)?;
+        if weights.len() != self.weights_len {
+            bail!(
+                "{what}: expected {} AE weights, got {}",
+                self.weights_len,
+                weights.len()
+            );
+        }
+        Ok(weights)
+    }
+
+    /// UE side: `(ae_weights, feature) -> (codes, lo, hi)`.
+    pub(super) fn run_encode(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let what = "ae_enc";
+        expect_inputs(inputs, 2, what)?;
+        let weights = self.check_weights(inputs, what)?;
+        let feat = f32_in(inputs, 1, what)?;
+        let hw = self.h * self.w;
+        if feat.len() != self.ch * hw {
+            bail!("{what}: feature has {} values, expected {}", feat.len(), self.ch * hw);
+        }
+        let (w_enc, b_enc, _, _) = self.split(weights);
+        let z = conv1x1(feat, 1, self.ch, self.h, self.w, w_enc, b_enc, self.ch_r);
+        let lo = z.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let codes = quantize(&z, lo, hi, self.bits);
+        Ok(vec![
+            TensorView::f32(codes, vec![1, self.ch_r, self.h, self.w])?,
+            TensorView::from_scalar(lo),
+            TensorView::from_scalar(hi),
+        ])
+    }
+
+    /// Edge side: `(ae_weights, codes, lo, hi) -> (feature',)`.
+    pub(super) fn run_decode(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let what = "ae_dec";
+        expect_inputs(inputs, 4, what)?;
+        let weights = self.check_weights(inputs, what)?;
+        let codes = f32_in(inputs, 1, what)?;
+        let lo = scalar_in(inputs, 2, what)?;
+        let hi = scalar_in(inputs, 3, what)?;
+        let hw = self.h * self.w;
+        if codes.len() != self.ch_r * hw {
+            bail!("{what}: codes have {} values, expected {}", codes.len(), self.ch_r * hw);
+        }
+        let (_, _, w_dec, b_dec) = self.split(weights);
+        let z = dequantize(codes, lo, hi, self.bits);
+        let feat = conv1x1(&z, 1, self.ch_r, self.h, self.w, w_dec, b_dec, self.ch);
+        Ok(vec![TensorView::f32(feat, vec![1, self.ch, self.h, self.w])?])
+    }
+}

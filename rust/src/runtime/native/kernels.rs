@@ -1,0 +1,361 @@
+//! Pure-Rust ports of the three Pallas kernels (L1): fused dense
+//! (matmul + bias + activation), 1x1-conv channel mix, and fixed-point
+//! quantize/dequantize.
+//!
+//! Semantics match `python/compile/kernels/ref.py` — the correctness
+//! oracles the Pallas kernels themselves are tested against — including
+//! round-half-to-even in [`quantize`] (jnp.round) and the `1e-12` span
+//! floor of Eq. (1). The golden fixtures in the tests below were generated
+//! from ref.py, so any drift between the Rust and Pallas kernels fails
+//! loudly here.
+
+/// Activation fused into the dense epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Tanh,
+    Relu,
+}
+
+/// `y = act(x @ w + b)` — x: (rows, in_dim) row-major, w: (in_dim,
+/// out_dim), b: (out_dim,). Mirrors `dense_ref`.
+pub fn dense(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * in_dim);
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(b.len(), out_dim);
+    let mut out = vec![0.0f32; rows * out_dim];
+    for r in 0..rows {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let yr = &mut out[r * out_dim..(r + 1) * out_dim];
+        yr.copy_from_slice(b);
+        for (k, &xv) in xr.iter().enumerate() {
+            let wr = &w[k * out_dim..(k + 1) * out_dim];
+            for (y, &wv) in yr.iter_mut().zip(wr) {
+                *y += xv * wv;
+            }
+        }
+        match act {
+            Act::Linear => {}
+            Act::Tanh => {
+                for y in yr.iter_mut() {
+                    *y = y.tanh();
+                }
+            }
+            Act::Relu => {
+                for y in yr.iter_mut() {
+                    *y = y.max(0.0);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `dX = dY @ Wᵀ` — dy: (rows, out_dim), w: (in_dim, out_dim) →
+/// (rows, in_dim). The backward-data matmul of the dense kernel.
+pub fn matmul_bt(dy: &[f32], rows: usize, out_dim: usize, w: &[f32], in_dim: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), rows * out_dim);
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    let mut dx = vec![0.0f32; rows * in_dim];
+    for r in 0..rows {
+        let dyr = &dy[r * out_dim..(r + 1) * out_dim];
+        let dxr = &mut dx[r * in_dim..(r + 1) * in_dim];
+        for (k, slot) in dxr.iter_mut().enumerate() {
+            let wr = &w[k * out_dim..(k + 1) * out_dim];
+            let mut acc = 0.0f32;
+            for (&d, &wv) in dyr.iter().zip(wr) {
+                acc += d * wv;
+            }
+            *slot = acc;
+        }
+    }
+    dx
+}
+
+/// Row-wise softmax in place (max-subtracted, exactly `_softmax` in
+/// python/compile/actor_critic.py).
+pub fn softmax_rows(z: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(z.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut z[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// 1x1 convolution == per-pixel channel mix (conv1x1_ref): x (N, C, H, W),
+/// w (C, C'), b (C',) → (N, C', H, W). The paper's Sec. 2.2
+/// channel-reduction encoder/decoder.
+pub fn conv1x1(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wmat: &[f32],
+    b: &[f32],
+    c_out: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * c_in * h * w);
+    debug_assert_eq!(wmat.len(), c_in * c_out);
+    debug_assert_eq!(b.len(), c_out);
+    let hw = h * w;
+    let mut out = vec![0.0f32; n * c_out * hw];
+    for im in 0..n {
+        for co in 0..c_out {
+            let dst = &mut out[(im * c_out + co) * hw..(im * c_out + co + 1) * hw];
+            dst.fill(b[co]);
+            for ci in 0..c_in {
+                let wv = wmat[ci * c_out + co];
+                let src = &x[(im * c_in + ci) * hw..(im * c_in + ci + 1) * hw];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += wv * s;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Round half to even, matching `jnp.round` (IEEE 754 roundTiesToEven)
+/// rather than Rust's round-half-away-from-zero.
+fn round_ties_even(v: f32) -> f32 {
+    let r = v.round();
+    if (r - v).abs() == 0.5 {
+        let t = v.trunc();
+        if (t as i64) % 2 == 0 {
+            t
+        } else {
+            t + v.signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Paper Eq. (1), `quantize_ref`: `y_i = round((2^cq − 1)(clip(x_i) − lo)
+/// / max(hi − lo, 1e-12))`. Codes are returned as f32 integers, exactly as
+/// the AOT encode artifact emits them.
+pub fn quantize(x: &[f32], lo: f32, hi: f32, bits: usize) -> Vec<f32> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let span = (hi - lo).max(1e-12);
+    x.iter()
+        .map(|&v| round_ties_even(levels * (v.clamp(lo, hi) - lo) / span))
+        .collect()
+}
+
+/// Paper Eq. (2), `dequantize_ref`: `x'_i = y_i (hi − lo) / (2^cq − 1) + lo`.
+pub fn dequantize(y: &[f32], lo: f32, hi: f32, bits: usize) -> Vec<f32> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    y.iter().map(|&q| q * (hi - lo) / levels + lo).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_close;
+
+    // Golden fixtures generated from python/compile/kernels/ref.py
+    // (dense_ref / conv1x1_ref / quantize_ref / dequantize_ref) with
+    // numpy default_rng(7) inputs — see DESIGN.md §Kernel-Parity.
+    const X: &[f32] = &[
+        0.001230153371579945,
+        0.2987455427646637,
+        -0.27413785457611084,
+        -0.8905918598175049,
+        -0.454670786857605,
+        -0.9916465282440186,
+    ];
+    const W: &[f32] = &[
+        0.0601436011493206,
+        1.3402152061462402,
+        -0.49220651388168335,
+        -0.6204748749732971,
+        0.4898420572280884,
+        0.35688701272010803,
+        0.1054142490029335,
+        -0.9304680228233337,
+        -0.02925182320177555,
+        0.695303201675415,
+        -1.3442145586013794,
+        -0.45761576294898987,
+    ];
+    const B: &[f32] = &[
+        -1.9012227058410645,
+        -1.289537787437439,
+        -1.8417350053787231,
+        -0.23509113490581512,
+    ];
+    const Y_LINEAR: &[f32] = &[
+        -1.7467916011810303,
+        -1.3718795776367188,
+        -1.4423483610153198,
+        -0.3883777856826782,
+        -2.1484954357147217,
+        -3.334883689880371,
+        -0.11832296848297119,
+        1.1943484544754028,
+    ];
+    const Y_TANH: &[f32] = &[
+        -0.9410092234611511,
+        -0.879119873046875,
+        -0.8941695094108582,
+        -0.3699609041213989,
+        -0.9731465578079224,
+        -0.9974657893180847,
+        -0.11777384579181671,
+        0.8319226503372192,
+    ];
+    const Y_RELU: &[f32] = &[0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.1943484544754028];
+
+    const XC: &[f32] = &[
+        -1.267446517944336,
+        0.27126434445381165,
+        0.15675108134746552,
+        -0.18693093955516815,
+        -2.5167596340179443,
+        -0.5386928915977478,
+        -0.048500943928956985,
+        0.11330898851156235,
+        -1.5301357507705688,
+        -0.47775328159332275,
+        -0.978519082069397,
+        -0.8088372349739075,
+    ];
+    const WC: &[f32] = &[
+        1.0608986616134644,
+        -0.8075346946716309,
+        -0.03252170607447624,
+        0.8843898773193359,
+        -0.5836004614830017,
+        -0.11170195043087006,
+    ];
+    const BC: &[f32] = &[0.11046414077281952, 0.06378177553415298];
+    const YC: &[f32] = &[
+        -0.2593308687210083,
+        0.6945843696594238,
+        0.849402666091919,
+        0.3805021643638611,
+        -0.9675887227058411,
+        -0.578322172164917,
+        0.003608591854572296,
+        0.40529298782348633,
+    ];
+
+    const XQ: &[f32] = &[-1.5, -0.20000000298023224, 0.0, 0.30000001192092896, 0.7699999809265137, 1.2000000476837158, 2.0, 5.0];
+    const Q3: &[f32] = &[0.0, 2.0, 2.0, 3.0, 4.0, 5.0, 7.0, 7.0];
+    const D3: &[f32] = &[
+        -1.0,
+        -0.1428571343421936,
+        -0.1428571343421936,
+        0.2857142686843872,
+        0.7142857313156128,
+        1.1428570747375488,
+        2.0,
+        2.0,
+    ];
+    const Q8: &[f32] = &[0.0, 68.0, 85.0, 110.0, 150.0, 187.0, 255.0, 255.0];
+    const D8: &[f32] = &[
+        -1.0,
+        -0.19999998807907104,
+        0.0,
+        0.29411768913269043,
+        0.7647058963775635,
+        1.2000000476837158,
+        2.0,
+        2.0,
+    ];
+
+    #[test]
+    fn dense_matches_ref_goldens() {
+        for (act, golden) in [
+            (Act::Linear, Y_LINEAR),
+            (Act::Tanh, Y_TANH),
+            (Act::Relu, Y_RELU),
+        ] {
+            let y = dense(X, 2, 3, W, B, 4, act);
+            assert_close(&y, golden, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn conv1x1_matches_ref_golden() {
+        let y = conv1x1(XC, 1, 3, 2, 2, WC, BC, 2);
+        assert_close(&y, YC, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn quantize_matches_ref_goldens() {
+        for (bits, q_golden, d_golden) in [(3usize, Q3, D3), (8, Q8, D8)] {
+            let q = quantize(XQ, -1.0, 2.0, bits);
+            assert_close(&q, q_golden, 0.0, 0.0).unwrap();
+            let d = dequantize(&q, -1.0, 2.0, bits);
+            assert_close(&d, d_golden, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn quantize_matches_wire_quantizer() {
+        // the native kernel and the wire-format Quantizer (compress/quant)
+        // implement the same Eq. (1)/(2) and must agree elementwise on
+        // non-tie inputs
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+        let (lo, hi) = (-1.7f32, 1.9f32);
+        for bits in [3usize, 5, 8, 11] {
+            let q = crate::compress::quant::Quantizer::new(bits as u32).unwrap();
+            let wire = q.quantize(&xs, lo, hi);
+            let native = quantize(&xs, lo, hi, bits);
+            for (a, b) in wire.iter().zip(&native) {
+                assert_eq!(*a as f32, *b);
+            }
+            let back_wire = q.dequantize(&wire, lo, hi);
+            let back_native = dequantize(&native, lo, hi, bits);
+            assert_close(&back_native, &back_wire, 1e-6, 0.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn round_half_even_cases() {
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.4), 2.0);
+        assert_eq!(round_ties_even(2.6), 3.0);
+    }
+
+    #[test]
+    fn matmul_bt_is_transpose_contraction() {
+        // dy (1,2) @ wᵀ where w (3,2): dx_k = Σ_o dy_o w[k,o]
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let dy = [10.0f32, 100.0];
+        let dx = matmul_bt(&dy, 1, 2, &w, 3);
+        assert_eq!(dx, vec![210.0, 430.0, 650.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut z = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut z, 2, 3);
+        for r in 0..2 {
+            let s: f32 = z[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(z[2] > z[1] && z[1] > z[0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! The pure-Rust inference backend (default).
+//!
+//! Executes the actor / critic / autoencoder artifacts directly from their
+//! flat-f32 weights and manifest layouts — no PJRT, no HLO files, fully
+//! offline. The three Pallas kernels every artifact lowers through
+//! ([`kernels::dense`], [`kernels::conv1x1`], [`kernels::quantize`] /
+//! [`kernels::dequantize`]) are ported 1:1 from
+//! `python/compile/kernels/ref.py`, and the RL forward/backward/Adam math
+//! mirrors `python/compile/actor_critic.py` (validated against `jax.grad`
+//! — see DESIGN.md §Kernel-Parity).
+//!
+//! CNN backbone segments (`*_full_*`, `*_front_*`, `*_back_*`) are not
+//! interpreted natively; they require the PJRT backend (`--features
+//! xla-pjrt` plus the real `xla` crate).
+
+pub mod kernels;
+
+mod ae;
+mod rl;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::ArtifactMeta;
+use super::backend::{Backend, ExecStats, Executable};
+use super::tensor::TensorView;
+
+use ae::AeProgram;
+use rl::{ActorProgram, CriticProgram};
+
+/// The pure-Rust interpreter backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn load(&self, meta: &ArtifactMeta) -> Result<Arc<dyn Executable>> {
+        let program = Program::from_meta(meta)
+            .with_context(|| format!("building native program for '{}'", meta.name))?;
+        Ok(Arc::new(NativeExecutable {
+            name: meta.name.clone(),
+            program,
+            stats: Mutex::new(ExecStats::default()),
+        }))
+    }
+}
+
+/// What a given artifact computes, decided from its manifest entry.
+enum Program {
+    ActorFwd(ActorProgram),
+    ActorUpdate(ActorProgram),
+    CriticFwd(CriticProgram),
+    CriticUpdate(CriticProgram),
+    AeEncode(AeProgram),
+    AeDecode(AeProgram),
+}
+
+impl Program {
+    fn from_meta(meta: &ArtifactMeta) -> Result<Program> {
+        let name = meta.name.as_str();
+        if name.starts_with("actor_fwd_") {
+            return Ok(Program::ActorFwd(ActorProgram::from_meta(meta)?));
+        }
+        if name.starts_with("actor_update_") {
+            return Ok(Program::ActorUpdate(ActorProgram::from_meta(meta)?));
+        }
+        if name.starts_with("critic_fwd_") {
+            return Ok(Program::CriticFwd(CriticProgram::from_meta(meta)?));
+        }
+        if name.starts_with("critic_update_") {
+            return Ok(Program::CriticUpdate(CriticProgram::from_meta(meta)?));
+        }
+        if name.contains("_ae_enc_p") {
+            return Ok(Program::AeEncode(AeProgram::from_meta(meta)?));
+        }
+        if name.contains("_ae_dec_p") {
+            return Ok(Program::AeDecode(AeProgram::from_meta(meta)?));
+        }
+        bail!(
+            "artifact '{name}' has no native program (CNN backbone segments need the PJRT \
+             backend: build with --features xla-pjrt and MACCI_BACKEND=xla)"
+        )
+    }
+
+    fn run(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        match self {
+            Program::ActorFwd(p) => p.run_forward(inputs),
+            Program::ActorUpdate(p) => p.run_update(inputs),
+            Program::CriticFwd(p) => p.run_forward(inputs),
+            Program::CriticUpdate(p) => p.run_update(inputs),
+            Program::AeEncode(p) => p.run_encode(inputs),
+            Program::AeDecode(p) => p.run_decode(inputs),
+        }
+    }
+}
+
+struct NativeExecutable {
+    name: String,
+    program: Program,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executable for NativeExecutable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn call_refs(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let t0 = Instant::now();
+        let out = self
+            .program
+            .run(inputs)
+            .with_context(|| format!("executing {} (native)", self.name))?;
+        let dt = t0.elapsed().as_nanos() as u64;
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_ns += dt;
+        Ok(out)
+    }
+
+    fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+// ------------------------------------------------------- input helpers
+pub(crate) fn expect_inputs(inputs: &[&TensorView], n: usize, what: &str) -> Result<()> {
+    if inputs.len() != n {
+        bail!("{what}: expected {n} inputs, got {}", inputs.len());
+    }
+    Ok(())
+}
+
+pub(crate) fn f32_in<'a>(inputs: &'a [&TensorView], idx: usize, what: &str) -> Result<&'a [f32]> {
+    inputs
+        .get(idx)
+        .ok_or_else(|| anyhow!("{what}: missing input {idx}"))?
+        .f32s()
+        .with_context(|| format!("{what}: input {idx}"))
+}
+
+pub(crate) fn i32_in<'a>(inputs: &'a [&TensorView], idx: usize, what: &str) -> Result<&'a [i32]> {
+    inputs
+        .get(idx)
+        .ok_or_else(|| anyhow!("{what}: missing input {idx}"))?
+        .i32s()
+        .with_context(|| format!("{what}: input {idx}"))
+}
+
+pub(crate) fn scalar_in(inputs: &[&TensorView], idx: usize, what: &str) -> Result<f32> {
+    inputs
+        .get(idx)
+        .ok_or_else(|| anyhow!("{what}: missing input {idx}"))?
+        .scalar()
+        .with_context(|| format!("{what}: input {idx}"))
+}

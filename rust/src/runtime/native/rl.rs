@@ -1,0 +1,667 @@
+//! Native execution of the actor / critic artifacts: the same networks,
+//! losses, gradients and Adam updates `python/compile/actor_critic.py`
+//! lowers to HLO, re-derived in Rust from the manifest's flat-parameter
+//! layout.
+//!
+//! The hand-written backward pass was validated elementwise against
+//! `jax.grad` of the Python losses (forward probabilities, one full Adam
+//! step of both networks agree to f32 precision — DESIGN.md
+//! §Kernel-Parity), so the native and PJRT backends train identically up
+//! to float rounding.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::kernels::{dense, matmul_bt, softmax_rows, Act};
+use super::{expect_inputs, f32_in, i32_in, scalar_in};
+use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::spec::{spec_entry, spec_size, SpecEntry};
+use crate::runtime::tensor::TensorView;
+
+// PPO / entropy constants — defaults of `actor_update` in
+// python/compile/actor_critic.py.
+const CLIP_EPS: f32 = 0.2;
+const ENTROPY_COEF: f32 = 0.001;
+const PROB_FLOOR: f32 = 1e-8;
+const LOG_STD_MIN: f32 = -4.0;
+const LOG_STD_MAX: f32 = 1.0;
+const LOG_2PI: f32 = 1.837_877_1;
+
+// Adam constants — python/compile/common.py `adam_step`.
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// One named segment of the flat parameter vector.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    off: usize,
+    len: usize,
+}
+
+fn slot(spec: &[SpecEntry], name: &str) -> Result<(Slot, Vec<usize>)> {
+    let e = spec_entry(spec, name)?;
+    Ok((
+        Slot {
+            off: e.offset,
+            len: e.count,
+        },
+        e.shape.clone(),
+    ))
+}
+
+fn seg<'a>(params: &'a [f32], s: Slot) -> &'a [f32] {
+    &params[s.off..s.off + s.len]
+}
+
+/// `dh *= 1 - h²` — tanh backward, elementwise.
+fn tanh_backward(dh: &mut [f32], h: &[f32]) {
+    for (d, &hv) in dh.iter_mut().zip(h) {
+        *d *= 1.0 - hv * hv;
+    }
+}
+
+/// Accumulate `dW += Xᵀ dY` and `db += colsum(dY)` straight into the flat
+/// gradient vector (slots may live anywhere in the layout, so index math
+/// instead of slice splitting).
+#[allow(clippy::too_many_arguments)]
+fn acc_into(
+    g: &mut [f32],
+    w: Slot,
+    b: Slot,
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    dy: &[f32],
+    out_dim: usize,
+) {
+    for r in 0..rows {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let dyr = &dy[r * out_dim..(r + 1) * out_dim];
+        for (k, &xv) in xr.iter().enumerate() {
+            let base = w.off + k * out_dim;
+            for (o, &d) in dyr.iter().enumerate() {
+                g[base + o] += xv * d;
+            }
+        }
+        for (o, &d) in dyr.iter().enumerate() {
+            g[b.off + o] += d;
+        }
+    }
+}
+
+/// One Adam step on flat vectors (`t` is the 1-based step count as f32).
+fn adam_step(
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    v: &[f32],
+    t: f32,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let n = p.len();
+    let mut p2 = vec![0.0f32; n];
+    let mut m2 = vec![0.0f32; n];
+    let mut v2 = vec![0.0f32; n];
+    for i in 0..n {
+        let mi = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        let vi = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        m2[i] = mi;
+        v2[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        p2[i] = p[i] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+    (p2, m2, v2)
+}
+
+// ===================================================================== actor
+
+/// Layout-resolved actor network (trunk 4N→t0→t1 tanh, three branch heads).
+pub(super) struct ActorProgram {
+    size: usize,
+    d: usize,
+    t0: usize,
+    t1: usize,
+    h: usize,
+    p: usize,
+    c: usize,
+    w_t0: Slot,
+    b_t0: Slot,
+    w_t1: Slot,
+    b_t1: Slot,
+    w_b0: Slot,
+    b_b0: Slot,
+    w_b1: Slot,
+    b_b1: Slot,
+    w_c0: Slot,
+    b_c0: Slot,
+    w_c1: Slot,
+    b_c1: Slot,
+    w_p0: Slot,
+    b_p0: Slot,
+    w_p1: Slot,
+    b_p1_mu: Slot,
+    b_p1_ls: Slot,
+}
+
+/// Forward activations kept for the backward pass.
+struct ActorCache {
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    hb: Vec<f32>,
+    hc: Vec<f32>,
+    hp: Vec<f32>,
+    probs_b: Vec<f32>,
+    probs_c: Vec<f32>,
+    mu: Vec<f32>,
+    ls_raw: Vec<f32>,
+    log_std: Vec<f32>,
+}
+
+impl ActorProgram {
+    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<ActorProgram> {
+        let spec = meta.spec.as_ref().ok_or_else(|| {
+            anyhow!("no parameter layout attached (manifest rl.specs entry missing?)")
+        })?;
+        let (w_t0, s_t0) = slot(spec, "w_t0")?;
+        let (w_t1, s_t1) = slot(spec, "w_t1")?;
+        let (w_b0, s_b0) = slot(spec, "w_b0")?;
+        let (w_b1, s_b1) = slot(spec, "w_b1")?;
+        let (w_c1, s_c1) = slot(spec, "w_c1")?;
+        if s_t0.len() != 2 || s_t1.len() != 2 || s_b0.len() != 2 || s_b1.len() != 2 || s_c1.len() != 2
+        {
+            bail!("unexpected actor layout shapes");
+        }
+        let prog = ActorProgram {
+            size: spec_size(spec),
+            d: s_t0[0],
+            t0: s_t0[1],
+            t1: s_t1[1],
+            h: s_b0[1],
+            p: s_b1[1],
+            c: s_c1[1],
+            w_t0,
+            b_t0: slot(spec, "b_t0")?.0,
+            w_t1,
+            b_t1: slot(spec, "b_t1")?.0,
+            w_b0,
+            b_b0: slot(spec, "b_b0")?.0,
+            w_b1,
+            b_b1: slot(spec, "b_b1")?.0,
+            w_c0: slot(spec, "w_c0")?.0,
+            b_c0: slot(spec, "b_c0")?.0,
+            w_c1,
+            b_c1: slot(spec, "b_c1")?.0,
+            w_p0: slot(spec, "w_p0")?.0,
+            b_p0: slot(spec, "b_p0")?.0,
+            w_p1: slot(spec, "w_p1")?.0,
+            b_p1_mu: slot(spec, "b_p1_mu")?.0,
+            b_p1_ls: slot(spec, "b_p1_log_std")?.0,
+        };
+        Ok(prog)
+    }
+
+    fn forward(&self, params: &[f32], state: &[f32], b: usize) -> ActorCache {
+        let h0 = dense(
+            state,
+            b,
+            self.d,
+            seg(params, self.w_t0),
+            seg(params, self.b_t0),
+            self.t0,
+            Act::Tanh,
+        );
+        let h1 = dense(
+            &h0,
+            b,
+            self.t0,
+            seg(params, self.w_t1),
+            seg(params, self.b_t1),
+            self.t1,
+            Act::Tanh,
+        );
+
+        let hb = dense(
+            &h1,
+            b,
+            self.t1,
+            seg(params, self.w_b0),
+            seg(params, self.b_b0),
+            self.h,
+            Act::Tanh,
+        );
+        let mut probs_b = dense(
+            &hb,
+            b,
+            self.h,
+            seg(params, self.w_b1),
+            seg(params, self.b_b1),
+            self.p,
+            Act::Linear,
+        );
+        softmax_rows(&mut probs_b, b, self.p);
+
+        let hc = dense(
+            &h1,
+            b,
+            self.t1,
+            seg(params, self.w_c0),
+            seg(params, self.b_c0),
+            self.h,
+            Act::Tanh,
+        );
+        let mut probs_c = dense(
+            &hc,
+            b,
+            self.h,
+            seg(params, self.w_c1),
+            seg(params, self.b_c1),
+            self.c,
+            Act::Linear,
+        );
+        softmax_rows(&mut probs_c, b, self.c);
+
+        let hp = dense(
+            &h1,
+            b,
+            self.t1,
+            seg(params, self.w_p0),
+            seg(params, self.b_p0),
+            self.h,
+            Act::Tanh,
+        );
+        let bias_p = [params[self.b_p1_mu.off], params[self.b_p1_ls.off]];
+        let mu_std = dense(&hp, b, self.h, seg(params, self.w_p1), &bias_p, 2, Act::Linear);
+        let mut mu = vec![0.0f32; b];
+        let mut ls_raw = vec![0.0f32; b];
+        let mut log_std = vec![0.0f32; b];
+        for i in 0..b {
+            mu[i] = mu_std[2 * i];
+            ls_raw[i] = mu_std[2 * i + 1];
+            log_std[i] = ls_raw[i].clamp(LOG_STD_MIN, LOG_STD_MAX);
+        }
+        ActorCache {
+            h0,
+            h1,
+            hb,
+            hc,
+            hp,
+            probs_b,
+            probs_c,
+            mu,
+            ls_raw,
+            log_std,
+        }
+    }
+
+    fn check_params<'a>(&self, inputs: &'a [&TensorView], what: &str) -> Result<&'a [f32]> {
+        let params = f32_in(inputs, 0, what)?;
+        if params.len() != self.size {
+            bail!("{what}: expected {} parameters, got {}", self.size, params.len());
+        }
+        Ok(params)
+    }
+
+    /// `(params, state) -> (probs_b, probs_c, mu, log_std)`.
+    pub(super) fn run_forward(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        expect_inputs(inputs, 2, "actor_fwd")?;
+        let params = self.check_params(inputs, "actor_fwd")?;
+        let state = f32_in(inputs, 1, "actor_fwd")?;
+        if state.is_empty() || state.len() % self.d != 0 {
+            bail!("actor_fwd: state length {} not a multiple of {}", state.len(), self.d);
+        }
+        let b = state.len() / self.d;
+        let cache = self.forward(params, state, b);
+        Ok(vec![
+            TensorView::f32(cache.probs_b, vec![b, self.p])?,
+            TensorView::f32(cache.probs_c, vec![b, self.c])?,
+            TensorView::f32(cache.mu, vec![b, 1])?,
+            TensorView::f32(cache.log_std, vec![b, 1])?,
+        ])
+    }
+
+    /// One PPO-clip + entropy-bonus + Adam minibatch step:
+    /// `(params, m, v, t, lr, state, a_b, a_c, a_p, old_logp, adv)
+    ///  -> (params', m', v', loss, entropy, clip_frac)`.
+    pub(super) fn run_update(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let what = "actor_update";
+        expect_inputs(inputs, 11, what)?;
+        let params = self.check_params(inputs, what)?;
+        let m = f32_in(inputs, 1, what)?;
+        let v = f32_in(inputs, 2, what)?;
+        let t = scalar_in(inputs, 3, what)?;
+        let lr = scalar_in(inputs, 4, what)?;
+        let state = f32_in(inputs, 5, what)?;
+        let a_b = i32_in(inputs, 6, what)?;
+        let a_c = i32_in(inputs, 7, what)?;
+        let a_p = f32_in(inputs, 8, what)?;
+        let old_logp = f32_in(inputs, 9, what)?;
+        let adv = f32_in(inputs, 10, what)?;
+        let b = a_b.len();
+        if b == 0 || state.len() != b * self.d {
+            bail!("{what}: state length {} vs batch {b} x dim {}", state.len(), self.d);
+        }
+        if m.len() != self.size || v.len() != self.size {
+            bail!("{what}: Adam state size mismatch");
+        }
+        if a_c.len() != b || a_p.len() != b || old_logp.len() != b || adv.len() != b {
+            bail!("{what}: ragged minibatch inputs");
+        }
+
+        let cache = self.forward(params, state, b);
+        let inv_b = 1.0 / b as f32;
+
+        // ---- hybrid log-prob, PPO ratio, loss scalars ----
+        let mut d_logp = vec![0.0f32; b];
+        let mut z = vec![0.0f32; b];
+        let mut std = vec![0.0f32; b];
+        let mut l_clip_sum = 0.0f32;
+        let mut ent_sum = 0.0f32;
+        let mut clip_count = 0usize;
+        for i in 0..b {
+            let jb = a_b[i] as usize;
+            let jc = a_c[i] as usize;
+            if jb >= self.p || jc >= self.c {
+                bail!("{what}: action ({jb},{jc}) out of range ({},{})", self.p, self.c);
+            }
+            let pb = &cache.probs_b[i * self.p..(i + 1) * self.p];
+            let pc = &cache.probs_c[i * self.c..(i + 1) * self.c];
+            std[i] = cache.log_std[i].exp();
+            z[i] = (a_p[i] - cache.mu[i]) / std[i];
+            let lp = pb[jb].clamp(PROB_FLOOR, 1.0).ln()
+                + pc[jc].clamp(PROB_FLOOR, 1.0).ln()
+                + (-0.5 * z[i] * z[i] - cache.log_std[i] - 0.5 * LOG_2PI);
+            let ratio = (lp - old_logp[i]).exp();
+            let surr1 = ratio * adv[i];
+            let surr2 = ratio.clamp(1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv[i];
+            l_clip_sum += surr1.min(surr2);
+            if (ratio - 1.0).abs() > CLIP_EPS {
+                clip_count += 1;
+            }
+            // d l_clip / d ratio: 1·adv on the unclipped branch
+            // (jnp.minimum picks the first arg on ties), 1{in clip range}·adv
+            // on the clipped one
+            let in_range = (1.0 - CLIP_EPS..=1.0 + CLIP_EPS).contains(&ratio);
+            let d_ratio = if surr1 <= surr2 || in_range {
+                adv[i] * inv_b
+            } else {
+                0.0
+            };
+            // loss = -(l_clip + coef * entropy)
+            d_logp[i] = -d_ratio * ratio;
+
+            // entropy (for the reported scalar)
+            let mut ent = 0.5 * (1.0 + LOG_2PI) + cache.log_std[i];
+            for &q in pb.iter().chain(pc.iter()) {
+                let qc = q.clamp(PROB_FLOOR, 1.0);
+                ent -= qc * qc.ln();
+            }
+            ent_sum += ent;
+        }
+        let loss = -(l_clip_sum * inv_b + ENTROPY_COEF * ent_sum * inv_b);
+        let entropy = ent_sum * inv_b;
+        let clip_frac = clip_count as f32 * inv_b;
+        let ent_coef_b = ENTROPY_COEF * inv_b;
+
+        // ---- gradients on the branch outputs ----
+        let mut d_logits_b = vec![0.0f32; b * self.p];
+        let mut d_logits_c = vec![0.0f32; b * self.c];
+        let mut dhdp = vec![0.0f32; self.p.max(self.c)];
+        for i in 0..b {
+            for (probs, d_logits, cols, act) in [
+                (&cache.probs_b, &mut d_logits_b, self.p, a_b[i] as usize),
+                (&cache.probs_c, &mut d_logits_c, self.c, a_c[i] as usize),
+            ] {
+                let pr = &probs[i * cols..(i + 1) * cols];
+                let row = &mut d_logits[i * cols..(i + 1) * cols];
+                // log-prob term: d_logp * (onehot − p)
+                for (slot, &q) in row.iter_mut().zip(pr) {
+                    *slot = -q * d_logp[i];
+                }
+                row[act] += d_logp[i];
+                // entropy bonus term: −coef/B · p ⊙ (dH/dp − Σ p dH/dp)
+                let mut s = 0.0f32;
+                for (tmp, &q) in dhdp.iter_mut().zip(pr) {
+                    *tmp = -(q.clamp(PROB_FLOOR, 1.0).ln() + 1.0);
+                    s += *tmp * q;
+                }
+                for ((slot, &q), &dh) in row.iter_mut().zip(pr).zip(dhdp.iter()) {
+                    *slot += -ent_coef_b * q * (dh - s);
+                }
+            }
+        }
+
+        // gaussian head: interleaved (mu, log_std) gradient rows
+        let mut d_mu_std = vec![0.0f32; b * 2];
+        for i in 0..b {
+            d_mu_std[2 * i] = d_logp[i] * z[i] / std[i];
+            let mut dls = d_logp[i] * (z[i] * z[i] - 1.0) - ent_coef_b;
+            if !(LOG_STD_MIN..=LOG_STD_MAX).contains(&cache.ls_raw[i]) {
+                dls = 0.0; // clip gate
+            }
+            d_mu_std[2 * i + 1] = dls;
+        }
+
+        // ---- backprop through the dense stack ----
+        let mut g = vec![0.0f32; self.size];
+
+        // power branch — the mu/log_std biases live in two 1-wide slots, so
+        // accumulate its dW/db by hand instead of through `acc_into`
+        for i in 0..b {
+            g[self.b_p1_mu.off] += d_mu_std[2 * i];
+            g[self.b_p1_ls.off] += d_mu_std[2 * i + 1];
+            let xr = &cache.hp[i * self.h..(i + 1) * self.h];
+            for (k, &xv) in xr.iter().enumerate() {
+                let base = self.w_p1.off + k * 2;
+                g[base] += xv * d_mu_std[2 * i];
+                g[base + 1] += xv * d_mu_std[2 * i + 1];
+            }
+        }
+        let mut d_hp = matmul_bt(&d_mu_std, b, 2, seg(params, self.w_p1), self.h);
+        tanh_backward(&mut d_hp, &cache.hp);
+        acc_into(&mut g, self.w_p0, self.b_p0, &cache.h1, b, self.t1, &d_hp, self.h);
+        let d_h1_p = matmul_bt(&d_hp, b, self.h, seg(params, self.w_p0), self.t1);
+
+        // partition branch
+        acc_into(&mut g, self.w_b1, self.b_b1, &cache.hb, b, self.h, &d_logits_b, self.p);
+        let mut d_hb = matmul_bt(&d_logits_b, b, self.p, seg(params, self.w_b1), self.h);
+        tanh_backward(&mut d_hb, &cache.hb);
+        acc_into(&mut g, self.w_b0, self.b_b0, &cache.h1, b, self.t1, &d_hb, self.h);
+        let d_h1_b = matmul_bt(&d_hb, b, self.h, seg(params, self.w_b0), self.t1);
+
+        // channel branch
+        acc_into(&mut g, self.w_c1, self.b_c1, &cache.hc, b, self.h, &d_logits_c, self.c);
+        let mut d_hc = matmul_bt(&d_logits_c, b, self.c, seg(params, self.w_c1), self.h);
+        tanh_backward(&mut d_hc, &cache.hc);
+        acc_into(&mut g, self.w_c0, self.b_c0, &cache.h1, b, self.t1, &d_hc, self.h);
+        let d_h1_c = matmul_bt(&d_hc, b, self.h, seg(params, self.w_c0), self.t1);
+
+        // trunk
+        let mut d_h1: Vec<f32> = d_h1_p
+            .iter()
+            .zip(&d_h1_b)
+            .zip(&d_h1_c)
+            .map(|((p, q), r)| p + q + r)
+            .collect();
+        tanh_backward(&mut d_h1, &cache.h1);
+        acc_into(&mut g, self.w_t1, self.b_t1, &cache.h0, b, self.t0, &d_h1, self.t1);
+        let mut d_h0 = matmul_bt(&d_h1, b, self.t1, seg(params, self.w_t1), self.t0);
+        tanh_backward(&mut d_h0, &cache.h0);
+        acc_into(&mut g, self.w_t0, self.b_t0, state, b, self.d, &d_h0, self.t0);
+
+        // ---- Adam ----
+        let (p2, m2, v2) = adam_step(params, &g, m, v, t, lr);
+        Ok(vec![
+            TensorView::f32(p2, vec![self.size])?,
+            TensorView::f32(m2, vec![self.size])?,
+            TensorView::f32(v2, vec![self.size])?,
+            TensorView::from_scalar(loss),
+            TensorView::from_scalar(entropy),
+            TensorView::from_scalar(clip_frac),
+        ])
+    }
+}
+
+// ==================================================================== critic
+
+/// Layout-resolved critic network (FC 4N→c0→c1→c2→1, tanh hidden).
+pub(super) struct CriticProgram {
+    size: usize,
+    d: usize,
+    c0: usize,
+    c1: usize,
+    c2: usize,
+    w_0: Slot,
+    b_0: Slot,
+    w_1: Slot,
+    b_1: Slot,
+    w_2: Slot,
+    b_2: Slot,
+    w_3: Slot,
+    b_3: Slot,
+}
+
+struct CriticCache {
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    value: Vec<f32>,
+}
+
+impl CriticProgram {
+    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<CriticProgram> {
+        let spec = meta.spec.as_ref().ok_or_else(|| {
+            anyhow!("no parameter layout attached (manifest rl.specs entry missing?)")
+        })?;
+        let (w_0, s_0) = slot(spec, "w_0")?;
+        let (w_1, s_1) = slot(spec, "w_1")?;
+        let (w_2, s_2) = slot(spec, "w_2")?;
+        if s_0.len() != 2 || s_1.len() != 2 || s_2.len() != 2 {
+            bail!("unexpected critic layout shapes");
+        }
+        Ok(CriticProgram {
+            size: spec_size(spec),
+            d: s_0[0],
+            c0: s_0[1],
+            c1: s_1[1],
+            c2: s_2[1],
+            w_0,
+            b_0: slot(spec, "b_0")?.0,
+            w_1,
+            b_1: slot(spec, "b_1")?.0,
+            w_2,
+            b_2: slot(spec, "b_2")?.0,
+            w_3: slot(spec, "w_3")?.0,
+            b_3: slot(spec, "b_3")?.0,
+        })
+    }
+
+    fn forward(&self, params: &[f32], state: &[f32], b: usize) -> CriticCache {
+        let h0 = dense(
+            state,
+            b,
+            self.d,
+            seg(params, self.w_0),
+            seg(params, self.b_0),
+            self.c0,
+            Act::Tanh,
+        );
+        let h1 = dense(
+            &h0,
+            b,
+            self.c0,
+            seg(params, self.w_1),
+            seg(params, self.b_1),
+            self.c1,
+            Act::Tanh,
+        );
+        let h2 = dense(
+            &h1,
+            b,
+            self.c1,
+            seg(params, self.w_2),
+            seg(params, self.b_2),
+            self.c2,
+            Act::Tanh,
+        );
+        let value = dense(
+            &h2,
+            b,
+            self.c2,
+            seg(params, self.w_3),
+            seg(params, self.b_3),
+            1,
+            Act::Linear,
+        );
+        CriticCache { h0, h1, h2, value }
+    }
+
+    /// `(params, state) -> (value,)`.
+    pub(super) fn run_forward(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        expect_inputs(inputs, 2, "critic_fwd")?;
+        let params = f32_in(inputs, 0, "critic_fwd")?;
+        if params.len() != self.size {
+            bail!("critic_fwd: expected {} parameters, got {}", self.size, params.len());
+        }
+        let state = f32_in(inputs, 1, "critic_fwd")?;
+        if state.is_empty() || state.len() % self.d != 0 {
+            bail!("critic_fwd: state length {} not a multiple of {}", state.len(), self.d);
+        }
+        let b = state.len() / self.d;
+        let cache = self.forward(params, state, b);
+        Ok(vec![TensorView::f32(cache.value, vec![b, 1])?])
+    }
+
+    /// One MSE + Adam step toward the sampled returns (Eq. 16):
+    /// `(params, m, v, t, lr, state, returns) -> (params', m', v', loss)`.
+    pub(super) fn run_update(&self, inputs: &[&TensorView]) -> Result<Vec<TensorView>> {
+        let what = "critic_update";
+        expect_inputs(inputs, 7, what)?;
+        let params = f32_in(inputs, 0, what)?;
+        let m = f32_in(inputs, 1, what)?;
+        let v = f32_in(inputs, 2, what)?;
+        let t = scalar_in(inputs, 3, what)?;
+        let lr = scalar_in(inputs, 4, what)?;
+        let state = f32_in(inputs, 5, what)?;
+        let returns = f32_in(inputs, 6, what)?;
+        let b = returns.len();
+        if b == 0 || state.len() != b * self.d {
+            bail!("{what}: state length {} vs batch {b} x dim {}", state.len(), self.d);
+        }
+        if params.len() != self.size || m.len() != self.size || v.len() != self.size {
+            bail!("{what}: parameter/Adam state size mismatch");
+        }
+
+        let cache = self.forward(params, state, b);
+        let inv_b = 1.0 / b as f32;
+        let mut loss = 0.0f32;
+        let mut dv = vec![0.0f32; b];
+        for i in 0..b {
+            let err = cache.value[i] - returns[i];
+            loss += err * err * inv_b;
+            dv[i] = 2.0 * err * inv_b;
+        }
+
+        let mut g = vec![0.0f32; self.size];
+        acc_into(&mut g, self.w_3, self.b_3, &cache.h2, b, self.c2, &dv, 1);
+        let mut d = matmul_bt(&dv, b, 1, seg(params, self.w_3), self.c2);
+        tanh_backward(&mut d, &cache.h2);
+        acc_into(&mut g, self.w_2, self.b_2, &cache.h1, b, self.c1, &d, self.c2);
+        let mut d = matmul_bt(&d, b, self.c2, seg(params, self.w_2), self.c1);
+        tanh_backward(&mut d, &cache.h1);
+        acc_into(&mut g, self.w_1, self.b_1, &cache.h0, b, self.c0, &d, self.c1);
+        let mut d = matmul_bt(&d, b, self.c1, seg(params, self.w_1), self.c0);
+        tanh_backward(&mut d, &cache.h0);
+        acc_into(&mut g, self.w_0, self.b_0, state, b, self.d, &d, self.c0);
+
+        let (p2, m2, v2) = adam_step(params, &g, m, v, t, lr);
+        Ok(vec![
+            TensorView::f32(p2, vec![self.size])?,
+            TensorView::f32(m2, vec![self.size])?,
+            TensorView::f32(v2, vec![self.size])?,
+            TensorView::from_scalar(loss),
+        ])
+    }
+}

@@ -1,9 +1,11 @@
 //! Typed handles over the actor / critic network artifacts.
 //!
 //! Parameters live in Rust as flat `Vec<f32>` (the artifacts unflatten
-//! internally — see python/compile/common.py). Each handle owns its Adam
-//! state and counts update steps; `forward` runs the B=1 serving artifact,
-//! `update` runs the fwd+bwd+Adam artifact for one PPO minibatch.
+//! internally via the manifest layout — see python/compile/common.py). Each
+//! handle owns its Adam state and counts update steps; `forward` runs the
+//! B=1 serving artifact, `update` runs the fwd+bwd+Adam artifact for one
+//! PPO minibatch. Both run on whatever [`crate::runtime::backend::Backend`]
+//! the store was opened with.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -11,9 +13,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::artifacts::ArtifactStore;
-use super::client::Executable;
-use super::tensor::{f32_literal, i32_literal, scalar_literal};
-use crate::util::json::Json;
+use super::backend::Executable;
+use super::spec::SpecEntry;
+use super::tensor::TensorView;
 use crate::util::rng::Rng;
 
 /// Initialize a flat parameter vector from the manifest's layout entries:
@@ -37,34 +39,6 @@ pub fn init_params(spec: &[SpecEntry], rng: &mut Rng) -> Vec<f32> {
     out
 }
 
-/// One entry of a network's flat-parameter layout.
-#[derive(Debug, Clone)]
-pub struct SpecEntry {
-    pub name: String,
-    pub offset: usize,
-    pub count: usize,
-    pub shape: Vec<usize>,
-}
-
-pub fn parse_spec(j: &Json) -> Result<Vec<SpecEntry>> {
-    j.as_arr()?
-        .iter()
-        .map(|e| {
-            Ok(SpecEntry {
-                name: e.str_of("name")?.to_string(),
-                offset: e.usize_of("offset")?,
-                count: e.usize_of("count")?,
-                shape: e
-                    .req("shape")?
-                    .as_arr()?
-                    .iter()
-                    .map(|d| d.as_usize())
-                    .collect::<Result<_>>()?,
-            })
-        })
-        .collect()
-}
-
 /// Output of one actor forward (B = 1).
 #[derive(Debug, Clone)]
 pub struct ActorOutput {
@@ -82,31 +56,25 @@ pub struct UpdateStats {
     pub clip_frac: f32,
 }
 
-/// Actor network handle: flat params + Adam state + compiled artifacts.
+/// Actor network handle: flat params + Adam state + loaded artifacts.
 pub struct ActorNet {
     pub n_ues: usize,
     pub params: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
     t: u64,
-    fwd: Arc<Executable>,
-    updates: HashMap<usize, Arc<Executable>>, // by minibatch size
+    fwd: Arc<dyn Executable>,
+    updates: HashMap<usize, Arc<dyn Executable>>, // by minibatch size
     state_dim: usize,
-    /// Device-format copy of `params`, rebuilt lazily after updates.
+    /// Backend-input copy of `params`, rebuilt lazily after updates.
     /// Rollouts call `forward` thousands of times between updates; without
     /// this cache every call re-copies the ~64 k-float parameter vector
-    /// into a fresh literal (§Perf: −26 % on actor_fwd_b1).
-    params_lit: Option<xla::Literal>,
+    /// into a fresh input tensor (§Perf: −26 % on actor_fwd_b1, measured
+    /// on the PJRT path; the native backend borrows the cached tensor
+    /// zero-copy, while the current PJRT `call_refs` re-marshals inputs
+    /// per call — see DESIGN.md §Perf).
+    params_view: Option<TensorView>,
 }
-
-// SAFETY: the cached `params_lit` is a standalone host literal (no shared
-// Rc state; the raw pointer is uniquely owned by this handle) and every C
-// API call that touches it happens inside `Executable::call_refs`, which
-// holds the process-wide XLA lock. Moving the handle across threads is
-// therefore sound; concurrent &mut access is prevented by the borrow
-// checker as usual.
-unsafe impl Send for ActorNet {}
-unsafe impl Send for CriticNet {}
 
 impl ActorNet {
     pub fn new(store: &ArtifactStore, n_ues: usize, seed: u64) -> Result<ActorNet> {
@@ -120,11 +88,12 @@ impl ActorNet {
         for b in store.update_batches(n_ues)? {
             updates.insert(b, store.load(&format!("actor_update_n{n_ues}_b{b}"))?);
         }
-        // layout entries for init come from the manifest (specs.N.actor)
-        let man = Json::parse_file(store.root.join("manifest.json"))?;
-        let spec = parse_spec(man.req("rl")?.req("specs")?.req(&n_ues.to_string())?.req("actor")?)?;
+        let spec = rl
+            .actor_spec
+            .get(&n_ues)
+            .ok_or_else(|| anyhow!("manifest has no actor layout for N={n_ues}"))?;
         let mut rng = Rng::new(seed);
-        let params = init_params(&spec, &mut rng);
+        let params = init_params(spec, &mut rng);
         debug_assert_eq!(params.len(), size);
         Ok(ActorNet {
             n_ues,
@@ -135,18 +104,11 @@ impl ActorNet {
             fwd,
             updates,
             state_dim: 4 * n_ues,
-            params_lit: None,
+            params_view: None,
         })
     }
 
-    /// Policy forward for a single state (B = 1).
-    pub fn forward(&mut self, state: &[f32]) -> Result<ActorOutput> {
-        if self.params_lit.is_none() {
-            self.params_lit = Some(f32_literal(&self.params, &[self.params.len()])?);
-        }
-        let state_lit = f32_literal(state, &[1, self.state_dim])?;
-        let args = [self.params_lit.as_ref().unwrap(), &state_lit];
-        let mut outs = self.fwd.call_refs(&args)?;
+    fn parse_output(mut outs: Vec<TensorView>) -> Result<ActorOutput> {
         let log_std = outs[3].scalar()?;
         let mu = outs[2].scalar()?;
         let probs_c = std::mem::take(&mut outs[1]).into_f32s()?;
@@ -159,19 +121,28 @@ impl ActorNet {
         })
     }
 
-    /// Uncached forward (perf-pass baseline; rebuilds the params literal
+    /// Policy forward for a single state (B = 1).
+    pub fn forward(&mut self, state: &[f32]) -> Result<ActorOutput> {
+        if self.params_view.is_none() {
+            self.params_view = Some(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?);
+        }
+        let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
+        let args = [self.params_view.as_ref().unwrap(), &state_view];
+        let outs = self.fwd.call_refs(&args)?;
+        Self::parse_output(outs)
+    }
+
+    /// Uncached forward (perf-pass baseline; rebuilds the params tensor
     /// every call exactly as the pre-optimization hot path did).
     pub fn forward_uncached(&self, state: &[f32]) -> Result<ActorOutput> {
         let outs = self.fwd.call(&[
-            f32_literal(&self.params, &[self.params.len()])?,
-            f32_literal(state, &[1, self.state_dim])?,
+            TensorView::f32(self.params.clone(), vec![self.params.len()])?,
+            TensorView::f32(state.to_vec(), vec![1, self.state_dim])?,
         ])?;
-        Ok(ActorOutput {
-            probs_b: outs[0].clone().into_f32s()?,
-            probs_c: outs[1].clone().into_f32s()?,
-            mu: outs[2].scalar()?,
-            log_std: outs[3].scalar()?,
-        })
+        Self::parse_output(outs)
     }
 
     /// One PPO-clip + Adam step over a minibatch of size `b`.
@@ -193,24 +164,23 @@ impl ActorNet {
             .ok_or_else(|| anyhow!("no actor_update artifact for batch {b} (have {:?})", self.updates.keys()))?;
         self.t += 1;
         let n = self.params.len();
-        let outs = exe.call(&[
-            f32_literal(&self.params, &[n])?,
-            f32_literal(&self.m, &[n])?,
-            f32_literal(&self.v, &[n])?,
-            scalar_literal(self.t as f32),
-            scalar_literal(lr),
-            f32_literal(states, &[b, self.state_dim])?,
-            i32_literal(a_b, &[b])?,
-            i32_literal(a_c, &[b])?,
-            f32_literal(a_p, &[b])?,
-            f32_literal(old_logp, &[b])?,
-            f32_literal(adv, &[b])?,
+        let mut outs = exe.call(&[
+            TensorView::f32(self.params.clone(), vec![n])?,
+            TensorView::f32(self.m.clone(), vec![n])?,
+            TensorView::f32(self.v.clone(), vec![n])?,
+            TensorView::from_scalar(self.t as f32),
+            TensorView::from_scalar(lr),
+            TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
+            TensorView::i32(a_b.to_vec(), vec![b])?,
+            TensorView::i32(a_c.to_vec(), vec![b])?,
+            TensorView::f32(a_p.to_vec(), vec![b])?,
+            TensorView::f32(old_logp.to_vec(), vec![b])?,
+            TensorView::f32(adv.to_vec(), vec![b])?,
         ])?;
-        let mut outs = outs;
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;
-        self.params_lit = None; // device copy is stale now
+        self.params_view = None; // cached input copy is stale now
         Ok(UpdateStats {
             loss: outs[3].scalar()?,
             entropy: outs[4].scalar()?,
@@ -230,10 +200,10 @@ pub struct CriticNet {
     m: Vec<f32>,
     v: Vec<f32>,
     t: u64,
-    fwd: Arc<Executable>,
-    updates: HashMap<usize, Arc<Executable>>,
+    fwd: Arc<dyn Executable>,
+    updates: HashMap<usize, Arc<dyn Executable>>,
     state_dim: usize,
-    params_lit: Option<xla::Literal>,
+    params_view: Option<TensorView>,
 }
 
 impl CriticNet {
@@ -248,10 +218,12 @@ impl CriticNet {
         for b in store.update_batches(n_ues)? {
             updates.insert(b, store.load(&format!("critic_update_n{n_ues}_b{b}"))?);
         }
-        let man = Json::parse_file(store.root.join("manifest.json"))?;
-        let spec = parse_spec(man.req("rl")?.req("specs")?.req(&n_ues.to_string())?.req("critic")?)?;
+        let spec = rl
+            .critic_spec
+            .get(&n_ues)
+            .ok_or_else(|| anyhow!("manifest has no critic layout for N={n_ues}"))?;
         let mut rng = Rng::new(seed);
-        let params = init_params(&spec, &mut rng);
+        let params = init_params(spec, &mut rng);
         debug_assert_eq!(params.len(), size);
         Ok(CriticNet {
             n_ues,
@@ -262,17 +234,20 @@ impl CriticNet {
             fwd,
             updates,
             state_dim: 4 * n_ues,
-            params_lit: None,
+            params_view: None,
         })
     }
 
     /// V(s) for a single state.
     pub fn value(&mut self, state: &[f32]) -> Result<f32> {
-        if self.params_lit.is_none() {
-            self.params_lit = Some(f32_literal(&self.params, &[self.params.len()])?);
+        if self.params_view.is_none() {
+            self.params_view = Some(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?);
         }
-        let state_lit = f32_literal(state, &[1, self.state_dim])?;
-        let args = [self.params_lit.as_ref().unwrap(), &state_lit];
+        let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
+        let args = [self.params_view.as_ref().unwrap(), &state_view];
         let outs = self.fwd.call_refs(&args)?;
         outs[0].scalar()
     }
@@ -286,20 +261,41 @@ impl CriticNet {
             .ok_or_else(|| anyhow!("no critic_update artifact for batch {b}"))?;
         self.t += 1;
         let n = self.params.len();
-        let outs = exe.call(&[
-            f32_literal(&self.params, &[n])?,
-            f32_literal(&self.m, &[n])?,
-            f32_literal(&self.v, &[n])?,
-            scalar_literal(self.t as f32),
-            scalar_literal(lr),
-            f32_literal(states, &[b, self.state_dim])?,
-            f32_literal(returns, &[b])?,
+        let mut outs = exe.call(&[
+            TensorView::f32(self.params.clone(), vec![n])?,
+            TensorView::f32(self.m.clone(), vec![n])?,
+            TensorView::f32(self.v.clone(), vec![n])?,
+            TensorView::from_scalar(self.t as f32),
+            TensorView::from_scalar(lr),
+            TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
+            TensorView::f32(returns.to_vec(), vec![b])?,
         ])?;
-        let mut outs = outs;
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;
-        self.params_lit = None;
+        self.params_view = None;
         outs[3].scalar()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_respects_layout_conventions() {
+        let spec = crate::runtime::spec::actor_layout(3, 6, 2);
+        let mut rng = Rng::new(9);
+        let params = init_params(&spec, &mut rng);
+        let ls = crate::runtime::spec::spec_entry(&spec, "b_p1_log_std").unwrap();
+        assert_eq!(params[ls.offset], -0.5);
+        let b_t0 = crate::runtime::spec::spec_entry(&spec, "b_t0").unwrap();
+        assert!(params[b_t0.offset..b_t0.offset + b_t0.count]
+            .iter()
+            .all(|&x| x == 0.0));
+        let w_t0 = crate::runtime::spec::spec_entry(&spec, "w_t0").unwrap();
+        assert!(params[w_t0.offset..w_t0.offset + w_t0.count]
+            .iter()
+            .any(|&x| x != 0.0));
     }
 }

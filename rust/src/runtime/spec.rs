@@ -1,0 +1,178 @@
+//! Flat-parameter layouts — the Rust mirror of `python/compile/common.py`
+//! `ParamSpec`.
+//!
+//! Every network crosses the backend boundary as ONE flat f32 vector; the
+//! layout (ordered name → offset/count/shape) is what gives that vector
+//! meaning. Layouts arrive from `artifacts/manifest.json` (`rl.specs`) when
+//! a compiled manifest exists, or are synthesized by [`actor_layout`] /
+//! [`critic_layout`] for the built-in native demo manifest; both paths
+//! produce byte-identical layouts for the paper architectures.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One entry of a network's flat-parameter layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecEntry {
+    pub name: String,
+    pub offset: usize,
+    pub count: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Total parameter count of a layout.
+pub fn spec_size(spec: &[SpecEntry]) -> usize {
+    spec.iter().map(|e| e.count).sum()
+}
+
+/// Find a layout entry by name.
+pub fn spec_entry<'a>(spec: &'a [SpecEntry], name: &str) -> Result<&'a SpecEntry> {
+    spec.iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| anyhow!("parameter layout has no entry '{name}'"))
+}
+
+/// Parse a manifest `rl.specs.<N>.<actor|critic>` layout array.
+pub fn parse_spec(j: &Json) -> Result<Vec<SpecEntry>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(SpecEntry {
+                name: e.str_of("name")?.to_string(),
+                offset: e.usize_of("offset")?,
+                count: e.usize_of("count")?,
+                shape: e
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+// Network size constants (paper Sec. 6.3.1) — keep in sync with
+// python/compile/actor_critic.py.
+pub const TRUNK: [usize; 2] = [256, 128];
+pub const BRANCH_HIDDEN: usize = 64;
+pub const CRITIC: [usize; 3] = [256, 128, 64];
+
+fn build(entries: &[(&str, Vec<usize>)]) -> Vec<SpecEntry> {
+    let mut out = Vec::with_capacity(entries.len());
+    let mut offset = 0usize;
+    for (name, shape) in entries {
+        let count: usize = shape.iter().product();
+        out.push(SpecEntry {
+            name: name.to_string(),
+            offset,
+            count,
+            shape: shape.clone(),
+        });
+        offset += count;
+    }
+    out
+}
+
+/// The actor layout for N UEs — mirror of `actor_spec` in
+/// python/compile/actor_critic.py (trunk 4N→256→128 tanh, three branch
+/// heads with 64 hidden each, split mu/log_std bias).
+pub fn actor_layout(n_ues: usize, n_partition: usize, n_channels: usize) -> Vec<SpecEntry> {
+    let d = 4 * n_ues;
+    let (t0, t1) = (TRUNK[0], TRUNK[1]);
+    let h = BRANCH_HIDDEN;
+    build(&[
+        ("w_t0", vec![d, t0]),
+        ("b_t0", vec![t0]),
+        ("w_t1", vec![t0, t1]),
+        ("b_t1", vec![t1]),
+        // partition-point branch
+        ("w_b0", vec![t1, h]),
+        ("b_b0", vec![h]),
+        ("w_b1", vec![h, n_partition]),
+        ("b_b1", vec![n_partition]),
+        // channel branch
+        ("w_c0", vec![t1, h]),
+        ("b_c0", vec![h]),
+        ("w_c1", vec![h, n_channels]),
+        ("b_c1", vec![n_channels]),
+        // power branch: mu and a state-dependent log_std
+        ("w_p0", vec![t1, h]),
+        ("b_p0", vec![h]),
+        ("w_p1", vec![h, 2]),
+        ("b_p1_mu", vec![1]),
+        ("b_p1_log_std", vec![1]),
+    ])
+}
+
+/// The critic layout for N UEs — mirror of `critic_spec`
+/// (FC 4N→256→128→64→1).
+pub fn critic_layout(n_ues: usize) -> Vec<SpecEntry> {
+    let d = 4 * n_ues;
+    build(&[
+        ("w_0", vec![d, CRITIC[0]]),
+        ("b_0", vec![CRITIC[0]]),
+        ("w_1", vec![CRITIC[0], CRITIC[1]]),
+        ("b_1", vec![CRITIC[1]]),
+        ("w_2", vec![CRITIC[1], CRITIC[2]]),
+        ("b_2", vec![CRITIC[2]]),
+        ("w_3", vec![CRITIC[2], 1]),
+        ("b_3", vec![1]),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_are_contiguous() {
+        for spec in [actor_layout(5, 6, 2), critic_layout(5)] {
+            let mut off = 0;
+            for e in &spec {
+                assert_eq!(e.offset, off, "{} not contiguous", e.name);
+                assert_eq!(e.count, e.shape.iter().product::<usize>());
+                off += e.count;
+            }
+            assert_eq!(off, spec_size(&spec));
+        }
+    }
+
+    #[test]
+    fn actor_size_matches_python_formula() {
+        // sum of the actor_spec shapes for N=5, P=6, C=2 (see
+        // python/compile/actor_critic.py)
+        let d = 20;
+        let expect = d * 256
+            + 256
+            + 256 * 128
+            + 128
+            + 3 * (128 * 64 + 64)
+            + (64 * 6 + 6)
+            + (64 * 2 + 2)
+            + (64 * 2 + 1 + 1);
+        assert_eq!(spec_size(&actor_layout(5, 6, 2)), expect);
+    }
+
+    #[test]
+    fn critic_size_matches_python_formula() {
+        let d = 20;
+        let expect = d * 256 + 256 + 256 * 128 + 128 + 128 * 64 + 64 + 64 + 1;
+        assert_eq!(spec_size(&critic_layout(5)), expect);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let j = Json::parse(
+            r#"[{"name":"w","offset":0,"count":6,"shape":[2,3]},
+                {"name":"b","offset":6,"count":3,"shape":[3]}]"#,
+        )
+        .unwrap();
+        let spec = parse_spec(&j).unwrap();
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec_size(&spec), 9);
+        assert_eq!(spec_entry(&spec, "b").unwrap().offset, 6);
+        assert!(spec_entry(&spec, "zzz").is_err());
+    }
+}

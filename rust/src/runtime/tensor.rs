@@ -1,20 +1,22 @@
-//! Host-side tensors and `xla::Literal` conversion.
+//! Host-side tensors crossing the backend boundary.
 //!
 //! The runtime boundary is deliberately narrow: everything crossing it is
-//! an f32 or i32 dense tensor. `TensorView` owns a host copy of an output;
-//! `to_literal` builds inputs with shape checks so a mismatched artifact
-//! fails loudly at the call site instead of inside XLA.
+//! an f32 or i32 dense tensor. [`TensorView`] owns host data for both
+//! executable inputs and outputs; the checked constructors make a
+//! mismatched artifact fail loudly at the call site instead of deep inside
+//! a backend.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-/// A host tensor read back from the device (always f32 or i32 here).
-#[derive(Debug, Clone)]
+/// A host tensor (always f32 or i32 here). A 0-d tensor (`shape == []`)
+/// holds exactly one element.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TensorView {
     pub shape: Vec<usize>,
     pub data: Data,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
@@ -32,23 +34,36 @@ impl Default for TensorView {
 }
 
 impl TensorView {
-    pub fn from_literal(lit: xla::Literal) -> Result<TensorView> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = match shape.ty() {
-            xla::ElementType::F32 => Data::F32(
-                lit.to_vec::<f32>()
-                    .map_err(|e| anyhow!("reading f32 literal: {e:?}"))?,
-            ),
-            xla::ElementType::S32 => Data::I32(
-                lit.to_vec::<i32>()
-                    .map_err(|e| anyhow!("reading i32 literal: {e:?}"))?,
-            ),
-            other => bail!("unsupported output element type {other:?}"),
-        };
-        Ok(TensorView { shape: dims, data })
+    /// Owned f32 tensor with a shape check.
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Result<TensorView> {
+        let count: usize = shape.iter().product();
+        if count != data.len() {
+            bail!("shape {:?} needs {count} elements, got {}", shape, data.len());
+        }
+        Ok(TensorView {
+            shape,
+            data: Data::F32(data),
+        })
+    }
+
+    /// Owned i32 tensor with a shape check.
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Result<TensorView> {
+        let count: usize = shape.iter().product();
+        if count != data.len() {
+            bail!("shape {:?} needs {count} elements, got {}", shape, data.len());
+        }
+        Ok(TensorView {
+            shape,
+            data: Data::I32(data),
+        })
+    }
+
+    /// 0-d f32 tensor.
+    pub fn from_scalar(x: f32) -> TensorView {
+        TensorView {
+            shape: Vec::new(),
+            data: Data::F32(vec![x]),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -70,6 +85,14 @@ impl TensorView {
         }
     }
 
+    /// Borrow as i32 slice (errors on dtype mismatch).
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
     /// Consume into an owned f32 vec.
     pub fn into_f32s(self) -> Result<Vec<f32>> {
         match self.data {
@@ -88,54 +111,11 @@ impl TensorView {
     }
 }
 
-/// Build an f32 literal of the given shape (checked).
-pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let count: usize = shape.iter().product();
-    if count != data.len() {
-        bail!(
-            "shape {:?} needs {count} elements, got {}",
-            shape,
-            data.len()
-        );
-    }
-    let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
-}
-
-/// Build an i32 literal of the given shape (checked).
-pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let count: usize = shape.iter().product();
-    if count != data.len() {
-        bail!(
-            "shape {:?} needs {count} elements, got {}",
-            shape,
-            data.len()
-        );
-    }
-    let lit = xla::Literal::vec1(data);
-    if shape.len() == 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
-}
-
-/// Scalar f32 literal (0-d).
-pub fn scalar_literal(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
 /// Load a flat-f32 weight file written by the compile path (`.bin`,
 /// little-endian f32, no header).
 pub fn load_f32_bin(path: impl AsRef<std::path::Path>, expected: usize) -> Result<Vec<f32>> {
     let path = path.as_ref();
-    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
     if bytes.len() % 4 != 0 {
         bail!("{}: size {} not a multiple of 4", path.display(), bytes.len());
     }
@@ -158,10 +138,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn literal_shape_mismatch_errors() {
-        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
-        assert!(f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
-        assert!(i32_literal(&[1, 2, 3], &[2]).is_err());
+    fn shape_mismatch_errors() {
+        assert!(TensorView::f32(vec![1.0, 2.0], vec![3]).is_err());
+        assert!(TensorView::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).is_ok());
+        assert!(TensorView::i32(vec![1, 2, 3], vec![2]).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = TensorView::from_scalar(2.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        let v = TensorView::f32(vec![1.0, 2.0], vec![2]).unwrap();
+        assert!(v.scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = TensorView::i32(vec![1, 2], vec![2]).unwrap();
+        assert!(t.f32s().is_err());
+        assert_eq!(t.i32s().unwrap(), &[1, 2]);
     }
 
     #[test]

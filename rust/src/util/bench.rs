@@ -93,7 +93,15 @@ impl Bench {
 
     /// Append results to results/bench.json (keyed by group/case).
     pub fn report(&self) {
-        let path = std::path::Path::new("results/bench.json");
+        self.merge_into("results/bench.json");
+    }
+
+    /// Merge this run's results into a JSON file (keyed by group/case),
+    /// preserving entries from other groups/runs. `report` uses the shared
+    /// results/bench.json; baselines like BENCH_runtime.json pass their own
+    /// path.
+    pub fn merge_into(&self, path: impl AsRef<std::path::Path>) {
+        let path = path.as_ref();
         let mut root = if path.exists() {
             Json::parse_file(path).unwrap_or_else(|_| Json::obj())
         } else {

@@ -22,6 +22,11 @@ fn store_with_models() -> Option<ArtifactStore> {
         eprintln!("skipping: no model artifacts");
         return None;
     }
+    if store.backend_name() == "native" {
+        // the CNN backbone segments only execute on the PJRT backend
+        eprintln!("skipping: model artifacts need the PJRT backend (--features xla-pjrt)");
+        return None;
+    }
     Some(store)
 }
 

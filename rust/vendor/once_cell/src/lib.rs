@@ -1,0 +1,49 @@
+//! Minimal in-tree stand-in for the `once_cell` crate (offline build — no
+//! crates.io; see DESIGN.md §Substitutions). Backed by `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, usable in `static`s.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static COUNTER: Lazy<u64> = Lazy::new(|| 41 + 1);
+
+        #[test]
+        fn initializes_once() {
+            assert_eq!(*COUNTER, 42);
+            assert_eq!(*COUNTER, 42);
+        }
+    }
+}

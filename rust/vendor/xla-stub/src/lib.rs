@@ -1,0 +1,265 @@
+//! API-compatible stub of the `xla` crate (PJRT bindings).
+//!
+//! The offline build has no crates.io and no `xla_extension` shared library,
+//! but the `xla-pjrt` cargo feature must stay *compilable* so the PJRT
+//! execution path in `runtime::client` does not rot. This stub mirrors the
+//! slice of the real crate's API that path uses; host-side [`Literal`]
+//! handling is implemented for real, while every PJRT entry point
+//! (`PjRtClient::cpu`, `compile`, `execute`, …) returns an error at
+//! runtime. Deployments with the real `xla` crate point the workspace's
+//! `xla` path dependency at it instead (see DESIGN.md §Substitutions).
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` role.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in the offline build (in-tree `xla` stub; point the \
+         workspace's `xla` path dependency at the real crate to execute HLO artifacts)"
+    )))
+}
+
+/// Element types the runtime boundary uses (plus enough of the rest of the
+/// real crate's enum that exhaustive matches need a catch-all, as they do
+/// against the real API).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Bf16,
+    C64,
+    C128,
+}
+
+#[derive(Clone, Debug)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host literal: dense f32/i32 data plus dimensions, or a tuple.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Rust scalar types that map onto XLA element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> Payload;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn wrap(v: Vec<f32>) -> Payload {
+        Payload::F32(v)
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn wrap(v: Vec<i32>) -> Payload {
+        Payload::I32(v)
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// 1-d literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            payload: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// 0-d f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            payload: Payload::F32(vec![x]),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            payload: self.payload.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+            Payload::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty,
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Stub of the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of a loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+    }
+}
