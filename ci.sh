@@ -26,4 +26,7 @@ echo "== perf baseline (BENCH_runtime.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_runtime
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_e2e
 
+echo "== serving baseline (BENCH_serving.json) =="
+MACCI_BENCH_SERVING_TASKS=${MACCI_BENCH_SERVING_TASKS:-48} cargo bench --bench bench_serving
+
 echo "CI OK"

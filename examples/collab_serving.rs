@@ -1,18 +1,22 @@
 //! Collaborative serving over the threaded edge server: UE threads run the
-//! front model segment + AE compression and ship real payloads to the edge
-//! thread, which decodes and completes inference — the paper's Fig. 1/2
-//! workflow with actual CNN numerics (not the analytic simulator).
+//! front model segment + AE compression and ship real payloads to the edge,
+//! where the offload-executor worker pool decodes and completes inference —
+//! the paper's Fig. 1/2 workflow with actual CNN numerics (not the analytic
+//! simulator). UEs whose static decision is b = 0 offload the raw input
+//! instead, exercising the dynamic batcher through the `_full_b8` artifact.
 //!
-//! Reports per-stage latency, wire sizes, throughput, and split-vs-local
-//! top-1 agreement.
+//! Reports per-stage latency, wire sizes, throughput, split-vs-local top-1
+//! agreement, and the executor's queue/batching counters.
 //!
-//! Run: `cargo run --release --example collab_serving -- [model] [n_ues] [tasks_per_ue]`
+//! Run: `cargo run --release --example collab_serving -- [model] [n_ues] [tasks_per_ue] [workers]`
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use macci::coordinator::decision::{DecisionMaker, StaticDecision};
-use macci::coordinator::inference::CollabPipeline;
+use macci::coordinator::executor::{OffloadCompute, PipelineCompute};
+use macci::coordinator::inference::{argmax, CollabPipeline};
 use macci::coordinator::protocol::{Downlink, OffloadRequest, UeStateReport, Uplink};
 use macci::coordinator::server::{EdgeServer, ServerConfig};
 use macci::coordinator::state_pool::{StateNorm, StatePool};
@@ -25,14 +29,15 @@ fn main() -> Result<()> {
     let model = args.get(1).cloned().unwrap_or_else(|| "resnet18".into());
     let n_ues: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
     let tasks: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(4);
 
     let store = ArtifactStore::open("artifacts")?;
-    // one pipeline for the server, one per-UE front half (shares compiled
+    // the server's compute: pipeline + b8 batch runner, shared by the
+    // worker pool; UEs load their own front halves (shares compiled
     // executables through the runtime cache)
-    let server_pipeline = CollabPipeline::load(&store, &model)?;
-    let ue_pipeline = CollabPipeline::load(&store, &model)?;
-    let num_points = ue_pipeline.num_points();
-    let hw = ue_pipeline.meta.input_hw;
+    let server_compute = Arc::new(PipelineCompute::load(&store, &model)?);
+    let num_points = server_compute.pipeline().num_points();
+    let hw = server_compute.pipeline().meta.input_hw;
 
     let pool = StatePool::new(
         n_ues,
@@ -43,21 +48,23 @@ fn main() -> Result<()> {
             d_max: 100.0,
         },
     );
-    // static decision: UE i splits at point (i mod 4) + 1
+    // static decision: UE i rotates through raw offload (b = 0) and the
+    // split points (b = 1..=P)
     let actions: Vec<HybridAction> = (0..n_ues)
-        .map(|i| HybridAction::new(1 + (i % num_points), i % 2, 1.0, 1.0))
+        .map(|i| HybridAction::new(i % (num_points + 1), i % 2, 1.0, 1.0))
         .collect();
     let decisions = DecisionMaker::new(Box::new(StaticDecision {
         actions: actions.clone(),
     }));
-    let cfg = ServerConfig {
-        n_ues,
-        decision_interval: Duration::from_millis(20),
-        max_frames: 10_000,
-    };
-    let (server, mut downlinks) = EdgeServer::spawn(cfg, pool, decisions, Some(server_pipeline))?;
+    let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(20), 10_000);
+    cfg.exec.workers = workers;
+    let max_batch = cfg.exec.max_batch;
+    let server_compute = Some(server_compute as Arc<dyn OffloadCompute>);
+    let (server, mut downlinks) = EdgeServer::spawn(cfg, pool, decisions, server_compute)?;
 
-    println!("=== collaborative serving: {model}, {n_ues} UEs x {tasks} tasks ===");
+    println!(
+        "=== collaborative serving: {model}, {n_ues} UEs x {tasks} tasks, {workers} workers ==="
+    );
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for (ue, rx) in downlinks.drain(..).enumerate() {
@@ -81,16 +88,23 @@ fn main() -> Result<()> {
                 distance_m: 50.0,
             }))?;
             for (task, img) in images.iter().enumerate() {
-                let (encoded, timing) = pipeline.ue_half(img, split_point)?;
-                ue_compute += timing.ue_side_s();
-                wire_bits += encoded.wire_bits();
+                let (payload, calibration) = if split_point == 0 {
+                    // raw offload: ship the image itself (batched edge-side)
+                    let bytes: Vec<u8> = img.iter().flat_map(|v| v.to_le_bytes()).collect();
+                    (bytes, None)
+                } else {
+                    let (encoded, timing) = pipeline.ue_half(img, split_point)?;
+                    ue_compute += timing.ue_side_s();
+                    (encoded.to_wire()?, Some((encoded.lo, encoded.hi)))
+                };
+                wire_bits += payload.len() * 8;
                 let sent = Instant::now();
                 uplink.send(Uplink::Offload(OffloadRequest {
                     ue_id: ue,
                     task_id: task as u64,
                     b: split_point,
-                    payload: encoded.to_wire()?,
-                    calibration: Some((encoded.lo, encoded.hi)),
+                    payload,
+                    calibration,
                 }))?;
                 // await our result (ignore decision broadcasts)
                 loop {
@@ -98,20 +112,16 @@ fn main() -> Result<()> {
                         Downlink::Result(res) => {
                             rtt += sent.elapsed().as_secs_f64();
                             let local = pipeline.infer_local(img)?;
-                            let am = |v: &[f32]| {
-                                v.iter()
-                                    .enumerate()
-                                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                                    .map(|(i, _)| i)
-                                    .unwrap()
-                            };
-                            if am(&res.logits) == am(&local) {
+                            if argmax(&res.logits) == argmax(&local) {
                                 agree += 1;
                             }
                             done += 1;
                             break;
                         }
                         Downlink::Decision(_) => continue,
+                        Downlink::Error { task_id, error } => {
+                            anyhow::bail!("task {task_id} failed at the edge: {error}")
+                        }
                         Downlink::Shutdown => anyhow::bail!("server shut down early"),
                     }
                 }
@@ -145,12 +155,22 @@ fn main() -> Result<()> {
         total_rtt / total_done as f64 * 1e3
     );
     println!(
-        "edge: {} offloads served ({} feature / {} raw), {:.2} ms avg edge compute",
+        "edge: {} offloads served ({} feature / {} raw, {} errors), {:.2} ms avg edge compute",
         stats.offloads_served,
         stats.feature_offloads,
         stats.raw_offloads,
+        stats.offload_errors,
         stats.edge_compute_s / stats.offloads_served.max(1) as f64 * 1e3
     );
+    if workers > 0 {
+        println!(
+            "executor: peak queue {} | mean queue wait {:.2} ms | {} batches, occupancy {:.0}%",
+            stats.exec.max_queue_depth,
+            stats.exec.mean_queue_wait_s() * 1e3,
+            stats.exec.batches,
+            stats.exec.batch_occupancy(max_batch) * 100.0
+        );
+    }
     println!("split-vs-local top-1 agreement: {total_agree}/{total_done}");
     assert_eq!(total_done, n_ues * tasks, "all tasks must complete");
     Ok(())

@@ -1,0 +1,135 @@
+//! Serving-throughput bench: the threaded edge server with the inline
+//! serial path (workers = 0) vs the pooled + batched offload executor, at
+//! 1 / 4 / 16 concurrent closed-loop UEs. Emits BENCH_serving.json.
+//!
+//! Runs fully offline on the synthetic offload compute (fixed per-item
+//! cost, batches amortized per the `_full_b8`-style model documented in
+//! `coordinator::executor`); real artifact timings live in
+//! BENCH_runtime.json. The figure of merit is end-to-end requests/s
+//! through the server loop, so routing, batching, queueing and channel
+//! overheads are all on the clock.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::executor::{ExecutorConfig, OffloadCompute, SyntheticCompute};
+use macci::coordinator::protocol::{Downlink, OffloadRequest, UeStateReport, Uplink};
+use macci::coordinator::server::{EdgeServer, ServerConfig};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+use macci::util::json::Json;
+
+const ITEM_COST: Duration = Duration::from_micros(500);
+
+/// One serving run; returns end-to-end throughput in requests/s.
+fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
+    let compute = Arc::new(SyntheticCompute::new(ITEM_COST));
+    let elems = compute.image_elems;
+    let pool = StatePool::new(
+        n_ues,
+        StateNorm {
+            lambda_tasks: tasks_per_ue as f64,
+            frame_s: 0.5,
+            max_bits: 1e6,
+            d_max: 100.0,
+        },
+    );
+    let decisions = DecisionMaker::new(Box::new(StaticDecision {
+        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n_ues],
+    }));
+    let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(10), usize::MAX);
+    cfg.exec = ExecutorConfig {
+        workers,
+        max_batch: 8,
+        // short: closed-loop UEs rarely fill a batch, so don't idle on it
+        max_wait: Duration::from_micros(100),
+    };
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let (server, downlinks) = EdgeServer::spawn(cfg, pool, decisions, compute).unwrap();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = downlinks
+        .into_iter()
+        .enumerate()
+        .map(|(ue, rx)| {
+            let uplink = server.uplink.clone();
+            std::thread::spawn(move || {
+                uplink
+                    .send(Uplink::Report(UeStateReport {
+                        ue_id: ue,
+                        tasks_left: tasks_per_ue,
+                        compute_left_s: 0.0,
+                        offload_left_bits: 0.0,
+                        distance_m: 40.0,
+                    }))
+                    .unwrap();
+                for task in 0..tasks_per_ue {
+                    uplink
+                        .send(Uplink::Offload(OffloadRequest {
+                            ue_id: ue,
+                            task_id: task,
+                            b: 0,
+                            payload: vec![1u8; 4 * elems],
+                            calibration: None,
+                        }))
+                        .unwrap();
+                    loop {
+                        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                            Downlink::Result(_) => break,
+                            Downlink::Decision(_) => {}
+                            Downlink::Error { error, .. } => panic!("offload failed: {error}"),
+                            Downlink::Shutdown => panic!("server shut down early"),
+                        }
+                    }
+                }
+                uplink.send(Uplink::Goodbye { ue_id: ue }).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.join();
+    let wall = t0.elapsed().as_secs_f64();
+    let total = n_ues as u64 * tasks_per_ue;
+    assert_eq!(stats.offloads_served as u64, total, "bench run lost tasks");
+    total as f64 / wall
+}
+
+fn main() {
+    let tasks: u64 = std::env::var("MACCI_BENCH_SERVING_TASKS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let pooled_workers = 4;
+
+    println!(
+        "serving bench: synthetic compute {:.0} µs/item, {} tasks/UE, pooled = {} workers + batch",
+        ITEM_COST.as_secs_f64() * 1e6,
+        tasks,
+        pooled_workers
+    );
+    let mut json = Json::obj();
+    for &n_ues in &[1usize, 4, 16] {
+        let inline = run_one(n_ues, 0, tasks);
+        let pooled = run_one(n_ues, pooled_workers, tasks);
+        println!(
+            "  {n_ues:>2} UEs: inline-serial {inline:>8.1} req/s | \
+             pooled-batched {pooled:>8.1} req/s | speedup {:.2}x",
+            pooled / inline
+        );
+        json = json
+            .set(
+                &format!("serving/inline_ues{n_ues}"),
+                Json::obj().set("req_per_s", inline),
+            )
+            .set(
+                &format!("serving/pooled_ues{n_ues}"),
+                Json::obj().set("req_per_s", pooled),
+            )
+            .set(&format!("serving/speedup_ues{n_ues}"), pooled / inline);
+    }
+    json.write_file("BENCH_serving.json").unwrap();
+    println!("wrote BENCH_serving.json");
+}

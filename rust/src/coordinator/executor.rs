@@ -1,0 +1,844 @@
+//! The offload executor: a worker pool that serves offloaded inferences
+//! *off* the server thread, so `server_loop` only routes — it never runs
+//! model math (one slow back-segment must not stall decision broadcasts
+//! for every UE).
+//!
+//! Shape (mirrors the dispatcher/worker split of serving systems):
+//!
+//! ```text
+//!              submit()                 jobs (mpsc)
+//! server loop ──────────► dispatcher ═══════════════► N workers
+//!                          │  raw b=0 → DynamicBatcher   │ serve() /
+//!                          │  (flush on max_batch or     │ serve_batch()
+//!                          │   max_wait via pump())      │
+//!              ◄──────────────────────────────────────────┘
+//!                try_completions()  (completion mpsc)
+//! ```
+//!
+//! * Feature offloads (b ≥ 1) dispatch to per-worker `edge_half`
+//!   execution immediately.
+//! * Raw-input offloads (b = 0) accumulate in the [`DynamicBatcher`] and
+//!   flush as one job through the batch-capable compute (the
+//!   `{model}_full_b8` artifact when it exists).
+//! * [`OffloadExecutor::drain_shutdown`] flushes everything still queued
+//!   and joins the workers — no accepted offload is ever dropped.
+//!
+//! The model math behind the pool is the [`OffloadCompute`] trait:
+//! [`CollabPipeline`] (serial), [`PipelineCompute`] (pipeline + b8 batch
+//! runner), or [`SyntheticCompute`] (artifact-free, for tests/benches).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchItem, BatchOutput, BatchRunner, DynamicBatcher, Stamped};
+use super::inference::{argmax, check_raw_payload, decode_raw_payload, CollabPipeline};
+use super::protocol::{InferenceResult, OffloadRequest};
+use crate::runtime::artifacts::ArtifactStore;
+
+/// The compute side of offload serving — what the workers actually run,
+/// independent of where the model math comes from.
+pub trait OffloadCompute: Send + Sync {
+    /// Serve one offload: a feature (b ≥ 1) or a single raw input (b = 0).
+    fn serve(&self, req: &OffloadRequest) -> Result<InferenceResult>;
+
+    /// Serve raw-input items as one batch (all b = 0). Item order is
+    /// preserved in the outputs.
+    fn serve_batch(&self, items: Vec<BatchItem>) -> Result<Vec<BatchOutput>>;
+
+    /// Elements of one raw image payload — used to validate and decode
+    /// raw payloads before they enter the batch queue.
+    fn image_elems(&self) -> usize;
+
+    /// The batch size worth accumulating to (1 = batching buys nothing,
+    /// raw offloads dispatch individually).
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+}
+
+/// The plain pipeline: serial full-model execution for raw batches.
+impl OffloadCompute for CollabPipeline {
+    fn serve(&self, req: &OffloadRequest) -> Result<InferenceResult> {
+        self.serve_offload(req)
+    }
+
+    fn serve_batch(&self, items: Vec<BatchItem>) -> Result<Vec<BatchOutput>> {
+        let now = Instant::now();
+        items
+            .into_iter()
+            .map(|it| {
+                Ok(BatchOutput {
+                    logits: self.infer_local(&it.image)?,
+                    ue_id: it.ue_id,
+                    task_id: it.task_id,
+                    queue_wait: now.duration_since(it.enqueued),
+                })
+            })
+            .collect()
+    }
+
+    fn image_elems(&self) -> usize {
+        3 * self.meta.input_hw * self.meta.input_hw
+    }
+}
+
+/// The production compute: a shared [`CollabPipeline`] plus — when the
+/// `{model}_full_b8` artifact exists — a [`BatchRunner`] so raw offloads
+/// ride the batched artifact.
+pub struct PipelineCompute {
+    pipeline: CollabPipeline,
+    runner: Option<BatchRunner>,
+}
+
+impl PipelineCompute {
+    pub fn load(store: &ArtifactStore, model: &str) -> Result<PipelineCompute> {
+        let pipeline = CollabPipeline::load(store, model)?;
+        let runner = match BatchRunner::from_store(store, model) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                // no b8 artifact: serve raw offloads serially instead of
+                // refusing to start
+                log::warn!("raw-offload batching disabled: {e:#}");
+                None
+            }
+        };
+        Ok(PipelineCompute { pipeline, runner })
+    }
+
+    pub fn pipeline(&self) -> &CollabPipeline {
+        &self.pipeline
+    }
+}
+
+impl OffloadCompute for PipelineCompute {
+    fn serve(&self, req: &OffloadRequest) -> Result<InferenceResult> {
+        self.pipeline.serve_offload(req)
+    }
+
+    fn serve_batch(&self, items: Vec<BatchItem>) -> Result<Vec<BatchOutput>> {
+        match &self.runner {
+            Some(r) => r.run(items),
+            None => self.pipeline.serve_batch(items),
+        }
+    }
+
+    fn image_elems(&self) -> usize {
+        self.pipeline.image_elems()
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.runner.as_ref().map_or(1, |r| r.wire_batch())
+    }
+}
+
+/// A model-free compute for executor tests and the serving bench: spins
+/// the CPU for a configurable per-item cost and emits deterministic
+/// logits `logit[c] = checksum + c`, where the checksum is the decoded
+/// f32 image sum for raw inputs (identical on the single and batch
+/// paths) and the payload byte sum for features. `serve_batch` costs
+/// `cost · (1 + (n-1)/batch_speedup)` — the first item at full price,
+/// the rest amortized — modeling what the `_full_b8` artifact buys
+/// batched raw offloads. (The CNN artifacts themselves need the PJRT
+/// backend, so the offline serving bench runs on this stand-in;
+/// BENCH_runtime.json carries real artifact timings.)
+pub struct SyntheticCompute {
+    pub image_elems: usize,
+    pub num_classes: usize,
+    pub cost: Duration,
+    pub batch_speedup: f64,
+}
+
+impl SyntheticCompute {
+    pub fn new(cost: Duration) -> SyntheticCompute {
+        SyntheticCompute {
+            image_elems: 16,
+            num_classes: 8,
+            cost,
+            batch_speedup: 3.0,
+        }
+    }
+
+    fn spin(d: Duration) {
+        let t = Instant::now();
+        while t.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+
+    fn logits_for(&self, checksum: f32) -> Vec<f32> {
+        (0..self.num_classes).map(|c| checksum + c as f32).collect()
+    }
+}
+
+impl OffloadCompute for SyntheticCompute {
+    fn serve(&self, req: &OffloadRequest) -> Result<InferenceResult> {
+        // same checksum rule as the batch path: raw inputs sum the
+        // decoded image, so single vs batched results are identical
+        let checksum: f32 = if req.b == 0 {
+            decode_raw_payload(&req.payload, self.image_elems)?.iter().sum()
+        } else {
+            req.payload.iter().map(|&b| b as f32).sum()
+        };
+        Self::spin(self.cost);
+        let logits = self.logits_for(checksum);
+        Ok(InferenceResult {
+            ue_id: req.ue_id,
+            task_id: req.task_id,
+            argmax: argmax(&logits),
+            logits,
+            edge_latency_s: self.cost.as_secs_f64(),
+        })
+    }
+
+    fn serve_batch(&self, items: Vec<BatchItem>) -> Result<Vec<BatchOutput>> {
+        // stamp waits before executing — queue wait must not include
+        // execution time
+        let now = Instant::now();
+        let n = items.len();
+        if n > 0 {
+            let amortized = 1.0 + (n - 1) as f64 / self.batch_speedup.max(1.0);
+            Self::spin(Duration::from_secs_f64(self.cost.as_secs_f64() * amortized));
+        }
+        Ok(items
+            .into_iter()
+            .map(|it| BatchOutput {
+                logits: self.logits_for(it.image.iter().sum()),
+                ue_id: it.ue_id,
+                task_id: it.task_id,
+                queue_wait: now.duration_since(it.enqueued),
+            })
+            .collect())
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn preferred_batch(&self) -> usize {
+        8
+    }
+}
+
+/// Executor knobs (threaded through [`super::server::ServerConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutorConfig {
+    /// Worker threads. 0 = no pool: the server serves offloads inline on
+    /// its own thread (the serial baseline).
+    pub workers: usize,
+    /// Accumulation target for raw-offload batches.
+    pub max_batch: usize,
+    /// Max age of a queued raw offload before a partial batch flushes.
+    pub max_wait: Duration,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> ExecutorConfig {
+        ExecutorConfig {
+            workers: 4,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One finished offload coming back from the pool.
+#[derive(Debug)]
+pub struct Completion {
+    pub ue_id: usize,
+    pub task_id: u64,
+    pub outcome: Result<InferenceResult>,
+    /// Submit → execution-start wait.
+    pub queue_wait: Duration,
+    /// Size of the batch this item rode (1 = individual dispatch).
+    pub batch_size: usize,
+}
+
+/// Executor counters, merged into `ServerStats` at shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecutorStats {
+    pub submitted: usize,
+    pub completed: usize,
+    pub errors: usize,
+    /// Raw batches dispatched, and the items that rode them.
+    pub batches: usize,
+    pub batched_items: usize,
+    /// High-water mark of accepted-but-unfinished offloads.
+    pub max_queue_depth: usize,
+    /// Cumulative submit → execution-start wait.
+    pub queue_wait_s: f64,
+}
+
+impl ExecutorStats {
+    /// Mean fill of dispatched batches relative to the accumulation target.
+    pub fn batch_occupancy(&self, max_batch: usize) -> f64 {
+        if self.batches == 0 || max_batch == 0 {
+            return 0.0;
+        }
+        self.batched_items as f64 / (self.batches * max_batch) as f64
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.queue_wait_s / self.completed as f64
+    }
+}
+
+/// A raw-input offload waiting in the batch queue. The payload stays
+/// undecoded: submit() only length-checks (O(1)); the byte → f32 decode
+/// runs on the worker, keeping the server routing thread compute-free.
+struct PendingRaw {
+    req: OffloadRequest,
+    enqueued: Instant,
+}
+
+impl Stamped for PendingRaw {
+    fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+}
+
+enum Job {
+    /// A feature offload (or a raw one when batching is off), stamped
+    /// with its submit time.
+    Single(OffloadRequest, Instant),
+    Batch(Vec<PendingRaw>),
+}
+
+/// Handle owned by the server loop: submission in, completions out.
+pub struct OffloadExecutor {
+    compute: Arc<dyn OffloadCompute>,
+    jobs_tx: Option<Sender<Job>>,
+    /// Kept so the dispatcher can inject rejects (bad payloads) as
+    /// ordinary completions.
+    done_tx: Sender<Completion>,
+    done_rx: Receiver<Completion>,
+    workers: Vec<JoinHandle<()>>,
+    batch: Option<DynamicBatcher<PendingRaw>>,
+    inflight: usize,
+    stats: ExecutorStats,
+}
+
+impl OffloadExecutor {
+    /// Spawn the worker pool (`cfg.workers` ≥ 1 — a zero-worker setup
+    /// means "serve inline", in which case don't start an executor).
+    pub fn start(compute: Arc<dyn OffloadCompute>, cfg: ExecutorConfig) -> Result<OffloadExecutor> {
+        let (jobs_tx, jobs_rx) = channel::<Job>();
+        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+        let (done_tx, done_rx) = channel::<Completion>();
+        let mut workers = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let rx = jobs_rx.clone();
+            let tx = done_tx.clone();
+            let compute = compute.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("offload-worker-{i}"))
+                    .spawn(move || worker_loop(rx, tx, compute))?,
+            );
+        }
+        let batch = (cfg.max_batch > 1 && compute.preferred_batch() > 1)
+            .then(|| DynamicBatcher::new(cfg.max_batch, cfg.max_wait));
+        Ok(OffloadExecutor {
+            compute,
+            jobs_tx: Some(jobs_tx),
+            done_tx,
+            done_rx,
+            workers,
+            batch,
+            inflight: 0,
+            stats: ExecutorStats::default(),
+        })
+    }
+
+    /// Accepted-but-unfinished offloads (including queued raw items).
+    pub fn queue_depth(&self) -> usize {
+        self.inflight
+    }
+
+    pub fn stats(&self) -> ExecutorStats {
+        self.stats
+    }
+
+    /// Route one accepted offload: raw inputs enter the batch queue,
+    /// everything else dispatches to the pool immediately. Never blocks
+    /// and never does per-byte work on the caller's thread.
+    pub fn submit(&mut self, req: OffloadRequest) {
+        self.inflight += 1;
+        self.stats.submitted += 1;
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.inflight);
+        if req.b == 0 && self.batch.is_some() {
+            // reject malformed payloads before the queue (O(1) length
+            // check only — the decode itself happens on the worker)
+            if let Err(e) = check_raw_payload(&req.payload, self.compute.image_elems()) {
+                let _ = self.done_tx.send(Completion {
+                    ue_id: req.ue_id,
+                    task_id: req.task_id,
+                    outcome: Err(e),
+                    queue_wait: Duration::ZERO,
+                    batch_size: 1,
+                });
+                return;
+            }
+            self.batch.as_mut().unwrap().push(PendingRaw {
+                req,
+                enqueued: Instant::now(),
+            });
+            return;
+        }
+        self.dispatch(Job::Single(req, Instant::now()));
+    }
+
+    /// Flush the batch queue per policy — call once per server tick.
+    pub fn pump(&mut self, now: Instant) {
+        while self.batch.as_ref().map_or(false, |q| q.should_flush(now)) {
+            self.flush_one_batch();
+        }
+    }
+
+    /// Take one batch off the queue and dispatch it (shared by the
+    /// per-tick pump and the shutdown drain so the accounting cannot
+    /// diverge). Returns false once the queue is empty or absent.
+    fn flush_one_batch(&mut self) -> bool {
+        let items = match self.batch.as_mut() {
+            Some(q) if q.pending() > 0 => q.take_batch(),
+            _ => return false,
+        };
+        self.stats.batches += 1;
+        self.stats.batched_items += items.len();
+        self.dispatch(Job::Batch(items));
+        true
+    }
+
+    /// Non-blocking drain of finished offloads.
+    pub fn try_completions(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Ok(c) = self.done_rx.try_recv() {
+            self.note(&c);
+            out.push(c);
+        }
+        out
+    }
+
+    /// Graceful shutdown: flush everything still queued, stop the
+    /// workers, and hand back every outstanding completion — no accepted
+    /// offload is dropped.
+    pub fn drain_shutdown(mut self) -> (Vec<Completion>, ExecutorStats) {
+        while self.flush_one_batch() {}
+        // dropping the sender ends every worker's recv loop
+        drop(self.jobs_tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // workers are joined: all completions are already in the channel
+        let mut out = Vec::new();
+        while let Ok(c) = self.done_rx.try_recv() {
+            self.note(&c);
+            out.push(c);
+        }
+        (out, self.stats)
+    }
+
+    fn dispatch(&mut self, job: Job) {
+        let _ = self
+            .jobs_tx
+            .as_ref()
+            .expect("jobs channel open until shutdown")
+            .send(job);
+    }
+
+    fn note(&mut self, c: &Completion) {
+        self.inflight = self.inflight.saturating_sub(1);
+        self.stats.completed += 1;
+        self.stats.queue_wait_s += c.queue_wait.as_secs_f64();
+        if c.outcome.is_err() {
+            self.stats.errors += 1;
+        }
+    }
+}
+
+/// Run one compute call, converting a panic into an error so the worker
+/// survives and the owner still gets a NACK — the "no accepted offload
+/// is dropped" guarantee must hold even against a buggy backend.
+fn run_guarded<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".into());
+            Err(anyhow!("offload compute panicked: {msg}"))
+        }
+    }
+}
+
+fn worker_loop(
+    jobs: Arc<Mutex<Receiver<Job>>>,
+    done: Sender<Completion>,
+    compute: Arc<dyn OffloadCompute>,
+) {
+    loop {
+        // hold the lock only for the blocking recv, not the execution
+        let job = match jobs.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // dispatcher gone: drain complete
+        };
+        match job {
+            Job::Single(req, submitted) => {
+                let queue_wait = submitted.elapsed();
+                let outcome = run_guarded(|| compute.serve(&req));
+                let _ = done.send(Completion {
+                    ue_id: req.ue_id,
+                    task_id: req.task_id,
+                    outcome,
+                    queue_wait,
+                    batch_size: 1,
+                });
+            }
+            Job::Batch(pend) => {
+                // decode payloads here, off the server thread; lengths
+                // were validated at submit, so failures are exceptional
+                // and fail only their own item
+                let elems = compute.image_elems();
+                let mut items = Vec::with_capacity(pend.len());
+                for p in pend {
+                    match decode_raw_payload(&p.req.payload, elems) {
+                        Ok(image) => items.push(BatchItem {
+                            ue_id: p.req.ue_id,
+                            task_id: p.req.task_id,
+                            image,
+                            enqueued: p.enqueued,
+                        }),
+                        Err(e) => {
+                            let _ = done.send(Completion {
+                                ue_id: p.req.ue_id,
+                                task_id: p.req.task_id,
+                                outcome: Err(e),
+                                queue_wait: p.enqueued.elapsed(),
+                                batch_size: 1,
+                            });
+                        }
+                    }
+                }
+                if items.is_empty() {
+                    continue;
+                }
+                let n = items.len();
+                let meta: Vec<(usize, u64, Instant)> = items
+                    .iter()
+                    .map(|it| (it.ue_id, it.task_id, it.enqueued))
+                    .collect();
+                let t = Instant::now();
+                match run_guarded(|| compute.serve_batch(items)) {
+                    Ok(outs) => {
+                        // amortized per-item edge cost of the batch
+                        let per_item_s = t.elapsed().as_secs_f64() / n.max(1) as f64;
+                        for o in outs {
+                            let result = InferenceResult {
+                                ue_id: o.ue_id,
+                                task_id: o.task_id,
+                                argmax: argmax(&o.logits),
+                                logits: o.logits,
+                                edge_latency_s: per_item_s,
+                            };
+                            let _ = done.send(Completion {
+                                ue_id: result.ue_id,
+                                task_id: result.task_id,
+                                queue_wait: o.queue_wait,
+                                batch_size: n,
+                                outcome: Ok(result),
+                            });
+                        }
+                    }
+                    // fail every item of the batch individually so each
+                    // owner hears about it
+                    Err(e) => {
+                        for (ue_id, task_id, enqueued) in meta {
+                            let _ = done.send(Completion {
+                                ue_id,
+                                task_id,
+                                outcome: Err(anyhow!("batch of {n} failed: {e:#}")),
+                                // wait ends where execution began — same
+                                // accounting as the success path
+                                queue_wait: t.duration_since(enqueued),
+                                batch_size: n,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Records how work reached the compute (batch sizes, single serves).
+    struct Recorder {
+        batches: Mutex<Vec<usize>>,
+        singles: Mutex<Vec<u64>>,
+    }
+
+    struct TestCompute {
+        rec: Arc<Recorder>,
+        elems: usize,
+        fail_task: Option<u64>,
+    }
+
+    impl TestCompute {
+        fn new(elems: usize, fail_task: Option<u64>) -> (Arc<TestCompute>, Arc<Recorder>) {
+            let rec = Arc::new(Recorder {
+                batches: Mutex::new(Vec::new()),
+                singles: Mutex::new(Vec::new()),
+            });
+            (
+                Arc::new(TestCompute {
+                    rec: rec.clone(),
+                    elems,
+                    fail_task,
+                }),
+                rec,
+            )
+        }
+    }
+
+    impl OffloadCompute for TestCompute {
+        fn serve(&self, req: &OffloadRequest) -> Result<InferenceResult> {
+            self.rec.singles.lock().unwrap().push(req.task_id);
+            if self.fail_task == Some(req.task_id) {
+                anyhow::bail!("injected failure for task {}", req.task_id);
+            }
+            Ok(InferenceResult {
+                ue_id: req.ue_id,
+                task_id: req.task_id,
+                logits: vec![1.0, 0.0],
+                argmax: 0,
+                edge_latency_s: 0.0,
+            })
+        }
+
+        fn serve_batch(&self, items: Vec<BatchItem>) -> Result<Vec<BatchOutput>> {
+            self.rec.batches.lock().unwrap().push(items.len());
+            let now = Instant::now();
+            Ok(items
+                .into_iter()
+                .map(|it| BatchOutput {
+                    ue_id: it.ue_id,
+                    task_id: it.task_id,
+                    logits: vec![0.0, 1.0],
+                    queue_wait: now.duration_since(it.enqueued),
+                })
+                .collect())
+        }
+
+        fn image_elems(&self) -> usize {
+            self.elems
+        }
+
+        fn preferred_batch(&self) -> usize {
+            8
+        }
+    }
+
+    fn raw_req(task_id: u64, elems: usize) -> OffloadRequest {
+        OffloadRequest {
+            ue_id: task_id as usize % 2,
+            task_id,
+            b: 0,
+            payload: vec![0u8; 4 * elems],
+            calibration: None,
+        }
+    }
+
+    fn feature_req(task_id: u64) -> OffloadRequest {
+        OffloadRequest {
+            ue_id: 0,
+            task_id,
+            b: 2,
+            payload: vec![1, 2, 3],
+            calibration: Some((0.0, 1.0)),
+        }
+    }
+
+    /// Pump + drain until `n` completions arrive (or 5 s pass).
+    fn drain_until(ex: &mut OffloadExecutor, n: usize) -> Vec<Completion> {
+        let mut got = Vec::new();
+        let t0 = Instant::now();
+        while got.len() < n && t0.elapsed() < Duration::from_secs(5) {
+            ex.pump(Instant::now());
+            got.extend(ex.try_completions());
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        got
+    }
+
+    #[test]
+    fn raw_offloads_flow_through_the_batcher() {
+        let (compute, rec) = TestCompute::new(4, None);
+        let cfg = ExecutorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_secs(60), // size-triggered flush only
+        };
+        let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
+        for t in 0..4 {
+            ex.submit(raw_req(t, 4));
+        }
+        assert_eq!(ex.queue_depth(), 4);
+        let got = drain_until(&mut ex, 4);
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|c| c.batch_size == 4));
+        assert!(got.iter().all(|c| c.outcome.is_ok()));
+        assert_eq!(*rec.batches.lock().unwrap(), vec![4]);
+        assert!(rec.singles.lock().unwrap().is_empty());
+        assert_eq!(ex.queue_depth(), 0);
+        let (_, stats) = ex.drain_shutdown();
+        assert_eq!((stats.batches, stats.batched_items), (1, 4));
+        assert!((stats.batch_occupancy(4) - 1.0).abs() < 1e-9);
+        assert_eq!(stats.max_queue_depth, 4);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_max_wait() {
+        let (compute, rec) = TestCompute::new(4, None);
+        let cfg = ExecutorConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(40),
+        };
+        let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
+        let t0 = Instant::now();
+        ex.submit(raw_req(0, 4));
+        ex.pump(Instant::now());
+        if t0.elapsed() < Duration::from_millis(40) {
+            assert!(
+                ex.try_completions().is_empty(),
+                "fresh item must not flush before max_wait"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(45));
+        let got = drain_until(&mut ex, 1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].batch_size, 1);
+        assert!(got[0].queue_wait >= Duration::from_millis(40));
+        assert_eq!(*rec.batches.lock().unwrap(), vec![1]);
+        ex.drain_shutdown();
+    }
+
+    #[test]
+    fn feature_offloads_dispatch_individually() {
+        let (compute, rec) = TestCompute::new(4, None);
+        let mut ex = OffloadExecutor::start(compute, ExecutorConfig::default()).unwrap();
+        ex.submit(feature_req(7));
+        ex.submit(feature_req(8));
+        let got = drain_until(&mut ex, 2);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|c| c.batch_size == 1));
+        let mut singles = rec.singles.lock().unwrap().clone();
+        singles.sort_unstable();
+        assert_eq!(singles, vec![7, 8]);
+        assert!(rec.batches.lock().unwrap().is_empty());
+        ex.drain_shutdown();
+    }
+
+    #[test]
+    fn malformed_raw_payload_is_rejected_before_the_queue() {
+        let (compute, rec) = TestCompute::new(4, None);
+        let mut ex = OffloadExecutor::start(compute, ExecutorConfig::default()).unwrap();
+        ex.submit(OffloadRequest {
+            payload: vec![0u8; 7], // not 4 * elems
+            ..raw_req(3, 4)
+        });
+        let got = drain_until(&mut ex, 1);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].outcome.is_err());
+        assert_eq!(got[0].task_id, 3);
+        assert!(rec.batches.lock().unwrap().is_empty());
+        assert!(rec.singles.lock().unwrap().is_empty());
+        let (_, stats) = ex.drain_shutdown();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn serve_errors_become_error_completions() {
+        let (compute, _rec) = TestCompute::new(4, Some(9));
+        let mut ex = OffloadExecutor::start(compute, ExecutorConfig::default()).unwrap();
+        ex.submit(feature_req(9));
+        let got = drain_until(&mut ex, 1);
+        let err = got[0].outcome.as_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+        let (_, stats) = ex.drain_shutdown();
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn compute_panics_become_error_completions() {
+        struct PanicCompute;
+        impl OffloadCompute for PanicCompute {
+            fn serve(&self, _req: &OffloadRequest) -> Result<InferenceResult> {
+                panic!("boom");
+            }
+            fn serve_batch(&self, _items: Vec<BatchItem>) -> Result<Vec<BatchOutput>> {
+                panic!("batch boom");
+            }
+            fn image_elems(&self) -> usize {
+                4
+            }
+            fn preferred_batch(&self) -> usize {
+                8
+            }
+        }
+        let cfg = ExecutorConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+        };
+        let mut ex = OffloadExecutor::start(Arc::new(PanicCompute), cfg).unwrap();
+        ex.submit(feature_req(1)); // panics in serve
+        ex.submit(raw_req(2, 4)); // panics in serve_batch once flushed
+        let got = drain_until(&mut ex, 2);
+        assert_eq!(got.len(), 2, "panics must still produce completions");
+        for c in &got {
+            let err = format!("{:#}", c.outcome.as_ref().unwrap_err());
+            assert!(err.contains("panicked"), "unexpected error: {err}");
+        }
+        let (_, stats) = ex.drain_shutdown();
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn drain_shutdown_flushes_everything_still_queued() {
+        let (compute, rec) = TestCompute::new(4, None);
+        let cfg = ExecutorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_secs(60), // nothing flushes on its own
+        };
+        let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
+        for t in 0..6 {
+            ex.submit(raw_req(t, 4)); // 4 flush by size via pump; 2 linger
+        }
+        ex.submit(feature_req(100));
+        ex.pump(Instant::now());
+        let mut got = drain_until(&mut ex, 5); // full batch + the feature
+        let (rest, stats) = ex.drain_shutdown();
+        got.extend(rest);
+        assert_eq!(got.len(), 7, "no accepted offload may be dropped");
+        assert!(got.iter().all(|c| c.outcome.is_ok()));
+        assert_eq!(stats.submitted, 7);
+        assert_eq!(stats.completed, 7);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(*rec.batches.lock().unwrap(), vec![4, 2]);
+    }
+}

@@ -18,6 +18,49 @@ use crate::runtime::artifacts::{ArtifactStore, ModelMeta};
 use crate::runtime::backend::Executable;
 use crate::runtime::tensor::TensorView;
 
+/// NaN-safe argmax over logits. `partial_cmp(..).unwrap()` panics the
+/// serving thread on any NaN logit; here NaN entries simply never win
+/// (every comparison against NaN is false) and an empty or all-NaN slice
+/// yields 0 instead of panicking.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// O(1) length validation of a raw-offload payload — cheap enough for the
+/// server routing thread, so malformed requests NACK immediately and
+/// never enter a batch.
+pub fn check_raw_payload(payload: &[u8], expect_elems: usize) -> Result<()> {
+    if payload.len() != 4 * expect_elems {
+        return Err(anyhow!(
+            "raw offload payload is {} bytes; expected {} (= 4 bytes x {} f32 image elements)",
+            payload.len(),
+            4 * expect_elems,
+            expect_elems
+        ));
+    }
+    Ok(())
+}
+
+/// Decode a raw-offload payload (little-endian f32 pixels) after
+/// validating its length up front. Without the check, `chunks_exact(4)`
+/// silently drops trailing bytes and the mismatch only surfaces (if at
+/// all) deep inside tensor construction.
+pub fn decode_raw_payload(payload: &[u8], expect_elems: usize) -> Result<Vec<f32>> {
+    check_raw_payload(payload, expect_elems)?;
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
 /// Per-stage timing of one collaborative inference (seconds).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PipelineTiming {
@@ -168,16 +211,17 @@ impl CollabPipeline {
     pub fn serve_offload(&self, req: &OffloadRequest) -> Result<InferenceResult> {
         let t0 = Instant::now();
         let logits = if req.b == 0 {
-            // raw input: payload is the f32 image bytes
-            let image: Vec<f32> = req
-                .payload
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            // raw input: payload is the f32 image bytes (validated up front)
+            let image =
+                decode_raw_payload(&req.payload, 3 * self.meta.input_hw * self.meta.input_hw)?;
             // the edge runs the whole model
             self.infer_local(&image)?
         } else {
-            let idx = req.b - 1;
+            let idx = req
+                .b
+                .checked_sub(1)
+                .filter(|&i| i < self.compressors.len())
+                .ok_or_else(|| anyhow!("offload partition point {} out of range", req.b))?;
             let pm = &self.compressors[idx].meta;
             let (lo, hi) = req
                 .calibration
@@ -192,18 +236,42 @@ impl CollabPipeline {
             let mut timing = PipelineTiming::default();
             self.edge_half(&encoded, req.b, &mut timing)?
         };
-        let argmax = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
         Ok(InferenceResult {
             ue_id: req.ue_id,
             task_id: req.task_id,
+            argmax: argmax(&logits),
             logits,
-            argmax,
             edge_latency_s: t0.elapsed().as_secs_f64(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        assert_eq!(argmax(&[0.1, 0.7, 0.3]), 1);
+        // NaN logits must never win — and must not panic the server
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn raw_payload_length_is_validated_up_front() {
+        let ok = decode_raw_payload(&1.0f32.to_le_bytes(), 1).unwrap();
+        assert_eq!(ok, vec![1.0]);
+        // trailing bytes used to be silently dropped by chunks_exact(4)
+        let err = decode_raw_payload(&[0u8; 6], 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("6 bytes"), "unexpected error: {msg}");
+        assert!(msg.contains("expected 4"), "unexpected error: {msg}");
+        // truncated payloads are rejected too
+        assert!(decode_raw_payload(&[0u8; 8], 3).is_err());
+        assert!(decode_raw_payload(&[], 1).is_err());
     }
 }

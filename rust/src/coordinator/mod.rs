@@ -13,12 +13,15 @@
 //! * [`inference`] — the collaborative-inference pipeline over real AOT
 //!   model segments: front → AE-encode → wire → AE-decode → back.
 //! * [`batcher`] — dynamic batching of edge-side full-model executions for
-//!   raw-input offloads.
+//!   raw-input offloads (flush policy + batch runner).
+//! * [`executor`] — the offload executor: a worker pool serving offloads
+//!   off the server thread, with the batcher wired into its dispatch side.
 //! * [`server`] — the threaded event loop tying it together (std threads +
 //!   mpsc; tokio is unavailable in the offline build).
 
 pub mod batcher;
 pub mod decision;
+pub mod executor;
 pub mod inference;
 pub mod protocol;
 pub mod server;

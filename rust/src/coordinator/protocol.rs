@@ -59,6 +59,9 @@ pub struct InferenceResult {
 pub enum Downlink {
     Decision(FrameDecision),
     Result(InferenceResult),
+    /// NACK: the offload was accepted but could not be served — the owner
+    /// must hear about it rather than wait forever for a `Result`.
+    Error { task_id: u64, error: String },
     Shutdown,
 }
 

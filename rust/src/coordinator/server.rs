@@ -4,24 +4,29 @@
 //! offload executor; each UE is a client holding an `mpsc::Sender<Uplink>`
 //! and its own downlink receiver. Per tick the server:
 //!
-//! 1. drains uplink messages (state reports, offloaded payloads, goodbyes);
+//! 1. drains uplink messages (state reports, offloaded payloads, goodbyes)
+//!    — at most `drain_limit` per tick, so an offload flood cannot starve
+//!    decision broadcasts;
 //! 2. if a decision interval elapsed, assembles the state pool and
 //!    broadcasts the next [`FrameDecision`];
-//! 3. serves offloaded inferences (through the collaborative pipeline) and
-//!    returns results on the owning UE's downlink.
+//! 3. routes offloads to the [`OffloadExecutor`] worker pool (raw inputs
+//!    through the dynamic batcher) and drains completions back onto the
+//!    owning UE's downlink. The server thread itself never runs model
+//!    math unless `exec.workers` is 0 (the inline-serial baseline).
 //!
 //! std threads + mpsc stand in for tokio (offline build — see DESIGN.md);
 //! the loop structure is identical to an async reactor with a timer.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::decision::DecisionMaker;
-use super::inference::CollabPipeline;
+use super::executor::{Completion, ExecutorConfig, ExecutorStats, OffloadCompute, OffloadExecutor};
 use super::protocol::{Downlink, Uplink};
 use super::state_pool::StatePool;
 
@@ -33,7 +38,11 @@ pub struct ServerStats {
     pub offloads_served: usize,
     pub raw_offloads: usize,
     pub feature_offloads: usize,
+    pub offload_errors: usize,
     pub edge_compute_s: f64,
+    /// Executor counters (queue depth / queue wait / batch occupancy);
+    /// default-zero when serving ran inline on the server thread.
+    pub exec: ExecutorStats,
 }
 
 /// Handle to a running edge server.
@@ -49,17 +58,34 @@ pub struct ServerConfig {
     pub decision_interval: Duration,
     /// Stop after this many decision frames even if UEs linger.
     pub max_frames: usize,
+    /// Max uplink messages drained per tick: bounds how long a sustained
+    /// offload flood can defer the decision-broadcast check.
+    pub drain_limit: usize,
+    /// Offload executor knobs (worker count + raw-batching policy).
+    pub exec: ExecutorConfig,
+}
+
+impl ServerConfig {
+    pub fn new(n_ues: usize, decision_interval: Duration, max_frames: usize) -> ServerConfig {
+        ServerConfig {
+            n_ues,
+            decision_interval,
+            max_frames,
+            drain_limit: 128,
+            exec: ExecutorConfig::default(),
+        }
+    }
 }
 
 impl EdgeServer {
     /// Spawn the server thread. `downlinks[ue_id]` receives that UE's
-    /// decisions and inference results. `pipeline` may be `None` for a
+    /// decisions and inference results. `compute` may be `None` for a
     /// decision-only server (pure scheduling, no model serving).
     pub fn spawn(
         cfg: ServerConfig,
         mut pool: StatePool,
         mut decisions: DecisionMaker,
-        pipeline: Option<CollabPipeline>,
+        compute: Option<Arc<dyn OffloadCompute>>,
     ) -> Result<(EdgeServer, Vec<Receiver<Downlink>>)> {
         let (uplink_tx, uplink_rx) = channel::<Uplink>();
         let mut downlink_txs: Vec<Sender<Downlink>> = Vec::with_capacity(cfg.n_ues);
@@ -73,7 +99,7 @@ impl EdgeServer {
         let handle = std::thread::Builder::new()
             .name("edge-server".into())
             .spawn(move || {
-                server_loop(cfg, uplink_rx, downlink_txs, &mut pool, &mut decisions, pipeline)
+                server_loop(cfg, uplink_rx, downlink_txs, &mut pool, &mut decisions, compute)
             })?;
 
         Ok((
@@ -94,13 +120,37 @@ impl EdgeServer {
     }
 }
 
+/// Send a finished offload to its owner — a `Result` on success, an
+/// `Error` NACK on failure (the owner must never wait forever).
+fn route_completion(c: Completion, downlinks: &[Sender<Downlink>], stats: &mut ServerStats) {
+    match c.outcome {
+        Ok(result) => {
+            stats.offloads_served += 1;
+            stats.edge_compute_s += result.edge_latency_s;
+            if let Some(tx) = downlinks.get(result.ue_id) {
+                let _ = tx.send(Downlink::Result(result));
+            }
+        }
+        Err(e) => {
+            stats.offload_errors += 1;
+            log::error!("offload task {} from UE {}: {e:#}", c.task_id, c.ue_id);
+            if let Some(tx) = downlinks.get(c.ue_id) {
+                let _ = tx.send(Downlink::Error {
+                    task_id: c.task_id,
+                    error: format!("{e:#}"),
+                });
+            }
+        }
+    }
+}
+
 fn server_loop(
     cfg: ServerConfig,
     uplink: Receiver<Uplink>,
     downlinks: Vec<Sender<Downlink>>,
     pool: &mut StatePool,
     decisions: &mut DecisionMaker,
-    pipeline: Option<CollabPipeline>,
+    compute: Option<Arc<dyn OffloadCompute>>,
 ) -> ServerStats {
     let mut stats = ServerStats::default();
     let mut alive: HashMap<usize, bool> = (0..downlinks.len()).map(|i| (i, true)).collect();
@@ -110,34 +160,71 @@ fn server_loop(
     // set when every uplink sender is gone: no client can ever speak again
     let mut uplink_disconnected = false;
 
+    // with workers, the server thread only routes; model math runs in the
+    // pool (workers == 0 keeps the inline-serial baseline)
+    let mut executor = match (&compute, cfg.exec.workers) {
+        (Some(c), w) if w > 0 => match OffloadExecutor::start(c.clone(), cfg.exec) {
+            Ok(ex) => Some(ex),
+            Err(e) => {
+                log::error!("offload executor failed to start, serving inline: {e:#}");
+                None
+            }
+        },
+        _ => None,
+    };
+
     loop {
-        // -- drain the uplink --
-        loop {
+        // -- drain the uplink (bounded per tick) --
+        let mut drained = 0usize;
+        while drained < cfg.drain_limit.max(1) {
             match uplink.try_recv() {
                 Ok(Uplink::Report(r)) => {
+                    drained += 1;
                     stats.reports += 1;
                     pool.ingest(r);
                 }
                 Ok(Uplink::Offload(req)) => {
-                    if let Some(pipe) = pipeline.as_ref() {
-                        if req.b == 0 {
-                            stats.raw_offloads += 1;
-                        } else {
-                            stats.feature_offloads += 1;
+                    drained += 1;
+                    let Some(cmp) = compute.as_ref() else {
+                        // decision-only server: NACK rather than silently
+                        // dropping — the owner must never wait forever
+                        stats.offload_errors += 1;
+                        if let Some(tx) = downlinks.get(req.ue_id) {
+                            let _ = tx.send(Downlink::Error {
+                                task_id: req.task_id,
+                                error: "server is decision-only (no serving compute)".into(),
+                            });
                         }
-                        match pipe.serve_offload(&req) {
-                            Ok(result) => {
-                                stats.offloads_served += 1;
-                                stats.edge_compute_s += result.edge_latency_s;
-                                if let Some(tx) = downlinks.get(req.ue_id) {
-                                    let _ = tx.send(Downlink::Result(result));
-                                }
+                        continue;
+                    };
+                    if req.b == 0 {
+                        stats.raw_offloads += 1;
+                    } else {
+                        stats.feature_offloads += 1;
+                    }
+                    match executor.as_mut() {
+                        Some(ex) => ex.submit(req),
+                        None => {
+                            let done = Completion {
+                                ue_id: req.ue_id,
+                                task_id: req.task_id,
+                                outcome: cmp.serve(&req),
+                                queue_wait: Duration::ZERO,
+                                batch_size: 1,
+                            };
+                            route_completion(done, &downlinks, &mut stats);
+                            // inline serving runs model math inside this
+                            // loop: bound the drain by time too, not just
+                            // message count, so a flood cannot defer the
+                            // decision tick
+                            if last_decision.elapsed() >= cfg.decision_interval {
+                                break;
                             }
-                            Err(e) => log::error!("offload from UE {}: {e:#}", req.ue_id),
                         }
                     }
                 }
                 Ok(Uplink::Goodbye { ue_id }) => {
+                    drained += 1;
                     alive.insert(ue_id, false);
                 }
                 Err(TryRecvError::Empty) => break,
@@ -147,6 +234,16 @@ fn server_loop(
                     uplink_disconnected = true;
                     break;
                 }
+            }
+        }
+        let mut worked = drained > 0;
+
+        // -- pump the batcher, route finished offloads --
+        if let Some(ex) = executor.as_mut() {
+            ex.pump(Instant::now());
+            for c in ex.try_completions() {
+                worked = true;
+                route_completion(c, &downlinks, &mut stats);
             }
         }
 
@@ -182,7 +279,19 @@ fn server_loop(
             last_decision = Instant::now();
         }
 
-        std::thread::sleep(Duration::from_micros(200));
+        if !worked {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    // graceful drain: every accepted offload still completes and reaches
+    // its owner before the shutdown frames go out
+    if let Some(ex) = executor.take() {
+        let (rest, xstats) = ex.drain_shutdown();
+        for c in rest {
+            route_completion(c, &downlinks, &mut stats);
+        }
+        stats.exec = xstats;
     }
 
     for tx in &downlinks {
@@ -195,7 +304,7 @@ fn server_loop(
 mod tests {
     use super::*;
     use crate::coordinator::decision::StaticDecision;
-    use crate::coordinator::protocol::UeStateReport;
+    use crate::coordinator::protocol::{OffloadRequest, UeStateReport};
     use crate::coordinator::state_pool::StateNorm;
     use crate::env::HybridAction;
 
@@ -214,11 +323,7 @@ mod tests {
         let dm = DecisionMaker::new(Box::new(StaticDecision {
             actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
         }));
-        let cfg = ServerConfig {
-            n_ues: n,
-            decision_interval: Duration::from_millis(5),
-            max_frames: 3,
-        };
+        let cfg = ServerConfig::new(n, Duration::from_millis(5), 3);
         let (server, downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
 
         // all UEs report, then await decisions
@@ -251,6 +356,45 @@ mod tests {
     }
 
     #[test]
+    fn decision_only_server_nacks_offloads() {
+        let pool = StatePool::new(
+            1,
+            StateNorm {
+                lambda_tasks: 10.0,
+                frame_s: 0.5,
+                max_bits: 1e6,
+                d_max: 100.0,
+            },
+        );
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 1],
+        }));
+        let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
+        let (server, downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
+        server
+            .uplink
+            .send(Uplink::Offload(OffloadRequest {
+                ue_id: 0,
+                task_id: 7,
+                b: 0,
+                payload: Vec::new(),
+                calibration: None,
+            }))
+            .unwrap();
+        match downlinks[0].recv_timeout(Duration::from_secs(2)).unwrap() {
+            Downlink::Error { task_id, error } => {
+                assert_eq!(task_id, 7);
+                assert!(error.contains("decision-only"), "unexpected NACK: {error}");
+            }
+            other => panic!("expected a NACK, got {other:?}"),
+        }
+        server.uplink.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+        let stats = server.join();
+        assert_eq!(stats.offload_errors, 1);
+        assert_eq!(stats.raw_offloads, 0, "dropped offloads are not counted as accepted");
+    }
+
+    #[test]
     fn dropped_uplink_without_goodbye_shuts_down() {
         let n = 2;
         let pool = StatePool::new(
@@ -265,12 +409,8 @@ mod tests {
         let dm = DecisionMaker::new(Box::new(StaticDecision {
             actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
         }));
-        let cfg = ServerConfig {
-            n_ues: n,
-            decision_interval: Duration::from_millis(5),
-            // huge frame budget: only disconnection can end the loop quickly
-            max_frames: usize::MAX,
-        };
+        // huge frame budget: only disconnection can end the loop quickly
+        let cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
         let (server, _downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
         server
             .uplink

@@ -18,8 +18,10 @@ pub struct StatePool {
     n_ues: usize,
     norm: StateNorm,
     reports: Vec<Option<UeStateReport>>,
-    /// Number of fresh reports since the last assemble().
-    fresh: usize,
+    /// Per-slot freshness: set on ingest, cleared by assemble(). Held
+    /// reports stay `Some` forever, so freshness cannot be derived from
+    /// the slot itself — a re-report after an assemble must count again.
+    fresh: Vec<bool>,
 }
 
 impl StatePool {
@@ -28,15 +30,13 @@ impl StatePool {
             n_ues,
             norm,
             reports: vec![None; n_ues],
-            fresh: 0,
+            fresh: vec![false; n_ues],
         }
     }
 
     pub fn ingest(&mut self, r: UeStateReport) {
         if r.ue_id < self.n_ues {
-            if self.reports[r.ue_id].is_none() {
-                self.fresh += 1;
-            }
+            self.fresh[r.ue_id] = true;
             self.reports[r.ue_id] = Some(r);
         }
     }
@@ -46,8 +46,9 @@ impl StatePool {
         self.reports.iter().all(|r| r.is_some())
     }
 
+    /// Number of UEs with a fresh (not-yet-assembled) report.
     pub fn fresh_count(&self) -> usize {
-        self.fresh
+        self.fresh.iter().filter(|&&f| f).count()
     }
 
     /// Assemble the normalized `{k, l, n, d}` state vector. Missing reports
@@ -84,7 +85,7 @@ impl StatePool {
                     .unwrap_or(0.0),
             );
         }
-        self.fresh = 0;
+        self.fresh.fill(false);
         s
     }
 }
@@ -148,6 +149,25 @@ mod tests {
         // after drain, the old report is still held
         let s = pool.assemble();
         assert!(s[0] > 0.0);
+    }
+
+    #[test]
+    fn re_reports_count_as_fresh_after_assemble() {
+        // regression: the counter used to increment only on None -> Some,
+        // so every report after the first assemble() was invisible
+        let mut pool = StatePool::new(3, norm());
+        pool.ingest(report(0, 10));
+        pool.ingest(report(1, 10));
+        assert_eq!(pool.fresh_count(), 2);
+        let _ = pool.assemble();
+        assert_eq!(pool.fresh_count(), 0);
+        pool.ingest(report(0, 9));
+        assert_eq!(pool.fresh_count(), 1, "re-report must count as fresh");
+        // double-report of the same UE counts once
+        pool.ingest(report(0, 8));
+        assert_eq!(pool.fresh_count(), 1);
+        let _ = pool.assemble();
+        assert_eq!(pool.fresh_count(), 0);
     }
 
     #[test]

@@ -207,13 +207,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for img in &images {
         let (logits, t) = pipeline.infer_split(img, point)?;
         let local = pipeline.infer_local(img)?;
-        let am = |v: &[f32]| {
-            v.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
-        };
+        let am = macci::coordinator::inference::argmax;
         if am(&logits) == am(&local) {
             agree += 1;
         }

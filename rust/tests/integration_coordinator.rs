@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use macci::compress::ae::AeCompressor;
-use macci::coordinator::batcher::{BatchItem, DynamicBatcher};
+use macci::coordinator::batcher::{BatchItem, BatchRunner, DynamicBatcher};
 use macci::coordinator::inference::CollabPipeline;
 use macci::coordinator::protocol::OffloadRequest;
 use macci::exp::fig4::smooth_images;
@@ -148,8 +148,8 @@ fn ae_compressor_rate_matches_manifest() {
 #[test]
 fn dynamic_batcher_flushes_by_size_and_age() {
     let Some(store) = store_with_models() else { return };
-    let mut batcher =
-        DynamicBatcher::new(&store, "resnet18", Duration::from_millis(10)).unwrap();
+    let runner = BatchRunner::from_store(&store, "resnet18").unwrap();
+    let mut batcher = DynamicBatcher::new(runner.wire_batch(), Duration::from_millis(10));
     let hw = store.model("resnet18").unwrap().input_hw;
     let images = smooth_images(9, hw, 2);
     let now = std::time::Instant::now();
@@ -162,7 +162,7 @@ fn dynamic_batcher_flushes_by_size_and_age() {
         });
     }
     assert!(batcher.should_flush(now), "9 > max_batch triggers flush");
-    let out = batcher.flush().unwrap();
+    let out = runner.run(batcher.take_batch()).unwrap();
     assert_eq!(out.len(), 8, "one full batch");
     assert_eq!(batcher.pending(), 1);
     // batched results must match b1 execution
@@ -176,6 +176,6 @@ fn dynamic_batcher_flushes_by_size_and_age() {
     // age-based flush for the remainder
     std::thread::sleep(Duration::from_millis(12));
     assert!(batcher.should_flush(std::time::Instant::now()));
-    let rest = batcher.flush().unwrap();
+    let rest = runner.run(batcher.take_batch()).unwrap();
     assert_eq!(rest.len(), 1);
 }

@@ -1,0 +1,299 @@
+//! Threaded-server serving integration: the offload executor under load,
+//! concurrency between decision broadcasts and offload serving, and
+//! graceful drain-on-shutdown. Runs fully offline on the synthetic
+//! offload compute (the CNN artifacts need the PJRT backend).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::executor::{ExecutorConfig, OffloadCompute, SyntheticCompute};
+use macci::coordinator::protocol::{Downlink, OffloadRequest, UeStateReport, Uplink};
+use macci::coordinator::server::{EdgeServer, ServerConfig, ServerStats};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+
+fn pool(n: usize) -> StatePool {
+    StatePool::new(
+        n,
+        StateNorm {
+            lambda_tasks: 10.0,
+            frame_s: 0.5,
+            max_bits: 1e6,
+            d_max: 100.0,
+        },
+    )
+}
+
+fn decisions(n: usize) -> DecisionMaker {
+    DecisionMaker::new(Box::new(StaticDecision {
+        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n],
+    }))
+}
+
+fn report(ue: usize) -> Uplink {
+    Uplink::Report(UeStateReport {
+        ue_id: ue,
+        tasks_left: 5,
+        compute_left_s: 0.0,
+        offload_left_bits: 0.0,
+        distance_m: 40.0,
+    })
+}
+
+fn raw_offload(ue: usize, task: u64, elems: usize) -> Uplink {
+    // payload bytes vary with the task id so logits differ per task
+    Uplink::Offload(OffloadRequest {
+        ue_id: ue,
+        task_id: task,
+        b: 0,
+        payload: vec![(task % 251) as u8; 4 * elems],
+        calibration: None,
+    })
+}
+
+/// The acceptance scenario: decision frames keep broadcasting while a
+/// sustained offload flood is being served concurrently (bounded uplink
+/// drain + worker pool — the server thread never blocks on model math).
+#[test]
+fn decisions_broadcast_while_offloads_flood() {
+    let n = 2;
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(300)));
+    let elems = compute.image_elems;
+    let mut cfg = ServerConfig::new(n, Duration::from_millis(10), usize::MAX);
+    cfg.drain_limit = 32;
+    cfg.exec = ExecutorConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    };
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let (server, mut downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();
+
+    for ue in 0..n {
+        server.uplink.send(report(ue)).unwrap();
+    }
+
+    // UE 1 floods raw offloads from its own thread for the whole test
+    let flood_uplink = server.uplink.clone();
+    let flood_done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flood_done_tx = flood_done.clone();
+    let flooder = std::thread::spawn(move || {
+        let mut sent = 0u64;
+        let t0 = Instant::now();
+        // long flood window + generous decision budget below keep this
+        // robust on oversubscribed CI machines
+        while t0.elapsed() < Duration::from_millis(600) {
+            flood_uplink.send(raw_offload(1, sent, elems)).unwrap();
+            sent += 1;
+            if sent % 2 == 0 {
+                // sustained pressure, not an instantaneous burst
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        }
+        flood_done_tx.store(true, std::sync::atomic::Ordering::SeqCst);
+        sent
+    });
+
+    // meanwhile UE 0 must keep hearing decision frames: 3 decisions at a
+    // 10 ms cadence need ~30 ms of a 600 ms flood
+    let rx0 = &downlinks[0];
+    let mut decisions_seen = 0;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while decisions_seen < 3 && Instant::now() < deadline {
+        match rx0.recv_timeout(Duration::from_millis(500)) {
+            Ok(Downlink::Decision(_)) => decisions_seen += 1,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    let still_flooding = !flood_done.load(std::sync::atomic::Ordering::SeqCst);
+    let sent = flooder.join().unwrap();
+    assert!(
+        decisions_seen >= 3,
+        "decisions starved under offload flood: saw {decisions_seen} (flood sent {sent})"
+    );
+    assert!(
+        still_flooding,
+        "the 3rd decision must arrive while the flood is still running"
+    );
+
+    // let the flood finish serving, then wind down
+    for ue in 0..n {
+        server.uplink.send(Uplink::Goodbye { ue_id: ue }).unwrap();
+    }
+    let rx1 = downlinks.remove(1);
+    let results = count_results_until_shutdown(&rx1);
+    let stats = server.join();
+    assert_eq!(stats.raw_offloads as u64, sent);
+    assert_eq!(
+        stats.offloads_served + stats.offload_errors,
+        sent as usize,
+        "every accepted offload must complete (drain-on-shutdown)"
+    );
+    assert_eq!(stats.offload_errors, 0);
+    assert_eq!(results as u64, sent, "every result reaches the owning UE");
+    assert!(stats.frames >= 3);
+    assert!(stats.exec.batches > 0, "flood must exercise the batcher");
+    assert!(stats.exec.max_queue_depth > 0);
+}
+
+fn count_results_until_shutdown(rx: &Receiver<Downlink>) -> usize {
+    let mut results = 0;
+    loop {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Downlink::Result(_)) => results += 1,
+            Ok(Downlink::Decision(_) | Downlink::Error { .. }) => {}
+            Ok(Downlink::Shutdown) | Err(_) => return results,
+        }
+    }
+}
+
+/// Closed-loop pooled serving: every task completes, raw offloads ride
+/// batches, and the executor counters land in `ServerStats`.
+#[test]
+fn pooled_server_serves_all_tasks_and_batches() {
+    let n = 4;
+    let tasks = 24u64;
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(200)));
+    let elems = compute.image_elems;
+    let mut cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
+    cfg.exec = ExecutorConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_micros(500),
+    };
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let (server, downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();
+
+    let handles: Vec<_> = downlinks
+        .into_iter()
+        .enumerate()
+        .map(|(ue, rx)| {
+            let uplink = server.uplink.clone();
+            std::thread::spawn(move || {
+                uplink.send(report(ue)).unwrap();
+                let mut done = 0u64;
+                for task in 0..tasks {
+                    uplink.send(raw_offload(ue, task, elems)).unwrap();
+                    loop {
+                        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                            Downlink::Result(res) => {
+                                assert_eq!(res.ue_id, ue);
+                                assert_eq!(res.task_id, task);
+                                assert_eq!(res.argmax, res.logits.len() - 1);
+                                done += 1;
+                                break;
+                            }
+                            Downlink::Decision(_) => {}
+                            Downlink::Error { error, .. } => panic!("offload failed: {error}"),
+                            Downlink::Shutdown => panic!("server shut down early"),
+                        }
+                    }
+                }
+                uplink.send(Uplink::Goodbye { ue_id: ue }).unwrap();
+                done
+            })
+        })
+        .collect();
+
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let stats = server.join();
+    assert_eq!(total, n as u64 * tasks);
+    assert_eq!(stats.offloads_served as u64, total);
+    assert_eq!(stats.offload_errors, 0);
+    assert!(stats.exec.batches > 0, "raw offloads must ride the batcher");
+    assert!(stats.exec.batched_items as u64 == total);
+    assert!(stats.exec.batch_occupancy(4) > 0.0);
+    assert!(stats.frames >= 1, "decisions fire alongside serving");
+}
+
+/// A malformed raw payload turns into an `Error` NACK on the owner's
+/// downlink — the server keeps running and the counter records it.
+#[test]
+fn malformed_payload_is_counted_not_fatal() {
+    let n = 1;
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(50)));
+    let elems = compute.image_elems;
+    let mut cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
+    cfg.exec.workers = 1;
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let (server, downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();
+
+    server.uplink.send(report(0)).unwrap();
+    server
+        .uplink
+        .send(Uplink::Offload(OffloadRequest {
+            ue_id: 0,
+            task_id: 0,
+            b: 0,
+            payload: vec![0u8; 3], // not 4 * elems
+            calibration: None,
+        }))
+        .unwrap();
+    // a healthy offload right after must still be served
+    server.uplink.send(raw_offload(0, 1, elems)).unwrap();
+
+    let mut served = 0;
+    let mut nacked = 0;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while (served == 0 || nacked == 0) && Instant::now() < deadline {
+        match downlinks[0].recv_timeout(Duration::from_millis(500)) {
+            Ok(Downlink::Result(res)) => {
+                assert_eq!(res.task_id, 1);
+                served += 1;
+            }
+            Ok(Downlink::Error { task_id, error }) => {
+                assert_eq!(task_id, 0);
+                assert!(error.contains("bytes"), "unexpected NACK text: {error}");
+                nacked += 1;
+            }
+            _ => {}
+        }
+    }
+    server.uplink.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+    let stats: ServerStats = server.join();
+    assert_eq!(served, 1);
+    assert_eq!(nacked, 1, "the owner must hear about the failure");
+    assert_eq!(stats.offload_errors, 1);
+    assert_eq!(stats.offloads_served, 1);
+}
+
+/// Feature offloads (b >= 1) bypass the batcher and dispatch per item.
+#[test]
+fn feature_offloads_are_served_individually() {
+    let n = 1;
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(50)));
+    let mut cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
+    cfg.exec.workers = 2;
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let (server, downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();
+
+    server.uplink.send(report(0)).unwrap();
+    for task in 0..6u64 {
+        server
+            .uplink
+            .send(Uplink::Offload(OffloadRequest {
+                ue_id: 0,
+                task_id: task,
+                b: 2,
+                payload: vec![7u8; 11],
+                calibration: Some((0.0, 1.0)),
+            }))
+            .unwrap();
+    }
+    let mut got = 0;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while got < 6 && Instant::now() < deadline {
+        if let Ok(Downlink::Result(_)) = downlinks[0].recv_timeout(Duration::from_millis(500)) {
+            got += 1;
+        }
+    }
+    server.uplink.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+    let stats = server.join();
+    assert_eq!(got, 6);
+    assert_eq!(stats.feature_offloads, 6);
+    assert_eq!(stats.exec.batches, 0, "features must not enter the batcher");
+    assert_eq!(stats.offloads_served, 6);
+}
