@@ -16,6 +16,9 @@ cargo fmt --check
 echo "== clippy =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== rustdoc (warning-free) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p macci -q
+
 echo "== PJRT path compile-check (xla stub) =="
 cargo build --release --features xla-pjrt
 
@@ -28,5 +31,11 @@ MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_e2e
 
 echo "== serving baseline (BENCH_serving.json) =="
 MACCI_BENCH_SERVING_TASKS=${MACCI_BENCH_SERVING_TASKS:-48} cargo bench --bench bench_serving
+
+echo "== wire-codec baseline (BENCH_wire.json) =="
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_wire
+
+echo "== remote serving (loopback TCP, end-to-end) =="
+cargo run --release --example remote_serving -- 2 8
 
 echo "CI OK"

@@ -1,0 +1,123 @@
+//! Remote serving over loopback TCP: the edge server binds a real socket
+//! and UE clients attach through `TcpClientTransport` — the same
+//! handshake → report → decision → offload → result workflow a UE on
+//! another machine would drive (README §Remote serving). Runs fully
+//! offline on the synthetic offload compute; swap in `PipelineCompute`
+//! for real model serving.
+//!
+//! One UE also ships a deliberately malformed feature offload
+//! (calibration missing) to show the admission-time `Error` NACK.
+//!
+//! Run: `cargo run --release --example remote_serving -- [n_ues] [tasks_per_ue] [port]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::executor::{OffloadCompute, SyntheticCompute};
+use macci::coordinator::protocol::UeStateReport;
+use macci::coordinator::server::{EdgeServer, ServerConfig};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+use macci::transport::tcp::{TcpClientTransport, TcpServerTransport};
+use macci::transport::ue::UeClient;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_ues: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let tasks: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let port: u16 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(300)));
+    let elems = compute.image_elems;
+    let pool = StatePool::new(
+        n_ues,
+        StateNorm {
+            lambda_tasks: tasks as f64,
+            frame_s: 0.5,
+            max_bits: 1e6,
+            d_max: 100.0,
+        },
+    );
+    let decisions = DecisionMaker::new(Box::new(StaticDecision {
+        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n_ues],
+    }));
+    let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(20), usize::MAX);
+    cfg.exec.workers = 2;
+
+    let transport = TcpServerTransport::bind(("127.0.0.1", port), n_ues)?;
+    let addr = transport.local_addr();
+    println!("=== remote serving: edge server on {addr}, {n_ues} UEs x {tasks} tasks ===");
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let server = EdgeServer::spawn_on(cfg, pool, decisions, compute, transport)?;
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_ues)
+        .map(|ue| {
+            std::thread::spawn(move || -> Result<(u64, f64)> {
+                // in a real deployment this block runs on another machine
+                let mut client = UeClient::new(TcpClientTransport::connect(addr, ue)?);
+                client.report(UeStateReport {
+                    ue_id: ue,
+                    tasks_left: tasks,
+                    compute_left_s: 0.0,
+                    offload_left_bits: 0.0,
+                    distance_m: 40.0,
+                })?;
+                let d = client.await_decision(Duration::from_secs(15))?;
+                if ue == 0 {
+                    println!(
+                        "UE 0: decision for frame {} covers {} UEs",
+                        d.frame,
+                        d.actions.len()
+                    );
+                    // show the NACK path: feature offloads need calibration
+                    let demo_task = 424_242u64;
+                    client.offload(demo_task, 2, vec![1u8; 8], None)?;
+                    let err = client
+                        .await_result(demo_task, Duration::from_secs(15))
+                        .expect_err("the server must NACK a calibration-less feature offload");
+                    println!("UE 0: NACK demo -> {err:#}");
+                }
+                let mut rtt = 0.0f64;
+                for task in 0..tasks {
+                    let payload = vec![(task % 251) as u8 + 1; 4 * elems];
+                    let sent = Instant::now();
+                    client.offload(task, 0, payload, None)?;
+                    let res = client.await_result(task, Duration::from_secs(15))?;
+                    rtt += sent.elapsed().as_secs_f64();
+                    assert_eq!(res.task_id, task);
+                }
+                client.goodbye()?;
+                Ok((tasks, rtt))
+            })
+        })
+        .collect();
+
+    let mut total = 0u64;
+    let mut rtt = 0.0f64;
+    for h in handles {
+        let (done, r) = h.join().expect("ue thread")?;
+        total += done;
+        rtt += r;
+    }
+    let stats = server.join();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rate = total as f64 / wall;
+    println!("served {total} offloads in {wall:.2}s -> {rate:.1} req/s over TCP");
+    let mean_rtt_ms = rtt / total as f64 * 1e3;
+    println!("mean round-trip (socket + queue + compute): {mean_rtt_ms:.2} ms");
+    println!(
+        "ServerStats: {} frames | {} reports | {} served ({} raw)",
+        stats.frames, stats.reports, stats.offloads_served, stats.raw_offloads
+    );
+    println!("offload errors: {} (1 = the NACK demo)", stats.offload_errors);
+    println!(
+        "executor: peak queue {} | mean queue wait {:.2} ms | {} batches",
+        stats.exec.max_queue_depth, stats.exec.mean_queue_wait_s() * 1e3, stats.exec.batches
+    );
+    assert_eq!(stats.offloads_served as u64, total, "all offloads must complete");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Wire-codec throughput: encode + decode for the two offload shapes the
+//! serving path actually ships — a raw-input frame (f32 image bytes) and
+//! an AE-coded feature frame (packed codes + calibration) — plus the
+//! small control frames (report / decision / result). Emits
+//! BENCH_wire.json with per-op times and effective MB/s, next to
+//! BENCH_serving.json in ci.sh.
+
+use macci::coordinator::protocol::{
+    Downlink, FrameDecision, InferenceResult, OffloadRequest, UeStateReport, Uplink,
+};
+use macci::coordinator::wire::{decode_frame, encode_frame, Frame};
+use macci::env::HybridAction;
+use macci::util::bench::{black_box, Bench};
+use macci::util::json::Json;
+
+/// Raw offload: a 3×32×32 f32 image (the demo backbone's input), 12 KiB.
+fn raw_offload() -> Frame {
+    let elems = 3 * 32 * 32;
+    let payload: Vec<u8> = (0..elems)
+        .flat_map(|i| ((i % 251) as f32 / 251.0).to_le_bytes())
+        .collect();
+    Frame::Up(Uplink::Offload(OffloadRequest {
+        ue_id: 1,
+        task_id: 42,
+        b: 0,
+        payload,
+        calibration: None,
+    }))
+}
+
+/// AE-coded offload: 8 compressed channels at 16×16, 8-bit codes — the
+/// paper's compressed-feature shape, 2 KiB on the wire.
+fn ae_offload() -> Frame {
+    let payload: Vec<u8> = (0..8 * 16 * 16).map(|i| (i % 256) as u8).collect();
+    Frame::Up(Uplink::Offload(OffloadRequest {
+        ue_id: 1,
+        task_id: 43,
+        b: 2,
+        payload,
+        calibration: Some((-1.25, 3.5)),
+    }))
+}
+
+fn report_frame() -> Frame {
+    Frame::Up(Uplink::Report(UeStateReport {
+        ue_id: 3,
+        tasks_left: 17,
+        compute_left_s: 0.02,
+        offload_left_bits: 1e5,
+        distance_m: 50.0,
+    }))
+}
+
+fn decision_frame(n_ues: usize) -> Frame {
+    Frame::Down(Downlink::Decision(FrameDecision {
+        frame: 7,
+        actions: vec![HybridAction::new(2, 1, 0.3, 1.0); n_ues],
+    }))
+}
+
+fn result_frame() -> Frame {
+    Frame::Down(Downlink::Result(InferenceResult {
+        ue_id: 3,
+        task_id: 42,
+        logits: (0..101).map(|i| i as f32 * 0.01).collect(),
+        argmax: 100,
+        edge_latency_s: 0.004,
+    }))
+}
+
+fn main() {
+    let cases: Vec<(&str, Frame)> = vec![
+        ("raw_offload", raw_offload()),
+        ("ae_offload", ae_offload()),
+        ("report", report_frame()),
+        ("decision_ues16", decision_frame(16)),
+        ("result", result_frame()),
+    ];
+
+    let mut b = Bench::new("wire");
+    let mut sizes = Vec::new();
+    for (name, frame) in &cases {
+        let encoded = encode_frame(frame);
+        sizes.push((name.to_string(), encoded.len()));
+        println!("{name}: {} bytes on the wire", encoded.len());
+        b.run(&format!("encode_{name}"), || {
+            black_box(encode_frame(black_box(frame)));
+        });
+        b.run(&format!("decode_{name}"), || {
+            black_box(decode_frame(black_box(&encoded)).expect("valid frame"));
+        });
+    }
+    b.report();
+
+    // per-case effective throughput (frame bytes / mean time)
+    let mut json = Json::obj();
+    for r in b.results() {
+        let case = r.name.trim_start_matches("encode_").trim_start_matches("decode_");
+        let bytes = sizes
+            .iter()
+            .find(|(n, _)| n.as_str() == case)
+            .map(|&(_, s)| s)
+            .unwrap_or(0);
+        let mb_per_s = bytes as f64 / (r.mean_ns / 1e9) / 1e6;
+        json = json.set(
+            &format!("wire/{}", r.name),
+            Json::obj()
+                .set("mean_ns", r.mean_ns)
+                .set("p99_ns", r.p99_ns)
+                .set("frame_bytes", bytes as f64)
+                .set("mb_per_s", mb_per_s),
+        );
+        println!("{:>24}: {:8.1} MB/s", r.name, mb_per_s);
+    }
+    json.write_file("BENCH_wire.json").unwrap();
+    println!("wrote BENCH_wire.json");
+}

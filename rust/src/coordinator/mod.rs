@@ -7,6 +7,9 @@
 //! features which the edge completes through the back model segment.
 //!
 //! * [`protocol`] — the UE ⇄ server message types.
+//! * [`wire`] — the versioned byte-level codec those messages ride when
+//!   UEs are remote (length-prefixed, CRC-protected frames; layouts in
+//!   DESIGN.md §Wire-Protocol). Transports live in [`crate::transport`].
 //! * [`state_pool`] — "the edge server collects and stores the states of
 //!   all UEs" (Sec. 3.1): assembly of the global state vector.
 //! * [`decision`] — policy wrapper producing per-frame joint actions.
@@ -26,3 +29,4 @@ pub mod inference;
 pub mod protocol;
 pub mod server;
 pub mod state_pool;
+pub mod wire;

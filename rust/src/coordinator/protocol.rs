@@ -1,11 +1,18 @@
 //! UE ⇄ edge-server message types (Sec. 3.1 workflow).
 //!
-//! In a real deployment these cross the radio; here they cross mpsc
-//! channels between UE threads and the server loop, but the schema is the
-//! same: state reports up, per-frame decisions down, offloaded payloads up,
-//! inference results down.
+//! These frames cross the radio link between UEs and the edge server:
+//! state reports up, per-frame decisions down, offloaded payloads up,
+//! inference results down. *How* they cross is pluggable
+//! ([`crate::transport`]): in-process mpsc channels for simulation and
+//! tests, or real TCP sockets using the byte-level codec in
+//! [`super::wire`] (frame layouts in DESIGN.md §Wire-Protocol).
 
 use crate::env::HybridAction;
+
+/// Reserved `task_id` for session-level [`Downlink::Error`] frames
+/// (handshake rejection, wire desync) — real tasks must never use it, so
+/// a session NACK can never be misattributed to an in-flight offload.
+pub const SESSION_ERROR_TASK: u64 = u64::MAX;
 
 /// One UE's per-frame state report (the four Sec. 4.3 components).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,7 +29,7 @@ pub struct UeStateReport {
 }
 
 /// The decision broadcast for one frame.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FrameDecision {
     pub frame: usize,
     /// One hybrid action per UE, indexed by ue_id.
@@ -30,7 +37,7 @@ pub struct FrameDecision {
 }
 
 /// An offloaded payload arriving at the edge.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OffloadRequest {
     pub ue_id: usize,
     pub task_id: u64,
@@ -44,7 +51,7 @@ pub struct OffloadRequest {
 }
 
 /// Edge-side inference result returned to the UE.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InferenceResult {
     pub ue_id: usize,
     pub task_id: u64,
@@ -55,7 +62,7 @@ pub struct InferenceResult {
 }
 
 /// Server -> UE control messages.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Downlink {
     Decision(FrameDecision),
     Result(InferenceResult),
@@ -66,7 +73,7 @@ pub enum Downlink {
 }
 
 /// UE -> server messages.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Uplink {
     Report(UeStateReport),
     Offload(OffloadRequest),

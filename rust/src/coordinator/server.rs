@@ -1,12 +1,15 @@
 //! The threaded edge-server event loop (Sec. 3.1 workflow, Fig. 2a).
 //!
 //! One server thread owns the state pool, the decision maker and the
-//! offload executor; each UE is a client holding an `mpsc::Sender<Uplink>`
-//! and its own downlink receiver. Per tick the server:
+//! offload executor, and speaks to its UEs through a pluggable
+//! [`ServerTransport`] — in-process channels ([`EdgeServer::spawn`]) or
+//! real TCP sockets ([`EdgeServer::spawn_on`] with
+//! [`crate::transport::tcp::TcpServerTransport`]). Per tick the server:
 //!
-//! 1. drains uplink messages (state reports, offloaded payloads, goodbyes)
+//! 1. drains uplink frames (state reports, offloaded payloads, goodbyes)
 //!    — at most `drain_limit` per tick, so an offload flood cannot starve
-//!    decision broadcasts;
+//!    decision broadcasts. Malformed offloads (a feature payload with no
+//!    calibration) are NACKed at admission, before they cost a worker;
 //! 2. if a decision interval elapsed, assembles the state pool and
 //!    broadcasts the next [`FrameDecision`];
 //! 3. routes offloads to the [`OffloadExecutor`] worker pool (raw inputs
@@ -18,7 +21,7 @@
 //! the loop structure is identical to an async reactor with a timer.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -27,8 +30,10 @@ use anyhow::Result;
 
 use super::decision::DecisionMaker;
 use super::executor::{Completion, ExecutorConfig, ExecutorStats, OffloadCompute, OffloadExecutor};
-use super::protocol::{Downlink, Uplink};
+use super::protocol::{Downlink, FrameDecision, Uplink};
 use super::state_pool::StatePool;
+use crate::transport::channel::ChannelServerTransport;
+use crate::transport::{ServerTransport, TransportError};
 
 /// Server-side counters (exposed after shutdown).
 #[derive(Debug, Clone, Copy, Default)]
@@ -45,10 +50,27 @@ pub struct ServerStats {
     pub exec: ExecutorStats,
 }
 
-/// Handle to a running edge server.
+/// Handle to a running edge server on the in-process channel transport.
 pub struct EdgeServer {
     pub uplink: Sender<Uplink>,
+    handle: EdgeServerHandle,
+}
+
+/// Join handle over the server thread; also what [`EdgeServer::spawn_on`]
+/// returns for external transports (e.g. TCP), where there is no
+/// in-process uplink sender to expose.
+pub struct EdgeServerHandle {
     handle: Option<JoinHandle<ServerStats>>,
+}
+
+impl EdgeServerHandle {
+    /// Wait for the server loop to exit and collect its stats.
+    pub fn join(mut self) -> ServerStats {
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
 }
 
 /// Everything the server thread needs.
@@ -78,9 +100,10 @@ impl ServerConfig {
 }
 
 impl EdgeServer {
-    /// Spawn the server thread. `downlinks[ue_id]` receives that UE's
-    /// decisions and inference results. `compute` may be `None` for a
-    /// decision-only server (pure scheduling, no model serving).
+    /// Spawn the server thread on the in-process channel transport.
+    /// `downlinks[ue_id]` receives that UE's decisions and inference
+    /// results. `compute` may be `None` for a decision-only server (pure
+    /// scheduling, no model serving).
     pub fn spawn(
         cfg: ServerConfig,
         mut pool: StatePool,
@@ -95,69 +118,88 @@ impl EdgeServer {
             downlink_txs.push(tx);
             downlink_rxs.push(rx);
         }
+        let mut transport = ChannelServerTransport::from_parts(uplink_rx, downlink_txs);
 
         let handle = std::thread::Builder::new()
             .name("edge-server".into())
             .spawn(move || {
-                server_loop(cfg, uplink_rx, downlink_txs, &mut pool, &mut decisions, compute)
+                server_loop(cfg, &mut transport, &mut pool, &mut decisions, compute)
             })?;
 
         Ok((
             EdgeServer {
                 uplink: uplink_tx,
-                handle: Some(handle),
+                handle: EdgeServerHandle {
+                    handle: Some(handle),
+                },
             },
             downlink_rxs,
         ))
     }
 
+    /// Spawn the server thread on an arbitrary [`ServerTransport`] —
+    /// this is how remote UEs are served over TCP (see the
+    /// `remote_serving` example and README §Remote serving).
+    pub fn spawn_on(
+        cfg: ServerConfig,
+        mut pool: StatePool,
+        mut decisions: DecisionMaker,
+        compute: Option<Arc<dyn OffloadCompute>>,
+        mut transport: impl ServerTransport + 'static,
+    ) -> Result<EdgeServerHandle> {
+        let handle = std::thread::Builder::new()
+            .name("edge-server".into())
+            .spawn(move || {
+                server_loop(cfg, &mut transport, &mut pool, &mut decisions, compute)
+            })?;
+        Ok(EdgeServerHandle {
+            handle: Some(handle),
+        })
+    }
+
     /// Wait for the server loop to exit and collect its stats.
-    pub fn join(mut self) -> ServerStats {
-        self.handle
-            .take()
-            .map(|h| h.join().unwrap_or_default())
-            .unwrap_or_default()
+    pub fn join(self) -> ServerStats {
+        self.handle.join()
     }
 }
 
 /// Send a finished offload to its owner — a `Result` on success, an
 /// `Error` NACK on failure (the owner must never wait forever).
-fn route_completion(c: Completion, downlinks: &[Sender<Downlink>], stats: &mut ServerStats) {
+fn route_completion(c: Completion, transport: &mut dyn ServerTransport, stats: &mut ServerStats) {
     match c.outcome {
         Ok(result) => {
             stats.offloads_served += 1;
             stats.edge_compute_s += result.edge_latency_s;
-            if let Some(tx) = downlinks.get(result.ue_id) {
-                let _ = tx.send(Downlink::Result(result));
-            }
+            let ue_id = result.ue_id;
+            transport.send_to(ue_id, Downlink::Result(result));
         }
         Err(e) => {
             stats.offload_errors += 1;
             log::error!("offload task {} from UE {}: {e:#}", c.task_id, c.ue_id);
-            if let Some(tx) = downlinks.get(c.ue_id) {
-                let _ = tx.send(Downlink::Error {
+            transport.send_to(
+                c.ue_id,
+                Downlink::Error {
                     task_id: c.task_id,
                     error: format!("{e:#}"),
-                });
-            }
+                },
+            );
         }
     }
 }
 
 fn server_loop(
     cfg: ServerConfig,
-    uplink: Receiver<Uplink>,
-    downlinks: Vec<Sender<Downlink>>,
+    transport: &mut dyn ServerTransport,
     pool: &mut StatePool,
     decisions: &mut DecisionMaker,
     compute: Option<Arc<dyn OffloadCompute>>,
 ) -> ServerStats {
     let mut stats = ServerStats::default();
-    let mut alive: HashMap<usize, bool> = (0..downlinks.len()).map(|i| (i, true)).collect();
+    let mut alive: HashMap<usize, bool> = (0..cfg.n_ues).map(|i| (i, true)).collect();
     let mut last_decision = Instant::now();
     // issue an initial decision as soon as the first full pool assembles
     let mut first_decision_done = false;
-    // set when every uplink sender is gone: no client can ever speak again
+    // set when the transport reports closure: no client can ever speak again
     let mut uplink_disconnected = false;
 
     // with workers, the server thread only routes; model math runs in the
@@ -177,24 +219,49 @@ fn server_loop(
         // -- drain the uplink (bounded per tick) --
         let mut drained = 0usize;
         while drained < cfg.drain_limit.max(1) {
-            match uplink.try_recv() {
-                Ok(Uplink::Report(r)) => {
+            match transport.try_recv() {
+                Ok(Some(Uplink::Report(r))) => {
                     drained += 1;
                     stats.reports += 1;
+                    // a report re-enters the UE into the system: a remote
+                    // client that dropped (synthesized Goodbye) and came
+                    // back resumes receiving decision broadcasts
+                    if r.ue_id < cfg.n_ues {
+                        alive.insert(r.ue_id, true);
+                    }
                     pool.ingest(r);
                 }
-                Ok(Uplink::Offload(req)) => {
+                Ok(Some(Uplink::Offload(req))) => {
                     drained += 1;
+                    // admission check: a feature offload without its
+                    // (lo, hi) calibration can never be decoded — NACK
+                    // now instead of failing later on a worker
+                    if req.b >= 1 && req.calibration.is_none() {
+                        stats.offload_errors += 1;
+                        transport.send_to(
+                            req.ue_id,
+                            Downlink::Error {
+                                task_id: req.task_id,
+                                error: format!(
+                                    "feature offload (b = {}) without calibration \
+                                     rejected at admission",
+                                    req.b
+                                ),
+                            },
+                        );
+                        continue;
+                    }
                     let Some(cmp) = compute.as_ref() else {
                         // decision-only server: NACK rather than silently
                         // dropping — the owner must never wait forever
                         stats.offload_errors += 1;
-                        if let Some(tx) = downlinks.get(req.ue_id) {
-                            let _ = tx.send(Downlink::Error {
+                        transport.send_to(
+                            req.ue_id,
+                            Downlink::Error {
                                 task_id: req.task_id,
                                 error: "server is decision-only (no serving compute)".into(),
-                            });
-                        }
+                            },
+                        );
                         continue;
                     };
                     if req.b == 0 {
@@ -212,7 +279,7 @@ fn server_loop(
                                 queue_wait: Duration::ZERO,
                                 batch_size: 1,
                             };
-                            route_completion(done, &downlinks, &mut stats);
+                            route_completion(done, transport, &mut stats);
                             // inline serving runs model math inside this
                             // loop: bound the drain by time too, not just
                             // message count, so a flood cannot defer the
@@ -223,14 +290,21 @@ fn server_loop(
                         }
                     }
                 }
-                Ok(Uplink::Goodbye { ue_id }) => {
+                Ok(Some(Uplink::Goodbye { ue_id })) => {
                     drained += 1;
                     alive.insert(ue_id, false);
                 }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    // every sender clone dropped: treat full disconnection
+                Ok(None) => break,
+                Err(TransportError::Closed) => {
+                    // no client can ever speak again: treat full closure
                     // as shutdown instead of busy-spinning to max_frames
+                    uplink_disconnected = true;
+                    break;
+                }
+                Err(e) => {
+                    // transports validate frames internally; anything
+                    // else reaching the loop is terminal too
+                    log::error!("uplink transport failed: {e}");
                     uplink_disconnected = true;
                     break;
                 }
@@ -243,7 +317,7 @@ fn server_loop(
             ex.pump(Instant::now());
             for c in ex.try_completions() {
                 worked = true;
-                route_completion(c, &downlinks, &mut stats);
+                route_completion(c, transport, &mut stats);
             }
         }
 
@@ -268,11 +342,7 @@ fn server_loop(
                 Ok(d) => {
                     stats.frames += 1;
                     first_decision_done = true;
-                    for (i, tx) in downlinks.iter().enumerate() {
-                        if alive.get(&i).copied().unwrap_or(false) {
-                            let _ = tx.send(Downlink::Decision(d.clone()));
-                        }
-                    }
+                    broadcast_decision(transport, &alive, &d);
                 }
                 Err(e) => log::error!("decision failed: {e:#}"),
             }
@@ -289,15 +359,28 @@ fn server_loop(
     if let Some(ex) = executor.take() {
         let (rest, xstats) = ex.drain_shutdown();
         for c in rest {
-            route_completion(c, &downlinks, &mut stats);
+            route_completion(c, transport, &mut stats);
         }
         stats.exec = xstats;
     }
 
-    for tx in &downlinks {
-        let _ = tx.send(Downlink::Shutdown);
+    for ue_id in 0..cfg.n_ues {
+        transport.send_to(ue_id, Downlink::Shutdown);
     }
     stats
+}
+
+/// One decision frame to every UE still in the system.
+fn broadcast_decision(
+    transport: &mut dyn ServerTransport,
+    alive: &HashMap<usize, bool>,
+    d: &FrameDecision,
+) {
+    for (&ue_id, &is_alive) in alive {
+        if is_alive {
+            transport.send_to(ue_id, Downlink::Decision(d.clone()));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -394,6 +477,54 @@ mod tests {
         assert_eq!(stats.raw_offloads, 0, "dropped offloads are not counted as accepted");
     }
 
+    /// The admission check: a feature offload with no calibration NACKs
+    /// immediately — it never reaches the compute (which would only fail
+    /// it later, on a worker thread).
+    #[test]
+    fn calibrationless_feature_offload_nacks_at_admission() {
+        let pool = StatePool::new(
+            1,
+            StateNorm {
+                lambda_tasks: 10.0,
+                frame_s: 0.5,
+                max_bits: 1e6,
+                d_max: 100.0,
+            },
+        );
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 1],
+        }));
+        let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
+        let compute = Arc::new(crate::coordinator::executor::SyntheticCompute::new(
+            Duration::from_micros(10),
+        ));
+        let (server, downlinks) =
+            EdgeServer::spawn(cfg, pool, dm, Some(compute as Arc<dyn OffloadCompute>)).unwrap();
+        server
+            .uplink
+            .send(Uplink::Offload(OffloadRequest {
+                ue_id: 0,
+                task_id: 3,
+                b: 2,
+                payload: vec![1, 2, 3],
+                calibration: None,
+            }))
+            .unwrap();
+        match downlinks[0].recv_timeout(Duration::from_secs(2)).unwrap() {
+            Downlink::Error { task_id, error } => {
+                assert_eq!(task_id, 3);
+                assert!(error.contains("calibration"), "unexpected NACK: {error}");
+                assert!(error.contains("admission"), "unexpected NACK: {error}");
+            }
+            other => panic!("expected a NACK, got {other:?}"),
+        }
+        server.uplink.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+        let stats = server.join();
+        assert_eq!(stats.offload_errors, 1);
+        assert_eq!(stats.feature_offloads, 0, "rejected offloads are never counted");
+        assert_eq!(stats.exec.submitted, 0, "the executor never sees the request");
+    }
+
     #[test]
     fn dropped_uplink_without_goodbye_shuts_down() {
         let n = 2;
@@ -428,7 +559,7 @@ mod tests {
         let EdgeServer { uplink, handle } = server;
         drop(uplink);
         let t0 = std::time::Instant::now();
-        let stats = handle.unwrap().join().unwrap();
+        let stats = handle.join();
         assert!(
             t0.elapsed() < Duration::from_secs(5),
             "server must exit promptly on full disconnection"

@@ -1,0 +1,711 @@
+//! Byte-level wire codec for the UE ⇄ edge-server protocol (v1).
+//!
+//! [`super::protocol`] defines *what* crosses the radio; this module
+//! defines *how*: a versioned, length-prefixed, CRC-protected binary
+//! framing with explicit little-endian field layouts, so real remote UEs
+//! can speak to the server over any byte stream (see [`crate::transport`]).
+//! The full frame tables live in DESIGN.md §Wire-Protocol — this header is
+//! the normative summary.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  magic        0x4D 0x43 ("MC")
+//!      2     1  version      currently 1
+//!      3     1  type tag     see the TAG_* constants
+//!      4     4  body length  u32 LE, <= MAX_BODY
+//!      8     4  crc32        u32 LE, IEEE CRC-32 over bytes [0..8) + body
+//!     12     n  body         per-tag field layout, all little-endian
+//! ```
+//!
+//! The CRC covers the header prefix *and* the body, so any single
+//! bit-flip anywhere in a frame is detected (property-tested in
+//! `rust/tests/proptests.rs`).
+//!
+//! ## Versioning & compatibility
+//!
+//! * A decoder rejects frames whose `version` it does not know
+//!   ([`WireError::Version`]); field layouts never change within a
+//!   version.
+//! * New frame types get new tags. A decoder that validates the CRC but
+//!   does not know the tag returns [`WireError::UnknownTag`] carrying the
+//!   full frame length, so a same-version peer may skip the frame and
+//!   stay in sync instead of dropping the connection.
+//! * Truncated or corrupt frames are unrecoverable on a stream (framing
+//!   is lost): transports NACK and close the connection.
+//!
+//! Decoding never panics on hostile input: every error path returns a
+//! [`WireError`].
+
+use std::io::{Read, Write};
+
+use super::protocol::{
+    Downlink, FrameDecision, InferenceResult, OffloadRequest, UeStateReport, Uplink,
+};
+use crate::env::HybridAction;
+
+/// First two bytes of every frame: "MC".
+pub const MAGIC: [u8; 2] = [0x4D, 0x43];
+/// Wire-protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed frame header size (magic + version + tag + length + crc).
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a frame body — a corrupt length prefix must not be able
+/// to trigger a multi-gigabyte allocation.
+pub const MAX_BODY: usize = 1 << 26; // 64 MiB
+
+/// UE → server: session handshake (first frame on every connection).
+pub const TAG_HELLO: u8 = 0x01;
+/// UE → server: per-frame state report.
+pub const TAG_REPORT: u8 = 0x02;
+/// UE → server: offloaded payload (raw input or AE-coded feature).
+pub const TAG_OFFLOAD: u8 = 0x03;
+/// UE → server: the UE finished all tasks and is leaving.
+pub const TAG_GOODBYE: u8 = 0x04;
+/// Server → UE: handshake accepted.
+pub const TAG_WELCOME: u8 = 0x81;
+/// Server → UE: joint decision broadcast.
+pub const TAG_DECISION: u8 = 0x82;
+/// Server → UE: edge-side inference result.
+pub const TAG_RESULT: u8 = 0x83;
+/// Server → UE: NACK — an accepted request could not be served.
+pub const TAG_ERROR: u8 = 0x84;
+/// Server → UE: orderly end of session.
+pub const TAG_SHUTDOWN: u8 = 0x85;
+
+/// Everything that can cross the wire: the [`Uplink`]/[`Downlink`]
+/// application frames plus the transport-level handshake pair.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// First frame a UE sends on a fresh connection.
+    Hello { ue_id: usize },
+    /// The server's handshake accept, echoing the registered id.
+    Welcome { ue_id: usize },
+    /// Application frame, UE → server.
+    Up(Uplink),
+    /// Application frame, server → UE.
+    Down(Downlink),
+}
+
+impl From<Uplink> for Frame {
+    fn from(u: Uplink) -> Frame {
+        Frame::Up(u)
+    }
+}
+
+impl From<Downlink> for Frame {
+    fn from(d: Downlink) -> Frame {
+        Frame::Down(d)
+    }
+}
+
+/// Why a buffer failed to decode (or a stream failed to frame). Decoding
+/// is total: hostile bytes produce one of these, never a panic.
+#[derive(Debug)]
+pub enum WireError {
+    /// The peer closed the stream cleanly at a frame boundary.
+    Closed,
+    /// More bytes are needed to complete the frame.
+    Truncated { have: usize, need: usize },
+    /// The first two bytes are not [`MAGIC`].
+    BadMagic { got: [u8; 2] },
+    /// The frame speaks a protocol version this build does not know.
+    Version { got: u8 },
+    /// Unknown type tag; `skip` is the full frame length (header + body),
+    /// so a same-version peer may step over the frame and stay in sync.
+    UnknownTag { got: u8, skip: usize },
+    /// The length prefix exceeds [`MAX_BODY`].
+    TooLarge { len: usize },
+    /// CRC mismatch: the frame was damaged in flight.
+    Corrupt { expect: u32, got: u32 },
+    /// The body parsed structurally wrong (bad flag, bad utf-8, length
+    /// field disagreeing with the actual byte count, trailing bytes).
+    Malformed(String),
+    /// Underlying stream error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "stream closed at a frame boundary"),
+            WireError::Truncated { have, need } => {
+                write!(f, "truncated frame: have {have} bytes, need {need}")
+            }
+            WireError::BadMagic { got } => {
+                write!(f, "bad magic {:#04x} {:#04x}", got[0], got[1])
+            }
+            WireError::Version { got } => {
+                write!(f, "unsupported wire version {got} (this build speaks {VERSION})")
+            }
+            WireError::UnknownTag { got, skip } => {
+                write!(f, "unknown frame tag {got:#04x} ({skip}-byte frame)")
+            }
+            WireError::TooLarge { len } => {
+                write!(f, "frame body of {len} bytes exceeds the {MAX_BODY}-byte cap")
+            }
+            WireError::Corrupt { expect, got } => {
+                write!(f, "crc mismatch: frame says {expect:#010x}, computed {got:#010x}")
+            }
+            WireError::Malformed(why) => write!(f, "malformed frame body: {why}"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 (the zlib/Ethernet polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, data) ^ 0xFFFF_FFFF
+}
+
+fn crc32_update(mut c: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+// ---------------------------------------------------------------- encoding
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.0.extend_from_slice(v);
+    }
+}
+
+/// Tag + body bytes of a frame (ids are encoded as u32 — the protocol
+/// caps a deployment at 2^32 UEs/classes, far beyond the state vector).
+fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
+    let mut e = Enc(Vec::with_capacity(64));
+    let tag = match frame {
+        Frame::Hello { ue_id } => {
+            e.u32(*ue_id as u32);
+            TAG_HELLO
+        }
+        Frame::Welcome { ue_id } => {
+            e.u32(*ue_id as u32);
+            TAG_WELCOME
+        }
+        Frame::Up(Uplink::Report(r)) => {
+            e.u32(r.ue_id as u32);
+            e.u64(r.tasks_left);
+            e.f64(r.compute_left_s);
+            e.f64(r.offload_left_bits);
+            e.f64(r.distance_m);
+            TAG_REPORT
+        }
+        Frame::Up(Uplink::Offload(o)) => {
+            e.u32(o.ue_id as u32);
+            e.u64(o.task_id);
+            e.u32(o.b as u32);
+            match o.calibration {
+                Some((lo, hi)) => {
+                    e.u8(1);
+                    e.f32(lo);
+                    e.f32(hi);
+                }
+                None => e.u8(0),
+            }
+            e.bytes(&o.payload);
+            TAG_OFFLOAD
+        }
+        Frame::Up(Uplink::Goodbye { ue_id }) => {
+            e.u32(*ue_id as u32);
+            TAG_GOODBYE
+        }
+        Frame::Down(Downlink::Decision(d)) => {
+            e.u32(d.frame as u32);
+            e.u32(d.actions.len() as u32);
+            for a in &d.actions {
+                e.u32(a.b as u32);
+                e.u32(a.c as u32);
+                e.f32(a.p_raw);
+                e.f64(a.p_watts);
+            }
+            TAG_DECISION
+        }
+        Frame::Down(Downlink::Result(r)) => {
+            e.u32(r.ue_id as u32);
+            e.u64(r.task_id);
+            e.u32(r.argmax as u32);
+            e.f64(r.edge_latency_s);
+            e.u32(r.logits.len() as u32);
+            for &l in &r.logits {
+                e.f32(l);
+            }
+            TAG_RESULT
+        }
+        Frame::Down(Downlink::Error { task_id, error }) => {
+            e.u64(*task_id);
+            e.bytes(error.as_bytes());
+            TAG_ERROR
+        }
+        Frame::Down(Downlink::Shutdown) => TAG_SHUTDOWN,
+    };
+    (tag, e.0)
+}
+
+/// Encode one frame into a fresh buffer (header + body).
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let (tag, body) = encode_body(frame);
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(tag);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    let crc = crc32_update(0xFFFF_FFFF, &out[..8]);
+    let crc = crc32_update(crc, &body) ^ 0xFFFF_FFFF;
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---------------------------------------------------------------- decoding
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed(format!(
+                "body needs {n} more bytes at offset {}, only {} left",
+                self.pos, self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after the last field",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec { buf: body, pos: 0 };
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello {
+            ue_id: d.u32()? as usize,
+        },
+        TAG_WELCOME => Frame::Welcome {
+            ue_id: d.u32()? as usize,
+        },
+        TAG_REPORT => Frame::Up(Uplink::Report(UeStateReport {
+            ue_id: d.u32()? as usize,
+            tasks_left: d.u64()?,
+            compute_left_s: d.f64()?,
+            offload_left_bits: d.f64()?,
+            distance_m: d.f64()?,
+        })),
+        TAG_OFFLOAD => {
+            let ue_id = d.u32()? as usize;
+            let task_id = d.u64()?;
+            let b = d.u32()? as usize;
+            let calibration = match d.u8()? {
+                0 => None,
+                1 => Some((d.f32()?, d.f32()?)),
+                flag => {
+                    return Err(WireError::Malformed(format!(
+                        "calibration flag must be 0 or 1, got {flag}"
+                    )))
+                }
+            };
+            let payload = d.bytes()?.to_vec();
+            Frame::Up(Uplink::Offload(OffloadRequest {
+                ue_id,
+                task_id,
+                b,
+                payload,
+                calibration,
+            }))
+        }
+        TAG_GOODBYE => Frame::Up(Uplink::Goodbye {
+            ue_id: d.u32()? as usize,
+        }),
+        TAG_DECISION => {
+            let frame_no = d.u32()? as usize;
+            let n = d.u32()? as usize;
+            // 20 bytes per action: cap before allocating
+            if n > body.len() / 20 {
+                return Err(WireError::Malformed(format!(
+                    "decision claims {n} actions in a {}-byte body",
+                    body.len()
+                )));
+            }
+            let mut actions = Vec::with_capacity(n);
+            for _ in 0..n {
+                actions.push(HybridAction {
+                    b: d.u32()? as usize,
+                    c: d.u32()? as usize,
+                    p_raw: d.f32()?,
+                    p_watts: d.f64()?,
+                });
+            }
+            Frame::Down(Downlink::Decision(FrameDecision {
+                frame: frame_no,
+                actions,
+            }))
+        }
+        TAG_RESULT => {
+            let ue_id = d.u32()? as usize;
+            let task_id = d.u64()?;
+            let argmax = d.u32()? as usize;
+            let edge_latency_s = d.f64()?;
+            let n = d.u32()? as usize;
+            if n > body.len() / 4 {
+                return Err(WireError::Malformed(format!(
+                    "result claims {n} logits in a {}-byte body",
+                    body.len()
+                )));
+            }
+            let mut logits = Vec::with_capacity(n);
+            for _ in 0..n {
+                logits.push(d.f32()?);
+            }
+            Frame::Down(Downlink::Result(InferenceResult {
+                ue_id,
+                task_id,
+                logits,
+                argmax,
+                edge_latency_s,
+            }))
+        }
+        TAG_ERROR => {
+            let task_id = d.u64()?;
+            let error = String::from_utf8(d.bytes()?.to_vec())
+                .map_err(|e| WireError::Malformed(format!("error text is not utf-8: {e}")))?;
+            Frame::Down(Downlink::Error { task_id, error })
+        }
+        TAG_SHUTDOWN => Frame::Down(Downlink::Shutdown),
+        got => {
+            return Err(WireError::UnknownTag {
+                got,
+                skip: HEADER_LEN + body.len(),
+            })
+        }
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Validate a 12-byte header; returns `(tag, body_len, crc)`.
+fn parse_header(h: &[u8]) -> Result<(u8, usize, u32), WireError> {
+    if h[0] != MAGIC[0] || h[1] != MAGIC[1] {
+        return Err(WireError::BadMagic { got: [h[0], h[1]] });
+    }
+    if h[2] != VERSION {
+        return Err(WireError::Version { got: h[2] });
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len > MAX_BODY {
+        return Err(WireError::TooLarge { len });
+    }
+    let crc = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    Ok((h[3], len, crc))
+}
+
+/// Decode the first frame in `buf`; returns the frame and the number of
+/// bytes it occupied. [`WireError::Truncated`] means "feed me more bytes" —
+/// callers accumulating a stream buffer retry once more arrive.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated {
+            have: buf.len(),
+            need: HEADER_LEN,
+        });
+    }
+    let (tag, body_len, crc) = parse_header(&buf[..HEADER_LEN])?;
+    let total = HEADER_LEN + body_len;
+    if buf.len() < total {
+        return Err(WireError::Truncated {
+            have: buf.len(),
+            need: total,
+        });
+    }
+    let body = &buf[HEADER_LEN..total];
+    let got = crc32_update(0xFFFF_FFFF, &buf[..8]);
+    let got = crc32_update(got, body) ^ 0xFFFF_FFFF;
+    if got != crc {
+        return Err(WireError::Corrupt { expect: crc, got });
+    }
+    Ok((decode_body(tag, body)?, total))
+}
+
+/// Write one frame to a byte sink (one `write_all` — transports decide
+/// buffering). Rejects frames whose body exceeds [`MAX_BODY`] *before*
+/// any bytes hit the wire: an oversized frame would be unreadable by
+/// every compliant peer, so failing at the sender is the only useful
+/// place (and bodies past u32 range would corrupt the length prefix).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    let buf = encode_frame(frame);
+    if buf.len() - HEADER_LEN > MAX_BODY {
+        return Err(WireError::TooLarge {
+            len: buf.len() - HEADER_LEN,
+        });
+    }
+    w.write_all(&buf).map_err(WireError::Io)
+}
+
+/// Read exactly one frame from a blocking byte stream.
+///
+/// A clean EOF *between* frames is [`WireError::Closed`] (the peer hung
+/// up); an EOF *inside* a frame is [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut have = 0usize;
+    while have < HEADER_LEN {
+        match r.read(&mut header[have..]) {
+            Ok(0) if have == 0 => return Err(WireError::Closed),
+            Ok(0) => {
+                return Err(WireError::Truncated {
+                    have,
+                    need: HEADER_LEN,
+                })
+            }
+            Ok(n) => have += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let (tag, body_len, crc) = parse_header(&header)?;
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated {
+                have: HEADER_LEN,
+                need: HEADER_LEN + body_len,
+            }
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    let got = crc32_update(0xFFFF_FFFF, &header[..8]);
+    let got = crc32_update(got, &body) ^ 0xFFFF_FFFF;
+    if got != crc {
+        return Err(WireError::Corrupt { expect: crc, got });
+    }
+    decode_body(tag, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offload_frame() -> Frame {
+        Frame::Up(Uplink::Offload(OffloadRequest {
+            ue_id: 3,
+            task_id: 42,
+            b: 2,
+            payload: vec![1, 2, 3, 4, 5],
+            calibration: Some((-1.5, 2.5)),
+        }))
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // the classic IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_frame_type_roundtrips() {
+        let frames = vec![
+            Frame::Hello { ue_id: 7 },
+            Frame::Welcome { ue_id: 7 },
+            Frame::Up(Uplink::Report(UeStateReport {
+                ue_id: 1,
+                tasks_left: 9,
+                compute_left_s: 0.25,
+                offload_left_bits: 1.5e5,
+                distance_m: 42.0,
+            })),
+            offload_frame(),
+            Frame::Up(Uplink::Offload(OffloadRequest {
+                ue_id: 0,
+                task_id: 1,
+                b: 0,
+                payload: vec![0u8; 64],
+                calibration: None,
+            })),
+            Frame::Up(Uplink::Goodbye { ue_id: 2 }),
+            Frame::Down(Downlink::Decision(FrameDecision {
+                frame: 11,
+                actions: vec![HybridAction::new(3, 1, 0.5, 1.0); 4],
+            })),
+            Frame::Down(Downlink::Result(InferenceResult {
+                ue_id: 5,
+                task_id: 77,
+                logits: vec![0.1, -0.2, 0.9],
+                argmax: 2,
+                edge_latency_s: 0.003,
+            })),
+            Frame::Down(Downlink::Error {
+                task_id: 13,
+                error: "no calibration".into(),
+            }),
+            Frame::Down(Downlink::Shutdown),
+        ];
+        for f in frames {
+            let buf = encode_frame(&f);
+            let (back, used) = decode_frame(&buf).expect("roundtrip");
+            assert_eq!(back, f);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn stream_io_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &offload_frame()).unwrap();
+        write_frame(&mut buf, &Frame::Down(Downlink::Shutdown)).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), offload_frame());
+        assert_eq!(read_frame(&mut r).unwrap(), Frame::Down(Downlink::Shutdown));
+        assert!(matches!(read_frame(&mut r), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        let buf = encode_frame(&offload_frame());
+        for n in 0..buf.len() {
+            match decode_frame(&buf[..n]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("prefix of {n} bytes must be Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_and_unknown_tags_are_rejected() {
+        let good = encode_frame(&offload_frame());
+        // flip one bit in the payload: crc must catch it
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x01;
+        assert!(matches!(decode_frame(&bad), Err(WireError::Corrupt { .. })));
+        // wrong magic
+        let mut bad = good.clone();
+        bad[0] = 0x00;
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadMagic { .. })));
+        // future version
+        let mut bad = good.clone();
+        bad[2] = VERSION + 1;
+        assert!(matches!(decode_frame(&bad), Err(WireError::Version { got }) if got == VERSION + 1));
+        // unknown tag with a valid crc: skippable
+        let mut bad = good;
+        bad[3] = 0x7F;
+        let crc = crc32_update(0xFFFF_FFFF, &bad[..8]);
+        let crc = crc32_update(crc, &bad[HEADER_LEN..]) ^ 0xFFFF_FFFF;
+        bad[8..12].copy_from_slice(&crc.to_le_bytes());
+        match decode_frame(&bad) {
+            Err(WireError::UnknownTag { got: 0x7F, skip }) => assert_eq!(skip, bad.len()),
+            other => panic!("expected UnknownTag, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_at_the_sender() {
+        let huge = Frame::Up(Uplink::Offload(OffloadRequest {
+            ue_id: 0,
+            task_id: 1,
+            b: 0,
+            payload: vec![0u8; MAX_BODY + 1],
+            calibration: None,
+        }));
+        let mut sink = Vec::new();
+        match write_frame(&mut sink, &huge) {
+            Err(WireError::TooLarge { len }) => assert!(len > MAX_BODY),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        assert!(sink.is_empty(), "no bytes may reach the wire");
+    }
+
+    #[test]
+    fn absurd_length_prefix_cannot_allocate() {
+        let mut buf = encode_frame(&Frame::Down(Downlink::Shutdown));
+        buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_frame(&buf), Err(WireError::TooLarge { .. })));
+    }
+}

@@ -52,6 +52,7 @@ pub mod metrics;
 pub mod profiles;
 pub mod rl;
 pub mod runtime;
+pub mod transport;
 pub mod util;
 
 /// Convenient re-exports for downstream users and the examples.
@@ -65,5 +66,7 @@ pub mod prelude {
     pub use crate::runtime::backend::{Backend, Executable};
     pub use crate::runtime::native::NativeBackend;
     pub use crate::runtime::{artifacts::ArtifactStore, tensor::TensorView};
+    pub use crate::transport::tcp::{TcpClientTransport, TcpServerTransport};
+    pub use crate::transport::ue::UeClient;
     pub use crate::util::rng::Rng;
 }

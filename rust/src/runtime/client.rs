@@ -39,12 +39,14 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Create a backend over a fresh process-wide PJRT CPU client.
     pub fn new() -> Result<PjrtBackend> {
         Ok(PjrtBackend {
             runtime: Runtime::cpu()?,
         })
     }
 
+    /// The underlying runtime (shared executable cache + client).
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
@@ -102,6 +104,7 @@ impl Runtime {
         })
     }
 
+    /// Name of the PJRT platform backing the client (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.inner.client.platform_name()
     }

@@ -1,0 +1,144 @@
+//! The in-process transport: the original mpsc channel pair, now behind
+//! the [`ServerTransport`]/[`ClientTransport`] traits.
+//!
+//! Frames move as Rust values — no serialization — so simulations, tests
+//! and benches keep their exact pre-transport behavior and cost. The
+//! threaded server's public channel API
+//! ([`crate::coordinator::server::EdgeServer::spawn`]) is built on
+//! [`ChannelServerTransport::from_parts`].
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::Duration;
+
+use super::{ClientTransport, ServerTransport, TransportError};
+use crate::coordinator::protocol::{Downlink, Uplink};
+
+/// Server side of the in-process transport: one shared uplink receiver
+/// plus one downlink sender per UE.
+pub struct ChannelServerTransport {
+    uplink: Receiver<Uplink>,
+    downlinks: Vec<Sender<Downlink>>,
+}
+
+impl ChannelServerTransport {
+    /// Wrap raw channel halves (the server keeps handing out the matching
+    /// `Sender<Uplink>` / `Receiver<Downlink>` ends to in-process UEs).
+    pub fn from_parts(
+        uplink: Receiver<Uplink>,
+        downlinks: Vec<Sender<Downlink>>,
+    ) -> ChannelServerTransport {
+        ChannelServerTransport { uplink, downlinks }
+    }
+}
+
+impl ServerTransport for ChannelServerTransport {
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError> {
+        match self.uplink.try_recv() {
+            Ok(u) => Ok(Some(u)),
+            Err(TryRecvError::Empty) => Ok(None),
+            // every sender clone dropped: no client can ever speak again
+            Err(TryRecvError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn send_to(&mut self, ue_id: usize, frame: Downlink) {
+        if let Some(tx) = self.downlinks.get(ue_id) {
+            // a UE that dropped its receiver simply misses the frame
+            let _ = tx.send(frame);
+        }
+    }
+}
+
+/// Client side of the in-process transport.
+pub struct ChannelClientTransport {
+    ue_id: usize,
+    uplink: Sender<Uplink>,
+    downlink: Receiver<Downlink>,
+}
+
+impl ChannelClientTransport {
+    pub fn new(
+        ue_id: usize,
+        uplink: Sender<Uplink>,
+        downlink: Receiver<Downlink>,
+    ) -> ChannelClientTransport {
+        ChannelClientTransport {
+            ue_id,
+            uplink,
+            downlink,
+        }
+    }
+}
+
+impl ClientTransport for ChannelClientTransport {
+    fn ue_id(&self) -> usize {
+        self.ue_id
+    }
+
+    fn send(&mut self, frame: Uplink) -> Result<(), TransportError> {
+        self.uplink.send(frame).map_err(|_| TransportError::Closed)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Downlink>, TransportError> {
+        match self.downlink.recv_timeout(timeout) {
+            Ok(d) => Ok(Some(d)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+}
+
+/// Build a connected in-process transport pair for `n_ues` clients.
+pub fn channel_transport(n_ues: usize) -> (ChannelServerTransport, Vec<ChannelClientTransport>) {
+    let (uplink_tx, uplink_rx) = channel();
+    let mut downlink_txs = Vec::with_capacity(n_ues);
+    let mut clients = Vec::with_capacity(n_ues);
+    for ue_id in 0..n_ues {
+        let (tx, rx) = channel();
+        downlink_txs.push(tx);
+        clients.push(ChannelClientTransport::new(ue_id, uplink_tx.clone(), rx));
+    }
+    (
+        ChannelServerTransport::from_parts(uplink_rx, downlink_txs),
+        clients,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::UeStateReport;
+
+    #[test]
+    fn pair_routes_frames_and_reports_closure() {
+        let (mut server, mut clients) = channel_transport(2);
+        clients[1]
+            .send(Uplink::Goodbye { ue_id: 1 })
+            .expect("send while server alive");
+        match server.try_recv().unwrap() {
+            Some(Uplink::Goodbye { ue_id }) => assert_eq!(ue_id, 1),
+            other => panic!("expected the goodbye, got {other:?}"),
+        }
+        assert!(server.try_recv().unwrap().is_none(), "queue drained");
+
+        server.send_to(0, Downlink::Shutdown);
+        server.send_to(99, Downlink::Shutdown); // unknown UE: silently dropped
+        match clients[0].recv_timeout(Duration::from_secs(1)).unwrap() {
+            Some(Downlink::Shutdown) => {}
+            other => panic!("expected shutdown, got {other:?}"),
+        }
+
+        // dropping every client closes the uplink
+        let report = UeStateReport {
+            ue_id: 0,
+            tasks_left: 1,
+            compute_left_s: 0.0,
+            offload_left_bits: 0.0,
+            distance_m: 10.0,
+        };
+        clients[0].send(Uplink::Report(report)).unwrap();
+        drop(clients);
+        assert!(server.try_recv().unwrap().is_some(), "queued frame survives");
+        assert!(matches!(server.try_recv(), Err(TransportError::Closed)));
+    }
+}

@@ -1,0 +1,98 @@
+//! Pluggable transports carrying the UE ⇄ edge-server protocol.
+//!
+//! The coordinator ([`crate::coordinator::server`]) speaks two small
+//! traits instead of concrete channels, so the same `server_loop` serves
+//! in-process simulations and real remote UEs:
+//!
+//! * [`ServerTransport`] — the server's side: poll uplink frames from all
+//!   connected UEs, push downlink frames to one UE.
+//! * [`ClientTransport`] — one UE's side: send uplinks, receive downlinks.
+//!
+//! Two implementations ship:
+//!
+//! * [`channel`] — the original in-process mpsc pair, zero behavior
+//!   change for simulations, tests and benches.
+//! * [`tcp`] — real sockets over `std::net` + threads (the offline build
+//!   has no tokio; see DESIGN.md §Substitutions), speaking the
+//!   byte-level codec of [`crate::coordinator::wire`] with a per-UE
+//!   session handshake and bounded per-connection write queues
+//!   (slow-consumer eviction) for backpressure.
+//!
+//! [`ue`] adds [`ue::UeClient`], a client-side convenience wrapper over
+//! any [`ClientTransport`] (report / offload / await-result helpers).
+
+pub mod channel;
+pub mod tcp;
+pub mod ue;
+
+use std::time::Duration;
+
+use crate::coordinator::protocol::{Downlink, Uplink};
+use crate::coordinator::wire::WireError;
+
+/// Why a transport can no longer move frames.
+#[derive(Debug)]
+pub enum TransportError {
+    /// No peer can ever speak again (every client gone, or the socket
+    /// closed). Terminal: the server treats this as shutdown.
+    Closed,
+    /// The byte stream violated the wire protocol.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed => write!(f, "transport closed"),
+            TransportError::Wire(e) => write!(f, "wire protocol: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Wire(e) => Some(e),
+            TransportError::Closed => None,
+        }
+    }
+}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::Wire(e)
+    }
+}
+
+/// The server's view of the radio link: every connected UE multiplexed
+/// into one uplink stream, with per-UE downlink addressing.
+///
+/// Implementations decode/validate frames internally — `try_recv` only
+/// ever yields well-formed [`Uplink`] values, and the only error it
+/// reports is [`TransportError::Closed`].
+pub trait ServerTransport: Send {
+    /// Non-blocking poll for the next uplink frame. `Ok(None)` means
+    /// nothing is pending right now; `Err(Closed)` means no client can
+    /// ever speak again (the server loop treats it as shutdown).
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError>;
+
+    /// Queue `frame` for delivery to `ue_id`. Best-effort and
+    /// non-blocking for the caller: frames to unknown or disconnected
+    /// UEs are dropped (a vanished client must not crash the server),
+    /// and a client whose bounded write queue overflows may be evicted —
+    /// the routing thread never stalls on one peer.
+    fn send_to(&mut self, ue_id: usize, frame: Downlink);
+}
+
+/// One UE's view of the radio link.
+pub trait ClientTransport: Send {
+    /// The UE id this transport was registered under.
+    fn ue_id(&self) -> usize;
+
+    /// Send one uplink frame to the server.
+    fn send(&mut self, frame: Uplink) -> Result<(), TransportError>;
+
+    /// Wait up to `timeout` for the next downlink frame. `Ok(None)` on
+    /// timeout; `Err(Closed)` once the server is gone.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Downlink>, TransportError>;
+}

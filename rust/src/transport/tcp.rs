@@ -1,0 +1,544 @@
+//! TCP transport for remote UEs, over `std::net` + threads (the offline
+//! build has no tokio; the thread-per-connection layout mirrors
+//! DESIGN.md §Substitutions' stance on `coordinator::server`).
+//!
+//! Wire format: the length-prefixed, CRC-protected frames of
+//! [`crate::coordinator::wire`] (DESIGN.md §Wire-Protocol). Session flow:
+//!
+//! ```text
+//! UE                             edge server
+//! ── TcpStream::connect ───────► accept thread ─ spawns conn thread
+//! ── Hello { ue_id } ──────────► validate id, register writer queue
+//! ◄────────────────── Welcome ── (or Error + close: bad/duplicate id)
+//! ── Report / Offload ─────────► reader thread → shared uplink mpsc
+//! ◄── Decision / Result / Error─ writer thread ◄ bounded per-UE queue
+//! ── Goodbye ──────────────────►
+//! ◄───────────────── Shutdown ── writer flushes it, then closes
+//! ```
+//!
+//! * **Backpressure.** Each connection's downlink rides a bounded
+//!   [`std::sync::mpsc::sync_channel`]. The server's routing thread
+//!   never blocks on a socket: a client that stops draining and fills
+//!   its queue is evicted (slow-consumer policy), so one stalled UE can
+//!   never stall decisions or results for the others.
+//! * **Graceful rejection.** A frame that fails to decode poisons the
+//!   byte stream (framing is lost), so the server NACKs best-effort and
+//!   closes that one connection; other UEs are unaffected. Uplinks whose
+//!   embedded `ue_id` differs from the handshake id are dropped (logged)
+//!   — one UE cannot speak for another.
+//! * **Lifecycle.** Unlike the channel transport, a TCP server never
+//!   reports [`TransportError::Closed`] on `try_recv` — clients may come
+//!   and go; the serving loop ends via `Goodbye`s or its frame budget.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{ClientTransport, ServerTransport, TransportError};
+use crate::coordinator::protocol::{Downlink, SESSION_ERROR_TASK, Uplink};
+use crate::coordinator::wire::{read_frame, write_frame, Frame, WireError};
+
+/// Downlink frames a single connection may buffer before the server
+/// evicts it as a slow consumer (per-UE backpressure bound).
+const WRITE_QUEUE: usize = 256;
+/// How long a fresh connection gets to complete the `Hello`/`Welcome`
+/// handshake before the server gives up on it.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Process-wide session counter: each registered connection gets a
+/// unique token, so a stale connection thread can never deregister (or
+/// NACK) a successor session that reused its `ue_id`.
+static SESSION_CTR: AtomicU64 = AtomicU64::new(0);
+
+/// One registered connection, as the server loop sees it. The stream
+/// clone lets `send_to` forcibly disconnect a slow client.
+struct Peer {
+    queue: SyncSender<Downlink>,
+    stream: TcpStream,
+    session: u64,
+}
+
+/// A spawned connection thread plus a stream clone to unblock it on drop.
+type ConnHandle = (JoinHandle<()>, TcpStream);
+
+/// Server side: an accept thread plus one reader and one writer thread
+/// per connection, multiplexing decoded uplinks into a single queue.
+pub struct TcpServerTransport {
+    local_addr: SocketAddr,
+    uplink_rx: Receiver<Uplink>,
+    peers: Arc<Mutex<HashMap<usize, Peer>>>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServerTransport {
+    /// Bind and start accepting. `max_ues` bounds valid `ue_id`s — the
+    /// handshake rejects ids at or above it, and duplicates of a live
+    /// session. Use port 0 for an ephemeral port ([`Self::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs, max_ues: usize) -> Result<TcpServerTransport> {
+        let listener = TcpListener::bind(addr).context("binding the UE listener")?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true).context("listener nonblocking mode")?;
+
+        let (uplink_tx, uplink_rx) = channel::<Uplink>();
+        let peers: Arc<Mutex<HashMap<usize, Peer>>> = Arc::new(Mutex::new(HashMap::new()));
+        let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept = {
+            let peers = peers.clone();
+            let conns = conns.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("ue-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, from)) => {
+                                log::debug!("UE connection from {from}");
+                                let shut = match stream.try_clone() {
+                                    Ok(s) => s,
+                                    Err(e) => {
+                                        log::error!("cloning UE stream: {e}");
+                                        continue;
+                                    }
+                                };
+                                let peers = peers.clone();
+                                let tx = uplink_tx.clone();
+                                let handle = std::thread::Builder::new()
+                                    .name(format!("ue-conn-{from}"))
+                                    .spawn(move || serve_connection(stream, peers, tx, max_ues));
+                                match handle {
+                                    Ok(h) => {
+                                        let mut conns = conns.lock().unwrap();
+                                        // reap finished connections so churn
+                                        // doesn't leak handles and stream fds
+                                        conns.retain(|(h, _)| !h.is_finished());
+                                        conns.push((h, shut));
+                                    }
+                                    Err(e) => log::error!("spawning UE connection thread: {e}"),
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            Err(e) => {
+                                log::error!("accept failed: {e}");
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
+                })?
+        };
+
+        Ok(TcpServerTransport {
+            local_addr,
+            uplink_rx,
+            peers,
+            conns,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// UEs with a live registered session right now.
+    pub fn connected(&self) -> usize {
+        self.peers.lock().unwrap().len()
+    }
+}
+
+impl ServerTransport for TcpServerTransport {
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError> {
+        // the accept thread keeps an uplink sender alive, so this can
+        // only be Empty or a frame while the transport exists
+        Ok(self.uplink_rx.try_recv().ok())
+    }
+
+    fn send_to(&mut self, ue_id: usize, frame: Downlink) {
+        // clone the queue handle out of the lock so connection threads
+        // never contend with an in-progress send
+        let queue = {
+            let peers = self.peers.lock().unwrap();
+            peers.get(&ue_id).map(|p| p.queue.clone())
+        };
+        let Some(queue) = queue else {
+            log::debug!("downlink to unconnected UE {ue_id} dropped");
+            return;
+        };
+        match queue.try_send(frame) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                // a client that stopped draining its socket must not be
+                // able to stall the single routing thread (and with it
+                // every other UE): evict the slow consumer instead
+                log::warn!("UE {ue_id} write queue full — disconnecting the slow client");
+                if let Some(p) = self.peers.lock().unwrap().remove(&ue_id) {
+                    let _ = p.stream.shutdown(Shutdown::Both);
+                }
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                // writer gone (client hung up): deregister so later
+                // sends stop queueing into the void
+                self.peers.lock().unwrap().remove(&ue_id);
+            }
+        }
+    }
+}
+
+impl Drop for TcpServerTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (_, stream) in &conns {
+            // unblock readers parked in read_frame
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (h, _) in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Reject a handshake with a session-level `Downlink::Error` frame
+/// (`task_id` = [`SESSION_ERROR_TASK`]) before closing.
+fn reject(stream: &mut TcpStream, why: String) {
+    log::warn!("rejecting UE connection: {why}");
+    let nack = Downlink::Error {
+        task_id: SESSION_ERROR_TASK,
+        error: why,
+    };
+    let _ = write_frame(stream, &Frame::Down(nack));
+}
+
+/// One connection's lifetime: handshake, then the reader loop; owns and
+/// finally joins the connection's writer thread.
+fn serve_connection(
+    mut stream: TcpStream,
+    peers: Arc<Mutex<HashMap<usize, Peer>>>,
+    uplink_tx: Sender<Uplink>,
+    max_ues: usize,
+) {
+    // the listener is nonblocking and some platforms let accepted
+    // sockets inherit that — the frame reader needs blocking reads
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+
+    // -- handshake (deadline-bounded so a silent peer can't pin us) --
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let ue_id = match read_frame(&mut stream) {
+        Ok(Frame::Hello { ue_id }) if ue_id < max_ues => ue_id,
+        Ok(Frame::Hello { ue_id }) => {
+            return reject(
+                &mut stream,
+                format!("ue_id {ue_id} out of range (server admits {max_ues} UEs)"),
+            )
+        }
+        Ok(other) => return reject(&mut stream, format!("expected Hello, got {other:?}")),
+        Err(e) => return reject(&mut stream, format!("handshake failed: {e}")),
+    };
+    let _ = stream.set_read_timeout(None);
+
+    // -- register the writer (atomically: duplicate ids are rejected) --
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => return reject(&mut stream, format!("stream clone failed: {e}")),
+    };
+    let peer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => return reject(&mut stream, format!("stream clone failed: {e}")),
+    };
+    let (queue_tx, queue_rx) = sync_channel::<Downlink>(WRITE_QUEUE);
+    let session = SESSION_CTR.fetch_add(1, Ordering::Relaxed);
+    match peers.lock().unwrap().entry(ue_id) {
+        Entry::Occupied(_) => {
+            return reject(&mut stream, format!("ue_id {ue_id} already has a live session"))
+        }
+        Entry::Vacant(v) => {
+            v.insert(Peer {
+                queue: queue_tx,
+                stream: peer_stream,
+                session,
+            });
+        }
+    }
+    // Welcome goes out before the writer thread exists, so the two never
+    // interleave bytes on the stream
+    if write_frame(&mut stream, &Frame::Welcome { ue_id }).is_err() {
+        peers.lock().unwrap().remove(&ue_id);
+        return;
+    }
+    let writer = std::thread::Builder::new()
+        .name(format!("ue-writer-{ue_id}"))
+        .spawn(move || writer_loop(writer_stream, queue_rx));
+
+    // -- reader loop --
+    let mut saw_goodbye = false;
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Up(up)) => {
+                let claimed = match &up {
+                    Uplink::Report(r) => r.ue_id,
+                    Uplink::Offload(o) => o.ue_id,
+                    Uplink::Goodbye { ue_id } => *ue_id,
+                };
+                if claimed != ue_id {
+                    log::warn!("UE {ue_id} sent a frame claiming ue_id {claimed}; dropped");
+                    continue;
+                }
+                let is_goodbye = matches!(up, Uplink::Goodbye { .. });
+                if uplink_tx.send(up).is_err() {
+                    break; // server loop gone
+                }
+                if is_goodbye {
+                    saw_goodbye = true;
+                }
+            }
+            Ok(other) => {
+                log::warn!("UE {ue_id} sent an unexpected {other:?}; dropped");
+            }
+            Err(WireError::Closed) => break,
+            Err(WireError::UnknownTag { got, .. }) => {
+                // the frame was fully read and CRC-validated — framing is
+                // intact, so a future same-version frame type is skipped
+                log::debug!("UE {ue_id} sent unknown frame tag {got:#04x}; skipped");
+            }
+            Err(e) => {
+                // framing is lost: NACK best-effort (only our own
+                // session, never a successor's), then drop the session
+                log::warn!("UE {ue_id} stream unrecoverable: {e}");
+                if let Some(p) = peers.lock().unwrap().get(&ue_id) {
+                    if p.session == session {
+                        let _ = p.queue.try_send(Downlink::Error {
+                            task_id: SESSION_ERROR_TASK,
+                            error: format!("wire error, closing session: {e}"),
+                        });
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    // deregister — but only our own session: `send_to` may have already
+    // evicted this entry and a reconnected successor may own the slot
+    let mut vanished = !saw_goodbye;
+    {
+        let mut map = peers.lock().unwrap();
+        match map.get(&ue_id).map(|p| p.session == session) {
+            Some(true) => {
+                map.remove(&ue_id);
+            }
+            Some(false) => vanished = false, // a successor session is live
+            None => {}
+        }
+    }
+    // a UE that dropped without a Goodbye must not wedge the server loop
+    // (its alive flag would stay true forever): synthesize the Goodbye.
+    // A later reconnect + state report re-enters it into the system.
+    if vanished {
+        log::debug!("UE {ue_id} vanished without Goodbye — synthesizing one");
+        let _ = uplink_tx.send(Uplink::Goodbye { ue_id });
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+/// Drain one connection's downlink queue onto the socket. Exits when the
+/// queue closes (session deregistered), a write fails, or after flushing
+/// a `Shutdown` frame — the protocol's end-of-session marker.
+fn writer_loop(mut stream: TcpStream, queue: Receiver<Downlink>) {
+    while let Ok(frame) = queue.recv() {
+        let last = matches!(frame, Downlink::Shutdown);
+        if write_frame(&mut stream, &Frame::Down(frame)).is_err() {
+            break;
+        }
+        if last {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// Client side: a blocking writer plus a reader thread feeding a local
+/// queue, so [`ClientTransport::recv_timeout`] has channel semantics.
+#[derive(Debug)]
+pub struct TcpClientTransport {
+    ue_id: usize,
+    stream: TcpStream,
+    rx: Receiver<Downlink>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl TcpClientTransport {
+    /// Connect and complete the session handshake as `ue_id`. Fails if
+    /// the server rejects the id (out of range or already connected).
+    pub fn connect(addr: impl ToSocketAddrs, ue_id: usize) -> Result<TcpClientTransport> {
+        let mut stream = TcpStream::connect(addr).context("connecting to the edge server")?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("handshake read timeout")?;
+        write_frame(&mut stream, &Frame::Hello { ue_id })
+            .map_err(|e| anyhow!("sending Hello: {e}"))?;
+        match read_frame(&mut stream) {
+            Ok(Frame::Welcome { ue_id: got }) if got == ue_id => {}
+            Ok(Frame::Welcome { ue_id: got }) => {
+                anyhow::bail!("server welcomed us as UE {got}, expected {ue_id}")
+            }
+            Ok(Frame::Down(Downlink::Error { error, .. })) => {
+                anyhow::bail!("server rejected the handshake: {error}")
+            }
+            Ok(other) => anyhow::bail!("unexpected handshake reply: {other:?}"),
+            Err(e) => anyhow::bail!("handshake failed: {e}"),
+        }
+        stream.set_read_timeout(None).context("clearing read timeout")?;
+
+        let (tx, rx) = channel::<Downlink>();
+        let mut reader_stream = stream.try_clone().context("cloning the client stream")?;
+        let reader = std::thread::Builder::new()
+            .name(format!("ue-{ue_id}-reader"))
+            .spawn(move || loop {
+                match read_frame(&mut reader_stream) {
+                    Ok(Frame::Down(d)) => {
+                        let last = matches!(d, Downlink::Shutdown);
+                        if tx.send(d).is_err() || last {
+                            break;
+                        }
+                    }
+                    Ok(other) => log::warn!("server sent an unexpected {other:?}; dropped"),
+                    Err(WireError::Closed) => break,
+                    Err(WireError::UnknownTag { got, .. }) => {
+                        log::debug!("server sent unknown frame tag {got:#04x}; skipped");
+                    }
+                    Err(e) => {
+                        log::warn!("downlink stream unrecoverable: {e}");
+                        break;
+                    }
+                }
+            })?;
+
+        Ok(TcpClientTransport {
+            ue_id,
+            stream,
+            rx,
+            reader: Some(reader),
+        })
+    }
+}
+
+impl ClientTransport for TcpClientTransport {
+    fn ue_id(&self) -> usize {
+        self.ue_id
+    }
+
+    fn send(&mut self, frame: Uplink) -> Result<(), TransportError> {
+        write_frame(&mut self.stream, &Frame::Up(frame)).map_err(TransportError::Wire)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Downlink>, TransportError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(d) => Ok(Some(d)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+}
+
+impl Drop for TcpClientTransport {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::UeStateReport;
+
+    fn report(ue_id: usize) -> Uplink {
+        Uplink::Report(UeStateReport {
+            ue_id,
+            tasks_left: 2,
+            compute_left_s: 0.1,
+            offload_left_bits: 5.0,
+            distance_m: 30.0,
+        })
+    }
+
+    #[test]
+    fn loopback_session_roundtrips_frames() {
+        let mut server = TcpServerTransport::bind("127.0.0.1:0", 4).unwrap();
+        let addr = server.local_addr();
+        let mut client = TcpClientTransport::connect(addr, 1).unwrap();
+        assert_eq!(client.ue_id(), 1);
+
+        client.send(report(1)).unwrap();
+        let got = wait_uplink(&mut server);
+        assert_eq!(got, Some(report(1)));
+
+        server.send_to(1, Downlink::Shutdown);
+        match client.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(Downlink::Shutdown) => {}
+            other => panic!("expected shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_bad_and_duplicate_ids() {
+        let server = TcpServerTransport::bind("127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr();
+
+        let err = TcpClientTransport::connect(addr, 7).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "got: {err:#}");
+
+        let _first = TcpClientTransport::connect(addr, 0).unwrap();
+        let err = TcpClientTransport::connect(addr, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("already has a live session"), "got: {err:#}");
+        assert_eq!(server.connected(), 1);
+    }
+
+    #[test]
+    fn spoofed_ue_id_is_dropped() {
+        let mut server = TcpServerTransport::bind("127.0.0.1:0", 4).unwrap();
+        let addr = server.local_addr();
+        let mut client = TcpClientTransport::connect(addr, 1).unwrap();
+        client.send(report(3)).unwrap(); // claims to be UE 3
+        client.send(report(1)).unwrap(); // honest
+        // only the honest frame arrives
+        assert_eq!(wait_uplink(&mut server), Some(report(1)));
+    }
+
+    fn wait_uplink(server: &mut TcpServerTransport) -> Option<Uplink> {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while std::time::Instant::now() < deadline {
+            if let Some(u) = server.try_recv().unwrap() {
+                return Some(u);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        None
+    }
+}

@@ -1,0 +1,178 @@
+//! Client-side convenience wrapper: one UE's session over any
+//! [`ClientTransport`] (in-process channels or TCP), with the
+//! report → decision → offload → result call patterns the examples and
+//! integration tests share.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{ClientTransport, TransportError};
+use crate::coordinator::protocol::{
+    Downlink, FrameDecision, InferenceResult, OffloadRequest, SESSION_ERROR_TASK, UeStateReport,
+    Uplink,
+};
+
+/// One UE's session with the edge server.
+pub struct UeClient<T: ClientTransport> {
+    transport: T,
+}
+
+impl<T: ClientTransport> UeClient<T> {
+    pub fn new(transport: T) -> UeClient<T> {
+        UeClient { transport }
+    }
+
+    pub fn ue_id(&self) -> usize {
+        self.transport.ue_id()
+    }
+
+    /// Send this frame's state report (stamped with the session's id).
+    pub fn report(&mut self, mut report: UeStateReport) -> Result<(), TransportError> {
+        report.ue_id = self.transport.ue_id();
+        self.transport.send(Uplink::Report(report))
+    }
+
+    /// Ship an offload payload to the edge (stamped with the session's
+    /// id). `calibration` is required whenever `b >= 1` — the server
+    /// NACKs calibration-less feature offloads at admission.
+    pub fn offload(
+        &mut self,
+        task_id: u64,
+        b: usize,
+        payload: Vec<u8>,
+        calibration: Option<(f32, f32)>,
+    ) -> Result<(), TransportError> {
+        self.transport.send(Uplink::Offload(OffloadRequest {
+            ue_id: self.transport.ue_id(),
+            task_id,
+            b,
+            payload,
+            calibration,
+        }))
+    }
+
+    /// Announce that this UE finished all tasks and is leaving.
+    pub fn goodbye(&mut self) -> Result<(), TransportError> {
+        let ue_id = self.transport.ue_id();
+        self.transport.send(Uplink::Goodbye { ue_id })
+    }
+
+    /// Next downlink frame, if one arrives within `timeout`.
+    pub fn recv(&mut self, timeout: Duration) -> Result<Option<Downlink>, TransportError> {
+        self.transport.recv_timeout(timeout)
+    }
+
+    /// Wait for the next decision broadcast, skipping results/NACKs for
+    /// other exchanges.
+    pub fn await_decision(&mut self, timeout: Duration) -> Result<FrameDecision> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(anyhow!("no decision within {timeout:?}"));
+            }
+            match self.transport.recv_timeout(left)? {
+                Some(Downlink::Decision(d)) => return Ok(d),
+                Some(Downlink::Shutdown) => return Err(anyhow!("server shut down")),
+                Some(Downlink::Error { task_id, error }) if task_id == SESSION_ERROR_TASK => {
+                    return Err(anyhow!("session failed: {error}"))
+                }
+                Some(_) | None => continue,
+            }
+        }
+    }
+
+    /// Wait for `task_id`'s inference result, skipping decision
+    /// broadcasts. A `Downlink::Error` NACK for this task becomes an
+    /// `Err` carrying the server's message.
+    pub fn await_result(&mut self, task_id: u64, timeout: Duration) -> Result<InferenceResult> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(anyhow!("no result for task {task_id} within {timeout:?}"));
+            }
+            match self.transport.recv_timeout(left)? {
+                Some(Downlink::Result(r)) if r.task_id == task_id => return Ok(r),
+                Some(Downlink::Error { task_id: t, error }) if t == SESSION_ERROR_TASK => {
+                    return Err(anyhow!("session failed: {error}"))
+                }
+                Some(Downlink::Error { task_id: t, error }) if t == task_id => {
+                    return Err(anyhow!("task {task_id} NACKed by the edge: {error}"))
+                }
+                Some(Downlink::Shutdown) => {
+                    return Err(anyhow!("server shut down before task {task_id} completed"))
+                }
+                Some(_) | None => continue,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::channel::channel_transport;
+    use crate::transport::ServerTransport;
+
+    #[test]
+    fn helpers_stamp_the_session_id_and_match_results() {
+        let (mut server, mut clients) = channel_transport(2);
+        let mut ue = UeClient::new(clients.remove(1));
+        assert_eq!(ue.ue_id(), 1);
+
+        // report/offload are re-stamped with the session id
+        ue.report(UeStateReport {
+            ue_id: 99,
+            tasks_left: 1,
+            compute_left_s: 0.0,
+            offload_left_bits: 0.0,
+            distance_m: 10.0,
+        })
+        .unwrap();
+        ue.offload(5, 0, vec![0u8; 4], None).unwrap();
+        match server.try_recv().unwrap() {
+            Some(Uplink::Report(r)) => assert_eq!(r.ue_id, 1),
+            other => panic!("expected report, got {other:?}"),
+        }
+        match server.try_recv().unwrap() {
+            Some(Uplink::Offload(o)) => {
+                assert_eq!((o.ue_id, o.task_id), (1, 5));
+            }
+            other => panic!("expected offload, got {other:?}"),
+        }
+
+        // await_result skips decisions and NACKs for other tasks
+        server.send_to(
+            1,
+            Downlink::Error {
+                task_id: 4,
+                error: "other task".into(),
+            },
+        );
+        server.send_to(
+            1,
+            Downlink::Result(InferenceResult {
+                ue_id: 1,
+                task_id: 5,
+                logits: vec![0.0, 1.0],
+                argmax: 1,
+                edge_latency_s: 0.0,
+            }),
+        );
+        let r = ue.await_result(5, Duration::from_secs(2)).unwrap();
+        assert_eq!(r.argmax, 1);
+
+        // a NACK for the awaited task is an error with the server's text
+        server.send_to(
+            1,
+            Downlink::Error {
+                task_id: 6,
+                error: "no calibration".into(),
+            },
+        );
+        let err = ue.await_result(6, Duration::from_secs(2)).unwrap_err();
+        assert!(format!("{err:#}").contains("no calibration"));
+    }
+}

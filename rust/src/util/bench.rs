@@ -121,6 +121,12 @@ impl Bench {
         }
         let _ = root.write_file(path);
     }
+
+    /// The cases timed so far — for benches that derive extra figures
+    /// (e.g. throughput) from the raw per-iteration times.
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {

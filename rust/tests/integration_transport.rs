@@ -1,0 +1,199 @@
+//! Remote-UE serving over the TCP transport: real sockets on loopback,
+//! the byte-level wire codec, per-UE session handshake, and the full
+//! report → decision → offload → result workflow — plus the NACK path
+//! for a malformed (calibration-less) feature offload. Runs fully
+//! offline on the synthetic offload compute.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::executor::{OffloadCompute, SyntheticCompute};
+use macci::coordinator::protocol::UeStateReport;
+use macci::coordinator::server::{EdgeServer, ServerConfig};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+use macci::transport::channel::channel_transport;
+use macci::transport::tcp::{TcpClientTransport, TcpServerTransport};
+use macci::transport::ue::UeClient;
+
+fn pool(n: usize) -> StatePool {
+    StatePool::new(
+        n,
+        StateNorm {
+            lambda_tasks: 10.0,
+            frame_s: 0.5,
+            max_bits: 1e6,
+            d_max: 100.0,
+        },
+    )
+}
+
+fn decisions(n: usize) -> DecisionMaker {
+    DecisionMaker::new(Box::new(StaticDecision {
+        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n],
+    }))
+}
+
+fn report(ue: usize) -> UeStateReport {
+    UeStateReport {
+        ue_id: ue,
+        tasks_left: 4,
+        compute_left_s: 0.0,
+        offload_left_bits: 0.0,
+        distance_m: 40.0,
+    }
+}
+
+/// The acceptance scenario: two remote UEs drive handshake → state
+/// report → decision broadcast → offload → result against a live TCP
+/// server, and one calibration-less feature offload comes back as an
+/// `Error` NACK while the session keeps serving.
+#[test]
+fn tcp_loopback_serves_two_remote_ues() {
+    let n = 2;
+    let tasks = 4u64;
+    let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(100)));
+    let elems = compute.image_elems;
+    let mut cfg = ServerConfig::new(n, Duration::from_millis(10), usize::MAX);
+    cfg.exec.workers = 2;
+    cfg.exec.max_wait = Duration::from_micros(500);
+
+    let transport = TcpServerTransport::bind("127.0.0.1:0", n).unwrap();
+    let addr = transport.local_addr();
+    let compute = Some(compute as Arc<dyn OffloadCompute>);
+    let server = EdgeServer::spawn_on(cfg, pool(n), decisions(n), compute, transport).unwrap();
+
+    let handles: Vec<_> = (0..n)
+        .map(|ue| {
+            std::thread::spawn(move || {
+                let mut client =
+                    UeClient::new(TcpClientTransport::connect(addr, ue).expect("handshake"));
+                client.report(report(ue)).expect("report");
+                let d = client
+                    .await_decision(Duration::from_secs(15))
+                    .expect("decision broadcast");
+                assert_eq!(d.actions.len(), 2, "joint decision covers every UE");
+
+                // UE 1 exercises the NACK path mid-stream: a feature
+                // offload with no calibration is rejected at admission,
+                // and the session keeps serving afterwards
+                if ue == 1 {
+                    client.offload(100, 2, vec![7u8; 8], None).expect("send");
+                    let err = client
+                        .await_result(100, Duration::from_secs(15))
+                        .expect_err("calibration-less feature offload must NACK");
+                    let msg = format!("{err:#}");
+                    assert!(msg.contains("calibration"), "unexpected NACK: {msg}");
+                }
+
+                for task in 0..tasks {
+                    client
+                        .offload(task, 0, vec![task as u8 + 1; 4 * elems], None)
+                        .expect("send offload");
+                    let res = client
+                        .await_result(task, Duration::from_secs(15))
+                        .expect("offload result");
+                    assert_eq!(res.ue_id, ue);
+                    assert_eq!(res.task_id, task);
+                    // synthetic logits are strictly increasing in the
+                    // class index, so argmax is always the last class
+                    assert_eq!(res.argmax, res.logits.len() - 1);
+                }
+                client.goodbye().expect("goodbye");
+            })
+        })
+        .collect();
+
+    for h in handles {
+        h.join().expect("ue client thread");
+    }
+    let stats = server.join();
+    assert_eq!(stats.reports, n);
+    assert_eq!(stats.offloads_served as u64, n as u64 * tasks);
+    assert_eq!(stats.raw_offloads as u64, n as u64 * tasks);
+    assert_eq!(stats.feature_offloads, 0, "the NACKed offload was never admitted");
+    assert_eq!(stats.offload_errors, 1, "exactly the calibration NACK");
+    assert!(stats.frames >= 1, "at least the initial decision fired");
+}
+
+/// The same server loop runs unchanged on the in-process transport via
+/// `spawn_on` — the trait seam, not the TCP stack, is what the
+/// coordinator depends on.
+#[test]
+fn channel_transport_drives_spawn_on() {
+    let n = 2;
+    let (server_t, clients) = channel_transport(n);
+    let cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
+    let server = EdgeServer::spawn_on(cfg, pool(n), decisions(n), None, server_t).unwrap();
+
+    let handles: Vec<_> = clients
+        .into_iter()
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut client = UeClient::new(t);
+                let ue = client.ue_id();
+                client.report(report(ue)).unwrap();
+                let d = client.await_decision(Duration::from_secs(10)).unwrap();
+                assert_eq!(d.actions.len(), 2);
+                client.goodbye().unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("ue client thread");
+    }
+    let stats = server.join();
+    assert_eq!(stats.reports, n);
+    assert!(stats.frames >= 1);
+}
+
+/// A remote UE that vanishes without a `Goodbye` (crash, cable pull)
+/// must not wedge the server: the connection thread synthesizes the
+/// Goodbye, so a `max_frames = usize::MAX` server still exits and
+/// `join()` returns.
+#[test]
+fn server_exits_when_remote_ue_vanishes() {
+    let n = 1;
+    let cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
+    let transport = TcpServerTransport::bind("127.0.0.1:0", n).unwrap();
+    let addr = transport.local_addr();
+    let server = EdgeServer::spawn_on(cfg, pool(n), decisions(n), None, transport).unwrap();
+
+    let mut client = UeClient::new(TcpClientTransport::connect(addr, 0).unwrap());
+    client.report(report(0)).unwrap();
+    client.await_decision(Duration::from_secs(15)).unwrap();
+    drop(client); // vanish without a Goodbye
+
+    let t0 = std::time::Instant::now();
+    let stats = server.join();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "server must exit once the vanished UE's Goodbye is synthesized"
+    );
+    assert_eq!(stats.reports, 1);
+    assert!(stats.frames >= 1);
+}
+
+/// Reconnection after a clean goodbye: the server frees the ue_id slot
+/// when the first connection closes, so a UE may come back.
+#[test]
+fn ue_slot_frees_after_disconnect() {
+    let transport = TcpServerTransport::bind("127.0.0.1:0", 1).unwrap();
+    let addr = transport.local_addr();
+    let first = TcpClientTransport::connect(addr, 0).unwrap();
+    drop(first); // close the session
+    // the slot frees as soon as the server reaps the closed connection
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match TcpClientTransport::connect(addr, 0) {
+            Ok(_) => break,
+            Err(e) if std::time::Instant::now() < deadline => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("live session"), "unexpected reject: {msg}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => panic!("slot never freed: {e:#}"),
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! Property tests over the coordinator invariants: routing/state assembly,
-//! batching policy, buffer/GAE math, action-space mapping — pure Rust, no
-//! artifacts needed.
+//! the wire codec (round-trip + corruption), batching policy, buffer/GAE
+//! math, action-space mapping — pure Rust, no artifacts needed.
 
-use macci::coordinator::protocol::UeStateReport;
+use macci::coordinator::protocol::{
+    Downlink, FrameDecision, InferenceResult, OffloadRequest, UeStateReport, Uplink,
+};
 use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::coordinator::wire::{decode_frame, encode_frame, Frame};
 use macci::env::mdp::MultiAgentEnv;
 use macci::env::scenario::ScenarioConfig;
 use macci::env::{Action, HybridAction};
@@ -61,6 +64,130 @@ fn state_pool_matches_env_state_encoding() {
                         return Err(format!("ue {i}: {got} vs {want}"));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random well-formed frame with finite floats (NaN never crosses the
+/// wire in practice, and `PartialEq` could not compare it).
+fn arbitrary_frame(g: &mut macci::util::check::Gen) -> Frame {
+    match g.usize_in(0, 10) {
+        0 => Frame::Hello {
+            ue_id: g.usize_in(0, 1_000),
+        },
+        1 => Frame::Welcome {
+            ue_id: g.usize_in(0, 1_000),
+        },
+        2 => Frame::Up(Uplink::Report(UeStateReport {
+            ue_id: g.usize_in(0, 64),
+            tasks_left: g.rng.next_u64(),
+            compute_left_s: g.f64_in(0.0, 1.0),
+            offload_left_bits: g.f64_in(0.0, 1e6),
+            distance_m: g.f64_in(0.0, 100.0),
+        })),
+        3 | 4 => {
+            let payload_len = g.usize_in(0, 64);
+            Frame::Up(Uplink::Offload(OffloadRequest {
+                ue_id: g.usize_in(0, 64),
+                task_id: g.rng.next_u64(),
+                b: g.usize_in(0, 4),
+                payload: (0..payload_len).map(|_| (g.rng.next_u64() & 0xFF) as u8).collect(),
+                calibration: if g.bool() {
+                    Some((g.f64_in(-4.0, 0.0) as f32, g.f64_in(0.0, 4.0) as f32))
+                } else {
+                    None
+                },
+            }))
+        }
+        5 => Frame::Up(Uplink::Goodbye {
+            ue_id: g.usize_in(0, 64),
+        }),
+        6 => {
+            let n = g.usize_in(0, 8);
+            Frame::Down(Downlink::Decision(FrameDecision {
+                frame: g.usize_in(0, 10_000),
+                actions: (0..n)
+                    .map(|_| {
+                        HybridAction::new(
+                            g.usize_in(0, 5),
+                            g.usize_in(0, 2),
+                            g.f64_in(-3.0, 3.0) as f32,
+                            1.0,
+                        )
+                    })
+                    .collect(),
+            }))
+        }
+        7 => {
+            let n = g.usize_in(0, 16);
+            Frame::Down(Downlink::Result(InferenceResult {
+                ue_id: g.usize_in(0, 64),
+                task_id: g.rng.next_u64(),
+                logits: g.vec_f32(n, -5.0, 5.0),
+                argmax: g.usize_in(0, 16),
+                edge_latency_s: g.f64_in(0.0, 1.0),
+            }))
+        }
+        8 => Frame::Down(Downlink::Error {
+            task_id: g.rng.next_u64(),
+            // multi-byte utf-8 must survive the trip
+            error: "wire ☃ failure".chars().take(g.usize_in(0, 14)).collect(),
+        }),
+        _ => Frame::Down(Downlink::Shutdown),
+    }
+}
+
+#[test]
+fn wire_frames_survive_encode_decode() {
+    // every frame type round-trips bit-exactly, and consecutive frames in
+    // one buffer decode in sequence (stream framing)
+    forall(
+        21,
+        200,
+        |g| (arbitrary_frame(g), arbitrary_frame(g)),
+        |(a, b)| {
+            let mut buf = encode_frame(a);
+            let len_a = buf.len();
+            buf.extend_from_slice(&encode_frame(b));
+            let (got_a, used_a) = decode_frame(&buf).map_err(|e| format!("first: {e}"))?;
+            if got_a != *a || used_a != len_a {
+                return Err(format!("first frame mangled: {got_a:?} vs {a:?}"));
+            }
+            let rest = &buf[used_a..];
+            let (got_b, used_b) = decode_frame(rest).map_err(|e| format!("second: {e}"))?;
+            if got_b != *b || used_a + used_b != buf.len() {
+                return Err(format!("second frame mangled: {got_b:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wire_corruption_is_rejected_never_panics() {
+    // any truncation and any single bit-flip of a valid frame decodes to
+    // an error — the CRC covers the header prefix and the body, so no
+    // damaged frame is ever delivered as data
+    forall(
+        22,
+        200,
+        |g| {
+            let frame = arbitrary_frame(g);
+            let bits = encode_frame(&frame).len() * 8;
+            (frame, g.rng.next_u64() as usize % bits, g.rng.next_u64())
+        },
+        |(frame, flip_bit, trunc_seed)| {
+            let buf = encode_frame(frame);
+            let trunc = (*trunc_seed as usize) % buf.len();
+            if decode_frame(&buf[..trunc]).is_ok() {
+                return Err(format!("truncation to {trunc} bytes decoded"));
+            }
+            let mut flipped = buf.clone();
+            flipped[flip_bit / 8] ^= 1 << (flip_bit % 8);
+            if decode_frame(&flipped).is_ok() {
+                return Err(format!("bit flip at {flip_bit} went undetected"));
             }
             Ok(())
         },
