@@ -35,6 +35,9 @@ MACCI_BENCH_SERVING_TASKS=${MACCI_BENCH_SERVING_TASKS:-48} cargo bench --bench b
 echo "== wire-codec baseline (BENCH_wire.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_wire
 
+echo "== training-rollout baseline (BENCH_train.json) =="
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_train
+
 echo "== remote serving (loopback TCP, end-to-end) =="
 cargo run --release --example remote_serving -- 2 8
 

@@ -1,14 +1,17 @@
 //! End-to-end edge-learning driver — the repository's headline validation
 //! run (recorded in EXPERIMENTS.md).
 //!
-//! Trains the full MAHPPO stack (N = 5 UEs, ResNet18 profile) for several
-//! thousand frames with ALL network compute flowing through the artifact
-//! executables on the configured backend (native interpreter by default,
-//! PJRT with `--features xla-pjrt`), logs the reward curve, then evaluates
-//! the learned policy against the Local and JALAD baselines and prints the
-//! overhead-savings summary.
+//! Trains the full MAHPPO stack (N = 5 UEs, ResNet18 profile) with ALL
+//! network compute flowing through the artifact executables on the
+//! configured backend (native interpreter by default, PJRT with
+//! `--features xla-pjrt`). Experience comes from the vectorized rollout
+//! engine: `n_envs` parallel environment lanes batched through one forward
+//! per actor (`n_envs = 1` is the classic serial loop). Logs the reward
+//! curve, then evaluates the learned policy against the Local and Random
+//! baselines on a fresh eval-seeded env and prints the overhead-savings
+//! summary.
 //!
-//! Run: `cargo run --release --example edge_learning -- [frames] [n_ues]`
+//! Run: `cargo run --release --example edge_learning -- [frames] [n_ues] [n_envs]`
 
 use anyhow::Result;
 use macci::env::mdp::MultiAgentEnv;
@@ -22,6 +25,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let frames: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8_000);
     let n_ues: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let n_envs: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(4);
 
     let store = ArtifactStore::open("artifacts")?;
     let profile = DeviceProfile::load_or_synthetic("artifacts/profiles/resnet18.json")?;
@@ -30,9 +34,13 @@ fn main() -> Result<()> {
         lambda_tasks: 200.0,
         ..Default::default()
     };
+    let cfg = TrainConfig {
+        n_envs,
+        ..Default::default()
+    };
 
-    println!("=== edge learning: MAHPPO, N = {n_ues}, {frames} frames ===");
-    let mut trainer = MahppoTrainer::new(&store, &profile, scenario.clone(), TrainConfig::default())?;
+    println!("=== edge learning: MAHPPO, N = {n_ues}, {frames} frames, E = {n_envs} lanes ===");
+    let mut trainer = MahppoTrainer::new(&store, &profile, scenario.clone(), cfg)?;
     let report = trainer.train(frames)?;
 
     // reward curve (sampled)
@@ -43,21 +51,21 @@ fn main() -> Result<()> {
         println!("  ep {:>4}  {:>10.2}  {}", i, curve.ys[i], bar(curve.ys[i], &curve.ys));
     }
     println!(
-        "{} episodes over {} frames in {:.1}s ({:.0} frames/s, incl. {} PPO rounds)",
+        "{} episodes over {} frames in {:.1}s ({:.0} frames/s over {} lanes, incl. {} PPO rounds)",
         report.episodes,
         report.frames,
         report.wall_s,
         report.frames as f64 / report.wall_s,
+        trainer.n_envs(),
         report.value_losses.ys.len(),
     );
 
-    // evaluation vs baselines
+    // evaluation vs baselines (fresh eval-seeded env; training untouched)
     let mut eval_sc = scenario.clone();
     eval_sc.eval_mode = true;
-    trainer.env.cfg.eval_mode = true;
-    let ours = trainer.evaluate(3)?;
+    let ours = trainer.evaluate_on(eval_sc.clone(), 3)?;
 
-    let mut env = MultiAgentEnv::new(profile.clone(), eval_sc.clone(), 11)?;
+    let mut env = MultiAgentEnv::new(profile.clone(), eval_sc, 11)?;
     let mut local = BaselinePolicy::new(PolicyKind::Local, 0);
     let base = evaluate_policy(&mut local, &mut env, 1)?;
     let mut random = BaselinePolicy::new(PolicyKind::Random, 1);

@@ -68,10 +68,11 @@ fn main() -> Result<()> {
         report.wall_s
     );
 
-    // 4. greedy evaluation vs the baseline
-    trainer.env.cfg.eval_mode = true;
-    trainer.env.cfg.eval_tasks = 50;
-    let ours = trainer.evaluate(1)?;
+    // 4. greedy evaluation vs the baseline (fresh eval-seeded env)
+    let mut eval_sc = scenario.clone();
+    eval_sc.eval_mode = true;
+    eval_sc.eval_tasks = 50;
+    let ours = trainer.evaluate_on(eval_sc, 1)?;
     println!(
         "MAHPPO:        {:.1} ms / {:.1} mJ per task",
         ours.avg_latency * 1e3,

@@ -55,6 +55,9 @@ N_RANGE = range(3, 11)       # paper Fig. 10: N in 3..10
 N_FULL = 5                   # the N with the full fig9 batch-size matrix
 UPDATE_BATCHES_FULL = (128, 256, 512)
 UPDATE_BATCH = 256
+# Forward batch sizes: B = 1 serves, B > 1 feed the vectorized rollout
+# engine (one row per env lane). Keep in sync with rust runtime/artifacts.rs.
+FWD_BATCHES = (1, 2, 4, 8, 16, 32)
 N_PARTITION = 6              # b in {0..5}
 N_CHANNELS = 2
 
@@ -117,25 +120,26 @@ def emit_rl(man: Manifest, log=print) -> None:
         d = cfg.state_dim
         t0 = time.time()
 
-        # forward (serving / rollout) at B = 1
-        emit(
-            man,
-            f"actor_fwd_n{n}_b1",
-            f"rl/actor_fwd_n{n}_b1.hlo.txt",
-            lower(lambda f, s: actor_forward(cfg, f, s), f32(ap), f32(1, d)),
-            [io("params", ap), io("state", 1, d)],
-            [io("probs_b", 1, N_PARTITION), io("probs_c", 1, N_CHANNELS), io("mu", 1, 1), io("log_std", 1, 1)],
-            n_ues=n,
-        )
-        emit(
-            man,
-            f"critic_fwd_n{n}_b1",
-            f"rl/critic_fwd_n{n}_b1.hlo.txt",
-            lower(lambda f, s: critic_forward(cfg, f, s), f32(cp), f32(1, d)),
-            [io("params", cp), io("state", 1, d)],
-            [io("value", 1, 1)],
-            n_ues=n,
-        )
+        # forwards: B = 1 serves, B > 1 batch one state per rollout lane
+        for fb in FWD_BATCHES:
+            emit(
+                man,
+                f"actor_fwd_n{n}_b{fb}",
+                f"rl/actor_fwd_n{n}_b{fb}.hlo.txt",
+                lower(lambda f, s: actor_forward(cfg, f, s), f32(ap), f32(fb, d)),
+                [io("params", ap), io("state", fb, d)],
+                [io("probs_b", fb, N_PARTITION), io("probs_c", fb, N_CHANNELS), io("mu", fb, 1), io("log_std", fb, 1)],
+                n_ues=n,
+            )
+            emit(
+                man,
+                f"critic_fwd_n{n}_b{fb}",
+                f"rl/critic_fwd_n{n}_b{fb}.hlo.txt",
+                lower(lambda f, s: critic_forward(cfg, f, s), f32(cp), f32(fb, d)),
+                [io("params", cp), io("state", fb, d)],
+                [io("value", fb, 1)],
+                n_ues=n,
+            )
 
         batches = UPDATE_BATCHES_FULL if n == N_FULL else (UPDATE_BATCH,)
         for b in batches:
@@ -184,6 +188,7 @@ def emit_rl(man: Manifest, log=print) -> None:
         "n_partition": N_PARTITION,
         "n_channels": N_CHANNELS,
         "update_batches": {str(N_FULL): list(UPDATE_BATCHES_FULL), "default": [UPDATE_BATCH]},
+        "fwd_batches": list(FWD_BATCHES),
         "specs": {
             str(n): {
                 "actor": actor_spec(ActorConfig(n, N_PARTITION, N_CHANNELS)).to_manifest(),

@@ -1,0 +1,105 @@
+//! Training-rollout throughput: the vectorized rollout engine vs the
+//! serial collection loop, at E = 1 / 4 / 8 env lanes. Emits
+//! BENCH_train.json.
+//!
+//! Runs fully offline on the native backend with the built-in RL demo
+//! manifest and the synthetic device profile, so the numbers isolate the
+//! engine itself: batched actor/critic forwards, per-lane sampling, env
+//! stepping on the worker-thread pool. E = 1 is bit-for-bit the serial
+//! MAHPPO collection loop and serves as the baseline. PPO update cost is
+//! identical in both modes and excluded (rollout was the serial bottleneck
+//! this engine removes).
+//!
+//! Bounded by MACCI_BENCH_MS per configuration like the other benches.
+
+use std::time::{Duration, Instant};
+
+use macci::env::scenario::ScenarioConfig;
+use macci::profiles::DeviceProfile;
+use macci::rl::mahppo::TrainConfig;
+use macci::rl::rollout::RolloutEngine;
+use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::nets::{ActorNet, CriticNet};
+use macci::util::json::Json;
+use macci::util::rng::Rng;
+
+const N_UES: usize = 5;
+const BUFFER: usize = 512;
+
+/// Collect rollout buffers for ~`target` wall time; returns frames/s.
+fn run_one(store: &ArtifactStore, n_envs: usize, target: Duration) -> f64 {
+    let scenario = ScenarioConfig {
+        n_ues: N_UES,
+        lambda_tasks: 40.0,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        buffer_size: BUFFER,
+        minibatch: 128,
+        n_envs,
+        seed: 17,
+        ..Default::default()
+    };
+    let mut actors: Vec<ActorNet> = (0..N_UES)
+        .map(|i| ActorNet::new(store, N_UES, cfg.actor_seed(i)).unwrap())
+        .collect();
+    let mut critic = CriticNet::new(store, N_UES, cfg.critic_seed()).unwrap();
+    let mut engine = RolloutEngine::new(&DeviceProfile::synthetic(), &scenario, &cfg).unwrap();
+    let mut rng = Rng::new(cfg.sampler_seed());
+    let mut buf = engine.make_buffer(cfg.buffer_size);
+    engine.reset().unwrap();
+
+    // warmup: one buffer
+    engine.collect(&mut actors, &mut critic, &mut buf, &mut rng).unwrap();
+    buf.clear();
+
+    let mut frames = 0usize;
+    let t0 = Instant::now();
+    while t0.elapsed() < target {
+        let stats = engine.collect(&mut actors, &mut critic, &mut buf, &mut rng).unwrap();
+        frames += stats.frames;
+        buf.clear();
+    }
+    frames as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let target = Duration::from_millis(
+        std::env::var("MACCI_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(700),
+    );
+    let store = ArtifactStore::native_demo();
+    println!(
+        "train-rollout bench: N = {N_UES} UEs, |M| = {BUFFER}, native backend, {} ms/config",
+        target.as_millis()
+    );
+
+    let mut json = Json::obj();
+    let mut serial = 0.0f64;
+    for &e in &[1usize, 4, 8] {
+        let fps = run_one(&store, e, target);
+        if e == 1 {
+            serial = fps;
+        }
+        let label = if e == 1 { "serial" } else { "vectorized" };
+        println!(
+            "  E = {e}: {fps:>9.0} frames/s ({label}){}",
+            if e == 1 {
+                String::new()
+            } else {
+                format!("  | speedup vs serial {:.2}x", fps / serial)
+            }
+        );
+        json = json.set(
+            &format!("train/rollout_e{e}"),
+            Json::obj().set("frames_per_s", fps),
+        );
+        if e > 1 {
+            json = json.set(&format!("train/speedup_e{e}"), fps / serial);
+        }
+    }
+    json.write_file("BENCH_train.json").unwrap();
+    println!("wrote BENCH_train.json");
+}

@@ -1,4 +1,10 @@
-//! Scenario configuration — the environment constants of Sec. 6.3.1.
+//! Scenario configuration — the environment constants of Sec. 6.3.1 — and
+//! the scenario *distribution* used for domain-randomized training: each
+//! rollout lane can draw its own λ, distance range, UE-count bucket and
+//! p_max so the learned policy generalizes across load and geometry
+//! instead of overfitting one fixed deployment.
+
+use crate::util::rng::Rng;
 
 /// All environment constants. Defaults are the paper's Sec. 6.3.1 settings.
 #[derive(Debug, Clone)]
@@ -95,6 +101,87 @@ impl ScenarioConfig {
     }
 }
 
+/// A distribution over [`ScenarioConfig`]s for domain-randomized training.
+///
+/// `sample` draws a fresh scenario around `base`: the UE count comes from
+/// `ue_buckets`, and λ / d_max / p_max are uniform over their ranges. The
+/// draw order (bucket, λ, d_max, p_max) is fixed, so a given RNG stream
+/// always yields the same scenario sequence regardless of which knobs are
+/// actually randomized.
+#[derive(Debug, Clone)]
+pub struct ScenarioDistribution {
+    /// Every sampled scenario starts from this config.
+    pub base: ScenarioConfig,
+    /// Candidate UE counts (paper sweeps N = 3..10). Training lanes pin N
+    /// via [`ScenarioDistribution::sample_for`]; the buckets drive scenario
+    /// sweeps and evaluation grids.
+    pub ue_buckets: Vec<usize>,
+    /// Uniform range for the Poisson task parameter λ_p.
+    pub lambda_range: (f64, f64),
+    /// Uniform range for the cell radius d_max (d_min stays at base).
+    pub d_max_range: (f64, f64),
+    /// Uniform range for the transmit-power cap p_max (constraint C3).
+    pub p_max_range: (f64, f64),
+}
+
+impl ScenarioDistribution {
+    /// A moderate randomization band around `base`: ±50 % on λ, d_max and
+    /// p_max, UE count fixed at the base value.
+    pub fn around(base: ScenarioConfig) -> ScenarioDistribution {
+        ScenarioDistribution {
+            ue_buckets: vec![base.n_ues],
+            lambda_range: (0.5 * base.lambda_tasks, 1.5 * base.lambda_tasks),
+            d_max_range: ((0.5 * base.d_max).max(base.d_min), 1.5 * base.d_max),
+            p_max_range: (0.5 * base.p_max, 1.5 * base.p_max),
+            base,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.base.validate()?;
+        anyhow::ensure!(!self.ue_buckets.is_empty(), "need at least one UE bucket");
+        anyhow::ensure!(self.ue_buckets.iter().all(|&n| n >= 1), "UE buckets must be >= 1");
+        for (name, (lo, hi)) in [
+            ("lambda_range", self.lambda_range),
+            ("d_max_range", self.d_max_range),
+            ("p_max_range", self.p_max_range),
+        ] {
+            anyhow::ensure!(lo > 0.0 && hi >= lo, "bad {name}: ({lo}, {hi})");
+        }
+        anyhow::ensure!(
+            self.d_max_range.0 >= self.base.d_min,
+            "d_max_range below d_min {}",
+            self.base.d_min
+        );
+        Ok(())
+    }
+
+    /// Draw one scenario (UE count included).
+    pub fn sample(&self, rng: &mut Rng) -> ScenarioConfig {
+        let n_ues = self.ue_buckets[rng.below(self.ue_buckets.len())];
+        let lambda = rng.uniform(self.lambda_range.0, self.lambda_range.1);
+        let d_max = rng.uniform(self.d_max_range.0, self.d_max_range.1);
+        let p_max = rng.uniform(self.p_max_range.0, self.p_max_range.1);
+        ScenarioConfig {
+            n_ues,
+            lambda_tasks: lambda,
+            eval_tasks: lambda.max(1.0) as u64,
+            d_max,
+            p_max,
+            ..self.base.clone()
+        }
+    }
+
+    /// Draw one scenario with the UE count pinned to `n_ues` (training
+    /// lanes must keep the actor/critic state dimension fixed). Consumes
+    /// the same number of RNG draws as [`ScenarioDistribution::sample`].
+    pub fn sample_for(&self, n_ues: usize, rng: &mut Rng) -> ScenarioConfig {
+        let mut sc = self.sample(rng);
+        sc.n_ues = n_ues;
+        sc
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +217,56 @@ mod tests {
         let mut c = ScenarioConfig::default();
         c.noise_w = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn distribution_samples_within_ranges() {
+        let dist = ScenarioDistribution {
+            ue_buckets: vec![3, 5, 8],
+            ..ScenarioDistribution::around(ScenarioConfig::default())
+        };
+        dist.validate().unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let sc = dist.sample(&mut rng);
+            sc.validate().unwrap();
+            assert!([3usize, 5, 8].contains(&sc.n_ues));
+            assert!(sc.lambda_tasks >= 100.0 && sc.lambda_tasks <= 300.0);
+            assert!(sc.d_max >= 50.0 && sc.d_max <= 150.0);
+            assert!(sc.p_max >= 0.5 && sc.p_max <= 1.5);
+            assert_eq!(sc.n_channels, 2, "non-randomized knobs keep base values");
+        }
+    }
+
+    #[test]
+    fn distribution_sample_is_deterministic_and_pinnable() {
+        let dist = ScenarioDistribution {
+            ue_buckets: vec![3, 5, 8],
+            ..ScenarioDistribution::around(ScenarioConfig::default())
+        };
+        let a = dist.sample(&mut Rng::new(7));
+        let b = dist.sample(&mut Rng::new(7));
+        assert_eq!(a.n_ues, b.n_ues);
+        assert_eq!(a.lambda_tasks, b.lambda_tasks);
+        assert_eq!(a.d_max, b.d_max);
+        assert_eq!(a.p_max, b.p_max);
+        // pinning N consumes the identical rng stream
+        let p = dist.sample_for(5, &mut Rng::new(7));
+        assert_eq!(p.n_ues, 5);
+        assert_eq!(p.lambda_tasks, a.lambda_tasks);
+        assert_eq!(p.p_max, a.p_max);
+    }
+
+    #[test]
+    fn distribution_rejects_bad_ranges() {
+        let mut d = ScenarioDistribution::around(ScenarioConfig::default());
+        d.lambda_range = (10.0, 5.0);
+        assert!(d.validate().is_err());
+        let mut d = ScenarioDistribution::around(ScenarioConfig::default());
+        d.ue_buckets.clear();
+        assert!(d.validate().is_err());
+        let mut d = ScenarioDistribution::around(ScenarioConfig::default());
+        d.d_max_range = (0.5, 1.0); // below d_min = 1.0
+        assert!(d.validate().is_err());
     }
 }

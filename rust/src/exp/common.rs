@@ -23,12 +23,20 @@ pub struct ExpContext {
     pub eval_episodes: usize,
     /// Poisson task-count parameter (paper: 200; smaller = faster runs).
     pub lambda_tasks: f64,
+    /// Rollout lanes per trainer (`TrainConfig::n_envs`); override with
+    /// MACCI_N_ENVS. 1 reproduces the pre-vectorization serial runs.
+    pub n_envs: usize,
     /// Quick mode: tiny budgets for smoke-testing the full harness.
     pub quick: bool,
 }
 
 impl ExpContext {
     pub fn new(store: ArtifactStore, quick: bool) -> ExpContext {
+        let n_envs = std::env::var("MACCI_N_ENVS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&e| e >= 1)
+            .unwrap_or(1);
         if quick {
             ExpContext {
                 store,
@@ -37,6 +45,7 @@ impl ExpContext {
                 seeds: 1,
                 eval_episodes: 1,
                 lambda_tasks: 40.0,
+                n_envs,
                 quick,
             }
         } else {
@@ -47,8 +56,18 @@ impl ExpContext {
                 seeds: 2,
                 eval_episodes: 3,
                 lambda_tasks: 200.0,
+                n_envs,
                 quick,
             }
+        }
+    }
+
+    /// The figure runners' base training config: defaults plus this
+    /// context's rollout lane count.
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            n_envs: self.n_envs,
+            ..Default::default()
         }
     }
 
@@ -112,7 +131,9 @@ impl ExpContext {
             .collect()
     }
 
-    /// Train, then greedy-evaluate in eval mode (d = 50, K fixed).
+    /// Train, then greedy-evaluate in eval mode (d = 50, K fixed). The
+    /// evaluation runs on a fresh eval-seeded env, so it cannot perturb
+    /// the trainer's streams.
     pub fn train_and_eval(
         &self,
         profile: &DeviceProfile,
@@ -120,10 +141,11 @@ impl ExpContext {
         cfg: TrainConfig,
     ) -> Result<(TrainReport, EvalStats)> {
         let (mut t, report) = self.train_agent(profile, scenario.clone(), cfg)?;
-        // switch the trainer's env into eval mode for a fair comparison
-        t.env.cfg.eval_mode = true;
-        t.env.cfg.eval_tasks = self.lambda_tasks as u64;
-        let stats = t.evaluate(self.eval_episodes)?;
+        let mut eval_sc = scenario;
+        eval_sc.eval_mode = true;
+        eval_sc.lambda_tasks = self.lambda_tasks;
+        eval_sc.eval_tasks = self.lambda_tasks as u64;
+        let stats = t.evaluate_on(eval_sc, self.eval_episodes)?;
         Ok((report, stats))
     }
 }

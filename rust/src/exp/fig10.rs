@@ -6,7 +6,6 @@ use anyhow::Result;
 
 use super::common::{mean_curve, ExpContext};
 use crate::metrics::Report;
-use crate::rl::mahppo::TrainConfig;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let ns: Vec<usize> = if ctx.quick { vec![3, 5] } else { (3..=10).collect() };
@@ -21,7 +20,7 @@ pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str, ns: &[usize]) ->
     for &n in ns {
         println!("[fig10] training N = {n}");
         let scenario = ctx.scenario(n);
-        let runs = ctx.train_seeds(&profile, &scenario, TrainConfig::default())?;
+        let runs = ctx.train_seeds(&profile, &scenario, ctx.train_config())?;
         let mut curve = mean_curve(&format!("n{n}"), &runs);
         curve.name = format!("n{n}");
         let f = curve.tail_mean(10);

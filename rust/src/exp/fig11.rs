@@ -12,7 +12,6 @@ use super::common::{fmt_mj, fmt_ms, ExpContext, Table};
 use crate::env::mdp::MultiAgentEnv;
 use crate::metrics::{Report, Series};
 use crate::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
-use crate::rl::mahppo::TrainConfig;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let ns: Vec<usize> = if ctx.quick { vec![3, 5] } else { vec![3, 4, 5, 6, 8, 10] };
@@ -45,14 +44,14 @@ pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str, ns: &[usize]) ->
     for &n in ns {
         println!("[fig11] N = {n}: training + evaluating MAHPPO");
         let (_report, ours) =
-            ctx.train_and_eval(&profile, ctx.scenario(n), TrainConfig::default())?;
+            ctx.train_and_eval(&profile, ctx.scenario(n), ctx.train_config())?;
 
         println!("[fig11] N = {n}: training + evaluating JALAD variant");
         let jalad_profile = profile.jalad_variant();
         let (_jr, jalad) = ctx.train_and_eval(
             &jalad_profile,
             ctx.scenario(n).jalad_frame(),
-            TrainConfig::default(),
+            ctx.train_config(),
         )?;
 
         // Local baseline needs no training

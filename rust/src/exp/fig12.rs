@@ -33,7 +33,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             scenario.beta = beta;
             let cfg = TrainConfig {
                 seed: 100 + s as u64 * 7919,
-                ..Default::default()
+                ..ctx.train_config()
             };
             let (_r, stats) = ctx.train_and_eval(&profile, scenario, cfg)?;
             lats.push(stats.avg_latency * 1e3);

@@ -14,7 +14,6 @@ use super::common::{mean_curve, ExpContext};
 use crate::env::mdp::MultiAgentEnv;
 use crate::metrics::{Report, Series};
 use crate::rl::baselines::{reward_trace, BaselinePolicy, PolicyKind};
-use crate::rl::mahppo::TrainConfig;
 use crate::util::stats;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -26,13 +25,13 @@ pub fn run_for_model(ctx: &ExpContext, model: &str, slug: &str) -> Result<()> {
     let scenario = ctx.scenario(5);
 
     println!("[fig8] training MAHPPO ({model}, N=5, {} frames x {} seeds)", ctx.frames, ctx.seeds);
-    let mahppo = ctx.train_seeds(&profile, &scenario, TrainConfig::default())?;
+    let mahppo = ctx.train_seeds(&profile, &scenario, ctx.train_config())?;
     let mahppo_curve = mean_curve("mahppo", &mahppo);
 
     println!("[fig8] training JALAD variant (T0 = 3 s)");
     let jalad_profile = profile.jalad_variant();
     let jalad_scenario = scenario.clone().jalad_frame();
-    let jalad = ctx.train_seeds(&jalad_profile, &jalad_scenario, TrainConfig::default())?;
+    let jalad = ctx.train_seeds(&jalad_profile, &jalad_scenario, ctx.train_config())?;
     let jalad_curve = mean_curve("jalad", &jalad);
 
     // Local baseline: flat trace over the same number of episodes

@@ -17,7 +17,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     // (a) learning rate
     println!("[fig9a] learning-rate sweep");
     for lr in [1e-3f32, 1e-4, 1e-5] {
-        let cfg = TrainConfig { lr, ..Default::default() };
+        let cfg = TrainConfig { lr, ..ctx.train_config() };
         let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
         let mut curve = mean_curve(&format!("lr_{lr:e}"), &runs);
         curve.name = format!("lr_{lr:e}");
@@ -28,7 +28,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     // (b) sample reuse time
     println!("[fig9b] sample-reuse sweep");
     for reuse in [1usize, 5, 20, 80] {
-        let cfg = TrainConfig { reuse, ..Default::default() };
+        let cfg = TrainConfig { reuse, ..ctx.train_config() };
         let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
         let curve = {
             let mut c = mean_curve(&format!("reuse_{reuse}"), &runs);
@@ -45,7 +45,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         let cfg = TrainConfig {
             buffer_size: mem,
             minibatch: mem / 4,
-            ..Default::default()
+            ..ctx.train_config()
         };
         let runs = ctx.train_seeds(&profile, &scenario, cfg)?;
         let mut reward = mean_curve(&format!("mem_{mem}"), &runs);

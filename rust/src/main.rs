@@ -118,6 +118,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         minibatch: args.usize_or("batch", 256)?,
         reuse: args.usize_or("reuse", 10)?,
         seed: args.u64_or("seed", 0)?,
+        n_envs: args.usize_or("n-envs", 1)?,
         ..Default::default()
     };
     let frames = args.usize_or("frames", 6000)?;
@@ -147,8 +148,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     r.write(dir, &slug)?;
     println!("wrote {out}");
 
-    // post-training greedy evaluation
-    trainer.env.cfg.eval_mode = true;
+    // post-training greedy evaluation (fresh eval-seeded env)
     let stats = trainer.evaluate(args.usize_or("episodes", 2)?)?;
     println!(
         "greedy eval: avg latency {:.1} ms, avg energy {:.1} mJ, reward {:.2}",

@@ -1,10 +1,14 @@
-//! The trajectory buffer **M** of Algorithm 1.
+//! The trajectory buffer **M** of Algorithm 1, laid out in *lanes*.
 //!
 //! Stores joint transitions (state, per-UE hybrid actions + log-probs,
-//! reward, critic value, done). Once full, [`TrajectoryBuffer::finish`]
-//! computes returns (Eq. 15) and GAE advantages (Eq. 18), after which
-//! minibatches can be drawn for the PPO epochs; `clear` empties it for the
-//! next collection round ("Clear memories in M").
+//! reward, critic value, done). Each lane is the time-ordered trajectory of
+//! one [`crate::rl::rollout::RolloutEngine`] env; returns (Eq. 15) and GAE
+//! advantages (Eq. 18) are computed **per lane** with a per-lane bootstrap
+//! — credit never flows across lane boundaries, only along each lane's own
+//! timeline. After [`TrajectoryBuffer::finish_lanes`] the lanes are
+//! flattened (lane-major) and minibatches can be drawn for the PPO epochs;
+//! `clear` empties it for the next collection round ("Clear memories in
+//! M"). A 1-lane buffer is exactly the classic serial buffer.
 
 use super::gae;
 use crate::util::rng::Rng;
@@ -45,53 +49,101 @@ pub struct TrajectoryBuffer {
     pub capacity: usize,
     pub n_ues: usize,
     pub state_dim: usize,
-    transitions: Vec<Transition>,
+    /// Per-lane staging, time-ordered within each lane.
+    lanes: Vec<Vec<Transition>>,
+    /// Lane-major flattened transitions, built by `finish_lanes`.
+    flat: Vec<Transition>,
     returns: Vec<f32>,
     advantages: Vec<f32>,
     finished: bool,
 }
 
 impl TrajectoryBuffer {
+    /// The classic single-lane (serial) buffer.
     pub fn new(capacity: usize, n_ues: usize) -> TrajectoryBuffer {
+        Self::with_lanes(capacity, n_ues, 1)
+    }
+
+    /// A buffer fed by `n_lanes` independent rollout lanes.
+    pub fn with_lanes(capacity: usize, n_ues: usize, n_lanes: usize) -> TrajectoryBuffer {
+        assert!(n_lanes >= 1, "need at least one lane");
         TrajectoryBuffer {
             capacity,
             n_ues,
             state_dim: 4 * n_ues,
-            transitions: Vec::with_capacity(capacity),
+            lanes: vec![Vec::new(); n_lanes],
+            flat: Vec::with_capacity(capacity),
             returns: Vec::new(),
             advantages: Vec::new(),
             finished: false,
         }
     }
 
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
     pub fn len(&self) -> usize {
-        self.transitions.len()
+        self.flat.len() + self.lanes.iter().map(Vec::len).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.transitions.is_empty()
+        self.len() == 0
     }
 
     pub fn is_full(&self) -> bool {
-        self.transitions.len() >= self.capacity
+        self.len() >= self.capacity
     }
 
     pub fn push(&mut self, t: Transition) {
+        self.push_to(0, t);
+    }
+
+    /// Append one transition to `lane`'s timeline.
+    pub fn push_to(&mut self, lane: usize, t: Transition) {
         debug_assert_eq!(t.state.len(), self.state_dim);
         debug_assert_eq!(t.a_b.len(), self.n_ues);
         debug_assert!(!self.is_full(), "buffer overflow — check is_full() first");
-        self.transitions.push(t);
-        self.finished = false;
+        assert!(!self.finished, "clear() a finished buffer before refilling");
+        self.lanes[lane].push(t);
     }
 
-    /// Compute returns + advantages. `bootstrap` is V(s_T) of the state
-    /// following the last stored transition (0.0 if it was terminal).
+    /// Bulk-append one lane's collected transitions (rollout workers hand
+    /// over whole per-lane trajectories at the end of a collection).
+    pub fn extend_lane(&mut self, lane: usize, ts: Vec<Transition>) {
+        assert!(!self.finished, "clear() a finished buffer before refilling");
+        if let Some(t) = ts.first() {
+            debug_assert_eq!(t.state.len(), self.state_dim);
+        }
+        self.lanes[lane].extend(ts);
+    }
+
+    /// Compute returns + advantages for a single-lane buffer. `bootstrap`
+    /// is V(s_T) of the state following the last stored transition (0.0 if
+    /// it was terminal).
     pub fn finish(&mut self, gamma: f64, lam: f64, bootstrap: f64, normalize_adv: bool) {
-        let rewards: Vec<f64> = self.transitions.iter().map(|t| t.reward).collect();
-        let values: Vec<f32> = self.transitions.iter().map(|t| t.value).collect();
-        let dones: Vec<bool> = self.transitions.iter().map(|t| t.done).collect();
-        self.returns = gae::discounted_returns(&rewards, &dones, gamma, bootstrap);
-        self.advantages = gae::gae_advantages(&rewards, &values, &dones, gamma, lam, bootstrap);
+        assert_eq!(self.lanes.len(), 1, "multi-lane buffers need finish_lanes");
+        self.finish_lanes(gamma, lam, &[bootstrap], normalize_adv);
+    }
+
+    /// Compute returns + advantages **per lane** (one bootstrap per lane),
+    /// then flatten lane-major for minibatch sampling. Advantage
+    /// normalization, when enabled, is global over the whole buffer —
+    /// exactly the serial behavior for one lane.
+    pub fn finish_lanes(&mut self, gamma: f64, lam: f64, bootstraps: &[f64], normalize_adv: bool) {
+        assert_eq!(bootstraps.len(), self.lanes.len(), "one bootstrap per lane");
+        assert!(!self.finished, "buffer already finished — clear() first");
+        for (lane, &bootstrap) in self.lanes.iter_mut().zip(bootstraps) {
+            let rewards: Vec<f64> = lane.iter().map(|t| t.reward).collect();
+            let values: Vec<f32> = lane.iter().map(|t| t.value).collect();
+            let dones: Vec<bool> = lane.iter().map(|t| t.done).collect();
+            self.returns
+                .extend(gae::discounted_returns(&rewards, &dones, gamma, bootstrap));
+            self.advantages.extend(gae::gae_advantages(
+                &rewards, &values, &dones, gamma, lam, bootstrap,
+            ));
+            self.flat.append(lane);
+        }
         if normalize_adv {
             gae::normalize(&mut self.advantages);
         }
@@ -119,7 +171,7 @@ impl TrajectoryBuffer {
             adv: Vec::with_capacity(idx.len()),
         };
         for &i in idx {
-            let t = &self.transitions[i];
+            let t = &self.flat[i];
             mb.states.extend_from_slice(&t.state);
             mb.returns.push(self.returns[i]);
             mb.adv.push(self.advantages[i]);
@@ -133,9 +185,24 @@ impl TrajectoryBuffer {
         mb
     }
 
+    /// The advantages in flattened (lane-major) order; requires `finish`.
+    pub fn advantages(&self) -> &[f32] {
+        assert!(self.finished, "call finish() before reading advantages");
+        &self.advantages
+    }
+
+    /// The returns in flattened (lane-major) order; requires `finish`.
+    pub fn returns(&self) -> &[f32] {
+        assert!(self.finished, "call finish() before reading returns");
+        &self.returns
+    }
+
     /// "Clear memories in M."
     pub fn clear(&mut self) {
-        self.transitions.clear();
+        for lane in &mut self.lanes {
+            lane.clear();
+        }
+        self.flat.clear();
         self.returns.clear();
         self.advantages.clear();
         self.finished = false;
@@ -145,7 +212,14 @@ impl TrajectoryBuffer {
         if self.is_empty() {
             return 0.0;
         }
-        self.transitions.iter().map(|t| t.value as f64).sum::<f64>() / self.len() as f64
+        let staged: f64 = self
+            .lanes
+            .iter()
+            .flatten()
+            .chain(self.flat.iter())
+            .map(|t| t.value as f64)
+            .sum();
+        staged / self.len() as f64
     }
 }
 
@@ -191,6 +265,97 @@ mod tests {
         buf.push(transition(2, 0.0, false));
         let mut rng = Rng::new(1);
         let _ = buf.sample_minibatch(1, &mut rng);
+    }
+
+    fn rewarded(n: usize, reward: f64, value: f32, done: bool) -> Transition {
+        Transition {
+            value,
+            ..transition(n, reward, done)
+        }
+    }
+
+    #[test]
+    fn lane_advantages_match_independent_single_lane_buffers() {
+        // two lanes finished together must produce exactly the advantages
+        // and returns of two independent single-lane buffers — credit
+        // assignment never crosses a lane boundary
+        let lane_a: Vec<(f64, f32, bool)> =
+            vec![(1.0, 0.2, false), (-2.0, 0.5, false), (3.0, -0.1, true)];
+        let lane_b: Vec<(f64, f32, bool)> = vec![(100.0, 1.0, false), (50.0, -2.0, false)];
+        let (ba, bb) = (0.0, 7.5); // lane B truncates mid-episode
+
+        let mut multi = TrajectoryBuffer::with_lanes(8, 2, 2);
+        for &(r, v, d) in &lane_a {
+            multi.push_to(0, rewarded(2, r, v, d));
+        }
+        for &(r, v, d) in &lane_b {
+            multi.push_to(1, rewarded(2, r, v, d));
+        }
+        multi.finish_lanes(0.9, 0.8, &[ba, bb], false);
+
+        let mut solo_a = TrajectoryBuffer::new(4, 2);
+        for &(r, v, d) in &lane_a {
+            solo_a.push(rewarded(2, r, v, d));
+        }
+        solo_a.finish(0.9, 0.8, ba, false);
+        let mut solo_b = TrajectoryBuffer::new(4, 2);
+        for &(r, v, d) in &lane_b {
+            solo_b.push(rewarded(2, r, v, d));
+        }
+        solo_b.finish(0.9, 0.8, bb, false);
+
+        let expect_adv: Vec<f32> = solo_a
+            .advantages()
+            .iter()
+            .chain(solo_b.advantages())
+            .copied()
+            .collect();
+        let expect_ret: Vec<f32> = solo_a
+            .returns()
+            .iter()
+            .chain(solo_b.returns())
+            .copied()
+            .collect();
+        assert_eq!(multi.advantages(), &expect_adv[..]);
+        assert_eq!(multi.returns(), &expect_ret[..]);
+    }
+
+    #[test]
+    fn lane_boundary_blocks_credit_even_without_done() {
+        // lane A ends truncated (done = false); a huge lane-B reward placed
+        // right after it in the flat layout must not bleed into lane A
+        let mk = |b_reward: f64| {
+            let mut buf = TrajectoryBuffer::with_lanes(4, 1, 2);
+            buf.push_to(0, rewarded(1, 1.0, 0.0, false));
+            buf.push_to(0, rewarded(1, 1.0, 0.0, false));
+            buf.push_to(1, rewarded(1, b_reward, 0.0, false));
+            buf.push_to(1, rewarded(1, b_reward, 0.0, false));
+            buf.finish_lanes(0.99, 0.95, &[0.0, 0.0], false);
+            (buf.advantages()[..2].to_vec(), buf.returns()[..2].to_vec())
+        };
+        assert_eq!(mk(1e6), mk(-1e6), "lane A must be blind to lane B");
+    }
+
+    #[test]
+    fn one_lane_buffer_is_the_serial_buffer() {
+        let mut a = TrajectoryBuffer::new(4, 2);
+        let mut b = TrajectoryBuffer::with_lanes(4, 2, 1);
+        for i in 0..4 {
+            a.push(rewarded(2, -(i as f64), 0.3, i == 2));
+            b.push_to(0, rewarded(2, -(i as f64), 0.3, i == 2));
+        }
+        a.finish(0.95, 0.9, 2.0, true);
+        b.finish_lanes(0.95, 0.9, &[2.0], true);
+        assert_eq!(a.advantages(), b.advantages());
+        assert_eq!(a.returns(), b.returns());
+    }
+
+    #[test]
+    #[should_panic(expected = "one bootstrap per lane")]
+    fn finish_lanes_requires_matching_bootstraps() {
+        let mut buf = TrajectoryBuffer::with_lanes(4, 1, 2);
+        buf.push_to(0, transition(1, 0.0, false));
+        buf.finish_lanes(0.9, 0.9, &[0.0], false);
     }
 
     #[test]

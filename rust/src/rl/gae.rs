@@ -142,6 +142,50 @@ mod tests {
     }
 
     #[test]
+    fn multi_episode_buffer_equals_per_episode_computation() {
+        // a buffer holding several done-delimited episodes must yield
+        // exactly the returns/advantages of computing each episode alone
+        let rewards = [1.0, -0.5, 2.0, 0.3, -1.0, 0.7, 0.2];
+        let values = [0.1f32, -0.2, 0.4, 0.0, 0.3, -0.1, 0.2];
+        let dones = [false, false, true, false, true, false, true];
+        let (gamma, lam) = (0.93, 0.9);
+        let ret = discounted_returns(&rewards, &dones, gamma, 123.0);
+        let adv = gae_advantages(&rewards, &values, &dones, gamma, lam, 123.0);
+        // episodes: [0..3), [3..5), [5..7) — all terminal, bootstrap unused
+        let mut off = 0;
+        for ep in [3usize, 2, 2] {
+            let r = &rewards[off..off + ep];
+            let v = &values[off..off + ep];
+            let mut d = vec![false; ep];
+            d[ep - 1] = true;
+            let ret_ep = discounted_returns(r, &d, gamma, 0.0);
+            let adv_ep = gae_advantages(r, v, &d, gamma, lam, 0.0);
+            assert_eq!(&ret[off..off + ep], &ret_ep[..], "returns, episode at {off}");
+            assert_eq!(&adv[off..off + ep], &adv_ep[..], "advantages, episode at {off}");
+            off += ep;
+        }
+    }
+
+    #[test]
+    fn truncated_tail_bootstraps_and_head_is_unaffected() {
+        // buffer = [full episode][truncated tail]: the tail continues
+        // through the bootstrap, the completed head must be blind to it
+        let rewards = [1.0, 2.0, 0.5, 0.5];
+        let values = [0.0f32, 0.0, 0.1, 0.2];
+        let dones = [false, true, false, false];
+        let (gamma, lam) = (0.9, 0.95);
+        let with_b = gae_advantages(&rewards, &values, &dones, gamma, lam, 10.0);
+        let without_b = gae_advantages(&rewards, &values, &dones, gamma, lam, 0.0);
+        assert_eq!(&with_b[..2], &without_b[..2], "head blind to tail bootstrap");
+        assert!(with_b[3] > without_b[3], "tail must use the bootstrap");
+        let ret = discounted_returns(&rewards, &dones, gamma, 10.0);
+        // tail return: 0.5 + 0.9*(0.5 + 0.9*10) = 9.05
+        assert!((ret[2] - 9.05).abs() < 1e-5, "got {}", ret[2]);
+        // head return unaffected: 1 + 0.9*2 = 2.8
+        assert!((ret[0] - 2.8).abs() < 1e-6);
+    }
+
+    #[test]
     fn normalization_is_standard() {
         let mut adv = vec![1.0f32, 2.0, 3.0, 4.0];
         normalize(&mut adv);

@@ -1,29 +1,36 @@
 //! The MAHPPO trainer — Algorithm 1 of the paper.
 //!
-//! N actor networks (one per UE) and one central critic, all executing as
-//! AOT-compiled XLA artifacts via PJRT; the environment, sampling, GAE and
-//! the minibatch loop live here in Rust. Python is never invoked.
+//! N actor networks (one per UE) and one central critic, executing through
+//! the artifact backends; the environment, sampling, GAE and the minibatch
+//! loop live here in Rust. Python is never invoked. The trainer is a thin
+//! composition of the [`RolloutEngine`] (vectorized experience collection
+//! over `n_envs` lanes — see `rl::rollout`) and the PPO update phase.
 //!
 //! One `train(steps)` call runs:
 //! ```text
 //! loop until `steps` environment frames consumed:
-//!   collect transitions until M is full (sampling from π_old)
-//!   compute returns (Eq. 15) + GAE (Eq. 18)
+//!   collect transitions until M is full (E lanes, sampling from π_old)
+//!   compute returns (Eq. 15) + GAE (Eq. 18) per lane
 //!   for e in 1 ..= K·(|M|/B):
 //!     draw minibatch B
 //!     critic Adam step on Eq. (16)
 //!     per-actor Adam step on Eq. (20)   [PPO-clip + entropy bonus]
 //!   clear M
 //! ```
+//!
+//! With `n_envs = 1` and no scenario distribution this reproduces the
+//! original serial trainer bit-for-bit under the same seed.
 
+use std::fmt;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::buffer::{Minibatch, TrajectoryBuffer, Transition};
+use super::buffer::Minibatch;
+use super::rollout::RolloutEngine;
 use super::sampling;
 use crate::env::mdp::MultiAgentEnv;
-use crate::env::scenario::ScenarioConfig;
+use crate::env::scenario::{ScenarioConfig, ScenarioDistribution};
 use crate::env::{Action, HybridAction};
 use crate::metrics::{Report, Series};
 use crate::profiles::DeviceProfile;
@@ -49,6 +56,18 @@ pub struct TrainConfig {
     /// Normalize advantages per buffer (standard PPO practice).
     pub normalize_adv: bool,
     pub seed: u64,
+    /// Parallel environment lanes E in the rollout engine. 1 = the classic
+    /// serial collection loop (bit-for-bit).
+    pub n_envs: usize,
+    /// Rollout worker threads; 0 = min(n_envs, available cores). On the
+    /// native backend the thread count never changes results, only wall
+    /// time (its kernels are bit-identical across batch splits); on other
+    /// backends pin this for cross-machine reproducibility.
+    pub rollout_threads: usize,
+    /// Domain randomization: when set, every lane draws its episode
+    /// scenarios (λ, distances, p_max; UE count pinned to the training N)
+    /// from this distribution instead of the fixed training scenario.
+    pub scenario_dist: Option<ScenarioDistribution>,
 }
 
 impl Default for TrainConfig {
@@ -62,7 +81,127 @@ impl Default for TrainConfig {
             lr: 1e-4,
             normalize_adv: true,
             seed: 0,
+            n_envs: 1,
+            rollout_threads: 0,
+            scenario_dist: None,
         }
+    }
+}
+
+/// Configuration errors caught up front at [`MahppoTrainer::new`] instead
+/// of silently rounding down or panicking mid-training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainConfigError {
+    /// `minibatch == 0` — the PPO epoch loop would divide by zero.
+    MinibatchZero,
+    /// `minibatch > buffer_size` — `sample_minibatch` would panic after
+    /// the first (wasted) collection.
+    MinibatchExceedsBuffer { minibatch: usize, buffer_size: usize },
+    /// `buffer_size % minibatch != 0` — the epoch count `K·(‖M‖/B)` would
+    /// silently round down and under-train on part of the buffer.
+    MinibatchNotDivisor { minibatch: usize, buffer_size: usize },
+    /// `n_envs == 0` — no rollout lanes to collect from.
+    NoEnvs,
+    /// `buffer_size % n_envs != 0` — lanes collect whole waves, so the
+    /// buffer would silently overshoot ‖M‖ and drift from the configured
+    /// buffer/minibatch accounting.
+    EnvsNotDivisor { n_envs: usize, buffer_size: usize },
+}
+
+impl fmt::Display for TrainConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TrainConfigError::MinibatchZero => write!(f, "minibatch size must be > 0"),
+            TrainConfigError::MinibatchExceedsBuffer { minibatch, buffer_size } => write!(
+                f,
+                "minibatch {minibatch} exceeds buffer size {buffer_size}"
+            ),
+            TrainConfigError::MinibatchNotDivisor { minibatch, buffer_size } => write!(
+                f,
+                "buffer size {buffer_size} is not a multiple of minibatch {minibatch}"
+            ),
+            TrainConfigError::NoEnvs => write!(f, "n_envs must be >= 1"),
+            TrainConfigError::EnvsNotDivisor { n_envs, buffer_size } => write!(
+                f,
+                "buffer size {buffer_size} is not a multiple of n_envs {n_envs}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TrainConfigError {}
+
+impl TrainConfig {
+    /// Check the knobs that would otherwise fail late (or silently) inside
+    /// the training loop.
+    pub fn validate(&self) -> Result<(), TrainConfigError> {
+        if self.minibatch == 0 {
+            return Err(TrainConfigError::MinibatchZero);
+        }
+        if self.minibatch > self.buffer_size {
+            return Err(TrainConfigError::MinibatchExceedsBuffer {
+                minibatch: self.minibatch,
+                buffer_size: self.buffer_size,
+            });
+        }
+        if self.buffer_size % self.minibatch != 0 {
+            return Err(TrainConfigError::MinibatchNotDivisor {
+                minibatch: self.minibatch,
+                buffer_size: self.buffer_size,
+            });
+        }
+        if self.n_envs == 0 {
+            return Err(TrainConfigError::NoEnvs);
+        }
+        if self.buffer_size % self.n_envs != 0 {
+            return Err(TrainConfigError::EnvsNotDivisor {
+                n_envs: self.n_envs,
+                buffer_size: self.buffer_size,
+            });
+        }
+        Ok(())
+    }
+
+    // Seed-stream derivations. Public so reference implementations and
+    // tests can reproduce the trainer's exact streams.
+
+    /// Init stream of actor `i`'s parameters.
+    pub fn actor_seed(&self, i: usize) -> u64 {
+        self.seed.wrapping_add(1000 + i as u64)
+    }
+
+    /// Init stream of the critic's parameters.
+    pub fn critic_seed(&self) -> u64 {
+        self.seed.wrapping_add(7777)
+    }
+
+    /// The trainer RNG: action sampling (1-env engines) + minibatch draws.
+    pub fn sampler_seed(&self) -> u64 {
+        self.seed.wrapping_add(42)
+    }
+
+    /// Env stream of rollout lane `lane`; lane 0 is the serial env seed.
+    pub fn env_seed(&self, lane: usize) -> u64 {
+        self.seed
+            .wrapping_add((lane as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Action-sampling stream of lane `lane` (multi-env engines).
+    pub fn lane_seed(&self, lane: usize) -> u64 {
+        self.sampler_seed()
+            .wrapping_add((lane as u64 + 1).wrapping_mul(0xd1b5_4a32_d192_ed03))
+    }
+
+    /// Scenario-draw stream of lane `lane` (domain randomization).
+    pub fn scenario_seed(&self, lane: usize) -> u64 {
+        (self.seed ^ 0x5cea_0d15_7a9b_3e71)
+            .wrapping_add((lane as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Env stream of evaluation runs — disjoint from every training
+    /// stream, so evaluation never perturbs training.
+    pub fn eval_seed(&self) -> u64 {
+        self.seed ^ 0xe7a1_5eed_c0ff_ee00
     }
 }
 
@@ -102,12 +241,16 @@ impl TrainReport {
     }
 }
 
-/// The MAHPPO agent: N actors + central critic + environment.
+/// The MAHPPO agent: N actors + central critic + the rollout engine.
 pub struct MahppoTrainer {
-    pub env: MultiAgentEnv,
     pub actors: Vec<ActorNet>,
     pub critic: CriticNet,
     pub cfg: TrainConfig,
+    /// The fixed training scenario (and the base the scenario distribution
+    /// randomizes around).
+    pub scenario: ScenarioConfig,
+    pub profile: DeviceProfile,
+    engine: RolloutEngine,
     rng: Rng,
 }
 
@@ -118,98 +261,60 @@ impl MahppoTrainer {
         scenario: ScenarioConfig,
         cfg: TrainConfig,
     ) -> Result<MahppoTrainer> {
+        cfg.validate()?;
         let n = scenario.n_ues;
-        let env = MultiAgentEnv::new(profile.clone(), scenario, cfg.seed)?;
         let actors = (0..n)
-            .map(|i| ActorNet::new(store, n, cfg.seed.wrapping_add(1000 + i as u64)))
+            .map(|i| ActorNet::new(store, n, cfg.actor_seed(i)))
             .collect::<Result<Vec<_>>>()?;
-        let critic = CriticNet::new(store, n, cfg.seed.wrapping_add(7777))?;
+        let critic = CriticNet::new(store, n, cfg.critic_seed())?;
+        let engine = RolloutEngine::new(profile, &scenario, &cfg)?;
         Ok(MahppoTrainer {
-            env,
             actors,
             critic,
-            cfg: cfg.clone(),
-            rng: Rng::new(cfg.seed.wrapping_add(42)),
+            rng: Rng::new(cfg.sampler_seed()),
+            cfg,
+            scenario,
+            profile: profile.clone(),
+            engine,
         })
     }
 
-    /// Sample the joint action from the current policies.
-    fn act(&mut self, state: &[f32]) -> Result<(Action, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>)> {
-        let n = self.env.n_ues();
-        let p_max = self.env.cfg.p_max;
-        let n_choices = self.env.profile.n_choices;
-        let mut action: Action = Vec::with_capacity(n);
-        let (mut ab, mut ac, mut ap, mut lp) = (
-            Vec::with_capacity(n),
-            Vec::with_capacity(n),
-            Vec::with_capacity(n),
-            Vec::with_capacity(n),
-        );
-        for actor in self.actors.iter_mut() {
-            let out = actor.forward(state)?;
-            let s = sampling::sample_hybrid(&out, &mut self.rng);
-            let b = s.b.min(n_choices - 1);
-            action.push(HybridAction::new(b, s.c, s.p_raw, p_max));
-            ab.push(s.b as i32);
-            ac.push(s.c as i32);
-            ap.push(s.p_raw);
-            lp.push(s.log_prob);
-        }
-        Ok((action, ab, ac, ap, lp))
+    /// The rollout lane count (E).
+    pub fn n_envs(&self) -> usize {
+        self.engine.n_lanes()
     }
 
     /// Run Algorithm 1 for (at least) `total_frames` environment frames.
     pub fn train(&mut self, total_frames: usize) -> Result<TrainReport> {
         let t0 = Instant::now();
-        let n = self.env.n_ues();
-        let mut buf = TrajectoryBuffer::new(self.cfg.buffer_size, n);
+        let mut buf = self.engine.make_buffer(self.cfg.buffer_size);
         let mut report = TrainReport::default();
         report.episode_rewards = Series::new("episode_reward");
         report.value_losses = Series::new("value_loss");
         report.entropies = Series::new("entropy");
         report.clip_fracs = Series::new("clip_frac");
 
-        let mut state = self.env.reset();
-        let mut ep_reward = 0.0f64;
+        self.engine.reset()?;
         let mut frames = 0usize;
 
         while frames < total_frames {
-            // ---- collect one buffer of experience ----
-            while !buf.is_full() {
-                let (action, a_b, a_c, a_p, log_prob) = self.act(&state)?;
-                let value = self.critic.value(&state)?;
-                let r = self.env.step(&action);
-                ep_reward += r.reward;
-                frames += 1;
-                buf.push(Transition {
-                    state: std::mem::take(&mut state),
-                    a_b,
-                    a_c,
-                    a_p,
-                    log_prob,
-                    reward: r.reward,
-                    value,
-                    done: r.done,
-                });
-                if r.done {
-                    report
-                        .episode_rewards
-                        .push(report.episodes as f64, ep_reward);
-                    report.episodes += 1;
-                    ep_reward = 0.0;
-                    state = self.env.reset();
-                } else {
-                    state = r.state;
-                }
+            // ---- collect one buffer of experience (E lanes) ----
+            let stats = self
+                .engine
+                .collect(&mut self.actors, &mut self.critic, &mut buf, &mut self.rng)?;
+            frames += stats.frames;
+            for reward in stats.episode_rewards {
+                report.episode_rewards.push(report.episodes as f64, reward);
+                report.episodes += 1;
             }
 
-            // ---- returns + advantages ----
-            let bootstrap = if buf.is_empty() {
-                0.0
-            } else {
-                self.critic.value(&state)? as f64
-            };
-            buf.finish(self.cfg.gamma, self.cfg.lam, bootstrap, self.cfg.normalize_adv);
+            // ---- returns + advantages, per lane ----
+            buf.finish_lanes(
+                self.cfg.gamma,
+                self.cfg.lam,
+                &stats.bootstraps,
+                self.cfg.normalize_adv,
+            );
 
             // ---- PPO epochs: K * (|M| / B) minibatches ----
             let rounds = self.cfg.reuse * (self.cfg.buffer_size / self.cfg.minibatch).max(1);
@@ -261,12 +366,23 @@ impl MahppoTrainer {
         Ok((ent / n as f32, clip / n as f32))
     }
 
-    /// Greedy evaluation over `episodes` episodes in eval mode; returns
-    /// (avg per-task latency, avg per-task energy, avg episode reward).
+    /// Greedy evaluation over `episodes` episodes of the training scenario
+    /// in eval mode (fixed d = 50 m, K tasks); returns (avg per-task
+    /// latency, avg per-task energy, avg episode reward).
     pub fn evaluate(&mut self, episodes: usize) -> Result<EvalStats> {
+        let mut sc = self.scenario.clone();
+        sc.eval_mode = true;
+        self.evaluate_on(sc, episodes)
+    }
+
+    /// Greedy evaluation on an explicit scenario. Runs on a **fresh**
+    /// eval-seeded env with its own RNG, so evaluation never touches the
+    /// training streams: train → eval → train equals train → train.
+    pub fn evaluate_on(&mut self, scenario: ScenarioConfig, episodes: usize) -> Result<EvalStats> {
+        let mut env = MultiAgentEnv::new(self.profile.clone(), scenario, self.cfg.eval_seed())?;
         let mut stats = EvalStats::default();
         for _ in 0..episodes {
-            let mut state = self.env.reset();
+            let mut state = env.reset();
             let mut ep_reward = 0.0;
             loop {
                 let mut action: Action = Vec::with_capacity(self.actors.len());
@@ -274,20 +390,20 @@ impl MahppoTrainer {
                     let out = actor.forward(&state)?;
                     let g = sampling::greedy_hybrid(&out);
                     action.push(HybridAction::new(
-                        g.b.min(self.env.profile.n_choices - 1),
+                        g.b.min(env.profile.n_choices - 1),
                         g.c,
                         g.p_raw,
-                        self.env.cfg.p_max,
+                        env.cfg.p_max,
                     ));
                 }
-                let r = self.env.step(&action);
+                let r = env.step(&action);
                 ep_reward += r.reward;
                 if r.done {
                     break;
                 }
                 state = r.state;
             }
-            let t = self.env.totals();
+            let t = env.totals();
             stats.avg_latency += t.avg_latency();
             stats.avg_energy += t.avg_energy();
             stats.avg_reward += ep_reward;
@@ -308,4 +424,130 @@ pub struct EvalStats {
     pub avg_energy: f64,
     pub avg_reward: f64,
     pub episodes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        assert_eq!(TrainConfig::default().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_zero_minibatch() {
+        let cfg = TrainConfig {
+            minibatch: 0,
+            ..Default::default()
+        };
+        assert_eq!(cfg.validate(), Err(TrainConfigError::MinibatchZero));
+    }
+
+    #[test]
+    fn validate_rejects_oversized_minibatch() {
+        let cfg = TrainConfig {
+            buffer_size: 128,
+            minibatch: 256,
+            ..Default::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(TrainConfigError::MinibatchExceedsBuffer {
+                minibatch: 256,
+                buffer_size: 128
+            })
+        );
+    }
+
+    #[test]
+    fn validate_rejects_non_dividing_minibatch() {
+        let cfg = TrainConfig {
+            buffer_size: 1000,
+            minibatch: 256,
+            ..Default::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(TrainConfigError::MinibatchNotDivisor {
+                minibatch: 256,
+                buffer_size: 1000
+            })
+        );
+    }
+
+    #[test]
+    fn validate_rejects_zero_envs() {
+        let cfg = TrainConfig {
+            n_envs: 0,
+            ..Default::default()
+        };
+        assert_eq!(cfg.validate(), Err(TrainConfigError::NoEnvs));
+    }
+
+    #[test]
+    fn validate_rejects_non_dividing_envs() {
+        let cfg = TrainConfig {
+            buffer_size: 1024,
+            n_envs: 3,
+            ..Default::default()
+        };
+        assert_eq!(
+            cfg.validate(),
+            Err(TrainConfigError::EnvsNotDivisor {
+                n_envs: 3,
+                buffer_size: 1024
+            })
+        );
+        let cfg = TrainConfig {
+            n_envs: 8,
+            ..Default::default()
+        };
+        assert_eq!(cfg.validate(), Ok(()));
+    }
+
+    #[test]
+    fn trainer_new_surfaces_config_errors() {
+        let store = ArtifactStore::native_demo();
+        let cfg = TrainConfig {
+            buffer_size: 100,
+            minibatch: 256,
+            ..Default::default()
+        };
+        let err = MahppoTrainer::new(
+            &store,
+            &DeviceProfile::synthetic(),
+            ScenarioConfig {
+                n_ues: 3,
+                ..Default::default()
+            },
+            cfg,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("exceeds buffer size"), "{err:#}");
+    }
+
+    #[test]
+    fn seed_streams_are_distinct() {
+        let cfg = TrainConfig::default();
+        let seeds = [
+            cfg.actor_seed(0),
+            cfg.actor_seed(1),
+            cfg.critic_seed(),
+            cfg.sampler_seed(),
+            cfg.env_seed(0),
+            cfg.env_seed(1),
+            cfg.lane_seed(0),
+            cfg.lane_seed(1),
+            cfg.scenario_seed(0),
+            cfg.eval_seed(),
+        ];
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "seed {i} collides with {j}");
+            }
+        }
+        // lane 0's env stream IS the serial env stream
+        assert_eq!(cfg.env_seed(0), cfg.seed);
+    }
 }

@@ -3,12 +3,16 @@
 //! * [`sampling`] — hybrid action sampling and log-probabilities matching
 //!   the jax formulas bit-for-formula (categorical over partition/channel,
 //!   Gaussian over power; Eqs. 13/14).
-//! * [`buffer`] — the trajectory buffer **M** of Algorithm 1.
+//! * [`buffer`] — the trajectory buffer **M** of Algorithm 1, laid out in
+//!   per-env lanes.
 //! * [`gae`] — sampled returns (Eq. 15) and generalized advantage
 //!   estimation (Eq. 18).
+//! * [`rollout`] — the vectorized rollout engine: E environment lanes,
+//!   batched actor/critic forwards, a worker-thread pool, per-lane episode
+//!   bookkeeping and optional scenario randomization.
 //! * [`mahppo`] — the trainer: N actor networks + one central critic,
-//!   rollout collection, PPO-clip minibatch updates through the AOT
-//!   artifacts (Algorithm 1).
+//!   composed of the rollout engine plus PPO-clip minibatch updates
+//!   through the AOT artifacts (Algorithm 1).
 //! * [`baselines`] — Local / Random / FixedSplit / EdgeRaw policies and the
 //!   shared [`baselines::Policy`] trait used by evaluation.
 
@@ -16,4 +20,5 @@ pub mod baselines;
 pub mod buffer;
 pub mod gae;
 pub mod mahppo;
+pub mod rollout;
 pub mod sampling;

@@ -1,0 +1,439 @@
+//! The vectorized rollout engine: `E` independent environment lanes
+//! feeding one trajectory buffer.
+//!
+//! Each lane owns a [`MultiAgentEnv`] (its own seed, optionally its own
+//! scenario drawn from a [`ScenarioDistribution`] for domain-randomized
+//! training), an action-sampling RNG and its episode bookkeeping. Lanes
+//! advance in *waves*: the per-lane states are stacked and pushed through
+//! the batch-keyed forward artifacts (`ActorNet::forward_batch` /
+//! `CriticNet::value_batch`) so one network call serves every lane, then
+//! each lane samples its joint action and steps its env.
+//!
+//! Lanes are partitioned into contiguous chunks over a small worker-thread
+//! pool; a chunk never synchronizes with another chunk, so workers run
+//! their lanes' full collection — forwards, sampling, env stepping, resets
+//! — independently. Determinism is preserved by construction:
+//!
+//! * every lane has its own RNG streams, so scheduling cannot reorder
+//!   draws;
+//! * the native dense kernel produces bit-identical rows for any batch
+//!   split, so the chunking (and hence the thread count) never changes a
+//!   single f32 — a backend without that guarantee (e.g. real PJRT) needs
+//!   a pinned `rollout_threads` for cross-machine reproducibility;
+//! * transitions land in per-lane buffer segments and GAE runs per lane
+//!   ([`TrajectoryBuffer::finish_lanes`]), episodes are merged in
+//!   (wave, lane) order.
+//!
+//! With `n_envs = 1` and no scenario distribution, the engine runs inline
+//! on the caller's RNG and reproduces the classic serial MAHPPO collection
+//! loop bit-for-bit (regression-tested in `tests/integration_train.rs`).
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::buffer::{TrajectoryBuffer, Transition};
+use super::mahppo::TrainConfig;
+use super::sampling;
+use crate::env::mdp::MultiAgentEnv;
+use crate::env::scenario::{ScenarioConfig, ScenarioDistribution};
+use crate::env::{Action, HybridAction};
+use crate::profiles::DeviceProfile;
+use crate::runtime::nets::{ActorNet, ActorOutput, CriticNet};
+use crate::util::rng::Rng;
+
+/// One rollout lane: env + RNG streams + in-flight episode state.
+struct Lane {
+    id: usize,
+    env: MultiAgentEnv,
+    /// Action-sampling stream. Unused for a 1-env engine, which samples
+    /// from the trainer's RNG to stay bit-compatible with the serial loop.
+    rng: Rng,
+    /// Stream for drawing per-episode scenarios (only consumed when a
+    /// distribution is configured).
+    scenario_rng: Rng,
+    state: Vec<f32>,
+    ep_reward: f64,
+    /// Transitions collected since the last drain, time-ordered.
+    trans: Vec<Transition>,
+    /// Completed episodes since the last drain: (wave index, reward).
+    episodes: Vec<(usize, f64)>,
+    /// V(s_T) of the lane's post-collection state.
+    bootstrap: f64,
+}
+
+/// What one `collect` call produced, in deterministic order.
+#[derive(Debug, Clone, Default)]
+pub struct RolloutStats {
+    /// Environment frames consumed (waves × lanes).
+    pub frames: usize,
+    /// Rewards of episodes completed during the collection, ordered by
+    /// (wave, lane) — identical to the serial episode order for one lane.
+    pub episode_rewards: Vec<f64>,
+    /// Per-lane critic bootstrap V(s_T) for truncated-tail GAE.
+    pub bootstraps: Vec<f64>,
+}
+
+/// `E` environment lanes stepped in waves over a worker-thread pool.
+pub struct RolloutEngine {
+    lanes: Vec<Lane>,
+    threads: usize,
+    n_ues: usize,
+    dist: Option<ScenarioDistribution>,
+}
+
+impl RolloutEngine {
+    /// Build `cfg.n_envs` lanes around `scenario`. Lane 0 reuses
+    /// `cfg.seed` as its env seed, so a 1-env engine drives exactly the
+    /// env the serial trainer would. Lanes start on the base scenario;
+    /// with a scenario distribution, every [`RolloutEngine::reset`] and
+    /// per-lane episode reset draws a fresh one (UE count pinned to the
+    /// training N).
+    pub fn new(
+        profile: &DeviceProfile,
+        scenario: &ScenarioConfig,
+        cfg: &TrainConfig,
+    ) -> Result<RolloutEngine> {
+        ensure!(cfg.n_envs >= 1, "n_envs must be >= 1");
+        if let Some(d) = &cfg.scenario_dist {
+            d.validate()?;
+        }
+        let n_ues = scenario.n_ues;
+        let lanes = (0..cfg.n_envs)
+            .map(|id| {
+                let env = MultiAgentEnv::new(profile.clone(), scenario.clone(), cfg.env_seed(id))?;
+                let state = env.state();
+                Ok(Lane {
+                    id,
+                    env,
+                    rng: Rng::new(cfg.lane_seed(id)),
+                    scenario_rng: Rng::new(cfg.scenario_seed(id)),
+                    state,
+                    ep_reward: 0.0,
+                    trans: Vec::new(),
+                    episodes: Vec::new(),
+                    bootstrap: 0.0,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let threads = if cfg.rollout_threads == 0 {
+            auto.min(cfg.n_envs)
+        } else {
+            cfg.rollout_threads.min(cfg.n_envs)
+        }
+        .max(1);
+        Ok(RolloutEngine {
+            lanes,
+            threads,
+            n_ues,
+            dist: cfg.scenario_dist.clone(),
+        })
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The worker-thread count collections will use.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The scenario a lane is currently running (lanes re-draw on episode
+    /// resets when a distribution is configured).
+    pub fn lane_scenario(&self, lane: usize) -> &ScenarioConfig {
+        &self.lanes[lane].env.cfg
+    }
+
+    /// A lane-matched trajectory buffer holding at least `target`
+    /// transitions, rounded up to a whole number of waves.
+    pub fn make_buffer(&self, target: usize) -> TrajectoryBuffer {
+        let e = self.lanes.len();
+        let waves = target.max(1).div_ceil(e);
+        TrajectoryBuffer::with_lanes(waves * e, self.n_ues, e)
+    }
+
+    /// Start fresh episodes on every lane (the serial trainer's
+    /// `env.reset()` at the top of `train`), re-drawing scenarios when a
+    /// distribution is configured. Lane RNG streams continue.
+    pub fn reset(&mut self) -> Result<()> {
+        let n_ues = self.n_ues;
+        for lane in &mut self.lanes {
+            lane.state = match &self.dist {
+                Some(d) => {
+                    let sc = d.sample_for(n_ues, &mut lane.scenario_rng);
+                    lane.env.reconfigure(sc)?
+                }
+                None => lane.env.reset(),
+            };
+            lane.ep_reward = 0.0;
+            lane.trans.clear();
+            lane.episodes.clear();
+        }
+        Ok(())
+    }
+
+    /// Fill `buf` to capacity: every lane collects the same number of
+    /// waves, transitions land in per-lane segments, and the per-lane
+    /// critic bootstraps are returned for [`TrajectoryBuffer::finish_lanes`].
+    ///
+    /// `rng` is only consumed by a 1-env engine (the serial sampling
+    /// stream); multi-env engines sample from their per-lane streams so
+    /// results are independent of thread count and scheduling.
+    pub fn collect(
+        &mut self,
+        actors: &mut [ActorNet],
+        critic: &mut CriticNet,
+        buf: &mut TrajectoryBuffer,
+        rng: &mut Rng,
+    ) -> Result<RolloutStats> {
+        let e = self.lanes.len();
+        ensure!(buf.n_lanes() == e, "buffer has {} lanes, engine {e}", buf.n_lanes());
+        let remaining = buf.capacity.saturating_sub(buf.len());
+        let waves = remaining.div_ceil(e).max(1);
+        // Parameters are frozen for the whole collection: warm the cached
+        // input tensors once, then share the nets read-only with workers.
+        for a in actors.iter_mut() {
+            a.warm_cache()?;
+        }
+        critic.warm_cache()?;
+
+        if e == 1 {
+            run_chunk(&mut self.lanes, Some(rng), actors, critic, waves, &self.dist)?;
+        } else {
+            let chunk = e.div_ceil(self.threads);
+            let dist = &self.dist;
+            let actors: &[ActorNet] = actors;
+            let critic: &CriticNet = critic;
+            std::thread::scope(|s| -> Result<()> {
+                let mut handles = Vec::new();
+                for lanes in self.lanes.chunks_mut(chunk) {
+                    handles.push(s.spawn(move || {
+                        run_chunk(lanes, None, actors, critic, waves, dist)
+                    }));
+                }
+                for h in handles {
+                    h.join().map_err(|_| anyhow!("rollout worker panicked"))??;
+                }
+                Ok(())
+            })?;
+        }
+
+        // Deterministic merge: per-lane segments into the buffer, episodes
+        // ordered by (wave, lane).
+        let mut stats = RolloutStats {
+            frames: waves * e,
+            episode_rewards: Vec::new(),
+            bootstraps: Vec::with_capacity(e),
+        };
+        let mut eps: Vec<(usize, usize, f64)> = Vec::new();
+        for lane in &mut self.lanes {
+            buf.extend_lane(lane.id, std::mem::take(&mut lane.trans));
+            eps.extend(lane.episodes.drain(..).map(|(w, r)| (w, lane.id, r)));
+            stats.bootstraps.push(lane.bootstrap);
+        }
+        eps.sort_unstable_by_key(|&(w, id, _)| (w, id));
+        stats.episode_rewards = eps.into_iter().map(|(_, _, r)| r).collect();
+        Ok(stats)
+    }
+}
+
+/// Run one contiguous chunk of lanes for `waves` steps — the whole rollout
+/// inner loop, lockstep across the chunk's lanes. `rng_override` is the
+/// serial trainer's RNG (1-env engines only).
+fn run_chunk(
+    lanes: &mut [Lane],
+    mut rng_override: Option<&mut Rng>,
+    actors: &[ActorNet],
+    critic: &CriticNet,
+    waves: usize,
+    dist: &Option<ScenarioDistribution>,
+) -> Result<()> {
+    let rows = lanes.len();
+    debug_assert!(rng_override.is_none() || rows == 1);
+    let state_dim = lanes[0].state.len();
+    let mut stacked = vec![0.0f32; rows * state_dim];
+    let mut outs: Vec<Vec<ActorOutput>> = Vec::with_capacity(actors.len());
+    for w in 0..waves {
+        for (r, lane) in lanes.iter().enumerate() {
+            stacked[r * state_dim..(r + 1) * state_dim].copy_from_slice(&lane.state);
+        }
+        outs.clear();
+        for actor in actors {
+            outs.push(actor.forward_batch(&stacked)?);
+        }
+        let values = critic.value_batch(&stacked)?;
+
+        for (r, lane) in lanes.iter_mut().enumerate() {
+            let n_choices = lane.env.profile.n_choices;
+            let p_max = lane.env.cfg.p_max;
+            let n = actors.len();
+            let mut action: Action = Vec::with_capacity(n);
+            let (mut a_b, mut a_c, mut a_p, mut log_prob) = (
+                Vec::with_capacity(n),
+                Vec::with_capacity(n),
+                Vec::with_capacity(n),
+                Vec::with_capacity(n),
+            );
+            {
+                let rng: &mut Rng = match rng_override.as_deref_mut() {
+                    Some(shared) => shared,
+                    None => &mut lane.rng,
+                };
+                for out in outs.iter() {
+                    let s = sampling::sample_hybrid(&out[r], rng);
+                    let b = s.b.min(n_choices - 1);
+                    action.push(HybridAction::new(b, s.c, s.p_raw, p_max));
+                    a_b.push(s.b as i32);
+                    a_c.push(s.c as i32);
+                    a_p.push(s.p_raw);
+                    log_prob.push(s.log_prob);
+                }
+            }
+            let step = lane.env.step(&action);
+            lane.ep_reward += step.reward;
+            lane.trans.push(Transition {
+                state: std::mem::take(&mut lane.state),
+                a_b,
+                a_c,
+                a_p,
+                log_prob,
+                reward: step.reward,
+                value: values[r],
+                done: step.done,
+            });
+            if step.done {
+                lane.episodes.push((w, lane.ep_reward));
+                lane.ep_reward = 0.0;
+                lane.state = match dist {
+                    Some(d) => {
+                        let n_ues = lane.env.n_ues();
+                        let sc = d.sample_for(n_ues, &mut lane.scenario_rng);
+                        lane.env.reconfigure(sc)?
+                    }
+                    None => lane.env.reset(),
+                };
+            } else {
+                lane.state = step.state;
+            }
+        }
+    }
+
+    // Per-lane truncated-tail bootstraps: V(s_T) under the frozen critic.
+    for (r, lane) in lanes.iter().enumerate() {
+        stacked[r * state_dim..(r + 1) * state_dim].copy_from_slice(&lane.state);
+    }
+    let values = critic.value_batch(&stacked)?;
+    for (r, lane) in lanes.iter_mut().enumerate() {
+        lane.bootstrap = values[r] as f64;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactStore;
+
+    type Setup = (RolloutEngine, Vec<ActorNet>, CriticNet, TrainConfig);
+
+    fn setup(n_envs: usize, threads: usize) -> Setup {
+        let store = ArtifactStore::native_demo();
+        let scenario = ScenarioConfig {
+            n_ues: 3,
+            lambda_tasks: 8.0,
+            ..Default::default()
+        };
+        let cfg = TrainConfig {
+            buffer_size: 64,
+            minibatch: 32,
+            n_envs,
+            rollout_threads: threads,
+            seed: 9,
+            ..Default::default()
+        };
+        let actors = (0..3)
+            .map(|i| ActorNet::new(&store, 3, cfg.actor_seed(i)).unwrap())
+            .collect();
+        let critic = CriticNet::new(&store, 3, cfg.critic_seed()).unwrap();
+        let engine = RolloutEngine::new(&DeviceProfile::synthetic(), &scenario, &cfg).unwrap();
+        (engine, actors, critic, cfg)
+    }
+
+    fn collect_once(n_envs: usize, threads: usize) -> (Vec<f32>, Vec<f64>, RolloutStats) {
+        let (mut engine, mut actors, mut critic, cfg) = setup(n_envs, threads);
+        let mut buf = engine.make_buffer(cfg.buffer_size);
+        let mut rng = Rng::new(cfg.sampler_seed());
+        engine.reset().unwrap();
+        let stats = engine.collect(&mut actors, &mut critic, &mut buf, &mut rng).unwrap();
+        buf.finish_lanes(0.95, 0.95, &stats.bootstraps, true);
+        let eps = stats.episode_rewards.clone();
+        (buf.advantages().to_vec(), eps, stats)
+    }
+
+    #[test]
+    fn collect_fills_buffer_and_counts_frames() {
+        let (adv, _eps, stats) = collect_once(4, 2);
+        assert_eq!(stats.frames, 64);
+        assert_eq!(stats.bootstraps.len(), 4);
+        assert_eq!(adv.len(), 64);
+        assert!(adv.iter().all(|a| a.is_finite()));
+    }
+
+    #[test]
+    fn rollouts_are_thread_count_invariant() {
+        // the same engine config must produce bit-identical trajectories
+        // whether its lanes run on 1, 2 or 4 workers (chunked batching and
+        // scheduling must not change a single f32)
+        let (a1, e1, s1) = collect_once(4, 1);
+        let (a2, e2, s2) = collect_once(4, 2);
+        let (a4, e4, s4) = collect_once(4, 4);
+        assert_eq!(a1, a2);
+        assert_eq!(a1, a4);
+        assert_eq!(e1, e2);
+        assert_eq!(e1, e4);
+        assert_eq!(s1.bootstraps, s2.bootstraps);
+        assert_eq!(s1.bootstraps, s4.bootstraps);
+    }
+
+    #[test]
+    fn lanes_see_distinct_env_seeds() {
+        let (mut engine, mut actors, mut critic, cfg) = setup(4, 2);
+        let mut buf = engine.make_buffer(cfg.buffer_size);
+        let mut rng = Rng::new(cfg.sampler_seed());
+        engine.reset().unwrap();
+        engine.collect(&mut actors, &mut critic, &mut buf, &mut rng).unwrap();
+        // lanes explore independently: their bootstrap states must differ
+        let states: Vec<Vec<f32>> = (0..4).map(|l| engine.lanes[l].state.clone()).collect();
+        assert!(
+            states.windows(2).any(|w| w[0] != w[1]),
+            "all lanes evolved identically — seeds not independent"
+        );
+    }
+
+    #[test]
+    fn scenario_distribution_randomizes_lanes() {
+        let base = ScenarioConfig {
+            n_ues: 3,
+            lambda_tasks: 10.0,
+            ..Default::default()
+        };
+        let cfg = TrainConfig {
+            n_envs: 4,
+            scenario_dist: Some(ScenarioDistribution::around(base.clone())),
+            seed: 3,
+            ..Default::default()
+        };
+        let mut engine = RolloutEngine::new(&DeviceProfile::synthetic(), &base, &cfg).unwrap();
+        engine.reset().unwrap();
+        let lambdas: Vec<f64> = (0..4).map(|l| engine.lane_scenario(l).lambda_tasks).collect();
+        assert!(
+            lambdas.windows(2).any(|w| w[0] != w[1]),
+            "scenario distribution must vary across lanes: {lambdas:?}"
+        );
+        for l in 0..4 {
+            assert_eq!(engine.lane_scenario(l).n_ues, 3, "training N stays pinned");
+        }
+    }
+}

@@ -26,6 +26,10 @@ const N_RANGE: std::ops::RangeInclusive<usize> = 3..=10;
 const N_FULL: usize = 5;
 const UPDATE_BATCHES_FULL: [usize; 3] = [128, 256, 512];
 const UPDATE_BATCH: usize = 256;
+/// Forward (serving/rollout) batch sizes compiled per network. B = 1 is
+/// the classic serving artifact; the larger rows serve the vectorized
+/// rollout engine (`rl::rollout`), which stacks one state per env lane.
+const FWD_BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
 const N_PARTITION: usize = 6;
 const N_CHANNELS: usize = 2;
 
@@ -83,6 +87,9 @@ pub struct RlMeta {
     pub critic_spec: HashMap<usize, Arc<Vec<SpecEntry>>>,
     pub update_batches: HashMap<usize, Vec<usize>>,
     pub default_update_batch: usize,
+    /// Batch sizes the forward artifacts were compiled for (always
+    /// contains 1). Shared across all N.
+    pub fwd_batches: Vec<usize>,
 }
 
 /// One partition point of a trained backbone.
@@ -233,6 +240,7 @@ impl ArtifactStore {
             critic_spec: HashMap::new(),
             update_batches: HashMap::new(),
             default_update_batch: UPDATE_BATCH,
+            fwd_batches: FWD_BATCHES.to_vec(),
         };
         rl.update_batches
             .insert(N_FULL, UPDATE_BATCHES_FULL.to_vec());
@@ -261,23 +269,25 @@ impl ArtifactStore {
                 );
             };
 
-            add(
-                format!("actor_fwd_n{n}_b1"),
-                vec![IoSpec::f32("params", &[ap]), IoSpec::f32("state", &[1, d])],
-                vec![
-                    IoSpec::f32("probs_b", &[1, N_PARTITION]),
-                    IoSpec::f32("probs_c", &[1, N_CHANNELS]),
-                    IoSpec::f32("mu", &[1, 1]),
-                    IoSpec::f32("log_std", &[1, 1]),
-                ],
-                &aspec,
-            );
-            add(
-                format!("critic_fwd_n{n}_b1"),
-                vec![IoSpec::f32("params", &[cp]), IoSpec::f32("state", &[1, d])],
-                vec![IoSpec::f32("value", &[1, 1])],
-                &cspec,
-            );
+            for &b in &FWD_BATCHES {
+                add(
+                    format!("actor_fwd_n{n}_b{b}"),
+                    vec![IoSpec::f32("params", &[ap]), IoSpec::f32("state", &[b, d])],
+                    vec![
+                        IoSpec::f32("probs_b", &[b, N_PARTITION]),
+                        IoSpec::f32("probs_c", &[b, N_CHANNELS]),
+                        IoSpec::f32("mu", &[b, 1]),
+                        IoSpec::f32("log_std", &[b, 1]),
+                    ],
+                    &aspec,
+                );
+                add(
+                    format!("critic_fwd_n{n}_b{b}"),
+                    vec![IoSpec::f32("params", &[cp]), IoSpec::f32("state", &[b, d])],
+                    vec![IoSpec::f32("value", &[b, 1])],
+                    &cspec,
+                );
+            }
 
             let batches: &[usize] = if n == N_FULL {
                 &UPDATE_BATCHES_FULL
@@ -431,6 +441,24 @@ impl ArtifactStore {
             .cloned()
             .unwrap_or_else(|| vec![rl.default_update_batch]))
     }
+
+    /// The forward (serving/rollout) batch sizes compiled for a given N —
+    /// only batches whose actor AND critic forward artifacts both exist in
+    /// this manifest (a partially-pruned manifest degrades to the per-row
+    /// fallback instead of failing net construction). Old manifests
+    /// without batched forwards yield [1].
+    pub fn fwd_batches(&self, n_ues: usize) -> Result<Vec<usize>> {
+        let rl = self.rl()?;
+        Ok(rl
+            .fwd_batches
+            .iter()
+            .copied()
+            .filter(|b| {
+                self.has(&format!("actor_fwd_n{n_ues}_b{b}"))
+                    && self.has(&format!("critic_fwd_n{n_ues}_b{b}"))
+            })
+            .collect())
+    }
 }
 
 /// Extract N from artifact names shaped `..._n{N}_b{B}` / `..._n{N}_...`.
@@ -491,6 +519,15 @@ fn parse_rl(j: &Json) -> Result<RlMeta> {
             }
         }
     }
+    let fwd_batches = match j.get("fwd_batches") {
+        Some(v) => v
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        // pre-rollout-engine manifests only compiled the B = 1 forwards
+        None => vec![1],
+    };
     let mut update_batches = HashMap::new();
     let mut default_update_batch = 256;
     if let Some(Json::Obj(pairs)) = j.get("update_batches") {
@@ -518,6 +555,7 @@ fn parse_rl(j: &Json) -> Result<RlMeta> {
         critic_spec,
         update_batches,
         default_update_batch,
+        fwd_batches,
     })
 }
 
@@ -572,6 +610,21 @@ mod tests {
         let batches = store.update_batches(5).unwrap();
         assert_eq!(batches, vec![128, 256, 512]);
         assert_eq!(store.update_batches(7).unwrap(), vec![256]);
+    }
+
+    #[test]
+    fn native_demo_manifest_has_batched_forwards() {
+        let store = ArtifactStore::native_demo();
+        assert_eq!(store.fwd_batches(5).unwrap(), vec![1, 2, 4, 8, 16, 32]);
+        for n in [3usize, 5, 10] {
+            for b in [1usize, 4, 32] {
+                let name = format!("critic_fwd_n{n}_b{b}");
+                let meta = store.meta(&name).unwrap();
+                assert_eq!(meta.inputs[1].shape, vec![b, 4 * n]);
+                assert!(store.has(&format!("actor_fwd_n{n}_b{b}")));
+            }
+        }
+        assert!(!store.has("actor_fwd_n5_b3"));
     }
 
     #[test]

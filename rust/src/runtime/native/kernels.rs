@@ -33,26 +33,44 @@ pub fn dense(
     debug_assert_eq!(b.len(), out_dim);
     let mut out = vec![0.0f32; rows * out_dim];
     for r in 0..rows {
-        let xr = &x[r * in_dim..(r + 1) * in_dim];
-        let yr = &mut out[r * out_dim..(r + 1) * out_dim];
-        yr.copy_from_slice(b);
-        for (k, &xv) in xr.iter().enumerate() {
+        out[r * out_dim..(r + 1) * out_dim].copy_from_slice(b);
+    }
+    if rows == 1 {
+        // matrix–vector: stream W once against the single row
+        let yr = &mut out[..out_dim];
+        for (k, &xv) in x.iter().enumerate() {
             let wr = &w[k * out_dim..(k + 1) * out_dim];
             for (y, &wv) in yr.iter_mut().zip(wr) {
                 *y += xv * wv;
             }
         }
-        match act {
-            Act::Linear => {}
-            Act::Tanh => {
-                for y in yr.iter_mut() {
-                    *y = y.tanh();
+    } else {
+        // batched: k-outer so each W row is streamed ONCE for the whole
+        // batch (the out block stays cache-hot) instead of once per row.
+        // Per-element accumulation order is k-ascending either way, so the
+        // two paths are bit-identical — rollout lanes may be chunked onto
+        // worker threads in any batch split without changing a single f32.
+        for k in 0..in_dim {
+            let wr = &w[k * out_dim..(k + 1) * out_dim];
+            for r in 0..rows {
+                let xv = x[r * in_dim + k];
+                let yr = &mut out[r * out_dim..(r + 1) * out_dim];
+                for (y, &wv) in yr.iter_mut().zip(wr) {
+                    *y += xv * wv;
                 }
             }
-            Act::Relu => {
-                for y in yr.iter_mut() {
-                    *y = y.max(0.0);
-                }
+        }
+    }
+    match act {
+        Act::Linear => {}
+        Act::Tanh => {
+            for y in out.iter_mut() {
+                *y = y.tanh();
+            }
+        }
+        Act::Relu => {
+            for y in out.iter_mut() {
+                *y = y.max(0.0);
             }
         }
     }
@@ -290,6 +308,30 @@ mod tests {
         ] {
             let y = dense(X, 2, 3, W, B, 4, act);
             assert_close(&y, golden, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn dense_batched_path_is_bit_identical_to_rowwise() {
+        // the k-outer batched path must agree bitwise with per-row
+        // matrix–vector calls (rollout correctness depends on this)
+        let in_dim = 7;
+        let out_dim = 5;
+        let rows = 4;
+        let x: Vec<f32> = (0..rows * in_dim)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13)
+            .collect();
+        let w: Vec<f32> = (0..in_dim * out_dim)
+            .map(|i| ((i * 11 % 23) as f32 - 11.0) * 0.07)
+            .collect();
+        let b: Vec<f32> = (0..out_dim).map(|i| i as f32 * 0.31 - 0.5).collect();
+        for act in [Act::Linear, Act::Tanh, Act::Relu] {
+            let batched = dense(&x, rows, in_dim, &w, &b, out_dim, act);
+            for r in 0..rows {
+                let row = &x[r * in_dim..(r + 1) * in_dim];
+                let single = dense(row, 1, in_dim, &w, &b, out_dim, act);
+                assert_eq!(&batched[r * out_dim..(r + 1) * out_dim], &single[..], "row {r}");
+            }
         }
     }
 

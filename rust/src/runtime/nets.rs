@@ -3,14 +3,22 @@
 //! Parameters live in Rust as flat `Vec<f32>` (the artifacts unflatten
 //! internally via the manifest layout — see python/compile/common.py). Each
 //! handle owns its Adam state and counts update steps; `forward` runs the
-//! B=1 serving artifact, `update` runs the fwd+bwd+Adam artifact for one
-//! PPO minibatch. Both run on whatever [`crate::runtime::backend::Backend`]
+//! B=1 serving artifact, `forward_batch` / `value_batch` stack one state
+//! per rollout lane through the batch-keyed forward artifacts
+//! (`*_fwd_n{N}_b{B}`), and `update` runs the fwd+bwd+Adam artifact for one
+//! PPO minibatch. All run on whatever [`crate::runtime::backend::Backend`]
 //! the store was opened with.
+//!
+//! The batched forwards take `&self`: between PPO updates the parameters
+//! are frozen, so the rollout engine warms the cached input tensor once
+//! ([`ActorNet::warm_cache`]) and then shares the nets read-only across its
+//! worker threads.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::artifacts::ArtifactStore;
 use super::backend::Executable;
@@ -64,6 +72,9 @@ pub struct ActorNet {
     v: Vec<f32>,
     t: u64,
     fwd: Arc<dyn Executable>,
+    /// Batched forward artifacts by row count (B > 1); rollout lanes stack
+    /// one state per row. Missing row counts fall back to B=1 calls.
+    fwd_batch: HashMap<usize, Arc<dyn Executable>>,
     updates: HashMap<usize, Arc<dyn Executable>>, // by minibatch size
     state_dim: usize,
     /// Backend-input copy of `params`, rebuilt lazily after updates.
@@ -84,6 +95,12 @@ impl ActorNet {
             .get(&n_ues)
             .ok_or_else(|| anyhow!("no actor artifacts for N={n_ues}"))?;
         let fwd = store.load(&format!("actor_fwd_n{n_ues}_b1"))?;
+        let mut fwd_batch = HashMap::new();
+        for b in store.fwd_batches(n_ues)? {
+            if b > 1 {
+                fwd_batch.insert(b, store.load(&format!("actor_fwd_n{n_ues}_b{b}"))?);
+            }
+        }
         let mut updates = HashMap::new();
         for b in store.update_batches(n_ues)? {
             updates.insert(b, store.load(&format!("actor_update_n{n_ues}_b{b}"))?);
@@ -102,9 +119,34 @@ impl ActorNet {
             v: vec![0.0; size],
             t: 0,
             fwd,
+            fwd_batch,
             updates,
             state_dim: 4 * n_ues,
             params_view: None,
+        })
+    }
+
+    /// Build the cached backend-input copy of `params` now (it is
+    /// invalidated by every `update`). Rollout workers call the `&self`
+    /// batched forwards; warming first keeps them from re-marshalling the
+    /// parameter vector on every call.
+    pub fn warm_cache(&mut self) -> Result<()> {
+        if self.params_view.is_none() {
+            self.params_view = Some(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?);
+        }
+        Ok(())
+    }
+
+    fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
+        Ok(match &self.params_view {
+            Some(v) => Cow::Borrowed(v),
+            None => Cow::Owned(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?),
         })
     }
 
@@ -143,6 +185,66 @@ impl ActorNet {
             TensorView::f32(state.to_vec(), vec![1, self.state_dim])?,
         ])?;
         Self::parse_output(outs)
+    }
+
+    /// Policy forward over `rows = states.len() / state_dim` stacked
+    /// states — one output per row. Uses the compiled `b{rows}` artifact
+    /// when one exists, else falls back to per-row B=1 calls, so any lane
+    /// count works on any backend. Per-row results are bit-identical
+    /// across batch sizes (the native dense kernel preserves accumulation
+    /// order; see `runtime::native::kernels`).
+    pub fn forward_batch(&self, states: &[f32]) -> Result<Vec<ActorOutput>> {
+        if states.is_empty() || states.len() % self.state_dim != 0 {
+            bail!(
+                "forward_batch: state length {} not a positive multiple of {}",
+                states.len(),
+                self.state_dim
+            );
+        }
+        let rows = states.len() / self.state_dim;
+        let params = self.params_arg()?;
+        if rows == 1 {
+            let sv = TensorView::f32(states.to_vec(), vec![1, self.state_dim])?;
+            let outs = self.fwd.call_refs(&[&*params, &sv])?;
+            return Ok(vec![Self::parse_output(outs)?]);
+        }
+        if let Some(exe) = self.fwd_batch.get(&rows) {
+            let sv = TensorView::f32(states.to_vec(), vec![rows, self.state_dim])?;
+            let outs = exe.call_refs(&[&*params, &sv])?;
+            return Self::parse_batch(outs, rows);
+        }
+        (0..rows)
+            .map(|r| {
+                let row = &states[r * self.state_dim..(r + 1) * self.state_dim];
+                let sv = TensorView::f32(row.to_vec(), vec![1, self.state_dim])?;
+                let outs = self.fwd.call_refs(&[&*params, &sv])?;
+                Self::parse_output(outs)
+            })
+            .collect()
+    }
+
+    fn parse_batch(mut outs: Vec<TensorView>, rows: usize) -> Result<Vec<ActorOutput>> {
+        let log_std = std::mem::take(&mut outs[3]).into_f32s()?;
+        let mu = std::mem::take(&mut outs[2]).into_f32s()?;
+        let pc = std::mem::take(&mut outs[1]).into_f32s()?;
+        let pb = std::mem::take(&mut outs[0]).into_f32s()?;
+        if mu.len() != rows
+            || log_std.len() != rows
+            || pb.len() % rows != 0
+            || pc.len() % rows != 0
+        {
+            bail!("actor_fwd batch output shape mismatch for {rows} rows");
+        }
+        let p = pb.len() / rows;
+        let c = pc.len() / rows;
+        Ok((0..rows)
+            .map(|r| ActorOutput {
+                probs_b: pb[r * p..(r + 1) * p].to_vec(),
+                probs_c: pc[r * c..(r + 1) * c].to_vec(),
+                mu: mu[r],
+                log_std: log_std[r],
+            })
+            .collect())
     }
 
     /// One PPO-clip + Adam step over a minibatch of size `b`.
@@ -201,6 +303,7 @@ pub struct CriticNet {
     v: Vec<f32>,
     t: u64,
     fwd: Arc<dyn Executable>,
+    fwd_batch: HashMap<usize, Arc<dyn Executable>>,
     updates: HashMap<usize, Arc<dyn Executable>>,
     state_dim: usize,
     params_view: Option<TensorView>,
@@ -214,6 +317,12 @@ impl CriticNet {
             .get(&n_ues)
             .ok_or_else(|| anyhow!("no critic artifacts for N={n_ues}"))?;
         let fwd = store.load(&format!("critic_fwd_n{n_ues}_b1"))?;
+        let mut fwd_batch = HashMap::new();
+        for b in store.fwd_batches(n_ues)? {
+            if b > 1 {
+                fwd_batch.insert(b, store.load(&format!("critic_fwd_n{n_ues}_b{b}"))?);
+            }
+        }
         let mut updates = HashMap::new();
         for b in store.update_batches(n_ues)? {
             updates.insert(b, store.load(&format!("critic_update_n{n_ues}_b{b}"))?);
@@ -232,10 +341,67 @@ impl CriticNet {
             v: vec![0.0; size],
             t: 0,
             fwd,
+            fwd_batch,
             updates,
             state_dim: 4 * n_ues,
             params_view: None,
         })
+    }
+
+    /// See [`ActorNet::warm_cache`].
+    pub fn warm_cache(&mut self) -> Result<()> {
+        if self.params_view.is_none() {
+            self.params_view = Some(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?);
+        }
+        Ok(())
+    }
+
+    fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
+        Ok(match &self.params_view {
+            Some(v) => Cow::Borrowed(v),
+            None => Cow::Owned(TensorView::f32(
+                self.params.clone(),
+                vec![self.params.len()],
+            )?),
+        })
+    }
+
+    /// V(s) over stacked states — one value per row (see
+    /// [`ActorNet::forward_batch`] for artifact selection and fallback).
+    pub fn value_batch(&self, states: &[f32]) -> Result<Vec<f32>> {
+        if states.is_empty() || states.len() % self.state_dim != 0 {
+            bail!(
+                "value_batch: state length {} not a positive multiple of {}",
+                states.len(),
+                self.state_dim
+            );
+        }
+        let rows = states.len() / self.state_dim;
+        let params = self.params_arg()?;
+        let exe = if rows == 1 {
+            &self.fwd
+        } else if let Some(exe) = self.fwd_batch.get(&rows) {
+            exe
+        } else {
+            return (0..rows)
+                .map(|r| {
+                    let row = &states[r * self.state_dim..(r + 1) * self.state_dim];
+                    let sv = TensorView::f32(row.to_vec(), vec![1, self.state_dim])?;
+                    let outs = self.fwd.call_refs(&[&*params, &sv])?;
+                    outs[0].scalar()
+                })
+                .collect();
+        };
+        let sv = TensorView::f32(states.to_vec(), vec![rows, self.state_dim])?;
+        let mut outs = exe.call_refs(&[&*params, &sv])?;
+        let values = std::mem::take(&mut outs[0]).into_f32s()?;
+        if values.len() != rows {
+            bail!("critic_fwd returned {} values for {rows} rows", values.len());
+        }
+        Ok(values)
     }
 
     /// V(s) for a single state.
@@ -297,5 +463,42 @@ mod tests {
         assert!(params[w_t0.offset..w_t0.offset + w_t0.count]
             .iter()
             .any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn batched_forwards_match_single_rows_bitwise() {
+        let store = crate::runtime::artifacts::ArtifactStore::native_demo();
+        let n = 3;
+        let d = 4 * n;
+        let mut actor = ActorNet::new(&store, n, 11).unwrap();
+        let mut critic = CriticNet::new(&store, n, 12).unwrap();
+        actor.warm_cache().unwrap();
+        critic.warm_cache().unwrap();
+        let mut rng = Rng::new(5);
+        // 4 has a compiled artifact, 3 exercises the per-row fallback
+        for rows in [1usize, 3, 4] {
+            let states: Vec<f32> = (0..rows * d).map(|_| rng.f32()).collect();
+            let batch = actor.forward_batch(&states).unwrap();
+            let values = critic.value_batch(&states).unwrap();
+            assert_eq!(batch.len(), rows);
+            assert_eq!(values.len(), rows);
+            for r in 0..rows {
+                let row = &states[r * d..(r + 1) * d];
+                let single = actor.forward(row).unwrap();
+                assert_eq!(batch[r].probs_b, single.probs_b, "rows={rows} r={r}");
+                assert_eq!(batch[r].probs_c, single.probs_c);
+                assert_eq!(batch[r].mu, single.mu);
+                assert_eq!(batch[r].log_std, single.log_std);
+                assert_eq!(values[r], critic.value(row).unwrap());
+            }
+        }
+        // stale-cache path: after an invalidation the &self forwards still
+        // produce the same results via a temporary params tensor
+        actor.params_view = None;
+        let states: Vec<f32> = (0..4 * d).map(|_| rng.f32()).collect();
+        let cold = actor.forward_batch(&states).unwrap();
+        actor.warm_cache().unwrap();
+        let warm = actor.forward_batch(&states).unwrap();
+        assert_eq!(cold[2].probs_b, warm[2].probs_b);
     }
 }
