@@ -38,7 +38,13 @@ MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_wire
 echo "== training-rollout baseline (BENCH_train.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_train
 
+echo "== checkpoint + hot-swap baseline (BENCH_checkpoint.json) =="
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_checkpoint
+
 echo "== remote serving (loopback TCP, end-to-end) =="
 cargo run --release --example remote_serving -- 2 8
+
+echo "== policy lifecycle (train -> save -> resume -> serve -> online swap) =="
+cargo run --release --example policy_lifecycle -- 512 300
 
 echo "CI OK"

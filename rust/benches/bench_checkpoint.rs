@@ -1,0 +1,114 @@
+//! Policy-lifecycle baseline: checkpoint encode/decode throughput,
+//! snapshot size vs N, and hot-swap latency (publish → applied at the
+//! next decision frame). Emits BENCH_checkpoint.json, next to the other
+//! BENCH_*.json baselines in ci.sh.
+//!
+//! Runs fully offline on the native backend with the built-in RL demo
+//! manifest and the synthetic device profile. MACCI_BENCH_MS-bounded.
+
+use macci::coordinator::decision::{ActorDecision, DecisionMaker};
+use macci::env::scenario::ScenarioConfig;
+use macci::profiles::DeviceProfile;
+use macci::rl::checkpoint::{self, PolicySnapshot};
+use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+use macci::runtime::artifacts::ArtifactStore;
+use macci::util::bench::{black_box, Bench};
+use macci::util::json::Json;
+
+fn trainer_for(store: &ArtifactStore, n: usize) -> MahppoTrainer {
+    let scenario = ScenarioConfig {
+        n_ues: n,
+        lambda_tasks: 20.0,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        buffer_size: 256,
+        minibatch: 256,
+        n_envs: 2,
+        seed: 13,
+        ..Default::default()
+    };
+    MahppoTrainer::new(store, &DeviceProfile::synthetic(), scenario, cfg).unwrap()
+}
+
+fn main() {
+    let store = ArtifactStore::native_demo();
+    let mut b = Bench::new("checkpoint");
+    let mut json = Json::obj();
+
+    // -- encode / decode throughput + size, across the N sweep ----------
+    let mut sizes: Vec<(String, usize)> = Vec::new();
+    for &n in &[3usize, 5, 8] {
+        let trainer = trainer_for(&store, n);
+        let cp = trainer.checkpoint();
+        let bytes = checkpoint::encode(&cp).unwrap();
+        println!("N = {n}: checkpoint is {} bytes", bytes.len());
+        sizes.push((format!("n{n}"), bytes.len()));
+        b.run(&format!("encode_n{n}"), || {
+            black_box(checkpoint::encode(black_box(&cp)).unwrap());
+        });
+        b.run(&format!("decode_n{n}"), || {
+            black_box(checkpoint::decode(black_box(&bytes)).unwrap());
+        });
+        json = json.set(&format!("checkpoint/size_n{n}"), bytes.len() as f64);
+    }
+
+    // -- hot-swap latency: publish + apply-at-next-frame vs plain frame --
+    let n = 5;
+    let trainer = trainer_for(&store, n);
+    let snap = trainer.policy_snapshot();
+    let mut dm = DecisionMaker::new(Box::new(ActorDecision::from_actors(
+        trainer.actors,
+        1.0,
+        6,
+    )));
+    let handle = dm.policy_handle();
+    let state = vec![0.3f32; 4 * n];
+    b.run("decision_frame", || {
+        black_box(dm.next_decision(black_box(&state)).unwrap());
+    });
+    b.run("publish_and_swap_frame", || {
+        handle.publish(PolicySnapshot {
+            version: 1,
+            actors: snap.actors.clone(),
+        });
+        black_box(dm.next_decision(black_box(&state)).unwrap());
+    });
+
+    // -- derived figures -> BENCH_checkpoint.json ------------------------
+    let mut frame_ns = 0.0f64;
+    let mut swap_frame_ns = 0.0f64;
+    for r in b.results() {
+        let mut entry = Json::obj()
+            .set("mean_ns", r.mean_ns)
+            .set("p99_ns", r.p99_ns);
+        if let Some(nn) = r
+            .name
+            .strip_prefix("encode_")
+            .or_else(|| r.name.strip_prefix("decode_"))
+        {
+            if let Some(&(_, size)) = sizes.iter().find(|(k, _)| k == nn) {
+                let mb_per_s = size as f64 / (r.mean_ns / 1e9) / 1e6;
+                entry = entry.set("mb_per_s", mb_per_s);
+                println!("{:>28}: {:8.1} MB/s", r.name, mb_per_s);
+            }
+        }
+        if r.name == "decision_frame" {
+            frame_ns = r.mean_ns;
+        }
+        if r.name == "publish_and_swap_frame" {
+            swap_frame_ns = r.mean_ns;
+        }
+        json = json.set(&format!("checkpoint/{}", r.name), entry);
+    }
+    let swap_overhead = (swap_frame_ns - frame_ns).max(0.0);
+    println!(
+        "swap latency: plain frame {:.1} µs, publish+swap frame {:.1} µs -> overhead {:.1} µs",
+        frame_ns / 1e3,
+        swap_frame_ns / 1e3,
+        swap_overhead / 1e3
+    );
+    json = json.set("checkpoint/swap_overhead_ns", swap_overhead);
+    json.write_file("BENCH_checkpoint.json").unwrap();
+    println!("wrote BENCH_checkpoint.json");
+}

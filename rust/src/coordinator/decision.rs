@@ -2,12 +2,21 @@
 //! state-pool vector to a joint [`FrameDecision`] each frame.
 //!
 //! Wraps either trained MAHPPO actor networks (greedy at serving time) or
-//! a baseline policy; the serving loop doesn't care which.
+//! a baseline policy; the serving loop doesn't care which. Policies are
+//! **hot-swappable**: anyone holding a [`PolicyHandle`] (the online
+//! learner, an operator console, a trainer in another thread) can
+//! [`PolicyHandle::publish`] a fresh [`PolicySnapshot`]; the
+//! [`DecisionMaker`] applies the latest pending snapshot atomically
+//! *between* decision frames, so a swap never tears a broadcast and never
+//! costs one (counter-verified in `rust/tests/integration_serving.rs`).
 
-use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{ensure, Result};
 
 use super::protocol::FrameDecision;
 use crate::env::HybridAction;
+use crate::rl::checkpoint::{self, PolicySnapshot, TrainerCheckpoint};
 use crate::rl::sampling;
 use crate::runtime::artifacts::ArtifactStore;
 use crate::runtime::nets::ActorNet;
@@ -15,6 +24,13 @@ use crate::runtime::nets::ActorNet;
 /// A serving-time decision source.
 pub trait DecisionSource: Send {
     fn decide(&mut self, state: &[f32]) -> Result<Vec<HybridAction>>;
+
+    /// Install a published policy snapshot. `Ok(true)` means the source
+    /// now serves the new policy; the default `Ok(false)` means this
+    /// source has nothing swappable (baselines), which is not an error.
+    fn install(&mut self, _snap: &PolicySnapshot) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// Greedy MAHPPO actors (the trained agent, deployed).
@@ -25,7 +41,66 @@ pub struct ActorDecision {
 }
 
 impl ActorDecision {
-    pub fn new(store: &ArtifactStore, n_ues: usize, p_max: f64, seed: u64) -> Result<ActorDecision> {
+    /// Deploy a **trained** policy from a checkpoint file — the default
+    /// construction path, so a deployment always serves learned weights.
+    /// (Use [`ActorDecision::untrained`] to explicitly serve fresh nets.)
+    pub fn new(store: &ArtifactStore, path: impl AsRef<std::path::Path>) -> Result<ActorDecision> {
+        Self::from_checkpoint(store, path)
+    }
+
+    /// Load the actor parameters persisted in a
+    /// [`crate::rl::checkpoint`] file and wrap them for serving. The
+    /// scenario saved alongside supplies `p_max`; the store supplies the
+    /// compiled forward artifacts.
+    pub fn from_checkpoint(
+        store: &ArtifactStore,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<ActorDecision> {
+        let path = path.as_ref();
+        let cp = checkpoint::load(path)
+            .map_err(|e| anyhow::anyhow!("loading policy from {}: {e}", path.display()))?;
+        Self::from_trainer_checkpoint(store, &cp)
+    }
+
+    /// [`ActorDecision::from_checkpoint`], from an already-decoded
+    /// checkpoint (e.g. one held in memory next to a live trainer).
+    pub fn from_trainer_checkpoint(
+        store: &ArtifactStore,
+        cp: &TrainerCheckpoint,
+    ) -> Result<ActorDecision> {
+        let n_ues = cp.scenario.n_ues;
+        ensure!(
+            cp.actors.len() == n_ues,
+            "checkpoint has {} actors for an N={n_ues} scenario",
+            cp.actors.len()
+        );
+        let rl = store.rl()?;
+        let mut actors = (0..n_ues)
+            .map(|i| ActorNet::new(store, n_ues, cp.config.actor_seed(i)))
+            .collect::<Result<Vec<_>>>()?;
+        for (a, st) in actors.iter_mut().zip(&cp.actors) {
+            a.restore(st)?;
+        }
+        Ok(ActorDecision {
+            actors,
+            p_max: cp.scenario.p_max,
+            n_choices: rl.n_partition,
+        })
+    }
+
+    /// Serve **randomly-initialized** actors (seeded fresh from the store
+    /// spec). Explicitly named so a misconfigured deployment can't quietly
+    /// serve noise; a stderr note marks every construction.
+    pub fn untrained(
+        store: &ArtifactStore,
+        n_ues: usize,
+        p_max: f64,
+        seed: u64,
+    ) -> Result<ActorDecision> {
+        eprintln!(
+            "note: serving UNTRAINED (randomly-initialized) actors for N={n_ues} — \
+             decisions are noise until a policy is published or loaded"
+        );
         let rl = store.rl()?;
         let actors = (0..n_ues)
             .map(|i| ActorNet::new(store, n_ues, seed.wrapping_add(i as u64)))
@@ -62,6 +137,30 @@ impl DecisionSource for ActorDecision {
         }
         Ok(out)
     }
+
+    /// Swap in new actor parameter vectors. All-or-nothing: lengths are
+    /// validated for every actor before any net is touched, so a bad
+    /// snapshot can never leave the policy half-swapped.
+    fn install(&mut self, snap: &PolicySnapshot) -> Result<bool> {
+        ensure!(
+            snap.actors.len() == self.actors.len(),
+            "policy snapshot has {} actors, serving {} UEs",
+            snap.actors.len(),
+            self.actors.len()
+        );
+        for (u, (a, p)) in self.actors.iter().zip(&snap.actors).enumerate() {
+            ensure!(
+                p.len() == a.params.len(),
+                "actor {u} snapshot has {} params, net expects {}",
+                p.len(),
+                a.params.len()
+            );
+        }
+        for (a, p) in self.actors.iter_mut().zip(&snap.actors) {
+            a.set_params(p)?;
+        }
+        Ok(true)
+    }
 }
 
 /// A fixed decision (Local / FixedSplit serving baselines).
@@ -75,18 +174,87 @@ impl DecisionSource for StaticDecision {
     }
 }
 
-/// The per-frame decision maker: numbers frames and delegates to a source.
+/// A clonable publisher end of a [`DecisionMaker`]'s swap channel: call
+/// [`PolicyHandle::publish`] from any thread to stage a new policy. The
+/// maker applies the **latest** staged snapshot between decision frames
+/// (intermediate snapshots are superseded, never half-applied).
+#[derive(Clone)]
+pub struct PolicyHandle {
+    tx: Sender<PolicySnapshot>,
+}
+
+impl PolicyHandle {
+    /// Stage `snap` for the next inter-frame swap point. Non-blocking;
+    /// returns `false` when the decision maker is gone.
+    pub fn publish(&self, snap: PolicySnapshot) -> bool {
+        self.tx.send(snap).is_ok()
+    }
+}
+
+/// The per-frame decision maker: numbers frames, applies pending policy
+/// swaps between them, and delegates to a source.
 pub struct DecisionMaker {
     source: Box<dyn DecisionSource>,
     frame: usize,
+    swap_rx: Receiver<PolicySnapshot>,
+    swap_tx: Sender<PolicySnapshot>,
+    swaps_applied: usize,
+    swap_errors: usize,
+    policy_version: Option<u64>,
 }
 
 impl DecisionMaker {
     pub fn new(source: Box<dyn DecisionSource>) -> DecisionMaker {
-        DecisionMaker { source, frame: 0 }
+        let (swap_tx, swap_rx) = channel();
+        DecisionMaker {
+            source,
+            frame: 0,
+            swap_rx,
+            swap_tx,
+            swaps_applied: 0,
+            swap_errors: 0,
+            policy_version: None,
+        }
+    }
+
+    /// Mint a publisher for this maker's swap channel.
+    pub fn policy_handle(&self) -> PolicyHandle {
+        PolicyHandle {
+            tx: self.swap_tx.clone(),
+        }
+    }
+
+    /// Apply the latest staged snapshot, if any. A snapshot the source
+    /// rejects (wrong shape) is logged and dropped — the old policy keeps
+    /// serving; decisions must never stall on a bad publish.
+    fn apply_pending_swap(&mut self) {
+        let mut latest = None;
+        while let Ok(s) = self.swap_rx.try_recv() {
+            latest = Some(s);
+        }
+        let Some(snap) = latest else { return };
+        match self.source.install(&snap) {
+            Ok(true) => {
+                self.swaps_applied += 1;
+                self.policy_version = Some(snap.version);
+            }
+            Ok(false) => {
+                log::warn!(
+                    "policy v{} published to a non-swappable decision source — ignored",
+                    snap.version
+                );
+            }
+            Err(e) => {
+                self.swap_errors += 1;
+                log::error!("rejected policy v{}: {e:#}", snap.version);
+            }
+        }
     }
 
     pub fn next_decision(&mut self, state: &[f32]) -> Result<FrameDecision> {
+        // the inter-frame swap point: after the previous broadcast, before
+        // this frame's actions are computed
+        self.apply_pending_swap();
         let actions = self.source.decide(state)?;
         let d = FrameDecision {
             frame: self.frame,
@@ -98,6 +266,22 @@ impl DecisionMaker {
 
     pub fn frames_issued(&self) -> usize {
         self.frame
+    }
+
+    /// Swaps applied so far (a swap supersedes any older staged snapshots,
+    /// which are not counted).
+    pub fn swaps_applied(&self) -> usize {
+        self.swaps_applied
+    }
+
+    /// Published snapshots rejected by the source (bad shape).
+    pub fn swap_errors(&self) -> usize {
+        self.swap_errors
+    }
+
+    /// Version of the last applied snapshot (None before any swap).
+    pub fn policy_version(&self) -> Option<u64> {
+        self.policy_version
     }
 }
 
@@ -115,5 +299,60 @@ mod tests {
         assert_eq!(d1.frame, 1);
         assert_eq!(d1.actions.len(), 3);
         assert_eq!(dm.frames_issued(), 2);
+    }
+
+    #[test]
+    fn swap_to_static_source_is_ignored_not_fatal() {
+        let a = vec![HybridAction::new(5, 0, 0.0, 1.0); 2];
+        let mut dm = DecisionMaker::new(Box::new(StaticDecision { actions: a.clone() }));
+        let handle = dm.policy_handle();
+        assert!(handle.publish(PolicySnapshot {
+            version: 1,
+            actors: vec![vec![0.0; 4]; 2],
+        }));
+        let d = dm.next_decision(&[0.0; 8]).unwrap();
+        assert_eq!(d.actions, a, "static decisions unchanged");
+        assert_eq!(dm.swaps_applied(), 0);
+        assert_eq!(dm.swap_errors(), 0);
+        assert_eq!(dm.policy_version(), None);
+    }
+
+    #[test]
+    fn latest_staged_snapshot_wins_and_bad_shapes_are_rejected() {
+        let store = ArtifactStore::native_demo();
+        let n = 3;
+        let mut dm = DecisionMaker::new(Box::new(
+            ActorDecision::untrained(&store, n, 1.0, 7).unwrap(),
+        ));
+        let handle = dm.policy_handle();
+        let d0 = dm.next_decision(&[0.25; 12]).unwrap();
+
+        // a second, differently-seeded set of actors as the "new" policy
+        let other = ActorDecision::untrained(&store, n, 1.0, 999).unwrap();
+        let good = PolicySnapshot {
+            version: 2,
+            actors: other.actors.iter().map(|a| a.params.clone()).collect(),
+        };
+        // stage a bad snapshot first, then the good one: only the latest
+        // is applied, so the bad one is superseded without error
+        handle.publish(PolicySnapshot {
+            version: 1,
+            actors: vec![vec![0.0; 3]; n],
+        });
+        handle.publish(good.clone());
+        let d1 = dm.next_decision(&[0.25; 12]).unwrap();
+        assert_eq!(dm.swaps_applied(), 1);
+        assert_eq!(dm.policy_version(), Some(2));
+        assert_ne!(d0.actions, d1.actions, "swap must change served decisions");
+
+        // a lone bad snapshot is rejected and the old policy keeps serving
+        handle.publish(PolicySnapshot {
+            version: 3,
+            actors: vec![vec![0.0; 3]; n],
+        });
+        let d2 = dm.next_decision(&[0.25; 12]).unwrap();
+        assert_eq!(dm.swap_errors(), 1);
+        assert_eq!(dm.policy_version(), Some(2));
+        assert_eq!(d2.actions, d1.actions);
     }
 }

@@ -1,0 +1,413 @@
+//! The online edge learner — the paper's *edge learning* loop running
+//! inside the serving stack.
+//!
+//! A background thread consumes the serving telemetry the
+//! [`super::server`] loop exports (one [`TelemetryFrame`] per decision
+//! broadcast: the assembled state-pool vector plus the issued joint
+//! [`HybridAction`]s), scores each frame with the env-model reward derived
+//! from the device profile (Eq. 12, via a shadow [`MultiAgentEnv`]
+//! replaying the issued actions), accumulates lane-0 trajectories into the
+//! existing [`TrajectoryBuffer`], runs PPO update rounds **off** the
+//! serving thread, and publishes refreshed actor parameters through the
+//! [`PolicyHandle`] swap channel. The serving loop never blocks on any of
+//! this: telemetry rides a **bounded** channel whose `try_send` drops
+//! frames when the learner falls behind (serving never stalls and never
+//! grows memory on telemetry), and swaps apply between decision frames.
+//!
+//! ```text
+//! server loop ──TelemetryFrame──▶ learner thread
+//!      ▲                            │ shadow-env reward (device profile)
+//!      │                            │ TrajectoryBuffer (lane 0)
+//!      │                            │ PPO rounds (actor+critic Adam)
+//!      └──PolicyHandle::publish◀────┘ every `publish_every` rounds
+//! ```
+
+use std::sync::mpsc::Receiver;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::decision::PolicyHandle;
+use crate::env::mdp::MultiAgentEnv;
+use crate::env::scenario::ScenarioConfig;
+use crate::env::{Action, HybridAction};
+use crate::profiles::DeviceProfile;
+use crate::rl::buffer::{TrajectoryBuffer, Transition};
+use crate::rl::checkpoint::{PolicySnapshot, TrainerCheckpoint};
+use crate::rl::sampling;
+use crate::runtime::artifacts::ArtifactStore;
+use crate::runtime::nets::{ActorNet, CriticNet};
+use crate::util::rng::Rng;
+
+/// One decision frame's worth of serving telemetry, exported by the
+/// server loop right after the broadcast.
+#[derive(Debug, Clone)]
+pub struct TelemetryFrame {
+    /// Decision frame number ([`super::protocol::FrameDecision::frame`]).
+    pub frame: usize,
+    /// The assembled state-pool vector the decision was computed from.
+    pub state: Vec<f32>,
+    /// The joint action that was broadcast.
+    pub actions: Vec<HybridAction>,
+}
+
+/// Online-learning knobs. Defaults are sized for a serving loop: small
+/// buffer, one PPO round per fill, publish after every round.
+#[derive(Debug, Clone)]
+pub struct LearnerConfig {
+    /// Frames accumulated before each PPO round (the buffer ‖M‖). Must be
+    /// a multiple of `minibatch`.
+    pub buffer_size: usize,
+    /// PPO minibatch B — must match a compiled update artifact
+    /// (see `ArtifactStore::update_batches`).
+    pub minibatch: usize,
+    /// Sample reuse K per buffer fill.
+    pub reuse: usize,
+    pub gamma: f64,
+    pub lam: f64,
+    pub lr: f32,
+    pub normalize_adv: bool,
+    /// Publish a policy snapshot every this many update rounds.
+    pub publish_every: usize,
+    pub seed: u64,
+}
+
+impl LearnerConfig {
+    /// Defaults against a store: the smallest compiled update batch as
+    /// both minibatch and buffer (one round per fill, fastest feedback).
+    pub fn for_store(store: &ArtifactStore, n_ues: usize) -> Result<LearnerConfig> {
+        let batches = store.update_batches(n_ues)?;
+        let minibatch = batches
+            .iter()
+            .copied()
+            .min()
+            .ok_or_else(|| anyhow!("no update artifacts for N={n_ues}"))?;
+        Ok(LearnerConfig {
+            buffer_size: minibatch,
+            minibatch,
+            reuse: 4,
+            gamma: 0.95,
+            lam: 0.95,
+            lr: 1e-3,
+            normalize_adv: true,
+            publish_every: 1,
+            seed: 0,
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.minibatch >= 1, "minibatch must be >= 1");
+        anyhow::ensure!(
+            self.buffer_size >= self.minibatch && self.buffer_size % self.minibatch == 0,
+            "buffer {} must be a positive multiple of minibatch {}",
+            self.buffer_size,
+            self.minibatch
+        );
+        anyhow::ensure!(self.publish_every >= 1, "publish_every must be >= 1");
+        Ok(())
+    }
+}
+
+/// What the learner did before its telemetry feed closed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LearnerStats {
+    /// Telemetry frames consumed into trajectories.
+    pub frames: usize,
+    /// PPO update rounds completed.
+    pub rounds: usize,
+    /// Policy snapshots published through the swap channel.
+    pub publishes: usize,
+    /// Mean critic loss of the final update round.
+    pub last_value_loss: f64,
+}
+
+/// Join handle over the learner thread.
+pub struct LearnerHandle {
+    handle: Option<JoinHandle<LearnerStats>>,
+}
+
+impl LearnerHandle {
+    /// Wait for the learner to drain its telemetry feed (the feed closes
+    /// when the server loop exits) and collect its stats.
+    pub fn join(mut self) -> LearnerStats {
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+/// The learner state living on the background thread.
+struct Learner {
+    actors: Vec<ActorNet>,
+    critic: CriticNet,
+    cfg: LearnerConfig,
+    buf: TrajectoryBuffer,
+    shadow: MultiAgentEnv,
+    rng: Rng,
+    publisher: PolicyHandle,
+    version: u64,
+    stats: LearnerStats,
+}
+
+/// Spawn the online learner. `init` seeds the nets from a checkpoint (the
+/// policy being served) so learning *continues*; `None` starts from fresh
+/// nets (matching an [`super::decision::ActorDecision::untrained`]
+/// deployment). The thread exits when `telemetry`'s sender side —
+/// held by the server loop — is dropped.
+pub fn spawn(
+    store: &ArtifactStore,
+    profile: &DeviceProfile,
+    scenario: &ScenarioConfig,
+    cfg: LearnerConfig,
+    init: Option<&TrainerCheckpoint>,
+    telemetry: Receiver<TelemetryFrame>,
+    publisher: PolicyHandle,
+) -> Result<LearnerHandle> {
+    cfg.validate()?;
+    let n = scenario.n_ues;
+    anyhow::ensure!(
+        store.update_batches(n)?.contains(&cfg.minibatch),
+        "no update artifact for minibatch {} at N={n}",
+        cfg.minibatch
+    );
+    let mut actors = (0..n)
+        .map(|i| ActorNet::new(store, n, cfg.seed.wrapping_add(5000 + i as u64)))
+        .collect::<Result<Vec<_>>>()?;
+    let mut critic = CriticNet::new(store, n, cfg.seed.wrapping_add(6000))?;
+    if let Some(cp) = init {
+        anyhow::ensure!(
+            cp.actors.len() == n,
+            "init checkpoint has {} actors for an N={n} scenario",
+            cp.actors.len()
+        );
+        for (a, st) in actors.iter_mut().zip(&cp.actors) {
+            a.restore(st)?;
+        }
+        critic.restore(&cp.critic)?;
+    }
+    // the shadow env replays issued actions to score them with the
+    // paper's Eq. 12 reward under the device profile ("env-model reward")
+    let shadow = MultiAgentEnv::new(profile.clone(), scenario.clone(), cfg.seed ^ 0x1ea4_ed9e)?;
+    let buf = TrajectoryBuffer::new(cfg.buffer_size, n);
+    let mut learner = Learner {
+        actors,
+        critic,
+        rng: Rng::new(cfg.seed.wrapping_add(7000)),
+        cfg,
+        buf,
+        shadow,
+        publisher,
+        version: 0,
+        stats: LearnerStats::default(),
+    };
+    let handle = std::thread::Builder::new()
+        .name("edge-learner".into())
+        .spawn(move || {
+            while let Ok(frame) = telemetry.recv() {
+                if let Err(e) = learner.consume(frame) {
+                    log::error!("online learner: {e:#}");
+                }
+            }
+            learner.stats
+        })?;
+    Ok(LearnerHandle {
+        handle: Some(handle),
+    })
+}
+
+impl Learner {
+    /// Fold one telemetry frame into the trajectory buffer; run a PPO
+    /// round (and maybe publish) whenever the buffer fills.
+    fn consume(&mut self, f: TelemetryFrame) -> Result<()> {
+        let n = self.actors.len();
+        if f.actions.len() != n || f.state.len() != 4 * n {
+            anyhow::bail!(
+                "telemetry frame {} has {} actions / {}-dim state for N={n}",
+                f.frame,
+                f.actions.len(),
+                f.state.len()
+            );
+        }
+        // log π_old of the *issued* action under the current nets (the
+        // serving policy and the learner's copy are kept in sync by the
+        // publish channel, modulo in-flight rounds)
+        let (mut a_b, mut a_c, mut a_p, mut log_prob) = (
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+        );
+        for (actor, a) in self.actors.iter_mut().zip(&f.actions) {
+            let out = actor.forward(&f.state)?;
+            let b = a.b.min(out.probs_b.len() - 1);
+            let c = a.c.min(out.probs_c.len() - 1);
+            let lp = sampling::categorical_log_prob(&out.probs_b, b)
+                + sampling::categorical_log_prob(&out.probs_c, c)
+                + sampling::gaussian_log_prob(a.p_raw, out.mu, out.log_std);
+            a_b.push(b as i32);
+            a_c.push(c as i32);
+            a_p.push(a.p_raw);
+            log_prob.push(lp);
+        }
+        let value = self.critic.value(&f.state)?;
+
+        // env-model reward: replay the issued joint action on the shadow
+        // env (clamping decisions into its action space)
+        let replay: Action = f
+            .actions
+            .iter()
+            .map(|a| {
+                HybridAction::new(
+                    a.b.min(self.shadow.profile.n_choices - 1),
+                    a.c.min(self.shadow.cfg.n_channels - 1),
+                    a.p_raw,
+                    self.shadow.cfg.p_max,
+                )
+            })
+            .collect();
+        let step = self.shadow.step(&replay);
+        if step.done {
+            self.shadow.reset();
+        }
+
+        self.buf.push(Transition {
+            state: f.state,
+            a_b,
+            a_c,
+            a_p,
+            log_prob,
+            reward: step.reward,
+            value,
+            done: step.done,
+        });
+        self.stats.frames += 1;
+
+        if self.buf.is_full() {
+            self.update_round()?;
+        }
+        Ok(())
+    }
+
+    /// One buffer's worth of PPO: finish returns/GAE, K·(‖M‖/B) minibatch
+    /// steps, clear — then publish the refreshed policy on schedule.
+    fn update_round(&mut self) -> Result<()> {
+        let bootstrap = self.critic.value(&self.shadow.state())? as f64;
+        self.buf.finish(
+            self.cfg.gamma,
+            self.cfg.lam,
+            bootstrap,
+            self.cfg.normalize_adv,
+        );
+        let rounds = self.cfg.reuse * (self.cfg.buffer_size / self.cfg.minibatch).max(1);
+        let mut vloss = 0.0f64;
+        for _ in 0..rounds {
+            let mb = self.buf.sample_minibatch(self.cfg.minibatch, &mut self.rng);
+            vloss += self.critic.update(self.cfg.lr, &mb.states, &mb.returns)? as f64;
+            for (u, actor) in self.actors.iter_mut().enumerate() {
+                actor.update(
+                    self.cfg.lr,
+                    &mb.states,
+                    &mb.a_b[u],
+                    &mb.a_c[u],
+                    &mb.a_p[u],
+                    &mb.old_logp[u],
+                    &mb.adv,
+                )?;
+            }
+        }
+        self.buf.clear();
+        self.stats.rounds += 1;
+        self.stats.last_value_loss = vloss / rounds as f64;
+
+        if self.stats.rounds % self.cfg.publish_every == 0 {
+            self.version += 1;
+            let snap = PolicySnapshot {
+                version: self.version,
+                actors: self.actors.iter().map(|a| a.params.clone()).collect(),
+            };
+            if self.publisher.publish(snap) {
+                self.stats.publishes += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    use crate::coordinator::decision::{DecisionMaker, StaticDecision};
+
+    fn scenario(n: usize) -> ScenarioConfig {
+        ScenarioConfig {
+            n_ues: n,
+            lambda_tasks: 10.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn learner_trains_and_publishes_from_telemetry() {
+        let store = ArtifactStore::native_demo();
+        let n = 3;
+        let sc = scenario(n);
+        let profile = DeviceProfile::synthetic();
+        let cfg = LearnerConfig {
+            reuse: 1,
+            ..LearnerConfig::for_store(&store, n).unwrap()
+        };
+        let buffer = cfg.buffer_size;
+
+        // a throwaway maker supplies the swap channel end to observe
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
+        }));
+        let handle = dm.policy_handle();
+
+        let (tx, rx) = channel();
+        let learner = spawn(&store, &profile, &sc, cfg, None, rx, handle).unwrap();
+        // feed exactly two buffers of synthetic telemetry
+        let mut rng = Rng::new(5);
+        for frame in 0..2 * buffer {
+            let state: Vec<f32> = (0..4 * n).map(|_| rng.f32()).collect();
+            let actions: Vec<HybridAction> = (0..n)
+                .map(|_| HybridAction::new(rng.below(6), rng.below(2), rng.normal() as f32, 1.0))
+                .collect();
+            tx.send(TelemetryFrame {
+                frame,
+                state,
+                actions,
+            })
+            .unwrap();
+        }
+        drop(tx); // feed closes -> learner drains and exits
+        let stats = learner.join();
+        assert_eq!(stats.frames, 2 * buffer);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.publishes, 2);
+        assert!(stats.last_value_loss.is_finite());
+    }
+
+    #[test]
+    fn bad_config_rejected_up_front() {
+        let store = ArtifactStore::native_demo();
+        let profile = DeviceProfile::synthetic();
+        let sc = scenario(3);
+        let mut cfg = LearnerConfig::for_store(&store, 3).unwrap();
+        cfg.buffer_size = cfg.minibatch + 1; // not a multiple
+        let (_tx, rx) = channel();
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 3],
+        }));
+        assert!(spawn(&store, &profile, &sc, cfg, None, rx, dm.policy_handle()).is_err());
+
+        let mut cfg = LearnerConfig::for_store(&store, 3).unwrap();
+        cfg.minibatch = 7; // no compiled update artifact
+        cfg.buffer_size = 7;
+        let (_tx, rx) = channel();
+        assert!(spawn(&store, &profile, &sc, cfg, None, rx, dm.policy_handle()).is_err());
+    }
+}

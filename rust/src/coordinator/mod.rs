@@ -12,7 +12,13 @@
 //!   DESIGN.md §Wire-Protocol). Transports live in [`crate::transport`].
 //! * [`state_pool`] — "the edge server collects and stores the states of
 //!   all UEs" (Sec. 3.1): assembly of the global state vector.
-//! * [`decision`] — policy wrapper producing per-frame joint actions.
+//! * [`decision`] — policy wrapper producing per-frame joint actions, with
+//!   a hot-swap channel ([`decision::PolicyHandle`]) that installs freshly
+//!   published policies atomically between decision frames.
+//! * [`learner`] — the online edge learner: a background thread that turns
+//!   serving telemetry into PPO updates and publishes refreshed policies
+//!   through the swap channel (the paper's edge-learning loop, inside the
+//!   serving stack).
 //! * [`inference`] — the collaborative-inference pipeline over real AOT
 //!   model segments: front → AE-encode → wire → AE-decode → back.
 //! * [`batcher`] — dynamic batching of edge-side full-model executions for
@@ -26,6 +32,7 @@ pub mod batcher;
 pub mod decision;
 pub mod executor;
 pub mod inference;
+pub mod learner;
 pub mod protocol;
 pub mod server;
 pub mod state_pool;

@@ -21,7 +21,7 @@
 //! the loop structure is identical to an async reactor with a timer.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -30,8 +30,11 @@ use anyhow::Result;
 
 use super::decision::DecisionMaker;
 use super::executor::{Completion, ExecutorConfig, ExecutorStats, OffloadCompute, OffloadExecutor};
-use super::protocol::{Downlink, FrameDecision, Uplink};
+use super::learner::TelemetryFrame;
+use super::protocol::{Downlink, FrameDecision, UeStateReport, Uplink};
 use super::state_pool::StatePool;
+use crate::env::mdp::MultiAgentEnv;
+use crate::env::{Action, HybridAction};
 use crate::transport::channel::ChannelServerTransport;
 use crate::transport::{ServerTransport, TransportError};
 
@@ -45,6 +48,9 @@ pub struct ServerStats {
     pub feature_offloads: usize,
     pub offload_errors: usize,
     pub edge_compute_s: f64,
+    /// Policy hot-swaps applied between decision frames (see
+    /// [`super::decision::PolicyHandle`]).
+    pub policy_swaps: usize,
     /// Executor counters (queue depth / queue wait / batch occupancy);
     /// default-zero when serving ran inline on the server thread.
     pub exec: ExecutorStats,
@@ -85,6 +91,14 @@ pub struct ServerConfig {
     pub drain_limit: usize,
     /// Offload executor knobs (worker count + raw-batching policy).
     pub exec: ExecutorConfig,
+    /// When set, every decision broadcast also exports one
+    /// [`TelemetryFrame`] (assembled state + issued actions) on this
+    /// **bounded** channel (`std::sync::mpsc::sync_channel`) — the feed
+    /// the online [`super::learner`] consumes. The export is `try_send`:
+    /// a full queue (learner slower than the decision rate) drops the
+    /// frame and a vanished consumer is ignored, so serving never stalls
+    /// — and never grows memory — on telemetry.
+    pub telemetry: Option<SyncSender<TelemetryFrame>>,
 }
 
 impl ServerConfig {
@@ -95,6 +109,7 @@ impl ServerConfig {
             max_frames,
             drain_limit: 128,
             exec: ExecutorConfig::default(),
+            telemetry: None,
         }
     }
 }
@@ -343,6 +358,16 @@ fn server_loop(
                     stats.frames += 1;
                     first_decision_done = true;
                     broadcast_decision(transport, &alive, &d);
+                    // export serving telemetry for the online learner —
+                    // non-blocking: a full queue drops the frame, a gone
+                    // consumer is ignored
+                    if let Some(tx) = &cfg.telemetry {
+                        let _ = tx.try_send(TelemetryFrame {
+                            frame: d.frame,
+                            state,
+                            actions: d.actions,
+                        });
+                    }
                 }
                 Err(e) => log::error!("decision failed: {e:#}"),
             }
@@ -367,7 +392,74 @@ fn server_loop(
     for ue_id in 0..cfg.n_ues {
         transport.send_to(ue_id, Downlink::Shutdown);
     }
+    stats.policy_swaps = decisions.swaps_applied();
     stats
+}
+
+/// Drive simulated UEs from the analytic env against a server spawned on
+/// the in-process channel transport: each frame reports every UE's state,
+/// awaits the decision broadcast on every downlink, hands the broadcast
+/// joint action to `on_frame`, then executes it on the env (clamped into
+/// the env's action space; episodes reset on completion). Returns the
+/// per-UE received-decision counts after `frames` frames — equal to the
+/// server's broadcast count exactly when no broadcast was missed. Shared
+/// by `macci serve --policy` and the `policy_lifecycle` example.
+pub fn drive_env_ues(
+    uplink: &Sender<Uplink>,
+    downlinks: &[Receiver<Downlink>],
+    env: &mut MultiAgentEnv,
+    frames: usize,
+    mut on_frame: impl FnMut(usize, &[HybridAction]),
+) -> Result<Vec<usize>> {
+    let n = downlinks.len();
+    let mut received = vec![0usize; n];
+    for frame in 0..frames {
+        for ue in env.ues() {
+            let _ = uplink.send(Uplink::Report(UeStateReport {
+                ue_id: ue.id,
+                tasks_left: ue.tasks_left,
+                compute_left_s: ue.remaining_compute_s(),
+                offload_left_bits: ue.remaining_offload_bits(),
+                distance_m: ue.distance,
+            }));
+        }
+        let mut actions: Action = vec![HybridAction::new(0, 0, 0.0, env.cfg.p_max); n];
+        for (ue, rx) in downlinks.iter().enumerate() {
+            loop {
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Downlink::Decision(d)) => {
+                        anyhow::ensure!(
+                            d.actions.len() == n,
+                            "decision has {} actions for {n} UEs",
+                            d.actions.len()
+                        );
+                        actions[ue] = d.actions[ue];
+                        received[ue] += 1;
+                        break;
+                    }
+                    Ok(Downlink::Shutdown) => anyhow::bail!("server shut down mid-run"),
+                    Ok(_) => continue,
+                    Err(e) => anyhow::bail!("awaiting decision for UE {ue}: {e}"),
+                }
+            }
+        }
+        on_frame(frame, &actions);
+        let clamp: Action = actions
+            .iter()
+            .map(|a| {
+                HybridAction::new(
+                    a.b.min(env.profile.n_choices - 1),
+                    a.c.min(env.cfg.n_channels - 1),
+                    a.p_raw,
+                    env.cfg.p_max,
+                )
+            })
+            .collect();
+        if env.step(&clamp).done {
+            env.reset();
+        }
+    }
+    Ok(received)
 }
 
 /// One decision frame to every UE still in the system.

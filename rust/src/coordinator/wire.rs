@@ -186,6 +186,18 @@ pub fn crc32(data: &[u8]) -> u32 {
     crc32_update(0xFFFF_FFFF, data) ^ 0xFFFF_FFFF
 }
 
+/// IEEE CRC-32 over a logical concatenation of byte slices, one pass and
+/// zero copies. Both this codec and the [`crate::rl::checkpoint`] format
+/// (which reuses the wire header discipline) checksum header-prefix +
+/// body without materializing them contiguously.
+pub fn crc32_parts(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFF;
+    for p in parts {
+        c = crc32_update(c, p);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
 fn crc32_update(mut c: u32, data: &[u8]) -> u32 {
     for &b in data {
         c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);

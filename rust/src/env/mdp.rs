@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use super::channel::{ChannelModel, Transmitter};
 use super::scenario::ScenarioConfig;
-use super::ue::{TaskTotals, Ue};
+use super::ue::{TaskTotals, Ue, UeSnapshot};
 use super::{Action, HybridAction};
 use crate::profiles::DeviceProfile;
 use crate::util::rng::Rng;
@@ -39,6 +39,18 @@ pub struct FrameInfo {
     pub energy: f64,
     /// Wall-clock simulated inside the frame (== T0 unless episode ended).
     pub elapsed: f64,
+}
+
+/// Complete mid-episode state of a [`MultiAgentEnv`]: scenario, RNG
+/// stream position, frame counter and every UE's task machine. Restoring
+/// it with [`MultiAgentEnv::from_snapshot`] resumes the episode (and the
+/// env's random stream) bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvSnapshot {
+    pub cfg: ScenarioConfig,
+    pub rng: [u64; 4],
+    pub frame_idx: u64,
+    pub ues: Vec<UeSnapshot>,
 }
 
 /// The multi-agent environment: N UEs + shared channels + one decision
@@ -102,6 +114,45 @@ impl MultiAgentEnv {
         self.channel = ChannelModel::new(&cfg);
         self.cfg = cfg;
         Ok(self.reset())
+    }
+
+    /// Capture the complete environment state for checkpointing.
+    pub fn snapshot(&self) -> EnvSnapshot {
+        EnvSnapshot {
+            cfg: self.cfg.clone(),
+            rng: self.rng.state(),
+            frame_idx: self.frame_idx as u64,
+            ues: self.ues.iter().map(Ue::snapshot).collect(),
+        }
+    }
+
+    /// Rebuild an environment from an [`EnvSnapshot`]: same scenario, same
+    /// RNG stream position, same in-flight tasks — stepping it produces
+    /// exactly the frames the captured env would have produced. Rejects
+    /// snapshots whose scenario fails validation, whose UE count does not
+    /// match the scenario, or whose RNG state is the (unreachable)
+    /// all-zero fixed point.
+    pub fn from_snapshot(profile: DeviceProfile, snap: EnvSnapshot) -> Result<MultiAgentEnv> {
+        snap.cfg.validate()?;
+        anyhow::ensure!(
+            snap.ues.len() == snap.cfg.n_ues,
+            "snapshot has {} UEs for an N={} scenario",
+            snap.ues.len(),
+            snap.cfg.n_ues
+        );
+        let rng = Rng::from_state(snap.rng)
+            .ok_or_else(|| anyhow::anyhow!("snapshot env rng state is all zeros"))?;
+        let channel = ChannelModel::new(&snap.cfg);
+        let max_bits_norm = profile.max_bits().max(1.0);
+        Ok(MultiAgentEnv {
+            channel,
+            ues: snap.ues.into_iter().map(Ue::from_snapshot).collect(),
+            rng,
+            frame_idx: snap.frame_idx as usize,
+            max_bits_norm,
+            cfg: snap.cfg,
+            profile,
+        })
     }
 
     pub fn n_ues(&self) -> usize {
@@ -381,6 +432,42 @@ mod tests {
         let mut bad = a.cfg.clone();
         bad.noise_w = 0.0;
         assert!(a.reconfigure(bad).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_episode_bitwise() {
+        // run a few frames, snapshot mid-episode, then step the original
+        // and the restored env in lockstep — identical states and rewards
+        let mut env = quick_env(3, 77);
+        let acts = local_actions(&env);
+        for _ in 0..2 {
+            env.step(&acts);
+        }
+        let snap = env.snapshot();
+        let mut twin =
+            MultiAgentEnv::from_snapshot(DeviceProfile::synthetic(), snap.clone()).unwrap();
+        assert_eq!(twin.state(), env.state());
+        for _ in 0..30 {
+            if env.done() {
+                // resets draw from the (shared-position) env RNG streams
+                assert!(twin.done());
+                assert_eq!(env.reset(), twin.reset());
+            }
+            let (a, b) = (env.step(&acts), twin.step(&acts));
+            assert_eq!(a.state, b.state);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(a.done, b.done);
+        }
+        // hostile snapshots are rejected, never panicked on
+        let mut bad = snap.clone();
+        bad.rng = [0; 4];
+        assert!(MultiAgentEnv::from_snapshot(DeviceProfile::synthetic(), bad).is_err());
+        let mut bad = snap.clone();
+        bad.ues.pop();
+        assert!(MultiAgentEnv::from_snapshot(DeviceProfile::synthetic(), bad).is_err());
+        let mut bad = snap;
+        bad.cfg.noise_w = 0.0;
+        assert!(MultiAgentEnv::from_snapshot(DeviceProfile::synthetic(), bad).is_err());
     }
 
     #[test]

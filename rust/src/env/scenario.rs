@@ -7,7 +7,7 @@
 use crate::util::rng::Rng;
 
 /// All environment constants. Defaults are the paper's Sec. 6.3.1 settings.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioConfig {
     /// Number of UEs (N). Paper default 5, sweeps 3..10 (Fig. 10/11).
     pub n_ues: usize,
@@ -108,7 +108,7 @@ impl ScenarioConfig {
 /// draw order (bucket, λ, d_max, p_max) is fixed, so a given RNG stream
 /// always yields the same scenario sequence regardless of which knobs are
 /// actually randomized.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioDistribution {
     /// Every sampled scenario starts from this config.
     pub base: ScenarioConfig,

@@ -34,7 +34,7 @@ pub enum Phase {
 }
 
 /// Aggregate per-episode task accounting.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TaskTotals {
     pub completed: u64,
     pub latency_sum: f64,
@@ -79,6 +79,24 @@ pub struct Ue {
     pub totals: TaskTotals,
 }
 
+/// Complete mid-episode state of one UE, with every private accumulator
+/// exposed — the unit [`crate::rl::checkpoint`] serializes so a restored
+/// environment resumes the episode bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UeSnapshot {
+    pub id: usize,
+    pub distance: f64,
+    pub gain: f64,
+    pub tasks_left: u64,
+    pub phase: Phase,
+    pub decision: HybridAction,
+    pub pending: HybridAction,
+    pub cur_latency: f64,
+    pub cur_energy: f64,
+    pub frame_energy: f64,
+    pub totals: TaskTotals,
+}
+
 impl Ue {
     pub fn new(id: usize, distance: f64, gain: f64, tasks: u64, default_action: HybridAction) -> Ue {
         Ue {
@@ -99,6 +117,40 @@ impl Ue {
     /// All tasks done and nothing in flight?
     pub fn finished(&self) -> bool {
         self.tasks_left == 0 && self.phase == Phase::Idle
+    }
+
+    /// Capture the complete task-machine state (checkpointing).
+    pub fn snapshot(&self) -> UeSnapshot {
+        UeSnapshot {
+            id: self.id,
+            distance: self.distance,
+            gain: self.gain,
+            tasks_left: self.tasks_left,
+            phase: self.phase,
+            decision: self.decision,
+            pending: self.pending,
+            cur_latency: self.cur_latency,
+            cur_energy: self.cur_energy,
+            frame_energy: self.frame_energy,
+            totals: self.totals,
+        }
+    }
+
+    /// Rebuild a UE from a [`Ue::snapshot`] — resumes mid-phase exactly.
+    pub fn from_snapshot(s: UeSnapshot) -> Ue {
+        Ue {
+            id: s.id,
+            distance: s.distance,
+            gain: s.gain,
+            tasks_left: s.tasks_left,
+            phase: s.phase,
+            decision: s.decision,
+            pending: s.pending,
+            cur_latency: s.cur_latency,
+            cur_energy: s.cur_energy,
+            frame_energy: s.frame_energy,
+            totals: s.totals,
+        }
     }
 
     /// Transmit power takes effect immediately (Sec. 4.3); `b`/`c` latch at

@@ -58,10 +58,12 @@ pub mod util;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::compress::{huffman::HuffmanCoder, jalad::JaladCompressor, quant::Quantizer};
+    pub use crate::coordinator::decision::{ActorDecision, DecisionMaker, PolicyHandle};
     pub use crate::coordinator::{inference::CollabPipeline, server::EdgeServer};
     pub use crate::env::{mdp::MultiAgentEnv, scenario::ScenarioConfig, Action, HybridAction};
     pub use crate::profiles::DeviceProfile;
     pub use crate::rl::baselines::{BaselinePolicy, PolicyKind};
+    pub use crate::rl::checkpoint::{PolicySnapshot, TrainerCheckpoint};
     pub use crate::rl::mahppo::{MahppoTrainer, TrainConfig, TrainReport};
     pub use crate::runtime::backend::{Backend, Executable};
     pub use crate::runtime::native::NativeBackend;

@@ -3,19 +3,29 @@
 //! ```text
 //! macci exp <fig4..fig13|headline|all> [--quick] [--frames N] [--seeds K]
 //! macci train  [--n-ues 5] [--frames 6000] [--beta 0.47] [--lr 1e-4] [--model resnet18]
+//!              [--save policy.ckpt] [--resume policy.ckpt]
 //! macci eval   [--n-ues 5] [--policy local|random|edge_raw|split<k>]
 //! macci serve  [--model resnet18] [--n-ues 3] [--tasks 16]
+//! macci serve  --policy policy.ckpt [--frames 200] [--online-learn]
 //! macci info                       # artifact + profile inventory
 //! ```
 
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
+use macci::coordinator::decision::{ActorDecision, DecisionMaker};
 use macci::coordinator::inference::CollabPipeline;
+use macci::coordinator::learner::{self, LearnerConfig};
+use macci::coordinator::protocol::Uplink;
+use macci::coordinator::server::{drive_env_ues, EdgeServer, ServerConfig};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
 use macci::env::mdp::MultiAgentEnv;
 use macci::env::scenario::ScenarioConfig;
 use macci::exp::{self, common::ExpContext};
 use macci::profiles::DeviceProfile;
 use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
+use macci::rl::checkpoint;
 use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
 use macci::runtime::artifacts::ArtifactStore;
 use macci::util::cli::Args;
@@ -28,9 +38,19 @@ USAGE:
             [--quick] [--frames N] [--seeds K] [--lambda L] [--eval-episodes E]
   macci train [--n-ues 5] [--frames 6000] [--beta 0.47] [--lr 1e-4]
               [--model resnet18] [--seed 0] [--out results/train.json]
+              [--save policy.ckpt] [--resume policy.ckpt]
   macci eval  [--n-ues 5] [--policy local|random|edge_raw|split2] [--episodes 3]
   macci serve [--model resnet18] [--n-ues 3] [--tasks 16] [--point 2]
+  macci serve --policy policy.ckpt [--frames 200] [--interval-ms 2]
+              [--online-learn] [--learn-lr 1e-3]
   macci info
+
+`train --save` writes a versioned, CRC-guarded checkpoint of the FULL
+trainer state (resume with `train --resume` is bit-exact); `serve
+--policy` deploys the checkpointed actors at the edge, and
+`--online-learn` keeps refining them from serving telemetry, hot-swapping
+the serving policy between decision frames (see DESIGN.md
+§Policy-Lifecycle).
 
 Artifacts are read from ./artifacts (run `make artifacts` first).";
 
@@ -103,30 +123,49 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let store = open_store()?;
-    let model = args.str_or("model", "resnet18");
-    let profile =
-        DeviceProfile::load_or_synthetic(store.root.join("profiles").join(format!("{model}.json")))?;
-    let scenario = ScenarioConfig {
-        n_ues: args.usize_or("n-ues", 5)?,
-        beta: args.f64_or("beta", 0.47)?,
-        lambda_tasks: args.f64_or("lambda", 200.0)?,
-        ..Default::default()
-    };
-    let cfg = TrainConfig {
-        lr: args.f64_or("lr", 1e-4)? as f32,
-        buffer_size: args.usize_or("buffer", 1024)?,
-        minibatch: args.usize_or("batch", 256)?,
-        reuse: args.usize_or("reuse", 10)?,
-        seed: args.u64_or("seed", 0)?,
-        n_envs: args.usize_or("n-envs", 1)?,
-        ..Default::default()
-    };
     let frames = args.usize_or("frames", 6000)?;
-    println!(
-        "training MAHPPO: model={model} N={} frames={frames} beta={} lr={}",
-        scenario.n_ues, scenario.beta, cfg.lr
-    );
-    let mut trainer = MahppoTrainer::new(&store, &profile, scenario, cfg)?;
+    let mut trainer = if let Some(resume) = args.get("resume") {
+        // a checkpoint restores the FULL config; flags that would change
+        // it are discarded — say so instead of silently ignoring them
+        for flag in [
+            "model", "n-ues", "beta", "lambda", "lr", "buffer", "batch", "reuse", "seed",
+            "n-envs",
+        ] {
+            if args.has(flag) {
+                eprintln!(
+                    "warning: --{flag} is ignored with --resume (the checkpoint's \
+                     config is restored verbatim)"
+                );
+            }
+        }
+        println!("resuming MAHPPO training from {resume} ({frames} more frames)");
+        MahppoTrainer::load(&store, resume)?
+    } else {
+        let model = args.str_or("model", "resnet18");
+        let profile = DeviceProfile::load_or_synthetic(
+            store.root.join("profiles").join(format!("{model}.json")),
+        )?;
+        let scenario = ScenarioConfig {
+            n_ues: args.usize_or("n-ues", 5)?,
+            beta: args.f64_or("beta", 0.47)?,
+            lambda_tasks: args.f64_or("lambda", 200.0)?,
+            ..Default::default()
+        };
+        let cfg = TrainConfig {
+            lr: args.f64_or("lr", 1e-4)? as f32,
+            buffer_size: args.usize_or("buffer", 1024)?,
+            minibatch: args.usize_or("batch", 256)?,
+            reuse: args.usize_or("reuse", 10)?,
+            seed: args.u64_or("seed", 0)?,
+            n_envs: args.usize_or("n-envs", 1)?,
+            ..Default::default()
+        };
+        println!(
+            "training MAHPPO: model={model} N={} frames={frames} beta={} lr={}",
+            scenario.n_ues, scenario.beta, cfg.lr
+        );
+        MahppoTrainer::new(&store, &profile, scenario, cfg)?
+    };
     let report = trainer.train(frames)?;
     println!(
         "done: {} episodes, final reward {:.2}, {:.1}s wall",
@@ -147,6 +186,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "results".into());
     r.write(dir, &slug)?;
     println!("wrote {out}");
+
+    if let Some(save) = args.get("save") {
+        trainer.save(save)?;
+        println!("saved trainer checkpoint to {save} (resume with --resume, serve with serve --policy)");
+    }
 
     // post-training greedy evaluation (fresh eval-seeded env)
     let stats = trainer.evaluate(args.usize_or("episodes", 2)?)?;
@@ -193,6 +237,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("policy") {
+        return cmd_serve_policy(args);
+    }
     // small in-process serving demo; the full threaded pipeline lives in
     // examples/collab_serving.rs
     let store = open_store()?;
@@ -228,6 +275,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total.back_s / n * 1e3,
     );
     println!("split-vs-local top-1 agreement: {agree}/{tasks}");
+    Ok(())
+}
+
+/// Decision-serving from a checkpointed policy: the edge server broadcasts
+/// greedy MAHPPO decisions to simulated UEs (driven by the analytic env),
+/// optionally with the online learner refining — and hot-swapping — the
+/// served policy from live telemetry.
+fn cmd_serve_policy(args: &Args) -> Result<()> {
+    let store = open_store()?;
+    let path = args.str_or("policy", "policy.ckpt");
+    let frames = args.usize_or("frames", 200)?;
+    let interval = Duration::from_millis(args.u64_or("interval-ms", 2)?);
+    let online = args.has("online-learn");
+
+    let cp = checkpoint::load(&path)
+        .map_err(|e| anyhow::anyhow!("loading policy from {path}: {e}"))?;
+    let scenario = cp.scenario.clone();
+    let profile = cp.profile.clone();
+    let n = scenario.n_ues;
+    println!(
+        "serving policy {path}: N={n}, {} net params/actor, critic step {} — {frames} decision frames{}",
+        cp.actors.first().map(|a| a.params.len()).unwrap_or(0),
+        cp.critic.t,
+        if online { ", online learning ON" } else { "" }
+    );
+
+    let decisions = DecisionMaker::new(Box::new(ActorDecision::from_trainer_checkpoint(
+        &store, &cp,
+    )?));
+    let policy_handle = decisions.policy_handle();
+    let pool = StatePool::new(
+        n,
+        StateNorm {
+            lambda_tasks: scenario.lambda_tasks,
+            frame_s: scenario.frame_s,
+            max_bits: profile.max_bits(),
+            d_max: scenario.d_max,
+        },
+    );
+    let mut server_cfg = ServerConfig::new(n, interval, frames);
+    let mut learner_handle = None;
+    if online {
+        // bounded feed: a learner slower than the decision rate drops
+        // frames instead of growing the queue without bound
+        let (tx, rx) = std::sync::mpsc::sync_channel(1024);
+        server_cfg.telemetry = Some(tx);
+        let lcfg = LearnerConfig {
+            lr: args.f64_or("learn-lr", 1e-3)? as f32,
+            ..LearnerConfig::for_store(&store, n)?
+        };
+        learner_handle = Some(learner::spawn(
+            &store,
+            &profile,
+            &scenario,
+            lcfg,
+            Some(&cp),
+            rx,
+            policy_handle,
+        )?);
+    }
+    let (server, downlinks) = EdgeServer::spawn(server_cfg, pool, decisions, None)?;
+
+    // drive the UEs from the analytic env: report state, await the
+    // broadcast, execute the decided joint action
+    let mut env = MultiAgentEnv::new(profile.clone(), scenario.clone(), args.u64_or("seed", 1)?)?;
+    let received = drive_env_ues(&server.uplink, &downlinks, &mut env, frames, |_, _| {})?;
+    for ue in 0..n {
+        let _ = server.uplink.send(Uplink::Goodbye { ue_id: ue });
+    }
+    let stats = server.join();
+    println!(
+        "served {} decision frames ({} per UE, none missed), {} policy swaps applied",
+        stats.frames,
+        received.iter().min().unwrap_or(&0),
+        stats.policy_swaps
+    );
+    if let Some(h) = learner_handle {
+        let ls = h.join();
+        println!(
+            "online learner: {} telemetry frames -> {} PPO rounds, {} policies published (last value loss {:.4})",
+            ls.frames, ls.rounds, ls.publishes, ls.last_value_loss
+        );
+    }
     Ok(())
 }
 

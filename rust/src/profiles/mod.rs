@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 use crate::util::json::Json;
 
 /// Overhead of one partition decision `b` ∈ {0..B+1}.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OverheadEntry {
     pub b: usize,
     /// Local inference latency (s) — `t_n^f` in Eq. (7).
@@ -30,7 +30,7 @@ pub struct OverheadEntry {
 }
 
 /// The JALAD baseline's compression overhead at one cut.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JaladEntry {
     pub b: usize,
     pub t_c: f64,
@@ -40,7 +40,7 @@ pub struct JaladEntry {
 }
 
 /// Per-model device profile (paper-scale analytic tables).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfile {
     pub model: String,
     /// Number of partition choices: b in {0, 1..B, B+1}.

@@ -1,0 +1,993 @@
+//! Versioned, CRC-guarded binary checkpoints for the policy lifecycle
+//! (train → save → deploy → keep learning).
+//!
+//! A checkpoint captures the **complete** trainer state — every net's
+//! parameters *and* Adam moments and step counters, the full
+//! [`TrainConfig`] (scenario distribution included), the training
+//! scenario, the device profile, and the position of **every** RNG stream
+//! (sampler, per-lane action/scenario streams, per-lane env streams, plus
+//! each env's in-flight UE task machines). Restoring one therefore resumes
+//! training *bit-exactly*: `train(a + b)` ≡ `train(a)` → save → load →
+//! `train(b)` under the same seed (regression-tested in
+//! `rust/tests/integration_train.rs`).
+//!
+//! ## File layout
+//!
+//! The format reuses the [`crate::coordinator::wire`] header discipline —
+//! magic, version byte, type tag, u32 LE body length, CRC-32 over header
+//! prefix + body — so a damaged or truncated file is always detected and
+//! decoding is *total*: hostile bytes produce a typed
+//! [`CheckpointError`], never a panic (property-tested in
+//! `rust/tests/proptests.rs`). Full byte tables live in DESIGN.md
+//! §Policy-Lifecycle; this header is the normative summary.
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  magic        0x4D 0x4B ("MK")
+//!      2     1  version      currently 1
+//!      3     1  type tag     0x01 = trainer checkpoint
+//!      4     4  body length  u32 LE, <= MAX_BODY
+//!      8     4  crc32        u32 LE, IEEE CRC-32 over bytes [0..8) + body
+//!     12     n  body         sections in fixed order, all little-endian
+//! ```
+//!
+//! Body sections, in order: train config · scenario · device profile ·
+//! actor nets (count-prefixed) · critic net · sampler RNG · engine
+//! (per-lane env snapshots + RNG streams). Floats are stored as raw LE
+//! bit patterns, so round-trips are bit-exact by construction.
+//!
+//! ## Versioning rules
+//!
+//! * A decoder rejects versions it does not know ([`CheckpointError::Version`]);
+//!   section layouts never change within a version.
+//! * New checkpoint kinds get new type tags; an unknown tag is
+//!   [`CheckpointError::UnknownTag`], not a parse attempt.
+
+use std::path::Path;
+
+use crate::coordinator::wire::crc32_parts;
+use crate::env::mdp::EnvSnapshot;
+use crate::env::scenario::{ScenarioConfig, ScenarioDistribution};
+use crate::env::ue::{Phase, TaskTotals, UeSnapshot};
+use crate::env::HybridAction;
+use crate::profiles::{DeviceProfile, JaladEntry, OverheadEntry};
+use crate::rl::mahppo::TrainConfig;
+use crate::rl::rollout::{EngineSnapshot, LaneSnapshot};
+use crate::runtime::nets::NetState;
+
+/// First two bytes of every checkpoint: "MK".
+pub const MAGIC: [u8; 2] = [0x4D, 0x4B];
+/// Checkpoint-format version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed header size (magic + version + tag + length + crc).
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a checkpoint body — a corrupt length prefix must not be
+/// able to trigger a multi-gigabyte allocation.
+pub const MAX_BODY: usize = 1 << 30; // 1 GiB
+/// Type tag: full trainer state (the only kind in v1).
+pub const TAG_TRAINER: u8 = 0x01;
+
+/// The complete persisted trainer state. See the module docs for what
+/// "complete" means; [`crate::rl::mahppo::MahppoTrainer::checkpoint`]
+/// captures one and [`crate::rl::mahppo::MahppoTrainer::resume`] rebuilds
+/// a live trainer from one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerCheckpoint {
+    pub config: TrainConfig,
+    pub scenario: ScenarioConfig,
+    pub profile: DeviceProfile,
+    /// One [`NetState`] per UE actor, in UE order.
+    pub actors: Vec<NetState>,
+    pub critic: NetState,
+    /// The trainer's sampler/minibatch RNG stream position.
+    pub sampler_rng: [u64; 4],
+    pub engine: EngineSnapshot,
+}
+
+/// The serving-side view of a policy: actor parameter vectors only, plus a
+/// monotonic version for observability. This is what crosses the
+/// hot-swap channel ([`crate::coordinator::decision::PolicyHandle`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySnapshot {
+    /// Publisher-defined monotonic version (the trainer uses the critic's
+    /// Adam step counter).
+    pub version: u64,
+    /// One flat parameter vector per UE actor, in UE order.
+    pub actors: Vec<Vec<f32>>,
+}
+
+impl TrainerCheckpoint {
+    /// Extract the deployable policy (actor params only).
+    pub fn policy_snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            version: self.critic.t,
+            actors: self.actors.iter().map(|a| a.params.clone()).collect(),
+        }
+    }
+}
+
+/// Why a buffer failed to decode as a checkpoint. Decoding is total:
+/// hostile bytes produce one of these, never a panic.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// More bytes are needed to complete the frame.
+    Truncated { have: usize, need: usize },
+    /// The first two bytes are not [`MAGIC`].
+    BadMagic { got: [u8; 2] },
+    /// The file speaks a format version this build does not know.
+    Version { got: u8 },
+    /// Unknown checkpoint kind.
+    UnknownTag { got: u8 },
+    /// The length prefix exceeds [`MAX_BODY`].
+    TooLarge { len: usize },
+    /// CRC mismatch: the file was damaged.
+    Corrupt { expect: u32, got: u32 },
+    /// The body parsed structurally wrong (bad flag, bad utf-8, length
+    /// fields disagreeing with the byte count, trailing bytes, all-zero
+    /// RNG state, invalid scenario).
+    Malformed(String),
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Truncated { have, need } => {
+                write!(f, "truncated checkpoint: have {have} bytes, need {need}")
+            }
+            CheckpointError::BadMagic { got } => {
+                write!(f, "bad checkpoint magic {:#04x} {:#04x}", got[0], got[1])
+            }
+            CheckpointError::Version { got } => write!(
+                f,
+                "unsupported checkpoint version {got} (this build speaks {VERSION})"
+            ),
+            CheckpointError::UnknownTag { got } => {
+                write!(f, "unknown checkpoint kind {got:#04x}")
+            }
+            CheckpointError::TooLarge { len } => {
+                write!(f, "checkpoint body of {len} bytes exceeds the {MAX_BODY}-byte cap")
+            }
+            CheckpointError::Corrupt { expect, got } => {
+                write!(f, "crc mismatch: file says {expect:#010x}, computed {got:#010x}")
+            }
+            CheckpointError::Malformed(why) => write!(f, "malformed checkpoint body: {why}"),
+            CheckpointError::Io(e) => write!(f, "checkpoint i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- encoding
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.0.push(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, v: &str) {
+        self.u32(v.len() as u32);
+        self.0.extend_from_slice(v.as_bytes());
+    }
+    /// Raw f32 payload without a length prefix (caller encodes the count).
+    fn f32s_raw(&mut self, v: &[f32]) {
+        self.0.reserve(v.len() * 4);
+        for &x in v {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn rng(&mut self, s: [u64; 4]) {
+        for w in s {
+            self.u64(w);
+        }
+    }
+}
+
+fn put_scenario(e: &mut Enc, sc: &ScenarioConfig) {
+    e.u64(sc.n_ues as u64);
+    e.u64(sc.n_channels as u64);
+    e.f64(sc.bandwidth_hz);
+    e.f64(sc.noise_w);
+    e.f64(sc.path_loss_exp);
+    e.f64(sc.p_max);
+    e.f64(sc.frame_s);
+    e.f64(sc.beta);
+    e.f64(sc.lambda_tasks);
+    e.f64(sc.d_min);
+    e.f64(sc.d_max);
+    e.bool(sc.eval_mode);
+    e.f64(sc.eval_distance);
+    e.u64(sc.eval_tasks);
+    e.u64(sc.max_frames as u64);
+}
+
+fn put_dist(e: &mut Enc, d: &ScenarioDistribution) {
+    put_scenario(e, &d.base);
+    e.u32(d.ue_buckets.len() as u32);
+    for &n in &d.ue_buckets {
+        e.u64(n as u64);
+    }
+    for (lo, hi) in [d.lambda_range, d.d_max_range, d.p_max_range] {
+        e.f64(lo);
+        e.f64(hi);
+    }
+}
+
+fn put_config(e: &mut Enc, c: &TrainConfig) {
+    e.u64(c.buffer_size as u64);
+    e.u64(c.minibatch as u64);
+    e.u64(c.reuse as u64);
+    e.f64(c.gamma);
+    e.f64(c.lam);
+    e.f32(c.lr);
+    e.bool(c.normalize_adv);
+    e.u64(c.seed);
+    e.u64(c.n_envs as u64);
+    e.u64(c.rollout_threads as u64);
+    match &c.scenario_dist {
+        Some(d) => {
+            e.u8(1);
+            put_dist(e, d);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn put_profile(e: &mut Enc, p: &DeviceProfile) {
+    e.str(&p.model);
+    e.u64(p.n_choices as u64);
+    e.u32(p.entries.len() as u32);
+    for en in &p.entries {
+        e.u64(en.b as u64);
+        e.f64(en.t_f);
+        e.f64(en.e_f);
+        e.f64(en.t_c);
+        e.f64(en.e_c);
+        e.f64(en.bits);
+    }
+    e.u32(p.jalad.len() as u32);
+    for j in &p.jalad {
+        e.u64(j.b as u64);
+        e.f64(j.t_c);
+        e.f64(j.e_c);
+        e.f64(j.bits);
+        e.f64(j.rate);
+    }
+    e.f64(p.full_local_t);
+    e.f64(p.full_local_e);
+    e.f64(p.input_bits);
+}
+
+fn put_net(e: &mut Enc, n: &NetState) {
+    // one count serves params/m/v: the three always share a length
+    e.u32(n.params.len() as u32);
+    e.f32s_raw(&n.params);
+    e.f32s_raw(&n.m);
+    e.f32s_raw(&n.v);
+    e.u64(n.t);
+}
+
+fn put_action(e: &mut Enc, a: &HybridAction) {
+    e.u64(a.b as u64);
+    e.u64(a.c as u64);
+    e.f32(a.p_raw);
+    e.f64(a.p_watts);
+}
+
+fn put_ue(e: &mut Enc, u: &UeSnapshot) {
+    e.u64(u.id as u64);
+    e.f64(u.distance);
+    e.f64(u.gain);
+    e.u64(u.tasks_left);
+    match u.phase {
+        Phase::Idle => e.u8(0),
+        Phase::Compute {
+            remaining_s,
+            total_s,
+            total_energy,
+        } => {
+            e.u8(1);
+            e.f64(remaining_s);
+            e.f64(total_s);
+            e.f64(total_energy);
+        }
+        Phase::Offload { remaining_bits } => {
+            e.u8(2);
+            e.f64(remaining_bits);
+        }
+    }
+    put_action(e, &u.decision);
+    put_action(e, &u.pending);
+    e.f64(u.cur_latency);
+    e.f64(u.cur_energy);
+    e.f64(u.frame_energy);
+    e.u64(u.totals.completed);
+    e.f64(u.totals.latency_sum);
+    e.f64(u.totals.energy_sum);
+}
+
+fn put_env(e: &mut Enc, s: &EnvSnapshot) {
+    put_scenario(e, &s.cfg);
+    e.rng(s.rng);
+    e.u64(s.frame_idx);
+    e.u32(s.ues.len() as u32);
+    for u in &s.ues {
+        put_ue(e, u);
+    }
+}
+
+fn put_engine(e: &mut Enc, s: &EngineSnapshot) {
+    e.bool(s.started);
+    e.u32(s.lanes.len() as u32);
+    for l in &s.lanes {
+        put_env(e, &l.env);
+        e.rng(l.rng);
+        e.rng(l.scenario_rng);
+        e.f64(l.ep_reward);
+    }
+}
+
+/// Encode a checkpoint into a fresh buffer (header + body).
+pub fn encode(cp: &TrainerCheckpoint) -> Result<Vec<u8>, CheckpointError> {
+    let mut e = Enc(Vec::with_capacity(4096));
+    put_config(&mut e, &cp.config);
+    put_scenario(&mut e, &cp.scenario);
+    put_profile(&mut e, &cp.profile);
+    e.u32(cp.actors.len() as u32);
+    for a in &cp.actors {
+        put_net(&mut e, a);
+    }
+    put_net(&mut e, &cp.critic);
+    e.rng(cp.sampler_rng);
+    put_engine(&mut e, &cp.engine);
+    let body = e.0;
+    if body.len() > MAX_BODY {
+        return Err(CheckpointError::TooLarge { len: body.len() });
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(TAG_TRAINER);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    let crc = crc32_parts(&[&out[..8], &body]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- decoding
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.remaining() < n {
+            return Err(CheckpointError::Malformed(format!(
+                "body needs {n} more bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool, CheckpointError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            flag => Err(CheckpointError::Malformed(format!(
+                "bool flag must be 0 or 1, got {flag}"
+            ))),
+        }
+    }
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn usize(&mut self) -> Result<usize, CheckpointError> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| CheckpointError::Malformed(format!("{v} does not fit a usize")))
+    }
+    fn f32(&mut self) -> Result<f32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn str(&mut self) -> Result<String, CheckpointError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| CheckpointError::Malformed("string is not utf-8".into()))
+    }
+    /// `n` raw f32s (the caller already validated `n` against a count
+    /// field; the byte-level bound is enforced here).
+    fn f32s_raw(&mut self, n: usize) -> Result<Vec<f32>, CheckpointError> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            CheckpointError::Malformed(format!("f32 count {n} overflows"))
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn rng(&mut self) -> Result<[u64; 4], CheckpointError> {
+        let s = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+        if s == [0; 4] {
+            return Err(CheckpointError::Malformed(
+                "rng state is all zeros (unreachable from any seed)".into(),
+            ));
+        }
+        Ok(s)
+    }
+    fn finish(self) -> Result<(), CheckpointError> {
+        if self.pos != self.buf.len() {
+            return Err(CheckpointError::Malformed(format!(
+                "{} trailing bytes after the last section",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn get_scenario(d: &mut Dec) -> Result<ScenarioConfig, CheckpointError> {
+    let sc = ScenarioConfig {
+        n_ues: d.usize()?,
+        n_channels: d.usize()?,
+        bandwidth_hz: d.f64()?,
+        noise_w: d.f64()?,
+        path_loss_exp: d.f64()?,
+        p_max: d.f64()?,
+        frame_s: d.f64()?,
+        beta: d.f64()?,
+        lambda_tasks: d.f64()?,
+        d_min: d.f64()?,
+        d_max: d.f64()?,
+        eval_mode: d.bool()?,
+        eval_distance: d.f64()?,
+        eval_tasks: d.u64()?,
+        max_frames: d.usize()?,
+    };
+    sc.validate()
+        .map_err(|e| CheckpointError::Malformed(format!("invalid scenario: {e}")))?;
+    Ok(sc)
+}
+
+fn get_dist(d: &mut Dec) -> Result<ScenarioDistribution, CheckpointError> {
+    let base = get_scenario(d)?;
+    let n = d.u32()? as usize;
+    let mut ue_buckets = Vec::new();
+    for _ in 0..n {
+        ue_buckets.push(d.usize()?);
+    }
+    let mut ranges = [(0.0, 0.0); 3];
+    for r in &mut ranges {
+        *r = (d.f64()?, d.f64()?);
+    }
+    let dist = ScenarioDistribution {
+        base,
+        ue_buckets,
+        lambda_range: ranges[0],
+        d_max_range: ranges[1],
+        p_max_range: ranges[2],
+    };
+    dist.validate()
+        .map_err(|e| CheckpointError::Malformed(format!("invalid scenario distribution: {e}")))?;
+    Ok(dist)
+}
+
+fn get_config(d: &mut Dec) -> Result<TrainConfig, CheckpointError> {
+    let cfg = TrainConfig {
+        buffer_size: d.usize()?,
+        minibatch: d.usize()?,
+        reuse: d.usize()?,
+        gamma: d.f64()?,
+        lam: d.f64()?,
+        lr: d.f32()?,
+        normalize_adv: d.bool()?,
+        seed: d.u64()?,
+        n_envs: d.usize()?,
+        rollout_threads: d.usize()?,
+        scenario_dist: match d.u8()? {
+            0 => None,
+            1 => Some(get_dist(d)?),
+            flag => {
+                return Err(CheckpointError::Malformed(format!(
+                    "scenario_dist flag must be 0 or 1, got {flag}"
+                )))
+            }
+        },
+    };
+    cfg.validate()
+        .map_err(|e| CheckpointError::Malformed(format!("invalid train config: {e}")))?;
+    Ok(cfg)
+}
+
+fn get_profile(d: &mut Dec) -> Result<DeviceProfile, CheckpointError> {
+    let model = d.str()?;
+    let n_choices = d.usize()?;
+    let n = d.u32()? as usize;
+    let mut entries = Vec::new();
+    for _ in 0..n {
+        entries.push(OverheadEntry {
+            b: d.usize()?,
+            t_f: d.f64()?,
+            e_f: d.f64()?,
+            t_c: d.f64()?,
+            e_c: d.f64()?,
+            bits: d.f64()?,
+        });
+    }
+    if n_choices == 0 {
+        // every consumer computes `n_choices - 1` (the full-local choice);
+        // a zero-choice profile must be a decode error, not a later panic
+        return Err(CheckpointError::Malformed(
+            "profile has zero partition choices".into(),
+        ));
+    }
+    if entries.len() != n_choices {
+        return Err(CheckpointError::Malformed(format!(
+            "profile has {} entries but claims {n_choices} partition choices",
+            entries.len()
+        )));
+    }
+    let nj = d.u32()? as usize;
+    let mut jalad = Vec::new();
+    for _ in 0..nj {
+        jalad.push(JaladEntry {
+            b: d.usize()?,
+            t_c: d.f64()?,
+            e_c: d.f64()?,
+            bits: d.f64()?,
+            rate: d.f64()?,
+        });
+    }
+    Ok(DeviceProfile {
+        model,
+        n_choices,
+        entries,
+        jalad,
+        full_local_t: d.f64()?,
+        full_local_e: d.f64()?,
+        input_bits: d.f64()?,
+    })
+}
+
+fn get_net(d: &mut Dec) -> Result<NetState, CheckpointError> {
+    let n = d.u32()? as usize;
+    // params + m + v at 4 bytes each, then the step counter
+    if n > d.remaining() / 12 {
+        return Err(CheckpointError::Malformed(format!(
+            "net claims {n} params in a {}-byte remainder",
+            d.remaining()
+        )));
+    }
+    Ok(NetState {
+        params: d.f32s_raw(n)?,
+        m: d.f32s_raw(n)?,
+        v: d.f32s_raw(n)?,
+        t: d.u64()?,
+    })
+}
+
+fn get_action(d: &mut Dec) -> Result<HybridAction, CheckpointError> {
+    Ok(HybridAction {
+        b: d.usize()?,
+        c: d.usize()?,
+        p_raw: d.f32()?,
+        p_watts: d.f64()?,
+    })
+}
+
+fn get_ue(d: &mut Dec) -> Result<UeSnapshot, CheckpointError> {
+    let id = d.usize()?;
+    let distance = d.f64()?;
+    let gain = d.f64()?;
+    let tasks_left = d.u64()?;
+    let phase = match d.u8()? {
+        0 => Phase::Idle,
+        1 => Phase::Compute {
+            remaining_s: d.f64()?,
+            total_s: d.f64()?,
+            total_energy: d.f64()?,
+        },
+        2 => Phase::Offload {
+            remaining_bits: d.f64()?,
+        },
+        tag => {
+            return Err(CheckpointError::Malformed(format!(
+                "unknown UE phase tag {tag}"
+            )))
+        }
+    };
+    Ok(UeSnapshot {
+        id,
+        distance,
+        gain,
+        tasks_left,
+        phase,
+        decision: get_action(d)?,
+        pending: get_action(d)?,
+        cur_latency: d.f64()?,
+        cur_energy: d.f64()?,
+        frame_energy: d.f64()?,
+        totals: TaskTotals {
+            completed: d.u64()?,
+            latency_sum: d.f64()?,
+            energy_sum: d.f64()?,
+        },
+    })
+}
+
+fn get_env(d: &mut Dec) -> Result<EnvSnapshot, CheckpointError> {
+    let cfg = get_scenario(d)?;
+    let rng = d.rng()?;
+    let frame_idx = d.u64()?;
+    let n = d.u32()? as usize;
+    let mut ues = Vec::new();
+    for _ in 0..n {
+        ues.push(get_ue(d)?);
+    }
+    if ues.len() != cfg.n_ues {
+        return Err(CheckpointError::Malformed(format!(
+            "env snapshot has {} UEs for an N={} scenario",
+            ues.len(),
+            cfg.n_ues
+        )));
+    }
+    Ok(EnvSnapshot {
+        cfg,
+        rng,
+        frame_idx,
+        ues,
+    })
+}
+
+fn get_engine(d: &mut Dec) -> Result<EngineSnapshot, CheckpointError> {
+    let started = d.bool()?;
+    let n = d.u32()? as usize;
+    let mut lanes = Vec::new();
+    for _ in 0..n {
+        lanes.push(LaneSnapshot {
+            env: get_env(d)?,
+            rng: d.rng()?,
+            scenario_rng: d.rng()?,
+            ep_reward: d.f64()?,
+        });
+    }
+    Ok(EngineSnapshot { started, lanes })
+}
+
+/// Decode one checkpoint from a complete buffer. Total: every failure
+/// path is a typed [`CheckpointError`].
+pub fn decode(buf: &[u8]) -> Result<TrainerCheckpoint, CheckpointError> {
+    if buf.len() < HEADER_LEN {
+        return Err(CheckpointError::Truncated {
+            have: buf.len(),
+            need: HEADER_LEN,
+        });
+    }
+    if buf[0..2] != MAGIC {
+        return Err(CheckpointError::BadMagic {
+            got: [buf[0], buf[1]],
+        });
+    }
+    if buf[2] != VERSION {
+        return Err(CheckpointError::Version { got: buf[2] });
+    }
+    let tag = buf[3];
+    if tag != TAG_TRAINER {
+        return Err(CheckpointError::UnknownTag { got: tag });
+    }
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if len > MAX_BODY {
+        return Err(CheckpointError::TooLarge { len });
+    }
+    let need = HEADER_LEN + len;
+    if buf.len() < need {
+        return Err(CheckpointError::Truncated {
+            have: buf.len(),
+            need,
+        });
+    }
+    if buf.len() > need {
+        return Err(CheckpointError::Malformed(format!(
+            "{} bytes after the frame end",
+            buf.len() - need
+        )));
+    }
+    let expect = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    let body = &buf[HEADER_LEN..];
+    let got = crc32_parts(&[&buf[..8], body]);
+    if expect != got {
+        return Err(CheckpointError::Corrupt { expect, got });
+    }
+
+    let mut d = Dec { buf: body, pos: 0 };
+    let config = get_config(&mut d)?;
+    let scenario = get_scenario(&mut d)?;
+    let profile = get_profile(&mut d)?;
+    let na = d.u32()? as usize;
+    let mut actors = Vec::new();
+    for _ in 0..na {
+        actors.push(get_net(&mut d)?);
+    }
+    let critic = get_net(&mut d)?;
+    let sampler_rng = d.rng()?;
+    let engine = get_engine(&mut d)?;
+    d.finish()?;
+
+    // cross-section consistency the per-section parsers cannot see
+    if actors.len() != scenario.n_ues {
+        return Err(CheckpointError::Malformed(format!(
+            "{} actor nets for an N={} scenario",
+            actors.len(),
+            scenario.n_ues
+        )));
+    }
+    if engine.lanes.len() != config.n_envs {
+        return Err(CheckpointError::Malformed(format!(
+            "{} engine lanes for an n_envs={} config",
+            engine.lanes.len(),
+            config.n_envs
+        )));
+    }
+    for st in actors.iter().chain(std::iter::once(&critic)) {
+        st.validate()
+            .map_err(|e| CheckpointError::Malformed(format!("{e:#}")))?;
+    }
+    Ok(TrainerCheckpoint {
+        config,
+        scenario,
+        profile,
+        actors,
+        critic,
+        sampler_rng,
+        engine,
+    })
+}
+
+/// Write a checkpoint to disk (atomically: temp file + rename, so a crash
+/// mid-save never leaves a torn checkpoint at `path`).
+pub fn save(cp: &TrainerCheckpoint, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
+    let path = path.as_ref();
+    let bytes = encode(cp)?;
+    let tmp = path.with_extension("ckpt.tmp");
+    std::fs::write(&tmp, &bytes).map_err(CheckpointError::Io)?;
+    std::fs::rename(&tmp, path).map_err(CheckpointError::Io)
+}
+
+/// Read and decode a checkpoint from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<TrainerCheckpoint, CheckpointError> {
+    let bytes = std::fs::read(path).map_err(CheckpointError::Io)?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small hand-built checkpoint (no artifact store needed).
+    pub(crate) fn sample_checkpoint() -> TrainerCheckpoint {
+        let scenario = ScenarioConfig {
+            n_ues: 2,
+            lambda_tasks: 8.0,
+            ..Default::default()
+        };
+        let config = TrainConfig {
+            buffer_size: 8,
+            minibatch: 4,
+            n_envs: 2,
+            seed: 9,
+            scenario_dist: Some(ScenarioDistribution::around(scenario.clone())),
+            ..Default::default()
+        };
+        let net = |k: f32, t: u64| NetState {
+            params: vec![k, -k, 0.25 * k, f32::MIN_POSITIVE],
+            m: vec![0.0, 1e-9, -2.0, 3.0],
+            v: vec![0.5; 4],
+            t,
+        };
+        let ue = |id: usize, phase: Phase| UeSnapshot {
+            id,
+            distance: 40.0 + id as f64,
+            gain: 1e-5,
+            tasks_left: 3,
+            phase,
+            decision: HybridAction::new(2, 1, 0.3, 1.0),
+            pending: HybridAction::new(0, 0, -0.7, 1.0),
+            cur_latency: 0.01,
+            cur_energy: 0.002,
+            frame_energy: 0.001,
+            totals: TaskTotals {
+                completed: 5,
+                latency_sum: 0.4,
+                energy_sum: 0.9,
+            },
+        };
+        let lane = |seed: u64| LaneSnapshot {
+            env: EnvSnapshot {
+                cfg: scenario.clone(),
+                rng: crate::util::rng::Rng::new(seed).state(),
+                frame_idx: 17,
+                ues: vec![
+                    ue(
+                        0,
+                        Phase::Compute {
+                            remaining_s: 0.01,
+                            total_s: 0.05,
+                            total_energy: 0.1,
+                        },
+                    ),
+                    ue(1, Phase::Offload { remaining_bits: 900.0 }),
+                ],
+            },
+            rng: crate::util::rng::Rng::new(seed ^ 1).state(),
+            scenario_rng: crate::util::rng::Rng::new(seed ^ 2).state(),
+            ep_reward: -3.25,
+        };
+        TrainerCheckpoint {
+            config,
+            scenario,
+            profile: crate::profiles::DeviceProfile::synthetic(),
+            actors: vec![net(1.5, 7), net(-0.25, 7)],
+            critic: net(9.0, 7),
+            sampler_rng: crate::util::rng::Rng::new(3).state(),
+            engine: EngineSnapshot {
+                started: true,
+                lanes: vec![lane(10), lane(11)],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let cp = sample_checkpoint();
+        let bytes = encode(&cp).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, cp);
+        // and re-encoding is byte-identical (canonical encoding)
+        assert_eq!(encode(&back).unwrap(), bytes);
+    }
+
+    #[test]
+    fn save_load_roundtrips_through_disk() {
+        let cp = sample_checkpoint();
+        let dir = std::env::temp_dir().join(format!("macci_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trainer.ckpt");
+        save(&cp, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), cp);
+        assert!(
+            !path.with_extension("ckpt.tmp").exists(),
+            "temp file renamed away"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn header_errors_are_typed() {
+        let cp = sample_checkpoint();
+        let good = encode(&cp).unwrap();
+
+        assert!(matches!(
+            decode(&good[..5]),
+            Err(CheckpointError::Truncated { .. })
+        ));
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad), Err(CheckpointError::BadMagic { .. })));
+
+        let mut bad = good.clone();
+        bad[2] = 99;
+        assert!(matches!(
+            decode(&bad),
+            Err(CheckpointError::Version { got: 99 })
+        ));
+
+        let mut bad = good.clone();
+        bad[3] = 0x7F;
+        assert!(matches!(
+            decode(&bad),
+            Err(CheckpointError::UnknownTag { got: 0x7F })
+        ));
+
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&(MAX_BODY as u32 + 1).to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CheckpointError::TooLarge { .. })));
+
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x10;
+        assert!(matches!(decode(&bad), Err(CheckpointError::Corrupt { .. })));
+
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(matches!(decode(&bad), Err(CheckpointError::Malformed(_))));
+
+        assert!(decode(&good).is_ok(), "the pristine buffer still decodes");
+    }
+
+    #[test]
+    fn semantic_validation_runs_after_crc() {
+        // flip a semantic field (engine lane count) and re-seal the CRC:
+        // the decoder must still reject it, with a Malformed error
+        let mut cp = sample_checkpoint();
+        cp.engine.lanes.pop();
+        let err = match encode(&cp) {
+            // encode is structural only; decode must catch it
+            Ok(bytes) => decode(&bytes).unwrap_err(),
+            Err(e) => e,
+        };
+        assert!(
+            matches!(err, CheckpointError::Malformed(_)),
+            "got {err:?}"
+        );
+
+        let mut cp = sample_checkpoint();
+        cp.actors[0].m.pop();
+        let bytes = encode(&cp).unwrap();
+        // m shares params' count on the wire, so the tail mis-parses into
+        // some typed error — never a panic, never an Ok
+        assert!(decode(&bytes).is_err());
+
+        // a zero-partition-choice profile would make every consumer's
+        // `n_choices - 1` underflow — decode must reject it up front
+        let mut cp = sample_checkpoint();
+        cp.profile.n_choices = 0;
+        cp.profile.entries.clear();
+        let bytes = encode(&cp).unwrap();
+        let err = decode(&bytes).unwrap_err();
+        assert!(
+            matches!(err, CheckpointError::Malformed(_)),
+            "zero-choice profile must be Malformed, got {err:?}"
+        );
+    }
+}

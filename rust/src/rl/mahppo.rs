@@ -27,6 +27,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::buffer::Minibatch;
+use super::checkpoint::{self, PolicySnapshot, TrainerCheckpoint};
 use super::rollout::RolloutEngine;
 use super::sampling;
 use crate::env::mdp::MultiAgentEnv;
@@ -39,7 +40,7 @@ use crate::runtime::nets::{ActorNet, CriticNet};
 use crate::util::rng::Rng;
 
 /// Training hyperparameters (paper Sec. 6.3.1 "Agent" defaults).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     /// Memory buffer size ‖M‖.
     pub buffer_size: usize,
@@ -284,6 +285,83 @@ impl MahppoTrainer {
         self.engine.n_lanes()
     }
 
+    /// Capture the complete trainer state — nets (params + Adam + step
+    /// counters), config, scenario, profile and every RNG stream / env
+    /// mid-episode state — as a [`TrainerCheckpoint`]. A trainer rebuilt
+    /// from it ([`MahppoTrainer::resume`]) continues training bit-for-bit.
+    pub fn checkpoint(&self) -> TrainerCheckpoint {
+        TrainerCheckpoint {
+            config: self.cfg.clone(),
+            scenario: self.scenario.clone(),
+            profile: self.profile.clone(),
+            actors: self.actors.iter().map(|a| a.snapshot()).collect(),
+            critic: self.critic.snapshot(),
+            sampler_rng: self.rng.state(),
+            engine: self.engine.snapshot(),
+        }
+    }
+
+    /// Persist the trainer to `path` in the versioned, CRC-guarded
+    /// [`checkpoint`] format.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        checkpoint::save(&self.checkpoint(), path)
+            .map_err(|e| anyhow::anyhow!("saving checkpoint to {}: {e}", path.display()))
+    }
+
+    /// Rebuild a live trainer from a decoded checkpoint. The artifact
+    /// `store` supplies the compiled executables (they are not part of the
+    /// checkpoint); everything learnable/stochastic is restored from `cp`.
+    pub fn resume(store: &ArtifactStore, cp: TrainerCheckpoint) -> Result<MahppoTrainer> {
+        cp.config.validate()?;
+        let n = cp.scenario.n_ues;
+        anyhow::ensure!(
+            cp.actors.len() == n,
+            "checkpoint has {} actors for an N={n} scenario",
+            cp.actors.len()
+        );
+        let mut actors = (0..n)
+            .map(|i| ActorNet::new(store, n, cp.config.actor_seed(i)))
+            .collect::<Result<Vec<_>>>()?;
+        for (a, st) in actors.iter_mut().zip(&cp.actors) {
+            a.restore(st)?;
+        }
+        let mut critic = CriticNet::new(store, n, cp.config.critic_seed())?;
+        critic.restore(&cp.critic)?;
+        let mut engine = RolloutEngine::new(&cp.profile, &cp.scenario, &cp.config)?;
+        engine.restore(cp.engine)?;
+        let rng = Rng::from_state(cp.sampler_rng)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint sampler rng state is all zeros"))?;
+        Ok(MahppoTrainer {
+            actors,
+            critic,
+            rng,
+            cfg: cp.config,
+            scenario: cp.scenario,
+            profile: cp.profile,
+            engine,
+        })
+    }
+
+    /// [`MahppoTrainer::resume`] from a checkpoint file.
+    pub fn load(store: &ArtifactStore, path: impl AsRef<std::path::Path>) -> Result<MahppoTrainer> {
+        let path = path.as_ref();
+        let cp = checkpoint::load(path)
+            .map_err(|e| anyhow::anyhow!("loading checkpoint from {}: {e}", path.display()))?;
+        Self::resume(store, cp)
+    }
+
+    /// The deployable policy right now: actor parameter vectors plus the
+    /// critic step counter as a monotonic version. This is the unit the
+    /// serving stack hot-swaps
+    /// ([`crate::coordinator::decision::PolicyHandle::publish`]).
+    pub fn policy_snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            version: self.critic.steps(),
+            actors: self.actors.iter().map(|a| a.params.clone()).collect(),
+        }
+    }
+
     /// Run Algorithm 1 for (at least) `total_frames` environment frames.
     pub fn train(&mut self, total_frames: usize) -> Result<TrainReport> {
         let t0 = Instant::now();
@@ -294,7 +372,10 @@ impl MahppoTrainer {
         report.entropies = Series::new("entropy");
         report.clip_fracs = Series::new("clip_frac");
 
-        self.engine.reset()?;
+        // first `train` on this trainer resets the lanes; later calls (and
+        // checkpoint-resumed trainers) continue the same episode streams,
+        // so train(a) → train(b) ≡ train(a + b) bit-for-bit
+        self.engine.ensure_started()?;
         let mut frames = 0usize;
 
         while frames < total_frames {

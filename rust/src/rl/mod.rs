@@ -5,6 +5,11 @@
 //!   Gaussian over power; Eqs. 13/14).
 //! * [`buffer`] — the trajectory buffer **M** of Algorithm 1, laid out in
 //!   per-env lanes.
+//! * [`checkpoint`] — versioned, CRC-guarded binary trainer checkpoints:
+//!   the complete state seam (nets + Adam + every RNG stream + env
+//!   mid-episode state) that makes training resumable bit-for-bit across
+//!   process boundaries, and the [`checkpoint::PolicySnapshot`] unit the
+//!   serving stack hot-swaps.
 //! * [`gae`] — sampled returns (Eq. 15) and generalized advantage
 //!   estimation (Eq. 18).
 //! * [`rollout`] — the vectorized rollout engine: E environment lanes,
@@ -18,6 +23,7 @@
 
 pub mod baselines;
 pub mod buffer;
+pub mod checkpoint;
 pub mod gae;
 pub mod mahppo;
 pub mod rollout;

@@ -33,7 +33,7 @@ use anyhow::{anyhow, ensure, Result};
 use super::buffer::{TrajectoryBuffer, Transition};
 use super::mahppo::TrainConfig;
 use super::sampling;
-use crate::env::mdp::MultiAgentEnv;
+use crate::env::mdp::{EnvSnapshot, MultiAgentEnv};
 use crate::env::scenario::{ScenarioConfig, ScenarioDistribution};
 use crate::env::{Action, HybridAction};
 use crate::profiles::DeviceProfile;
@@ -72,12 +72,39 @@ pub struct RolloutStats {
     pub bootstraps: Vec<f64>,
 }
 
+/// Complete mid-collection state of one rollout lane (checkpointing):
+/// the env snapshot plus both RNG stream positions and the running
+/// episode reward. Transitions/episodes are always drained at collection
+/// boundaries, so they never appear here; `Lane::state` is recomputed
+/// from the restored env.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneSnapshot {
+    pub env: EnvSnapshot,
+    pub rng: [u64; 4],
+    pub scenario_rng: [u64; 4],
+    pub ep_reward: f64,
+}
+
+/// Complete engine state between `collect` calls.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSnapshot {
+    /// Whether the engine has started its episode streams (see
+    /// [`RolloutEngine::ensure_started`]).
+    pub started: bool,
+    pub lanes: Vec<LaneSnapshot>,
+}
+
 /// `E` environment lanes stepped in waves over a worker-thread pool.
 pub struct RolloutEngine {
     lanes: Vec<Lane>,
     threads: usize,
     n_ues: usize,
     dist: Option<ScenarioDistribution>,
+    /// Set by the first `reset`/`ensure_started`; `train` calls continue
+    /// the episode streams instead of re-resetting, so training is one
+    /// uninterrupted stream across any number of `train` calls (and hence
+    /// across a save → load boundary).
+    started: bool,
 }
 
 impl RolloutEngine {
@@ -128,6 +155,7 @@ impl RolloutEngine {
             threads,
             n_ues,
             dist: cfg.scenario_dist.clone(),
+            started: false,
         })
     }
 
@@ -171,6 +199,68 @@ impl RolloutEngine {
             lane.trans.clear();
             lane.episodes.clear();
         }
+        self.started = true;
+        Ok(())
+    }
+
+    /// Reset once, the first time — later calls are no-ops, so episode
+    /// streams run uninterrupted across `train` calls. This is what makes
+    /// `train(a); train(b)` equal one `train(a + b)` (and resumable across
+    /// a checkpoint save → load).
+    pub fn ensure_started(&mut self) -> Result<()> {
+        if self.started {
+            return Ok(());
+        }
+        self.reset()
+    }
+
+    /// Capture the complete engine state (between collections).
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            started: self.started,
+            lanes: self
+                .lanes
+                .iter()
+                .map(|l| LaneSnapshot {
+                    env: l.env.snapshot(),
+                    rng: l.rng.state(),
+                    scenario_rng: l.scenario_rng.state(),
+                    ep_reward: l.ep_reward,
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore an [`EngineSnapshot`] into this engine (built from the same
+    /// config): the next `collect` produces exactly the waves the captured
+    /// engine would have produced.
+    pub fn restore(&mut self, snap: EngineSnapshot) -> Result<()> {
+        ensure!(
+            snap.lanes.len() == self.lanes.len(),
+            "snapshot has {} lanes, engine {}",
+            snap.lanes.len(),
+            self.lanes.len()
+        );
+        for (lane, s) in self.lanes.iter_mut().zip(snap.lanes) {
+            ensure!(
+                s.env.cfg.n_ues == self.n_ues,
+                "lane {} snapshot is N={}, engine is N={}",
+                lane.id,
+                s.env.cfg.n_ues,
+                self.n_ues
+            );
+            lane.env = MultiAgentEnv::from_snapshot(lane.env.profile.clone(), s.env)?;
+            lane.rng = Rng::from_state(s.rng)
+                .ok_or_else(|| anyhow!("lane {} rng state is all zeros", lane.id))?;
+            lane.scenario_rng = Rng::from_state(s.scenario_rng)
+                .ok_or_else(|| anyhow!("lane {} scenario rng state is all zeros", lane.id))?;
+            lane.state = lane.env.state();
+            lane.ep_reward = s.ep_reward;
+            lane.trans.clear();
+            lane.episodes.clear();
+            lane.bootstrap = 0.0;
+        }
+        self.started = snap.started;
         Ok(())
     }
 
@@ -410,6 +500,47 @@ mod tests {
             states.windows(2).any(|w| w[0] != w[1]),
             "all lanes evolved identically — seeds not independent"
         );
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_collection_bitwise() {
+        // collect once, snapshot, restore into a FRESH engine from the
+        // same config — the next collection must match the original's
+        // bit-for-bit (env streams, lane RNGs, mid-episode state)
+        let (mut engine, mut actors, mut critic, cfg) = setup(4, 2);
+        let mut rng = Rng::new(cfg.sampler_seed());
+        let mut buf = engine.make_buffer(cfg.buffer_size);
+        engine.ensure_started().unwrap();
+        engine
+            .collect(&mut actors, &mut critic, &mut buf, &mut rng)
+            .unwrap();
+        buf.clear();
+        let snap = engine.snapshot();
+        assert!(snap.started);
+
+        let (mut twin, mut actors2, mut critic2, _) = setup(4, 2);
+        twin.restore(snap.clone()).unwrap();
+        // ensure_started must NOT re-reset a restored (started) engine
+        twin.ensure_started().unwrap();
+        assert_eq!(twin.snapshot(), snap);
+
+        let mut buf2 = twin.make_buffer(cfg.buffer_size);
+        let mut rng2 = Rng::new(cfg.sampler_seed());
+        let s1 = engine
+            .collect(&mut actors, &mut critic, &mut buf, &mut rng)
+            .unwrap();
+        let s2 = twin
+            .collect(&mut actors2, &mut critic2, &mut buf2, &mut rng2)
+            .unwrap();
+        buf.finish_lanes(0.95, 0.95, &s1.bootstraps, true);
+        buf2.finish_lanes(0.95, 0.95, &s2.bootstraps, true);
+        assert_eq!(s1.episode_rewards, s2.episode_rewards);
+        assert_eq!(s1.bootstraps, s2.bootstraps);
+        assert_eq!(buf.advantages(), buf2.advantages());
+
+        // lane-count mismatch is rejected
+        let (mut wrong, ..) = setup(2, 1);
+        assert!(wrong.restore(snap).is_err());
     }
 
     #[test]

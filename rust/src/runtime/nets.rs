@@ -47,6 +47,70 @@ pub fn init_params(spec: &[SpecEntry], rng: &mut Rng) -> Vec<f32> {
     out
 }
 
+/// Complete learnable state of one network handle: flat parameters, both
+/// Adam moment vectors and the step counter. This is the unit the
+/// [`crate::rl::checkpoint`] format serializes; restoring it reproduces
+/// the net bit-for-bit (`m`/`v` always share `params`' length).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+impl NetState {
+    /// Structural sanity: Adam moments must mirror the parameter vector.
+    pub fn validate(&self) -> Result<()> {
+        if self.m.len() != self.params.len() || self.v.len() != self.params.len() {
+            bail!(
+                "net state: params {} vs adam moments {}/{}",
+                self.params.len(),
+                self.m.len(),
+                self.v.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The lazily-built backend-input copy of a net's flat parameter vector.
+///
+/// Rollouts call the forwards thousands of times between updates; without
+/// this cache every call re-copies the ~64 k-float parameter vector into a
+/// fresh input tensor (§Perf: −26 % on actor_fwd_b1, measured on the PJRT
+/// path; the native backend borrows the cached tensor zero-copy, while the
+/// current PJRT `call_refs` re-marshals inputs per call — see DESIGN.md
+/// §Perf). Updates invalidate it; `&self` paths fall back to a temporary
+/// copy when cold.
+#[derive(Default)]
+struct ParamCache {
+    view: Option<TensorView>,
+}
+
+impl ParamCache {
+    /// Build the cached copy now (no-op when already warm).
+    fn warm(&mut self, params: &[f32]) -> Result<()> {
+        if self.view.is_none() {
+            self.view = Some(TensorView::f32(params.to_vec(), vec![params.len()])?);
+        }
+        Ok(())
+    }
+
+    /// Drop the cached copy (the parameters changed).
+    fn invalidate(&mut self) {
+        self.view = None;
+    }
+
+    /// Borrow the cached tensor, or marshal a temporary one when cold.
+    fn arg<'a>(&'a self, params: &[f32]) -> Result<Cow<'a, TensorView>> {
+        Ok(match &self.view {
+            Some(v) => Cow::Borrowed(v),
+            None => Cow::Owned(TensorView::f32(params.to_vec(), vec![params.len()])?),
+        })
+    }
+}
+
 /// Output of one actor forward (B = 1).
 #[derive(Debug, Clone)]
 pub struct ActorOutput {
@@ -77,14 +141,7 @@ pub struct ActorNet {
     fwd_batch: HashMap<usize, Arc<dyn Executable>>,
     updates: HashMap<usize, Arc<dyn Executable>>, // by minibatch size
     state_dim: usize,
-    /// Backend-input copy of `params`, rebuilt lazily after updates.
-    /// Rollouts call `forward` thousands of times between updates; without
-    /// this cache every call re-copies the ~64 k-float parameter vector
-    /// into a fresh input tensor (§Perf: −26 % on actor_fwd_b1, measured
-    /// on the PJRT path; the native backend borrows the cached tensor
-    /// zero-copy, while the current PJRT `call_refs` re-marshals inputs
-    /// per call — see DESIGN.md §Perf).
-    params_view: Option<TensorView>,
+    cache: ParamCache,
 }
 
 impl ActorNet {
@@ -122,7 +179,7 @@ impl ActorNet {
             fwd_batch,
             updates,
             state_dim: 4 * n_ues,
-            params_view: None,
+            cache: ParamCache::default(),
         })
     }
 
@@ -131,23 +188,57 @@ impl ActorNet {
     /// batched forwards; warming first keeps them from re-marshalling the
     /// parameter vector on every call.
     pub fn warm_cache(&mut self) -> Result<()> {
-        if self.params_view.is_none() {
-            self.params_view = Some(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?);
-        }
-        Ok(())
+        self.cache.warm(&self.params)
     }
 
     fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
-        Ok(match &self.params_view {
-            Some(v) => Cow::Borrowed(v),
-            None => Cow::Owned(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?),
-        })
+        self.cache.arg(&self.params)
+    }
+
+    /// Capture the complete learnable state (params + Adam moments + step
+    /// counter) for checkpointing.
+    pub fn snapshot(&self) -> NetState {
+        NetState {
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            t: self.t,
+        }
+    }
+
+    /// Restore a [`NetState`] captured by [`ActorNet::snapshot`] — the net
+    /// resumes bit-for-bit (the params cache is invalidated). Rejects
+    /// states whose vector lengths do not match this net's layout.
+    pub fn restore(&mut self, state: &NetState) -> Result<()> {
+        state.validate()?;
+        if state.params.len() != self.params.len() {
+            bail!(
+                "actor state has {} params, net expects {}",
+                state.params.len(),
+                self.params.len()
+            );
+        }
+        self.params = state.params.clone();
+        self.m = state.m.clone();
+        self.v = state.v.clone();
+        self.t = state.t;
+        self.cache.invalidate();
+        Ok(())
+    }
+
+    /// Overwrite the parameter vector only (hot policy swap at serving
+    /// time: Adam state stays untouched, the cache is invalidated).
+    pub fn set_params(&mut self, params: &[f32]) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!(
+                "policy swap has {} params, net expects {}",
+                params.len(),
+                self.params.len()
+            );
+        }
+        self.params.copy_from_slice(params);
+        self.cache.invalidate();
+        Ok(())
     }
 
     fn parse_output(mut outs: Vec<TensorView>) -> Result<ActorOutput> {
@@ -165,15 +256,10 @@ impl ActorNet {
 
     /// Policy forward for a single state (B = 1).
     pub fn forward(&mut self, state: &[f32]) -> Result<ActorOutput> {
-        if self.params_view.is_none() {
-            self.params_view = Some(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?);
-        }
+        self.cache.warm(&self.params)?;
         let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
-        let args = [self.params_view.as_ref().unwrap(), &state_view];
-        let outs = self.fwd.call_refs(&args)?;
+        let params = self.params_arg()?;
+        let outs = self.fwd.call_refs(&[&*params, &state_view])?;
         Self::parse_output(outs)
     }
 
@@ -282,7 +368,7 @@ impl ActorNet {
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;
-        self.params_view = None; // cached input copy is stale now
+        self.cache.invalidate(); // cached input copy is stale now
         Ok(UpdateStats {
             loss: outs[3].scalar()?,
             entropy: outs[4].scalar()?,
@@ -306,7 +392,7 @@ pub struct CriticNet {
     fwd_batch: HashMap<usize, Arc<dyn Executable>>,
     updates: HashMap<usize, Arc<dyn Executable>>,
     state_dim: usize,
-    params_view: Option<TensorView>,
+    cache: ParamCache,
 }
 
 impl CriticNet {
@@ -344,29 +430,49 @@ impl CriticNet {
             fwd_batch,
             updates,
             state_dim: 4 * n_ues,
-            params_view: None,
+            cache: ParamCache::default(),
         })
     }
 
     /// See [`ActorNet::warm_cache`].
     pub fn warm_cache(&mut self) -> Result<()> {
-        if self.params_view.is_none() {
-            self.params_view = Some(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?);
-        }
-        Ok(())
+        self.cache.warm(&self.params)
     }
 
     fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
-        Ok(match &self.params_view {
-            Some(v) => Cow::Borrowed(v),
-            None => Cow::Owned(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?),
-        })
+        self.cache.arg(&self.params)
+    }
+
+    /// See [`ActorNet::snapshot`].
+    pub fn snapshot(&self) -> NetState {
+        NetState {
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            t: self.t,
+        }
+    }
+
+    /// See [`ActorNet::restore`].
+    pub fn restore(&mut self, state: &NetState) -> Result<()> {
+        state.validate()?;
+        if state.params.len() != self.params.len() {
+            bail!(
+                "critic state has {} params, net expects {}",
+                state.params.len(),
+                self.params.len()
+            );
+        }
+        self.params = state.params.clone();
+        self.m = state.m.clone();
+        self.v = state.v.clone();
+        self.t = state.t;
+        self.cache.invalidate();
+        Ok(())
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
     }
 
     /// V(s) over stacked states — one value per row (see
@@ -406,15 +512,10 @@ impl CriticNet {
 
     /// V(s) for a single state.
     pub fn value(&mut self, state: &[f32]) -> Result<f32> {
-        if self.params_view.is_none() {
-            self.params_view = Some(TensorView::f32(
-                self.params.clone(),
-                vec![self.params.len()],
-            )?);
-        }
+        self.cache.warm(&self.params)?;
         let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
-        let args = [self.params_view.as_ref().unwrap(), &state_view];
-        let outs = self.fwd.call_refs(&args)?;
+        let params = self.params_arg()?;
+        let outs = self.fwd.call_refs(&[&*params, &state_view])?;
         outs[0].scalar()
     }
 
@@ -439,7 +540,7 @@ impl CriticNet {
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;
-        self.params_view = None;
+        self.cache.invalidate();
         outs[3].scalar()
     }
 }
@@ -494,11 +595,44 @@ mod tests {
         }
         // stale-cache path: after an invalidation the &self forwards still
         // produce the same results via a temporary params tensor
-        actor.params_view = None;
+        actor.cache.invalidate();
         let states: Vec<f32> = (0..4 * d).map(|_| rng.f32()).collect();
         let cold = actor.forward_batch(&states).unwrap();
         actor.warm_cache().unwrap();
         let warm = actor.forward_batch(&states).unwrap();
         assert_eq!(cold[2].probs_b, warm[2].probs_b);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bitwise() {
+        let store = crate::runtime::artifacts::ArtifactStore::native_demo();
+        let mut a = ActorNet::new(&store, 3, 11).unwrap();
+        let mut b = ActorNet::new(&store, 3, 99).unwrap();
+        // push `a` off its init point so Adam moments are non-trivial
+        let batch = 256;
+        let mut rng = Rng::new(4);
+        let states: Vec<f32> = (0..batch * 12).map(|_| rng.f32()).collect();
+        let ab: Vec<i32> = (0..batch).map(|_| (rng.below(6)) as i32).collect();
+        let ac: Vec<i32> = (0..batch).map(|_| (rng.below(2)) as i32).collect();
+        let ap: Vec<f32> = (0..batch).map(|_| rng.f32()).collect();
+        let lp: Vec<f32> = (0..batch).map(|_| -rng.f32()).collect();
+        let adv: Vec<f32> = (0..batch).map(|_| rng.f32() - 0.5).collect();
+        a.update(1e-3, &states, &ab, &ac, &ap, &lp, &adv).unwrap();
+        let snap = a.snapshot();
+        b.restore(&snap).unwrap();
+        assert_eq!(b.snapshot(), snap, "restore must be bit-exact");
+        assert_eq!(b.steps(), a.steps());
+        let s = &states[..12];
+        let (fa, fb) = (a.forward(s).unwrap(), b.forward(s).unwrap());
+        assert_eq!(fa.probs_b, fb.probs_b);
+        assert_eq!(fa.mu, fb.mu);
+        // params-only swap keeps Adam state but changes the policy
+        let mut c = ActorNet::new(&store, 3, 5).unwrap();
+        c.set_params(&snap.params).unwrap();
+        assert_eq!(c.forward(s).unwrap().probs_b, fa.probs_b);
+        assert!(c.set_params(&[0.0; 3]).is_err(), "length mismatch rejected");
+        let mut bad = snap.clone();
+        bad.m.pop();
+        assert!(b.restore(&bad).is_err(), "inconsistent adam state rejected");
     }
 }

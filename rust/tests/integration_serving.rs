@@ -297,3 +297,141 @@ fn feature_offloads_are_served_individually() {
     assert_eq!(stats.exec.batches, 0, "features must not enter the batcher");
     assert_eq!(stats.offloads_served, 6);
 }
+
+/// Tentpole acceptance: a policy published mid-serve is applied between
+/// decision frames with ZERO missed broadcasts — every UE receives every
+/// frame the server issued, the swap counter records the apply, and the
+/// served decisions visibly change policy.
+#[test]
+fn policy_swap_mid_serve_loses_no_broadcasts() {
+    use macci::coordinator::decision::ActorDecision;
+    use macci::rl::checkpoint::PolicySnapshot;
+    use macci::runtime::artifacts::ArtifactStore;
+
+    let store = ArtifactStore::native_demo();
+    let n = 3;
+    let max_frames = 20;
+    let source = ActorDecision::untrained(&store, n, 1.0, 4).unwrap();
+    let dm = DecisionMaker::new(Box::new(source));
+    let handle = dm.policy_handle();
+    // a roomy interval: the publish below (after ~4 frames) must land well
+    // before the last frame, even on a loaded CI machine
+    let cfg = ServerConfig::new(n, Duration::from_millis(20), max_frames);
+    let (server, downlinks) = EdgeServer::spawn(cfg, pool(n), dm, None).unwrap();
+    for ue in 0..n {
+        server.uplink.send(report(ue)).unwrap();
+    }
+
+    // read a few pre-swap frames from UE 0, then publish a new policy
+    let pre_swap = 4;
+    let mut first: Option<Vec<HybridAction>> = None;
+    let mut got = vec![0usize; n];
+    for _ in 0..pre_swap {
+        match downlinks[0].recv_timeout(Duration::from_secs(5)).unwrap() {
+            Downlink::Decision(d) => {
+                got[0] += 1;
+                first.get_or_insert(d.actions);
+            }
+            other => panic!("expected a decision, got {other:?}"),
+        }
+    }
+    let snap = PolicySnapshot {
+        version: 7,
+        actors: (0..n)
+            .map(|i| {
+                macci::runtime::nets::ActorNet::new(&store, n, 888 + i as u64)
+                    .unwrap()
+                    .params
+            })
+            .collect(),
+    };
+    assert!(handle.publish(snap));
+
+    // drain everything until shutdown, counting per-UE broadcasts
+    let mut last: Option<Vec<HybridAction>> = None;
+    for (ue, rx) in downlinks.iter().enumerate() {
+        loop {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                Downlink::Decision(d) => {
+                    got[ue] += 1;
+                    if ue == 0 {
+                        last = Some(d.actions);
+                    }
+                }
+                Downlink::Shutdown => break,
+                other => panic!("unexpected downlink {other:?}"),
+            }
+        }
+    }
+    for ue in 0..n {
+        server.uplink.send(Uplink::Goodbye { ue_id: ue }).ok();
+    }
+    let stats = server.join();
+
+    assert_eq!(stats.frames, max_frames);
+    for (ue, &g) in got.iter().enumerate() {
+        assert_eq!(
+            g, max_frames,
+            "UE {ue} missed a broadcast across the swap"
+        );
+    }
+    assert_eq!(stats.policy_swaps, 1, "exactly one swap must be applied");
+    assert_ne!(
+        first.unwrap(),
+        last.unwrap(),
+        "the published policy must change served decisions"
+    );
+}
+
+/// A server serving `from_checkpoint` emits exactly the decisions of one
+/// using `from_actors` on the live trainer's nets — deployment through
+/// the file format is bit-transparent.
+#[test]
+fn from_checkpoint_serves_identically_to_from_actors() {
+    use macci::coordinator::decision::ActorDecision;
+    use macci::env::scenario::ScenarioConfig;
+    use macci::profiles::DeviceProfile;
+    use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
+    use macci::runtime::artifacts::ArtifactStore;
+    use macci::util::rng::Rng;
+
+    let store = ArtifactStore::native_demo();
+    let scenario = ScenarioConfig {
+        n_ues: 3,
+        lambda_tasks: 12.0,
+        ..Default::default()
+    };
+    let n = scenario.n_ues;
+    let cfg = TrainConfig {
+        buffer_size: 256,
+        minibatch: 256,
+        reuse: 1,
+        seed: 33,
+        ..Default::default()
+    };
+    let mut trainer =
+        MahppoTrainer::new(&store, &DeviceProfile::synthetic(), scenario.clone(), cfg).unwrap();
+    trainer.train(256).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("macci_serve_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("policy.ckpt");
+    trainer.save(&path).unwrap();
+
+    let p_max = trainer.scenario.p_max;
+    let n_choices = store.rl().unwrap().n_partition;
+    let live = ActorDecision::from_actors(trainer.actors, p_max, n_choices);
+    let mut dm_live = DecisionMaker::new(Box::new(live));
+    let mut dm_ckpt =
+        DecisionMaker::new(Box::new(ActorDecision::from_checkpoint(&store, &path).unwrap()));
+
+    let mut rng = Rng::new(2);
+    for frame in 0..16 {
+        let state: Vec<f32> = (0..4 * n).map(|_| rng.f32()).collect();
+        let a = dm_live.next_decision(&state).unwrap();
+        let b = dm_ckpt.next_decision(&state).unwrap();
+        assert_eq!(a.frame, b.frame);
+        assert_eq!(a.actions, b.actions, "frame {frame} diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

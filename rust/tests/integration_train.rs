@@ -363,3 +363,112 @@ fn fig9_batch_matrix_artifacts_usable() {
         );
     }
 }
+
+/// The policy-lifecycle acceptance bar: `train(2k)` must produce
+/// byte-identical state to `train(1k)` → save → load → `train(1k)` under
+/// the same seed — the checkpoint seam captures *everything* (params,
+/// Adam moments, step counters, sampler/lane/env RNG streams, mid-episode
+/// UE task machines). Covers the serial path and the vectorized engine.
+#[test]
+fn checkpoint_resume_equals_continuous_training() {
+    let Some((store, profile)) = setup() else { return };
+    for n_envs in [1usize, 2] {
+        let scenario = ScenarioConfig {
+            n_ues: 3,
+            lambda_tasks: 12.0,
+            ..Default::default()
+        };
+        let cfg = TrainConfig {
+            buffer_size: 256,
+            minibatch: 256,
+            reuse: 1,
+            seed: 21,
+            n_envs,
+            ..Default::default()
+        };
+
+        let mut continuous =
+            MahppoTrainer::new(&store, &profile, scenario.clone(), cfg.clone()).unwrap();
+        continuous.train(512).unwrap();
+
+        let mut half = MahppoTrainer::new(&store, &profile, scenario, cfg).unwrap();
+        half.train(256).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "macci_resume_test_{}_{n_envs}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trainer.ckpt");
+        half.save(&path).unwrap();
+        let mut resumed = MahppoTrainer::load(&store, &path).unwrap();
+        resumed.train(256).unwrap();
+
+        // params byte-identical (explicit, for a readable failure)...
+        for (u, (a, b)) in continuous.actors.iter().zip(&resumed.actors).enumerate() {
+            let pa: Vec<u32> = a.params.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = b.params.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(pa, pb, "E={n_envs}: actor {u} params diverged after resume");
+        }
+        assert_eq!(
+            continuous.critic.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            resumed.critic.params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "E={n_envs}: critic params diverged after resume"
+        );
+        // ...and the FULL state matches: both trainers checkpoint to
+        // byte-identical files (Adam moments, RNG streams, env state)
+        assert_eq!(
+            macci::rl::checkpoint::encode(&continuous.checkpoint()).unwrap(),
+            macci::rl::checkpoint::encode(&resumed.checkpoint()).unwrap(),
+            "E={n_envs}: complete trainer state diverged after resume"
+        );
+
+        // in-process continuation is the same stream too:
+        // train(256); train(256) on the saved trainer ≡ train(512)
+        half.train(256).unwrap();
+        assert_eq!(
+            macci::rl::checkpoint::encode(&continuous.checkpoint()).unwrap(),
+            macci::rl::checkpoint::encode(&half.checkpoint()).unwrap(),
+            "E={n_envs}: sequential train() calls diverged from one long call"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A corrupted or truncated checkpoint file must fail `load` with a typed
+/// error — never construct a half-restored trainer.
+#[test]
+fn trainer_load_rejects_damaged_checkpoints() {
+    let Some((store, profile)) = setup() else { return };
+    let scenario = ScenarioConfig {
+        n_ues: 3,
+        lambda_tasks: 12.0,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        buffer_size: 256,
+        minibatch: 256,
+        reuse: 1,
+        ..Default::default()
+    };
+    let trainer = MahppoTrainer::new(&store, &profile, scenario, cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!("macci_damaged_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trainer.ckpt");
+    trainer.save(&path).unwrap();
+
+    let bytes = std::fs::read(&path).unwrap();
+    let bad = dir.join("bad.ckpt");
+
+    std::fs::write(&bad, &bytes[..bytes.len() / 2]).unwrap();
+    let err = MahppoTrainer::load(&store, &bad).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    std::fs::write(&bad, &flipped).unwrap();
+    let err = MahppoTrainer::load(&store, &bad).unwrap_err().to_string();
+    assert!(err.contains("crc mismatch"), "unexpected error: {err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

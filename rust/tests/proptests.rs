@@ -7,12 +7,17 @@ use macci::coordinator::protocol::{
 };
 use macci::coordinator::state_pool::{StateNorm, StatePool};
 use macci::coordinator::wire::{decode_frame, encode_frame, Frame};
-use macci::env::mdp::MultiAgentEnv;
+use macci::env::mdp::{EnvSnapshot, MultiAgentEnv};
 use macci::env::scenario::ScenarioConfig;
+use macci::env::ue::{Phase, TaskTotals, UeSnapshot};
 use macci::env::{Action, HybridAction};
 use macci::profiles::DeviceProfile;
 use macci::rl::buffer::{TrajectoryBuffer, Transition};
+use macci::rl::checkpoint::{self, TrainerCheckpoint};
 use macci::rl::gae;
+use macci::rl::mahppo::TrainConfig;
+use macci::rl::rollout::{EngineSnapshot, LaneSnapshot};
+use macci::runtime::nets::NetState;
 use macci::util::check::forall;
 use macci::util::rng::Rng;
 
@@ -187,6 +192,139 @@ fn wire_corruption_is_rejected_never_panics() {
             let mut flipped = buf.clone();
             flipped[flip_bit / 8] ^= 1 << (flip_bit % 8);
             if decode_frame(&flipped).is_ok() {
+                return Err(format!("bit flip at {flip_bit} went undetected"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random structurally-valid trainer checkpoint (small nets, 1–2 lanes,
+/// finite floats) — the starting point for corruption testing.
+fn arbitrary_checkpoint(g: &mut macci::util::check::Gen) -> TrainerCheckpoint {
+    let n_ues = g.usize_in(1, 4).clamp(1, 3);
+    let n_envs = g.usize_in(1, 3).clamp(1, 2);
+    let scenario = ScenarioConfig {
+        n_ues,
+        lambda_tasks: g.f64_in(5.0, 50.0),
+        p_max: g.f64_in(0.5, 2.0),
+        ..Default::default()
+    };
+    let config = TrainConfig {
+        buffer_size: 8 * n_envs,
+        minibatch: 4,
+        n_envs,
+        seed: g.rng.next_u64(),
+        ..Default::default()
+    };
+    let params = g.usize_in(1, 16).max(1);
+    let mut net = |t: u64| NetState {
+        params: g.vec_f32(params, -2.0, 2.0),
+        m: g.vec_f32(params, -1.0, 1.0),
+        v: g.vec_f32(params, 0.0, 1.0),
+        t,
+    };
+    let actors = (0..n_ues).map(|_| net(3)).collect();
+    let critic = net(3);
+    let mut mk_rng = || Rng::new(g.rng.next_u64()).state();
+    let lanes = (0..n_envs)
+        .map(|_| LaneSnapshot {
+            env: EnvSnapshot {
+                cfg: scenario.clone(),
+                rng: mk_rng(),
+                frame_idx: 5,
+                ues: (0..n_ues)
+                    .map(|id| UeSnapshot {
+                        id,
+                        distance: 50.0,
+                        gain: 1e-5,
+                        tasks_left: 4,
+                        phase: match id % 3 {
+                            0 => Phase::Idle,
+                            1 => Phase::Compute {
+                                remaining_s: 0.01,
+                                total_s: 0.05,
+                                total_energy: 0.1,
+                            },
+                            _ => Phase::Offload {
+                                remaining_bits: 1000.0,
+                            },
+                        },
+                        decision: HybridAction::new(2, 0, 0.1, 1.0),
+                        pending: HybridAction::new(1, 1, -0.2, 1.0),
+                        cur_latency: 0.01,
+                        cur_energy: 0.001,
+                        frame_energy: 0.0005,
+                        totals: TaskTotals {
+                            completed: 2,
+                            latency_sum: 0.1,
+                            energy_sum: 0.2,
+                        },
+                    })
+                    .collect(),
+            },
+            rng: mk_rng(),
+            scenario_rng: mk_rng(),
+            ep_reward: -1.5,
+        })
+        .collect();
+    TrainerCheckpoint {
+        config,
+        scenario,
+        profile: DeviceProfile::synthetic(),
+        actors,
+        critic,
+        sampler_rng: mk_rng(),
+        engine: EngineSnapshot {
+            started: true,
+            lanes,
+        },
+    }
+}
+
+#[test]
+fn checkpoint_roundtrips_bit_exactly() {
+    forall(
+        31,
+        40,
+        arbitrary_checkpoint,
+        |cp| {
+            let bytes = checkpoint::encode(cp).map_err(|e| format!("encode: {e}"))?;
+            let back = checkpoint::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
+            if &back != cp {
+                return Err("decoded checkpoint differs from the original".into());
+            }
+            let again = checkpoint::encode(&back).map_err(|e| format!("re-encode: {e}"))?;
+            if again != bytes {
+                return Err("encoding is not canonical".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_corruption_is_rejected_never_panics() {
+    // every truncation and every single bit-flip of a valid checkpoint
+    // decodes to a typed error — the CRC covers the header prefix and the
+    // whole body, so no damaged checkpoint is ever accepted
+    forall(
+        32,
+        60,
+        |g| {
+            let cp = arbitrary_checkpoint(g);
+            let bits = checkpoint::encode(&cp).unwrap().len() * 8;
+            (cp, g.rng.next_u64() as usize % bits, g.rng.next_u64())
+        },
+        |(cp, flip_bit, trunc_seed)| {
+            let buf = checkpoint::encode(cp).map_err(|e| format!("encode: {e}"))?;
+            let trunc = (*trunc_seed as usize) % buf.len();
+            if checkpoint::decode(&buf[..trunc]).is_ok() {
+                return Err(format!("truncation to {trunc} bytes decoded"));
+            }
+            let mut flipped = buf.clone();
+            flipped[flip_bit / 8] ^= 1 << (flip_bit % 8);
+            if checkpoint::decode(&flipped).is_ok() {
                 return Err(format!("bit flip at {flip_bit} went undetected"));
             }
             Ok(())
