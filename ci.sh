@@ -10,6 +10,13 @@ cargo build --release
 echo "== tier-1: test =="
 cargo test -q
 
+echo "== kernel tests, forced-scalar dispatch =="
+# MACCI_FORCE_SCALAR is latched once per process, so rerun the kernel
+# suites in fresh processes with SIMD off: the scalar fallback must pass
+# the same goldens/properties the dispatched paths do
+MACCI_FORCE_SCALAR=1 cargo test -q --lib runtime::native
+MACCI_FORCE_SCALAR=1 cargo test -q --test proptests kernel_
+
 echo "== rustfmt =="
 cargo fmt --check
 

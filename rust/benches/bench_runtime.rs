@@ -7,9 +7,62 @@
 //! (Figs. 8-13 training wall time); *_update dominates the PPO rounds.
 
 use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::native::gemm::{dense_packed, PackedW};
+use macci::runtime::native::kernels::{dense_with, Act};
+use macci::runtime::native::quant8::QuantDense;
+use macci::runtime::native::simd::{self, Isa};
 use macci::runtime::nets::{ActorNet, CriticNet};
 use macci::util::bench::{black_box, Bench};
 use macci::util::rng::Rng;
+
+/// Per-kernel dense timings: f32 scalar reference vs the dispatched
+/// SIMD/blocked GEMM vs the int8 path, at a hidden-layer-sized 256→128
+/// matmul (Act::Linear so the activation cost doesn't mask the GEMM).
+fn kernel_benches(b: &mut Bench, rng: &mut Rng) {
+    let (in_dim, out_dim) = (256usize, 128usize);
+    let w: Vec<f32> = (0..in_dim * out_dim).map(|_| rng.f32() - 0.5).collect();
+    let bias: Vec<f32> = (0..out_dim).map(|_| rng.f32() - 0.5).collect();
+    // packing happens once per params version in the serving path — keep
+    // it out of the timed region
+    let pw = PackedW::pack(&w, &bias, in_dim, out_dim);
+    let qd = QuantDense::pack(&w, &bias, in_dim, out_dim);
+    let isa = simd::active();
+    println!("kernel isa: {isa:?}");
+    let mut speedup = Vec::new();
+    for rows in [1usize, 8, 32] {
+        let x: Vec<f32> = (0..rows * in_dim).map(|_| rng.f32() - 0.5).collect();
+        let flops = (2 * rows * in_dim * out_dim) as f64;
+        b.run(&format!("dense_b{rows}_f32_scalar"), || {
+            black_box(dense_with(
+                Isa::Scalar,
+                black_box(&x),
+                rows,
+                in_dim,
+                &w,
+                &bias,
+                out_dim,
+                Act::Linear,
+            ));
+        });
+        let scalar_ns = b.results().last().unwrap().mean_ns;
+        b.gauge(format!("dense_b{rows}_f32_scalar_gflops"), flops / scalar_ns);
+        b.run(&format!("dense_b{rows}_f32_simd"), || {
+            black_box(dense_packed(isa, black_box(&x), rows, &pw, Act::Linear));
+        });
+        let simd_ns = b.results().last().unwrap().mean_ns;
+        b.gauge(format!("dense_b{rows}_f32_simd_gflops"), flops / simd_ns);
+        b.run(&format!("dense_b{rows}_int8"), || {
+            black_box(qd.forward(isa, black_box(&x), rows, Act::Linear));
+        });
+        let q8_ns = b.results().last().unwrap().mean_ns;
+        b.gauge(format!("dense_b{rows}_int8_gflops"), flops / q8_ns);
+        speedup.push((rows, scalar_ns / simd_ns, scalar_ns / q8_ns));
+    }
+    for (rows, s_simd, s_q8) in speedup {
+        b.gauge(format!("dense_b{rows}_simd_speedup"), s_simd);
+        b.gauge(format!("dense_b{rows}_int8_speedup"), s_q8);
+    }
+}
 
 fn main() {
     let store = match ArtifactStore::open("artifacts") {
@@ -22,6 +75,8 @@ fn main() {
     let mut b = Bench::new("runtime");
     println!("backend: {}", store.backend_name());
     let mut rng = Rng::new(1);
+
+    kernel_benches(&mut b, &mut rng);
 
     let mut actor = ActorNet::new(&store, 5, 1).unwrap();
     let mut critic = CriticNet::new(&store, 5, 2).unwrap();

@@ -44,6 +44,7 @@ fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
         max_batch: 8,
         // short: closed-loop UEs rarely fill a batch, so don't idle on it
         max_wait: Duration::from_micros(100),
+        ..ExecutorConfig::default()
     };
     let compute = Some(compute as Arc<dyn OffloadCompute>);
     let (server, downlinks) = EdgeServer::spawn(cfg, pool, decisions, compute).unwrap();

@@ -8,6 +8,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::runtime::native::kernels::round_ties_even;
+
 /// A quantizer for a fixed bit-width (1..=16).
 #[derive(Debug, Clone, Copy)]
 pub struct Quantizer {
@@ -27,13 +29,18 @@ impl Quantizer {
     }
 
     /// Eq. (1): y_i = round((2^cq − 1)(clip(x_i) − lo) / (hi − lo)).
+    ///
+    /// Rounds half-to-even (`jnp.round`), exactly like the native kernel
+    /// and the AOT encode artifact — `.round()` (half-away-from-zero)
+    /// would diverge by one code on exact half-boundary inputs and break
+    /// the elementwise kernel/JALAD cross-validation.
     pub fn quantize(&self, x: &[f32], lo: f32, hi: f32) -> Vec<u16> {
         let levels = self.levels() as f32;
         let span = (hi - lo).max(1e-12);
         x.iter()
             .map(|&v| {
                 let c = v.clamp(lo, hi);
-                (levels * (c - lo) / span).round() as u16
+                round_ties_even(levels * (c - lo) / span) as u16
             })
             .collect()
     }
@@ -200,6 +207,31 @@ mod tests {
         assert_eq!(codes, vec![2]);
         let back = q.dequantize(&codes, 0.0, 1.0);
         assert!((back[0] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn half_boundary_ties_round_to_even_like_the_kernel() {
+        // exactly-representable ties: bits=2 (levels=3), span exactly 3,
+        // so t = 3·(x−0)/3 = x lands on .5 precisely. Half-away-from-zero
+        // (the old `.round()`) gave [1, 2, 3] / [1] here.
+        let q = Quantizer::new(2).unwrap();
+        let xs = [0.5f32, 1.5, 2.5];
+        let codes = q.quantize(&xs, 0.0, 3.0);
+        assert_eq!(codes, vec![0, 2, 2]);
+        let q1 = Quantizer::new(1).unwrap();
+        assert_eq!(q1.quantize(&[0.5], 0.0, 1.0), vec![0]);
+        // elementwise cross-validation against the native kernel on the
+        // same tie points
+        for (bits, x, lo, hi) in [
+            (2usize, &xs[..], 0.0f32, 3.0f32),
+            (1, &[0.5f32][..], 0.0, 1.0),
+        ] {
+            let wire = Quantizer::new(bits as u32).unwrap().quantize(x, lo, hi);
+            let native = crate::runtime::native::kernels::quantize(x, lo, hi, bits);
+            for (a, b) in wire.iter().zip(&native) {
+                assert_eq!(*a as f32, *b, "bits={bits}");
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,7 @@ use super::batcher::{BatchItem, BatchOutput, BatchRunner, DynamicBatcher, Stampe
 use super::inference::{argmax, check_raw_payload, decode_raw_payload, CollabPipeline};
 use super::protocol::{InferenceResult, OffloadRequest};
 use crate::runtime::artifacts::ArtifactStore;
+use crate::runtime::backend::Precision;
 
 /// The compute side of offload serving — what the workers actually run,
 /// independent of where the model math comes from.
@@ -233,6 +234,12 @@ pub struct ExecutorConfig {
     pub max_batch: usize,
     /// Max age of a queued raw offload before a partial batch flushes.
     pub max_wait: Duration,
+    /// Numeric precision the serving stack's inference executables run at.
+    /// The executor itself is precision-agnostic — the serve entry points
+    /// open their [`crate::runtime::artifacts::ArtifactStore`] with a
+    /// backend at this precision (see `macci serve --precision`); it rides
+    /// here so one config travels the whole serving path.
+    pub precision: Precision,
 }
 
 impl Default for ExecutorConfig {
@@ -241,6 +248,7 @@ impl Default for ExecutorConfig {
             workers: 4,
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            precision: Precision::F32,
         }
     }
 }
@@ -688,6 +696,7 @@ mod tests {
             workers: 2,
             max_batch: 4,
             max_wait: Duration::from_secs(60), // size-triggered flush only
+            ..ExecutorConfig::default()
         };
         let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
         for t in 0..4 {
@@ -714,6 +723,7 @@ mod tests {
             workers: 1,
             max_batch: 8,
             max_wait: Duration::from_millis(40),
+            ..ExecutorConfig::default()
         };
         let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
         let t0 = Instant::now();
@@ -802,6 +812,7 @@ mod tests {
             workers: 1,
             max_batch: 4,
             max_wait: Duration::from_micros(100),
+            ..ExecutorConfig::default()
         };
         let mut ex = OffloadExecutor::start(Arc::new(PanicCompute), cfg).unwrap();
         ex.submit(feature_req(1)); // panics in serve
@@ -824,6 +835,7 @@ mod tests {
             workers: 2,
             max_batch: 4,
             max_wait: Duration::from_secs(60), // nothing flushes on its own
+            ..ExecutorConfig::default()
         };
         let mut ex = OffloadExecutor::start(compute, cfg).unwrap();
         for t in 0..6 {

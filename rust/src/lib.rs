@@ -65,7 +65,7 @@ pub mod prelude {
     pub use crate::rl::baselines::{BaselinePolicy, PolicyKind};
     pub use crate::rl::checkpoint::{PolicySnapshot, TrainerCheckpoint};
     pub use crate::rl::mahppo::{MahppoTrainer, TrainConfig, TrainReport};
-    pub use crate::runtime::backend::{Backend, Executable};
+    pub use crate::runtime::backend::{Backend, Executable, Precision};
     pub use crate::runtime::native::NativeBackend;
     pub use crate::runtime::{artifacts::ArtifactStore, tensor::TensorView};
     pub use crate::transport::tcp::{TcpClientTransport, TcpServerTransport};

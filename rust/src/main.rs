@@ -28,6 +28,8 @@ use macci::rl::baselines::{evaluate_policy, BaselinePolicy, PolicyKind};
 use macci::rl::checkpoint;
 use macci::rl::mahppo::{MahppoTrainer, TrainConfig};
 use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::backend::Precision;
+use macci::runtime::native::NativeBackend;
 use macci::util::cli::Args;
 
 const USAGE: &str = "\
@@ -41,8 +43,9 @@ USAGE:
               [--save policy.ckpt] [--resume policy.ckpt]
   macci eval  [--n-ues 5] [--policy local|random|edge_raw|split2] [--episodes 3]
   macci serve [--model resnet18] [--n-ues 3] [--tasks 16] [--point 2]
+              [--precision f32|int8]
   macci serve --policy policy.ckpt [--frames 200] [--interval-ms 2]
-              [--online-learn] [--learn-lr 1e-3]
+              [--online-learn] [--learn-lr 1e-3] [--precision f32|int8]
   macci info
 
 `train --save` writes a versioned, CRC-guarded checkpoint of the FULL
@@ -104,6 +107,20 @@ fn run() -> Result<()> {
 
 fn open_store() -> Result<ArtifactStore> {
     ArtifactStore::open("artifacts")
+}
+
+/// Open the store honoring `--precision f32|int8` (serve paths). f32
+/// keeps the process-default backend (so `MACCI_BACKEND`/`MACCI_PRECISION`
+/// still apply); int8 forces the native backend at reduced precision.
+fn open_store_at(args: &Args) -> Result<ArtifactStore> {
+    let precision = Precision::parse(&args.str_or("precision", "f32"))?;
+    match precision {
+        Precision::F32 => open_store(),
+        Precision::Int8 => ArtifactStore::with_backend(
+            "artifacts",
+            std::sync::Arc::new(NativeBackend::with_precision(precision)),
+        ),
+    }
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -242,7 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // small in-process serving demo; the full threaded pipeline lives in
     // examples/collab_serving.rs
-    let store = open_store()?;
+    let store = open_store_at(args)?;
     let model = args.str_or("model", "resnet18");
     let pipeline = CollabPipeline::load(&store, &model)?;
     let point = args.usize_or("point", 2)?;
@@ -283,7 +300,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// optionally with the online learner refining — and hot-swapping — the
 /// served policy from live telemetry.
 fn cmd_serve_policy(args: &Args) -> Result<()> {
-    let store = open_store()?;
+    let store = open_store_at(args)?;
     let path = args.str_or("policy", "policy.ckpt");
     let frames = args.usize_or("frames", 200)?;
     let interval = Duration::from_millis(args.u64_or("interval-ms", 2)?);
@@ -315,6 +332,7 @@ fn cmd_serve_policy(args: &Args) -> Result<()> {
         },
     );
     let mut server_cfg = ServerConfig::new(n, interval, frames);
+    server_cfg.exec.precision = Precision::parse(&args.str_or("precision", "f32"))?;
     let mut learner_handle = None;
     if online {
         // bounded feed: a learner slower than the decision rate drops

@@ -29,6 +29,42 @@ pub struct ExecStats {
     pub total_ns: u64,
 }
 
+/// Numeric precision an inference executable runs at. Selected
+/// per-backend ([`crate::runtime::native::NativeBackend::with_precision`])
+/// and plumbed through the executor config; training programs always run
+/// f32 regardless.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 — bit-identical to the scalar reference kernels.
+    #[default]
+    F32,
+    /// Int8 forward path (u8 activations × i8 weights, i32 accumulate,
+    /// f32 requantize) — bounded-error, not bit-identical.
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI/env spelling: `f32`/`fp32` or `int8`/`q8`.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Precision::F32),
+            "int8" | "i8" | "q8" => Ok(Precision::Int8),
+            other => anyhow::bail!("unknown precision '{other}' (expected f32 or int8)"),
+        }
+    }
+
+    /// Process-wide default from `MACCI_PRECISION` (unset → f32).
+    pub fn from_env() -> Precision {
+        match std::env::var("MACCI_PRECISION") {
+            Ok(v) if !v.is_empty() => Precision::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: {e}; falling back to f32");
+                Precision::F32
+            }),
+            _ => Precision::F32,
+        }
+    }
+}
+
 /// A loaded artifact ready to execute.
 pub trait Executable: Send + Sync {
     /// Human-readable identity for error messages.
@@ -45,6 +81,16 @@ pub trait Executable: Send + Sync {
 
     /// Cumulative execution statistics.
     fn stats(&self) -> ExecStats;
+
+    /// Hint that `input` will be passed as input `input_idx` on many
+    /// upcoming calls — backends may precompute per-input state (the
+    /// native backend packs GEMM panels / int8 weights keyed on the
+    /// buffer). Purely an optimization: executables may ignore it, and
+    /// calling with other inputs afterwards stays correct.
+    fn warm(&self, input_idx: usize, input: &Arc<TensorView>) -> Result<()> {
+        let _ = (input_idx, input);
+        Ok(())
+    }
 }
 
 impl dyn Executable {
@@ -70,7 +116,9 @@ pub trait Backend: Send + Sync {
 pub fn default_backend() -> Result<Arc<dyn Backend>> {
     let choice = std::env::var("MACCI_BACKEND").unwrap_or_default();
     match choice.as_str() {
-        "" | "native" => Ok(Arc::new(super::native::NativeBackend::new())),
+        "" | "native" => Ok(Arc::new(super::native::NativeBackend::with_precision(
+            Precision::from_env(),
+        ))),
         "xla" | "pjrt" | "xla-pjrt" => pjrt_backend(),
         other => anyhow::bail!("unknown MACCI_BACKEND '{other}' (expected native or xla)"),
     }
@@ -89,6 +137,16 @@ fn pjrt_backend() -> Result<Arc<dyn Backend>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn precision_parses_spellings() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("q8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp16").is_err());
+        assert_eq!(Precision::default(), Precision::F32);
+    }
 
     #[test]
     fn default_is_native_without_env() {

@@ -7,8 +7,11 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::kernels::{conv1x1, dequantize, quantize};
+use super::quant8::QuantConv;
+use super::simd;
 use super::{expect_inputs, f32_in, scalar_in};
 use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::backend::Precision;
 use crate::runtime::tensor::TensorView;
 
 /// A (model, partition-point) AE compressor resolved from the manifest:
@@ -20,10 +23,11 @@ pub(super) struct AeProgram {
     w: usize,
     bits: usize,
     weights_len: usize,
+    precision: Precision,
 }
 
 impl AeProgram {
-    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<AeProgram> {
+    pub(super) fn from_meta(meta: &ArtifactMeta, precision: Precision) -> Result<AeProgram> {
         let bits = meta.bits.ok_or_else(|| {
             anyhow!("no quantization bit-width attached (manifest models section missing?)")
         })?;
@@ -63,6 +67,7 @@ impl AeProgram {
             w: feat[3],
             bits,
             weights_len,
+            precision,
         };
         let expect = prog.ch * prog.ch_r + prog.ch_r + prog.ch_r * prog.ch + prog.ch;
         if weights_len != expect {
@@ -88,6 +93,19 @@ impl AeProgram {
         (w_enc, b_enc, w_dec, b_dec)
     }
 
+    /// One 1x1-conv at this program's precision. AE weights arrive as a
+    /// per-call input (they are trained online and change between calls),
+    /// so the int8 path packs per call — cheap at these channel counts.
+    #[allow(clippy::too_many_arguments)]
+    fn conv(&self, x: &[f32], c_in: usize, c_out: usize, w: &[f32], b: &[f32]) -> Vec<f32> {
+        match self.precision {
+            Precision::F32 => conv1x1(x, 1, c_in, self.h, self.w, w, b, c_out),
+            Precision::Int8 => {
+                QuantConv::pack(w, b, c_in, c_out).forward(simd::active(), x, 1, self.h, self.w)
+            }
+        }
+    }
+
     fn check_weights<'a>(&self, inputs: &'a [&TensorView], what: &str) -> Result<&'a [f32]> {
         let weights = f32_in(inputs, 0, what)?;
         if weights.len() != self.weights_len {
@@ -111,7 +129,7 @@ impl AeProgram {
             bail!("{what}: feature has {} values, expected {}", feat.len(), self.ch * hw);
         }
         let (w_enc, b_enc, _, _) = self.split(weights);
-        let z = conv1x1(feat, 1, self.ch, self.h, self.w, w_enc, b_enc, self.ch_r);
+        let z = self.conv(feat, self.ch, self.ch_r, w_enc, b_enc);
         let lo = z.iter().copied().fold(f32::INFINITY, f32::min);
         let hi = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let codes = quantize(&z, lo, hi, self.bits);
@@ -136,7 +154,7 @@ impl AeProgram {
         }
         let (_, _, w_dec, b_dec) = self.split(weights);
         let z = dequantize(codes, lo, hi, self.bits);
-        let feat = conv1x1(&z, 1, self.ch_r, self.h, self.w, w_dec, b_dec, self.ch);
+        let feat = self.conv(&z, self.ch_r, self.ch, w_dec, b_dec);
         Ok(vec![TensorView::f32(feat, vec![1, self.ch, self.h, self.w])?])
     }
 }

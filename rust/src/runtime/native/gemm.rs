@@ -1,0 +1,393 @@
+//! Cache-blocked GEMM over a packed weight matrix.
+//!
+//! [`PackedW`] repacks a `(in_dim, out_dim)` dense weight matrix into
+//! column panels of [`NR`] = 8 outputs, each panel k-contiguous, so the
+//! micro-kernel streams weights linearly. [`dense_packed`] then computes
+//! `act(x @ w + b)` with Mc/Kc blocking (MR = 4 rows × NR = 8 columns
+//! register tile, Kc = 256 k-slab, Mc = 64 row block).
+//!
+//! **Bit-identity:** per output element the accumulation is exactly the
+//! scalar [`super::kernels::dense`] sequence — bias prefill, then
+//! k-ascending `y += x_k * w_kj` with separate mul/add (no FMA, no tree
+//! reduction). Kc blocking stores and reloads the f32 partials, which is
+//! exact; Mc/panel blocking only reorders independent elements. The
+//! batched-forward test in `runtime/nets.rs` and the `kernel_` proptests
+//! pin this bitwise against the scalar kernel.
+
+use super::kernels::{apply_act, Act};
+use super::simd::Isa;
+
+/// Panel width (output columns per packed panel / micro-kernel tile).
+pub const NR: usize = 8;
+/// Micro-kernel row count.
+const MR: usize = 4;
+/// k-dimension slab per blocking pass.
+const KC: usize = 256;
+/// Row block kept hot across panels.
+const MC: usize = 64;
+
+/// A dense layer's weights repacked for the blocked GEMM, plus its bias.
+/// Built once per parameter version and cached (see `ParamCache`).
+#[derive(Debug, Clone)]
+pub struct PackedW {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    bias: Vec<f32>,
+    /// `out_dim.div_ceil(NR)` panels, each `in_dim × NR` and zero-padded
+    /// in the final partial panel.
+    panels: Vec<f32>,
+}
+
+impl PackedW {
+    /// Pack `w` (`(in_dim, out_dim)` row-major, same layout as
+    /// [`super::kernels::dense`]) and its bias.
+    pub fn pack(w: &[f32], bias: &[f32], in_dim: usize, out_dim: usize) -> PackedW {
+        debug_assert_eq!(w.len(), in_dim * out_dim);
+        debug_assert_eq!(bias.len(), out_dim);
+        let np = out_dim.div_ceil(NR);
+        let mut panels = vec![0.0f32; np * in_dim * NR];
+        for jp in 0..np {
+            let j0 = jp * NR;
+            let width = NR.min(out_dim - j0);
+            let panel = &mut panels[jp * in_dim * NR..(jp + 1) * in_dim * NR];
+            for k in 0..in_dim {
+                let wrow = &w[k * out_dim + j0..k * out_dim + j0 + width];
+                panel[k * NR..k * NR + width].copy_from_slice(wrow);
+            }
+        }
+        PackedW {
+            in_dim,
+            out_dim,
+            bias: bias.to_vec(),
+            panels,
+        }
+    }
+}
+
+/// `y = act(x @ w + b)` over the packed weights — drop-in for
+/// [`super::kernels::dense`] with identical f32 output.
+pub fn dense_packed(isa: Isa, x: &[f32], rows: usize, pw: &PackedW, act: Act) -> Vec<f32> {
+    let (in_dim, out_dim) = (pw.in_dim, pw.out_dim);
+    debug_assert_eq!(x.len(), rows * in_dim);
+    let mut out = vec![0.0f32; rows * out_dim];
+    for r in 0..rows {
+        out[r * out_dim..(r + 1) * out_dim].copy_from_slice(&pw.bias);
+    }
+    let np = out_dim.div_ceil(NR);
+    let mut rc = 0usize;
+    while rc < rows {
+        let rend = (rc + MC).min(rows);
+        let mut k0 = 0usize;
+        while k0 < in_dim {
+            let k1 = (k0 + KC).min(in_dim);
+            for jp in 0..np {
+                let j0 = jp * NR;
+                let width = NR.min(out_dim - j0);
+                let panel = &pw.panels[jp * in_dim * NR..(jp + 1) * in_dim * NR];
+                let mut r = rc;
+                while r + MR <= rend {
+                    block4(isa, x, in_dim, panel, k0, k1, &mut out, out_dim, r, j0, width);
+                    r += MR;
+                }
+                while r < rend {
+                    block1(isa, x, in_dim, panel, k0, k1, &mut out, out_dim, r, j0, width);
+                    r += 1;
+                }
+            }
+            k0 = k1;
+        }
+        rc = rend;
+    }
+    apply_act(&mut out, act);
+    out
+}
+
+// The x86 micro-kernels store full NR-wide vectors, so they are only
+// entered when the panel is full width (`width == NR`) — a partial final
+// panel would store past the row end. Partial panels and non-x86 ISAs
+// take the portable register tile below, which handles any width.
+
+#[allow(clippy::too_many_arguments)]
+fn block4(
+    isa: Isa,
+    x: &[f32],
+    in_dim: usize,
+    panel: &[f32],
+    k0: usize,
+    k1: usize,
+    out: &mut [f32],
+    out_dim: usize,
+    r: usize,
+    j0: usize,
+    width: usize,
+) {
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa;
+    #[cfg(target_arch = "x86_64")]
+    if width == NR {
+        match isa {
+            Isa::Avx2 => unsafe {
+                micro4_avx2(
+                    x.as_ptr().add(r * in_dim),
+                    in_dim,
+                    panel.as_ptr(),
+                    k0,
+                    k1,
+                    out.as_mut_ptr().add(r * out_dim + j0),
+                    out_dim,
+                );
+                return;
+            },
+            Isa::Sse41 => unsafe {
+                micro4_sse(
+                    x.as_ptr().add(r * in_dim),
+                    in_dim,
+                    panel.as_ptr(),
+                    k0,
+                    k1,
+                    out.as_mut_ptr().add(r * out_dim + j0),
+                    out_dim,
+                );
+                return;
+            },
+            _ => {}
+        }
+    }
+    micro_portable::<MR>(x, in_dim, panel, k0, k1, out, out_dim, r, j0, width);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block1(
+    isa: Isa,
+    x: &[f32],
+    in_dim: usize,
+    panel: &[f32],
+    k0: usize,
+    k1: usize,
+    out: &mut [f32],
+    out_dim: usize,
+    r: usize,
+    j0: usize,
+    width: usize,
+) {
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa;
+    #[cfg(target_arch = "x86_64")]
+    if width == NR {
+        match isa {
+            Isa::Avx2 => unsafe {
+                micro1_avx2(
+                    x.as_ptr().add(r * in_dim),
+                    panel.as_ptr(),
+                    k0,
+                    k1,
+                    out.as_mut_ptr().add(r * out_dim + j0),
+                );
+                return;
+            },
+            Isa::Sse41 => unsafe {
+                micro1_sse(
+                    x.as_ptr().add(r * in_dim),
+                    panel.as_ptr(),
+                    k0,
+                    k1,
+                    out.as_mut_ptr().add(r * out_dim + j0),
+                );
+                return;
+            },
+            _ => {}
+        }
+    }
+    micro_portable::<1>(x, in_dim, panel, k0, k1, out, out_dim, r, j0, width);
+}
+
+/// Register-tile micro-kernel for any width ≤ NR — also the reference
+/// semantics the x86 micros replicate lane for lane.
+#[allow(clippy::too_many_arguments)]
+fn micro_portable<const M: usize>(
+    x: &[f32],
+    in_dim: usize,
+    panel: &[f32],
+    k0: usize,
+    k1: usize,
+    out: &mut [f32],
+    out_dim: usize,
+    r: usize,
+    j0: usize,
+    width: usize,
+) {
+    let mut acc = [[0.0f32; NR]; M];
+    for (i, a) in acc.iter_mut().enumerate() {
+        let base = (r + i) * out_dim + j0;
+        a[..width].copy_from_slice(&out[base..base + width]);
+    }
+    for k in k0..k1 {
+        let wrow = &panel[k * NR..(k + 1) * NR];
+        for (i, a) in acc.iter_mut().enumerate() {
+            let xv = x[(r + i) * in_dim + k];
+            for (slot, &wv) in a.iter_mut().zip(wrow) {
+                *slot += xv * wv;
+            }
+        }
+    }
+    for (i, a) in acc.iter().enumerate() {
+        let base = (r + i) * out_dim + j0;
+        out[base..base + width].copy_from_slice(&a[..width]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn micro4_avx2(
+    x: *const f32,
+    in_dim: usize,
+    panel: *const f32,
+    k0: usize,
+    k1: usize,
+    out: *mut f32,
+    out_dim: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut acc0 = _mm256_loadu_ps(out);
+    let mut acc1 = _mm256_loadu_ps(out.add(out_dim));
+    let mut acc2 = _mm256_loadu_ps(out.add(2 * out_dim));
+    let mut acc3 = _mm256_loadu_ps(out.add(3 * out_dim));
+    for k in k0..k1 {
+        let wv = _mm256_loadu_ps(panel.add(k * NR));
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*x.add(k)), wv));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*x.add(in_dim + k)), wv));
+        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*x.add(2 * in_dim + k)), wv));
+        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*x.add(3 * in_dim + k)), wv));
+    }
+    _mm256_storeu_ps(out, acc0);
+    _mm256_storeu_ps(out.add(out_dim), acc1);
+    _mm256_storeu_ps(out.add(2 * out_dim), acc2);
+    _mm256_storeu_ps(out.add(3 * out_dim), acc3);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn micro1_avx2(x: *const f32, panel: *const f32, k0: usize, k1: usize, out: *mut f32) {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_loadu_ps(out);
+    for k in k0..k1 {
+        let wv = _mm256_loadu_ps(panel.add(k * NR));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*x.add(k)), wv));
+    }
+    _mm256_storeu_ps(out, acc);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn micro4_sse(
+    x: *const f32,
+    in_dim: usize,
+    panel: *const f32,
+    k0: usize,
+    k1: usize,
+    out: *mut f32,
+    out_dim: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut lo0 = _mm_loadu_ps(out);
+    let mut hi0 = _mm_loadu_ps(out.add(4));
+    let mut lo1 = _mm_loadu_ps(out.add(out_dim));
+    let mut hi1 = _mm_loadu_ps(out.add(out_dim + 4));
+    let mut lo2 = _mm_loadu_ps(out.add(2 * out_dim));
+    let mut hi2 = _mm_loadu_ps(out.add(2 * out_dim + 4));
+    let mut lo3 = _mm_loadu_ps(out.add(3 * out_dim));
+    let mut hi3 = _mm_loadu_ps(out.add(3 * out_dim + 4));
+    for k in k0..k1 {
+        let wlo = _mm_loadu_ps(panel.add(k * NR));
+        let whi = _mm_loadu_ps(panel.add(k * NR + 4));
+        let x0 = _mm_set1_ps(*x.add(k));
+        let x1 = _mm_set1_ps(*x.add(in_dim + k));
+        let x2 = _mm_set1_ps(*x.add(2 * in_dim + k));
+        let x3 = _mm_set1_ps(*x.add(3 * in_dim + k));
+        lo0 = _mm_add_ps(lo0, _mm_mul_ps(x0, wlo));
+        hi0 = _mm_add_ps(hi0, _mm_mul_ps(x0, whi));
+        lo1 = _mm_add_ps(lo1, _mm_mul_ps(x1, wlo));
+        hi1 = _mm_add_ps(hi1, _mm_mul_ps(x1, whi));
+        lo2 = _mm_add_ps(lo2, _mm_mul_ps(x2, wlo));
+        hi2 = _mm_add_ps(hi2, _mm_mul_ps(x2, whi));
+        lo3 = _mm_add_ps(lo3, _mm_mul_ps(x3, wlo));
+        hi3 = _mm_add_ps(hi3, _mm_mul_ps(x3, whi));
+    }
+    _mm_storeu_ps(out, lo0);
+    _mm_storeu_ps(out.add(4), hi0);
+    _mm_storeu_ps(out.add(out_dim), lo1);
+    _mm_storeu_ps(out.add(out_dim + 4), hi1);
+    _mm_storeu_ps(out.add(2 * out_dim), lo2);
+    _mm_storeu_ps(out.add(2 * out_dim + 4), hi2);
+    _mm_storeu_ps(out.add(3 * out_dim), lo3);
+    _mm_storeu_ps(out.add(3 * out_dim + 4), hi3);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn micro1_sse(x: *const f32, panel: *const f32, k0: usize, k1: usize, out: *mut f32) {
+    use std::arch::x86_64::*;
+    let mut lo = _mm_loadu_ps(out);
+    let mut hi = _mm_loadu_ps(out.add(4));
+    for k in k0..k1 {
+        let xv = _mm_set1_ps(*x.add(k));
+        lo = _mm_add_ps(lo, _mm_mul_ps(xv, _mm_loadu_ps(panel.add(k * NR))));
+        hi = _mm_add_ps(hi, _mm_mul_ps(xv, _mm_loadu_ps(panel.add(k * NR + 4))));
+    }
+    _mm_storeu_ps(out, lo);
+    _mm_storeu_ps(out.add(4), hi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::kernels::dense;
+    use crate::runtime::native::simd;
+
+    fn fill(n: usize, mul: usize, md: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i * mul % md) as f32 - md as f32 / 2.0) * scale)
+            .collect()
+    }
+
+    #[test]
+    fn packed_gemm_bit_identical_to_scalar_dense() {
+        // shapes straddling every blocking edge: partial panels, partial
+        // MR blocks, k larger than KC, empty batch
+        for (rows, in_dim, out_dim) in [
+            (1usize, 3usize, 4usize),
+            (2, 3, 4),
+            (5, 7, 9),
+            (4, 300, 8),
+            (70, 13, 17),
+            (0, 5, 6),
+            (3, 1, 1),
+        ] {
+            let x = fill(rows * in_dim, 37, 19, 0.13);
+            let w = fill(in_dim * out_dim, 11, 23, 0.07);
+            let b = fill(out_dim, 7, 13, 0.31);
+            for act in [Act::Linear, Act::Tanh, Act::Relu] {
+                let want = dense(&x, rows, in_dim, &w, &b, out_dim, act);
+                let pw = PackedW::pack(&w, &b, in_dim, out_dim);
+                for isa in simd::available() {
+                    let got = dense_packed(isa, &x, rows, &pw, act);
+                    assert_eq!(got, want, "{isa:?} {rows}x{in_dim}x{out_dim} {act:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_goldens_via_dense_equivalence() {
+        // the actor trunk shape the rollout engine actually runs
+        let (rows, in_dim, out_dim) = (32usize, 20usize, 256usize);
+        let x = fill(rows * in_dim, 29, 31, 0.11);
+        let w = fill(in_dim * out_dim, 17, 41, 0.05);
+        let b = fill(out_dim, 5, 11, 0.2);
+        let want = dense(&x, rows, in_dim, &w, &b, out_dim, Act::Tanh);
+        let pw = PackedW::pack(&w, &b, in_dim, out_dim);
+        for isa in simd::available() {
+            assert_eq!(dense_packed(isa, &x, rows, &pw, Act::Tanh), want, "{isa:?}");
+        }
+    }
+}

@@ -8,6 +8,14 @@
 //! floor of Eq. (1). The golden fixtures in the tests below were generated
 //! from ref.py, so any drift between the Rust and Pallas kernels fails
 //! loudly here.
+//!
+//! Each kernel has a `*_with(isa, ..)` variant that routes its inner loop
+//! through [`super::simd`]; the plain names dispatch on the detected ISA
+//! ([`super::simd::active`]). Every ISA is bit-identical to the scalar
+//! reference — see the contract in `simd.rs` — so the goldens and the
+//! rollout chunking/thread-count invariance hold on all paths.
+
+use super::simd::{self, Isa};
 
 /// Activation fused into the dense epilogue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,9 +25,44 @@ pub enum Act {
     Relu,
 }
 
+/// Apply the fused activation in place. Kept scalar on every ISA: `tanh`
+/// is libm either way, and vectorized `max` has a −0.0 ambiguity the
+/// bit-identity contract won't buy.
+pub(crate) fn apply_act(y: &mut [f32], act: Act) {
+    match act {
+        Act::Linear => {}
+        Act::Tanh => {
+            for v in y.iter_mut() {
+                *v = v.tanh();
+            }
+        }
+        Act::Relu => {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
 /// `y = act(x @ w + b)` — x: (rows, in_dim) row-major, w: (in_dim,
-/// out_dim), b: (out_dim,). Mirrors `dense_ref`.
+/// out_dim), b: (out_dim,). Mirrors `dense_ref`. Dispatches on the
+/// detected ISA.
 pub fn dense(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+) -> Vec<f32> {
+    dense_with(simd::active(), x, rows, in_dim, w, b, out_dim, act)
+}
+
+/// [`dense`] on an explicit ISA — bit-identical across all of them.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_with(
+    isa: Isa,
     x: &[f32],
     rows: usize,
     in_dim: usize,
@@ -40,9 +83,7 @@ pub fn dense(
         let yr = &mut out[..out_dim];
         for (k, &xv) in x.iter().enumerate() {
             let wr = &w[k * out_dim..(k + 1) * out_dim];
-            for (y, &wv) in yr.iter_mut().zip(wr) {
-                *y += xv * wv;
-            }
+            simd::axpy(isa, yr, xv, wr);
         }
     } else {
         // batched: k-outer so each W row is streamed ONCE for the whole
@@ -55,52 +96,87 @@ pub fn dense(
             for r in 0..rows {
                 let xv = x[r * in_dim + k];
                 let yr = &mut out[r * out_dim..(r + 1) * out_dim];
-                for (y, &wv) in yr.iter_mut().zip(wr) {
-                    *y += xv * wv;
-                }
+                simd::axpy(isa, yr, xv, wr);
             }
         }
     }
-    match act {
-        Act::Linear => {}
-        Act::Tanh => {
-            for y in out.iter_mut() {
-                *y = y.tanh();
-            }
-        }
-        Act::Relu => {
-            for y in out.iter_mut() {
-                *y = y.max(0.0);
-            }
-        }
-    }
+    apply_act(&mut out, act);
     out
 }
 
 /// `dX = dY @ Wᵀ` — dy: (rows, out_dim), w: (in_dim, out_dim) →
 /// (rows, in_dim). The backward-data matmul of the dense kernel.
+/// Dispatches on the detected ISA.
 pub fn matmul_bt(dy: &[f32], rows: usize, out_dim: usize, w: &[f32], in_dim: usize) -> Vec<f32> {
+    matmul_bt_with(simd::active(), dy, rows, out_dim, w, in_dim)
+}
+
+/// [`matmul_bt`] on an explicit ISA. `Isa::Scalar` keeps the original
+/// per-element dot (the reference semantics); every other ISA transposes
+/// W once and runs a blocked o-outer pass — the per-element contraction
+/// stays o-ascending from 0.0, so the output is bit-identical while W is
+/// walked contiguously instead of column-major per output element.
+pub fn matmul_bt_with(
+    isa: Isa,
+    dy: &[f32],
+    rows: usize,
+    out_dim: usize,
+    w: &[f32],
+    in_dim: usize,
+) -> Vec<f32> {
     debug_assert_eq!(dy.len(), rows * out_dim);
     debug_assert_eq!(w.len(), in_dim * out_dim);
     let mut dx = vec![0.0f32; rows * in_dim];
-    for r in 0..rows {
-        let dyr = &dy[r * out_dim..(r + 1) * out_dim];
-        let dxr = &mut dx[r * in_dim..(r + 1) * in_dim];
-        for (k, slot) in dxr.iter_mut().enumerate() {
-            let wr = &w[k * out_dim..(k + 1) * out_dim];
-            let mut acc = 0.0f32;
-            for (&d, &wv) in dyr.iter().zip(wr) {
-                acc += d * wv;
+    if isa == Isa::Scalar {
+        for r in 0..rows {
+            let dyr = &dy[r * out_dim..(r + 1) * out_dim];
+            let dxr = &mut dx[r * in_dim..(r + 1) * in_dim];
+            for (k, slot) in dxr.iter_mut().enumerate() {
+                let wr = &w[k * out_dim..(k + 1) * out_dim];
+                let mut acc = 0.0f32;
+                for (&d, &wv) in dyr.iter().zip(wr) {
+                    acc += d * wv;
+                }
+                *slot = acc;
             }
-            *slot = acc;
         }
+        return dx;
+    }
+    // one transposed copy of W: wt[o][k] = w[k][o], row-contiguous in k
+    let mut wt = vec![0.0f32; out_dim * in_dim];
+    for k in 0..in_dim {
+        let wr = &w[k * out_dim..(k + 1) * out_dim];
+        for (o, &wv) in wr.iter().enumerate() {
+            wt[o * in_dim + k] = wv;
+        }
+    }
+    // row blocks keep the dx slab cache-hot while each wt row streams once
+    const RB: usize = 32;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = (r0 + RB).min(rows);
+        for o in 0..out_dim {
+            let wrow = &wt[o * in_dim..(o + 1) * in_dim];
+            for r in r0..r1 {
+                let d = dy[r * out_dim + o];
+                simd::axpy(isa, &mut dx[r * in_dim..(r + 1) * in_dim], d, wrow);
+            }
+        }
+        r0 = r1;
     }
     dx
 }
 
 /// Row-wise softmax in place (max-subtracted, exactly `_softmax` in
-/// python/compile/actor_critic.py).
+/// python/compile/actor_critic.py). Dispatches on the detected ISA.
 pub fn softmax_rows(z: &mut [f32], rows: usize, cols: usize) {
+    softmax_rows_with(simd::active(), z, rows, cols)
+}
+
+/// [`softmax_rows`] on an explicit ISA — the max/exp/sum sweep stays
+/// scalar (libm exp), only the normalizing division vectorizes (one IEEE
+/// division per lane, bit-identical).
+pub fn softmax_rows_with(isa: Isa, z: &mut [f32], rows: usize, cols: usize) {
     debug_assert_eq!(z.len(), rows * cols);
     for r in 0..rows {
         let row = &mut z[r * cols..(r + 1) * cols];
@@ -110,16 +186,31 @@ pub fn softmax_rows(z: &mut [f32], rows: usize, cols: usize) {
             *v = (*v - max).exp();
             sum += *v;
         }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
+        simd::div_scalar(isa, row, sum);
     }
 }
 
 /// 1x1 convolution == per-pixel channel mix (conv1x1_ref): x (N, C, H, W),
 /// w (C, C'), b (C',) → (N, C', H, W). The paper's Sec. 2.2
-/// channel-reduction encoder/decoder.
+/// channel-reduction encoder/decoder. Dispatches on the detected ISA.
+#[allow(clippy::too_many_arguments)]
 pub fn conv1x1(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wmat: &[f32],
+    b: &[f32],
+    c_out: usize,
+) -> Vec<f32> {
+    conv1x1_with(simd::active(), x, n, c_in, h, w, wmat, b, c_out)
+}
+
+/// [`conv1x1`] on an explicit ISA — bit-identical across all of them.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1x1_with(
+    isa: Isa,
     x: &[f32],
     n: usize,
     c_in: usize,
@@ -141,9 +232,7 @@ pub fn conv1x1(
             for ci in 0..c_in {
                 let wv = wmat[ci * c_out + co];
                 let src = &x[(im * c_in + ci) * hw..(im * c_in + ci + 1) * hw];
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += wv * s;
-                }
+                simd::axpy(isa, dst, wv, src);
             }
         }
     }
@@ -151,8 +240,9 @@ pub fn conv1x1(
 }
 
 /// Round half to even, matching `jnp.round` (IEEE 754 roundTiesToEven)
-/// rather than Rust's round-half-away-from-zero.
-fn round_ties_even(v: f32) -> f32 {
+/// rather than Rust's round-half-away-from-zero. Shared by [`quantize`],
+/// the wire-format `compress::quant::Quantizer`, and the int8 packers.
+pub fn round_ties_even(v: f32) -> f32 {
     let r = v.round();
     if (r - v).abs() == 0.5 {
         let t = v.trunc();
@@ -312,6 +402,23 @@ mod tests {
     }
 
     #[test]
+    fn dense_goldens_hold_on_every_isa() {
+        for isa in simd::available() {
+            for (act, golden) in [
+                (Act::Linear, Y_LINEAR),
+                (Act::Tanh, Y_TANH),
+                (Act::Relu, Y_RELU),
+            ] {
+                let y = dense_with(isa, X, 2, 3, W, B, 4, act);
+                assert_close(&y, golden, 1e-5, 1e-5).unwrap();
+                // and bitwise against the scalar reference path
+                let scalar = dense_with(Isa::Scalar, X, 2, 3, W, B, 4, act);
+                assert_eq!(y, scalar, "{isa:?} {act:?}");
+            }
+        }
+    }
+
+    #[test]
     fn dense_batched_path_is_bit_identical_to_rowwise() {
         // the k-outer batched path must agree bitwise with per-row
         // matrix–vector calls (rollout correctness depends on this)
@@ -325,12 +432,18 @@ mod tests {
             .map(|i| ((i * 11 % 23) as f32 - 11.0) * 0.07)
             .collect();
         let b: Vec<f32> = (0..out_dim).map(|i| i as f32 * 0.31 - 0.5).collect();
-        for act in [Act::Linear, Act::Tanh, Act::Relu] {
-            let batched = dense(&x, rows, in_dim, &w, &b, out_dim, act);
-            for r in 0..rows {
-                let row = &x[r * in_dim..(r + 1) * in_dim];
-                let single = dense(row, 1, in_dim, &w, &b, out_dim, act);
-                assert_eq!(&batched[r * out_dim..(r + 1) * out_dim], &single[..], "row {r}");
+        for isa in simd::available() {
+            for act in [Act::Linear, Act::Tanh, Act::Relu] {
+                let batched = dense_with(isa, &x, rows, in_dim, &w, &b, out_dim, act);
+                for r in 0..rows {
+                    let row = &x[r * in_dim..(r + 1) * in_dim];
+                    let single = dense_with(isa, row, 1, in_dim, &w, &b, out_dim, act);
+                    assert_eq!(
+                        &batched[r * out_dim..(r + 1) * out_dim],
+                        &single[..],
+                        "{isa:?} row {r}"
+                    );
+                }
             }
         }
     }
@@ -339,6 +452,10 @@ mod tests {
     fn conv1x1_matches_ref_golden() {
         let y = conv1x1(XC, 1, 3, 2, 2, WC, BC, 2);
         assert_close(&y, YC, 1e-5, 1e-5).unwrap();
+        for isa in simd::available() {
+            let yi = conv1x1_with(isa, XC, 1, 3, 2, 2, WC, BC, 2);
+            assert_eq!(yi, y, "{isa:?}");
+        }
     }
 
     #[test]
@@ -354,9 +471,11 @@ mod tests {
     #[test]
     fn quantize_matches_wire_quantizer() {
         // the native kernel and the wire-format Quantizer (compress/quant)
-        // implement the same Eq. (1)/(2) and must agree elementwise on
-        // non-tie inputs
-        let xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+        // implement the same Eq. (1)/(2) and must agree elementwise —
+        // including on exact half-boundary ties now that both round
+        // ties-to-even
+        let mut xs: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 2.0).collect();
+        xs.extend_from_slice(&[-0.5, 0.5, 1.5, -1.7, 1.9]);
         let (lo, hi) = (-1.7f32, 1.9f32);
         for bits in [3usize, 5, 8, 11] {
             let q = crate::compress::quant::Quantizer::new(bits as u32).unwrap();
@@ -379,6 +498,9 @@ mod tests {
         assert_eq!(round_ties_even(1.5), 2.0);
         assert_eq!(round_ties_even(2.4), 2.0);
         assert_eq!(round_ties_even(2.6), 3.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
     }
 
     #[test]
@@ -388,6 +510,32 @@ mod tests {
         let dy = [10.0f32, 100.0];
         let dx = matmul_bt(&dy, 1, 2, &w, 3);
         assert_eq!(dx, vec![210.0, 430.0, 650.0]);
+        for isa in simd::available() {
+            assert_eq!(
+                matmul_bt_with(isa, &dy, 1, 2, &w, 3),
+                vec![210.0, 430.0, 650.0],
+                "{isa:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_bt_bit_identical_to_scalar() {
+        // the blocked o-outer pass must reproduce the per-element dot
+        // bitwise on shapes straddling the row-block edge
+        for (rows, out_dim, in_dim) in [(1usize, 4usize, 7usize), (5, 9, 3), (70, 13, 17)] {
+            let dy: Vec<f32> = (0..rows * out_dim)
+                .map(|i| ((i * 29 % 31) as f32 - 15.0) * 0.11)
+                .collect();
+            let w: Vec<f32> = (0..in_dim * out_dim)
+                .map(|i| ((i * 17 % 41) as f32 - 20.0) * 0.05)
+                .collect();
+            let want = matmul_bt_with(Isa::Scalar, &dy, rows, out_dim, &w, in_dim);
+            for isa in simd::available() {
+                let got = matmul_bt_with(isa, &dy, rows, out_dim, &w, in_dim);
+                assert_eq!(got, want, "{isa:?} {rows}x{out_dim}x{in_dim}");
+            }
+        }
     }
 
     #[test]
@@ -399,5 +547,11 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-6);
         }
         assert!(z[2] > z[1] && z[1] > z[0]);
+        // dispatched paths bit-identical to scalar
+        for isa in simd::available() {
+            let mut zi = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+            softmax_rows_with(isa, &mut zi, 2, 3);
+            assert_eq!(zi, z, "{isa:?}");
+        }
     }
 }

@@ -13,7 +13,10 @@
 //! interpreted natively; they require the PJRT backend (`--features
 //! xla-pjrt` plus the real `xla` crate).
 
+pub mod gemm;
 pub mod kernels;
+pub mod quant8;
+pub mod simd;
 
 mod ae;
 mod rl;
@@ -24,7 +27,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifacts::ArtifactMeta;
-use super::backend::{Backend, ExecStats, Executable};
+use super::backend::{Backend, ExecStats, Executable, Precision};
 use super::tensor::TensorView;
 
 use ae::AeProgram;
@@ -32,11 +35,25 @@ use rl::{ActorProgram, CriticProgram};
 
 /// The pure-Rust interpreter backend.
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    precision: Precision,
+}
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::default()
+    }
+
+    /// A backend whose *inference* executables (actor/critic forward, AE
+    /// encode/decode) run at the given precision. Training programs
+    /// (`*_update_*`) always execute f32 — the PPO/Adam math and the
+    /// bit-exact checkpoint resume depend on it.
+    pub fn with_precision(precision: Precision) -> NativeBackend {
+        NativeBackend { precision }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 }
 
@@ -46,7 +63,7 @@ impl Backend for NativeBackend {
     }
 
     fn load(&self, meta: &ArtifactMeta) -> Result<Arc<dyn Executable>> {
-        let program = Program::from_meta(meta)
+        let program = Program::from_meta(meta, self.precision)
             .with_context(|| format!("building native program for '{}'", meta.name))?;
         Ok(Arc::new(NativeExecutable {
             name: meta.name.clone(),
@@ -67,25 +84,32 @@ enum Program {
 }
 
 impl Program {
-    fn from_meta(meta: &ArtifactMeta) -> Result<Program> {
+    fn from_meta(meta: &ArtifactMeta, precision: Precision) -> Result<Program> {
         let name = meta.name.as_str();
         if name.starts_with("actor_fwd_") {
-            return Ok(Program::ActorFwd(ActorProgram::from_meta(meta)?));
+            return Ok(Program::ActorFwd(ActorProgram::from_meta(meta, precision)?));
         }
         if name.starts_with("actor_update_") {
-            return Ok(Program::ActorUpdate(ActorProgram::from_meta(meta)?));
+            // updates always run f32 (bit-exact training/resume contract)
+            return Ok(Program::ActorUpdate(ActorProgram::from_meta(
+                meta,
+                Precision::F32,
+            )?));
         }
         if name.starts_with("critic_fwd_") {
-            return Ok(Program::CriticFwd(CriticProgram::from_meta(meta)?));
+            return Ok(Program::CriticFwd(CriticProgram::from_meta(meta, precision)?));
         }
         if name.starts_with("critic_update_") {
-            return Ok(Program::CriticUpdate(CriticProgram::from_meta(meta)?));
+            return Ok(Program::CriticUpdate(CriticProgram::from_meta(
+                meta,
+                Precision::F32,
+            )?));
         }
         if name.contains("_ae_enc_p") {
-            return Ok(Program::AeEncode(AeProgram::from_meta(meta)?));
+            return Ok(Program::AeEncode(AeProgram::from_meta(meta, precision)?));
         }
         if name.contains("_ae_dec_p") {
-            return Ok(Program::AeDecode(AeProgram::from_meta(meta)?));
+            return Ok(Program::AeDecode(AeProgram::from_meta(meta, precision)?));
         }
         bail!(
             "artifact '{name}' has no native program (CNN backbone segments need the PJRT \
@@ -131,6 +155,30 @@ impl Executable for NativeExecutable {
 
     fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
+    }
+
+    fn warm(&self, input_idx: usize, input: &Arc<TensorView>) -> Result<()> {
+        // only the forward programs keep warmed per-params state (packed
+        // GEMM panels / int8 weights); everything else ignores the hint
+        if input_idx != 0 {
+            return Ok(());
+        }
+        match &self.program {
+            Program::ActorFwd(p) => p.warm(input),
+            Program::CriticFwd(p) => p.warm(input),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Do two tensor handles share the same f32 buffer? Used to key warmed
+/// per-parameter state: `ArtifactStore` memoizes loads, so one executable
+/// can serve several nets — each keeps its own cached params tensor alive,
+/// making the buffer address a stable identity.
+pub(crate) fn same_f32_buffer(a: &TensorView, b: &TensorView) -> bool {
+    match (a.f32s(), b.f32s()) {
+        (Ok(x), Ok(y)) => x.as_ptr() == y.as_ptr() && x.len() == y.len(),
+        _ => false,
     }
 }
 

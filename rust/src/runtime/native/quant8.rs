@@ -1,0 +1,429 @@
+//! Int8 inference kernels: `dense_q8` / `conv1x1_q8`.
+//!
+//! Scheme (per DESIGN.md §Native-Kernels):
+//!
+//! * **Weights** — per-output-channel symmetric: `s_w = amax/127`, `w_q =
+//!   round_ties_even(w / s_w) ∈ [−127, 127]` (i8), packed k-contiguous
+//!   per output column and zero-padded to a multiple of 16 so the SIMD
+//!   dot never needs a tail mask.
+//! * **Activations** — per-row (dense) / per-image (conv) asymmetric u8
+//!   with the same affine map as the paper's Eq. (1) at 8 bits: `lo =
+//!   min(x)`, `s_a = span/255`, `x_q = round((x − lo)·255/span)`. The
+//!   calibration here is the raw min/max of the tensor being quantized
+//!   (not `compress::quant::calibrate`'s (0,1) degenerate remap — a
+//!   constant activation row must reconstruct exactly, so the degenerate
+//!   span collapses to the 1e-12 floor instead).
+//! * **Accumulate** — i32 over `u8 × i8` products ([`super::simd::dot_q8`]),
+//!   exact on every ISA.
+//! * **Requantize** — f32 epilogue from the algebraic identity
+//!   `Σ w x ≈ Σ (s_w w_q)(lo + s_a x_q) = s_w s_a·acc + s_w lo·Σw_q + b`,
+//!   using the precomputed per-column code sum `Σw_q`.
+//!
+//! There is no bit-identity contract for int8; instead
+//! [`dense_q8_error_bound`] / [`conv1x1_q8_error_bound`] give an analytic
+//! per-element bound on `|y_q8 − y_f32|` from the calibration spans, and
+//! proptests hold the kernels to it over randomized ranges.
+
+use super::kernels::{apply_act, round_ties_even, Act};
+use super::simd::{self, Isa};
+
+/// Span floor for degenerate (constant) activation tensors — mirrors the
+/// Eq. (1) 1e-12 floor in `kernels::quantize`.
+const SPAN_FLOOR: f32 = 1e-12;
+
+/// Raw min/max of a tensor, skipping NaN; non-finite collapses to (0, 0).
+pub fn calib_range(x: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return (0.0, 0.0);
+    }
+    (lo, hi)
+}
+
+/// A dense layer quantized for int8 inference — built once per parameter
+/// version and cached alongside the f32 [`super::gemm::PackedW`].
+#[derive(Debug, Clone)]
+pub struct QuantDense {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    k_pad: usize,
+    /// `(out_dim, k_pad)` — transposed, k-contiguous per output column.
+    wq_t: Vec<i8>,
+    /// Per-output-channel weight scale `s_w`.
+    w_scale: Vec<f32>,
+    /// Per-column `Σ_k w_q` for the asymmetric-activation epilogue term.
+    col_sum: Vec<i32>,
+    bias: Vec<f32>,
+}
+
+impl QuantDense {
+    /// Quantize `w` (`(in_dim, out_dim)` row-major, the
+    /// [`super::kernels::dense`] layout).
+    pub fn pack(w: &[f32], bias: &[f32], in_dim: usize, out_dim: usize) -> QuantDense {
+        debug_assert_eq!(w.len(), in_dim * out_dim);
+        debug_assert_eq!(bias.len(), out_dim);
+        let k_pad = in_dim.div_ceil(16) * 16;
+        let mut wq_t = vec![0i8; out_dim * k_pad];
+        let mut w_scale = vec![1.0f32; out_dim];
+        let mut col_sum = vec![0i32; out_dim];
+        for j in 0..out_dim {
+            let mut amax = 0.0f32;
+            for k in 0..in_dim {
+                let a = w[k * out_dim + j].abs();
+                if a > amax {
+                    amax = a;
+                }
+            }
+            let sw = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            w_scale[j] = sw;
+            let col = &mut wq_t[j * k_pad..j * k_pad + in_dim];
+            let mut sum = 0i32;
+            for (k, q) in col.iter_mut().enumerate() {
+                let code = round_ties_even(w[k * out_dim + j] / sw).clamp(-127.0, 127.0) as i8;
+                *q = code;
+                sum += code as i32;
+            }
+            col_sum[j] = sum;
+        }
+        QuantDense {
+            in_dim,
+            out_dim,
+            k_pad,
+            wq_t,
+            w_scale,
+            col_sum,
+            bias: bias.to_vec(),
+        }
+    }
+
+    /// `y ≈ act(x @ w + b)` with u8 activations and i32 accumulation.
+    pub fn forward(&self, isa: Isa, x: &[f32], rows: usize, act: Act) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * self.in_dim);
+        let mut out = vec![0.0f32; rows * self.out_dim];
+        let mut xq = vec![0u8; self.k_pad]; // tail stays zero (pads match)
+        for r in 0..rows {
+            let xr = &x[r * self.in_dim..(r + 1) * self.in_dim];
+            let (lo, hi) = calib_range(xr);
+            let span = (hi - lo).max(SPAN_FLOOR);
+            let s_a = span / 255.0;
+            let inv_step = 255.0 / span;
+            simd::quantize_row(isa, xr, lo, inv_step, &mut xq[..self.in_dim]);
+            let yr = &mut out[r * self.out_dim..(r + 1) * self.out_dim];
+            for (j, y) in yr.iter_mut().enumerate() {
+                let col = &self.wq_t[j * self.k_pad..(j + 1) * self.k_pad];
+                let acc = simd::dot_q8(isa, &xq, col);
+                let sw = self.w_scale[j];
+                *y = sw * s_a * acc as f32 + sw * lo * self.col_sum[j] as f32 + self.bias[j];
+            }
+        }
+        apply_act(&mut out, act);
+        out
+    }
+}
+
+/// One-shot int8 dense — packs then forwards on the active ISA. The hot
+/// paths keep a [`QuantDense`] cached instead.
+pub fn dense_q8(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+) -> Vec<f32> {
+    QuantDense::pack(w, b, in_dim, out_dim).forward(simd::active(), x, rows, act)
+}
+
+/// A 1×1 convolution quantized for int8 inference.
+#[derive(Debug, Clone)]
+pub struct QuantConv {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// `(c_in, c_out)` i8 codes — same ci-major layout as the f32 `wmat`.
+    wq: Vec<i8>,
+    w_scale: Vec<f32>,
+    col_sum: Vec<i32>,
+    bias: Vec<f32>,
+}
+
+impl QuantConv {
+    /// Quantize `wmat` (`(c_in, c_out)`, the [`super::kernels::conv1x1`]
+    /// layout) per output channel.
+    pub fn pack(wmat: &[f32], bias: &[f32], c_in: usize, c_out: usize) -> QuantConv {
+        debug_assert_eq!(wmat.len(), c_in * c_out);
+        debug_assert_eq!(bias.len(), c_out);
+        let mut wq = vec![0i8; c_in * c_out];
+        let mut w_scale = vec![1.0f32; c_out];
+        let mut col_sum = vec![0i32; c_out];
+        for co in 0..c_out {
+            let mut amax = 0.0f32;
+            for ci in 0..c_in {
+                let a = wmat[ci * c_out + co].abs();
+                if a > amax {
+                    amax = a;
+                }
+            }
+            let sw = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            w_scale[co] = sw;
+            let mut sum = 0i32;
+            for ci in 0..c_in {
+                let code =
+                    round_ties_even(wmat[ci * c_out + co] / sw).clamp(-127.0, 127.0) as i8;
+                wq[ci * c_out + co] = code;
+                sum += code as i32;
+            }
+            col_sum[co] = sum;
+        }
+        QuantConv {
+            c_in,
+            c_out,
+            wq,
+            w_scale,
+            col_sum,
+            bias: bias.to_vec(),
+        }
+    }
+
+    /// `y ≈ conv1x1(x, w, b)` — activations calibrated per image over the
+    /// whole feature map (matching the per-tensor AE calibration).
+    pub fn forward(&self, isa: Isa, x: &[f32], n: usize, h: usize, w: usize) -> Vec<f32> {
+        let hw = h * w;
+        debug_assert_eq!(x.len(), n * self.c_in * hw);
+        let mut out = vec![0.0f32; n * self.c_out * hw];
+        let mut xq = vec![0u8; self.c_in * hw];
+        let mut acc = vec![0i32; hw];
+        for im in 0..n {
+            let img = &x[im * self.c_in * hw..(im + 1) * self.c_in * hw];
+            let (lo, hi) = calib_range(img);
+            let span = (hi - lo).max(SPAN_FLOOR);
+            let s_a = span / 255.0;
+            let inv_step = 255.0 / span;
+            simd::quantize_row(isa, img, lo, inv_step, &mut xq);
+            for co in 0..self.c_out {
+                acc.fill(0);
+                for ci in 0..self.c_in {
+                    let wv = self.wq[ci * self.c_out + co] as i32;
+                    if wv == 0 {
+                        continue;
+                    }
+                    simd::accum_u8(isa, &mut acc, wv, &xq[ci * hw..(ci + 1) * hw]);
+                }
+                let sw = self.w_scale[co];
+                let base = sw * lo * self.col_sum[co] as f32 + self.bias[co];
+                let dst = &mut out[(im * self.c_out + co) * hw..(im * self.c_out + co + 1) * hw];
+                for (d, &a) in dst.iter_mut().zip(&acc) {
+                    *d = sw * s_a * a as f32 + base;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One-shot int8 conv1x1 on the active ISA.
+pub fn conv1x1_q8(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wmat: &[f32],
+    b: &[f32],
+    c_out: usize,
+) -> Vec<f32> {
+    QuantConv::pack(wmat, b, c_in, c_out).forward(simd::active(), x, n, h, w)
+}
+
+// ------------------------------------------------------- error bounds
+
+/// Analytic per-element bound on `|dense_q8 − dense_f32|` (pre- or
+/// post-activation — tanh and relu are 1-Lipschitz, so the bound
+/// survives the epilogue).
+///
+/// Derivation: with weight step `ε_w = s_w/2` and activation step
+/// `ε_x = s_a/2` (both half-ULP of their grids, activation inflated
+/// slightly for the f32 rounding of the quantize map itself),
+/// `|ŵ x̂ − w x| ≤ (|w| + ε_w)·ε_x + |x|·ε_w` per product; summing over k
+/// and adding a relative-slack term for the f32 rounding of both the
+/// reference dot and the requantize epilogue gives the bound.
+pub fn dense_q8_error_bound(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    out_dim: usize,
+) -> Vec<f32> {
+    let mut bound = vec![0.0f32; rows * out_dim];
+    // per-column weight scales, as QuantDense::pack derives them
+    let mut eps_w = vec![0.0f32; out_dim];
+    for j in 0..out_dim {
+        let mut amax = 0.0f32;
+        for k in 0..in_dim {
+            let a = w[k * out_dim + j].abs();
+            if a > amax {
+                amax = a;
+            }
+        }
+        let sw = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        eps_w[j] = 0.5 * sw;
+    }
+    for r in 0..rows {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let (lo, hi) = calib_range(xr);
+        let span = (hi - lo).max(SPAN_FLOOR);
+        let eps_x = 0.5 * span / 255.0 * 1.001 + 1e-7;
+        for j in 0..out_dim {
+            let mut s = 0.0f32;
+            let mut sabs = 0.0f32;
+            for (k, &xv) in xr.iter().enumerate() {
+                let wv = w[k * out_dim + j];
+                s += (wv.abs() + eps_w[j]) * eps_x + xv.abs() * eps_w[j];
+                sabs += (wv * xv).abs();
+            }
+            bound[r * out_dim + j] = s * 1.001 + 1e-4 * (1.0 + sabs);
+        }
+    }
+    bound
+}
+
+/// Analytic per-element bound on `|conv1x1_q8 − conv1x1_f32|` — same
+/// derivation with per-image calibration.
+pub fn conv1x1_q8_error_bound(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w_dim: usize,
+    wmat: &[f32],
+    c_out: usize,
+) -> Vec<f32> {
+    let hw = h * w_dim;
+    let mut bound = vec![0.0f32; n * c_out * hw];
+    let mut eps_w = vec![0.0f32; c_out];
+    for co in 0..c_out {
+        let mut amax = 0.0f32;
+        for ci in 0..c_in {
+            let a = wmat[ci * c_out + co].abs();
+            if a > amax {
+                amax = a;
+            }
+        }
+        let sw = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        eps_w[co] = 0.5 * sw;
+    }
+    for im in 0..n {
+        let img = &x[im * c_in * hw..(im + 1) * c_in * hw];
+        let (lo, hi) = calib_range(img);
+        let span = (hi - lo).max(SPAN_FLOOR);
+        let eps_x = 0.5 * span / 255.0 * 1.001 + 1e-7;
+        for co in 0..c_out {
+            for p in 0..hw {
+                let mut s = 0.0f32;
+                let mut sabs = 0.0f32;
+                for ci in 0..c_in {
+                    let wv = wmat[ci * c_out + co];
+                    let xv = img[ci * hw + p];
+                    s += (wv.abs() + eps_w[co]) * eps_x + xv.abs() * eps_w[co];
+                    sabs += (wv * xv).abs();
+                }
+                bound[(im * c_out + co) * hw + p] = s * 1.001 + 1e-4 * (1.0 + sabs);
+            }
+        }
+    }
+    bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::kernels::{conv1x1, dense};
+
+    fn fill(n: usize, mul: usize, md: usize, scale: f32, off: f32) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i * mul % md) as f32 - md as f32 / 2.0) * scale + off)
+            .collect()
+    }
+
+    #[test]
+    fn dense_q8_within_analytic_bound_on_every_isa() {
+        for (rows, in_dim, out_dim) in [(1usize, 3usize, 4usize), (4, 20, 13), (8, 256, 128)] {
+            let x = fill(rows * in_dim, 37, 61, 0.21, 0.4);
+            let w = fill(in_dim * out_dim, 11, 47, 0.06, 0.0);
+            let b = fill(out_dim, 7, 13, 0.31, 0.0);
+            let bound = dense_q8_error_bound(&x, rows, in_dim, &w, out_dim);
+            for act in [Act::Linear, Act::Tanh] {
+                let want = dense(&x, rows, in_dim, &w, &b, out_dim, act);
+                let qd = QuantDense::pack(&w, &b, in_dim, out_dim);
+                for isa in simd::available() {
+                    let got = qd.forward(isa, &x, rows, act);
+                    for (i, ((&g, &f), &eps)) in
+                        got.iter().zip(&want).zip(&bound).enumerate()
+                    {
+                        assert!(
+                            (g - f).abs() <= eps,
+                            "{isa:?} {act:?} idx {i}: |{g} - {f}| > {eps}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_q8_constant_row_reconstructs_exactly_enough() {
+        // a constant activation row has zero-span calibration; the span
+        // floor must keep it near-exact (weight quantization error only)
+        let (rows, in_dim, out_dim) = (2usize, 6usize, 3usize);
+        let x = vec![0.75f32; rows * in_dim];
+        let w = fill(in_dim * out_dim, 13, 29, 0.1, 0.0);
+        let b = vec![0.0f32; out_dim];
+        let want = dense(&x, rows, in_dim, &w, &b, out_dim, Act::Linear);
+        let bound = dense_q8_error_bound(&x, rows, in_dim, &w, out_dim);
+        let got = dense_q8(&x, rows, in_dim, &w, &b, out_dim, Act::Linear);
+        for ((&g, &f), &eps) in got.iter().zip(&want).zip(&bound) {
+            assert!((g - f).abs() <= eps, "|{g} - {f}| > {eps}");
+        }
+    }
+
+    #[test]
+    fn conv1x1_q8_within_analytic_bound_on_every_isa() {
+        let (n, c_in, h, wd, c_out) = (2usize, 3usize, 4usize, 5usize, 2usize);
+        let x = fill(n * c_in * h * wd, 23, 53, 0.17, -0.2);
+        let wmat = fill(c_in * c_out, 9, 17, 0.2, 0.0);
+        let b = fill(c_out, 3, 7, 0.25, 0.0);
+        let want = conv1x1(&x, n, c_in, h, wd, &wmat, &b, c_out);
+        let bound = conv1x1_q8_error_bound(&x, n, c_in, h, wd, &wmat, c_out);
+        let qc = QuantConv::pack(&wmat, &b, c_in, c_out);
+        for isa in simd::available() {
+            let got = qc.forward(isa, &x, n, h, wd);
+            for (i, ((&g, &f), &eps)) in got.iter().zip(&want).zip(&bound).enumerate() {
+                assert!((g - f).abs() <= eps, "{isa:?} idx {i}: |{g} - {f}| > {eps}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_weights_round_trip_within_half_step() {
+        let (in_dim, out_dim) = (10usize, 6usize);
+        let w = fill(in_dim * out_dim, 19, 37, 0.11, 0.0);
+        let b = vec![0.0f32; out_dim];
+        let qd = QuantDense::pack(&w, &b, in_dim, out_dim);
+        for j in 0..out_dim {
+            let sw = qd.w_scale[j];
+            for k in 0..in_dim {
+                let back = qd.wq_t[j * qd.k_pad + k] as f32 * sw;
+                assert!((back - w[k * out_dim + j]).abs() <= 0.5 * sw + 1e-6);
+            }
+        }
+    }
+}

@@ -9,11 +9,18 @@
 //! §Kernel-Parity), so the native and PJRT backends train identically up
 //! to float rounding.
 
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
 use anyhow::{anyhow, bail, Result};
 
+use super::gemm::{dense_packed, PackedW};
 use super::kernels::{dense, matmul_bt, softmax_rows, Act};
-use super::{expect_inputs, f32_in, i32_in, scalar_in};
+use super::quant8::QuantDense;
+use super::simd::{self, Isa};
+use super::{expect_inputs, f32_in, i32_in, same_f32_buffer, scalar_in};
 use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::backend::Precision;
 use crate::runtime::spec::{spec_entry, spec_size, SpecEntry};
 use crate::runtime::tensor::TensorView;
 
@@ -47,6 +54,93 @@ fn slot(spec: &[SpecEntry], name: &str) -> Result<(Slot, Vec<usize>)> {
         },
         e.shape.clone(),
     ))
+}
+
+/// A weight slot that must be a 2-D matrix — resolves via
+/// [`SpecEntry::dims2`] so layout-shape validation lives with the spec.
+fn slot2(spec: &[SpecEntry], name: &str) -> Result<(Slot, (usize, usize))> {
+    let e = spec_entry(spec, name)?;
+    let dims = e
+        .dims2()
+        .ok_or_else(|| anyhow!("parameter '{name}' is not a 2-D matrix (shape {:?})", e.shape))?;
+    Ok((
+        Slot {
+            off: e.offset,
+            len: e.count,
+        },
+        dims,
+    ))
+}
+
+// ------------------------------------------------- warmed per-params prep
+
+/// One dense layer's precomputed forward state: packed GEMM panels (f32)
+/// or quantized int8 weights, per the executable's [`Precision`].
+enum PrepDense {
+    F32(PackedW),
+    Q8(QuantDense),
+}
+
+impl PrepDense {
+    fn build(precision: Precision, w: &[f32], b: &[f32], in_dim: usize, out_dim: usize) -> Self {
+        match precision {
+            Precision::F32 => PrepDense::F32(PackedW::pack(w, b, in_dim, out_dim)),
+            Precision::Int8 => PrepDense::Q8(QuantDense::pack(w, b, in_dim, out_dim)),
+        }
+    }
+}
+
+/// Run one dense layer: through the warmed prep when present, else the
+/// plain dispatched kernel. The f32 prep path is bit-identical to the
+/// kernel; the int8 path is bounded-error (DESIGN.md §Native-Kernels).
+#[allow(clippy::too_many_arguments)]
+fn run_layer(
+    prep: Option<&PrepDense>,
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+) -> Vec<f32> {
+    match prep {
+        Some(PrepDense::F32(pw)) => dense_packed(simd::active(), x, rows, pw, act),
+        Some(PrepDense::Q8(q)) => q.forward(simd::active(), x, rows, act),
+        None => dense(x, rows, in_dim, w, b, out_dim, act),
+    }
+}
+
+/// Per-parameter-version precomputed state, keyed by the params buffer
+/// address. `ArtifactStore` memoizes executables, so several nets (one per
+/// UE lane) share one program — each keeps its own cached params tensor
+/// alive, which makes the buffer pointer a stable, ABA-safe key as long as
+/// the entry holds the tensor's `Arc` (it does).
+struct Warmed<P> {
+    params: Arc<TensorView>,
+    prep: P,
+}
+
+type WarmedMap<P> = RwLock<HashMap<usize, Arc<Warmed<P>>>>;
+
+fn lookup_warmed<P>(map: &WarmedMap<P>, params_in: &TensorView) -> Option<Arc<Warmed<P>>> {
+    let key = params_in.f32s().ok()?.as_ptr() as usize;
+    let g = map.read().unwrap();
+    let w = g.get(&key)?;
+    if same_f32_buffer(&w.params, params_in) {
+        Some(w.clone())
+    } else {
+        None
+    }
+}
+
+fn insert_warmed<P>(map: &WarmedMap<P>, key: usize, entry: Warmed<P>) {
+    let mut g = map.write().unwrap();
+    // drop entries whose params tensor nobody else holds anymore (the net
+    // invalidated its cache after an update) so the map never grows past
+    // the live parameter versions
+    g.retain(|_, w| Arc::strong_count(&w.params) > 1);
+    g.insert(key, Arc::new(entry));
 }
 
 fn seg<'a>(params: &'a [f32], s: Slot) -> &'a [f32] {
@@ -127,6 +221,8 @@ pub(super) struct ActorProgram {
     h: usize,
     p: usize,
     c: usize,
+    precision: Precision,
+    warmed: WarmedMap<ActorPrep>,
     w_t0: Slot,
     b_t0: Slot,
     w_t1: Slot,
@@ -146,6 +242,18 @@ pub(super) struct ActorProgram {
     b_p1_ls: Slot,
 }
 
+/// Precomputed per-params state for every dense layer of the actor.
+struct ActorPrep {
+    t0: PrepDense,
+    t1: PrepDense,
+    b0: PrepDense,
+    b1: PrepDense,
+    c0: PrepDense,
+    c1: PrepDense,
+    p0: PrepDense,
+    p1: PrepDense,
+}
+
 /// Forward activations kept for the backward pass.
 struct ActorCache {
     h0: Vec<f32>,
@@ -161,27 +269,25 @@ struct ActorCache {
 }
 
 impl ActorProgram {
-    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<ActorProgram> {
+    pub(super) fn from_meta(meta: &ArtifactMeta, precision: Precision) -> Result<ActorProgram> {
         let spec = meta.spec.as_ref().ok_or_else(|| {
             anyhow!("no parameter layout attached (manifest rl.specs entry missing?)")
         })?;
-        let (w_t0, s_t0) = slot(spec, "w_t0")?;
-        let (w_t1, s_t1) = slot(spec, "w_t1")?;
-        let (w_b0, s_b0) = slot(spec, "w_b0")?;
-        let (w_b1, s_b1) = slot(spec, "w_b1")?;
-        let (w_c1, s_c1) = slot(spec, "w_c1")?;
-        if s_t0.len() != 2 || s_t1.len() != 2 || s_b0.len() != 2 || s_b1.len() != 2 || s_c1.len() != 2
-        {
-            bail!("unexpected actor layout shapes");
-        }
+        let (w_t0, (d, t0)) = slot2(spec, "w_t0")?;
+        let (w_t1, (_, t1)) = slot2(spec, "w_t1")?;
+        let (w_b0, (_, h)) = slot2(spec, "w_b0")?;
+        let (w_b1, (_, p)) = slot2(spec, "w_b1")?;
+        let (w_c1, (_, c)) = slot2(spec, "w_c1")?;
         let prog = ActorProgram {
             size: spec_size(spec),
-            d: s_t0[0],
-            t0: s_t0[1],
-            t1: s_t1[1],
-            h: s_b0[1],
-            p: s_b1[1],
-            c: s_c1[1],
+            d,
+            t0,
+            t1,
+            h,
+            p,
+            c,
+            precision,
+            warmed: RwLock::new(HashMap::new()),
             w_t0,
             b_t0: slot(spec, "b_t0")?.0,
             w_t1,
@@ -203,8 +309,54 @@ impl ActorProgram {
         Ok(prog)
     }
 
-    fn forward(&self, params: &[f32], state: &[f32], b: usize) -> ActorCache {
-        let h0 = dense(
+    /// Build the per-layer prep for one params version at this program's
+    /// precision (packed GEMM panels for f32, quantized weights for int8).
+    fn build_prep(&self, params: &[f32]) -> ActorPrep {
+        let pr = self.precision;
+        let bias_p = [params[self.b_p1_mu.off], params[self.b_p1_ls.off]];
+        ActorPrep {
+            t0: PrepDense::build(pr, seg(params, self.w_t0), seg(params, self.b_t0), self.d, self.t0),
+            t1: PrepDense::build(pr, seg(params, self.w_t1), seg(params, self.b_t1), self.t0, self.t1),
+            b0: PrepDense::build(pr, seg(params, self.w_b0), seg(params, self.b_b0), self.t1, self.h),
+            b1: PrepDense::build(pr, seg(params, self.w_b1), seg(params, self.b_b1), self.h, self.p),
+            c0: PrepDense::build(pr, seg(params, self.w_c0), seg(params, self.b_c0), self.t1, self.h),
+            c1: PrepDense::build(pr, seg(params, self.w_c1), seg(params, self.b_c1), self.h, self.c),
+            p0: PrepDense::build(pr, seg(params, self.w_p0), seg(params, self.b_p0), self.t1, self.h),
+            p1: PrepDense::build(pr, seg(params, self.w_p1), &bias_p, self.h, 2),
+        }
+    }
+
+    /// Precompute and cache per-params forward state — see
+    /// [`super::NativeBackend`] and `Executable::warm`.
+    pub(super) fn warm(&self, input: &Arc<TensorView>) -> Result<()> {
+        let params = input.f32s()?;
+        if params.len() != self.size {
+            bail!("actor warm: expected {} parameters, got {}", self.size, params.len());
+        }
+        // under MACCI_FORCE_SCALAR at f32 the un-prepped kernels are the
+        // reference path — keep it exactly the seed behavior, no packing
+        if self.precision == Precision::F32 && simd::active() == Isa::Scalar {
+            return Ok(());
+        }
+        let key = params.as_ptr() as usize;
+        if lookup_warmed(&self.warmed, input).is_some() {
+            return Ok(());
+        }
+        let prep = self.build_prep(params);
+        insert_warmed(
+            &self.warmed,
+            key,
+            Warmed {
+                params: input.clone(),
+                prep,
+            },
+        );
+        Ok(())
+    }
+
+    fn forward(&self, params: &[f32], state: &[f32], b: usize, prep: Option<&ActorPrep>) -> ActorCache {
+        let h0 = run_layer(
+            prep.map(|p| &p.t0),
             state,
             b,
             self.d,
@@ -213,7 +365,8 @@ impl ActorProgram {
             self.t0,
             Act::Tanh,
         );
-        let h1 = dense(
+        let h1 = run_layer(
+            prep.map(|p| &p.t1),
             &h0,
             b,
             self.t0,
@@ -223,7 +376,8 @@ impl ActorProgram {
             Act::Tanh,
         );
 
-        let hb = dense(
+        let hb = run_layer(
+            prep.map(|p| &p.b0),
             &h1,
             b,
             self.t1,
@@ -232,7 +386,8 @@ impl ActorProgram {
             self.h,
             Act::Tanh,
         );
-        let mut probs_b = dense(
+        let mut probs_b = run_layer(
+            prep.map(|p| &p.b1),
             &hb,
             b,
             self.h,
@@ -243,7 +398,8 @@ impl ActorProgram {
         );
         softmax_rows(&mut probs_b, b, self.p);
 
-        let hc = dense(
+        let hc = run_layer(
+            prep.map(|p| &p.c0),
             &h1,
             b,
             self.t1,
@@ -252,7 +408,8 @@ impl ActorProgram {
             self.h,
             Act::Tanh,
         );
-        let mut probs_c = dense(
+        let mut probs_c = run_layer(
+            prep.map(|p| &p.c1),
             &hc,
             b,
             self.h,
@@ -263,7 +420,8 @@ impl ActorProgram {
         );
         softmax_rows(&mut probs_c, b, self.c);
 
-        let hp = dense(
+        let hp = run_layer(
+            prep.map(|p| &p.p0),
             &h1,
             b,
             self.t1,
@@ -273,7 +431,16 @@ impl ActorProgram {
             Act::Tanh,
         );
         let bias_p = [params[self.b_p1_mu.off], params[self.b_p1_ls.off]];
-        let mu_std = dense(&hp, b, self.h, seg(params, self.w_p1), &bias_p, 2, Act::Linear);
+        let mu_std = run_layer(
+            prep.map(|p| &p.p1),
+            &hp,
+            b,
+            self.h,
+            seg(params, self.w_p1),
+            &bias_p,
+            2,
+            Act::Linear,
+        );
         let mut mu = vec![0.0f32; b];
         let mut ls_raw = vec![0.0f32; b];
         let mut log_std = vec![0.0f32; b];
@@ -313,7 +480,20 @@ impl ActorProgram {
             bail!("actor_fwd: state length {} not a multiple of {}", state.len(), self.d);
         }
         let b = state.len() / self.d;
-        let cache = self.forward(params, state, b);
+        // warmed prep keyed on the params buffer; int8 must quantize even
+        // when cold (correctness of the precision knob beats the one-off
+        // packing cost), f32 cold calls use the plain dispatched kernels
+        let warmed = lookup_warmed(&self.warmed, inputs[0]);
+        let ephemeral;
+        let prep = match (&warmed, self.precision) {
+            (Some(w), _) => Some(&w.prep),
+            (None, Precision::Int8) => {
+                ephemeral = self.build_prep(params);
+                Some(&ephemeral)
+            }
+            (None, Precision::F32) => None,
+        };
+        let cache = self.forward(params, state, b, prep);
         Ok(vec![
             TensorView::f32(cache.probs_b, vec![b, self.p])?,
             TensorView::f32(cache.probs_c, vec![b, self.c])?,
@@ -350,7 +530,9 @@ impl ActorProgram {
             bail!("{what}: ragged minibatch inputs");
         }
 
-        let cache = self.forward(params, state, b);
+        // updates always run the un-prepped f32 kernels: the training and
+        // bit-exact-resume contracts are defined on them
+        let cache = self.forward(params, state, b, None);
         let inv_b = 1.0 / b as f32;
 
         // ---- hybrid log-prob, PPO ratio, loss scalars ----
@@ -513,6 +695,8 @@ pub(super) struct CriticProgram {
     c0: usize,
     c1: usize,
     c2: usize,
+    precision: Precision,
+    warmed: WarmedMap<CriticPrep>,
     w_0: Slot,
     b_0: Slot,
     w_1: Slot,
@@ -530,23 +714,30 @@ struct CriticCache {
     value: Vec<f32>,
 }
 
+/// Prepared per-layer forward state for one critic parameter vector.
+struct CriticPrep {
+    l0: PrepDense,
+    l1: PrepDense,
+    l2: PrepDense,
+    l3: PrepDense,
+}
+
 impl CriticProgram {
-    pub(super) fn from_meta(meta: &ArtifactMeta) -> Result<CriticProgram> {
+    pub(super) fn from_meta(meta: &ArtifactMeta, precision: Precision) -> Result<CriticProgram> {
         let spec = meta.spec.as_ref().ok_or_else(|| {
             anyhow!("no parameter layout attached (manifest rl.specs entry missing?)")
         })?;
-        let (w_0, s_0) = slot(spec, "w_0")?;
-        let (w_1, s_1) = slot(spec, "w_1")?;
-        let (w_2, s_2) = slot(spec, "w_2")?;
-        if s_0.len() != 2 || s_1.len() != 2 || s_2.len() != 2 {
-            bail!("unexpected critic layout shapes");
-        }
+        let (w_0, (d, c0)) = slot2(spec, "w_0")?;
+        let (w_1, (_, c1)) = slot2(spec, "w_1")?;
+        let (w_2, (_, c2)) = slot2(spec, "w_2")?;
         Ok(CriticProgram {
             size: spec_size(spec),
-            d: s_0[0],
-            c0: s_0[1],
-            c1: s_1[1],
-            c2: s_2[1],
+            d,
+            c0,
+            c1,
+            c2,
+            precision,
+            warmed: RwLock::new(HashMap::new()),
             w_0,
             b_0: slot(spec, "b_0")?.0,
             w_1,
@@ -558,8 +749,51 @@ impl CriticProgram {
         })
     }
 
-    fn forward(&self, params: &[f32], state: &[f32], b: usize) -> CriticCache {
-        let h0 = dense(
+    fn build_prep(&self, params: &[f32]) -> CriticPrep {
+        let p = self.precision;
+        CriticPrep {
+            l0: PrepDense::build(p, seg(params, self.w_0), seg(params, self.b_0), self.d, self.c0),
+            l1: PrepDense::build(p, seg(params, self.w_1), seg(params, self.b_1), self.c0, self.c1),
+            l2: PrepDense::build(p, seg(params, self.w_2), seg(params, self.b_2), self.c1, self.c2),
+            l3: PrepDense::build(p, seg(params, self.w_3), seg(params, self.b_3), self.c2, 1),
+        }
+    }
+
+    pub(super) fn warm(&self, input: &Arc<TensorView>) -> Result<()> {
+        let params = input.f32s()?;
+        if params.len() != self.size {
+            bail!("critic warm: expected {} parameters, got {}", self.size, params.len());
+        }
+        // forced-scalar f32 has nothing to precompute — the un-prepped
+        // kernels are already the exact seed behavior
+        if self.precision == Precision::F32 && simd::active() == Isa::Scalar {
+            return Ok(());
+        }
+        let key = params.as_ptr() as usize;
+        if lookup_warmed(&self.warmed, input).is_some() {
+            return Ok(());
+        }
+        let prep = self.build_prep(params);
+        insert_warmed(
+            &self.warmed,
+            key,
+            Warmed {
+                params: input.clone(),
+                prep,
+            },
+        );
+        Ok(())
+    }
+
+    fn forward(
+        &self,
+        params: &[f32],
+        state: &[f32],
+        b: usize,
+        prep: Option<&CriticPrep>,
+    ) -> CriticCache {
+        let h0 = run_layer(
+            prep.map(|p| &p.l0),
             state,
             b,
             self.d,
@@ -568,7 +802,8 @@ impl CriticProgram {
             self.c0,
             Act::Tanh,
         );
-        let h1 = dense(
+        let h1 = run_layer(
+            prep.map(|p| &p.l1),
             &h0,
             b,
             self.c0,
@@ -577,7 +812,8 @@ impl CriticProgram {
             self.c1,
             Act::Tanh,
         );
-        let h2 = dense(
+        let h2 = run_layer(
+            prep.map(|p| &p.l2),
             &h1,
             b,
             self.c1,
@@ -586,7 +822,8 @@ impl CriticProgram {
             self.c2,
             Act::Tanh,
         );
-        let value = dense(
+        let value = run_layer(
+            prep.map(|p| &p.l3),
             &h2,
             b,
             self.c2,
@@ -610,7 +847,17 @@ impl CriticProgram {
             bail!("critic_fwd: state length {} not a multiple of {}", state.len(), self.d);
         }
         let b = state.len() / self.d;
-        let cache = self.forward(params, state, b);
+        let warmed = lookup_warmed(&self.warmed, inputs[0]);
+        let ephemeral;
+        let prep = match (&warmed, self.precision) {
+            (Some(w), _) => Some(&w.prep),
+            (None, Precision::Int8) => {
+                ephemeral = self.build_prep(params);
+                Some(&ephemeral)
+            }
+            (None, Precision::F32) => None,
+        };
+        let cache = self.forward(params, state, b, prep);
         Ok(vec![TensorView::f32(cache.value, vec![b, 1])?])
     }
 
@@ -634,7 +881,9 @@ impl CriticProgram {
             bail!("{what}: parameter/Adam state size mismatch");
         }
 
-        let cache = self.forward(params, state, b);
+        // updates always run the un-prepped f32 kernels: the training and
+        // bit-exact-resume contracts are defined on them
+        let cache = self.forward(params, state, b, None);
         let inv_b = 1.0 / b as f32;
         let mut loss = 0.0f32;
         let mut dv = vec![0.0f32; b];

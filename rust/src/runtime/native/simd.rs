@@ -1,0 +1,501 @@
+//! Runtime SIMD dispatch for the native kernels.
+//!
+//! One ISA is detected once per process ([`active`]): AVX2, then SSE4.1
+//! (via `is_x86_feature_detected!`), then a portable 8-wide manually
+//! unrolled fallback. `MACCI_FORCE_SCALAR=1` pins the plain scalar loops —
+//! the exact pre-SIMD reference paths — for CI and debugging.
+//!
+//! **Bit-identity contract (f32):** every f32 primitive here vectorizes
+//! across *independent output elements only*; each element still sees the
+//! scalar operation sequence — separate multiply then add (never FMA),
+//! k-ascending accumulation, no tree reductions. `_mm256_add_ps(acc,
+//! _mm256_mul_ps(a, x))` per lane is the same rounding as `acc + a * x`,
+//! so every ISA produces bit-identical f32 output (proptested in
+//! `tests/proptests.rs`). The int8 primitives accumulate in i32, where
+//! addition is associative — all ISAs agree exactly there too; only the
+//! f32→u8 activation quantization step ([`quantize_row`]) may differ by
+//! ±1 code across ISAs, which the analytic int8 error bound absorbs.
+
+use once_cell::sync::Lazy;
+
+use super::kernels::round_ties_even;
+
+/// Instruction set the kernels dispatch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Plain scalar loops — the original reference kernels, selected by
+    /// `MACCI_FORCE_SCALAR=1`.
+    Scalar,
+    /// Portable 8-wide manually-unrolled loops (any architecture).
+    Portable,
+    /// x86-64 SSE4.1 (4-wide f32, 8-wide int8 dot).
+    Sse41,
+    /// x86-64 AVX2 (8-wide f32, 16-wide int8 dot).
+    Avx2,
+}
+
+static ACTIVE: Lazy<Isa> = Lazy::new(detect);
+
+fn detect() -> Isa {
+    if forced_scalar() {
+        return Isa::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        if is_x86_feature_detected!("sse4.1") {
+            return Isa::Sse41;
+        }
+    }
+    Isa::Portable
+}
+
+fn forced_scalar() -> bool {
+    std::env::var("MACCI_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The ISA every dispatching kernel wrapper uses (detected once).
+pub fn active() -> Isa {
+    *ACTIVE
+}
+
+/// Every ISA that can run on this machine — lets tests exercise all
+/// runnable paths regardless of which one [`active`] picked.
+pub fn available() -> Vec<Isa> {
+    let mut isas = vec![Isa::Scalar, Isa::Portable];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("sse4.1") {
+            isas.push(Isa::Sse41);
+        }
+        if is_x86_feature_detected!("avx2") {
+            isas.push(Isa::Avx2);
+        }
+    }
+    isas
+}
+
+// ------------------------------------------------------------- f32 axpy
+
+/// `dst[i] += a * x[i]` — the inner step of the k-outer dense/matmul
+/// loops. Bit-identical across ISAs (see module docs).
+pub fn axpy(isa: Isa, dst: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(dst.len(), x.len());
+    match isa {
+        Isa::Scalar => {
+            for (d, &v) in dst.iter_mut().zip(x) {
+                *d += a * v;
+            }
+        }
+        Isa::Portable => axpy_portable(dst, a, x),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { axpy_sse(dst, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { axpy_avx2(dst, a, x) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => axpy_portable(dst, a, x),
+    }
+}
+
+fn axpy_portable(dst: &mut [f32], a: f32, x: &[f32]) {
+    let n = dst.len();
+    let head = n - n % 8;
+    let (dh, dt) = dst.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    for (d, v) in dh.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        d[0] += a * v[0];
+        d[1] += a * v[1];
+        d[2] += a * v[2];
+        d[3] += a * v[3];
+        d[4] += a * v[4];
+        d[5] += a * v[5];
+        d[6] += a * v[6];
+        d[7] += a * v[7];
+    }
+    for (d, &v) in dt.iter_mut().zip(xt) {
+        *d += a * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn axpy_sse(dst: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let va = _mm_set1_ps(a);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dst.as_ptr().add(i));
+        let v = _mm_loadu_ps(x.as_ptr().add(i));
+        _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_add_ps(d, _mm_mul_ps(va, v)));
+        i += 4;
+    }
+    while i < n {
+        dst[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(dst: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let va = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(
+            dst.as_mut_ptr().add(i),
+            _mm256_add_ps(d, _mm256_mul_ps(va, v)),
+        );
+        i += 8;
+    }
+    while i < n {
+        dst[i] += a * x[i];
+        i += 1;
+    }
+}
+
+// ----------------------------------------------------- f32 div-by-scalar
+
+/// `dst[i] /= s` — the softmax normalization epilogue. One IEEE division
+/// per lane, bit-identical across ISAs.
+pub fn div_scalar(isa: Isa, dst: &mut [f32], s: f32) {
+    match isa {
+        Isa::Scalar => {
+            for v in dst.iter_mut() {
+                *v /= s;
+            }
+        }
+        Isa::Portable => div_scalar_portable(dst, s),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { div_scalar_sse(dst, s) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { div_scalar_avx2(dst, s) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => div_scalar_portable(dst, s),
+    }
+}
+
+fn div_scalar_portable(dst: &mut [f32], s: f32) {
+    let n = dst.len();
+    let head = n - n % 8;
+    let (dh, dt) = dst.split_at_mut(head);
+    for d in dh.chunks_exact_mut(8) {
+        d[0] /= s;
+        d[1] /= s;
+        d[2] /= s;
+        d[3] /= s;
+        d[4] /= s;
+        d[5] /= s;
+        d[6] /= s;
+        d[7] /= s;
+    }
+    for d in dt.iter_mut() {
+        *d /= s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn div_scalar_sse(dst: &mut [f32], s: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm_set1_ps(s);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dst.as_ptr().add(i));
+        _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_div_ps(d, vs));
+        i += 4;
+    }
+    while i < n {
+        dst[i] /= s;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn div_scalar_avx2(dst: &mut [f32], s: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(d, vs));
+        i += 8;
+    }
+    while i < n {
+        dst[i] /= s;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------- int8 dot
+
+/// `Σ_i x[i] * w[i]` over u8 activations × i8 weights, i32 accumulate.
+/// Exactly the same integer result on every ISA (i32 addition is
+/// associative; per-pair products fit i32: 255·127·pair ≤ 64770 per madd
+/// lane, and the k-dimension here is ≤ a few hundred).
+pub fn dot_q8(isa: Isa, x: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    match isa {
+        Isa::Scalar | Isa::Portable => dot_q8_portable(x, w),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe { dot_q8_sse(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { dot_q8_avx2(x, w) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_q8_portable(x, w),
+    }
+}
+
+fn dot_q8_portable(x: &[u8], w: &[i8]) -> i32 {
+    x.iter().zip(w).map(|(&a, &b)| a as i32 * b as i32).sum()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn dot_q8_sse(x: &[u8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut acc = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm_loadl_epi64(x.as_ptr().add(i) as *const __m128i);
+        let wv = _mm_loadl_epi64(w.as_ptr().add(i) as *const __m128i);
+        let x16 = _mm_cvtepu8_epi16(xv);
+        let w16 = _mm_cvtepi8_epi16(wv);
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(x16, w16));
+        i += 8;
+    }
+    let mut sum = hsum_epi32_sse(acc);
+    while i < n {
+        sum += x[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn hsum_epi32_sse(v: std::arch::x86_64::__m128i) -> i32 {
+    use std::arch::x86_64::*;
+    let s = _mm_add_epi32(v, _mm_shuffle_epi32::<0b00_00_11_10>(v));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_q8_avx2(x: &[u8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        // widen to i16 before madd — _mm_maddubs_epi16 saturates and is
+        // deliberately avoided
+        let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+        let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+        let x16 = _mm256_cvtepu8_epi16(xv);
+        let w16 = _mm256_cvtepi8_epi16(wv);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(x16, w16));
+        i += 16;
+    }
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let mut sum = hsum_epi32_sse(_mm_add_epi32(lo, hi));
+    while i < n {
+        sum += x[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
+// ------------------------------------------------------- int8 accumulate
+
+/// `acc[i] += wv * x[i]` over u8 activations — the conv1x1 int8 inner
+/// loop (channel-broadcast weight against a pixel row). Exact i32 math on
+/// every ISA.
+pub fn accum_u8(isa: Isa, acc: &mut [i32], wv: i32, x: &[u8]) {
+    debug_assert_eq!(acc.len(), x.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { accum_u8_avx2(acc, wv, x) },
+        _ => {
+            for (a, &v) in acc.iter_mut().zip(x) {
+                *a += wv * v as i32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accum_u8_avx2(acc: &mut [i32], wv: i32, x: &[u8]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let vw = _mm256_set1_epi32(wv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm_loadl_epi64(x.as_ptr().add(i) as *const __m128i);
+        let x32 = _mm256_cvtepu8_epi32(xv);
+        let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi32(a, _mm256_mullo_epi32(x32, vw)),
+        );
+        i += 8;
+    }
+    while i < n {
+        acc[i] += wv * x[i] as i32;
+        i += 1;
+    }
+}
+
+// -------------------------------------------------- activation quantize
+
+/// Quantize one f32 row to u8 codes: `q = round((x - lo) * inv_step)`
+/// clamped to [0, 255], round-ties-even (AVX2 uses `_mm256_cvtps_epi32`,
+/// which rounds ties-even under the default MXCSR mode). This is the one
+/// int8 step where ISAs may differ by ±1 ulp of the scaled input landing
+/// on the far side of a tie — covered by the analytic error bound, not a
+/// bit-identity contract.
+pub fn quantize_row(isa: Isa, x: &[f32], lo: f32, inv_step: f32, out: &mut [u8]) {
+    debug_assert_eq!(x.len(), out.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { quantize_row_avx2(x, lo, inv_step, out) },
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = quantize_one(v, lo, inv_step);
+            }
+        }
+    }
+}
+
+#[inline]
+fn quantize_one(v: f32, lo: f32, inv_step: f32) -> u8 {
+    round_ties_even(((v - lo) * inv_step).clamp(0.0, 255.0)) as u8
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_row_avx2(x: &[f32], lo: f32, inv_step: f32, out: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let vlo = _mm256_set1_ps(lo);
+    let vs = _mm256_set1_ps(inv_step);
+    let zero = _mm256_setzero_ps();
+    let top = _mm256_set1_ps(255.0);
+    let mut tmp = [0i32; 8];
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        let t = _mm256_mul_ps(_mm256_sub_ps(v, vlo), vs);
+        // max/min with the clamp bound second: NaN inputs collapse to the
+        // bound, matching scalar clamp-then-cast saturation closely enough
+        // for the error-bound contract (calibration never emits NaN)
+        let t = _mm256_min_ps(_mm256_max_ps(t, zero), top);
+        let q = _mm256_cvtps_epi32(t);
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, q);
+        for (j, &code) in tmp.iter().enumerate() {
+            out[i + j] = code as u8;
+        }
+        i += 8;
+    }
+    while i < n {
+        out[i] = quantize_one(x[i], lo, inv_step);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_includes_scalar_and_portable() {
+        let isas = available();
+        assert!(isas.contains(&Isa::Scalar));
+        assert!(isas.contains(&Isa::Portable));
+        assert!(isas.contains(&active()) || active() == Isa::Scalar);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_on_every_isa() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).sin()).collect();
+        let base: Vec<f32> = (0..37).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut want = base.clone();
+        axpy(Isa::Scalar, &mut want, 1.37, &x);
+        for isa in available() {
+            let mut got = base.clone();
+            axpy(isa, &mut got, 1.37, &x);
+            assert_eq!(got, want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn div_scalar_matches_scalar_on_every_isa() {
+        let base: Vec<f32> = (0..29).map(|i| (i as f32 * 0.9).sin() + 2.0).collect();
+        let mut want = base.clone();
+        div_scalar(Isa::Scalar, &mut want, 3.7);
+        for isa in available() {
+            let mut got = base.clone();
+            div_scalar(isa, &mut got, 3.7);
+            assert_eq!(got, want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn dot_q8_exact_on_every_isa() {
+        let x: Vec<u8> = (0..45).map(|i| (i * 37 % 256) as u8).collect();
+        let w: Vec<i8> = (0..45).map(|i| ((i * 53 % 255) as i32 - 127) as i8).collect();
+        let want = dot_q8_portable(&x, &w);
+        for isa in available() {
+            assert_eq!(dot_q8(isa, &x, &w), want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn accum_u8_exact_on_every_isa() {
+        let x: Vec<u8> = (0..21).map(|i| (i * 91 % 256) as u8).collect();
+        let base: Vec<i32> = (0..21).map(|i| i as i32 * 1000 - 9000).collect();
+        for wv in [-127i32, -3, 0, 5, 127] {
+            let mut want = base.clone();
+            accum_u8(Isa::Scalar, &mut want, wv, &x);
+            for isa in available() {
+                let mut got = base.clone();
+                accum_u8(isa, &mut got, wv, &x);
+                assert_eq!(got, want, "{isa:?} wv={wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_within_one_code_of_scalar() {
+        let x: Vec<f32> = (0..33).map(|i| (i as f32 * 0.41).sin() * 3.0).collect();
+        let (lo, span) = (-3.0f32, 6.0f32);
+        let inv_step = 255.0 / span;
+        let mut want = vec![0u8; x.len()];
+        quantize_row(Isa::Scalar, &x, lo, inv_step, &mut want);
+        for isa in available() {
+            let mut got = vec![0u8; x.len()];
+            quantize_row(isa, &x, lo, inv_step, &mut got);
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g as i32 - w as i32).abs() <= 1,
+                    "{isa:?} idx {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}

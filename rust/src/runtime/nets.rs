@@ -85,19 +85,26 @@ impl NetState {
 /// copy when cold.
 #[derive(Default)]
 struct ParamCache {
-    view: Option<TensorView>,
+    view: Option<Arc<TensorView>>,
 }
 
 impl ParamCache {
-    /// Build the cached copy now (no-op when already warm).
-    fn warm(&mut self, params: &[f32]) -> Result<()> {
+    /// Build the cached copy now (no-op when already warm) and hand it
+    /// back — callers pass it to [`Executable::warm`] so backends can key
+    /// precomputed per-params state (packed GEMM panels / int8 weights) on
+    /// the shared buffer.
+    fn warm(&mut self, params: &[f32]) -> Result<Arc<TensorView>> {
         if self.view.is_none() {
-            self.view = Some(TensorView::f32(params.to_vec(), vec![params.len()])?);
+            self.view = Some(Arc::new(TensorView::f32(
+                params.to_vec(),
+                vec![params.len()],
+            )?));
         }
-        Ok(())
+        Ok(Arc::clone(self.view.as_ref().unwrap()))
     }
 
-    /// Drop the cached copy (the parameters changed).
+    /// Drop the cached copy (the parameters changed). Releasing the `Arc`
+    /// also lets backends garbage-collect warmed state keyed on it.
     fn invalidate(&mut self) {
         self.view = None;
     }
@@ -105,7 +112,7 @@ impl ParamCache {
     /// Borrow the cached tensor, or marshal a temporary one when cold.
     fn arg<'a>(&'a self, params: &[f32]) -> Result<Cow<'a, TensorView>> {
         Ok(match &self.view {
-            Some(v) => Cow::Borrowed(v),
+            Some(v) => Cow::Borrowed(v.as_ref()),
             None => Cow::Owned(TensorView::f32(params.to_vec(), vec![params.len()])?),
         })
     }
@@ -184,11 +191,18 @@ impl ActorNet {
     }
 
     /// Build the cached backend-input copy of `params` now (it is
-    /// invalidated by every `update`). Rollout workers call the `&self`
+    /// invalidated by every `update`) and let the forward executables
+    /// precompute per-params state for it (packed GEMM panels / int8
+    /// weights — see `Executable::warm`). Rollout workers call the `&self`
     /// batched forwards; warming first keeps them from re-marshalling the
     /// parameter vector on every call.
     pub fn warm_cache(&mut self) -> Result<()> {
-        self.cache.warm(&self.params)
+        let view = self.cache.warm(&self.params)?;
+        self.fwd.warm(0, &view)?;
+        for exe in self.fwd_batch.values() {
+            exe.warm(0, &view)?;
+        }
+        Ok(())
     }
 
     fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
@@ -256,7 +270,8 @@ impl ActorNet {
 
     /// Policy forward for a single state (B = 1).
     pub fn forward(&mut self, state: &[f32]) -> Result<ActorOutput> {
-        self.cache.warm(&self.params)?;
+        let view = self.cache.warm(&self.params)?;
+        self.fwd.warm(0, &view)?;
         let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
         let params = self.params_arg()?;
         let outs = self.fwd.call_refs(&[&*params, &state_view])?;
@@ -436,7 +451,12 @@ impl CriticNet {
 
     /// See [`ActorNet::warm_cache`].
     pub fn warm_cache(&mut self) -> Result<()> {
-        self.cache.warm(&self.params)
+        let view = self.cache.warm(&self.params)?;
+        self.fwd.warm(0, &view)?;
+        for exe in self.fwd_batch.values() {
+            exe.warm(0, &view)?;
+        }
+        Ok(())
     }
 
     fn params_arg(&self) -> Result<Cow<'_, TensorView>> {
@@ -512,7 +532,8 @@ impl CriticNet {
 
     /// V(s) for a single state.
     pub fn value(&mut self, state: &[f32]) -> Result<f32> {
-        self.cache.warm(&self.params)?;
+        let view = self.cache.warm(&self.params)?;
+        self.fwd.warm(0, &view)?;
         let state_view = TensorView::f32(state.to_vec(), vec![1, self.state_dim])?;
         let params = self.params_arg()?;
         let outs = self.fwd.call_refs(&[&*params, &state_view])?;

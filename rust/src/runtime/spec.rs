@@ -21,6 +21,18 @@ pub struct SpecEntry {
     pub shape: Vec<usize>,
 }
 
+impl SpecEntry {
+    /// The `(rows, cols)` of a 2-D entry, or `None` for any other rank —
+    /// lets consumers destructure weight matrices without hand-rolled
+    /// shape checks.
+    pub fn dims2(&self) -> Option<(usize, usize)> {
+        match self.shape[..] {
+            [r, c] => Some((r, c)),
+            _ => None,
+        }
+    }
+}
+
 /// Total parameter count of a layout.
 pub fn spec_size(spec: &[SpecEntry]) -> usize {
     spec.iter().map(|e| e.count).sum()
@@ -160,6 +172,13 @@ mod tests {
         let d = 20;
         let expect = d * 256 + 256 + 256 * 128 + 128 + 128 * 64 + 64 + 64 + 1;
         assert_eq!(spec_size(&critic_layout(5)), expect);
+    }
+
+    #[test]
+    fn dims2_only_on_matrices() {
+        let spec = critic_layout(5);
+        assert_eq!(spec_entry(&spec, "w_0").unwrap().dims2(), Some((20, 256)));
+        assert_eq!(spec_entry(&spec, "b_0").unwrap().dims2(), None);
     }
 
     #[test]

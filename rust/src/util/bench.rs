@@ -29,6 +29,9 @@ pub struct Bench {
     group: String,
     target: Duration,
     results: Vec<CaseResult>,
+    /// Derived scalar figures (e.g. GFLOP/s) recorded alongside the timed
+    /// cases — written to the same JSON keyed `group/name`.
+    gauges: Vec<(String, f64)>,
 }
 
 impl Bench {
@@ -42,7 +45,16 @@ impl Bench {
                     .unwrap_or(700),
             ),
             results: Vec::new(),
+            gauges: Vec::new(),
         }
+    }
+
+    /// Record a derived scalar (throughput, GFLOP/s, speedup ratio) so it
+    /// lands in the merged JSON next to the timings it was computed from.
+    pub fn gauge(&mut self, name: impl Into<String>, value: f64) {
+        let name = name.into();
+        println!("{:>34}  {value:.3}", format!("{}/{name}", self.group));
+        self.gauges.push((name, value));
     }
 
     /// Time `f`, which should perform ONE iteration of the workload.
@@ -119,6 +131,14 @@ impl Bench {
                 pairs.push((key, entry));
             }
         }
+        for (name, value) in &self.gauges {
+            let key = format!("{}/{}", self.group, name);
+            let entry = Json::obj().set("value", *value);
+            if let Json::Obj(ref mut pairs) = root {
+                pairs.retain(|(k, _)| k != &key);
+                pairs.push((key, entry));
+            }
+        }
         let _ = root.write_file(path);
     }
 
@@ -168,5 +188,7 @@ mod tests {
         });
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].mean_ns > 0.0);
+        b.gauge("add_rate", 1e9 / b.results[0].mean_ns);
+        assert_eq!(b.gauges.len(), 1);
     }
 }

@@ -67,6 +67,7 @@ fn decisions_broadcast_while_offloads_flood() {
         workers: 2,
         max_batch: 8,
         max_wait: Duration::from_millis(1),
+        ..ExecutorConfig::default()
     };
     let compute = Some(compute as Arc<dyn OffloadCompute>);
     let (server, mut downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();
@@ -163,6 +164,7 @@ fn pooled_server_serves_all_tasks_and_batches() {
         workers: 2,
         max_batch: 4,
         max_wait: Duration::from_micros(500),
+        ..ExecutorConfig::default()
     };
     let compute = Some(compute as Arc<dyn OffloadCompute>);
     let (server, downlinks) = EdgeServer::spawn(cfg, pool(n), decisions(n), compute).unwrap();

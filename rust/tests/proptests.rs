@@ -481,3 +481,188 @@ fn hybrid_action_power_always_feasible() {
         },
     );
 }
+
+// ------------------------------------------------------------ native kernels
+
+use macci::runtime::native::gemm::{dense_packed, PackedW};
+use macci::runtime::native::kernels::{conv1x1_with, dense_with, matmul_bt_with, Act};
+use macci::runtime::native::quant8::{
+    conv1x1_q8_error_bound, dense_q8_error_bound, QuantConv, QuantDense,
+};
+use macci::runtime::native::simd::{self, Isa};
+
+#[test]
+fn kernel_simd_dense_is_bit_identical_to_scalar() {
+    // every available ISA — plain dispatch AND the packed/blocked GEMM —
+    // must reproduce the scalar reference bit-for-bit, including empty
+    // batches (rows = 0) and odd, non-multiple-of-8 dims
+    forall(
+        77,
+        80,
+        |g| {
+            let rows = g.usize_in(0, 32);
+            let in_dim = g.usize_in(1, 37);
+            let out_dim = g.usize_in(1, 37);
+            (
+                rows,
+                in_dim,
+                out_dim,
+                g.vec_f32(rows * in_dim, -2.0, 2.0),
+                g.vec_f32(in_dim * out_dim, -1.0, 1.0),
+                g.vec_f32(out_dim, -1.0, 1.0),
+            )
+        },
+        |(rows, in_dim, out_dim, x, w, b)| {
+            let (rows, in_dim, out_dim) = (*rows, *in_dim, *out_dim);
+            for act in [Act::Linear, Act::Tanh, Act::Relu] {
+                let reference = dense_with(Isa::Scalar, x, rows, in_dim, w, b, out_dim, act);
+                let pw = PackedW::pack(w, b, in_dim, out_dim);
+                for isa in simd::available() {
+                    if dense_with(isa, x, rows, in_dim, w, b, out_dim, act) != reference {
+                        return Err(format!(
+                            "dense {isa:?} diverged at {rows}x{in_dim}->{out_dim} {act:?}"
+                        ));
+                    }
+                    if dense_packed(isa, x, rows, &pw, act) != reference {
+                        return Err(format!(
+                            "dense_packed {isa:?} diverged at {rows}x{in_dim}->{out_dim} {act:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_simd_matmul_bt_and_conv1x1_are_bit_identical_to_scalar() {
+    forall(
+        78,
+        80,
+        |g| {
+            let rows = g.usize_in(0, 24);
+            let in_dim = g.usize_in(1, 33);
+            let out_dim = g.usize_in(1, 33);
+            let hw = g.usize_in(1, 19);
+            (
+                rows,
+                in_dim,
+                out_dim,
+                hw,
+                g.vec_f32(rows * out_dim, -2.0, 2.0),
+                g.vec_f32(in_dim * out_dim, -1.0, 1.0),
+                g.vec_f32(out_dim, -1.0, 1.0),
+                g.vec_f32(in_dim * hw, -2.0, 2.0),
+            )
+        },
+        |(rows, in_dim, out_dim, hw, dy, w, b, img)| {
+            let (rows, in_dim, out_dim, hw) = (*rows, *in_dim, *out_dim, *hw);
+            let dx_ref = matmul_bt_with(Isa::Scalar, dy, rows, out_dim, w, in_dim);
+            // conv treats (in_dim, out_dim) as (c_in, c_out) over a 1 x hw map
+            let conv_ref = conv1x1_with(Isa::Scalar, img, 1, in_dim, 1, hw, w, b, out_dim);
+            for isa in simd::available() {
+                if matmul_bt_with(isa, dy, rows, out_dim, w, in_dim) != dx_ref {
+                    return Err(format!(
+                        "matmul_bt {isa:?} diverged at {rows}x{out_dim}->{in_dim}"
+                    ));
+                }
+                if conv1x1_with(isa, img, 1, in_dim, 1, hw, w, b, out_dim) != conv_ref {
+                    return Err(format!(
+                        "conv1x1 {isa:?} diverged at c{in_dim}->c{out_dim} hw={hw}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_int8_dense_respects_analytic_error_bound() {
+    // randomized calibration ranges: activations drawn from [lo, lo+span]
+    // with lo in [-8, 0) and span in [0.1, 16) — the quantized forward must
+    // stay inside the per-element analytic bound on every available ISA
+    forall(
+        79,
+        80,
+        |g| {
+            let rows = g.usize_in(0, 8);
+            let in_dim = g.usize_in(1, 40);
+            let out_dim = g.usize_in(1, 24);
+            let lo = g.f64_in(-8.0, 0.0) as f32;
+            let span = g.f64_in(0.1, 16.0) as f32;
+            (
+                rows,
+                in_dim,
+                out_dim,
+                g.vec_f32(rows * in_dim, lo, lo + span),
+                g.vec_f32(in_dim * out_dim, -2.0, 2.0),
+                g.vec_f32(out_dim, -1.0, 1.0),
+            )
+        },
+        |(rows, in_dim, out_dim, x, w, b)| {
+            let (rows, in_dim, out_dim) = (*rows, *in_dim, *out_dim);
+            let bound = dense_q8_error_bound(x, rows, in_dim, w, out_dim);
+            let qd = QuantDense::pack(w, b, in_dim, out_dim);
+            for act in [Act::Linear, Act::Tanh] {
+                let exact = dense_with(Isa::Scalar, x, rows, in_dim, w, b, out_dim, act);
+                for isa in simd::available() {
+                    let got = qd.forward(isa, x, rows, act);
+                    for (i, (&gv, &ev)) in got.iter().zip(&exact).enumerate() {
+                        // tanh is 1-Lipschitz, relu too: the pre-activation
+                        // bound survives the epilogue
+                        if (gv - ev).abs() > bound[i] {
+                            return Err(format!(
+                                "int8 {isa:?} {act:?} out of bound at {i}: |{gv} - {ev}| > {}",
+                                bound[i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_int8_conv1x1_respects_analytic_error_bound() {
+    forall(
+        80,
+        60,
+        |g| {
+            let c_in = g.usize_in(1, 12);
+            let c_out = g.usize_in(1, 10);
+            let hw = g.usize_in(1, 25);
+            let lo = g.f64_in(-4.0, 0.0) as f32;
+            let span = g.f64_in(0.1, 8.0) as f32;
+            (
+                c_in,
+                c_out,
+                hw,
+                g.vec_f32(c_in * hw, lo, lo + span),
+                g.vec_f32(c_in * c_out, -2.0, 2.0),
+                g.vec_f32(c_out, -1.0, 1.0),
+            )
+        },
+        |(c_in, c_out, hw, x, w, b)| {
+            let (c_in, c_out, hw) = (*c_in, *c_out, *hw);
+            let exact = conv1x1_with(Isa::Scalar, x, 1, c_in, 1, hw, w, b, c_out);
+            let bound = conv1x1_q8_error_bound(x, 1, c_in, 1, hw, w, c_out);
+            let qc = QuantConv::pack(w, b, c_in, c_out);
+            for isa in simd::available() {
+                let got = qc.forward(isa, x, 1, 1, hw);
+                for (i, (&gv, &ev)) in got.iter().zip(&exact).enumerate() {
+                    if (gv - ev).abs() > bound[i] {
+                        return Err(format!(
+                            "int8 conv {isa:?} out of bound at {i}: |{gv} - {ev}| > {}",
+                            bound[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
