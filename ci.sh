@@ -17,6 +17,12 @@ echo "== kernel tests, forced-scalar dispatch =="
 MACCI_FORCE_SCALAR=1 cargo test -q --lib runtime::native
 MACCI_FORCE_SCALAR=1 cargo test -q --test proptests kernel_
 
+echo "== lint (repo invariants) =="
+# self-test the rule engine first, then sweep the tree; any unsuppressed
+# finding exits 1 and fails CI. Machine-readable report lands in LINT.json.
+cargo test -p macci-lint -q
+cargo run -p macci-lint -- --json LINT.json
+
 echo "== rustfmt =="
 cargo fmt --check
 

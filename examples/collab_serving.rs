@@ -74,7 +74,8 @@ fn main() -> Result<()> {
         // local reference logits for agreement checking are computed by
         // the UE before offloading (demo-only; a real UE wouldn't)
         let pipeline = CollabPipeline::load(&store, &model)?;
-        handles.push(std::thread::spawn(move || -> Result<(usize, usize, f64, f64, usize)> {
+        let builder = std::thread::Builder::new().name(format!("ue-{ue}"));
+        handles.push(builder.spawn(move || -> Result<(usize, usize, f64, f64, usize)> {
             let mut agree = 0usize;
             let mut done = 0usize;
             let mut ue_compute = 0.0f64;
@@ -128,7 +129,7 @@ fn main() -> Result<()> {
             }
             uplink.send(Uplink::Goodbye { ue_id: ue })?;
             Ok((done, agree, ue_compute, rtt, wire_bits))
-        }));
+        })?);
     }
 
     let mut total_done = 0;

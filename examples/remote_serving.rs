@@ -55,7 +55,8 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n_ues)
         .map(|ue| {
-            std::thread::spawn(move || -> Result<(u64, f64)> {
+            let builder = std::thread::Builder::new().name(format!("ue-{ue}"));
+            builder.spawn(move || -> Result<(u64, f64)> {
                 // in a real deployment this block runs on another machine
                 let mut client = UeClient::new(TcpClientTransport::connect(addr, ue)?);
                 client.report(UeStateReport {
@@ -93,7 +94,7 @@ fn main() -> Result<()> {
                 Ok((tasks, rtt))
             })
         })
-        .collect();
+        .collect::<std::io::Result<Vec<_>>>()?;
 
     let mut total = 0u64;
     let mut rtt = 0.0f64;

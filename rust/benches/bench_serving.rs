@@ -99,10 +99,7 @@ fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
 }
 
 fn main() {
-    let tasks: u64 = std::env::var("MACCI_BENCH_SERVING_TASKS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(64);
+    let tasks: u64 = macci::util::config::bench_serving_tasks(64);
     let pooled_workers = 4;
 
     println!(

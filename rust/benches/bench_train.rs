@@ -64,12 +64,7 @@ fn run_one(store: &ArtifactStore, n_envs: usize, target: Duration) -> f64 {
 }
 
 fn main() {
-    let target = Duration::from_millis(
-        std::env::var("MACCI_BENCH_MS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(700),
-    );
+    let target = Duration::from_millis(macci::util::config::bench_ms(700));
     let store = ArtifactStore::native_demo();
     println!(
         "train-rollout bench: N = {N_UES} UEs, |M| = {BUFFER}, native backend, {} ms/config",

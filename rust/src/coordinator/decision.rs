@@ -10,7 +10,7 @@
 //! *between* decision frames, so a swap never tears a broadcast and never
 //! costs one (counter-verified in `rust/tests/integration_serving.rs`).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::{ensure, Result};
 
@@ -20,6 +20,7 @@ use crate::rl::checkpoint::{self, PolicySnapshot, TrainerCheckpoint};
 use crate::rl::sampling;
 use crate::runtime::artifacts::ArtifactStore;
 use crate::runtime::nets::ActorNet;
+use crate::util::sync::lock_unpoisoned;
 
 /// A serving-time decision source.
 pub trait DecisionSource: Send {
@@ -174,20 +175,27 @@ impl DecisionSource for StaticDecision {
     }
 }
 
-/// A clonable publisher end of a [`DecisionMaker`]'s swap channel: call
+/// A clonable publisher end of a [`DecisionMaker`]'s swap slot: call
 /// [`PolicyHandle::publish`] from any thread to stage a new policy. The
 /// maker applies the **latest** staged snapshot between decision frames
-/// (intermediate snapshots are superseded, never half-applied).
+/// (intermediate snapshots are superseded, never half-applied). The slot
+/// holds at most one snapshot, so publishing is bounded by construction —
+/// a stalled maker can never accumulate a queue of stale policies.
 #[derive(Clone)]
 pub struct PolicyHandle {
-    tx: Sender<PolicySnapshot>,
+    slot: Weak<Mutex<Option<PolicySnapshot>>>,
 }
 
 impl PolicyHandle {
-    /// Stage `snap` for the next inter-frame swap point. Non-blocking;
-    /// returns `false` when the decision maker is gone.
+    /// Stage `snap` for the next inter-frame swap point, superseding any
+    /// snapshot still pending. Non-blocking; returns `false` when the
+    /// decision maker is gone.
     pub fn publish(&self, snap: PolicySnapshot) -> bool {
-        self.tx.send(snap).is_ok()
+        let Some(slot) = self.slot.upgrade() else {
+            return false;
+        };
+        *lock_unpoisoned(&slot) = Some(snap);
+        true
     }
 }
 
@@ -196,8 +204,7 @@ impl PolicyHandle {
 pub struct DecisionMaker {
     source: Box<dyn DecisionSource>,
     frame: usize,
-    swap_rx: Receiver<PolicySnapshot>,
-    swap_tx: Sender<PolicySnapshot>,
+    swap_slot: Arc<Mutex<Option<PolicySnapshot>>>,
     swaps_applied: usize,
     swap_errors: usize,
     policy_version: Option<u64>,
@@ -205,22 +212,20 @@ pub struct DecisionMaker {
 
 impl DecisionMaker {
     pub fn new(source: Box<dyn DecisionSource>) -> DecisionMaker {
-        let (swap_tx, swap_rx) = channel();
         DecisionMaker {
             source,
             frame: 0,
-            swap_rx,
-            swap_tx,
+            swap_slot: Arc::new(Mutex::new(None)),
             swaps_applied: 0,
             swap_errors: 0,
             policy_version: None,
         }
     }
 
-    /// Mint a publisher for this maker's swap channel.
+    /// Mint a publisher for this maker's swap slot.
     pub fn policy_handle(&self) -> PolicyHandle {
         PolicyHandle {
-            tx: self.swap_tx.clone(),
+            slot: Arc::downgrade(&self.swap_slot),
         }
     }
 
@@ -228,10 +233,7 @@ impl DecisionMaker {
     /// rejects (wrong shape) is logged and dropped — the old policy keeps
     /// serving; decisions must never stall on a bad publish.
     fn apply_pending_swap(&mut self) {
-        let mut latest = None;
-        while let Ok(s) = self.swap_rx.try_recv() {
-            latest = Some(s);
-        }
+        let latest = lock_unpoisoned(&self.swap_slot).take();
         let Some(snap) = latest else { return };
         match self.source.install(&snap) {
             Ok(true) => {
@@ -315,6 +317,17 @@ mod tests {
         assert_eq!(dm.swaps_applied(), 0);
         assert_eq!(dm.swap_errors(), 0);
         assert_eq!(dm.policy_version(), None);
+    }
+
+    #[test]
+    fn publish_after_maker_drop_reports_failure() {
+        let dm = DecisionMaker::new(Box::new(StaticDecision { actions: vec![] }));
+        let handle = dm.policy_handle();
+        drop(dm);
+        assert!(!handle.publish(PolicySnapshot {
+            version: 1,
+            actors: vec![],
+        }));
     }
 
     #[test]

@@ -39,6 +39,7 @@ use super::inference::{argmax, check_raw_payload, decode_raw_payload, CollabPipe
 use super::protocol::{InferenceResult, OffloadRequest};
 use crate::runtime::artifacts::ArtifactStore;
 use crate::runtime::backend::Precision;
+use crate::util::sync::lock_unpoisoned;
 
 /// The compute side of offload serving — what the workers actually run,
 /// independent of where the model math comes from.
@@ -336,8 +337,14 @@ impl OffloadExecutor {
     /// Spawn the worker pool (`cfg.workers` ≥ 1 — a zero-worker setup
     /// means "serve inline", in which case don't start an executor).
     pub fn start(compute: Arc<dyn OffloadCompute>, cfg: ExecutorConfig) -> Result<OffloadExecutor> {
+        // lint: allow(bounded-channels) — depth ≤ inflight, which the server loop
+        // bounds via drain_limit admission; a sync_channel would deadlock
+        // drain_shutdown (workers join before the final completion drain).
+        // SLO-driven admission control replaces this in the ops-plane item.
         let (jobs_tx, jobs_rx) = channel::<Job>();
         let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+        // lint: allow(bounded-channels) — completions: same inflight bound as jobs;
+        // blocking workers here would wedge the graceful drain
         let (done_tx, done_rx) = channel::<Completion>();
         let mut workers = Vec::new();
         for i in 0..cfg.workers.max(1) {
@@ -393,11 +400,13 @@ impl OffloadExecutor {
                 });
                 return;
             }
-            self.batch.as_mut().unwrap().push(PendingRaw {
-                req,
-                enqueued: Instant::now(),
-            });
-            return;
+            if let Some(q) = self.batch.as_mut() {
+                q.push(PendingRaw {
+                    req,
+                    enqueued: Instant::now(),
+                });
+                return;
+            }
         }
         self.dispatch(Job::Single(req, Instant::now()));
     }
@@ -453,11 +462,14 @@ impl OffloadExecutor {
     }
 
     fn dispatch(&mut self, job: Job) {
-        let _ = self
-            .jobs_tx
-            .as_ref()
-            .expect("jobs channel open until shutdown")
-            .send(job);
+        // `jobs_tx` is Some until `drain_shutdown` consumes self, so this
+        // arm is unreachable — but the dispatch path must not panic
+        match self.jobs_tx.as_ref() {
+            Some(tx) => {
+                let _ = tx.send(job);
+            }
+            None => log::error!("offload dispatched after executor shutdown — dropped"),
+        }
     }
 
     fn note(&mut self, c: &Completion) {
@@ -494,7 +506,8 @@ fn worker_loop(
 ) {
     loop {
         // hold the lock only for the blocking recv, not the execution
-        let job = match jobs.lock().unwrap().recv() {
+        // (poison-tolerant: a panicked sibling must not take the pool down)
+        let job = match lock_unpoisoned(&jobs).recv() {
             Ok(j) => j,
             Err(_) => return, // dispatcher gone: drain complete
         };

@@ -21,7 +21,7 @@
 //! the loop structure is identical to an async reactor with a timer.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -35,7 +35,7 @@ use super::protocol::{Downlink, FrameDecision, UeStateReport, Uplink};
 use super::state_pool::StatePool;
 use crate::env::mdp::MultiAgentEnv;
 use crate::env::{Action, HybridAction};
-use crate::transport::channel::ChannelServerTransport;
+use crate::transport::channel::{self, ChannelServerTransport};
 use crate::transport::{ServerTransport, TransportError};
 
 /// Server-side counters (exposed after shutdown).
@@ -58,7 +58,7 @@ pub struct ServerStats {
 
 /// Handle to a running edge server on the in-process channel transport.
 pub struct EdgeServer {
-    pub uplink: Sender<Uplink>,
+    pub uplink: SyncSender<Uplink>,
     handle: EdgeServerHandle,
 }
 
@@ -125,11 +125,11 @@ impl EdgeServer {
         mut decisions: DecisionMaker,
         compute: Option<Arc<dyn OffloadCompute>>,
     ) -> Result<(EdgeServer, Vec<Receiver<Downlink>>)> {
-        let (uplink_tx, uplink_rx) = channel::<Uplink>();
-        let mut downlink_txs: Vec<Sender<Downlink>> = Vec::with_capacity(cfg.n_ues);
+        let (uplink_tx, uplink_rx) = sync_channel::<Uplink>(channel::UPLINK_QUEUE);
+        let mut downlink_txs: Vec<SyncSender<Downlink>> = Vec::with_capacity(cfg.n_ues);
         let mut downlink_rxs: Vec<Receiver<Downlink>> = Vec::with_capacity(cfg.n_ues);
         for _ in 0..cfg.n_ues {
-            let (tx, rx) = channel();
+            let (tx, rx) = sync_channel(channel::DOWNLINK_QUEUE);
             downlink_txs.push(tx);
             downlink_rxs.push(rx);
         }
@@ -405,7 +405,7 @@ fn server_loop(
 /// server's broadcast count exactly when no broadcast was missed. Shared
 /// by `macci serve --policy` and the `policy_lifecycle` example.
 pub fn drive_env_ues(
-    uplink: &Sender<Uplink>,
+    uplink: &SyncSender<Uplink>,
     downlinks: &[Receiver<Downlink>],
     env: &mut MultiAgentEnv,
     frames: usize,
@@ -424,7 +424,8 @@ pub fn drive_env_ues(
             }));
         }
         let mut actions: Action = vec![HybridAction::new(0, 0, 0.0, env.cfg.p_max); n];
-        for (ue, rx) in downlinks.iter().enumerate() {
+        let slots = actions.iter_mut().zip(received.iter_mut());
+        for ((ue, rx), (slot, count)) in downlinks.iter().enumerate().zip(slots) {
             loop {
                 match rx.recv_timeout(Duration::from_secs(10)) {
                     Ok(Downlink::Decision(d)) => {
@@ -433,8 +434,10 @@ pub fn drive_env_ues(
                             "decision has {} actions for {n} UEs",
                             d.actions.len()
                         );
-                        actions[ue] = d.actions[ue];
-                        received[ue] += 1;
+                        if let Some(a) = d.actions.get(ue) {
+                            *slot = *a;
+                        }
+                        *count += 1;
                         break;
                     }
                     Ok(Downlink::Shutdown) => anyhow::bail!("server shut down mid-run"),

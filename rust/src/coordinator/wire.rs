@@ -133,8 +133,8 @@ impl std::fmt::Display for WireError {
             WireError::Truncated { have, need } => {
                 write!(f, "truncated frame: have {have} bytes, need {need}")
             }
-            WireError::BadMagic { got } => {
-                write!(f, "bad magic {:#04x} {:#04x}", got[0], got[1])
+            WireError::BadMagic { got: [a, b] } => {
+                write!(f, "bad magic {a:#04x} {b:#04x}")
             }
             WireError::Version { got } => {
                 write!(f, "unsupported wire version {got} (this build speaks {VERSION})")
@@ -173,6 +173,7 @@ const fn crc32_table() -> [u32; 256] {
             c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
             k += 1;
         }
+        // lint: allow(no-panic) — compile-time const-eval table build; i < 256 by the loop bound
         table[i] = c;
         i += 1;
     }
@@ -200,7 +201,10 @@ pub fn crc32_parts(parts: &[&[u8]]) -> u32 {
 
 fn crc32_update(mut c: u32, data: &[u8]) -> u32 {
     for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        // index through `get`: (x as u8) as usize ≤ 255, so the branch is
+        // provably dead and this stays panic-free without a pragma
+        let idx = (c ^ b as u32) as u8;
+        c = CRC_TABLE.get(idx as usize).copied().unwrap_or(0) ^ (c >> 8);
     }
     c
 }
@@ -303,16 +307,21 @@ fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
     (tag, e.0)
 }
 
+/// The 8 checksummed header bytes (magic + version + tag + length) — the
+/// "header prefix" the CRC covers alongside the body.
+fn header_prefix(tag: u8, body_len: usize) -> [u8; 8] {
+    let [m0, m1] = MAGIC;
+    let [l0, l1, l2, l3] = (body_len as u32).to_le_bytes();
+    [m0, m1, VERSION, tag, l0, l1, l2, l3]
+}
+
 /// Encode one frame into a fresh buffer (header + body).
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let (tag, body) = encode_body(frame);
+    let prefix = header_prefix(tag, body.len());
+    let crc = crc32_parts(&[&prefix, &body]);
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
-    out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
-    out.push(tag);
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    let crc = crc32_update(0xFFFF_FFFF, &out[..8]);
-    let crc = crc32_update(crc, &body) ^ 0xFFFF_FFFF;
+    out.extend_from_slice(&prefix);
     out.extend_from_slice(&crc.to_le_bytes());
     out.extend_from_slice(&body);
     out
@@ -327,38 +336,41 @@ struct Dec<'a> {
 
 impl<'a> Dec<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.buf.len() - self.pos < n {
-            return Err(WireError::Malformed(format!(
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            WireError::Malformed(format!("field length {n} overflows at offset {}", self.pos))
+        })?;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| {
+            WireError::Malformed(format!(
                 "body needs {n} more bytes at offset {}, only {} left",
-                self.pos, self.buf.len() - self.pos
-            )));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+                self.pos,
+                self.buf.len().saturating_sub(self.pos)
+            ))
+        })?;
+        self.pos = end;
         Ok(s)
     }
+    /// `take(N)` as a fixed array — every fixed-width field reads through
+    /// this, so the decode path never indexes a slice.
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
+        self.take(N)?
+            .try_into()
+            .map_err(|_| WireError::Malformed(format!("internal: take({N}) mis-sized")))
+    }
     fn u8(&mut self) -> Result<u8, WireError> {
-        Ok(self.take(1)?[0])
+        let [b] = self.arr::<1>()?;
+        Ok(b)
     }
     fn u32(&mut self) -> Result<u32, WireError> {
-        let b = self.take(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        Ok(u32::from_le_bytes(self.arr()?))
     }
     fn u64(&mut self) -> Result<u64, WireError> {
-        let b = self.take(8)?;
-        Ok(u64::from_le_bytes([
-            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
-        ]))
+        Ok(u64::from_le_bytes(self.arr()?))
     }
     fn f32(&mut self) -> Result<f32, WireError> {
-        let b = self.take(4)?;
-        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        Ok(f32::from_le_bytes(self.arr()?))
     }
     fn f64(&mut self) -> Result<f64, WireError> {
-        let b = self.take(8)?;
-        Ok(f64::from_le_bytes([
-            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
-        ]))
+        Ok(f64::from_le_bytes(self.arr()?))
     }
     fn bytes(&mut self) -> Result<&'a [u8], WireError> {
         let n = self.u32()? as usize;
@@ -482,47 +494,62 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
     Ok(frame)
 }
 
-/// Validate a 12-byte header; returns `(tag, body_len, crc)`.
-fn parse_header(h: &[u8]) -> Result<(u8, usize, u32), WireError> {
-    if h[0] != MAGIC[0] || h[1] != MAGIC[1] {
-        return Err(WireError::BadMagic { got: [h[0], h[1]] });
+/// A validated 12-byte header: the frame tag, body length, expected CRC,
+/// and the 8 checksummed prefix bytes (for [`crc32_parts`] verification).
+struct Header {
+    tag: u8,
+    body_len: usize,
+    crc: u32,
+    prefix: [u8; 8],
+}
+
+/// Validate a 12-byte header. A slice pattern destructures the bytes, so
+/// the decode path never indexes (a mis-sized slice is a typed error).
+fn parse_header(h: &[u8]) -> Result<Header, WireError> {
+    let &[m0, m1, version, tag, l0, l1, l2, l3, c0, c1, c2, c3] = h else {
+        return Err(WireError::Truncated {
+            have: h.len(),
+            need: HEADER_LEN,
+        });
+    };
+    if [m0, m1] != MAGIC {
+        return Err(WireError::BadMagic { got: [m0, m1] });
     }
-    if h[2] != VERSION {
-        return Err(WireError::Version { got: h[2] });
+    if version != VERSION {
+        return Err(WireError::Version { got: version });
     }
-    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
-    if len > MAX_BODY {
-        return Err(WireError::TooLarge { len });
+    let body_len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
+    if body_len > MAX_BODY {
+        return Err(WireError::TooLarge { len: body_len });
     }
-    let crc = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
-    Ok((h[3], len, crc))
+    let crc = u32::from_le_bytes([c0, c1, c2, c3]);
+    Ok(Header {
+        tag,
+        body_len,
+        crc,
+        prefix: [m0, m1, version, tag, l0, l1, l2, l3],
+    })
 }
 
 /// Decode the first frame in `buf`; returns the frame and the number of
 /// bytes it occupied. [`WireError::Truncated`] means "feed me more bytes" —
 /// callers accumulating a stream buffer retry once more arrive.
 pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireError> {
-    if buf.len() < HEADER_LEN {
-        return Err(WireError::Truncated {
-            have: buf.len(),
-            need: HEADER_LEN,
-        });
+    let header = buf.get(..HEADER_LEN).ok_or(WireError::Truncated {
+        have: buf.len(),
+        need: HEADER_LEN,
+    })?;
+    let h = parse_header(header)?;
+    let total = HEADER_LEN + h.body_len;
+    let body = buf.get(HEADER_LEN..total).ok_or(WireError::Truncated {
+        have: buf.len(),
+        need: total,
+    })?;
+    let got = crc32_parts(&[&h.prefix, body]);
+    if got != h.crc {
+        return Err(WireError::Corrupt { expect: h.crc, got });
     }
-    let (tag, body_len, crc) = parse_header(&buf[..HEADER_LEN])?;
-    let total = HEADER_LEN + body_len;
-    if buf.len() < total {
-        return Err(WireError::Truncated {
-            have: buf.len(),
-            need: total,
-        });
-    }
-    let body = &buf[HEADER_LEN..total];
-    let got = crc32_update(0xFFFF_FFFF, &buf[..8]);
-    let got = crc32_update(got, body) ^ 0xFFFF_FFFF;
-    if got != crc {
-        return Err(WireError::Corrupt { expect: crc, got });
-    }
-    Ok((decode_body(tag, body)?, total))
+    Ok((decode_body(h.tag, body)?, total))
 }
 
 /// Write one frame to a byte sink (one `write_all` — transports decide
@@ -548,7 +575,11 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     let mut header = [0u8; HEADER_LEN];
     let mut have = 0usize;
     while have < HEADER_LEN {
-        match r.read(&mut header[have..]) {
+        // `get_mut` instead of `header[have..]`: `have` is below
+        // HEADER_LEN by the loop condition, but the decode path indexes
+        // nothing, ever
+        let Some(dst) = header.get_mut(have..) else { break };
+        match r.read(dst) {
             Ok(0) if have == 0 => return Err(WireError::Closed),
             Ok(0) => {
                 return Err(WireError::Truncated {
@@ -561,24 +592,23 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
             Err(e) => return Err(WireError::Io(e)),
         }
     }
-    let (tag, body_len, crc) = parse_header(&header)?;
-    let mut body = vec![0u8; body_len];
+    let h = parse_header(&header)?;
+    let mut body = vec![0u8; h.body_len];
     r.read_exact(&mut body).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof {
             WireError::Truncated {
                 have: HEADER_LEN,
-                need: HEADER_LEN + body_len,
+                need: HEADER_LEN + h.body_len,
             }
         } else {
             WireError::Io(e)
         }
     })?;
-    let got = crc32_update(0xFFFF_FFFF, &header[..8]);
-    let got = crc32_update(got, &body) ^ 0xFFFF_FFFF;
-    if got != crc {
-        return Err(WireError::Corrupt { expect: crc, got });
+    let got = crc32_parts(&[&h.prefix, &body]);
+    if got != h.crc {
+        return Err(WireError::Corrupt { expect: h.crc, got });
     }
-    decode_body(tag, &body)
+    decode_body(h.tag, &body)
 }
 
 #[cfg(test)]

@@ -32,11 +32,7 @@ pub struct ExpContext {
 
 impl ExpContext {
     pub fn new(store: ArtifactStore, quick: bool) -> ExpContext {
-        let n_envs = std::env::var("MACCI_N_ENVS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .filter(|&e| e >= 1)
-            .unwrap_or(1);
+        let n_envs = crate::util::config::n_envs(1);
         if quick {
             ExpContext {
                 store,

@@ -80,9 +80,9 @@ fn env_logger_init() {
         fn flush(&self) {}
     }
     static LOGGER: L = L;
-    let level = match std::env::var("MACCI_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
+    let level = match macci::util::config::log_level() {
+        Some("debug") => log::LevelFilter::Debug,
+        Some("trace") => log::LevelFilter::Trace,
         _ => log::LevelFilter::Info,
     };
     let _ = log::set_logger(&LOGGER);

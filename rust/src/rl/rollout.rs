@@ -298,10 +298,13 @@ impl RolloutEngine {
             let critic: &CriticNet = critic;
             std::thread::scope(|s| -> Result<()> {
                 let mut handles = Vec::new();
-                for lanes in self.lanes.chunks_mut(chunk) {
-                    handles.push(s.spawn(move || {
-                        run_chunk(lanes, None, actors, critic, waves, dist)
-                    }));
+                for (i, lanes) in self.lanes.chunks_mut(chunk).enumerate() {
+                    let worker = std::thread::Builder::new()
+                        .name(format!("rollout-{i}"))
+                        .spawn_scoped(s, move || {
+                            run_chunk(lanes, None, actors, critic, waves, dist)
+                        })?;
+                    handles.push(worker);
                 }
                 for h in handles {
                     h.join().map_err(|_| anyhow!("rollout worker panicked"))??;

@@ -53,14 +53,15 @@ impl Precision {
         }
     }
 
-    /// Process-wide default from `MACCI_PRECISION` (unset → f32).
+    /// Process-wide default from `MACCI_PRECISION` (unset → f32). The
+    /// spelling is latched once via [`crate::util::config::precision`].
     pub fn from_env() -> Precision {
-        match std::env::var("MACCI_PRECISION") {
-            Ok(v) if !v.is_empty() => Precision::parse(&v).unwrap_or_else(|e| {
+        match crate::util::config::precision() {
+            Some(v) => Precision::parse(v).unwrap_or_else(|e| {
                 eprintln!("warning: {e}; falling back to f32");
                 Precision::F32
             }),
-            _ => Precision::F32,
+            None => Precision::F32,
         }
     }
 }
@@ -114,8 +115,8 @@ pub trait Backend: Send + Sync {
 /// native is the default (and the only choice without the `xla-pjrt`
 /// cargo feature).
 pub fn default_backend() -> Result<Arc<dyn Backend>> {
-    let choice = std::env::var("MACCI_BACKEND").unwrap_or_default();
-    match choice.as_str() {
+    let choice = crate::util::config::backend().unwrap_or_default();
+    match choice {
         "" | "native" => Ok(Arc::new(super::native::NativeBackend::with_precision(
             Precision::from_env(),
         ))),
@@ -152,7 +153,7 @@ mod tests {
     fn default_is_native_without_env() {
         // MACCI_BACKEND is not set under `cargo test`; the default resolves
         // to the native interpreter.
-        if std::env::var("MACCI_BACKEND").is_err() {
+        if crate::util::config::backend().is_none() {
             assert_eq!(default_backend().unwrap().name(), "native");
         }
     }

@@ -126,6 +126,8 @@ fn block4(
     #[cfg(target_arch = "x86_64")]
     if width == NR {
         match isa {
+            // SAFETY: AVX2 was runtime-detected for this arm; width == NR so
+            // the full-vector stores stay inside row `r + 3`'s panel columns
             Isa::Avx2 => unsafe {
                 micro4_avx2(
                     x.as_ptr().add(r * in_dim),
@@ -138,6 +140,7 @@ fn block4(
                 );
                 return;
             },
+            // SAFETY: SSE4.1 was runtime-detected; same full-width bound
             Isa::Sse41 => unsafe {
                 micro4_sse(
                     x.as_ptr().add(r * in_dim),
@@ -175,6 +178,8 @@ fn block1(
     #[cfg(target_arch = "x86_64")]
     if width == NR {
         match isa {
+            // SAFETY: AVX2 was runtime-detected for this arm; width == NR so
+            // the full-vector stores stay inside row `r`'s panel columns
             Isa::Avx2 => unsafe {
                 micro1_avx2(
                     x.as_ptr().add(r * in_dim),
@@ -185,6 +190,7 @@ fn block1(
                 );
                 return;
             },
+            // SAFETY: SSE4.1 was runtime-detected; same full-width bound
             Isa::Sse41 => unsafe {
                 micro1_sse(
                     x.as_ptr().add(r * in_dim),
@@ -236,6 +242,10 @@ fn micro_portable<const M: usize>(
     }
 }
 
+// SAFETY: caller must ensure AVX2 is available and that `x` covers 4
+// rows of `in_dim` through index `k1 - 1`, `panel` covers `k1 * NR`
+// floats, and `out` covers 4 rows of `out_dim` with NR valid columns
+// (block4 only enters at width == NR). All access is unaligned.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn micro4_avx2(
@@ -265,6 +275,8 @@ unsafe fn micro4_avx2(
     _mm256_storeu_ps(out.add(3 * out_dim), acc3);
 }
 
+// SAFETY: caller must ensure AVX2 is available, `x` valid through
+// `k1 - 1`, `panel` through `k1 * NR`, and NR columns writable at `out`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn micro1_avx2(x: *const f32, panel: *const f32, k0: usize, k1: usize, out: *mut f32) {
@@ -277,6 +289,8 @@ unsafe fn micro1_avx2(x: *const f32, panel: *const f32, k0: usize, k1: usize, ou
     _mm256_storeu_ps(out, acc);
 }
 
+// SAFETY: caller must ensure SSE4.1 is available, with the same 4-row /
+// `k1 * NR`-panel / NR-column bounds as `micro4_avx2`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn micro4_sse(
@@ -323,6 +337,8 @@ unsafe fn micro4_sse(
     _mm_storeu_ps(out.add(3 * out_dim + 4), hi3);
 }
 
+// SAFETY: caller must ensure SSE4.1 is available, `x` valid through
+// `k1 - 1`, `panel` through `k1 * NR`, and NR columns writable at `out`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn micro1_sse(x: *const f32, panel: *const f32, k0: usize, k1: usize, out: *mut f32) {

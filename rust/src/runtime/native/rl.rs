@@ -9,7 +9,7 @@
 //! §Kernel-Parity), so the native and PJRT backends train identically up
 //! to float rounding.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail, Result};
@@ -121,7 +121,10 @@ struct Warmed<P> {
     prep: P,
 }
 
-type WarmedMap<P> = RwLock<HashMap<usize, Arc<Warmed<P>>>>;
+// BTreeMap, not HashMap: the warmed cache sits on the bit-exactness hot
+// path and macci-lint rule R2 (`determinism`) bans hash-order iteration
+// there — `insert_warmed`'s GC retain() walks the map.
+type WarmedMap<P> = RwLock<BTreeMap<usize, Arc<Warmed<P>>>>;
 
 fn lookup_warmed<P>(map: &WarmedMap<P>, params_in: &TensorView) -> Option<Arc<Warmed<P>>> {
     let key = params_in.f32s().ok()?.as_ptr() as usize;
@@ -287,7 +290,7 @@ impl ActorProgram {
             p,
             c,
             precision,
-            warmed: RwLock::new(HashMap::new()),
+            warmed: RwLock::new(BTreeMap::new()),
             w_t0,
             b_t0: slot(spec, "b_t0")?.0,
             w_t1,
@@ -737,7 +740,7 @@ impl CriticProgram {
             c1,
             c2,
             precision,
-            warmed: RwLock::new(HashMap::new()),
+            warmed: RwLock::new(BTreeMap::new()),
             w_0,
             b_0: slot(spec, "b_0")?.0,
             w_1,

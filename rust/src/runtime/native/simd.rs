@@ -53,9 +53,7 @@ fn detect() -> Isa {
 }
 
 fn forced_scalar() -> bool {
-    std::env::var("MACCI_FORCE_SCALAR")
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false)
+    crate::util::config::force_scalar()
 }
 
 /// The ISA every dispatching kernel wrapper uses (detected once).
@@ -92,8 +90,11 @@ pub fn axpy(isa: Isa, dst: &mut [f32], a: f32, x: &[f32]) {
             }
         }
         Isa::Portable => axpy_portable(dst, a, x),
+        // SAFETY: this arm is reachable only when detect()/available() saw
+        // SSE4.1 at runtime — the one precondition of the target_feature fn
         #[cfg(target_arch = "x86_64")]
         Isa::Sse41 => unsafe { axpy_sse(dst, a, x) },
+        // SAFETY: reachable only when AVX2 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { axpy_avx2(dst, a, x) },
         #[cfg(not(target_arch = "x86_64"))]
@@ -121,6 +122,9 @@ fn axpy_portable(dst: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+// SAFETY: caller must ensure SSE4.1 is available (the dispatchers do).
+// All vector access is unaligned loadu/storeu at `i`, and every loop
+// guard keeps `i + 4 <= dst.len()` with `x.len() == dst.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn axpy_sse(dst: &mut [f32], a: f32, x: &[f32]) {
@@ -140,6 +144,8 @@ unsafe fn axpy_sse(dst: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 is available; unaligned loadu/storeu
+// only, with `i + 8 <= dst.len()` and `x.len() == dst.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(dst: &mut [f32], a: f32, x: &[f32]) {
@@ -174,8 +180,10 @@ pub fn div_scalar(isa: Isa, dst: &mut [f32], s: f32) {
             }
         }
         Isa::Portable => div_scalar_portable(dst, s),
+        // SAFETY: reachable only when SSE4.1 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Sse41 => unsafe { div_scalar_sse(dst, s) },
+        // SAFETY: reachable only when AVX2 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { div_scalar_avx2(dst, s) },
         #[cfg(not(target_arch = "x86_64"))]
@@ -202,6 +210,8 @@ fn div_scalar_portable(dst: &mut [f32], s: f32) {
     }
 }
 
+// SAFETY: caller must ensure SSE4.1 is available; unaligned loadu/storeu
+// only, with the loop guard keeping `i + 4 <= dst.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn div_scalar_sse(dst: &mut [f32], s: f32) {
@@ -220,6 +230,8 @@ unsafe fn div_scalar_sse(dst: &mut [f32], s: f32) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 is available; unaligned loadu/storeu
+// only, with the loop guard keeping `i + 8 <= dst.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn div_scalar_avx2(dst: &mut [f32], s: f32) {
@@ -248,8 +260,10 @@ pub fn dot_q8(isa: Isa, x: &[u8], w: &[i8]) -> i32 {
     debug_assert_eq!(x.len(), w.len());
     match isa {
         Isa::Scalar | Isa::Portable => dot_q8_portable(x, w),
+        // SAFETY: reachable only when SSE4.1 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Sse41 => unsafe { dot_q8_sse(x, w) },
+        // SAFETY: reachable only when AVX2 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { dot_q8_avx2(x, w) },
         #[cfg(not(target_arch = "x86_64"))]
@@ -261,6 +275,8 @@ fn dot_q8_portable(x: &[u8], w: &[i8]) -> i32 {
     x.iter().zip(w).map(|(&a, &b)| a as i32 * b as i32).sum()
 }
 
+// SAFETY: caller must ensure SSE4.1 is available; 64-bit unaligned loads
+// at `i` with the guard keeping `i + 8 <= x.len()` and equal lengths.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn dot_q8_sse(x: &[u8], w: &[i8]) -> i32 {
@@ -284,6 +300,8 @@ unsafe fn dot_q8_sse(x: &[u8], w: &[i8]) -> i32 {
     sum
 }
 
+// SAFETY: register-only lane arithmetic — no memory access; caller must
+// ensure SSE4.1 is available.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse4.1")]
 unsafe fn hsum_epi32_sse(v: std::arch::x86_64::__m128i) -> i32 {
@@ -293,6 +311,8 @@ unsafe fn hsum_epi32_sse(v: std::arch::x86_64::__m128i) -> i32 {
     _mm_cvtsi128_si32(s)
 }
 
+// SAFETY: caller must ensure AVX2 is available; 128-bit unaligned loads
+// at `i` with the guard keeping `i + 16 <= x.len()` and equal lengths.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_q8_avx2(x: &[u8], w: &[i8]) -> i32 {
@@ -328,6 +348,7 @@ unsafe fn dot_q8_avx2(x: &[u8], w: &[i8]) -> i32 {
 pub fn accum_u8(isa: Isa, acc: &mut [i32], wv: i32, x: &[u8]) {
     debug_assert_eq!(acc.len(), x.len());
     match isa {
+        // SAFETY: reachable only when AVX2 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { accum_u8_avx2(acc, wv, x) },
         _ => {
@@ -338,6 +359,8 @@ pub fn accum_u8(isa: Isa, acc: &mut [i32], wv: i32, x: &[u8]) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 is available; unaligned loads/stores
+// at `i` with the guard keeping `i + 8 <= acc.len()` and equal lengths.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn accum_u8_avx2(acc: &mut [i32], wv: i32, x: &[u8]) {
@@ -372,6 +395,7 @@ unsafe fn accum_u8_avx2(acc: &mut [i32], wv: i32, x: &[u8]) {
 pub fn quantize_row(isa: Isa, x: &[f32], lo: f32, inv_step: f32, out: &mut [u8]) {
     debug_assert_eq!(x.len(), out.len());
     match isa {
+        // SAFETY: reachable only when AVX2 was detected at runtime
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { quantize_row_avx2(x, lo, inv_step, out) },
         _ => {
@@ -387,6 +411,9 @@ fn quantize_one(v: f32, lo: f32, inv_step: f32) -> u8 {
     round_ties_even(((v - lo) * inv_step).clamp(0.0, 255.0)) as u8
 }
 
+// SAFETY: caller must ensure AVX2 is available; unaligned loads at `i`
+// bounded by `i + 8 <= x.len()`, stores into a local stack buffer, and
+// `out` writes go through the bounds-checked slice index.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn quantize_row_avx2(x: &[f32], lo: f32, inv_step: f32, out: &mut [u8]) {

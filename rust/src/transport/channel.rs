@@ -7,25 +7,34 @@
 //! ([`crate::coordinator::server::EdgeServer::spawn`]) is built on
 //! [`ChannelServerTransport::from_parts`].
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::time::Duration;
 
 use super::{ClientTransport, ServerTransport, TransportError};
 use crate::coordinator::protocol::{Downlink, Uplink};
 
+/// Uplink frames buffered across all in-process UEs before senders block
+/// (global backpressure toward the producers, never unbounded RAM).
+pub const UPLINK_QUEUE: usize = 4096;
+/// Downlink frames one UE may leave undrained before further frames to it
+/// are dropped — the in-process mirror of the TCP slow-consumer policy.
+pub const DOWNLINK_QUEUE: usize = 1024;
+
 /// Server side of the in-process transport: one shared uplink receiver
 /// plus one downlink sender per UE.
 pub struct ChannelServerTransport {
     uplink: Receiver<Uplink>,
-    downlinks: Vec<Sender<Downlink>>,
+    downlinks: Vec<SyncSender<Downlink>>,
 }
 
 impl ChannelServerTransport {
     /// Wrap raw channel halves (the server keeps handing out the matching
-    /// `Sender<Uplink>` / `Receiver<Downlink>` ends to in-process UEs).
+    /// `SyncSender<Uplink>` / `Receiver<Downlink>` ends to in-process UEs).
     pub fn from_parts(
         uplink: Receiver<Uplink>,
-        downlinks: Vec<Sender<Downlink>>,
+        downlinks: Vec<SyncSender<Downlink>>,
     ) -> ChannelServerTransport {
         ChannelServerTransport { uplink, downlinks }
     }
@@ -43,8 +52,17 @@ impl ServerTransport for ChannelServerTransport {
 
     fn send_to(&mut self, ue_id: usize, frame: Downlink) {
         if let Some(tx) = self.downlinks.get(ue_id) {
-            // a UE that dropped its receiver simply misses the frame
-            let _ = tx.send(frame);
+            match tx.try_send(frame) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    // a UE that stopped draining must not stall the server
+                    // loop: drop the frame, mirroring the TCP transport's
+                    // slow-consumer policy
+                    log::warn!("UE {ue_id} downlink queue full — frame dropped");
+                }
+                // a UE that dropped its receiver simply misses the frame
+                Err(TrySendError::Disconnected(_)) => {}
+            }
         }
     }
 }
@@ -52,14 +70,14 @@ impl ServerTransport for ChannelServerTransport {
 /// Client side of the in-process transport.
 pub struct ChannelClientTransport {
     ue_id: usize,
-    uplink: Sender<Uplink>,
+    uplink: SyncSender<Uplink>,
     downlink: Receiver<Downlink>,
 }
 
 impl ChannelClientTransport {
     pub fn new(
         ue_id: usize,
-        uplink: Sender<Uplink>,
+        uplink: SyncSender<Uplink>,
         downlink: Receiver<Downlink>,
     ) -> ChannelClientTransport {
         ChannelClientTransport {
@@ -90,11 +108,11 @@ impl ClientTransport for ChannelClientTransport {
 
 /// Build a connected in-process transport pair for `n_ues` clients.
 pub fn channel_transport(n_ues: usize) -> (ChannelServerTransport, Vec<ChannelClientTransport>) {
-    let (uplink_tx, uplink_rx) = channel();
+    let (uplink_tx, uplink_rx) = sync_channel(UPLINK_QUEUE);
     let mut downlink_txs = Vec::with_capacity(n_ues);
     let mut clients = Vec::with_capacity(n_ues);
     for ue_id in 0..n_ues {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(DOWNLINK_QUEUE);
         downlink_txs.push(tx);
         clients.push(ChannelClientTransport::new(ue_id, uplink_tx.clone(), rx));
     }

@@ -34,9 +34,7 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
-};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -46,10 +44,17 @@ use anyhow::{anyhow, Context, Result};
 use super::{ClientTransport, ServerTransport, TransportError};
 use crate::coordinator::protocol::{Downlink, SESSION_ERROR_TASK, Uplink};
 use crate::coordinator::wire::{read_frame, write_frame, Frame, WireError};
+use crate::util::sync::lock_unpoisoned;
 
 /// Downlink frames a single connection may buffer before the server
 /// evicts it as a slow consumer (per-UE backpressure bound).
 const WRITE_QUEUE: usize = 256;
+/// Decoded uplinks buffered across all connections before reader threads
+/// block (global backpressure toward the sockets, never unbounded RAM).
+const UPLINK_QUEUE: usize = 4096;
+/// Downlinks the client buffers before its reader thread blocks, pushing
+/// backpressure onto the socket instead of growing a queue without bound.
+const CLIENT_QUEUE: usize = 1024;
 /// How long a fresh connection gets to complete the `Hello`/`Welcome`
 /// handshake before the server gives up on it.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
@@ -90,7 +95,7 @@ impl TcpServerTransport {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true).context("listener nonblocking mode")?;
 
-        let (uplink_tx, uplink_rx) = channel::<Uplink>();
+        let (uplink_tx, uplink_rx) = sync_channel::<Uplink>(UPLINK_QUEUE);
         let peers: Arc<Mutex<HashMap<usize, Peer>>> = Arc::new(Mutex::new(HashMap::new()));
         let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
         let stop = Arc::new(AtomicBool::new(false));
@@ -120,7 +125,7 @@ impl TcpServerTransport {
                                     .spawn(move || serve_connection(stream, peers, tx, max_ues));
                                 match handle {
                                     Ok(h) => {
-                                        let mut conns = conns.lock().unwrap();
+                                        let mut conns = lock_unpoisoned(&conns);
                                         // reap finished connections so churn
                                         // doesn't leak handles and stream fds
                                         conns.retain(|(h, _)| !h.is_finished());
@@ -158,7 +163,7 @@ impl TcpServerTransport {
 
     /// UEs with a live registered session right now.
     pub fn connected(&self) -> usize {
-        self.peers.lock().unwrap().len()
+        lock_unpoisoned(&self.peers).len()
     }
 }
 
@@ -173,7 +178,7 @@ impl ServerTransport for TcpServerTransport {
         // clone the queue handle out of the lock so connection threads
         // never contend with an in-progress send
         let queue = {
-            let peers = self.peers.lock().unwrap();
+            let peers = lock_unpoisoned(&self.peers);
             peers.get(&ue_id).map(|p| p.queue.clone())
         };
         let Some(queue) = queue else {
@@ -187,14 +192,14 @@ impl ServerTransport for TcpServerTransport {
                 // able to stall the single routing thread (and with it
                 // every other UE): evict the slow consumer instead
                 log::warn!("UE {ue_id} write queue full — disconnecting the slow client");
-                if let Some(p) = self.peers.lock().unwrap().remove(&ue_id) {
+                if let Some(p) = lock_unpoisoned(&self.peers).remove(&ue_id) {
                     let _ = p.stream.shutdown(Shutdown::Both);
                 }
             }
             Err(TrySendError::Disconnected(_)) => {
                 // writer gone (client hung up): deregister so later
                 // sends stop queueing into the void
-                self.peers.lock().unwrap().remove(&ue_id);
+                lock_unpoisoned(&self.peers).remove(&ue_id);
             }
         }
     }
@@ -206,7 +211,12 @@ impl Drop for TcpServerTransport {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        // swap the uplink receiver out first: a connection thread parked
+        // in a full `send` only unblocks once the receiver drops, and the
+        // joins below would otherwise deadlock against it
+        let (_tx, drained) = sync_channel::<Uplink>(1);
+        self.uplink_rx = drained;
+        let conns = std::mem::take(&mut *lock_unpoisoned(&self.conns));
         for (_, stream) in &conns {
             // unblock readers parked in read_frame
             let _ = stream.shutdown(Shutdown::Both);
@@ -233,7 +243,7 @@ fn reject(stream: &mut TcpStream, why: String) {
 fn serve_connection(
     mut stream: TcpStream,
     peers: Arc<Mutex<HashMap<usize, Peer>>>,
-    uplink_tx: Sender<Uplink>,
+    uplink_tx: SyncSender<Uplink>,
     max_ues: usize,
 ) {
     // the listener is nonblocking and some platforms let accepted
@@ -267,7 +277,7 @@ fn serve_connection(
     };
     let (queue_tx, queue_rx) = sync_channel::<Downlink>(WRITE_QUEUE);
     let session = SESSION_CTR.fetch_add(1, Ordering::Relaxed);
-    match peers.lock().unwrap().entry(ue_id) {
+    match lock_unpoisoned(&peers).entry(ue_id) {
         Entry::Occupied(_) => {
             return reject(&mut stream, format!("ue_id {ue_id} already has a live session"))
         }
@@ -282,7 +292,7 @@ fn serve_connection(
     // Welcome goes out before the writer thread exists, so the two never
     // interleave bytes on the stream
     if write_frame(&mut stream, &Frame::Welcome { ue_id }).is_err() {
-        peers.lock().unwrap().remove(&ue_id);
+        lock_unpoisoned(&peers).remove(&ue_id);
         return;
     }
     let writer = std::thread::Builder::new()
@@ -324,7 +334,7 @@ fn serve_connection(
                 // framing is lost: NACK best-effort (only our own
                 // session, never a successor's), then drop the session
                 log::warn!("UE {ue_id} stream unrecoverable: {e}");
-                if let Some(p) = peers.lock().unwrap().get(&ue_id) {
+                if let Some(p) = lock_unpoisoned(&peers).get(&ue_id) {
                     if p.session == session {
                         let _ = p.queue.try_send(Downlink::Error {
                             task_id: SESSION_ERROR_TASK,
@@ -341,7 +351,7 @@ fn serve_connection(
     // evicted this entry and a reconnected successor may own the slot
     let mut vanished = !saw_goodbye;
     {
-        let mut map = peers.lock().unwrap();
+        let mut map = lock_unpoisoned(&peers);
         match map.get(&ue_id).map(|p| p.session == session) {
             Some(true) => {
                 map.remove(&ue_id);
@@ -413,7 +423,7 @@ impl TcpClientTransport {
         }
         stream.set_read_timeout(None).context("clearing read timeout")?;
 
-        let (tx, rx) = channel::<Downlink>();
+        let (tx, rx) = sync_channel::<Downlink>(CLIENT_QUEUE);
         let mut reader_stream = stream.try_clone().context("cloning the client stream")?;
         let reader = std::thread::Builder::new()
             .name(format!("ue-{ue_id}-reader"))
@@ -467,6 +477,10 @@ impl ClientTransport for TcpClientTransport {
 impl Drop for TcpClientTransport {
     fn drop(&mut self) {
         let _ = self.stream.shutdown(Shutdown::Both);
+        // the reader may be parked in a full queue send; dropping the
+        // receiver unblocks it so the join below cannot deadlock
+        let (_tx, drained) = sync_channel::<Downlink>(1);
+        self.rx = drained;
         if let Some(h) = self.reader.take() {
             let _ = h.join();
         }

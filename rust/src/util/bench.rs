@@ -38,12 +38,7 @@ impl Bench {
     pub fn new(group: &str) -> Bench {
         Bench {
             group: group.to_string(),
-            target: Duration::from_millis(
-                std::env::var("MACCI_BENCH_MS")
-                    .ok()
-                    .and_then(|v| v.parse().ok())
-                    .unwrap_or(700),
-            ),
+            target: Duration::from_millis(super::config::bench_ms(700)),
             results: Vec::new(),
             gauges: Vec::new(),
         }

@@ -1,0 +1,106 @@
+//! The single audited home for `MACCI_*` environment knobs.
+//!
+//! Every knob is **latched once per process** on first read: changing the
+//! environment afterwards has no effect, so a knob can never flip
+//! mid-run (the scattered-latch footgun that previously forced ci.sh to
+//! rerun kernel suites in fresh processes is now a structural guarantee
+//! for *every* knob, not just `MACCI_FORCE_SCALAR`). The invariant that
+//! raw `std::env::var` reads appear only in this module is machine-checked
+//! by macci-lint rule R4 (`env-config`).
+//!
+//! | variable                   | accessor                 | semantics |
+//! |----------------------------|--------------------------|-----------|
+//! | `MACCI_FORCE_SCALAR`       | [`force_scalar`]         | non-empty, ≠ "0" pins scalar kernels |
+//! | `MACCI_PRECISION`          | [`precision`]            | raw spelling; parsed by `Precision` |
+//! | `MACCI_BACKEND`            | [`backend`]              | raw spelling; parsed by `default_backend` |
+//! | `MACCI_N_ENVS`             | [`n_envs`]               | rollout lanes (≥ 1) |
+//! | `MACCI_BENCH_MS`           | [`bench_ms`]             | per-case bench budget |
+//! | `MACCI_BENCH_SERVING_TASKS`| [`bench_serving_tasks`]  | serving-bench tasks per UE |
+//! | `MACCI_LOG`                | [`log_level`]            | raw level spelling |
+
+use once_cell::sync::Lazy;
+
+/// The one raw environment read in the codebase (R4's audited exception).
+fn raw(name: &str) -> Option<String> {
+    // lint: allow(env-config) — this module IS the audited home for env reads
+    std::env::var(name).ok()
+}
+
+/// `raw`, with the common "set but empty means unset" convention applied.
+fn raw_nonempty(name: &str) -> Option<String> {
+    raw(name).filter(|v| !v.is_empty())
+}
+
+static FORCE_SCALAR: Lazy<bool> =
+    Lazy::new(|| raw("MACCI_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0").unwrap_or(false));
+static PRECISION: Lazy<Option<String>> = Lazy::new(|| raw_nonempty("MACCI_PRECISION"));
+static BACKEND: Lazy<Option<String>> = Lazy::new(|| raw_nonempty("MACCI_BACKEND"));
+static N_ENVS: Lazy<Option<usize>> =
+    Lazy::new(|| raw("MACCI_N_ENVS").and_then(|v| v.parse().ok()).filter(|&e| e >= 1));
+static BENCH_MS: Lazy<Option<u64>> =
+    Lazy::new(|| raw("MACCI_BENCH_MS").and_then(|v| v.parse().ok()));
+static BENCH_SERVING_TASKS: Lazy<Option<u64>> =
+    Lazy::new(|| raw("MACCI_BENCH_SERVING_TASKS").and_then(|v| v.parse().ok()));
+static LOG_LEVEL: Lazy<Option<String>> = Lazy::new(|| raw("MACCI_LOG"));
+
+/// `MACCI_FORCE_SCALAR`: pin the scalar reference kernels (any non-empty
+/// value other than `"0"`). Latched before the first kernel dispatch.
+pub fn force_scalar() -> bool {
+    *FORCE_SCALAR
+}
+
+/// `MACCI_PRECISION`: the raw precision spelling, if set and non-empty.
+/// Parsing (and the fallback-to-f32 warning) lives with
+/// `crate::runtime::backend::Precision`.
+pub fn precision() -> Option<&'static str> {
+    PRECISION.as_deref()
+}
+
+/// `MACCI_BACKEND`: the raw backend spelling, if set and non-empty.
+pub fn backend() -> Option<&'static str> {
+    BACKEND.as_deref()
+}
+
+/// `MACCI_N_ENVS`: rollout lanes per trainer; values < 1 and unparsable
+/// spellings fall back to `default`.
+pub fn n_envs(default: usize) -> usize {
+    N_ENVS.unwrap_or(default)
+}
+
+/// `MACCI_BENCH_MS`: per-case benchmark time budget in milliseconds.
+pub fn bench_ms(default_ms: u64) -> u64 {
+    BENCH_MS.unwrap_or(default_ms)
+}
+
+/// `MACCI_BENCH_SERVING_TASKS`: tasks per UE in the serving bench.
+pub fn bench_serving_tasks(default: u64) -> u64 {
+    BENCH_SERVING_TASKS.unwrap_or(default)
+}
+
+/// `MACCI_LOG`: the raw log-level spelling ("debug", "trace", ...).
+pub fn log_level() -> Option<&'static str> {
+    LOG_LEVEL.as_deref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_latch_and_default() {
+        // defaults must hold when the knobs are unset, and repeated reads
+        // must agree (latch-once)
+        if N_ENVS.is_none() {
+            assert_eq!(n_envs(1), 1);
+            assert_eq!(n_envs(4), 4);
+        }
+        if BENCH_MS.is_none() {
+            assert_eq!(bench_ms(700), 700);
+        }
+        if BENCH_SERVING_TASKS.is_none() {
+            assert_eq!(bench_serving_tasks(64), 64);
+        }
+        assert_eq!(force_scalar(), force_scalar());
+        assert_eq!(precision(), precision());
+    }
+}

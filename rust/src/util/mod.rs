@@ -1,5 +1,6 @@
 //! In-repo substrates for the offline build: JSON, RNG, CLI parsing,
-//! a micro-benchmark harness and a property-testing helper.
+//! a micro-benchmark harness, a property-testing helper, the audited
+//! home for env knobs ([`config`]) and poison-tolerant locks ([`sync`]).
 //!
 //! These exist because the build is fully offline (vendored crates only) —
 //! serde_json / rand / clap / criterion / proptest are not available, and
@@ -9,6 +10,8 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod config;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;

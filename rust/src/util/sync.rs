@@ -1,0 +1,56 @@
+//! Poison-tolerant lock helpers for the panic-free serving path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a cascade:
+//! every other thread touching the lock panics too. The no-panic zones
+//! (macci-lint rule R1) use these accessors instead — a poisoned lock
+//! yields its inner guard and the system keeps serving. That is safe
+//! here because every guarded structure (peer maps, job queues, warmed
+//! caches) is valid after any partial update: entries are inserted or
+//! removed atomically with respect to the guard.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking (the poisoning thread's panic was already reported).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poison instead of panicking.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poison instead of panicking.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisoned_mutex_still_yields_its_guard() {
+        let m = std::sync::Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        let _ = std::thread::Builder::new()
+            .name("poisoner".into())
+            .spawn(move || {
+                let _g = m2.lock().unwrap();
+                panic!("poison the lock");
+            })
+            .map(|h| h.join());
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_roundtrip() {
+        let l = RwLock::new(1);
+        *write_unpoisoned(&l) = 2;
+        assert_eq!(*read_unpoisoned(&l), 2);
+    }
+}

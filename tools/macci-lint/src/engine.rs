@@ -1,0 +1,532 @@
+//! The module-scoped rule engine: maps files to module paths, masks
+//! `#[cfg(test)]` regions, applies suppression pragmas, and runs the six
+//! repo rules over the token stream (see DESIGN.md §Static-Analysis).
+
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{lex, Kind, Tok};
+
+/// A rule's identity and the module zones it patrols. `"*"` means every
+/// walked module (minus `#[cfg(test)]` regions, which no rule scans).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub zones: &'static [&'static str],
+    /// One-line statement of the invariant the rule protects.
+    pub invariant: &'static str,
+}
+
+const R1_ZONES: &[&str] =
+    &["coordinator::wire", "coordinator::server", "coordinator::executor", "transport"];
+const R5_ZONES: &[&str] =
+    &["runtime::native::simd", "runtime::native::gemm", "runtime::native::quant8"];
+
+/// The rule set, in report order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "R1",
+        name: "no-panic",
+        zones: R1_ZONES,
+        invariant: "hostile or truncated input can never panic the serving path",
+    },
+    RuleInfo {
+        id: "R2",
+        name: "determinism",
+        zones: &["runtime::native", "rl"],
+        invariant: "bit-exact kernels: no FMA/mul_add, no unordered map iteration",
+    },
+    RuleInfo {
+        id: "R3",
+        name: "bounded-channels",
+        zones: &["coordinator", "transport"],
+        invariant: "every queue has a depth bound (or a reviewed pragma)",
+    },
+    RuleInfo {
+        id: "R4",
+        name: "env-config",
+        zones: &["*"],
+        invariant: "env knobs latch once, in util::config only",
+    },
+    RuleInfo {
+        id: "R5",
+        name: "unsafe-safety",
+        zones: R5_ZONES,
+        invariant: "every unsafe site documents why it is sound",
+    },
+    RuleInfo {
+        id: "R6",
+        name: "named-threads",
+        zones: &["*"],
+        invariant: "every thread has a name for debuggable supervision",
+    },
+];
+
+/// One unsuppressed violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (`"R1"`) — or `"pragma"` for a malformed pragma itself.
+    pub rule: String,
+    /// Rule kebab name (`"no-panic"`).
+    pub name: String,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// A violation silenced by a `// lint: allow(<rule>) — <reason>` pragma.
+#[derive(Debug, Clone)]
+pub struct Suppressed {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// Everything one lint run produced.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    pub files_scanned: usize,
+}
+
+struct Pragma {
+    rule: String,
+    reason: String,
+    /// Lines this pragma covers: its own, and the next line with code.
+    covers: (u32, u32),
+}
+
+/// A rule hit before suppression/test-mask filtering.
+type Raw = (&'static RuleInfo, u32, u32, String);
+
+/// Lint one file's source, attributed to `module` (e.g.
+/// `"coordinator::wire"`, `"tests::proptests"`). Exposed so the fixture
+/// tests can claim zone membership for synthetic sources.
+pub fn lint_source(module: &str, file: &str, src: &str) -> LintReport {
+    let toks = lex(src);
+    let code: Vec<&Tok> = toks.iter().filter(|t| is_code(t)).collect();
+    let test_spans = test_mod_spans(&code);
+    let in_tests = |line: u32| test_spans.iter().any(|&(a, b)| a <= line && line <= b);
+
+    let mut report = LintReport { files_scanned: 1, ..Default::default() };
+    let mut pragmas = Vec::new();
+    for t in toks.iter().filter(|t| !is_code(t)) {
+        match parse_pragma(t, &code) {
+            Ok(Some(p)) => pragmas.push(p),
+            Ok(None) => {}
+            Err(msg) => report.findings.push(Finding {
+                rule: "pragma".into(),
+                name: "pragma".into(),
+                file: file.into(),
+                line: t.line,
+                col: t.col,
+                message: msg,
+            }),
+        }
+    }
+
+    let mut raw: Vec<Raw> = Vec::new();
+    rule_no_panic(module, &code, &mut raw);
+    rule_determinism(module, &code, &mut raw);
+    rule_bounded_channels(module, &code, &mut raw);
+    rule_env_config(&code, &mut raw);
+    rule_unsafe_safety(module, &toks, &code, &mut raw);
+    rule_named_threads(module, &code, &mut raw);
+
+    for (rule, line, col, message) in raw {
+        if in_tests(line) {
+            continue;
+        }
+        let pragma = pragmas
+            .iter()
+            .find(|p| (p.rule == rule.id || p.rule == rule.name) && covers(p, line));
+        match pragma {
+            Some(p) => report.suppressed.push(Suppressed {
+                rule: rule.id.into(),
+                file: file.into(),
+                line,
+                reason: p.reason.clone(),
+            }),
+            None => report.findings.push(Finding {
+                rule: rule.id.into(),
+                name: rule.name.into(),
+                file: file.into(),
+                line,
+                col,
+                message,
+            }),
+        }
+    }
+    report
+}
+
+/// The directories the linter walks, with the module-path prefix each
+/// one contributes.
+const ROOTS: [(&str, &str); 4] = [
+    ("rust/src", ""),
+    ("rust/tests", "tests"),
+    ("rust/benches", "benches"),
+    ("examples", "examples"),
+];
+
+/// Lint the whole repo at `root`.
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    let mut report = LintReport::default();
+    for (dir, prefix) in ROOTS {
+        let base = root.join(dir);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&base, &mut files)?;
+        files.sort();
+        for f in files {
+            let src = std::fs::read_to_string(&f)?;
+            let module = module_path(&base, prefix, &f);
+            let rel = f.strip_prefix(root).unwrap_or(&f);
+            let label = rel.to_string_lossy().replace('\\', "/");
+            let one = lint_source(&module, &label, &src);
+            report.findings.extend(one.findings);
+            report.suppressed.extend(one.suppressed);
+            report.files_scanned += 1;
+        }
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `rust/src/coordinator/wire.rs` → `coordinator::wire`;
+/// `rust/src/lib.rs` → `` (crate root); `rust/tests/proptests.rs` →
+/// `tests::proptests`; `mod.rs` files collapse onto their directory.
+fn module_path(base: &Path, prefix: &str, file: &Path) -> String {
+    let rel = file.strip_prefix(base).unwrap_or(file);
+    let mut parts: Vec<String> = Vec::new();
+    if !prefix.is_empty() {
+        parts.push(prefix.to_string());
+    }
+    for comp in rel.components() {
+        parts.push(comp.as_os_str().to_string_lossy().to_string());
+    }
+    if let Some(last) = parts.last_mut() {
+        *last = last.trim_end_matches(".rs").to_string();
+        if *last == "mod" || *last == "lib" {
+            parts.pop();
+        }
+    }
+    parts.join("::")
+}
+
+fn is_code(t: &Tok) -> bool {
+    t.kind != Kind::LineComment && t.kind != Kind::BlockComment
+}
+
+fn zone_match(module: &str, zones: &[&str]) -> bool {
+    let sub_of = |z: &str| module == z || module.starts_with(&format!("{z}::"));
+    zones.iter().any(|z| *z == "*" || sub_of(z))
+}
+
+fn covers(p: &Pragma, line: u32) -> bool {
+    line == p.covers.0 || line == p.covers.1
+}
+
+/// Parse `lint: allow(<rule>) — <reason>` out of a comment token.
+/// `Ok(None)`: not a pragma at all. `Err`: a pragma with no reason —
+/// itself a finding, since unreviewable suppressions are exactly what
+/// the mandatory-reason policy exists to prevent.
+fn parse_pragma(t: &Tok, code: &[&Tok]) -> Result<Option<Pragma>, String> {
+    let Some(at) = t.text.find("lint: allow(") else {
+        return Ok(None);
+    };
+    let rest = &t.text[at + "lint: allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Err("malformed pragma: missing `)` after the rule name".into());
+    };
+    let rule = rest[..close].trim().to_string();
+    let mut reason = rest[close + 1..].trim_start();
+    let mut separated = false;
+    for sep in ["—", "--", "-"] {
+        if let Some(r) = reason.strip_prefix(sep) {
+            reason = r.trim_start();
+            separated = true;
+            break;
+        }
+    }
+    if !separated || reason.is_empty() {
+        return Err(format!(
+            "pragma for `{rule}` has no reason: write `// lint: allow({rule}) — <why>`"
+        ));
+    }
+    let next_code = code.iter().map(|c| c.line).find(|&l| l > t.line);
+    Ok(Some(Pragma {
+        rule,
+        reason: reason.to_string(),
+        covers: (t.line, next_code.unwrap_or(t.line)),
+    }))
+}
+
+/// Line spans (inclusive) of every `#[cfg(test)] mod <name> { ... }` —
+/// no rule fires inside them: tests may unwrap, panic, and index freely.
+fn test_mod_spans(code: &[&Tok]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !is_cfg_test_attr(code, i) {
+            i += 1;
+            continue;
+        }
+        // skip this and any stacked attributes, then expect `mod name {`
+        let mut j = i;
+        while punct(code, j) == Some('#') && punct(code, j + 1) == Some('[') {
+            match skip_attr(code, j) {
+                Some(next) => j = next,
+                None => return spans,
+            }
+        }
+        if ident(code, j) != Some("mod") || punct(code, j + 2) != Some('{') {
+            i += 1;
+            continue;
+        }
+        let start = code[i].line;
+        let mut end = code.last().map(|t| t.line).unwrap_or(start);
+        let mut depth = 0usize;
+        let mut k = j + 2;
+        while k < code.len() {
+            match punct(code, k) {
+                Some('{') => depth += 1,
+                Some('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = code[k].line;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        spans.push((start, end));
+        i = k + 1;
+    }
+    spans
+}
+
+/// Given `code[at] == '#'` starting an attribute, return the index just
+/// past its closing `]`, or `None` at EOF.
+fn skip_attr(code: &[&Tok], at: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = at + 1;
+    while j < code.len() {
+        match punct(code, j) {
+            Some('[') => depth += 1,
+            Some(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j + 1);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Is `code[i..]` exactly `# [ cfg ( test ) ]`?
+fn is_cfg_test_attr(code: &[&Tok], i: usize) -> bool {
+    punct(code, i) == Some('#')
+        && punct(code, i + 1) == Some('[')
+        && ident(code, i + 2) == Some("cfg")
+        && punct(code, i + 3) == Some('(')
+        && ident(code, i + 4) == Some("test")
+        && punct(code, i + 5) == Some(')')
+        && punct(code, i + 6) == Some(']')
+}
+
+fn punct(code: &[&Tok], i: usize) -> Option<char> {
+    code.get(i).filter(|t| t.kind == Kind::Punct).map(|t| t.ch())
+}
+
+fn ident<'a>(code: &[&'a Tok], i: usize) -> Option<&'a str> {
+    code.get(i).filter(|t| t.kind == Kind::Ident).map(|t| t.text.as_str())
+}
+
+/// Keywords that may legitimately precede `[` (slice patterns, array
+/// types/literals) — everything else before `[` reads as an index.
+fn bracket_keyword(s: &str) -> bool {
+    let kws = "as await box break const dyn else for if impl in let loop match \
+               mod move mut pub ref return static unsafe use where while yield";
+    kws.split_whitespace().any(|k| k == s)
+}
+
+fn rule_no_panic(module: &str, code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[0];
+    if !zone_match(module, rule.zones) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if t.kind == Kind::Ident {
+            let panicky_method = matches!(
+                t.text.as_str(),
+                "unwrap" | "expect" | "unwrap_err" | "expect_err" | "unwrap_unchecked"
+            );
+            // only as a method call (`.unwrap()`), so a struct field or
+            // enum variant named `expect` doesn't trip the rule
+            if panicky_method && i > 0 && punct(code, i - 1) == Some('.') {
+                let msg = format!("`{}()` in a no-panic zone — return a typed error", t.text);
+                out.push((rule, t.line, t.col, msg));
+            }
+            let panicky_macro =
+                matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented");
+            if panicky_macro && punct(code, i + 1) == Some('!') {
+                let msg = format!("`{}!` in a no-panic zone — return a typed error", t.text);
+                out.push((rule, t.line, t.col, msg));
+            }
+        }
+        if t.kind == Kind::Punct && t.ch() == '[' && i > 0 {
+            let p = code[i - 1];
+            let indexes = match p.kind {
+                Kind::Ident => !bracket_keyword(&p.text),
+                Kind::Punct => matches!(p.ch(), ')' | ']' | '?'),
+                _ => false,
+            };
+            if indexes {
+                let msg = "direct indexing in a no-panic zone — use `.get()` or patterns".into();
+                out.push((rule, t.line, t.col, msg));
+            }
+        }
+    }
+}
+
+fn rule_determinism(module: &str, code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[1];
+    if !zone_match(module, rule.zones) {
+        return;
+    }
+    for t in code {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        let fma_intrinsic =
+            name.starts_with("_mm") && (name.contains("fmadd") || name.contains("fmsub"));
+        if name == "mul_add" || fma_intrinsic {
+            let msg = format!("`{name}` fuses the mul-add rounding step — breaks bit-exactness");
+            out.push((rule, t.line, t.col, msg));
+        }
+        if name == "HashMap" || name == "HashSet" {
+            let msg = format!("`{name}` iterates in nondeterministic order — use a BTree map/set");
+            out.push((rule, t.line, t.col, msg));
+        }
+    }
+}
+
+fn rule_bounded_channels(module: &str, code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[2];
+    if !zone_match(module, rule.zones) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if t.kind != Kind::Ident || t.text != "channel" {
+            continue;
+        }
+        let direct_call = punct(code, i + 1) == Some('(');
+        let turbofish = punct(code, i + 1) == Some(':')
+            && punct(code, i + 2) == Some(':')
+            && punct(code, i + 3) == Some('<');
+        if direct_call || turbofish {
+            let msg = "unbounded `mpsc::channel()` — use `sync_channel` or a pragma".to_string();
+            out.push((rule, t.line, t.col, msg));
+        }
+    }
+}
+
+fn rule_env_config(code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[3];
+    for (i, t) in code.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "var" && t.text != "var_os") {
+            continue;
+        }
+        let env_path = i >= 3
+            && punct(code, i - 1) == Some(':')
+            && punct(code, i - 2) == Some(':')
+            && ident(code, i - 3) == Some("env");
+        if env_path {
+            let msg = format!("raw `env::{}` — go through util::config accessors", t.text);
+            out.push((rule, t.line, t.col, msg));
+        }
+    }
+}
+
+fn rule_unsafe_safety(module: &str, toks: &[Tok], code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[4];
+    if !zone_match(module, rule.zones) {
+        return;
+    }
+    for t in code {
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if !has_safety_comment(toks, code, t.line) {
+            let msg = "`unsafe` without a `// SAFETY:` comment for why it is sound".into();
+            out.push((rule, t.line, t.col, msg));
+        }
+    }
+}
+
+/// A `// SAFETY:` comment justifies an `unsafe` on `line` if it sits on
+/// the same line, or in the contiguous comment/attribute block above it.
+fn has_safety_comment(toks: &[Tok], code: &[&Tok], line: u32) -> bool {
+    let comment_on =
+        |l: u32| toks.iter().any(|t| !is_code(t) && t.line == l && t.text.contains("SAFETY:"));
+    if comment_on(line) {
+        return true;
+    }
+    let mut ln = line.saturating_sub(1);
+    while ln >= 1 {
+        if comment_on(ln) {
+            return true;
+        }
+        // a real code line (not an attribute) ends the block above;
+        // attribute, blank, and plain comment lines keep the scan going
+        if let Some(t) = code.iter().find(|t| t.line == ln) {
+            if t.ch() != '#' {
+                return false;
+            }
+        }
+        ln -= 1;
+    }
+    false
+}
+
+fn rule_named_threads(module: &str, code: &[&Tok], out: &mut Vec<Raw>) {
+    let rule = &RULES[5];
+    let head = module.split("::").next().unwrap_or(module);
+    if head == "tests" || head == "benches" {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        let spawn = t.kind == Kind::Ident
+            && t.text == "spawn"
+            && i >= 3
+            && punct(code, i - 1) == Some(':')
+            && punct(code, i - 2) == Some(':')
+            && ident(code, i - 3) == Some("thread");
+        if spawn {
+            let msg = "anonymous `thread::spawn` — name it via `Builder::new().name(..)`".into();
+            out.push((rule, t.line, t.col, msg));
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! A minimal Rust lexer: just enough token structure for module-scoped
+//! pattern rules, with exact comment/string/char-literal handling so a
+//! rule can never fire on text inside a literal or a comment.
+//!
+//! Not a full grammar — no keyword/ident distinction (rules match ident
+//! text directly), no operator gluing (`::` is two `:` tokens). What it
+//! does get right, because the rules depend on it: line comments, nested
+//! block comments, string escapes, raw strings with arbitrary `#`
+//! fences, byte/raw-byte strings, char literals vs lifetimes, and raw
+//! identifiers (`r#match`).
+
+/// What a token is, as far as the rules care.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`unwrap`, `unsafe`, `match`, ...).
+    Ident,
+    /// A single punctuation character (`[`, `:`, `!`, ...).
+    Punct,
+    /// Numeric literal.
+    Num,
+    /// String / raw string / byte string / char literal.
+    Literal,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// `// ...` comment, text without the slashes.
+    LineComment,
+    /// `/* ... */` comment (nesting folded), full inner text.
+    BlockComment,
+}
+
+/// One token with its source position (1-based line and column).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Tok {
+    /// The single character of a `Punct` token.
+    pub fn ch(&self) -> char {
+        self.text.chars().next().unwrap_or('\0')
+    }
+}
+
+fn tok(kind: Kind, text: String, line: u32, col: u32) -> Tok {
+    Tok { kind, text, line, col }
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> u8 {
+        self.src.get(self.pos + ahead).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let b = self.peek(0);
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        b
+    }
+
+    fn eof(&self) -> bool {
+        self.pos >= self.src.len()
+    }
+
+    fn take_while(&mut self, pred: fn(u8) -> bool) -> String {
+        let mut text = String::new();
+        while !self.eof() && pred(self.peek(0)) {
+            text.push(self.bump() as char);
+        }
+        text
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// How many `#` fence characters a raw string opener has at offset `at`,
+/// or `None` if the cursor is not looking at a raw string opener.
+fn raw_fence(c: &Cursor, mut at: usize) -> Option<usize> {
+    let mut hashes = 0usize;
+    while c.peek(at) == b'#' {
+        hashes += 1;
+        at += 1;
+    }
+    (c.peek(at) == b'"').then_some(hashes)
+}
+
+/// Does the cursor sit on `r"`, `r#"`, `b"`, `b'`, `br"`, or `br#"`?
+fn raw_or_byte_literal_start(c: &Cursor) -> bool {
+    match c.peek(0) {
+        b'r' => raw_fence(c, 1).is_some(),
+        b'b' => match c.peek(1) {
+            b'"' | b'\'' => true,
+            b'r' => raw_fence(c, 2).is_some(),
+            _ => false,
+        },
+        _ => false,
+    }
+}
+
+/// Tokenize `src`. Unterminated literals/comments simply end at EOF —
+/// the linter reads real, compiling source, so error recovery is moot.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut c = Cursor { src: src.as_bytes(), pos: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    while !c.eof() {
+        let (line, col) = (c.line, c.col);
+        let b = c.peek(0);
+        if b == b' ' || b == b'\t' || b == b'\r' || b == b'\n' {
+            c.bump();
+        } else if b == b'/' && c.peek(1) == b'/' {
+            c.bump();
+            c.bump();
+            let mut text = String::new();
+            while !c.eof() && c.peek(0) != b'\n' {
+                text.push(c.bump() as char);
+            }
+            out.push(tok(Kind::LineComment, text, line, col));
+        } else if b == b'/' && c.peek(1) == b'*' {
+            out.push(tok(Kind::BlockComment, lex_block_comment(&mut c), line, col));
+        } else if raw_or_byte_literal_start(&c) {
+            out.push(tok(Kind::Literal, lex_raw_or_byte_literal(&mut c), line, col));
+        } else if b == b'r' && c.peek(1) == b'#' && is_ident_start(c.peek(2)) {
+            c.bump();
+            c.bump();
+            out.push(tok(Kind::Ident, c.take_while(is_ident_cont), line, col));
+        } else if is_ident_start(b) {
+            out.push(tok(Kind::Ident, c.take_while(is_ident_cont), line, col));
+        } else if b.is_ascii_digit() {
+            let mut text = c.take_while(is_ident_cont);
+            // fractional part — but not the `..` of a range like `1..n`
+            if c.peek(0) == b'.' && c.peek(1).is_ascii_digit() {
+                text.push(c.bump() as char);
+                text.push_str(&c.take_while(is_ident_cont));
+            }
+            out.push(tok(Kind::Num, text, line, col));
+        } else if b == b'"' {
+            out.push(tok(Kind::Literal, lex_quoted(&mut c, b'"'), line, col));
+        } else if b == b'\'' {
+            // lifetime ('a, 'static) vs char literal ('x', '\n', '\'')
+            if is_ident_start(c.peek(1)) && c.peek(2) != b'\'' {
+                c.bump();
+                let text = format!("'{}", c.take_while(is_ident_cont));
+                out.push(tok(Kind::Lifetime, text, line, col));
+            } else {
+                out.push(tok(Kind::Literal, lex_quoted(&mut c, b'\''), line, col));
+            }
+        } else {
+            c.bump();
+            out.push(tok(Kind::Punct, (b as char).to_string(), line, col));
+        }
+    }
+    out
+}
+
+/// Lex a (possibly nested) `/* ... */` comment, delimiters consumed.
+fn lex_block_comment(c: &mut Cursor) -> String {
+    c.bump();
+    c.bump();
+    let mut depth = 1usize;
+    let mut text = String::new();
+    while !c.eof() && depth > 0 {
+        if c.peek(0) == b'/' && c.peek(1) == b'*' {
+            depth += 1;
+            c.bump();
+            c.bump();
+            text.push_str("/*");
+        } else if c.peek(0) == b'*' && c.peek(1) == b'/' {
+            depth -= 1;
+            c.bump();
+            c.bump();
+            if depth > 0 {
+                text.push_str("*/");
+            }
+        } else {
+            text.push(c.bump() as char);
+        }
+    }
+    text
+}
+
+/// Lex `r"..."`, `r#"..."#`, `b"..."`, `b'.'`, `br"..."`, `br#"..."#`.
+fn lex_raw_or_byte_literal(c: &mut Cursor) -> String {
+    if c.peek(0) == b'b' {
+        c.bump();
+        match c.peek(0) {
+            b'"' => return lex_quoted(c, b'"'),
+            b'\'' => return lex_quoted(c, b'\''),
+            _ => {} // br... falls through to the raw case
+        }
+    }
+    c.bump(); // the r
+    let mut fence = 0usize;
+    while c.peek(0) == b'#' {
+        fence += 1;
+        c.bump();
+    }
+    c.bump(); // opening quote
+    let mut text = String::new();
+    loop {
+        if c.eof() {
+            return text;
+        }
+        if c.peek(0) == b'"' {
+            let mut close = 0usize;
+            while close < fence && c.peek(1 + close) == b'#' {
+                close += 1;
+            }
+            if close == fence {
+                c.bump();
+                for _ in 0..fence {
+                    c.bump();
+                }
+                return text;
+            }
+        }
+        text.push(c.bump() as char);
+    }
+}
+
+/// Lex an escaped quoted literal (string or char), quotes consumed.
+/// Escapes are unwrapped (`\"` keeps the quote, `\n` keeps the `n`) —
+/// rules only ever substring-match literal text, never re-parse it.
+fn lex_quoted(c: &mut Cursor, quote: u8) -> String {
+    c.bump();
+    let mut text = String::new();
+    while !c.eof() {
+        let b = c.peek(0);
+        if b == b'\\' {
+            c.bump();
+            if !c.eof() {
+                text.push(c.bump() as char);
+            }
+        } else if b == quote {
+            c.bump();
+            break;
+        } else {
+            text.push(c.bump() as char);
+        }
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn has(toks: &[(Kind, String)], kind: Kind, text: &str) -> bool {
+        toks.iter().any(|(k, t)| *k == kind && t == text)
+    }
+
+    #[test]
+    fn strings_hide_their_contents_from_rules() {
+        let toks = kinds(r#"let s = "unwrap() // not a comment";"#);
+        assert!(has(&toks, Kind::Literal, "unwrap() // not a comment"));
+        assert!(!toks.iter().any(|(k, _)| *k == Kind::LineComment));
+        assert!(!has(&toks, Kind::Ident, "unwrap"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences_and_embedded_quotes() {
+        let src = "let s = r#\"a \"quoted\" panic!()\"#; let t = 1;";
+        let toks = kinds(src);
+        assert!(has(&toks, Kind::Literal, "a \"quoted\" panic!()"));
+        // the lexer resumes cleanly after the closing fence
+        assert!(has(&toks, Kind::Ident, "t"));
+    }
+
+    #[test]
+    fn nested_block_comments_fold_into_one_token() {
+        let toks = kinds("a /* outer /* inner */ still outer */ b");
+        assert_eq!(toks[0], (Kind::Ident, "a".into()));
+        assert_eq!(toks[1].0, Kind::BlockComment);
+        assert!(toks[1].1.contains("inner"));
+        assert_eq!(toks[2], (Kind::Ident, "b".into()));
+    }
+
+    #[test]
+    fn char_literals_are_not_lifetimes() {
+        let toks = kinds("let c = 'a'; let l: &'static str = x; let e = '\\n';");
+        assert!(has(&toks, Kind::Literal, "a"));
+        assert!(has(&toks, Kind::Lifetime, "'static"));
+        assert!(has(&toks, Kind::Literal, "n"));
+    }
+
+    #[test]
+    fn line_positions_are_one_based_and_accurate() {
+        let toks = lex("ab\n  cd");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_range_dots() {
+        let toks = kinds("for i in 0..256 { x(1.5); }");
+        assert!(has(&toks, Kind::Num, "0"));
+        assert!(has(&toks, Kind::Num, "256"));
+        assert!(has(&toks, Kind::Num, "1.5"));
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let toks = kinds("let r#type = 1;");
+        assert!(has(&toks, Kind::Ident, "type"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_literals() {
+        let toks = kinds(r##"let a = b"unwrap"; let b2 = b'x'; let c = br#"todo!()"#;"##);
+        assert!(has(&toks, Kind::Literal, "unwrap"));
+        assert!(has(&toks, Kind::Literal, "x"));
+        assert!(has(&toks, Kind::Literal, "todo!()"));
+        assert!(!has(&toks, Kind::Ident, "unwrap"));
+    }
+}

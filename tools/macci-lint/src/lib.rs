@@ -1,0 +1,16 @@
+//! macci-lint: the workspace's invariant linter (DESIGN.md §Static-Analysis).
+//!
+//! Six module-scoped rules guard invariants `clippy` cannot see because
+//! they are repo policy, not Rust policy: no-panic zones on the serving
+//! path (R1), bit-exact determinism in the kernels (R2), bounded queues
+//! in the coordinator/transport (R3), latch-once env discipline (R4),
+//! `// SAFETY:` audits on `unsafe` (R5), and named threads (R6).
+//!
+//! Violations are silenced only by an inline pragma with a mandatory
+//! reason: `// lint: allow(<rule>) — <why>`. A pragma without a reason
+//! is itself a finding.
+
+pub mod engine;
+pub mod lexer;
+
+pub use engine::{lint_source, lint_tree, Finding, LintReport, RuleInfo, Suppressed, RULES};

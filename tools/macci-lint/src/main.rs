@@ -1,0 +1,133 @@
+//! CLI: `cargo run -p macci-lint -- [--root <dir>] [--json <path>]`.
+//!
+//! Exit codes: 0 = clean (suppressions are fine), 1 = unsuppressed
+//! findings, 2 = bad usage or I/O failure. CI treats 1 as a hard stop.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use macci_lint::{lint_tree, LintReport, RULES};
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a directory"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json = Some(PathBuf::from(v)),
+                None => return usage("--json needs a file path"),
+            },
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let report = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("macci-lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for f in &report.findings {
+        println!("{}:{}:{}: {}({}): {}", f.file, f.line, f.col, f.rule, f.name, f.message);
+    }
+    let (nf, ns) = (report.findings.len(), report.suppressed.len());
+    println!("macci-lint: {} files, {nf} finding(s), {ns} suppressed", report.files_scanned);
+
+    if let Some(path) = &json {
+        if let Err(e) = std::fs::write(path, render_json(&root, &report)) {
+            eprintln!("macci-lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    eprintln!("macci-lint: {err}");
+    eprintln!("usage: macci-lint [--root <dir>] [--json <path>]");
+    ExitCode::from(2)
+}
+
+/// Render the machine-readable report (`LINT.json`). Hand-rolled writer
+/// — the offline policy rules out a JSON dependency, and the schema is
+/// flat enough that escaping strings is the only subtlety.
+fn render_json(root: &Path, report: &LintReport) -> String {
+    let mut rules = Vec::new();
+    for r in RULES {
+        let zones: Vec<String> = r.zones.iter().map(|z| format!("\"{}\"", esc(z))).collect();
+        rules.push(format!(
+            "    {{\"id\": \"{}\", \"name\": \"{}\", \"zones\": [{}]}}",
+            r.id,
+            r.name,
+            zones.join(", ")
+        ));
+    }
+    let mut findings = Vec::new();
+    for f in &report.findings {
+        findings.push(format!(
+            "    {{\"rule\": \"{}\", \"name\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+             \"col\": {}, \"message\": \"{}\"}}",
+            esc(&f.rule),
+            esc(&f.name),
+            esc(&f.file),
+            f.line,
+            f.col,
+            esc(&f.message)
+        ));
+    }
+    let mut suppressed = Vec::new();
+    for s in &report.suppressed {
+        suppressed.push(format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"reason\": \"{}\"}}",
+            esc(&s.rule),
+            esc(&s.file),
+            s.line,
+            esc(&s.reason)
+        ));
+    }
+    format!(
+        "{{\n  \"version\": 1,\n  \"root\": \"{}\",\n  \"files_scanned\": {},\n  \
+         \"rules\": {},\n  \"findings\": {},\n  \"suppressed\": {}\n}}\n",
+        esc(&root.display().to_string()),
+        report.files_scanned,
+        json_array(&rules),
+        json_array(&findings),
+        json_array(&suppressed)
+    )
+}
+
+fn json_array(items: &[String]) -> String {
+    if items.is_empty() {
+        "[]".into()
+    } else {
+        format!("[\n{}\n  ]", items.join(",\n"))
+    }
+}
+
+/// Minimal JSON string escaping — paths, reasons, and rule messages.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

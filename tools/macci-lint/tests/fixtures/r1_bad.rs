@@ -1,0 +1,9 @@
+// R1 bad fixture: linted as module `coordinator::wire`. Three hits —
+// an unwrap, a panic! macro, and a direct slice index.
+pub fn decode(buf: &[u8]) -> u16 {
+    let hi = buf.first().unwrap();
+    if buf.len() < 2 {
+        panic!("short frame");
+    }
+    (u16::from(*hi) << 8) | u16::from(buf[1])
+}

@@ -1,0 +1,7 @@
+// R1 clean fixture: slice patterns and Option instead of panics.
+pub fn decode(buf: &[u8]) -> Option<u16> {
+    match buf {
+        [hi, lo, ..] => Some((u16::from(*hi) << 8) | u16::from(*lo)),
+        _ => None,
+    }
+}

@@ -1,0 +1,9 @@
+// R1 suppressed fixture: the index is pragma'd with a reason.
+pub fn checksum(data: &[u8]) -> u8 {
+    let mut acc = 0u8;
+    for i in 0..data.len() {
+        // lint: allow(no-panic) — i < data.len() by the loop bound
+        acc ^= data[i];
+    }
+    acc
+}

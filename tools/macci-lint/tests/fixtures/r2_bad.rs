@@ -1,0 +1,11 @@
+// R2 bad fixture: linted as module `runtime::native::gemm`. Two hits —
+// a HashMap import and a fused mul_add.
+use std::collections::HashMap;
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc = x.mul_add(*y, acc);
+    }
+    acc
+}

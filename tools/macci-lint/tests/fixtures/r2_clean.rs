@@ -1,0 +1,18 @@
+// R2 clean fixture: separate multiply/add rounding, ordered map.
+use std::collections::BTreeMap;
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+pub fn histogram(xs: &[u8]) -> BTreeMap<u8, usize> {
+    let mut h = BTreeMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

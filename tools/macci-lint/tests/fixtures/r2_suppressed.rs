@@ -1,0 +1,9 @@
+// R2 suppressed fixture: the fused path is pragma'd with a reason.
+pub fn fast_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        // lint: allow(determinism) — reference path, never feeds bit-exact checkpoints
+        acc = x.mul_add(*y, acc);
+    }
+    acc
+}

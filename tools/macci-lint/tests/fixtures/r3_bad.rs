@@ -1,0 +1,8 @@
+// R3 bad fixture: linted as module `coordinator::executor`. Two hits —
+// a direct `channel()` call and the turbofish form.
+use std::sync::mpsc;
+
+pub fn queues() -> (mpsc::Sender<u32>, mpsc::Receiver<u32>) {
+    let (_tx, _rx) = mpsc::channel::<u8>();
+    mpsc::channel()
+}

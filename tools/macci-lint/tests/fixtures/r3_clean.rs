@@ -1,0 +1,6 @@
+// R3 clean fixture: a bounded queue with an explicit depth.
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+pub fn queue() -> (SyncSender<u32>, Receiver<u32>) {
+    sync_channel(8)
+}

@@ -1,0 +1,7 @@
+// R3 suppressed fixture: the unbounded queue is pragma'd with a reason.
+use std::sync::mpsc;
+
+pub fn drain_queue() -> (mpsc::Sender<u32>, mpsc::Receiver<u32>) {
+    // lint: allow(bounded-channels) — drained synchronously before senders can outrun it
+    mpsc::channel()
+}

@@ -1,0 +1,4 @@
+// R4 bad fixture: a raw env read outside util::config.
+pub fn backend() -> String {
+    std::env::var("MACCI_BACKEND").unwrap_or_default()
+}

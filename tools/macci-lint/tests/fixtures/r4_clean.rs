@@ -1,0 +1,4 @@
+// R4 clean fixture: knobs come from accessors, not raw env reads.
+pub fn backend(configured: &str) -> bool {
+    configured == "native"
+}

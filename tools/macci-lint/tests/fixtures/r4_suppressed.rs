@@ -1,0 +1,5 @@
+// R4 suppressed fixture: the single latch-once read point.
+pub fn raw(key: &str) -> Option<String> {
+    // lint: allow(env-config) — this is the one place env is read, behind a latch
+    std::env::var(key).ok()
+}

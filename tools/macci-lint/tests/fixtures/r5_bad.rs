@@ -1,0 +1,5 @@
+// R5 bad fixture: linted as module `runtime::native::simd`. One hit —
+// an `unsafe` block with no `// SAFETY:` justification anywhere near it.
+pub fn head(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

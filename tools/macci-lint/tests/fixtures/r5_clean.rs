@@ -1,0 +1,13 @@
+// R5 clean fixture: both comment placements the rule accepts — same
+// line / directly above, and above an attribute stack.
+pub fn head(xs: &[f32]) -> f32 {
+    // SAFETY: callers pass the non-empty row slices built in new()
+    unsafe { *xs.as_ptr() }
+}
+
+// SAFETY: caller must ensure AVX2 is available on the executing CPU
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn head_avx2(xs: &[f32]) -> f32 {
+    *xs.as_ptr()
+}

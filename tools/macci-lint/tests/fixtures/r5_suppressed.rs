@@ -1,0 +1,5 @@
+// R5 suppressed fixture: justification deferred via pragma.
+pub fn head(xs: &[f32]) -> f32 {
+    // lint: allow(unsafe-safety) — soundness argument lives at the single call site
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,4 @@
+// R6 bad fixture: an anonymous thread::spawn.
+pub fn start() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}

@@ -1,0 +1,4 @@
+// R6 clean fixture: spawned through Builder with a name.
+pub fn start() -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name("worker".into()).spawn(|| {})
+}

@@ -1,0 +1,5 @@
+// R6 suppressed fixture: anonymity justified via pragma.
+pub fn start() -> std::thread::JoinHandle<()> {
+    // lint: allow(named-threads) — short-lived probe thread, a name adds no signal
+    std::thread::spawn(|| {})
+}

@@ -1,0 +1,226 @@
+//! Rule-level self-tests: every rule catches its seeded bad fixture,
+//! the pragma-suppressed variant passes with exactly one suppression,
+//! and the clean variant is silent. Plus zone scoping, `#[cfg(test)]`
+//! masking, pragma grammar, tree walking, and the CLI/JSON contract.
+
+use std::path::Path;
+use std::process::Command;
+
+use macci_lint::{lint_source, lint_tree};
+
+const R1_BAD: &str = include_str!("fixtures/r1_bad.rs");
+const R1_SUPPRESSED: &str = include_str!("fixtures/r1_suppressed.rs");
+const R1_CLEAN: &str = include_str!("fixtures/r1_clean.rs");
+const R2_BAD: &str = include_str!("fixtures/r2_bad.rs");
+const R2_SUPPRESSED: &str = include_str!("fixtures/r2_suppressed.rs");
+const R2_CLEAN: &str = include_str!("fixtures/r2_clean.rs");
+const R3_BAD: &str = include_str!("fixtures/r3_bad.rs");
+const R3_SUPPRESSED: &str = include_str!("fixtures/r3_suppressed.rs");
+const R3_CLEAN: &str = include_str!("fixtures/r3_clean.rs");
+const R4_BAD: &str = include_str!("fixtures/r4_bad.rs");
+const R4_SUPPRESSED: &str = include_str!("fixtures/r4_suppressed.rs");
+const R4_CLEAN: &str = include_str!("fixtures/r4_clean.rs");
+const R5_BAD: &str = include_str!("fixtures/r5_bad.rs");
+const R5_SUPPRESSED: &str = include_str!("fixtures/r5_suppressed.rs");
+const R5_CLEAN: &str = include_str!("fixtures/r5_clean.rs");
+const R6_BAD: &str = include_str!("fixtures/r6_bad.rs");
+const R6_SUPPRESSED: &str = include_str!("fixtures/r6_suppressed.rs");
+const R6_CLEAN: &str = include_str!("fixtures/r6_clean.rs");
+
+fn rules_of(module: &str, src: &str) -> Vec<String> {
+    lint_source(module, "fixture.rs", src).findings.iter().map(|f| f.rule.clone()).collect()
+}
+
+#[test]
+fn r1_catches_unwrap_panic_and_indexing() {
+    assert_eq!(rules_of("coordinator::wire", R1_BAD), ["R1", "R1", "R1"]);
+}
+
+#[test]
+fn r2_catches_hashmap_and_mul_add() {
+    assert_eq!(rules_of("runtime::native::gemm", R2_BAD), ["R2", "R2"]);
+}
+
+#[test]
+fn r3_catches_direct_and_turbofish_channel() {
+    assert_eq!(rules_of("coordinator::executor", R3_BAD), ["R3", "R3"]);
+}
+
+#[test]
+fn r4_catches_raw_env_reads() {
+    assert_eq!(rules_of("runtime::backend", R4_BAD), ["R4"]);
+}
+
+#[test]
+fn r5_catches_unjustified_unsafe() {
+    assert_eq!(rules_of("runtime::native::simd", R5_BAD), ["R5"]);
+}
+
+#[test]
+fn r6_catches_anonymous_spawn() {
+    assert_eq!(rules_of("coordinator::supervisor", R6_BAD), ["R6"]);
+}
+
+#[test]
+fn pragmas_suppress_each_rule_and_record_the_reason() {
+    let cases = [
+        ("coordinator::wire", R1_SUPPRESSED, "R1"),
+        ("runtime::native::gemm", R2_SUPPRESSED, "R2"),
+        ("coordinator::executor", R3_SUPPRESSED, "R3"),
+        ("util::config", R4_SUPPRESSED, "R4"),
+        ("runtime::native::simd", R5_SUPPRESSED, "R5"),
+        ("coordinator::supervisor", R6_SUPPRESSED, "R6"),
+    ];
+    for (module, src, rule) in cases {
+        let r = lint_source(module, "fixture.rs", src);
+        assert!(r.findings.is_empty(), "{rule}: {:?}", r.findings);
+        assert_eq!(r.suppressed.len(), 1, "{rule}");
+        assert_eq!(r.suppressed[0].rule, rule);
+        assert!(!r.suppressed[0].reason.is_empty(), "{rule}");
+    }
+}
+
+#[test]
+fn clean_fixtures_are_silent() {
+    let cases = [
+        ("coordinator::wire", R1_CLEAN),
+        ("runtime::native::gemm", R2_CLEAN),
+        ("coordinator::executor", R3_CLEAN),
+        ("main", R4_CLEAN),
+        ("runtime::native::simd", R5_CLEAN),
+        ("coordinator::supervisor", R6_CLEAN),
+    ];
+    for (module, src) in cases {
+        let r = lint_source(module, "fixture.rs", src);
+        assert!(r.findings.is_empty(), "{module}: {:?}", r.findings);
+        assert!(r.suppressed.is_empty(), "{module}");
+    }
+}
+
+#[test]
+fn rules_stay_inside_their_zones() {
+    // R1's panics/indexing are fine outside its zones; same for R2's
+    // fused math outside the kernels and the RL stack.
+    assert!(rules_of("rl::rollout", R1_BAD).is_empty());
+    assert!(rules_of("coordinator::wire", R2_BAD).is_empty());
+}
+
+#[test]
+fn cfg_test_modules_are_exempt() {
+    let src = r#"
+pub fn f() -> u8 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn indexing_is_fine_in_tests() {
+        let v = [1u8, 2];
+        assert_eq!(v[0], super::f() + 1);
+    }
+}
+"#;
+    assert!(rules_of("coordinator::wire", src).is_empty());
+}
+
+#[test]
+fn pragma_without_a_reason_is_itself_a_finding() {
+    let src = "// lint: allow(no-panic)\npub fn f() {}\n";
+    let r = lint_source("coordinator::wire", "fixture.rs", src);
+    assert_eq!(r.findings.len(), 1);
+    assert_eq!(r.findings[0].rule, "pragma");
+}
+
+#[test]
+fn pragma_matches_by_rule_id_too() {
+    let src = r#"
+pub fn f(xs: &[u8]) -> u8 {
+    // lint: allow(R1) -- bound checked by the caller
+    xs[0]
+}
+"#;
+    let r = lint_source("transport::tcp", "fixture.rs", src);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].rule, "R1");
+}
+
+#[test]
+fn lint_tree_walks_and_labels_the_fixture_tree() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/tree"));
+    let r = lint_tree(root).expect("scan fixture tree");
+    assert_eq!(r.files_scanned, 4);
+    assert_eq!(r.findings.len(), 2);
+    assert_eq!(r.findings[0].rule, "R1");
+    assert_eq!(r.findings[0].file, "rust/src/coordinator/wire.rs");
+    assert_eq!(r.findings[1].file, "rust/src/transport/mod.rs");
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].file, "rust/src/util/config.rs");
+}
+
+#[test]
+fn cli_reports_findings_and_writes_schema_conformant_json() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/tree");
+    let json = std::env::temp_dir().join("macci-lint-selftest.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_macci-lint"))
+        .args(["--root", root, "--json"])
+        .arg(&json)
+        .output()
+        .expect("run macci-lint");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("R1(no-panic)"), "{stdout}");
+    let text = std::fs::read_to_string(&json).expect("read LINT.json");
+    let keys = ["\"version\": 1", "\"files_scanned\": 4", "\"rules\":", "\"findings\":"];
+    for key in keys {
+        assert!(text.contains(key), "missing {key} in {text}");
+    }
+    assert!(text.contains("\"suppressed\":"), "{text}");
+    assert!(text.contains("\"rule\": \"R1\""), "{text}");
+    assert_balanced(&text);
+}
+
+#[test]
+fn cli_exits_zero_on_a_clean_tree() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/tree_clean");
+    let out = Command::new(env!("CARGO_BIN_EXE_macci-lint"))
+        .args(["--root", root])
+        .output()
+        .expect("run macci-lint");
+    assert_eq!(out.status.code(), Some(0));
+}
+
+#[test]
+fn cli_rejects_unknown_arguments() {
+    let out = Command::new(env!("CARGO_BIN_EXE_macci-lint"))
+        .arg("--bogus")
+        .output()
+        .expect("run macci-lint");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+/// Structural JSON check without a parser: braces/brackets balance and
+/// never go negative, and every string closes — string-aware so escaped
+/// quotes and braces inside messages don't confuse the count.
+fn assert_balanced(text: &str) {
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut escaped = false;
+    for ch in text.chars() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match ch {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "bracket depth went negative");
+    }
+    assert_eq!(depth, 0, "unbalanced brackets");
+    assert!(!in_str, "unterminated string");
+}

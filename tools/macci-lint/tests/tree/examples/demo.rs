@@ -1,0 +1,4 @@
+// Fixture tree: a clean example — nothing to report.
+fn main() {
+    println!("demo");
+}

@@ -1,0 +1,4 @@
+// Fixture tree: seeded R1 violation in a no-panic zone.
+pub fn decode(buf: &[u8]) -> u8 {
+    *buf.first().unwrap()
+}

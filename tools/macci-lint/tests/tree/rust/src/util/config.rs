@@ -1,0 +1,5 @@
+// Fixture tree: the one sanctioned env read, behind a reviewed pragma.
+pub fn raw(key: &str) -> Option<String> {
+    // lint: allow(env-config) — latch-once read point
+    std::env::var(key).ok()
+}

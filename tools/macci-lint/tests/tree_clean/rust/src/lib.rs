@@ -1,0 +1,4 @@
+// Fixture tree with zero findings — the CLI must exit 0 here.
+pub fn add(a: u32, b: u32) -> u32 {
+    a + b
+}
