@@ -45,6 +45,12 @@ MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_e2e
 echo "== serving baseline (BENCH_serving.json) =="
 MACCI_BENCH_SERVING_TASKS=${MACCI_BENCH_SERVING_TASKS:-48} cargo bench --bench bench_serving
 
+echo "== fleet-load smoke (BENCH_load.json, bounded) =="
+# short cells and a capped fleet keep this a smoke test in CI; unset the
+# caps for the full 10k-UE sweep (README §Load harness)
+MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} \
+MACCI_BENCH_LOAD_UES=${MACCI_BENCH_LOAD_UES:-2000} cargo bench --bench bench_load
+
 echo "== wire-codec baseline (BENCH_wire.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_wire
 

@@ -1,0 +1,167 @@
+//! Massive-fleet load bench: the sharded reactor serving core under a
+//! trace-driven loopback fleet. Emits BENCH_load.json.
+//!
+//! Grid: fleet size (1k and `MACCI_BENCH_LOAD_UES`, default 10k UEs) ×
+//! shard count (1 / 2 / 4). Each cell binds a fresh reactor, spawns the
+//! shard server loops (per-UE slim decisions, partial-pool ticks — the
+//! fleet-serving configuration) and drives the fleet for
+//! `MACCI_BENCH_MS` per cell through multiplexed stations with one
+//! churning station. The figures of merit are decisions/s, offloads/s
+//! and the p50/p99/p999 report→decision latency, with every dropped
+//! downlink counted (`downlink_drops` — satellite of ISSUE 8's drop
+//! audit), never silent.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use macci::coordinator::decision::{DecisionMaker, StaticDecision};
+use macci::coordinator::executor::{ExecutorConfig, OffloadCompute, SyntheticCompute};
+use macci::coordinator::server::ServerConfig;
+use macci::coordinator::shard::{spawn_shards, ShardMap};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::env::HybridAction;
+use macci::loadgen::{run_fleet, ArrivalMode, FleetConfig};
+use macci::transport::reactor::{ReactorConfig, TcpReactor};
+use macci::util::json::Json;
+
+const ITEM_COST: Duration = Duration::from_micros(50);
+
+struct Cell {
+    decisions_per_s: f64,
+    offloads_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    reports_sent: usize,
+    decisions_received: usize,
+    reconnects: usize,
+    frames: usize,
+    downlink_drops: usize,
+    uplink_drops: usize,
+}
+
+fn run_one(n_ues: usize, n_shards: usize, run: Duration) -> Cell {
+    let map = ShardMap::new(n_ues, n_shards);
+    let (reactor, transports) =
+        TcpReactor::bind("127.0.0.1:0", ReactorConfig::new(n_ues, n_shards)).unwrap();
+    let addr = reactor.local_addr();
+
+    let compute = Arc::new(SyntheticCompute::new(ITEM_COST)) as Arc<dyn OffloadCompute>;
+    let shards: Vec<_> = transports
+        .into_iter()
+        .enumerate()
+        .map(|(shard, t)| {
+            let len = map.slice_of(shard).unwrap().1;
+            let pool = StatePool::new(
+                len,
+                StateNorm {
+                    lambda_tasks: 10.0,
+                    frame_s: 0.5,
+                    max_bits: 1e6,
+                    d_max: 100.0,
+                },
+            );
+            let dm = DecisionMaker::new(Box::new(StaticDecision {
+                actions: vec![HybridAction::new(0, 0, 0.0, 1.0); len],
+            }));
+            (t, pool, dm)
+        })
+        .collect();
+    let mk_cfg = |_shard: usize, len: usize| {
+        let mut cfg = ServerConfig::new(len, Duration::from_millis(25), usize::MAX);
+        cfg.per_ue_decisions = true; // O(n) broadcast bytes, not O(n²)
+        cfg.exit_when_empty = false; // churn gaps must not stop the shard
+        cfg.decide_on_partial = true; // a 10k pool is never complete
+        cfg.drain_limit = 1024;
+        cfg.exec = ExecutorConfig {
+            workers: 1, // the bench host may be single-core
+            max_wait: Duration::from_micros(100),
+            ..ExecutorConfig::default()
+        };
+        cfg
+    };
+    let (handles, _policy) = spawn_shards(&map, mk_cfg, shards, Some(compute)).unwrap();
+
+    let fleet = FleetConfig {
+        addr,
+        n_ues,
+        n_stations: (n_ues / 512).clamp(1, 24),
+        mode: ArrivalMode::Open,
+        duration: run,
+        report_interval: Duration::from_millis(100),
+        offload_every: 8,
+        churn_period: Some(run / 2),
+        churn_stations: 1,
+    };
+    let stats = run_fleet(&fleet).unwrap();
+
+    // stopping the reactor closes the shard uplinks; the loops drain and
+    // exit, surfacing their per-shard counters
+    let rstats = reactor.stop();
+    let mut frames = 0usize;
+    let mut downlink_drops = 0usize;
+    for h in handles {
+        let s = h.join();
+        frames += s.frames;
+        downlink_drops += s.downlink_drops;
+    }
+
+    assert!(stats.decisions_received > 0, "fleet never saw a decision");
+    assert!(frames > 0, "no shard issued a frame");
+
+    Cell {
+        decisions_per_s: stats.decisions_per_s(),
+        offloads_per_s: stats.offloads_per_s(),
+        p50_ms: stats.p50_ms(),
+        p99_ms: stats.p99_ms(),
+        p999_ms: stats.p999_ms(),
+        reports_sent: stats.reports_sent,
+        decisions_received: stats.decisions_received,
+        reconnects: stats.reconnects,
+        frames,
+        downlink_drops,
+        uplink_drops: rstats.uplink_drops,
+    }
+}
+
+fn main() {
+    let run = Duration::from_millis(macci::util::config::bench_ms(1500));
+    let big = macci::util::config::bench_load_ues(10_000) as usize;
+    let mut fleets = vec![1_000usize.min(big), big];
+    fleets.dedup();
+
+    println!(
+        "load bench: {} ms/cell, fleets {:?}, shards [1, 2, 4], open-loop + 1 churning station",
+        run.as_millis(),
+        fleets
+    );
+    let mut json = Json::obj();
+    for &n_ues in &fleets {
+        for &shards in &[1usize, 2, 4] {
+            let c = run_one(n_ues, shards, run);
+            println!(
+                "  {n_ues:>6} UEs × {shards} shards: {:>9.1} dec/s | {:>7.1} off/s | \
+                 p50 {:>7.2} ms | p99 {:>7.2} ms | p99.9 {:>7.2} ms | drops {}",
+                c.decisions_per_s, c.offloads_per_s, c.p50_ms, c.p99_ms, c.p999_ms,
+                c.downlink_drops
+            );
+            json = json.set(
+                &format!("load/ues{n_ues}_shards{shards}"),
+                Json::obj()
+                    .set("decisions_per_s", c.decisions_per_s)
+                    .set("offloads_per_s", c.offloads_per_s)
+                    .set("p50_ms", c.p50_ms)
+                    .set("p99_ms", c.p99_ms)
+                    .set("p999_ms", c.p999_ms)
+                    .set("reports_sent", c.reports_sent)
+                    .set("decisions_received", c.decisions_received)
+                    .set("reconnects", c.reconnects)
+                    .set("frames", c.frames)
+                    .set("downlink_drops", c.downlink_drops)
+                    .set("uplink_drops", c.uplink_drops),
+            );
+        }
+    }
+    json.write_file("BENCH_load.json").unwrap();
+    println!("wrote BENCH_load.json");
+}

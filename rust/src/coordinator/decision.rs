@@ -175,27 +175,50 @@ impl DecisionSource for StaticDecision {
     }
 }
 
-/// A clonable publisher end of a [`DecisionMaker`]'s swap slot: call
-/// [`PolicyHandle::publish`] from any thread to stage a new policy. The
-/// maker applies the **latest** staged snapshot between decision frames
-/// (intermediate snapshots are superseded, never half-applied). The slot
-/// holds at most one snapshot, so publishing is bounded by construction —
-/// a stalled maker can never accumulate a queue of stale policies.
+/// A clonable publisher end of one or more [`DecisionMaker`] swap slots:
+/// call [`PolicyHandle::publish`] from any thread to stage a new policy.
+/// Each maker applies the **latest** staged snapshot between decision
+/// frames (intermediate snapshots are superseded, never half-applied).
+/// Every slot holds at most one snapshot, so publishing is bounded by
+/// construction — a stalled maker can never accumulate a queue of stale
+/// policies.
+///
+/// A handle minted by [`DecisionMaker::policy_handle`] targets that one
+/// maker; [`PolicyHandle::fanout`] merges handles so a single publish
+/// reaches every shard of a sharded server (see
+/// [`super::shard`]) — the online [`super::learner`] keeps working
+/// unchanged against either.
 #[derive(Clone)]
 pub struct PolicyHandle {
-    slot: Weak<Mutex<Option<PolicySnapshot>>>,
+    slots: Vec<Weak<Mutex<Option<PolicySnapshot>>>>,
 }
 
 impl PolicyHandle {
-    /// Stage `snap` for the next inter-frame swap point, superseding any
-    /// snapshot still pending. Non-blocking; returns `false` when the
-    /// decision maker is gone.
+    /// Stage `snap` for the next inter-frame swap point of every targeted
+    /// maker, superseding any snapshot still pending. Non-blocking;
+    /// returns `false` only when **no** targeted maker is alive anymore.
     pub fn publish(&self, snap: PolicySnapshot) -> bool {
-        let Some(slot) = self.slot.upgrade() else {
-            return false;
-        };
-        *lock_unpoisoned(&slot) = Some(snap);
-        true
+        let mut any = false;
+        for slot in &self.slots {
+            let Some(slot) = slot.upgrade() else { continue };
+            *lock_unpoisoned(&slot) = Some(snap.clone());
+            any = true;
+        }
+        any
+    }
+
+    /// Merge handles into one that publishes to every underlying slot —
+    /// the cross-shard policy fan-out. Order is irrelevant; dead slots
+    /// are skipped at publish time.
+    pub fn fanout(handles: impl IntoIterator<Item = PolicyHandle>) -> PolicyHandle {
+        PolicyHandle {
+            slots: handles.into_iter().flat_map(|h| h.slots).collect(),
+        }
+    }
+
+    /// How many targeted makers are still alive (diagnostics).
+    pub fn live_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.upgrade().is_some()).count()
     }
 }
 
@@ -225,7 +248,7 @@ impl DecisionMaker {
     /// Mint a publisher for this maker's swap slot.
     pub fn policy_handle(&self) -> PolicyHandle {
         PolicyHandle {
-            slot: Arc::downgrade(&self.swap_slot),
+            slots: vec![Arc::downgrade(&self.swap_slot)],
         }
     }
 
@@ -328,6 +351,49 @@ mod tests {
             version: 1,
             actors: vec![],
         }));
+    }
+
+    /// A swappable no-op source: `install` always accepts, so
+    /// `swaps_applied` counts exactly the publishes a maker saw.
+    struct Swappable;
+
+    impl DecisionSource for Swappable {
+        fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
+            Ok(vec![])
+        }
+        fn install(&mut self, _snap: &PolicySnapshot) -> Result<bool> {
+            Ok(true)
+        }
+    }
+
+    #[test]
+    fn fanout_publish_reaches_every_maker() {
+        let mut a = DecisionMaker::new(Box::new(Swappable));
+        let mut b = DecisionMaker::new(Box::new(Swappable));
+        let c = DecisionMaker::new(Box::new(Swappable));
+        let h = PolicyHandle::fanout([a.policy_handle(), b.policy_handle(), c.policy_handle()]);
+        assert_eq!(h.live_slots(), 3);
+        drop(c); // one shard gone: publish must still reach the others
+        assert!(h.publish(PolicySnapshot {
+            version: 7,
+            actors: vec![],
+        }));
+        assert_eq!(h.live_slots(), 2);
+        a.next_decision(&[]).unwrap();
+        b.next_decision(&[]).unwrap();
+        assert_eq!(a.swaps_applied(), 1, "shard A missed the fan-out");
+        assert_eq!(b.swaps_applied(), 1, "shard B missed the fan-out");
+        assert_eq!(a.policy_version(), Some(7));
+
+        drop(a);
+        drop(b);
+        assert!(
+            !h.publish(PolicySnapshot {
+                version: 8,
+                actors: vec![],
+            }),
+            "publish must report failure once every maker is gone"
+        );
     }
 
     #[test]

@@ -27,6 +27,10 @@
 //!   off the server thread, with the batcher wired into its dispatch side.
 //! * [`server`] — the threaded event loop tying it together (std threads +
 //!   mpsc; tokio is unavailable in the offline build).
+//! * [`shard`] — fleet-scale serving: a contiguous ue-id ownership map,
+//!   per-shard transports with global⇄local id rewriting, and a policy
+//!   fan-out handle so the learner publishes to every shard at once
+//!   (DESIGN.md §Sharded-Serving).
 
 pub mod batcher;
 pub mod decision;
@@ -35,5 +39,6 @@ pub mod inference;
 pub mod learner;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 pub mod state_pool;
 pub mod wire;

@@ -51,6 +51,11 @@ pub struct ServerStats {
     /// Policy hot-swaps applied between decision frames (see
     /// [`super::decision::PolicyHandle`]).
     pub policy_swaps: usize,
+    /// Downlink frames the transport dropped under backpressure (bounded
+    /// queue or write buffer full — see [`ServerTransport::take_drops`]).
+    /// Surfaced here and in `BENCH_load.json` so decision frames lost to
+    /// slow consumers are counted, never silent.
+    pub downlink_drops: usize,
     /// Executor counters (queue depth / queue wait / batch occupancy);
     /// default-zero when serving ran inline on the server thread.
     pub exec: ExecutorStats,
@@ -70,6 +75,14 @@ pub struct EdgeServerHandle {
 }
 
 impl EdgeServerHandle {
+    /// Wrap a raw server-loop thread handle (how [`super::shard`] exposes
+    /// each shard's loop under the same join API).
+    pub(crate) fn from_join(handle: JoinHandle<ServerStats>) -> EdgeServerHandle {
+        EdgeServerHandle {
+            handle: Some(handle),
+        }
+    }
+
     /// Wait for the server loop to exit and collect its stats.
     pub fn join(mut self) -> ServerStats {
         self.handle
@@ -99,6 +112,24 @@ pub struct ServerConfig {
     /// frame and a vanished consumer is ignored, so serving never stalls
     /// — and never grows memory — on telemetry.
     pub telemetry: Option<SyncSender<TelemetryFrame>>,
+    /// Broadcast each UE a slimmed [`FrameDecision`] holding only its own
+    /// action (index 0) instead of the full joint action vector. Opt-in:
+    /// the default full broadcast is what [`drive_env_ues`] and the
+    /// existing examples expect; sharded fleet serving turns this on so a
+    /// 10k-UE broadcast is O(n) bytes, not O(n²).
+    pub per_ue_decisions: bool,
+    /// Exit the loop once every UE has said (or been synthesized a)
+    /// `Goodbye`. Default true — the historical behavior. Fleet serving
+    /// under reconnect churn sets this false: an instant where all UEs
+    /// happen to be between sessions must not stop the shard; the loop
+    /// then ends via `max_frames` or transport closure.
+    pub exit_when_empty: bool,
+    /// Let the periodic decision tick fire once *any* fresh report is
+    /// pooled, instead of waiting for a full assembly. Default false (the
+    /// paper's synchronous frame). Fleet serving sets this true: with
+    /// thousands of churning UEs the pool is essentially never complete,
+    /// and stale slots are served their last-known state.
+    pub decide_on_partial: bool,
 }
 
 impl ServerConfig {
@@ -110,6 +141,9 @@ impl ServerConfig {
             drain_limit: 128,
             exec: ExecutorConfig::default(),
             telemetry: None,
+            per_ue_decisions: false,
+            exit_when_empty: true,
+            decide_on_partial: false,
         }
     }
 }
@@ -202,7 +236,7 @@ fn route_completion(c: Completion, transport: &mut dyn ServerTransport, stats: &
     }
 }
 
-fn server_loop(
+pub(crate) fn server_loop(
     cfg: ServerConfig,
     transport: &mut dyn ServerTransport,
     pool: &mut StatePool,
@@ -341,7 +375,7 @@ fn server_loop(
             log::debug!("uplink fully disconnected — shutting down");
             break;
         }
-        if alive.values().all(|&a| !a) {
+        if cfg.exit_when_empty && alive.values().all(|&a| !a) {
             break;
         }
         if stats.frames >= cfg.max_frames {
@@ -350,14 +384,15 @@ fn server_loop(
 
         // -- decision tick --
         let due = last_decision.elapsed() >= cfg.decision_interval;
-        let ready = pool.complete() || first_decision_done;
+        let partial_ready = cfg.decide_on_partial && pool.fresh_count() > 0;
+        let ready = pool.complete() || first_decision_done || partial_ready;
         if (due && ready) || (!first_decision_done && pool.complete()) {
             let state = pool.assemble();
             match decisions.next_decision(&state) {
                 Ok(d) => {
                     stats.frames += 1;
                     first_decision_done = true;
-                    broadcast_decision(transport, &alive, &d);
+                    broadcast_decision(transport, &alive, &d, cfg.per_ue_decisions);
                     // export serving telemetry for the online learner —
                     // non-blocking: a full queue drops the frame, a gone
                     // consumer is ignored
@@ -393,6 +428,7 @@ fn server_loop(
         transport.send_to(ue_id, Downlink::Shutdown);
     }
     stats.policy_swaps = decisions.swaps_applied();
+    stats.downlink_drops = transport.take_drops();
     stats
 }
 
@@ -465,14 +501,31 @@ pub fn drive_env_ues(
     Ok(received)
 }
 
-/// One decision frame to every UE still in the system.
+/// One decision frame to every UE still in the system. With `per_ue`
+/// each UE gets a single-action slim frame (its own action at index 0)
+/// instead of a clone of the full joint vector.
 fn broadcast_decision(
     transport: &mut dyn ServerTransport,
     alive: &HashMap<usize, bool>,
     d: &FrameDecision,
+    per_ue: bool,
 ) {
     for (&ue_id, &is_alive) in alive {
-        if is_alive {
+        if !is_alive {
+            continue;
+        }
+        if per_ue {
+            let Some(&action) = d.actions.get(ue_id) else {
+                continue;
+            };
+            transport.send_to(
+                ue_id,
+                Downlink::Decision(FrameDecision {
+                    frame: d.frame,
+                    actions: vec![action],
+                }),
+            );
+        } else {
             transport.send_to(ue_id, Downlink::Decision(d.clone()));
         }
     }

@@ -1,0 +1,281 @@
+//! Sharded serving: partition the UE fleet across independent server
+//! loops (DESIGN.md §Sharded-Serving).
+//!
+//! One `server_loop` routing thousands of UEs serializes every decision,
+//! offload and swap through a single thread. Sharding splits the fleet
+//! into contiguous ue-id slices, each owned by its own loop with its own
+//! [`StatePool`], [`DecisionMaker`] and executor pool:
+//!
+//! ```text
+//!              ┌───────────── ShardMap (closed-form) ─────────────┐
+//!  global ids  │ shard 0: [0, len0)   shard 1: [len0, len0+len1) …│
+//!              └──────────────────────────────────────────────────┘
+//!  transport ──► ShardView (global⇄local id rewrite) ──► server_loop
+//!                                   ×N shards, each its own thread
+//!  learner ──► PolicyHandle::fanout ──► every shard's swap slot
+//! ```
+//!
+//! * [`ShardMap`] — the ownership map: total, stable, collision-free
+//!   assignment of `ue_id → shard` with contiguous slices (remainder
+//!   spread over the first `n % k` shards).
+//! * [`ShardView`] — adapts any [`ServerTransport`] carrying *global*
+//!   ue ids into a shard-local transport: uplinks outside the slice are
+//!   dropped (counted), ids are rewritten to slice-local space so the
+//!   inner `server_loop`, `StatePool` and `DecisionMaker` are completely
+//!   ignorant of sharding — cross-shard isolation by construction.
+//! * [`spawn_shards`] — one named thread per shard running the unchanged
+//!   [`server_loop`], returning the join handles plus a fanned-out
+//!   [`PolicyHandle`] so `coordinator::learner` publishes to every shard
+//!   with the same latest-wins semantics it had against one.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::decision::{DecisionMaker, PolicyHandle};
+use super::executor::OffloadCompute;
+use super::protocol::{Downlink, Uplink};
+use super::server::{server_loop, EdgeServerHandle, ServerConfig};
+use super::state_pool::StatePool;
+use crate::transport::{ServerTransport, TransportError};
+
+/// Contiguous-slice ownership map over `n_ues` UEs and `n_shards`
+/// shards. Pure arithmetic — no allocation, O(1) lookups — so routing
+/// hot paths (the reactor, the load generator) can call it per frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    n_ues: usize,
+    n_shards: usize,
+}
+
+impl ShardMap {
+    /// `n_shards` is clamped to at least 1; shards beyond `n_ues` end up
+    /// owning empty slices.
+    pub fn new(n_ues: usize, n_shards: usize) -> ShardMap {
+        ShardMap {
+            n_ues,
+            n_shards: n_shards.max(1),
+        }
+    }
+
+    pub fn n_ues(&self) -> usize {
+        self.n_ues
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The shard owning `ue_id`, or `None` if the id is out of range.
+    /// The first `n_ues % n_shards` shards own `base + 1` UEs, the rest
+    /// `base = n_ues / n_shards`.
+    pub fn shard_of(&self, ue_id: usize) -> Option<usize> {
+        if ue_id >= self.n_ues {
+            return None;
+        }
+        let base = self.n_ues / self.n_shards;
+        let rem = self.n_ues % self.n_shards;
+        let split = rem * (base + 1);
+        if ue_id < split {
+            Some(ue_id / (base + 1))
+        } else {
+            // base == 0 implies rem == n_ues, so split == n_ues and no
+            // in-range id reaches this branch: the division is safe
+            Some(rem + (ue_id - split) / base)
+        }
+    }
+
+    /// `(lo, len)` of the contiguous global-id slice `shard` owns, or
+    /// `None` for an out-of-range shard index. `len` may be 0 when there
+    /// are more shards than UEs.
+    pub fn slice_of(&self, shard: usize) -> Option<(usize, usize)> {
+        if shard >= self.n_shards {
+            return None;
+        }
+        let base = self.n_ues / self.n_shards;
+        let rem = self.n_ues % self.n_shards;
+        let split = rem * (base + 1);
+        if shard < rem {
+            Some((shard * (base + 1), base + 1))
+        } else {
+            Some((split + (shard - rem) * base, base))
+        }
+    }
+}
+
+/// A shard's window onto a fleet-wide transport: rewrites global ue ids
+/// into `[0, len)` slice-local space on the uplink and back on the
+/// downlink, and refuses to pass frames outside its slice. The inner
+/// `server_loop` sees an ordinary `len`-UE transport, so a frame for
+/// shard A can never reach — let alone mutate — shard B's `StatePool`.
+pub struct ShardView<T: ServerTransport> {
+    inner: T,
+    lo: usize,
+    len: usize,
+    misrouted: usize,
+}
+
+impl<T: ServerTransport> ShardView<T> {
+    pub fn new(inner: T, lo: usize, len: usize) -> ShardView<T> {
+        ShardView {
+            inner,
+            lo,
+            len,
+            misrouted: 0,
+        }
+    }
+
+    /// Uplink frames dropped because their global ue id fell outside
+    /// this shard's slice.
+    pub fn misrouted(&self) -> usize {
+        self.misrouted
+    }
+
+    fn to_local(&mut self, global: usize) -> Option<usize> {
+        match global.checked_sub(self.lo) {
+            Some(local) if local < self.len => Some(local),
+            _ => {
+                self.misrouted += 1;
+                log::warn!(
+                    "uplink for UE {global} outside shard slice [{}, {}) dropped",
+                    self.lo,
+                    self.lo + self.len
+                );
+                None
+            }
+        }
+    }
+}
+
+impl<T: ServerTransport> ServerTransport for ShardView<T> {
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError> {
+        loop {
+            match self.inner.try_recv()? {
+                Some(Uplink::Report(mut r)) => {
+                    let Some(local) = self.to_local(r.ue_id) else {
+                        continue;
+                    };
+                    r.ue_id = local;
+                    return Ok(Some(Uplink::Report(r)));
+                }
+                Some(Uplink::Offload(mut o)) => {
+                    let Some(local) = self.to_local(o.ue_id) else {
+                        continue;
+                    };
+                    o.ue_id = local;
+                    return Ok(Some(Uplink::Offload(o)));
+                }
+                Some(Uplink::Goodbye { ue_id }) => {
+                    let Some(local) = self.to_local(ue_id) else {
+                        continue;
+                    };
+                    return Ok(Some(Uplink::Goodbye { ue_id: local }));
+                }
+                None => return Ok(None),
+            }
+        }
+    }
+
+    fn send_to(&mut self, ue_id: usize, frame: Downlink) {
+        // out-of-slice downlinks cannot happen from a correct loop (its
+        // cfg.n_ues == len), but guard anyway: never touch another slice
+        if ue_id >= self.len {
+            log::warn!("downlink to local UE {ue_id} outside shard of {} dropped", self.len);
+            return;
+        }
+        let global = self.lo + ue_id;
+        // results embed the ue id; restore global addressing for the UE
+        let frame = match frame {
+            Downlink::Result(mut r) => {
+                r.ue_id = global;
+                Downlink::Result(r)
+            }
+            other => other,
+        };
+        self.inner.send_to(global, frame);
+    }
+
+    fn take_drops(&mut self) -> usize {
+        self.inner.take_drops()
+    }
+}
+
+/// Spawn one named server thread per shard over `map`, each running the
+/// unchanged [`server_loop`] behind a [`ShardView`] of its transport.
+///
+/// `shards[i]` supplies shard `i`'s transport (carrying **global** ue
+/// ids), `StatePool` (sized to the slice) and `DecisionMaker`;
+/// `mk_cfg(shard, len)` builds its config (`n_ues` is overwritten with
+/// the slice length). Returns the join handles plus one [`PolicyHandle`]
+/// fanned out over every shard's swap slot, so a learner publishes to
+/// the whole fabric exactly as it published to a single server.
+pub fn spawn_shards<T: ServerTransport + 'static>(
+    map: &ShardMap,
+    mut mk_cfg: impl FnMut(usize, usize) -> ServerConfig,
+    shards: Vec<(T, StatePool, DecisionMaker)>,
+    compute: Option<Arc<dyn OffloadCompute>>,
+) -> Result<(Vec<EdgeServerHandle>, PolicyHandle)> {
+    ensure!(
+        shards.len() == map.n_shards(),
+        "{} shard bundles for a {}-shard map",
+        shards.len(),
+        map.n_shards()
+    );
+    let mut handles = Vec::with_capacity(shards.len());
+    let mut publishers = Vec::with_capacity(shards.len());
+    for (shard, (transport, mut pool, mut decisions)) in shards.into_iter().enumerate() {
+        let (lo, len) = map
+            .slice_of(shard)
+            .with_context(|| format!("shard {shard} has no slice"))?;
+        let mut cfg = mk_cfg(shard, len);
+        cfg.n_ues = len;
+        publishers.push(decisions.policy_handle());
+        let mut view = ShardView::new(transport, lo, len);
+        let compute = compute.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("edge-shard-{shard}"))
+            .spawn(move || server_loop(cfg, &mut view, &mut pool, &mut decisions, compute))
+            .with_context(|| format!("spawning shard {shard}"))?;
+        handles.push(EdgeServerHandle::from_join(handle));
+    }
+    Ok((handles, PolicyHandle::fanout(publishers)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_partitions_exactly() {
+        for &(n, k) in &[(10, 3), (1, 1), (7, 7), (3, 5), (0, 4), (1000, 16)] {
+            let map = ShardMap::new(n, k);
+            // slices tile [0, n) in order with no gaps or overlaps
+            let mut next = 0usize;
+            for shard in 0..map.n_shards() {
+                let (lo, len) = map.slice_of(shard).unwrap();
+                assert_eq!(lo, next, "n={n} k={k} shard={shard}");
+                for ue in lo..lo + len {
+                    assert_eq!(map.shard_of(ue), Some(shard), "n={n} k={k} ue={ue}");
+                }
+                next = lo + len;
+            }
+            assert_eq!(next, n, "slices cover the fleet exactly");
+            assert_eq!(map.shard_of(n), None, "out of range is not owned");
+            // balanced: slice lengths differ by at most one
+            let lens: Vec<usize> = (0..map.n_shards())
+                .map(|s| map.slice_of(s).unwrap().1)
+                .collect();
+            let min = lens.iter().min().unwrap();
+            let max = lens.iter().max().unwrap();
+            assert!(max - min <= 1, "n={n} k={k} lens={lens:?}");
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let map = ShardMap::new(5, 0);
+        assert_eq!(map.n_shards(), 1);
+        assert_eq!(map.slice_of(0), Some((0, 5)));
+        assert_eq!(map.shard_of(4), Some(0));
+    }
+}

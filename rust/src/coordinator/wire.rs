@@ -73,6 +73,13 @@ pub const TAG_RESULT: u8 = 0x83;
 pub const TAG_ERROR: u8 = 0x84;
 /// Server → UE: orderly end of session.
 pub const TAG_SHUTDOWN: u8 = 0x85;
+/// Server → UE: an explicitly-addressed downlink — `u32` ue_id, inner
+/// downlink tag, then the inner body as a length-prefixed byte field.
+/// Used on multiplexed connections (one socket carrying many UEs, see
+/// [`crate::transport::reactor`]) where the session id alone cannot
+/// attribute a frame. Nesting is forbidden: a `DownTo` wrapping a
+/// `DownTo` is malformed.
+pub const TAG_DOWN_TO: u8 = 0x86;
 
 /// Everything that can cross the wire: the [`Uplink`]/[`Downlink`]
 /// application frames plus the transport-level handshake pair.
@@ -86,6 +93,10 @@ pub enum Frame {
     Up(Uplink),
     /// Application frame, server → UE.
     Down(Downlink),
+    /// Application frame, server → UE, explicitly addressed to one UE of
+    /// a multiplexed connection (a reactor socket carrying many UEs).
+    /// Single-UE transports keep sending plain [`Frame::Down`].
+    DownTo { ue_id: usize, down: Downlink },
 }
 
 impl From<Uplink> for Frame {
@@ -275,7 +286,24 @@ fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
             e.u32(*ue_id as u32);
             TAG_GOODBYE
         }
-        Frame::Down(Downlink::Decision(d)) => {
+        Frame::Down(d) => encode_down(&mut e, d),
+        Frame::DownTo { ue_id, down } => {
+            e.u32(*ue_id as u32);
+            let mut inner = Enc(Vec::with_capacity(64));
+            let inner_tag = encode_down(&mut inner, down);
+            e.u8(inner_tag);
+            e.bytes(&inner.0);
+            TAG_DOWN_TO
+        }
+    };
+    (tag, e.0)
+}
+
+/// Body of one downlink frame, shared by the plain [`Frame::Down`]
+/// encoding and the addressed [`Frame::DownTo`] envelope.
+fn encode_down(e: &mut Enc, down: &Downlink) -> u8 {
+    match down {
+        Downlink::Decision(d) => {
             e.u32(d.frame as u32);
             e.u32(d.actions.len() as u32);
             for a in &d.actions {
@@ -286,7 +314,7 @@ fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
             }
             TAG_DECISION
         }
-        Frame::Down(Downlink::Result(r)) => {
+        Downlink::Result(r) => {
             e.u32(r.ue_id as u32);
             e.u64(r.task_id);
             e.u32(r.argmax as u32);
@@ -297,14 +325,13 @@ fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
             }
             TAG_RESULT
         }
-        Frame::Down(Downlink::Error { task_id, error }) => {
+        Downlink::Error { task_id, error } => {
             e.u64(*task_id);
             e.bytes(error.as_bytes());
             TAG_ERROR
         }
-        Frame::Down(Downlink::Shutdown) => TAG_SHUTDOWN,
-    };
-    (tag, e.0)
+        Downlink::Shutdown => TAG_SHUTDOWN,
+    }
 }
 
 /// The 8 checksummed header bytes (magic + version + tag + length) — the
@@ -483,6 +510,36 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
             Frame::Down(Downlink::Error { task_id, error })
         }
         TAG_SHUTDOWN => Frame::Down(Downlink::Shutdown),
+        TAG_DOWN_TO => {
+            let ue_id = d.u32()? as usize;
+            let inner_tag = d.u8()?;
+            let inner_body = d.bytes()?;
+            // reject nesting before recursing: decode depth stays 1 even
+            // on hostile bytes
+            if inner_tag == TAG_DOWN_TO {
+                return Err(WireError::Malformed(
+                    "nested DownTo envelopes are not allowed".into(),
+                ));
+            }
+            match decode_body(inner_tag, inner_body) {
+                Ok(Frame::Down(down)) => Frame::DownTo { ue_id, down },
+                Ok(other) => {
+                    return Err(WireError::Malformed(format!(
+                        "DownTo envelope wraps a non-downlink frame {other:?}"
+                    )))
+                }
+                Err(WireError::UnknownTag { got, .. }) => {
+                    // inner frames are same-version downlinks by
+                    // construction; an unknown inner tag is damage, not
+                    // forward compatibility (the outer frame is the unit
+                    // of skipping)
+                    return Err(WireError::Malformed(format!(
+                        "DownTo envelope wraps unknown tag {got:#04x}"
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
         got => {
             return Err(WireError::UnknownTag {
                 got,
@@ -669,6 +726,24 @@ mod tests {
                 error: "no calibration".into(),
             }),
             Frame::Down(Downlink::Shutdown),
+            Frame::DownTo {
+                ue_id: 9_001,
+                down: Downlink::Decision(FrameDecision {
+                    frame: 4,
+                    actions: vec![HybridAction::new(1, 0, -0.25, 1.0)],
+                }),
+            },
+            Frame::DownTo {
+                ue_id: 0,
+                down: Downlink::Error {
+                    task_id: 5,
+                    error: "addressed NACK".into(),
+                },
+            },
+            Frame::DownTo {
+                ue_id: 123,
+                down: Downlink::Shutdown,
+            },
         ];
         for f in frames {
             let buf = encode_frame(&f);
@@ -724,6 +799,42 @@ mod tests {
         match decode_frame(&bad) {
             Err(WireError::UnknownTag { got: 0x7F, skip }) => assert_eq!(skip, bad.len()),
             other => panic!("expected UnknownTag, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_down_to_is_rejected() {
+        // hand-build a DownTo whose inner tag is TAG_DOWN_TO: the decoder
+        // must reject it as malformed instead of recursing
+        let inner = Frame::DownTo {
+            ue_id: 1,
+            down: Downlink::Shutdown,
+        };
+        let inner_buf = encode_frame(&inner);
+        let inner_body = &inner_buf[HEADER_LEN..];
+        let mut body = Vec::new();
+        body.extend_from_slice(&7u32.to_le_bytes()); // outer ue_id
+        body.push(TAG_DOWN_TO);
+        body.extend_from_slice(&(inner_body.len() as u32).to_le_bytes());
+        body.extend_from_slice(inner_body);
+        let prefix = [
+            MAGIC[0],
+            MAGIC[1],
+            VERSION,
+            TAG_DOWN_TO,
+            body.len() as u8,
+            0,
+            0,
+            0,
+        ];
+        let crc = crc32_parts(&[&prefix, &body]);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&prefix);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&body);
+        match decode_frame(&buf) {
+            Err(WireError::Malformed(why)) => assert!(why.contains("nested"), "got: {why}"),
+            other => panic!("expected Malformed, got {other:?}"),
         }
     }
 

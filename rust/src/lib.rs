@@ -48,6 +48,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod env;
 pub mod exp;
+pub mod loadgen;
 pub mod metrics;
 pub mod profiles;
 pub mod rl;

@@ -1,0 +1,152 @@
+//! A small log-bucketed latency histogram (HDR-style, base-2).
+//!
+//! Exact counts below 16 µs, then 16 sub-buckets per power of two —
+//! relative quantile error is bounded by ~1/16 (6.25%) at any magnitude,
+//! with a fixed 976-bucket footprint and O(1) recording. Good enough for
+//! p50/p99/p999 over millions of decision-latency samples without
+//! storing them.
+
+/// Exact buckets `0..16`, then 16 sub-buckets for each exponent 4..=63.
+const N_BUCKETS: usize = 16 + 60 * 16;
+
+/// Microsecond latency histogram; merge-able across threads.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+        }
+    }
+
+    /// Bucket index for a microsecond value.
+    fn index(us: u64) -> usize {
+        if us < 16 {
+            return us as usize;
+        }
+        // us >= 16 so the leading exponent is at least 4
+        let exp = 63 - us.leading_zeros() as u64;
+        let sub = (us >> (exp - 4)) - 16; // 0..16
+        (16 + (exp - 4) * 16 + sub) as usize
+    }
+
+    /// Representative (midpoint) microsecond value of a bucket.
+    fn value_of(idx: usize) -> u64 {
+        if idx < 16 {
+            return idx as u64;
+        }
+        let g = (idx - 16) / 16; // exponent - 4
+        let sub = ((idx - 16) % 16) as u64;
+        let lo = (16 + sub) << g;
+        lo + (1u64 << g) / 2
+    }
+
+    /// Record one latency sample, in microseconds.
+    pub fn record(&mut self, us: u64) {
+        let idx = Self::index(us).min(N_BUCKETS - 1);
+        if let Some(b) = self.buckets.get_mut(idx) {
+            *b += 1;
+            self.count += 1;
+        }
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+    }
+
+    /// The `p`-quantile (`0.0..=1.0`) in microseconds — the midpoint of
+    /// the bucket holding the `ceil(p · count)`-th sample. 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Self::value_of(idx);
+            }
+        }
+        Self::value_of(N_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHist::new();
+        for us in 0..16u64 {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.percentile(0.0), 0);
+        // the 8th sample (ceil(0.5 * 16)) is value 7
+        assert_eq!(h.percentile(0.5), 7);
+        assert_eq!(h.percentile(1.0), 15);
+    }
+
+    #[test]
+    fn quantile_error_is_bounded() {
+        let mut h = LatencyHist::new();
+        for &us in &[100u64, 1_000, 10_000, 250_000, 3_000_000] {
+            for _ in 0..1000 {
+                h.record(us);
+            }
+        }
+        // each recorded magnitude must come back within the 1/16 bound
+        for (p, want) in [(0.1, 100u64), (0.3, 1_000), (0.5, 10_000), (0.7, 250_000), (0.99, 3_000_000)] {
+            let got = h.percentile(p);
+            let err = (got as f64 - want as f64).abs() / want as f64;
+            assert!(err <= 1.0 / 16.0 + 1e-9, "p{p}: got {got}, want ~{want}");
+        }
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for _ in 0..10 {
+            a.record(50);
+            b.record(5_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        let p25 = a.percentile(0.25);
+        let p75 = a.percentile(0.75);
+        assert!(p25 <= 53, "low half stays low: {p25}");
+        assert!((4_700..=5_400).contains(&p75), "high half stays high: {p75}");
+    }
+
+    #[test]
+    fn huge_values_do_not_panic() {
+        let mut h = LatencyHist::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(1.0) > 1u64 << 50);
+    }
+}

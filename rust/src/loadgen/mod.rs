@@ -1,0 +1,170 @@
+//! Trace-driven massive-fleet load generation (DESIGN.md
+//! §Sharded-Serving, "load harness").
+//!
+//! Drives a sharded serving fabric (reactor + per-shard server loops)
+//! with thousands of simulated UEs over loopback, multiplexed onto a
+//! handful of station connections:
+//!
+//! * [`hist`] — a log-bucketed latency histogram (p50/p99/p999 without
+//!   storing samples).
+//! * [`station`] — one connection speaking for a contiguous UE slice:
+//!   open/closed-loop reports, periodic raw offloads, reconnect churn.
+//! * [`run_fleet`] — partitions the fleet across stations (reusing
+//!   [`ShardMap`]'s contiguous slicing), runs them on named threads and
+//!   merges their stats into a [`FleetStats`].
+//!
+//! The `bench_load` bench and `integration_load` tests are thin wrappers
+//! over [`run_fleet`] against a live reactor.
+
+pub mod hist;
+pub mod station;
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use hist::LatencyHist;
+pub use station::{run_station, StationConfig, StationStats};
+
+use crate::coordinator::shard::ShardMap;
+
+/// How a station paces its reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalMode {
+    /// Fixed per-UE report cadence, regardless of decisions received.
+    Open,
+    /// A UE re-reports when its decision arrives (stall-timeout backed).
+    Closed,
+}
+
+/// Fleet-wide load shape.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    pub addr: SocketAddr,
+    /// Total simulated UEs (global ids `0..n_ues`).
+    pub n_ues: usize,
+    /// Station connections the fleet is multiplexed onto.
+    pub n_stations: usize,
+    pub mode: ArrivalMode,
+    pub duration: Duration,
+    pub report_interval: Duration,
+    /// Raw offload with every k-th report per UE (0 = never).
+    pub offload_every: usize,
+    /// Reconnect period for the churning stations.
+    pub churn_period: Option<Duration>,
+    /// How many stations (from index 0) churn; the rest hold their
+    /// connection for the whole run.
+    pub churn_stations: usize,
+}
+
+/// Merged view over every station (latencies in µs inside the
+/// histogram; the accessors convert to ms).
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    pub reports_sent: usize,
+    pub offloads_sent: usize,
+    pub decisions_received: usize,
+    pub decisions_after_reconnect: usize,
+    pub results_received: usize,
+    pub errors_received: usize,
+    pub reconnects: usize,
+    pub latency: LatencyHist,
+    /// Decisions per global ue id.
+    pub per_ue_decisions: Vec<usize>,
+    pub elapsed: Duration,
+}
+
+impl FleetStats {
+    fn absorb(&mut self, lo: usize, st: &StationStats) {
+        self.reports_sent += st.reports_sent;
+        self.offloads_sent += st.offloads_sent;
+        self.decisions_received += st.decisions_received;
+        self.decisions_after_reconnect += st.decisions_after_reconnect;
+        self.results_received += st.results_received;
+        self.errors_received += st.errors_received;
+        self.reconnects += st.reconnects;
+        self.latency.merge(&st.latency);
+        for (dst, &src) in self
+            .per_ue_decisions
+            .iter_mut()
+            .skip(lo)
+            .zip(st.per_ue_decisions.iter())
+        {
+            *dst += src;
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.percentile(0.50) as f64 / 1000.0
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.percentile(0.99) as f64 / 1000.0
+    }
+
+    pub fn p999_ms(&self) -> f64 {
+        self.latency.percentile(0.999) as f64 / 1000.0
+    }
+
+    pub fn decisions_per_s(&self) -> f64 {
+        self.decisions_received as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Offloads *served* per second (results that came back, not
+    /// requests sent).
+    pub fn offloads_per_s(&self) -> f64 {
+        self.results_received as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Partition `0..n_ues` into `n_stations` contiguous slices, drive each
+/// from its own named thread, and merge the results. Errors if any
+/// station could not reach the server within the run budget.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
+    anyhow::ensure!(cfg.n_ues > 0, "a fleet needs at least one UE");
+    anyhow::ensure!(cfg.n_stations > 0, "a fleet needs at least one station");
+    let map = ShardMap::new(cfg.n_ues, cfg.n_stations);
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(map.n_shards());
+    for s in 0..map.n_shards() {
+        let Some((lo, len)) = map.slice_of(s) else {
+            continue;
+        };
+        if len == 0 {
+            continue; // more stations than UEs
+        }
+        let scfg = StationConfig {
+            addr: cfg.addr,
+            lo,
+            n_ues: len,
+            mode: cfg.mode,
+            duration: cfg.duration,
+            report_interval: cfg.report_interval,
+            offload_every: cfg.offload_every,
+            churn_period: if s < cfg.churn_stations {
+                cfg.churn_period
+            } else {
+                None
+            },
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-station-{s}"))
+            .spawn(move || run_station(&scfg))
+            .with_context(|| format!("spawning station {s}"))?;
+        joins.push((lo, handle));
+    }
+    let mut fleet = FleetStats {
+        per_ue_decisions: vec![0; cfg.n_ues],
+        ..FleetStats::default()
+    };
+    for (lo, handle) in joins {
+        let st = handle
+            .join()
+            .map_err(|_| anyhow!("station at ue offset {lo} panicked"))?
+            .with_context(|| format!("station at ue offset {lo}"))?;
+        fleet.absorb(lo, &st);
+    }
+    fleet.elapsed = t0.elapsed();
+    Ok(fleet)
+}

@@ -1,0 +1,309 @@
+//! One load-generator station: a single multiplexed TCP connection
+//! speaking for a contiguous slice of UEs.
+//!
+//! Real deployments multiplex many UEs behind one base-station uplink;
+//! the harness mirrors that so a 10k-UE fleet needs tens of sockets,
+//! not ten thousand. The station drives its slice against a
+//! [`crate::transport::reactor::TcpReactor`] endpoint: `Hello` burst for
+//! the slice, then open- or closed-loop state reports with periodic raw
+//! offloads, attributing downlinks via the
+//! [`Frame::DownTo`] envelope and measuring report→decision latency per
+//! UE. Optional churn tears the socket down mid-run and re-registers the
+//! slice (session takeover on the reactor), modelling UE fleets that
+//! come and go.
+
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::hist::LatencyHist;
+use super::ArrivalMode;
+use crate::coordinator::protocol::{Downlink, OffloadRequest, UeStateReport, Uplink};
+use crate::coordinator::wire::{decode_frame, write_frame, Frame, WireError};
+
+/// Raw-offload payload bytes: 16 f32 image elements, matching
+/// `SyntheticCompute`'s expected input shape.
+const OFFLOAD_PAYLOAD: usize = 4 * 16;
+/// Blocking-read slice: also the station's send-loop pacing quantum.
+const READ_TIMEOUT: Duration = Duration::from_millis(1);
+
+/// One station's slice and behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct StationConfig {
+    pub addr: SocketAddr,
+    /// First global ue id of the slice.
+    pub lo: usize,
+    /// Slice length (UEs driven by this station).
+    pub n_ues: usize,
+    pub mode: ArrivalMode,
+    /// Wall-clock run budget.
+    pub duration: Duration,
+    /// Open-loop report cadence per UE; in closed-loop mode its 8×
+    /// multiple is the stall timeout that re-reports an unanswered UE.
+    pub report_interval: Duration,
+    /// Send a raw offload with every k-th report of a UE (0 = never).
+    pub offload_every: usize,
+    /// Tear the connection down and re-register the slice this often.
+    pub churn_period: Option<Duration>,
+}
+
+/// What one station saw (latencies in the embedded histogram, µs).
+#[derive(Debug, Clone, Default)]
+pub struct StationStats {
+    pub reports_sent: usize,
+    pub offloads_sent: usize,
+    pub decisions_received: usize,
+    /// Decisions received on a session after at least one reconnect —
+    /// nonzero proves the fleet kept being served through churn.
+    pub decisions_after_reconnect: usize,
+    pub results_received: usize,
+    pub errors_received: usize,
+    pub reconnects: usize,
+    pub latency: LatencyHist,
+    /// Decisions per slice-local UE (index `i` = global `lo + i`).
+    pub per_ue_decisions: Vec<usize>,
+}
+
+/// Connect and register the whole slice, retrying until `deadline`.
+fn open_session(cfg: &StationConfig, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        let attempt = (|| -> Result<TcpStream> {
+            let mut stream =
+                TcpStream::connect(cfg.addr).context("connecting to the reactor")?;
+            let _ = stream.set_nodelay(true);
+            stream
+                .set_read_timeout(Some(READ_TIMEOUT))
+                .context("setting the read timeout")?;
+            for i in 0..cfg.n_ues {
+                write_frame(&mut stream, &Frame::Hello { ue_id: cfg.lo + i })
+                    .map_err(|e| anyhow::anyhow!("hello for UE {}: {e}", cfg.lo + i))?;
+            }
+            Ok(stream)
+        })();
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() < deadline => {
+                log::debug!("station at {}: reconnect pending: {e:#}", cfg.lo);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Drive the slice until the duration elapses. Errors only when the
+/// server is unreachable within the run budget — everything else
+/// (drops, NACKs, churn) is counted, not fatal.
+pub fn run_station(cfg: &StationConfig) -> Result<StationStats> {
+    let deadline = Instant::now() + cfg.duration;
+    let stall = cfg.report_interval * 8;
+    let mut stats = StationStats {
+        per_ue_decisions: vec![0; cfg.n_ues],
+        ..StationStats::default()
+    };
+    let mut stream = open_session(cfg, deadline)?;
+    let mut session_start = Instant::now();
+    let mut reconnected = false;
+
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut scratch = [0u8; 65536];
+    // per-UE (slice-local) send state
+    let start = Instant::now();
+    let mut next_report_at: Vec<Instant> = (0..cfg.n_ues)
+        .map(|i| {
+            // stagger first reports across one interval so a big slice
+            // does not burst the uplink every period
+            let offset = cfg.report_interval.as_micros() as u64 * i as u64 / cfg.n_ues.max(1) as u64;
+            start + Duration::from_micros(offset)
+        })
+        .collect();
+    let mut awaiting: Vec<Option<Instant>> = vec![None; cfg.n_ues];
+    let mut pending: Vec<bool> = vec![true; cfg.n_ues];
+    let mut sent_count: Vec<u64> = vec![0; cfg.n_ues];
+    // station-unique task ids (disjoint ranges per slice offset)
+    let mut task_ctr: u64 = (cfg.lo as u64) << 32;
+
+    while Instant::now() < deadline {
+        let mut need_reconnect = false;
+
+        // -- send due reports (and their piggybacked offloads) --
+        let now = Instant::now();
+        for i in 0..cfg.n_ues {
+            let due = match cfg.mode {
+                ArrivalMode::Open => next_report_at.get(i).map_or(false, |&t| now >= t),
+                ArrivalMode::Closed => {
+                    pending.get(i).copied().unwrap_or(false)
+                        || awaiting
+                            .get(i)
+                            .and_then(|o| *o)
+                            .map_or(false, |t| now.duration_since(t) > stall)
+                }
+            };
+            if !due {
+                continue;
+            }
+            let gid = cfg.lo + i;
+            let report = UeStateReport {
+                ue_id: gid,
+                tasks_left: 4,
+                compute_left_s: 0.05,
+                offload_left_bits: 1e5,
+                distance_m: 40.0,
+            };
+            if write_frame(&mut stream, &Frame::Up(Uplink::Report(report))).is_err() {
+                need_reconnect = true;
+                break;
+            }
+            stats.reports_sent += 1;
+            if let Some(t) = next_report_at.get_mut(i) {
+                *t = now + cfg.report_interval;
+            }
+            if let Some(slot) = awaiting.get_mut(i) {
+                *slot = Some(now);
+            }
+            if let Some(p) = pending.get_mut(i) {
+                *p = false;
+            }
+            let count = sent_count.get_mut(i).map(|c| {
+                *c += 1;
+                *c
+            });
+            let offload_due =
+                cfg.offload_every > 0 && count.map_or(false, |c| c % cfg.offload_every as u64 == 0);
+            if offload_due {
+                task_ctr += 1;
+                let offload = OffloadRequest {
+                    ue_id: gid,
+                    task_id: task_ctr,
+                    b: 0,
+                    payload: vec![1u8; OFFLOAD_PAYLOAD],
+                    calibration: None,
+                };
+                if write_frame(&mut stream, &Frame::Up(Uplink::Offload(offload))).is_err() {
+                    need_reconnect = true;
+                    break;
+                }
+                stats.offloads_sent += 1;
+            }
+        }
+
+        // -- read one slice of downlink bytes, decode all full frames --
+        if !need_reconnect {
+            match stream.read(&mut scratch) {
+                Ok(0) => need_reconnect = true, // server closed the socket
+                Ok(n) => {
+                    if let Some(got) = scratch.get(..n) {
+                        rbuf.extend_from_slice(got);
+                    }
+                    loop {
+                        match decode_frame(&rbuf) {
+                            Ok((frame, used)) => {
+                                rbuf.drain(..used);
+                                let now = Instant::now();
+                                match frame {
+                                    Frame::DownTo { ue_id, down } => {
+                                        let Some(local) = ue_id
+                                            .checked_sub(cfg.lo)
+                                            .filter(|&l| l < cfg.n_ues)
+                                        else {
+                                            continue; // not ours; misrouted
+                                        };
+                                        match down {
+                                            Downlink::Decision(_) => {
+                                                stats.decisions_received += 1;
+                                                if reconnected {
+                                                    stats.decisions_after_reconnect += 1;
+                                                }
+                                                if let Some(d) =
+                                                    stats.per_ue_decisions.get_mut(local)
+                                                {
+                                                    *d += 1;
+                                                }
+                                                if let Some(slot) = awaiting.get_mut(local) {
+                                                    if let Some(t0) = slot.take() {
+                                                        stats.latency.record(
+                                                            now.duration_since(t0).as_micros()
+                                                                as u64,
+                                                        );
+                                                    }
+                                                }
+                                                if let Some(p) = pending.get_mut(local) {
+                                                    *p = true;
+                                                }
+                                            }
+                                            Downlink::Result(_) => stats.results_received += 1,
+                                            Downlink::Error { .. } => stats.errors_received += 1,
+                                            Downlink::Shutdown => {}
+                                        }
+                                    }
+                                    Frame::Welcome { .. } => {}
+                                    Frame::Down(Downlink::Error { .. }) => {
+                                        stats.errors_received += 1;
+                                    }
+                                    other => {
+                                        log::debug!("station: unexpected {other:?}; dropped");
+                                    }
+                                }
+                            }
+                            Err(WireError::Truncated { .. }) => break,
+                            Err(WireError::UnknownTag { skip, .. }) => {
+                                rbuf.drain(..skip.min(rbuf.len()));
+                            }
+                            Err(e) => {
+                                log::warn!("station at {}: poisoned downlink: {e}", cfg.lo);
+                                rbuf.clear();
+                                need_reconnect = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => need_reconnect = true,
+            }
+        }
+
+        // -- scheduled churn --
+        if !need_reconnect {
+            if let Some(period) = cfg.churn_period {
+                if session_start.elapsed() >= period && Instant::now() < deadline {
+                    log::debug!("station at {}: scheduled churn", cfg.lo);
+                    need_reconnect = true;
+                }
+            }
+        }
+
+        if need_reconnect {
+            let _ = stream.shutdown(Shutdown::Both);
+            match open_session(cfg, deadline) {
+                Ok(s) => {
+                    stream = s;
+                    rbuf.clear();
+                    session_start = Instant::now();
+                    stats.reconnects += 1;
+                    reconnected = true;
+                    for slot in awaiting.iter_mut() {
+                        *slot = None;
+                    }
+                    for p in pending.iter_mut() {
+                        *p = true;
+                    }
+                }
+                // the run budget expired while reconnecting: wrap up
+                Err(_) => break,
+            }
+        }
+    }
+
+    // polite leave so the shards see the slice go away
+    for i in 0..cfg.n_ues {
+        let _ = write_frame(&mut stream, &Frame::Up(Uplink::Goodbye { ue_id: cfg.lo + i }));
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(stats)
+}

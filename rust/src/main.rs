@@ -6,7 +6,7 @@
 //!              [--save policy.ckpt] [--resume policy.ckpt]
 //! macci eval   [--n-ues 5] [--policy local|random|edge_raw|split<k>]
 //! macci serve  [--model resnet18] [--n-ues 3] [--tasks 16]
-//! macci serve  --policy policy.ckpt [--frames 200] [--online-learn]
+//! macci serve  --policy policy.ckpt [--frames 200] [--online-learn] [--shards K]
 //! macci info                       # artifact + profile inventory
 //! ```
 
@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use macci::coordinator::decision::{ActorDecision, DecisionMaker};
+use macci::coordinator::decision::{ActorDecision, DecisionMaker, PolicyHandle};
 use macci::coordinator::inference::CollabPipeline;
 use macci::coordinator::learner::{self, LearnerConfig};
 use macci::coordinator::protocol::Uplink;
@@ -46,6 +46,7 @@ USAGE:
               [--precision f32|int8]
   macci serve --policy policy.ckpt [--frames 200] [--interval-ms 2]
               [--online-learn] [--learn-lr 1e-3] [--precision f32|int8]
+              [--shards K]
   macci info
 
 `train --save` writes a versioned, CRC-guarded checkpoint of the FULL
@@ -53,7 +54,9 @@ trainer state (resume with `train --resume` is bit-exact); `serve
 --policy` deploys the checkpointed actors at the edge, and
 `--online-learn` keeps refining them from serving telemetry, hot-swapping
 the serving policy between decision frames (see DESIGN.md
-§Policy-Lifecycle).
+§Policy-Lifecycle). `--shards K` runs K independent shard loops, each
+serving its own N-UE group from a replica of the checkpointed actors;
+policy publishes fan out to every shard (DESIGN.md §Sharded-Serving).
 
 Artifacts are read from ./artifacts (run `make artifacts` first).";
 
@@ -308,6 +311,10 @@ fn cmd_serve_policy(args: &Args) -> Result<()> {
 
     let cp = checkpoint::load(&path)
         .map_err(|e| anyhow::anyhow!("loading policy from {path}: {e}"))?;
+    let shards = args.usize_or("shards", 1)?.max(1);
+    if shards > 1 {
+        return cmd_serve_policy_sharded(args, &store, &cp, shards);
+    }
     let scenario = cp.scenario.clone();
     let profile = cp.profile.clone();
     let n = scenario.n_ues;
@@ -373,6 +380,124 @@ fn cmd_serve_policy(args: &Args) -> Result<()> {
         let ls = h.join();
         println!(
             "online learner: {} telemetry frames -> {} PPO rounds, {} policies published (last value loss {:.4})",
+            ls.frames, ls.rounds, ls.publishes, ls.last_value_loss
+        );
+    }
+    Ok(())
+}
+
+/// `serve --policy --shards K`: the sharded deployment shape of DESIGN.md
+/// §Sharded-Serving, in-process. Each shard is an independent server loop
+/// serving its own N-UE group from a replica of the checkpointed actors,
+/// driven by its own analytic env on a named thread; one [`PolicyHandle`]
+/// fanned out over every shard carries policy publishes to the whole
+/// fabric, and the online learner (fed from shard 0's telemetry) refines
+/// all shards at once through it.
+fn cmd_serve_policy_sharded(
+    args: &Args,
+    store: &ArtifactStore,
+    cp: &checkpoint::TrainerCheckpoint,
+    shards: usize,
+) -> Result<()> {
+    let frames = args.usize_or("frames", 200)?;
+    let interval = Duration::from_millis(args.u64_or("interval-ms", 2)?);
+    let online = args.has("online-learn");
+    let scenario = cp.scenario.clone();
+    let profile = cp.profile.clone();
+    let n = scenario.n_ues;
+    let seed = args.u64_or("seed", 1)?;
+    println!(
+        "serving policy across {shards} shards: N={n} UEs each ({} total), {frames} decision frames{}",
+        shards * n,
+        if online { ", online learning ON" } else { "" }
+    );
+
+    let (mut telemetry_tx, telemetry_rx) = if online {
+        // bounded feed, as in the single-shard path: a slow learner drops
+        // frames instead of growing the queue without bound
+        let (tx, rx) = std::sync::mpsc::sync_channel(1024);
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+
+    let mut servers = Vec::with_capacity(shards);
+    let mut publishers = Vec::with_capacity(shards);
+    let mut drivers = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let decisions = DecisionMaker::new(Box::new(ActorDecision::from_trainer_checkpoint(
+            store, cp,
+        )?));
+        publishers.push(decisions.policy_handle());
+        let pool = StatePool::new(
+            n,
+            StateNorm {
+                lambda_tasks: scenario.lambda_tasks,
+                frame_s: scenario.frame_s,
+                max_bits: profile.max_bits(),
+                d_max: scenario.d_max,
+            },
+        );
+        let mut server_cfg = ServerConfig::new(n, interval, frames);
+        server_cfg.exec.precision = Precision::parse(&args.str_or("precision", "f32"))?;
+        if s == 0 {
+            // the learner samples one shard's telemetry; its publishes
+            // still reach every shard through the fan-out handle
+            server_cfg.telemetry = telemetry_tx.take();
+        }
+        let (server, downlinks) = EdgeServer::spawn(server_cfg, pool, decisions, None)?;
+
+        let mut env =
+            MultiAgentEnv::new(profile.clone(), scenario.clone(), seed.wrapping_add(s as u64))?;
+        let uplink = server.uplink.clone();
+        let driver = std::thread::Builder::new()
+            .name(format!("shard-driver-{s}"))
+            .spawn(move || {
+                let received = drive_env_ues(&uplink, &downlinks, &mut env, frames, |_, _| {})?;
+                for ue in 0..n {
+                    let _ = uplink.send(Uplink::Goodbye { ue_id: ue });
+                }
+                Ok::<_, anyhow::Error>(received)
+            })?;
+        servers.push(server);
+        drivers.push(driver);
+    }
+
+    let fanout = PolicyHandle::fanout(publishers);
+    println!("policy fan-out live over {} shard slots", fanout.live_slots());
+    let mut learner_handle = None;
+    if let Some(rx) = telemetry_rx {
+        let lcfg = LearnerConfig {
+            lr: args.f64_or("learn-lr", 1e-3)? as f32,
+            ..LearnerConfig::for_store(store, n)?
+        };
+        learner_handle = Some(learner::spawn(
+            store, &profile, &scenario, lcfg, Some(cp), rx, fanout,
+        )?);
+    }
+
+    let mut min_received = usize::MAX;
+    for (s, driver) in drivers.into_iter().enumerate() {
+        let received = driver
+            .join()
+            .map_err(|_| anyhow::anyhow!("shard {s} driver panicked"))??;
+        min_received = min_received.min(*received.iter().min().unwrap_or(&0));
+    }
+    let (mut total_frames, mut total_swaps) = (0usize, 0usize);
+    for server in servers {
+        let stats = server.join();
+        total_frames += stats.frames;
+        total_swaps += stats.policy_swaps;
+    }
+    println!(
+        "served {total_frames} decision frames over {shards} shards ({min_received} per UE \
+         minimum, none missed), {total_swaps} policy swaps applied",
+    );
+    if let Some(h) = learner_handle {
+        let ls = h.join();
+        println!(
+            "online learner: {} telemetry frames -> {} PPO rounds, {} policies published \
+             to every shard (last value loss {:.4})",
             ls.frames, ls.rounds, ls.publishes, ls.last_value_loss
         );
     }

@@ -27,6 +27,10 @@ pub const DOWNLINK_QUEUE: usize = 1024;
 pub struct ChannelServerTransport {
     uplink: Receiver<Uplink>,
     downlinks: Vec<SyncSender<Downlink>>,
+    /// Frames dropped because a UE's bounded downlink queue was full —
+    /// drained by [`ServerTransport::take_drops`] so the loss is counted
+    /// in `ServerStats`, never silent.
+    drops: usize,
 }
 
 impl ChannelServerTransport {
@@ -36,7 +40,11 @@ impl ChannelServerTransport {
         uplink: Receiver<Uplink>,
         downlinks: Vec<SyncSender<Downlink>>,
     ) -> ChannelServerTransport {
-        ChannelServerTransport { uplink, downlinks }
+        ChannelServerTransport {
+            uplink,
+            downlinks,
+            drops: 0,
+        }
     }
 }
 
@@ -57,13 +65,19 @@ impl ServerTransport for ChannelServerTransport {
                 Err(TrySendError::Full(_)) => {
                     // a UE that stopped draining must not stall the server
                     // loop: drop the frame, mirroring the TCP transport's
-                    // slow-consumer policy
+                    // slow-consumer policy — but count it, so the loss
+                    // surfaces in ServerStats instead of vanishing
+                    self.drops += 1;
                     log::warn!("UE {ue_id} downlink queue full — frame dropped");
                 }
                 // a UE that dropped its receiver simply misses the frame
                 Err(TrySendError::Disconnected(_)) => {}
             }
         }
+    }
+
+    fn take_drops(&mut self) -> usize {
+        std::mem::take(&mut self.drops)
     }
 }
 

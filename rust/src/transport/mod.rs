@@ -17,11 +17,17 @@
 //!   byte-level codec of [`crate::coordinator::wire`] with a per-UE
 //!   session handshake and bounded per-connection write queues
 //!   (slow-consumer eviction) for backpressure.
+//! * [`reactor`] — the fleet-scale variant: one nonblocking reactor
+//!   thread sweeps every socket (no thread per connection), multiplexes
+//!   many UEs per connection, and feeds per-shard
+//!   [`reactor::ReactorShardTransport`] endpoints (DESIGN.md
+//!   §Sharded-Serving).
 //!
 //! [`ue`] adds [`ue::UeClient`], a client-side convenience wrapper over
 //! any [`ClientTransport`] (report / offload / await-result helpers).
 
 pub mod channel;
+pub mod reactor;
 pub mod tcp;
 pub mod ue;
 
@@ -82,6 +88,16 @@ pub trait ServerTransport: Send {
     /// and a client whose bounded write queue overflows may be evicted —
     /// the routing thread never stalls on one peer.
     fn send_to(&mut self, ue_id: usize, frame: Downlink);
+
+    /// Downlink frames dropped on the floor by backpressure (a bounded
+    /// queue or write buffer was full) since the last call — drains the
+    /// counter. Frames to unknown/disconnected UEs are *not* counted:
+    /// those are expected churn, not silent loss. The server loop folds
+    /// this into `ServerStats::downlink_drops` so drops are visible in
+    /// stats and benches instead of vanishing into a log line.
+    fn take_drops(&mut self) -> usize {
+        0
+    }
 }
 
 /// One UE's view of the radio link.

@@ -1,0 +1,693 @@
+//! The fleet-scale transport: one nonblocking reactor thread sweeping
+//! every socket, feeding per-shard server loops (DESIGN.md
+//! §Sharded-Serving).
+//!
+//! [`super::tcp`] spawns a reader and a writer thread per connection —
+//! honest at tens of UEs, dead at thousands. Here a single thread owns a
+//! nonblocking `TcpListener` plus every accepted `TcpStream` and runs a
+//! readiness sweep (the offline build has no epoll binding; the sweep is
+//! a poll loop over nonblocking sockets with a short idle sleep):
+//!
+//! ```text
+//!                        ┌── ReactorShardTransport (shard 0) ─ server_loop
+//!  sockets ── reactor ───┼── ReactorShardTransport (shard 1) ─ server_loop
+//!  (nonblocking sweep)   └── …        bounded sync_channels both ways
+//! ```
+//!
+//! * **Multiplexing.** One connection may carry many UEs (a load-test
+//!   station speaks for a whole slice): each UE registers with its own
+//!   `Hello`, and every server→UE frame is wrapped in
+//!   [`Frame::DownTo`] so the peer can attribute it. Single-UE
+//!   [`super::tcp::TcpClientTransport`] clients also work — their reader
+//!   unwraps envelopes addressed to them.
+//! * **Session takeover.** A `Hello` for an already-registered UE moves
+//!   the registration to the new connection (latest wins) — reconnect
+//!   churn never races the old socket's EOF.
+//! * **Backpressure.** Per-connection write buffers are capped
+//!   ([`ReactorConfig::write_buf_cap`]): a frame that does not fit is
+//!   dropped and counted against the owning shard (visible via
+//!   [`crate::transport::ServerTransport::take_drops`] →
+//!   `ServerStats::downlink_drops`), and `evict_after_drops` consecutive
+//!   drops evict the connection — one stalled station can never stall
+//!   the sweep.
+//! * **Fault isolation.** A frame that fails to decode poisons that one
+//!   connection: best-effort NACK, close, synthesized `Goodbye`s for its
+//!   registered UEs. Unknown-but-well-framed tags are skipped in place.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{ServerTransport, TransportError};
+use crate::coordinator::protocol::{Downlink, SESSION_ERROR_TASK, Uplink};
+use crate::coordinator::shard::ShardMap;
+use crate::coordinator::wire::{decode_frame, encode_frame, Frame, WireError};
+
+/// Reactor sweep knobs. `max_ues`/`n_shards` define the [`ShardMap`]
+/// used for uplink routing; the rest bound per-connection memory.
+#[derive(Debug, Clone, Copy)]
+pub struct ReactorConfig {
+    /// Valid ue ids are `0..max_ues`; `Hello`s outside are NACKed.
+    pub max_ues: usize,
+    /// Server shards fed by this reactor (one transport endpoint each).
+    pub n_shards: usize,
+    /// Bytes one connection may buffer for write before further frames
+    /// to it are dropped (and counted) instead of queued.
+    pub write_buf_cap: usize,
+    /// Consecutive dropped frames after which a connection is evicted
+    /// as a slow consumer (any flushed byte resets the streak).
+    pub evict_after_drops: usize,
+}
+
+impl ReactorConfig {
+    pub fn new(max_ues: usize, n_shards: usize) -> ReactorConfig {
+        ReactorConfig {
+            max_ues,
+            n_shards: n_shards.max(1),
+            write_buf_cap: 256 * 1024,
+            evict_after_drops: 8,
+        }
+    }
+}
+
+/// Reactor-side counters, returned by [`TcpReactor::stop`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReactorStats {
+    /// Connections accepted over the reactor's lifetime.
+    pub accepted: usize,
+    /// Connections evicted as slow consumers.
+    pub evicted: usize,
+    /// Uplink frames dropped because a shard's bounded queue was full.
+    pub uplink_drops: usize,
+    /// `Goodbye`s synthesized for UEs whose connection vanished.
+    pub goodbyes_synthesized: usize,
+}
+
+/// One shard's endpoint on the reactor: an ordinary [`ServerTransport`]
+/// carrying **global** ue ids (wrap it in
+/// [`crate::coordinator::shard::ShardView`] for a slice-local view).
+pub struct ReactorShardTransport {
+    shard: usize,
+    uplink: Receiver<Uplink>,
+    down_tx: SyncSender<(usize, Downlink)>,
+    drops: Arc<AtomicUsize>,
+}
+
+impl ServerTransport for ReactorShardTransport {
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError> {
+        match self.uplink.try_recv() {
+            Ok(u) => Ok(Some(u)),
+            Err(TryRecvError::Empty) => Ok(None),
+            // the reactor thread exited and dropped its senders: no UE
+            // of this shard can ever speak again
+            Err(TryRecvError::Disconnected) => Err(TransportError::Closed),
+        }
+    }
+
+    fn send_to(&mut self, ue_id: usize, frame: Downlink) {
+        match self.down_tx.try_send((ue_id, frame)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                // the reactor is behind on this shard's downlink: drop
+                // and count rather than stall the server loop
+                self.drops.fetch_add(1, Ordering::Relaxed);
+                log::warn!("shard {} downlink queue full — frame to UE {ue_id} dropped", self.shard);
+            }
+            // reactor gone: the server loop will see Closed on try_recv
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    fn take_drops(&mut self) -> usize {
+        self.drops.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// Handle to the running reactor thread. Dropping it stops the sweep,
+/// closes every connection and joins the thread.
+pub struct TcpReactor {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<ReactorStats>>,
+}
+
+impl TcpReactor {
+    /// Bind `addr` (port 0 for ephemeral) and start the sweep thread.
+    /// Returns the reactor handle plus one [`ReactorShardTransport`] per
+    /// shard, in shard order.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        cfg: ReactorConfig,
+    ) -> Result<(TcpReactor, Vec<ReactorShardTransport>)> {
+        let listener = TcpListener::bind(addr).context("binding the reactor listener")?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true).context("listener nonblocking mode")?;
+
+        let map = ShardMap::new(cfg.max_ues, cfg.n_shards);
+        let mut transports = Vec::with_capacity(map.n_shards());
+        let mut up_txs = Vec::with_capacity(map.n_shards());
+        let mut down_rxs = Vec::with_capacity(map.n_shards());
+        let mut drops = Vec::with_capacity(map.n_shards());
+        for shard in 0..map.n_shards() {
+            let slice_len = map.slice_of(shard).map(|(_, len)| len).unwrap_or(0);
+            // a full per-UE broadcast must fit without forcing drops
+            let (up_tx, up_rx) = sync_channel::<Uplink>((2 * slice_len).max(4096));
+            let (down_tx, down_rx) = sync_channel::<(usize, Downlink)>((2 * slice_len).max(1024));
+            let ctr = Arc::new(AtomicUsize::new(0));
+            transports.push(ReactorShardTransport {
+                shard,
+                uplink: up_rx,
+                down_tx,
+                drops: ctr.clone(),
+            });
+            up_txs.push(up_tx);
+            down_rxs.push(down_rx);
+            drops.push(ctr);
+        }
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("ue-reactor".into())
+                .spawn(move || {
+                    Reactor {
+                        cfg,
+                        map,
+                        listener,
+                        up_txs,
+                        down_rxs,
+                        shard_drops: drops,
+                        conns: Vec::new(),
+                        by_ue: vec![None; cfg.max_ues],
+                        stats: ReactorStats::default(),
+                        stop,
+                    }
+                    .run()
+                })
+                .context("spawning the reactor thread")?
+        };
+
+        Ok((
+            TcpReactor {
+                local_addr,
+                stop,
+                handle: Some(handle),
+            },
+            transports,
+        ))
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop the sweep, close every connection and collect the stats.
+    /// The shard transports' uplinks report `Closed` afterwards, so
+    /// server loops parked on them exit.
+    pub fn stop(mut self) -> ReactorStats {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for TcpReactor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One live connection in the sweep.
+struct Conn {
+    stream: TcpStream,
+    /// Undecoded inbound bytes (frames straddle reads).
+    rbuf: Vec<u8>,
+    /// Encoded outbound bytes awaiting socket readiness.
+    wbuf: VecDeque<u8>,
+    /// Global ue ids registered on this connection.
+    ues: Vec<usize>,
+    /// Consecutive dropped downlink frames (slow-consumer eviction).
+    drop_streak: usize,
+}
+
+/// Why a connection leaves the sweep (logging only).
+enum Close {
+    Eof,
+    IoError,
+    Poisoned,
+    Rejected,
+    Evicted,
+}
+
+struct Reactor {
+    cfg: ReactorConfig,
+    map: ShardMap,
+    listener: TcpListener,
+    up_txs: Vec<SyncSender<Uplink>>,
+    down_rxs: Vec<Receiver<(usize, Downlink)>>,
+    /// Per-shard backpressure-drop counters, shared with the shard
+    /// transports so `take_drops` sees reactor-side write-buffer drops.
+    shard_drops: Vec<Arc<AtomicUsize>>,
+    conns: Vec<Option<Conn>>,
+    /// `by_ue[global_id]` → index into `conns` of the owning connection.
+    by_ue: Vec<Option<usize>>,
+    stats: ReactorStats,
+    stop: Arc<AtomicBool>,
+}
+
+impl Reactor {
+    fn run(mut self) -> ReactorStats {
+        while !self.stop.load(Ordering::SeqCst) {
+            let mut progress = false;
+            progress |= self.accept_new();
+            progress |= self.drain_downlinks();
+            progress |= self.flush_writes();
+            progress |= self.read_sockets();
+            if !progress {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+        // close everything on the way out (synthesized Goodbyes give the
+        // shard loops a chance to mark the fleet gone before Closed)
+        for slot in 0..self.conns.len() {
+            if let Some(conn) = self.conns.get_mut(slot).and_then(Option::take) {
+                self.close_conn(conn, Close::Eof);
+            }
+        }
+        self.stats
+    }
+
+    /// Accept every pending connection (nonblocking).
+    fn accept_new(&mut self) -> bool {
+        let mut any = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, from)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    log::debug!("reactor: connection from {from}");
+                    self.stats.accepted += 1;
+                    any = true;
+                    let conn = Conn {
+                        stream,
+                        rbuf: Vec::new(),
+                        wbuf: VecDeque::new(),
+                        ues: Vec::new(),
+                        drop_streak: 0,
+                    };
+                    match self.conns.iter_mut().position(|c| c.is_none()) {
+                        Some(slot) => {
+                            if let Some(c) = self.conns.get_mut(slot) {
+                                *c = Some(conn);
+                            }
+                        }
+                        None => self.conns.push(Some(conn)),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    log::error!("reactor accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        any
+    }
+
+    /// Move every queued (ue, frame) pair from the shards into the
+    /// owning connection's write buffer, as [`Frame::DownTo`] envelopes.
+    fn drain_downlinks(&mut self) -> bool {
+        let mut any = false;
+        let mut evict: Vec<usize> = Vec::new();
+        for shard in 0..self.down_rxs.len() {
+            loop {
+                let (ue_id, down) = match self.down_rxs.get(shard).map(|rx| rx.try_recv()) {
+                    Some(Ok(pair)) => pair,
+                    // Empty now, or the shard's server loop exited and
+                    // dropped its sender — either way nothing to move
+                    _ => break,
+                };
+                any = true;
+                let Some(&Some(slot)) = self.by_ue.get(ue_id) else {
+                    // no live session for this UE: expected churn (the
+                    // shard keeps broadcasting through disconnects), not
+                    // a backpressure drop — not counted
+                    continue;
+                };
+                let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                    continue;
+                };
+                let bytes = encode_frame(&Frame::DownTo { ue_id, down });
+                if conn.wbuf.len() + bytes.len() > self.cfg.write_buf_cap {
+                    // slow consumer: drop, count against the shard, and
+                    // evict the connection once the streak is long enough
+                    conn.drop_streak += 1;
+                    if let Some(ctr) = self.shard_drops.get(shard) {
+                        ctr.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if conn.drop_streak >= self.cfg.evict_after_drops.max(1)
+                        && !evict.contains(&slot)
+                    {
+                        evict.push(slot);
+                    }
+                } else {
+                    conn.wbuf.extend(bytes);
+                    conn.drop_streak = 0;
+                }
+            }
+        }
+        for slot in evict {
+            if let Some(conn) = self.conns.get_mut(slot).and_then(Option::take) {
+                log::warn!("reactor: evicting slow consumer on slot {slot}");
+                self.stats.evicted += 1;
+                self.close_conn(conn, Close::Evicted);
+            }
+        }
+        any
+    }
+
+    /// Write as much buffered output as each socket accepts.
+    fn flush_writes(&mut self) -> bool {
+        let mut any = false;
+        for slot in 0..self.conns.len() {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                continue;
+            };
+            let mut dead = false;
+            while !conn.wbuf.is_empty() {
+                let (front, _) = conn.wbuf.as_slices();
+                match conn.stream.write(front) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wbuf.drain(..n);
+                        conn.drop_streak = 0;
+                        any = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if dead {
+                if let Some(conn) = self.conns.get_mut(slot).and_then(Option::take) {
+                    self.close_conn(conn, Close::IoError);
+                }
+            }
+        }
+        any
+    }
+
+    /// Read available bytes from every socket and decode/dispatch the
+    /// complete frames.
+    fn read_sockets(&mut self) -> bool {
+        let mut any = false;
+        let mut scratch = [0u8; 65536];
+        for slot in 0..self.conns.len() {
+            // take the connection out of the slab while handling it so
+            // frame dispatch can borrow the rest of the reactor freely
+            let Some(mut conn) = self.conns.get_mut(slot).and_then(Option::take) else {
+                continue;
+            };
+            let mut close: Option<Close> = None;
+            loop {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        close = Some(Close::Eof);
+                        break;
+                    }
+                    Ok(n) => {
+                        any = true;
+                        if let Some(got) = scratch.get(..n) {
+                            conn.rbuf.extend_from_slice(got);
+                        }
+                        if let Some(why) = self.dispatch_frames(slot, &mut conn) {
+                            close = Some(why);
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        close = Some(Close::IoError);
+                        break;
+                    }
+                }
+            }
+            match close {
+                Some(why) => self.close_conn(conn, why),
+                None => {
+                    if let Some(c) = self.conns.get_mut(slot) {
+                        *c = Some(conn);
+                    }
+                }
+            }
+        }
+        any
+    }
+
+    /// Decode every complete frame buffered on `conn`. Returns a close
+    /// reason when the connection must go.
+    fn dispatch_frames(&mut self, slot: usize, conn: &mut Conn) -> Option<Close> {
+        loop {
+            match decode_frame(&conn.rbuf) {
+                Ok((frame, used)) => {
+                    conn.rbuf.drain(..used);
+                    if let Some(why) = self.handle_frame(slot, conn, frame) {
+                        return Some(why);
+                    }
+                }
+                Err(WireError::Truncated { .. }) => return None,
+                Err(WireError::UnknownTag { got, skip }) => {
+                    // fully framed and CRC-valid: step over it in place
+                    log::debug!("reactor: unknown frame tag {got:#04x}; skipped");
+                    conn.rbuf.drain(..skip.min(conn.rbuf.len()));
+                }
+                Err(e) => {
+                    // framing is lost on this connection only: NACK
+                    // best-effort and close; other connections unharmed
+                    log::warn!("reactor: poisoned stream on slot {slot}: {e}");
+                    self.queue_nack(conn, format!("wire error, closing connection: {e}"));
+                    return Some(Close::Poisoned);
+                }
+            }
+        }
+    }
+
+    /// One decoded frame from a peer.
+    fn handle_frame(&mut self, slot: usize, conn: &mut Conn, frame: Frame) -> Option<Close> {
+        match frame {
+            Frame::Hello { ue_id } => {
+                if ue_id >= self.cfg.max_ues {
+                    self.queue_nack(
+                        conn,
+                        format!("ue_id {ue_id} out of range (reactor admits {} UEs)", self.cfg.max_ues),
+                    );
+                    return Some(Close::Rejected);
+                }
+                // latest wins: a reconnecting station must not race its
+                // old socket's EOF — move the registration here
+                if let Some(&Some(old)) = self.by_ue.get(ue_id) {
+                    if old != slot {
+                        log::debug!("reactor: UE {ue_id} takes over from slot {old}");
+                        if let Some(old_conn) = self.conns.get_mut(old).and_then(Option::as_mut) {
+                            old_conn.ues.retain(|&u| u != ue_id);
+                        }
+                    }
+                }
+                if let Some(owner) = self.by_ue.get_mut(ue_id) {
+                    *owner = Some(slot);
+                }
+                if !conn.ues.contains(&ue_id) {
+                    conn.ues.push(ue_id);
+                }
+                let bytes = encode_frame(&Frame::Welcome { ue_id });
+                if conn.wbuf.len() + bytes.len() > self.cfg.write_buf_cap {
+                    return Some(Close::Evicted);
+                }
+                conn.wbuf.extend(bytes);
+                None
+            }
+            Frame::Up(up) => {
+                let claimed = match &up {
+                    Uplink::Report(r) => r.ue_id,
+                    Uplink::Offload(o) => o.ue_id,
+                    Uplink::Goodbye { ue_id } => *ue_id,
+                };
+                // anti-spoof: the claimed UE must be registered on THIS
+                // connection (covers unknown ids and takeovers at once)
+                if self.by_ue.get(claimed).copied().flatten() != Some(slot) {
+                    log::warn!("reactor: slot {slot} sent a frame claiming UE {claimed}; dropped");
+                    return None;
+                }
+                if let Uplink::Goodbye { ue_id } = up {
+                    // a polite leave: deregister now so closing the
+                    // socket later does not synthesize a second Goodbye
+                    if let Some(owner) = self.by_ue.get_mut(ue_id) {
+                        *owner = None;
+                    }
+                    conn.ues.retain(|&u| u != ue_id);
+                }
+                self.route_uplink(up);
+                None
+            }
+            other => {
+                log::warn!("reactor: peer sent an unexpected {other:?}; dropped");
+                None
+            }
+        }
+    }
+
+    /// Hand an uplink to its owning shard (nonblocking; a full shard
+    /// queue drops the frame and counts it).
+    fn route_uplink(&mut self, up: Uplink) {
+        let ue_id = match &up {
+            Uplink::Report(r) => r.ue_id,
+            Uplink::Offload(o) => o.ue_id,
+            Uplink::Goodbye { ue_id } => *ue_id,
+        };
+        let Some(shard) = self.map.shard_of(ue_id) else {
+            return;
+        };
+        let Some(tx) = self.up_txs.get(shard) else {
+            return;
+        };
+        match tx.try_send(up) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.stats.uplink_drops += 1;
+                log::warn!("reactor: shard {shard} uplink queue full — frame from UE {ue_id} dropped");
+            }
+            // the shard's loop exited; nothing to route to
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Best-effort session NACK into the connection's write buffer.
+    fn queue_nack(&mut self, conn: &mut Conn, error: String) {
+        let bytes = encode_frame(&Frame::Down(Downlink::Error {
+            task_id: SESSION_ERROR_TASK,
+            error,
+        }));
+        if conn.wbuf.len() + bytes.len() <= self.cfg.write_buf_cap {
+            conn.wbuf.extend(bytes);
+        }
+    }
+
+    /// Flush what we can, deregister the connection's UEs (synthesizing
+    /// `Goodbye`s so no shard waits on them forever) and shut the socket.
+    fn close_conn(&mut self, mut conn: Conn, why: Close) {
+        let label = match why {
+            Close::Eof => "eof",
+            Close::IoError => "io error",
+            Close::Poisoned => "poisoned stream",
+            Close::Rejected => "rejected",
+            Close::Evicted => "evicted",
+        };
+        log::debug!("reactor: closing connection ({label}, {} UEs)", conn.ues.len());
+        // last-gasp flush so NACKs/Welcomes already buffered get a chance
+        if !conn.wbuf.is_empty() {
+            let (front, _) = conn.wbuf.as_slices();
+            let _ = conn.stream.write(front);
+        }
+        let ues = std::mem::take(&mut conn.ues);
+        for ue_id in ues {
+            if let Some(owner) = self.by_ue.get_mut(ue_id) {
+                *owner = None;
+            }
+            self.stats.goodbyes_synthesized += 1;
+            self.route_uplink(Uplink::Goodbye { ue_id });
+        }
+        let _ = conn.stream.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::UeStateReport;
+    use crate::transport::tcp::TcpClientTransport;
+    use crate::transport::ClientTransport;
+
+    fn report(ue_id: usize) -> Uplink {
+        Uplink::Report(UeStateReport {
+            ue_id,
+            tasks_left: 2,
+            compute_left_s: 0.1,
+            offload_left_bits: 5.0,
+            distance_m: 30.0,
+        })
+    }
+
+    fn wait_uplink(t: &mut ReactorShardTransport) -> Option<Uplink> {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while std::time::Instant::now() < deadline {
+            if let Some(u) = t.try_recv().unwrap() {
+                return Some(u);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        None
+    }
+
+    #[test]
+    fn single_ue_client_roundtrips_through_the_reactor() {
+        let cfg = ReactorConfig::new(4, 2);
+        let (reactor, mut shards) = TcpReactor::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = reactor.local_addr();
+        // UE 3 belongs to shard 1 of the 4-UE map
+        let mut client = TcpClientTransport::connect(addr, 3).unwrap();
+        client.send(report(3)).unwrap();
+        assert_eq!(wait_uplink(&mut shards[1]), Some(report(3)));
+        // downlink rides a DownTo envelope; the client unwraps its own
+        shards[1].send_to(3, Downlink::Shutdown);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match client.recv_timeout(Duration::from_millis(100)).unwrap() {
+                Some(Downlink::Shutdown) => break,
+                Some(other) => panic!("expected shutdown, got {other:?}"),
+                None => assert!(std::time::Instant::now() < deadline, "no shutdown in time"),
+            }
+        }
+        let stats = reactor.stop();
+        assert_eq!(stats.accepted, 1);
+        // after stop the shard uplink reports closure
+        assert!(matches!(shards[0].try_recv(), Err(TransportError::Closed)));
+    }
+
+    #[test]
+    fn hello_takeover_moves_the_registration() {
+        let cfg = ReactorConfig::new(2, 1);
+        let (reactor, mut shards) = TcpReactor::bind("127.0.0.1:0", cfg).unwrap();
+        let addr = reactor.local_addr();
+        let first = TcpClientTransport::connect(addr, 0).unwrap();
+        // second session for the same UE: latest wins, no rejection
+        let mut second = TcpClientTransport::connect(addr, 0).unwrap();
+        second.send(report(0)).unwrap();
+        assert_eq!(wait_uplink(&mut shards[0]), Some(report(0)));
+        drop(first);
+        drop(second);
+        reactor.stop();
+    }
+}

@@ -84,6 +84,9 @@ pub struct TcpServerTransport {
     conns: Arc<Mutex<Vec<ConnHandle>>>,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    /// Downlink frames dropped by the slow-consumer eviction path —
+    /// drained by [`ServerTransport::take_drops`] into `ServerStats`.
+    drops: usize,
 }
 
 impl TcpServerTransport {
@@ -153,6 +156,7 @@ impl TcpServerTransport {
             conns,
             stop,
             accept: Some(accept),
+            drops: 0,
         })
     }
 
@@ -191,6 +195,7 @@ impl ServerTransport for TcpServerTransport {
                 // a client that stopped draining its socket must not be
                 // able to stall the single routing thread (and with it
                 // every other UE): evict the slow consumer instead
+                self.drops += 1;
                 log::warn!("UE {ue_id} write queue full — disconnecting the slow client");
                 if let Some(p) = lock_unpoisoned(&self.peers).remove(&ue_id) {
                     let _ = p.stream.shutdown(Shutdown::Both);
@@ -202,6 +207,10 @@ impl ServerTransport for TcpServerTransport {
                 lock_unpoisoned(&self.peers).remove(&ue_id);
             }
         }
+    }
+
+    fn take_drops(&mut self) -> usize {
+        std::mem::take(&mut self.drops)
     }
 }
 
@@ -432,6 +441,15 @@ impl TcpClientTransport {
                     Ok(Frame::Down(d)) => {
                         let last = matches!(d, Downlink::Shutdown);
                         if tx.send(d).is_err() || last {
+                            break;
+                        }
+                    }
+                    // reactor servers address every downlink explicitly
+                    // (their sockets may carry many UEs); a single-UE
+                    // client just unwraps its own envelopes
+                    Ok(Frame::DownTo { ue_id: to, down }) if to == ue_id => {
+                        let last = matches!(down, Downlink::Shutdown);
+                        if tx.send(down).is_err() || last {
                             break;
                         }
                     }

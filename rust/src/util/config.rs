@@ -16,6 +16,7 @@
 //! | `MACCI_N_ENVS`             | [`n_envs`]               | rollout lanes (≥ 1) |
 //! | `MACCI_BENCH_MS`           | [`bench_ms`]             | per-case bench budget |
 //! | `MACCI_BENCH_SERVING_TASKS`| [`bench_serving_tasks`]  | serving-bench tasks per UE |
+//! | `MACCI_BENCH_LOAD_UES`     | [`bench_load_ues`]       | load-bench fleet size cap |
 //! | `MACCI_LOG`                | [`log_level`]            | raw level spelling |
 
 use once_cell::sync::Lazy;
@@ -41,6 +42,8 @@ static BENCH_MS: Lazy<Option<u64>> =
     Lazy::new(|| raw("MACCI_BENCH_MS").and_then(|v| v.parse().ok()));
 static BENCH_SERVING_TASKS: Lazy<Option<u64>> =
     Lazy::new(|| raw("MACCI_BENCH_SERVING_TASKS").and_then(|v| v.parse().ok()));
+static BENCH_LOAD_UES: Lazy<Option<u64>> =
+    Lazy::new(|| raw("MACCI_BENCH_LOAD_UES").and_then(|v| v.parse().ok()).filter(|&u| u >= 1));
 static LOG_LEVEL: Lazy<Option<String>> = Lazy::new(|| raw("MACCI_LOG"));
 
 /// `MACCI_FORCE_SCALAR`: pin the scalar reference kernels (any non-empty
@@ -75,6 +78,13 @@ pub fn bench_ms(default_ms: u64) -> u64 {
 /// `MACCI_BENCH_SERVING_TASKS`: tasks per UE in the serving bench.
 pub fn bench_serving_tasks(default: u64) -> u64 {
     BENCH_SERVING_TASKS.unwrap_or(default)
+}
+
+/// `MACCI_BENCH_LOAD_UES`: the largest fleet the load bench drives
+/// (values < 1 and unparsable spellings fall back to `default`). CI sets
+/// this low so the smoke step stays bounded.
+pub fn bench_load_ues(default: u64) -> u64 {
+    BENCH_LOAD_UES.unwrap_or(default)
 }
 
 /// `MACCI_LOG`: the raw log-level spelling ("debug", "trace", ...).

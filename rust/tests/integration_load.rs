@@ -1,0 +1,372 @@
+//! Fleet-scale serving integration: the sharded reactor core under a
+//! 1k-UE loopback trace with reconnect churn, plus fault-injection and
+//! drop-accounting regressions (ISSUE 8 satellites).
+
+use std::io::Write as IoWrite;
+use std::net::TcpStream;
+use std::sync::mpsc::sync_channel;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use macci::coordinator::decision::{DecisionMaker, DecisionSource, StaticDecision};
+use macci::coordinator::protocol::{
+    Downlink, FrameDecision, InferenceResult, UeStateReport, Uplink,
+};
+use macci::coordinator::server::{EdgeServer, ServerConfig};
+use macci::coordinator::shard::{spawn_shards, ShardMap};
+use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::coordinator::wire::{encode_frame, read_frame, write_frame, Frame};
+use macci::env::HybridAction;
+use macci::loadgen::{run_fleet, ArrivalMode, FleetConfig};
+use macci::rl::checkpoint::PolicySnapshot;
+use macci::transport::channel::ChannelServerTransport;
+use macci::transport::reactor::{ReactorConfig, ReactorShardTransport, TcpReactor};
+use macci::transport::tcp::TcpClientTransport;
+use macci::transport::{ClientTransport, ServerTransport};
+
+fn pool(n: usize) -> StatePool {
+    StatePool::new(
+        n,
+        StateNorm {
+            lambda_tasks: 10.0,
+            frame_s: 0.5,
+            max_bits: 1e6,
+            d_max: 100.0,
+        },
+    )
+}
+
+fn report(ue_id: usize) -> Uplink {
+    Uplink::Report(UeStateReport {
+        ue_id,
+        tasks_left: 3,
+        compute_left_s: 0.1,
+        offload_left_bits: 1e4,
+        distance_m: 40.0,
+    })
+}
+
+/// A static joint action whose source accepts policy installs — lets the
+/// tests counter-verify that a fan-out publish reached a shard (its
+/// `ServerStats::policy_swaps` ticks).
+struct SwappableStatic {
+    actions: Vec<HybridAction>,
+}
+
+impl DecisionSource for SwappableStatic {
+    fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
+        Ok(self.actions.clone())
+    }
+
+    fn install(&mut self, _snap: &PolicySnapshot) -> Result<bool> {
+        Ok(true)
+    }
+}
+
+fn fleet_server_cfg(len: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::new(len, Duration::from_millis(100), usize::MAX);
+    cfg.per_ue_decisions = true;
+    cfg.exit_when_empty = false; // churn gaps must not stop the shard
+    cfg.decide_on_partial = true;
+    cfg.drain_limit = 1024;
+    cfg
+}
+
+fn poll_uplink(t: &mut ReactorShardTransport, deadline: Instant) -> Option<Uplink> {
+    while Instant::now() < deadline {
+        if let Ok(Some(u)) = t.try_recv() {
+            return Some(u);
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    None
+}
+
+/// The tentpole end-to-end: 1000 UEs over 2 shards and 8 multiplexed
+/// stations, two of them churning — every UE is served, no downlink is
+/// silently lost, both shards keep running, a fanned-out policy publish
+/// reaches each shard, and a fresh session on a used ue id still gets
+/// decisions afterwards (no wedged shard, no leaked slot).
+#[test]
+fn sharded_fleet_serves_1k_ues_through_churn() {
+    const N_UES: usize = 1000;
+    const N_SHARDS: usize = 2;
+    let map = ShardMap::new(N_UES, N_SHARDS);
+    let (reactor, transports) =
+        TcpReactor::bind("127.0.0.1:0", ReactorConfig::new(N_UES, N_SHARDS)).unwrap();
+    let addr = reactor.local_addr();
+
+    let shards: Vec<_> = transports
+        .into_iter()
+        .enumerate()
+        .map(|(shard, t)| {
+            let len = map.slice_of(shard).unwrap().1;
+            let dm = DecisionMaker::new(Box::new(SwappableStatic {
+                actions: vec![HybridAction::new(0, 0, 0.0, 1.0); len],
+            }));
+            (t, pool(len), dm)
+        })
+        .collect();
+    let (handles, policy) =
+        spawn_shards(&map, |_s, len| fleet_server_cfg(len), shards, None).unwrap();
+    assert_eq!(policy.live_slots(), N_SHARDS);
+
+    // one publish through the fan-out handle must reach every shard
+    assert!(policy.publish(PolicySnapshot {
+        version: 7,
+        actors: Vec::new(),
+    }));
+
+    let fleet = FleetConfig {
+        addr,
+        n_ues: N_UES,
+        n_stations: 8,
+        mode: ArrivalMode::Open,
+        duration: Duration::from_secs(3),
+        report_interval: Duration::from_millis(100),
+        offload_every: 0,
+        churn_period: Some(Duration::from_millis(700)),
+        churn_stations: 2,
+    };
+    let stats = run_fleet(&fleet).unwrap();
+
+    assert!(stats.reports_sent > 0);
+    assert!(
+        stats.reconnects >= 2,
+        "churning stations must have reconnected: {}",
+        stats.reconnects
+    );
+    assert!(
+        stats.decisions_after_reconnect > 0,
+        "reconnected UEs must keep receiving decisions"
+    );
+    let starved: Vec<usize> = stats
+        .per_ue_decisions
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d == 0)
+        .map(|(ue, _)| ue)
+        .collect();
+    assert!(
+        starved.is_empty(),
+        "{} UEs never saw a decision (first few: {:?})",
+        starved.len(),
+        starved.iter().take(8).collect::<Vec<_>>()
+    );
+    assert!(stats.latency.count() > 0, "latency samples were recorded");
+
+    // no wedged shards / leaked slots: a fresh session on a used ue id of
+    // each shard still handshakes and receives a decision
+    for &ue in &[0usize, N_UES - 1] {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut client = loop {
+            match TcpClientTransport::connect(addr, ue) {
+                Ok(c) => break c,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "ue {ue} cannot reconnect: {e:#}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        client.send(report(ue)).unwrap();
+        let mut got_decision = false;
+        while Instant::now() < deadline {
+            match client.recv_timeout(Duration::from_millis(200)).unwrap() {
+                Some(Downlink::Decision(d)) => {
+                    assert_eq!(d.actions.len(), 1, "fleet serving sends slim decisions");
+                    got_decision = true;
+                    break;
+                }
+                _ => continue,
+            }
+        }
+        assert!(got_decision, "post-churn session for ue {ue} is starved");
+    }
+
+    // tear down: stopping the reactor closes the shard uplinks
+    reactor.stop();
+    let mut swaps = Vec::new();
+    for h in handles {
+        let s = h.join();
+        assert!(s.frames > 0, "a shard never issued a decision frame");
+        assert_eq!(
+            s.downlink_drops, 0,
+            "decision frames were dropped under backpressure"
+        );
+        swaps.push(s.policy_swaps);
+    }
+    assert_eq!(
+        swaps,
+        vec![1; N_SHARDS],
+        "the fan-out publish must reach every shard exactly once"
+    );
+}
+
+/// Fault injection at the reactor: a corrupt-header peer and a mid-frame
+/// disconnect are contained to their own connections — both get their
+/// registered UEs deregistered (synthesized Goodbyes), while a
+/// well-behaved client keeps being served.
+#[test]
+fn reactor_survives_corrupt_and_midframe_peers() {
+    let (reactor, mut transports) =
+        TcpReactor::bind("127.0.0.1:0", ReactorConfig::new(4, 1)).unwrap();
+    let addr = reactor.local_addr();
+    let shard = transports.get_mut(0).unwrap();
+
+    let mut good = TcpClientTransport::connect(addr, 1).unwrap();
+    good.send(report(1)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    assert_eq!(poll_uplink(shard, deadline), Some(report(1)));
+
+    // -- corrupt-header peer: registers, then poisons its stream --
+    let mut corrupt = TcpStream::connect(addr).unwrap();
+    corrupt.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write_frame(&mut corrupt, &Frame::Hello { ue_id: 2 }).unwrap();
+    match read_frame(&mut corrupt) {
+        Ok(Frame::Welcome { ue_id }) => assert_eq!(ue_id, 2),
+        other => panic!("expected a welcome, got {other:?}"),
+    }
+    corrupt.write_all(&[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 0, 0, 0, 0]).unwrap();
+
+    // -- mid-frame disconnect: half a report, then gone --
+    let mut half = TcpStream::connect(addr).unwrap();
+    half.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write_frame(&mut half, &Frame::Hello { ue_id: 3 }).unwrap();
+    match read_frame(&mut half) {
+        Ok(Frame::Welcome { ue_id }) => assert_eq!(ue_id, 3),
+        other => panic!("expected a welcome, got {other:?}"),
+    }
+    let bytes = encode_frame(&Frame::Up(report(3)));
+    half.write_all(&bytes[..bytes.len() / 2]).unwrap();
+    drop(half);
+
+    // both faulty sessions resolve into synthesized Goodbyes
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut goodbyes = Vec::new();
+    while goodbyes.len() < 2 {
+        match poll_uplink(shard, deadline) {
+            Some(Uplink::Goodbye { ue_id }) => goodbyes.push(ue_id),
+            Some(other) => panic!("unexpected uplink {other:?}"),
+            None => panic!("goodbyes never synthesized (got {goodbyes:?})"),
+        }
+    }
+    goodbyes.sort_unstable();
+    assert_eq!(goodbyes, vec![2, 3]);
+
+    // the well-behaved client is unaffected, both directions
+    good.send(report(1)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    assert_eq!(poll_uplink(shard, deadline), Some(report(1)));
+    shard.send_to(
+        1,
+        Downlink::Decision(FrameDecision {
+            frame: 0,
+            actions: vec![HybridAction::new(0, 0, 0.0, 1.0)],
+        }),
+    );
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match good.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(Downlink::Decision(_)) => break,
+            Some(other) => panic!("unexpected downlink {other:?}"),
+            None => assert!(Instant::now() < deadline, "good client starved"),
+        }
+    }
+    reactor.stop();
+}
+
+/// A peer that registers and never drains its socket: once its write
+/// buffer budget is blown, frames are dropped *and counted* against the
+/// owning shard, and the connection is evicted — while another client
+/// keeps being served.
+#[test]
+fn slow_consumer_is_counted_then_evicted() {
+    let mut cfg = ReactorConfig::new(2, 1);
+    cfg.write_buf_cap = 4096; // any big result frame overflows it
+    cfg.evict_after_drops = 3;
+    let (reactor, mut transports) = TcpReactor::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = reactor.local_addr();
+    let shard = transports.get_mut(0).unwrap();
+
+    // register ue 0 and then stop reading forever
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write_frame(&mut slow, &Frame::Hello { ue_id: 0 }).unwrap();
+    match read_frame(&mut slow) {
+        Ok(Frame::Welcome { ue_id }) => assert_eq!(ue_id, 0),
+        other => panic!("expected a welcome, got {other:?}"),
+    }
+
+    let big = Downlink::Result(InferenceResult {
+        ue_id: 0,
+        task_id: 1,
+        logits: vec![0.5; 8192], // ~32 KiB encoded > write_buf_cap
+        argmax: 0,
+        edge_latency_s: 0.01,
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut dropped = 0usize;
+    while dropped < 3 {
+        shard.send_to(0, big.clone());
+        std::thread::sleep(Duration::from_millis(2));
+        dropped += shard.take_drops();
+        assert!(Instant::now() < deadline, "drops never surfaced: {dropped}");
+    }
+
+    // the eviction deregisters ue 0 (synthesized Goodbye proves it)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match poll_uplink(shard, deadline) {
+            Some(Uplink::Goodbye { ue_id }) => {
+                assert_eq!(ue_id, 0);
+                break;
+            }
+            Some(other) => panic!("unexpected uplink {other:?}"),
+            None => panic!("slow consumer never evicted"),
+        }
+    }
+
+    // the reactor still serves a fresh, well-behaved client
+    let mut good = TcpClientTransport::connect(addr, 1).unwrap();
+    good.send(report(1)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    assert_eq!(poll_uplink(shard, deadline), Some(report(1)));
+
+    let stats = reactor.stop();
+    assert!(stats.evicted >= 1, "eviction must be visible in reactor stats");
+}
+
+/// Satellite regression for the PR 7 `try_send` drop policy: decision
+/// frames dropped on a flooded UE's bounded downlink must increment
+/// `ServerStats::downlink_drops` — they used to vanish with a log line.
+#[test]
+fn flooded_ue_downlink_drops_are_counted() {
+    let (uplink_tx, uplink_rx) = sync_channel::<Uplink>(64);
+    // depth-1 downlink that nobody ever drains: the second decision
+    // broadcast (and every one after) must be dropped and counted
+    let (down_tx, down_rx) = sync_channel::<Downlink>(1);
+    let transport = ChannelServerTransport::from_parts(uplink_rx, vec![down_tx]);
+
+    let dm = DecisionMaker::new(Box::new(StaticDecision {
+        actions: vec![HybridAction::new(0, 0, 0.0, 1.0)],
+    }));
+    let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
+    let handle = EdgeServer::spawn_on(cfg, pool(1), dm, None, transport).unwrap();
+
+    // keep reporting so decisions keep broadcasting into the full queue
+    for _ in 0..40 {
+        uplink_tx.send(report(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    uplink_tx.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+    let stats = handle.join();
+    assert!(stats.frames >= 2, "server issued decisions: {}", stats.frames);
+    assert!(
+        stats.downlink_drops > 0,
+        "dropped decision frames must be counted, not vanish \
+         (frames = {}, drops = {})",
+        stats.frames,
+        stats.downlink_drops
+    );
+    drop(down_rx); // held open so drops were Full, never Disconnected
+}

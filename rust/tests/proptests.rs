@@ -1,6 +1,7 @@
 //! Property tests over the coordinator invariants: routing/state assembly,
-//! the wire codec (round-trip + corruption), batching policy, buffer/GAE
-//! math, action-space mapping — pure Rust, no artifacts needed.
+//! shard ownership/routing, the wire codec (round-trip + corruption),
+//! batching policy, buffer/GAE math, action-space mapping — pure Rust, no
+//! artifacts needed.
 
 use macci::coordinator::protocol::{
     Downlink, FrameDecision, InferenceResult, OffloadRequest, UeStateReport, Uplink,
@@ -78,7 +79,7 @@ fn state_pool_matches_env_state_encoding() {
 /// A random well-formed frame with finite floats (NaN never crosses the
 /// wire in practice, and `PartialEq` could not compare it).
 fn arbitrary_frame(g: &mut macci::util::check::Gen) -> Frame {
-    match g.usize_in(0, 10) {
+    match g.usize_in(0, 11) {
         0 => Frame::Hello {
             ue_id: g.usize_in(0, 1_000),
         },
@@ -140,6 +141,14 @@ fn arbitrary_frame(g: &mut macci::util::check::Gen) -> Frame {
             // multi-byte utf-8 must survive the trip
             error: "wire ☃ failure".chars().take(g.usize_in(0, 14)).collect(),
         }),
+        // the reactor's addressed envelope (multiplexed connections)
+        9 => Frame::DownTo {
+            ue_id: g.usize_in(0, 10_000),
+            down: Downlink::Decision(FrameDecision {
+                frame: g.usize_in(0, 10_000),
+                actions: vec![HybridAction::new(g.usize_in(0, 5), 0, 0.0, 1.0)],
+            }),
+        },
         _ => Frame::Down(Downlink::Shutdown),
     }
 }
@@ -660,6 +669,210 @@ fn kernel_int8_conv1x1_respects_analytic_error_bound() {
                             bound[i]
                         ));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ shard routing
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use macci::coordinator::shard::{ShardMap, ShardView};
+use macci::transport::{ServerTransport, TransportError};
+
+#[test]
+fn shard_map_assignment_is_total_and_collision_free() {
+    // over arbitrary fleet sizes and shard counts (well beyond the Gen's
+    // size-capped ranges): slices tile [0, n) exactly and in order, every
+    // slice boundary routes back to its shard, lengths are balanced to
+    // ±1, arbitrary probes agree with the owning slice, and out-of-range
+    // ids are unowned — the assignment is total and collision-free
+    forall(
+        41,
+        120,
+        |g| {
+            let n_ues = (g.rng.next_u64() % 200_000) as usize;
+            let n_shards = 1 + (g.rng.next_u64() % 64) as usize;
+            let probes: Vec<usize> = (0..64)
+                .map(|_| (g.rng.next_u64() % 250_000) as usize)
+                .collect();
+            (n_ues, n_shards, probes)
+        },
+        |(n_ues, n_shards, probes)| {
+            let (n, k) = (*n_ues, *n_shards);
+            let map = ShardMap::new(n, k);
+            if map.n_shards() != k || map.n_ues() != n {
+                return Err("map dimensions mangled".into());
+            }
+            let mut next = 0usize;
+            let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+            for shard in 0..k {
+                let Some((lo, len)) = map.slice_of(shard) else {
+                    return Err(format!("shard {shard} has no slice"));
+                };
+                if lo != next {
+                    return Err(format!("shard {shard} starts at {lo}, expected {next}"));
+                }
+                // both boundary ids of a non-empty slice route back to it
+                // (the closed form's off-by-one hot spots)
+                if len > 0 {
+                    for ue in [lo, lo + len - 1] {
+                        if map.shard_of(ue) != Some(shard) {
+                            return Err(format!("ue {ue} not owned by its slice {shard}"));
+                        }
+                    }
+                }
+                min_len = min_len.min(len);
+                max_len = max_len.max(len);
+                next = lo + len;
+            }
+            if next != n {
+                return Err(format!("slices cover {next} of {n} UEs"));
+            }
+            if max_len - min_len > 1 {
+                return Err(format!("unbalanced: lens in [{min_len}, {max_len}]"));
+            }
+            if map.slice_of(k).is_some() {
+                return Err("slice for an out-of-range shard".into());
+            }
+            for &ue in probes {
+                match map.shard_of(ue) {
+                    Some(s) if ue < n => {
+                        let (lo, len) = map.slice_of(s).ok_or("owner without a slice")?;
+                        if ue < lo || ue >= lo + len {
+                            return Err(format!(
+                                "ue {ue} assigned to shard {s} but outside [{lo}, {})",
+                                lo + len
+                            ));
+                        }
+                    }
+                    None if ue >= n => {}
+                    other => return Err(format!("ue {ue} (fleet {n}): {other:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A scripted fleet-wide transport for exercising [`ShardView`] in
+/// isolation: uplinks pop from a queue, downlinks are recorded.
+struct ScriptedTransport {
+    uplinks: VecDeque<Uplink>,
+    sent: Arc<Mutex<Vec<(usize, Downlink)>>>,
+}
+
+impl ServerTransport for ScriptedTransport {
+    fn try_recv(&mut self) -> Result<Option<Uplink>, TransportError> {
+        Ok(self.uplinks.pop_front())
+    }
+
+    fn send_to(&mut self, ue_id: usize, frame: Downlink) {
+        self.sent.lock().unwrap().push((ue_id, frame));
+    }
+}
+
+#[test]
+fn shard_view_isolates_cross_shard_traffic() {
+    // a shard's view of the fleet transport delivers exactly the uplinks
+    // inside its slice (ids rewritten to local space, order preserved,
+    // the rest counted as misrouted) and never lets a downlink escape the
+    // slice — cross-shard isolation by construction
+    forall(
+        42,
+        80,
+        |g| {
+            let n_ues = 1 + (g.rng.next_u64() % 5_000) as usize;
+            let n_shards = 1 + (g.rng.next_u64() % 16) as usize;
+            let shard = (g.rng.next_u64() % n_shards as u64) as usize;
+            // global ids across the whole fleet plus some past the end
+            let ids: Vec<usize> = (0..40)
+                .map(|_| (g.rng.next_u64() % (n_ues as u64 + 64)) as usize)
+                .collect();
+            (n_ues, n_shards, shard, ids)
+        },
+        |(n_ues, n_shards, shard, ids)| {
+            let map = ShardMap::new(*n_ues, *n_shards);
+            let (lo, len) = map.slice_of(*shard).ok_or("no slice for the shard")?;
+            let uplinks: VecDeque<Uplink> = ids
+                .iter()
+                .enumerate()
+                .map(|(i, &gid)| {
+                    Uplink::Report(UeStateReport {
+                        ue_id: gid,
+                        tasks_left: i as u64, // index tag: joins outputs to inputs
+                        compute_left_s: 0.0,
+                        offload_left_bits: 0.0,
+                        distance_m: 1.0,
+                    })
+                })
+                .collect();
+            let sent = Arc::new(Mutex::new(Vec::new()));
+            let inner = ScriptedTransport {
+                uplinks,
+                sent: Arc::clone(&sent),
+            };
+            let mut view = ShardView::new(inner, lo, len);
+
+            let mut got = Vec::new();
+            while let Ok(Some(u)) = view.try_recv() {
+                match u {
+                    Uplink::Report(r) => got.push((r.ue_id, r.tasks_left as usize)),
+                    other => return Err(format!("unexpected rewrite: {other:?}")),
+                }
+            }
+            let expected: Vec<(usize, usize)> = ids
+                .iter()
+                .enumerate()
+                .filter(|&(_, &gid)| gid >= lo && gid < lo + len)
+                .map(|(i, &gid)| (gid - lo, i))
+                .collect();
+            if got != expected {
+                return Err(format!("uplink rewrite {got:?} != {expected:?}"));
+            }
+            if view.misrouted() != ids.len() - expected.len() {
+                return Err(format!(
+                    "misrouted {} != {} out-of-slice frames",
+                    view.misrouted(),
+                    ids.len() - expected.len()
+                ));
+            }
+
+            // downlinks: local ids map back into the slice, results get
+            // their global id restored, out-of-range locals are dropped
+            let want = len.min(8);
+            for local in 0..want {
+                view.send_to(
+                    local,
+                    Downlink::Result(InferenceResult {
+                        ue_id: local,
+                        task_id: local as u64,
+                        logits: Vec::new(),
+                        argmax: 0,
+                        edge_latency_s: 0.0,
+                    }),
+                );
+            }
+            view.send_to(len, Downlink::Shutdown);
+            view.send_to(len + 17, Downlink::Shutdown);
+            let sent = sent.lock().map_err(|_| "recorder poisoned")?;
+            if sent.len() != want {
+                return Err(format!(
+                    "{} downlinks reached the wire, expected {want}",
+                    sent.len()
+                ));
+            }
+            for (i, (gid, frame)) in sent.iter().enumerate() {
+                if *gid != lo + i {
+                    return Err(format!("downlink {i} addressed to {gid}, not {}", lo + i));
+                }
+                match frame {
+                    Downlink::Result(r) if r.ue_id == lo + i && r.task_id == i as u64 => {}
+                    other => return Err(format!("downlink {i} mangled: {other:?}")),
                 }
             }
             Ok(())

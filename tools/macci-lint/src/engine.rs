@@ -16,8 +16,14 @@ pub struct RuleInfo {
     pub invariant: &'static str,
 }
 
-const R1_ZONES: &[&str] =
-    &["coordinator::wire", "coordinator::server", "coordinator::executor", "transport"];
+const R1_ZONES: &[&str] = &[
+    "coordinator::wire",
+    "coordinator::server",
+    "coordinator::executor",
+    "coordinator::shard",
+    "loadgen",
+    "transport",
+];
 const R5_ZONES: &[&str] =
     &["runtime::native::simd", "runtime::native::gemm", "runtime::native::quant8"];
 
@@ -38,7 +44,7 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "R3",
         name: "bounded-channels",
-        zones: &["coordinator", "transport"],
+        zones: &["coordinator", "loadgen", "transport"],
         invariant: "every queue has a depth bound (or a reviewed pragma)",
     },
     RuleInfo {
