@@ -54,7 +54,7 @@ MACCI_BENCH_LOAD_UES=${MACCI_BENCH_LOAD_UES:-2000} cargo bench --bench bench_loa
 echo "== wire-codec baseline (BENCH_wire.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_wire
 
-echo "== training-rollout baseline (BENCH_train.json) =="
+echo "== training baseline: rollout + sharded update engine (BENCH_train.json) =="
 MACCI_BENCH_MS=${MACCI_BENCH_MS:-200} cargo bench --bench bench_train
 
 echo "== checkpoint + hot-swap baseline (BENCH_checkpoint.json) =="

@@ -1,14 +1,20 @@
-//! Training-rollout throughput: the vectorized rollout engine vs the
-//! serial collection loop, at E = 1 / 4 / 8 env lanes. Emits
+//! Training throughput, both halves of the MAHPPO loop. Emits
 //! BENCH_train.json.
 //!
-//! Runs fully offline on the native backend with the built-in RL demo
-//! manifest and the synthetic device profile, so the numbers isolate the
-//! engine itself: batched actor/critic forwards, per-lane sampling, env
-//! stepping on the worker-thread pool. E = 1 is bit-for-bit the serial
-//! MAHPPO collection loop and serves as the baseline. PPO update cost is
-//! identical in both modes and excluded (rollout was the serial bottleneck
-//! this engine removes).
+//! Rollout: the vectorized engine vs the serial collection loop at
+//! E = 1 / 4 / 8 env lanes. Runs fully offline on the native backend with
+//! the built-in RL demo manifest and the synthetic device profile, so the
+//! numbers isolate the engine itself: batched actor/critic forwards,
+//! per-lane sampling, env stepping on the worker-thread pool. E = 1 is
+//! bit-for-bit the serial MAHPPO collection loop and serves as the
+//! baseline.
+//!
+//! Update: the sharded PPO update engine at W = 1 / 2 / 4 workers —
+//! updates/s across one full round (N actor steps + one critic step at
+//! B = 256) plus the per-round wall time, which is exactly the stall an
+//! inline learner pays per update round. W = 1 runs the shards on the
+//! caller thread and is the serial baseline; every W produces the same
+//! parameter bits.
 //!
 //! Bounded by MACCI_BENCH_MS per configuration like the other benches.
 
@@ -63,6 +69,52 @@ fn run_one(store: &ArtifactStore, n_envs: usize, target: Duration) -> f64 {
     frames as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// One PPO update round = one Adam step per actor plus one critic step,
+/// all at B = 256, repeated for ~`target` wall time on `workers` update
+/// workers. Returns (updates/s, mean round wall time in ms) — the latter
+/// is the stall an inline learner pays per round.
+fn run_update(store: &ArtifactStore, workers: usize, target: Duration) -> (f64, f64) {
+    let b = 256usize;
+    let d = 4 * N_UES;
+    let mut rng = Rng::new(23);
+    let states: Vec<f32> = (0..b * d).map(|_| rng.f32()).collect();
+    let a_b: Vec<i32> = (0..b).map(|i| (i % 6) as i32).collect();
+    let a_c: Vec<i32> = (0..b).map(|i| (i % 2) as i32).collect();
+    let a_p: Vec<f32> = (0..b).map(|_| 0.2 + 0.6 * rng.f32()).collect();
+    let old_logp: Vec<f32> = (0..b).map(|_| -3.0 * rng.f32()).collect();
+    let adv: Vec<f32> = (0..b).map(|_| 2.0 * rng.f32() - 1.0).collect();
+    let returns: Vec<f32> = (0..b).map(|_| -2.0 * rng.f32()).collect();
+
+    let mut actors: Vec<ActorNet> = (0..N_UES)
+        .map(|i| {
+            let mut a = ActorNet::new(store, N_UES, 100 + i as u64).unwrap();
+            a.set_update_threads(workers);
+            a
+        })
+        .collect();
+    let mut critic = CriticNet::new(store, N_UES, 99).unwrap();
+    critic.set_update_threads(workers);
+
+    let round = |actors: &mut Vec<ActorNet>, critic: &mut CriticNet| {
+        critic.update(1e-3, &states, &returns).unwrap();
+        for a in actors.iter_mut() {
+            a.update(1e-3, &states, &a_b, &a_c, &a_p, &old_logp, &adv).unwrap();
+        }
+    };
+    // warmup: workspace arenas reach steady-state capacity
+    round(&mut actors, &mut critic);
+
+    let (mut updates, mut rounds) = (0usize, 0usize);
+    let t0 = Instant::now();
+    while t0.elapsed() < target {
+        round(&mut actors, &mut critic);
+        updates += N_UES + 1;
+        rounds += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (updates as f64 / dt, dt * 1e3 / rounds as f64)
+}
+
 fn main() {
     let target = Duration::from_millis(macci::util::config::bench_ms(700));
     let store = ArtifactStore::native_demo();
@@ -93,6 +145,32 @@ fn main() {
         );
         if e > 1 {
             json = json.set(&format!("train/speedup_e{e}"), fps / serial);
+        }
+    }
+
+    println!("update engine: B = 256, {} nets/round", N_UES + 1);
+    let mut serial_ups = 0.0f64;
+    for &w in &[1usize, 2, 4] {
+        let (ups, round_ms) = run_update(&store, w, target);
+        if w == 1 {
+            serial_ups = ups;
+        }
+        println!(
+            "  W = {w}: {ups:>7.1} updates/s, {round_ms:>7.2} ms/round (learner stall){}",
+            if w == 1 {
+                String::new()
+            } else {
+                format!("  | speedup vs serial {:.2}x", ups / serial_ups)
+            }
+        );
+        json = json.set(
+            &format!("train/update_w{w}"),
+            Json::obj()
+                .set("updates_per_s", ups)
+                .set("stall_ms", round_ms),
+        );
+        if w > 1 {
+            json = json.set(&format!("train/update_speedup_w{w}"), ups / serial_ups);
         }
     }
     json.write_file("BENCH_train.json").unwrap();

@@ -32,7 +32,7 @@ use crate::env::mdp::MultiAgentEnv;
 use crate::env::scenario::ScenarioConfig;
 use crate::env::{Action, HybridAction};
 use crate::profiles::DeviceProfile;
-use crate::rl::buffer::{TrajectoryBuffer, Transition};
+use crate::rl::buffer::{Minibatch, TrajectoryBuffer, Transition};
 use crate::rl::checkpoint::{PolicySnapshot, TrainerCheckpoint};
 use crate::rl::sampling;
 use crate::runtime::artifacts::ArtifactStore;
@@ -70,6 +70,11 @@ pub struct LearnerConfig {
     /// Publish a policy snapshot every this many update rounds.
     pub publish_every: usize,
     pub seed: u64,
+    /// PPO update workers (0 = auto) — forwarded to the nets'
+    /// `set_update_threads`. The sharded update engine is worker-count
+    /// invariant, so this only changes how long the learner stalls its
+    /// telemetry feed per round, never what it learns.
+    pub update_threads: usize,
 }
 
 impl LearnerConfig {
@@ -92,6 +97,7 @@ impl LearnerConfig {
             normalize_adv: true,
             publish_every: 1,
             seed: 0,
+            update_threads: 0,
         })
     }
 
@@ -119,6 +125,12 @@ pub struct LearnerStats {
     pub publishes: usize,
     /// Mean critic loss of the final update round.
     pub last_value_loss: f64,
+    /// Total wall time spent inside PPO update rounds — the stall during
+    /// which the telemetry feed backs up (frames shed by a full feed are
+    /// counted in `ServerStats::telemetry_drops`).
+    pub stall_ms_total: f64,
+    /// Longest single update-round stall.
+    pub stall_ms_max: f64,
 }
 
 /// Join handle over the learner thread.
@@ -143,6 +155,9 @@ struct Learner {
     critic: CriticNet,
     cfg: LearnerConfig,
     buf: TrajectoryBuffer,
+    /// Reused minibatch gather buffers (`sample_minibatch_into`) — the
+    /// update rounds run allocation-free at steady state.
+    mb: Minibatch,
     shadow: MultiAgentEnv,
     rng: Rng,
     publisher: PolicyHandle,
@@ -175,6 +190,10 @@ pub fn spawn(
         .map(|i| ActorNet::new(store, n, cfg.seed.wrapping_add(5000 + i as u64)))
         .collect::<Result<Vec<_>>>()?;
     let mut critic = CriticNet::new(store, n, cfg.seed.wrapping_add(6000))?;
+    for a in actors.iter_mut() {
+        a.set_update_threads(cfg.update_threads);
+    }
+    critic.set_update_threads(cfg.update_threads);
     if let Some(cp) = init {
         anyhow::ensure!(
             cp.actors.len() == n,
@@ -196,6 +215,7 @@ pub fn spawn(
         rng: Rng::new(cfg.seed.wrapping_add(7000)),
         cfg,
         buf,
+        mb: Minibatch::default(),
         shadow,
         publisher,
         version: 0,
@@ -291,7 +311,14 @@ impl Learner {
 
     /// One buffer's worth of PPO: finish returns/GAE, K·(‖M‖/B) minibatch
     /// steps, clear — then publish the refreshed policy on schedule.
+    ///
+    /// This runs inline on the telemetry-consuming thread, so its wall
+    /// time is exactly the stall during which the bounded telemetry feed
+    /// backs up (and the server sheds frames, counted in
+    /// `ServerStats::telemetry_drops`). The stall is tracked in
+    /// [`LearnerStats`]; `update_threads` shortens it on multicore hosts.
     fn update_round(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
         let bootstrap = self.critic.value(&self.shadow.state())? as f64;
         self.buf.finish(
             self.cfg.gamma,
@@ -302,23 +329,31 @@ impl Learner {
         let rounds = self.cfg.reuse * (self.cfg.buffer_size / self.cfg.minibatch).max(1);
         let mut vloss = 0.0f64;
         for _ in 0..rounds {
-            let mb = self.buf.sample_minibatch(self.cfg.minibatch, &mut self.rng);
-            vloss += self.critic.update(self.cfg.lr, &mb.states, &mb.returns)? as f64;
+            self.buf
+                .sample_minibatch_into(self.cfg.minibatch, &mut self.rng, &mut self.mb);
+            vloss += self
+                .critic
+                .update(self.cfg.lr, &self.mb.states, &self.mb.returns)? as f64;
             for (u, actor) in self.actors.iter_mut().enumerate() {
                 actor.update(
                     self.cfg.lr,
-                    &mb.states,
-                    &mb.a_b[u],
-                    &mb.a_c[u],
-                    &mb.a_p[u],
-                    &mb.old_logp[u],
-                    &mb.adv,
+                    &self.mb.states,
+                    &self.mb.a_b[u],
+                    &self.mb.a_c[u],
+                    &self.mb.a_p[u],
+                    &self.mb.old_logp[u],
+                    &self.mb.adv,
                 )?;
             }
         }
         self.buf.clear();
         self.stats.rounds += 1;
         self.stats.last_value_loss = vloss / rounds as f64;
+        let stall = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.stall_ms_total += stall;
+        if stall > self.stats.stall_ms_max {
+            self.stats.stall_ms_max = stall;
+        }
 
         if self.stats.rounds % self.cfg.publish_every == 0 {
             self.version += 1;
@@ -389,6 +424,8 @@ mod tests {
         assert_eq!(stats.rounds, 2);
         assert_eq!(stats.publishes, 2);
         assert!(stats.last_value_loss.is_finite());
+        assert!(stats.stall_ms_total > 0.0, "update stall is measured");
+        assert!(stats.stall_ms_max <= stats.stall_ms_total);
     }
 
     #[test]

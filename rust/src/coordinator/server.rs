@@ -21,7 +21,7 @@
 //! the loop structure is identical to an async reactor with a timer.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -56,6 +56,11 @@ pub struct ServerStats {
     /// Surfaced here and in `BENCH_load.json` so decision frames lost to
     /// slow consumers are counted, never silent.
     pub downlink_drops: usize,
+    /// Telemetry frames dropped because the bounded learner feed was full
+    /// (the learner was mid-update and not draining). Serving deliberately
+    /// sheds telemetry rather than stall — but the shed must be counted,
+    /// not a silent `let _ =`.
+    pub telemetry_drops: usize,
     /// Executor counters (queue depth / queue wait / batch occupancy);
     /// default-zero when serving ran inline on the server thread.
     pub exec: ExecutorStats,
@@ -394,14 +399,17 @@ pub(crate) fn server_loop(
                     first_decision_done = true;
                     broadcast_decision(transport, &alive, &d, cfg.per_ue_decisions);
                     // export serving telemetry for the online learner —
-                    // non-blocking: a full queue drops the frame, a gone
-                    // consumer is ignored
+                    // non-blocking: a full queue (learner mid-update)
+                    // drops the frame and is counted; a gone consumer is
+                    // ignored (shutdown, not backpressure)
                     if let Some(tx) = &cfg.telemetry {
-                        let _ = tx.try_send(TelemetryFrame {
+                        if let Err(TrySendError::Full(_)) = tx.try_send(TelemetryFrame {
                             frame: d.frame,
                             state,
                             actions: d.actions,
-                        });
+                        }) {
+                            stats.telemetry_drops += 1;
+                        }
                     }
                 }
                 Err(e) => log::error!("decision failed: {e:#}"),
@@ -671,6 +679,53 @@ mod tests {
         assert_eq!(stats.offload_errors, 1);
         assert_eq!(stats.feature_offloads, 0, "rejected offloads are never counted");
         assert_eq!(stats.exec.submitted, 0, "the executor never sees the request");
+    }
+
+    /// A learner mid-update does not drain its telemetry feed; the
+    /// bounded channel fills and serving sheds frames. The shed must be
+    /// counted in `ServerStats::telemetry_drops`, never silent.
+    #[test]
+    fn undrained_telemetry_feed_counts_drops() {
+        let n = 1;
+        let pool = StatePool::new(
+            n,
+            StateNorm {
+                lambda_tasks: 10.0,
+                frame_s: 0.5,
+                max_bits: 1e6,
+                d_max: 100.0,
+            },
+        );
+        let dm = DecisionMaker::new(Box::new(StaticDecision {
+            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
+        }));
+        let mut cfg = ServerConfig::new(n, Duration::from_millis(1), 5);
+        // capacity-1 feed that nobody drains: a learner stuck in a long
+        // PPO round, as far as the server can tell
+        let (ttx, trx) = sync_channel(1);
+        cfg.telemetry = Some(ttx);
+        let (server, _downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
+        server
+            .uplink
+            .send(Uplink::Report(UeStateReport {
+                ue_id: 0,
+                tasks_left: 5,
+                compute_left_s: 0.0,
+                offload_left_bits: 0.0,
+                distance_m: 40.0,
+            }))
+            .unwrap();
+        let stats = server.join(); // exits at max_frames
+        assert_eq!(stats.frames, 5);
+        assert_eq!(
+            stats.telemetry_drops,
+            stats.frames - 1,
+            "every frame past the queue capacity is a counted drop"
+        );
+        // the one frame that fit is still delivered intact
+        let first = trx.try_recv().expect("capacity-1 frame delivered");
+        assert_eq!(first.actions.len(), n);
+        assert!(trx.try_recv().is_err(), "shed frames never arrive late");
     }
 
     #[test]

@@ -41,6 +41,7 @@ USAGE:
   macci train [--n-ues 5] [--frames 6000] [--beta 0.47] [--lr 1e-4]
               [--model resnet18] [--seed 0] [--out results/train.json]
               [--save policy.ckpt] [--resume policy.ckpt]
+              [--update-threads W]
   macci eval  [--n-ues 5] [--policy local|random|edge_raw|split2] [--episodes 3]
   macci serve [--model resnet18] [--n-ues 3] [--tasks 16] [--point 2]
               [--precision f32|int8]
@@ -149,7 +150,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // it are discarded — say so instead of silently ignoring them
         for flag in [
             "model", "n-ues", "beta", "lambda", "lr", "buffer", "batch", "reuse", "seed",
-            "n-envs",
+            "n-envs", "update-threads",
         ] {
             if args.has(flag) {
                 eprintln!(
@@ -178,6 +179,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             reuse: args.usize_or("reuse", 10)?,
             seed: args.u64_or("seed", 0)?,
             n_envs: args.usize_or("n-envs", 1)?,
+            update_threads: args.usize_or("update-threads", 0)?,
             ..Default::default()
         };
         println!(

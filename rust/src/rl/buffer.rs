@@ -56,6 +56,10 @@ pub struct TrajectoryBuffer {
     returns: Vec<f32>,
     advantages: Vec<f32>,
     finished: bool,
+    /// Reused index buffer for `sample_minibatch_into` — the PPO epoch
+    /// loop draws hundreds of minibatches per collection, so the draw
+    /// itself should not allocate.
+    idx_scratch: Vec<usize>,
 }
 
 impl TrajectoryBuffer {
@@ -76,6 +80,7 @@ impl TrajectoryBuffer {
             returns: Vec::new(),
             advantages: Vec::new(),
             finished: false,
+            idx_scratch: Vec::new(),
         }
     }
 
@@ -156,20 +161,40 @@ impl TrajectoryBuffer {
         assert!(self.finished, "call finish() before sampling");
         assert!(batch <= self.len(), "batch {batch} > buffer {}", self.len());
         let idx = rng.sample_indices(self.len(), batch);
-        self.gather(&idx)
+        let mut mb = Minibatch::default();
+        self.gather_into(&idx, &mut mb);
+        mb
     }
 
-    fn gather(&self, idx: &[usize]) -> Minibatch {
+    /// [`TrajectoryBuffer::sample_minibatch`] into caller-owned buffers:
+    /// the draw reads the exact same RNG stream positions, but the index
+    /// scratch and every minibatch column reuse their capacity, so the
+    /// PPO epoch loop samples allocation-free after the first round.
+    pub fn sample_minibatch_into(&mut self, batch: usize, rng: &mut Rng, mb: &mut Minibatch) {
+        assert!(self.finished, "call finish() before sampling");
+        assert!(batch <= self.len(), "batch {batch} > buffer {}", self.len());
+        let len = self.len();
+        let mut idx = std::mem::take(&mut self.idx_scratch);
+        rng.sample_indices_into(len, batch, &mut idx);
+        self.gather_into(&idx, mb);
+        self.idx_scratch = idx;
+    }
+
+    fn gather_into(&self, idx: &[usize], mb: &mut Minibatch) {
         let n = self.n_ues;
-        let mut mb = Minibatch {
-            states: Vec::with_capacity(idx.len() * self.state_dim),
-            returns: Vec::with_capacity(idx.len()),
-            a_b: vec![Vec::with_capacity(idx.len()); n],
-            a_c: vec![Vec::with_capacity(idx.len()); n],
-            a_p: vec![Vec::with_capacity(idx.len()); n],
-            old_logp: vec![Vec::with_capacity(idx.len()); n],
-            adv: Vec::with_capacity(idx.len()),
-        };
+        mb.states.clear();
+        mb.returns.clear();
+        mb.adv.clear();
+        mb.a_b.resize_with(n, Vec::new);
+        mb.a_c.resize_with(n, Vec::new);
+        mb.a_p.resize_with(n, Vec::new);
+        mb.old_logp.resize_with(n, Vec::new);
+        for u in 0..n {
+            mb.a_b[u].clear();
+            mb.a_c[u].clear();
+            mb.a_p[u].clear();
+            mb.old_logp[u].clear();
+        }
         for &i in idx {
             let t = &self.flat[i];
             mb.states.extend_from_slice(&t.state);
@@ -182,7 +207,6 @@ impl TrajectoryBuffer {
                 mb.old_logp[u].push(t.log_prob[u]);
             }
         }
-        mb
     }
 
     /// The advantages in flattened (lane-major) order; requires `finish`.
@@ -356,6 +380,43 @@ mod tests {
         let mut buf = TrajectoryBuffer::with_lanes(4, 1, 2);
         buf.push_to(0, transition(1, 0.0, false));
         buf.finish_lanes(0.9, 0.9, &[0.0], false);
+    }
+
+    #[test]
+    fn reused_minibatch_matches_allocating_draws_epoch_after_epoch() {
+        // regression: the into- variant must read the same RNG stream and
+        // produce the same samples as the allocating draw on EVERY epoch —
+        // stale contents from the previous round must never leak through
+        // the reused columns
+        let mut buf = TrajectoryBuffer::new(8, 2);
+        for i in 0..8 {
+            let mut t = transition(2, i as f64, i == 7);
+            t.state = (0..8).map(|j| (i * 8 + j) as f32).collect();
+            t.a_b = vec![i as i32, i as i32 + 10];
+            t.log_prob = vec![-(i as f32), -2.0 * i as f32];
+            buf.push(t);
+        }
+        buf.finish(0.9, 0.9, 0.0, true);
+        let mut fresh_rng = Rng::new(33);
+        let mut reuse_rng = Rng::new(33);
+        let mut mb = Minibatch::default();
+        let mut warm_cap = 0usize;
+        for epoch in 0..4 {
+            let fresh = buf.sample_minibatch(5, &mut fresh_rng);
+            buf.sample_minibatch_into(5, &mut reuse_rng, &mut mb);
+            assert_eq!(fresh.states, mb.states, "epoch {epoch}");
+            assert_eq!(fresh.returns, mb.returns);
+            assert_eq!(fresh.a_b, mb.a_b);
+            assert_eq!(fresh.a_c, mb.a_c);
+            assert_eq!(fresh.a_p, mb.a_p);
+            assert_eq!(fresh.old_logp, mb.old_logp);
+            assert_eq!(fresh.adv, mb.adv);
+            if epoch == 0 {
+                warm_cap = mb.states.capacity();
+            } else {
+                assert_eq!(mb.states.capacity(), warm_cap, "reuse must not regrow");
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! ```text
 //! offset  size  field
 //!      0     2  magic        0x4D 0x4B ("MK")
-//!      2     1  version      currently 1
+//!      2     1  version      currently 2
 //!      3     1  type tag     0x01 = trainer checkpoint
 //!      4     4  body length  u32 LE, <= MAX_BODY
 //!      8     4  crc32        u32 LE, IEEE CRC-32 over bytes [0..8) + body
@@ -57,8 +57,10 @@ use crate::runtime::nets::NetState;
 
 /// First two bytes of every checkpoint: "MK".
 pub const MAGIC: [u8; 2] = [0x4D, 0x4B];
-/// Checkpoint-format version this build speaks.
-pub const VERSION: u8 = 1;
+/// Checkpoint-format version this build speaks. v2 added the config's
+/// `update_threads` word (after `rollout_threads`); v1 files are no longer
+/// readable — the format rejects unknown versions rather than guessing.
+pub const VERSION: u8 = 2;
 /// Fixed header size (magic + version + tag + length + crc).
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a checkpoint body — a corrupt length prefix must not be
@@ -249,6 +251,7 @@ fn put_config(e: &mut Enc, c: &TrainConfig) {
     e.u64(c.seed);
     e.u64(c.n_envs as u64);
     e.u64(c.rollout_threads as u64);
+    e.u64(c.update_threads as u64);
     match &c.scenario_dist {
         Some(d) => {
             e.u8(1);
@@ -535,6 +538,7 @@ fn get_config(d: &mut Dec) -> Result<TrainConfig, CheckpointError> {
         seed: d.u64()?,
         n_envs: d.usize()?,
         rollout_threads: d.usize()?,
+        update_threads: d.usize()?,
         scenario_dist: match d.u8()? {
             0 => None,
             1 => Some(get_dist(d)?),

@@ -65,6 +65,12 @@ pub struct TrainConfig {
     /// time (its kernels are bit-identical across batch splits); on other
     /// backends pin this for cross-machine reproducibility.
     pub rollout_threads: usize,
+    /// PPO update worker threads; 0 = auto (`MACCI_UPDATE_THREADS`, else
+    /// available cores). Like `rollout_threads` this is purely a wall-time
+    /// knob: the sharded update engine reduces per-shard gradients in a
+    /// fixed order, so trained parameters are bit-identical for any worker
+    /// count (`runtime::native::update`).
+    pub update_threads: usize,
     /// Domain randomization: when set, every lane draws its episode
     /// scenarios (λ, distances, p_max; UE count pinned to the training N)
     /// from this distribution instead of the fixed training scenario.
@@ -84,6 +90,7 @@ impl Default for TrainConfig {
             seed: 0,
             n_envs: 1,
             rollout_threads: 0,
+            update_threads: 0,
             scenario_dist: None,
         }
     }
@@ -264,10 +271,14 @@ impl MahppoTrainer {
     ) -> Result<MahppoTrainer> {
         cfg.validate()?;
         let n = scenario.n_ues;
-        let actors = (0..n)
+        let mut actors = (0..n)
             .map(|i| ActorNet::new(store, n, cfg.actor_seed(i)))
             .collect::<Result<Vec<_>>>()?;
-        let critic = CriticNet::new(store, n, cfg.critic_seed())?;
+        let mut critic = CriticNet::new(store, n, cfg.critic_seed())?;
+        for a in actors.iter_mut() {
+            a.set_update_threads(cfg.update_threads);
+        }
+        critic.set_update_threads(cfg.update_threads);
         let engine = RolloutEngine::new(profile, &scenario, &cfg)?;
         Ok(MahppoTrainer {
             actors,
@@ -325,9 +336,11 @@ impl MahppoTrainer {
             .collect::<Result<Vec<_>>>()?;
         for (a, st) in actors.iter_mut().zip(&cp.actors) {
             a.restore(st)?;
+            a.set_update_threads(cp.config.update_threads);
         }
         let mut critic = CriticNet::new(store, n, cp.config.critic_seed())?;
         critic.restore(&cp.critic)?;
+        critic.set_update_threads(cp.config.update_threads);
         let mut engine = RolloutEngine::new(&cp.profile, &cp.scenario, &cp.config)?;
         engine.restore(cp.engine)?;
         let rng = Rng::from_state(cp.sampler_rng)
@@ -366,6 +379,10 @@ impl MahppoTrainer {
     pub fn train(&mut self, total_frames: usize) -> Result<TrainReport> {
         let t0 = Instant::now();
         let mut buf = self.engine.make_buffer(self.cfg.buffer_size);
+        // one minibatch's gather buffers, reused across every PPO round
+        // (the draw itself reads the same RNG stream as the allocating
+        // `sample_minibatch`, so this is purely an allocation change)
+        let mut mb = Minibatch::default();
         let mut report = TrainReport::default();
         report.episode_rewards = Series::new("episode_reward");
         report.value_losses = Series::new("value_loss");
@@ -403,7 +420,7 @@ impl MahppoTrainer {
             let mut ent_acc = 0.0f64;
             let mut clip_acc = 0.0f64;
             for _ in 0..rounds {
-                let mb = buf.sample_minibatch(self.cfg.minibatch, &mut self.rng);
+                buf.sample_minibatch_into(self.cfg.minibatch, &mut self.rng, &mut mb);
                 vloss_acc += self.update_critic(&mb)? as f64;
                 let (ent, clip) = self.update_actors(&mb)?;
                 ent_acc += ent as f64;

@@ -67,9 +67,26 @@ impl PackedW {
 /// `y = act(x @ w + b)` over the packed weights — drop-in for
 /// [`super::kernels::dense`] with identical f32 output.
 pub fn dense_packed(isa: Isa, x: &[f32], rows: usize, pw: &PackedW, act: Act) -> Vec<f32> {
+    let mut out = Vec::new();
+    dense_packed_into(isa, x, rows, pw, act, &mut out);
+    out
+}
+
+/// [`dense_packed`] into a caller-owned buffer (cleared and resized, so a
+/// warm workspace makes the GEMM epilogue allocation-free). Bit-identical
+/// to [`dense_packed`], which wraps this.
+pub fn dense_packed_into(
+    isa: Isa,
+    x: &[f32],
+    rows: usize,
+    pw: &PackedW,
+    act: Act,
+    out: &mut Vec<f32>,
+) {
     let (in_dim, out_dim) = (pw.in_dim, pw.out_dim);
     debug_assert_eq!(x.len(), rows * in_dim);
-    let mut out = vec![0.0f32; rows * out_dim];
+    out.clear();
+    out.resize(rows * out_dim, 0.0);
     for r in 0..rows {
         out[r * out_dim..(r + 1) * out_dim].copy_from_slice(&pw.bias);
     }
@@ -86,11 +103,11 @@ pub fn dense_packed(isa: Isa, x: &[f32], rows: usize, pw: &PackedW, act: Act) ->
                 let panel = &pw.panels[jp * in_dim * NR..(jp + 1) * in_dim * NR];
                 let mut r = rc;
                 while r + MR <= rend {
-                    block4(isa, x, in_dim, panel, k0, k1, &mut out, out_dim, r, j0, width);
+                    block4(isa, x, in_dim, panel, k0, k1, &mut out[..], out_dim, r, j0, width);
                     r += MR;
                 }
                 while r < rend {
-                    block1(isa, x, in_dim, panel, k0, k1, &mut out, out_dim, r, j0, width);
+                    block1(isa, x, in_dim, panel, k0, k1, &mut out[..], out_dim, r, j0, width);
                     r += 1;
                 }
             }
@@ -98,8 +115,7 @@ pub fn dense_packed(isa: Isa, x: &[f32], rows: usize, pw: &PackedW, act: Act) ->
         }
         rc = rend;
     }
-    apply_act(&mut out, act);
-    out
+    apply_act(out, act);
 }
 
 // The x86 micro-kernels store full NR-wide vectors, so they are only

@@ -71,10 +71,46 @@ pub fn dense_with(
     out_dim: usize,
     act: Act,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    dense_into_with(isa, x, rows, in_dim, w, b, out_dim, act, &mut out);
+    out
+}
+
+/// [`dense`] into a caller-owned buffer (cleared and resized; capacity is
+/// reused) — the update engine's workspace path. Bit-identical to
+/// [`dense_with`], which is a thin wrapper over this.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_into(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+    out: &mut Vec<f32>,
+) {
+    dense_into_with(simd::active(), x, rows, in_dim, w, b, out_dim, act, out)
+}
+
+/// [`dense_into`] on an explicit ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_into_with(
+    isa: Isa,
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    w: &[f32],
+    b: &[f32],
+    out_dim: usize,
+    act: Act,
+    out: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), rows * in_dim);
     debug_assert_eq!(w.len(), in_dim * out_dim);
     debug_assert_eq!(b.len(), out_dim);
-    let mut out = vec![0.0f32; rows * out_dim];
+    out.clear();
+    out.resize(rows * out_dim, 0.0);
     for r in 0..rows {
         out[r * out_dim..(r + 1) * out_dim].copy_from_slice(b);
     }
@@ -100,8 +136,7 @@ pub fn dense_with(
             }
         }
     }
-    apply_act(&mut out, act);
-    out
+    apply_act(out, act);
 }
 
 /// `dX = dY @ Wᵀ` — dy: (rows, out_dim), w: (in_dim, out_dim) →
@@ -124,9 +159,44 @@ pub fn matmul_bt_with(
     w: &[f32],
     in_dim: usize,
 ) -> Vec<f32> {
+    let mut dx = Vec::new();
+    let mut wt = Vec::new();
+    matmul_bt_into_with(isa, dy, rows, out_dim, w, in_dim, &mut dx, &mut wt);
+    dx
+}
+
+/// [`matmul_bt`] into caller-owned output and transpose-scratch buffers
+/// (both cleared and resized; the scalar arm leaves `wt` untouched).
+/// Bit-identical to [`matmul_bt_with`], which wraps this.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_into(
+    dy: &[f32],
+    rows: usize,
+    out_dim: usize,
+    w: &[f32],
+    in_dim: usize,
+    dx: &mut Vec<f32>,
+    wt: &mut Vec<f32>,
+) {
+    matmul_bt_into_with(simd::active(), dy, rows, out_dim, w, in_dim, dx, wt)
+}
+
+/// [`matmul_bt_into`] on an explicit ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_into_with(
+    isa: Isa,
+    dy: &[f32],
+    rows: usize,
+    out_dim: usize,
+    w: &[f32],
+    in_dim: usize,
+    dx: &mut Vec<f32>,
+    wt: &mut Vec<f32>,
+) {
     debug_assert_eq!(dy.len(), rows * out_dim);
     debug_assert_eq!(w.len(), in_dim * out_dim);
-    let mut dx = vec![0.0f32; rows * in_dim];
+    dx.clear();
+    dx.resize(rows * in_dim, 0.0);
     if isa == Isa::Scalar {
         for r in 0..rows {
             let dyr = &dy[r * out_dim..(r + 1) * out_dim];
@@ -140,10 +210,11 @@ pub fn matmul_bt_with(
                 *slot = acc;
             }
         }
-        return dx;
+        return;
     }
     // one transposed copy of W: wt[o][k] = w[k][o], row-contiguous in k
-    let mut wt = vec![0.0f32; out_dim * in_dim];
+    wt.clear();
+    wt.resize(out_dim * in_dim, 0.0);
     for k in 0..in_dim {
         let wr = &w[k * out_dim..(k + 1) * out_dim];
         for (o, &wv) in wr.iter().enumerate() {
@@ -164,7 +235,6 @@ pub fn matmul_bt_with(
         }
         r0 = r1;
     }
-    dx
 }
 
 /// Row-wise softmax in place (max-subtracted, exactly `_softmax` in

@@ -17,6 +17,7 @@ pub mod gemm;
 pub mod kernels;
 pub mod quant8;
 pub mod simd;
+pub mod update;
 
 mod ae;
 mod rl;

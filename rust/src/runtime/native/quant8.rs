@@ -107,9 +107,28 @@ impl QuantDense {
 
     /// `y ≈ act(x @ w + b)` with u8 activations and i32 accumulation.
     pub fn forward(&self, isa: Isa, x: &[f32], rows: usize, act: Act) -> Vec<f32> {
+        let mut out = Vec::new();
+        let mut xq = Vec::new();
+        self.forward_into(isa, x, rows, act, &mut out, &mut xq);
+        out
+    }
+
+    /// [`Self::forward`] into caller-owned output and activation-code
+    /// buffers (cleared and resized) — the update engine's workspace path.
+    pub fn forward_into(
+        &self,
+        isa: Isa,
+        x: &[f32],
+        rows: usize,
+        act: Act,
+        out: &mut Vec<f32>,
+        xq: &mut Vec<u8>,
+    ) {
         debug_assert_eq!(x.len(), rows * self.in_dim);
-        let mut out = vec![0.0f32; rows * self.out_dim];
-        let mut xq = vec![0u8; self.k_pad]; // tail stays zero (pads match)
+        out.clear();
+        out.resize(rows * self.out_dim, 0.0);
+        xq.clear();
+        xq.resize(self.k_pad, 0); // tail stays zero (pads match)
         for r in 0..rows {
             let xr = &x[r * self.in_dim..(r + 1) * self.in_dim];
             let (lo, hi) = calib_range(xr);
@@ -120,13 +139,12 @@ impl QuantDense {
             let yr = &mut out[r * self.out_dim..(r + 1) * self.out_dim];
             for (j, y) in yr.iter_mut().enumerate() {
                 let col = &self.wq_t[j * self.k_pad..(j + 1) * self.k_pad];
-                let acc = simd::dot_q8(isa, &xq, col);
+                let acc = simd::dot_q8(isa, xq, col);
                 let sw = self.w_scale[j];
                 *y = sw * s_a * acc as f32 + sw * lo * self.col_sum[j] as f32 + self.bias[j];
             }
         }
-        apply_act(&mut out, act);
-        out
+        apply_act(out, act);
     }
 }
 

@@ -8,16 +8,26 @@
 //! step of both networks agree to f32 precision — DESIGN.md
 //! §Kernel-Parity), so the native and PJRT backends train identically up
 //! to float rounding.
+//!
+//! Updates run on the data-parallel engine in [`super::update`]: the
+//! minibatch is cut into fixed `SHARD_ROWS`-row shards, each shard's
+//! gradient partial lands in its own pooled workspace, and the partials
+//! fold together in ascending shard order — so the trained bits depend
+//! on the batch size but never on the worker count, and steady-state
+//! updates reuse their scratch instead of reallocating it (DESIGN.md
+//! §Update-Engine).
 
 use std::collections::BTreeMap;
+use std::ops::Range;
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::gemm::{dense_packed, PackedW};
-use super::kernels::{dense, matmul_bt, softmax_rows, Act};
+use super::gemm::{dense_packed_into, PackedW};
+use super::kernels::{dense_into, matmul_bt_into, softmax_rows, Act};
 use super::quant8::QuantDense;
 use super::simd::{self, Isa};
+use super::update::{self, Arena};
 use super::{expect_inputs, f32_in, i32_in, same_f32_buffer, scalar_in};
 use crate::runtime::artifacts::ArtifactMeta;
 use crate::runtime::backend::Precision;
@@ -90,11 +100,12 @@ impl PrepDense {
     }
 }
 
-/// Run one dense layer: through the warmed prep when present, else the
-/// plain dispatched kernel. The f32 prep path is bit-identical to the
-/// kernel; the int8 path is bounded-error (DESIGN.md §Native-Kernels).
+/// Run one dense layer into a workspace buffer: through the warmed prep
+/// when present, else the plain dispatched kernel. The f32 prep path is
+/// bit-identical to the kernel; the int8 path is bounded-error (DESIGN.md
+/// §Native-Kernels). `xq` is the int8 path's activation-code scratch.
 #[allow(clippy::too_many_arguments)]
-fn run_layer(
+fn run_layer_into(
     prep: Option<&PrepDense>,
     x: &[f32],
     rows: usize,
@@ -103,11 +114,13 @@ fn run_layer(
     b: &[f32],
     out_dim: usize,
     act: Act,
-) -> Vec<f32> {
+    out: &mut Vec<f32>,
+    xq: &mut Vec<u8>,
+) {
     match prep {
-        Some(PrepDense::F32(pw)) => dense_packed(simd::active(), x, rows, pw, act),
-        Some(PrepDense::Q8(q)) => q.forward(simd::active(), x, rows, act),
-        None => dense(x, rows, in_dim, w, b, out_dim, act),
+        Some(PrepDense::F32(pw)) => dense_packed_into(simd::active(), x, rows, pw, act, out),
+        Some(PrepDense::Q8(q)) => q.forward_into(simd::active(), x, rows, act, out, xq),
+        None => dense_into(x, rows, in_dim, w, b, out_dim, act, out),
     }
 }
 
@@ -159,7 +172,9 @@ fn tanh_backward(dh: &mut [f32], h: &[f32]) {
 
 /// Accumulate `dW += Xᵀ dY` and `db += colsum(dY)` straight into the flat
 /// gradient vector (slots may live anywhere in the layout, so index math
-/// instead of slice splitting).
+/// instead of slice splitting). The inner column sweep routes through
+/// [`simd::axpy`], which is elementwise mul+add in r-then-k ascending
+/// order — bit-identical to the scalar loops it replaced.
 #[allow(clippy::too_many_arguments)]
 fn acc_into(
     g: &mut [f32],
@@ -171,18 +186,15 @@ fn acc_into(
     dy: &[f32],
     out_dim: usize,
 ) {
+    let isa = simd::active();
     for r in 0..rows {
         let xr = &x[r * in_dim..(r + 1) * in_dim];
         let dyr = &dy[r * out_dim..(r + 1) * out_dim];
         for (k, &xv) in xr.iter().enumerate() {
             let base = w.off + k * out_dim;
-            for (o, &d) in dyr.iter().enumerate() {
-                g[base + o] += xv * d;
-            }
+            simd::axpy(isa, &mut g[base..base + out_dim], xv, dyr);
         }
-        for (o, &d) in dyr.iter().enumerate() {
-            g[b.off + o] += d;
-        }
+        simd::axpy(isa, &mut g[b.off..b.off + out_dim], 1.0, dyr);
     }
 }
 
@@ -243,6 +255,7 @@ pub(super) struct ActorProgram {
     w_p1: Slot,
     b_p1_mu: Slot,
     b_p1_ls: Slot,
+    ws: Arena<ActorWs>,
 }
 
 /// Precomputed per-params state for every dense layer of the actor.
@@ -257,8 +270,14 @@ struct ActorPrep {
     p1: PrepDense,
 }
 
-/// Forward activations kept for the backward pass.
-struct ActorCache {
+/// One shard's pooled `UpdateWorkspace` for the actor: forward
+/// activations kept for the backward pass, loss/backward scratch, and
+/// the shard's flat gradient partial with its loss-scalar partials. All
+/// buffers warm up to their steady-state capacity on first use and are
+/// then recycled through the program's [`Arena`].
+#[derive(Default)]
+struct ActorWs {
+    // forward activations
     h0: Vec<f32>,
     h1: Vec<f32>,
     hb: Vec<f32>,
@@ -266,9 +285,36 @@ struct ActorCache {
     hp: Vec<f32>,
     probs_b: Vec<f32>,
     probs_c: Vec<f32>,
+    mu_std: Vec<f32>,
     mu: Vec<f32>,
     ls_raw: Vec<f32>,
     log_std: Vec<f32>,
+    /// int8 activation codes (only the warmed Q8 forward path uses it)
+    xq: Vec<u8>,
+    // loss pass
+    d_logp: Vec<f32>,
+    z: Vec<f32>,
+    std: Vec<f32>,
+    // backward scratch
+    d_logits_b: Vec<f32>,
+    d_logits_c: Vec<f32>,
+    dhdp: Vec<f32>,
+    d_mu_std: Vec<f32>,
+    d_hp: Vec<f32>,
+    d_hb: Vec<f32>,
+    d_hc: Vec<f32>,
+    d_h1_p: Vec<f32>,
+    d_h1_b: Vec<f32>,
+    d_h1_c: Vec<f32>,
+    d_h1: Vec<f32>,
+    d_h0: Vec<f32>,
+    /// transpose scratch for [`matmul_bt_into`]
+    wt: Vec<f32>,
+    // shard partials, folded shard-ascending by `run_update`
+    g: Vec<f32>,
+    l_clip_sum: f32,
+    ent_sum: f32,
+    clip_count: usize,
 }
 
 impl ActorProgram {
@@ -308,6 +354,7 @@ impl ActorProgram {
             w_p1: slot(spec, "w_p1")?.0,
             b_p1_mu: slot(spec, "b_p1_mu")?.0,
             b_p1_ls: slot(spec, "b_p1_log_std")?.0,
+            ws: Arena::new(),
         };
         Ok(prog)
     }
@@ -357,8 +404,19 @@ impl ActorProgram {
         Ok(())
     }
 
-    fn forward(&self, params: &[f32], state: &[f32], b: usize, prep: Option<&ActorPrep>) -> ActorCache {
-        let h0 = run_layer(
+    /// Forward `b` rows into `ws`'s activation buffers. Per row this is
+    /// bit-identical for any batch split (the dense kernels accumulate
+    /// k-ascending per row), which is what lets `run_update` shard the
+    /// minibatch without perturbing any shard's forward bits.
+    fn forward_into(
+        &self,
+        params: &[f32],
+        state: &[f32],
+        b: usize,
+        prep: Option<&ActorPrep>,
+        ws: &mut ActorWs,
+    ) {
+        run_layer_into(
             prep.map(|p| &p.t0),
             state,
             b,
@@ -367,102 +425,106 @@ impl ActorProgram {
             seg(params, self.b_t0),
             self.t0,
             Act::Tanh,
+            &mut ws.h0,
+            &mut ws.xq,
         );
-        let h1 = run_layer(
+        run_layer_into(
             prep.map(|p| &p.t1),
-            &h0,
+            &ws.h0,
             b,
             self.t0,
             seg(params, self.w_t1),
             seg(params, self.b_t1),
             self.t1,
             Act::Tanh,
+            &mut ws.h1,
+            &mut ws.xq,
         );
 
-        let hb = run_layer(
+        run_layer_into(
             prep.map(|p| &p.b0),
-            &h1,
+            &ws.h1,
             b,
             self.t1,
             seg(params, self.w_b0),
             seg(params, self.b_b0),
             self.h,
             Act::Tanh,
+            &mut ws.hb,
+            &mut ws.xq,
         );
-        let mut probs_b = run_layer(
+        run_layer_into(
             prep.map(|p| &p.b1),
-            &hb,
+            &ws.hb,
             b,
             self.h,
             seg(params, self.w_b1),
             seg(params, self.b_b1),
             self.p,
             Act::Linear,
+            &mut ws.probs_b,
+            &mut ws.xq,
         );
-        softmax_rows(&mut probs_b, b, self.p);
+        softmax_rows(&mut ws.probs_b, b, self.p);
 
-        let hc = run_layer(
+        run_layer_into(
             prep.map(|p| &p.c0),
-            &h1,
+            &ws.h1,
             b,
             self.t1,
             seg(params, self.w_c0),
             seg(params, self.b_c0),
             self.h,
             Act::Tanh,
+            &mut ws.hc,
+            &mut ws.xq,
         );
-        let mut probs_c = run_layer(
+        run_layer_into(
             prep.map(|p| &p.c1),
-            &hc,
+            &ws.hc,
             b,
             self.h,
             seg(params, self.w_c1),
             seg(params, self.b_c1),
             self.c,
             Act::Linear,
+            &mut ws.probs_c,
+            &mut ws.xq,
         );
-        softmax_rows(&mut probs_c, b, self.c);
+        softmax_rows(&mut ws.probs_c, b, self.c);
 
-        let hp = run_layer(
+        run_layer_into(
             prep.map(|p| &p.p0),
-            &h1,
+            &ws.h1,
             b,
             self.t1,
             seg(params, self.w_p0),
             seg(params, self.b_p0),
             self.h,
             Act::Tanh,
+            &mut ws.hp,
+            &mut ws.xq,
         );
         let bias_p = [params[self.b_p1_mu.off], params[self.b_p1_ls.off]];
-        let mu_std = run_layer(
+        run_layer_into(
             prep.map(|p| &p.p1),
-            &hp,
+            &ws.hp,
             b,
             self.h,
             seg(params, self.w_p1),
             &bias_p,
             2,
             Act::Linear,
+            &mut ws.mu_std,
+            &mut ws.xq,
         );
-        let mut mu = vec![0.0f32; b];
-        let mut ls_raw = vec![0.0f32; b];
-        let mut log_std = vec![0.0f32; b];
+        update::zeroed(&mut ws.mu, b);
+        update::zeroed(&mut ws.ls_raw, b);
+        update::zeroed(&mut ws.log_std, b);
         for i in 0..b {
-            mu[i] = mu_std[2 * i];
-            ls_raw[i] = mu_std[2 * i + 1];
-            log_std[i] = ls_raw[i].clamp(LOG_STD_MIN, LOG_STD_MAX);
-        }
-        ActorCache {
-            h0,
-            h1,
-            hb,
-            hc,
-            hp,
-            probs_b,
-            probs_c,
-            mu,
-            ls_raw,
-            log_std,
+            ws.mu[i] = ws.mu_std[2 * i];
+            ws.ls_raw[i] = ws.mu_std[2 * i + 1];
+            ws.log_std[i] = ws.ls_raw[i].clamp(LOG_STD_MIN, LOG_STD_MAX);
         }
     }
 
@@ -496,13 +558,16 @@ impl ActorProgram {
             }
             (None, Precision::F32) => None,
         };
-        let cache = self.forward(params, state, b, prep);
-        Ok(vec![
-            TensorView::f32(cache.probs_b, vec![b, self.p])?,
-            TensorView::f32(cache.probs_c, vec![b, self.c])?,
-            TensorView::f32(cache.mu, vec![b, 1])?,
-            TensorView::f32(cache.log_std, vec![b, 1])?,
-        ])
+        let mut wss = self.ws.take(1);
+        self.forward_into(params, state, b, prep, &mut wss[0]);
+        let out = vec![
+            TensorView::f32(wss[0].probs_b.clone(), vec![b, self.p])?,
+            TensorView::f32(wss[0].probs_c.clone(), vec![b, self.c])?,
+            TensorView::f32(wss[0].mu.clone(), vec![b, 1])?,
+            TensorView::f32(wss[0].log_std.clone(), vec![b, 1])?,
+        ];
+        self.ws.put(wss);
+        Ok(out)
     }
 
     /// One PPO-clip + entropy-bonus + Adam minibatch step:
@@ -532,38 +597,144 @@ impl ActorProgram {
         if a_c.len() != b || a_p.len() != b || old_logp.len() != b || adv.len() != b {
             bail!("{what}: ragged minibatch inputs");
         }
-
-        // updates always run the un-prepped f32 kernels: the training and
-        // bit-exact-resume contracts are defined on them
-        let cache = self.forward(params, state, b, None);
-        let inv_b = 1.0 / b as f32;
-
-        // ---- hybrid log-prob, PPO ratio, loss scalars ----
-        let mut d_logp = vec![0.0f32; b];
-        let mut z = vec![0.0f32; b];
-        let mut std = vec![0.0f32; b];
-        let mut l_clip_sum = 0.0f32;
-        let mut ent_sum = 0.0f32;
-        let mut clip_count = 0usize;
+        // validate up front — the sharded workers are infallible
         for i in 0..b {
             let jb = a_b[i] as usize;
             let jc = a_c[i] as usize;
             if jb >= self.p || jc >= self.c {
                 bail!("{what}: action ({jb},{jc}) out of range ({},{})", self.p, self.c);
             }
-            let pb = &cache.probs_b[i * self.p..(i + 1) * self.p];
-            let pc = &cache.probs_c[i * self.c..(i + 1) * self.c];
-            std[i] = cache.log_std[i].exp();
-            z[i] = (a_p[i] - cache.mu[i]) / std[i];
+        }
+
+        let inv_b = 1.0 / b as f32;
+        let shards = update::shard_count(b);
+        let threads = update::effective_threads(shards);
+        let mut wss = self.ws.take(shards);
+        update::run_sharded(&mut wss, threads, |ws, s| {
+            self.update_shard(
+                params,
+                state,
+                a_b,
+                a_c,
+                a_p,
+                old_logp,
+                adv,
+                inv_b,
+                update::shard_range(s, b),
+                ws,
+            )
+        })?;
+
+        // deterministic reduction: fold partials in ascending shard order
+        // (1.0-scaled axpy is an exact elementwise add), so the result
+        // depends on the fixed partition, never on the worker count
+        let isa = simd::active();
+        let (acc, rest) = wss.split_first_mut().expect("at least one shard");
+        for ws in rest.iter() {
+            simd::axpy(isa, &mut acc.g, 1.0, &ws.g);
+            acc.l_clip_sum += ws.l_clip_sum;
+            acc.ent_sum += ws.ent_sum;
+            acc.clip_count += ws.clip_count;
+        }
+        let loss = -(acc.l_clip_sum * inv_b + ENTROPY_COEF * acc.ent_sum * inv_b);
+        let entropy = acc.ent_sum * inv_b;
+        let clip_frac = acc.clip_count as f32 * inv_b;
+
+        // ---- Adam ----
+        let (p2, m2, v2) = adam_step(params, &acc.g, m, v, t, lr);
+        self.ws.put(wss);
+        Ok(vec![
+            TensorView::f32(p2, vec![self.size])?,
+            TensorView::f32(m2, vec![self.size])?,
+            TensorView::f32(v2, vec![self.size])?,
+            TensorView::from_scalar(loss),
+            TensorView::from_scalar(entropy),
+            TensorView::from_scalar(clip_frac),
+        ])
+    }
+
+    /// Forward + loss + backward for one shard's rows, writing the flat
+    /// gradient partial and loss scalars into `ws`. Inputs are indexed by
+    /// the global row `i`, workspace buffers by the shard-local `li`.
+    #[allow(clippy::too_many_arguments)]
+    fn update_shard(
+        &self,
+        params: &[f32],
+        state: &[f32],
+        a_b: &[i32],
+        a_c: &[i32],
+        a_p: &[f32],
+        old_logp: &[f32],
+        adv: &[f32],
+        inv_b: f32,
+        range: Range<usize>,
+        ws: &mut ActorWs,
+    ) {
+        let rows = range.len();
+        let shard_state = &state[range.start * self.d..range.end * self.d];
+        // updates always run the un-prepped f32 kernels: the training and
+        // bit-exact-resume contracts are defined on them
+        self.forward_into(params, shard_state, rows, None, ws);
+        let ent_coef_b = ENTROPY_COEF * inv_b;
+
+        let ActorWs {
+            h0,
+            h1,
+            hb,
+            hc,
+            hp,
+            probs_b,
+            probs_c,
+            ls_raw,
+            log_std,
+            mu,
+            d_logp,
+            z,
+            std,
+            d_logits_b,
+            d_logits_c,
+            dhdp,
+            d_mu_std,
+            d_hp,
+            d_hb,
+            d_hc,
+            d_h1_p,
+            d_h1_b,
+            d_h1_c,
+            d_h1,
+            d_h0,
+            wt,
+            g,
+            l_clip_sum,
+            ent_sum,
+            clip_count,
+            ..
+        } = ws;
+
+        // ---- hybrid log-prob, PPO ratio, loss scalars ----
+        update::zeroed(d_logp, rows);
+        update::zeroed(z, rows);
+        update::zeroed(std, rows);
+        *l_clip_sum = 0.0;
+        *ent_sum = 0.0;
+        *clip_count = 0;
+        for li in 0..rows {
+            let i = range.start + li;
+            let jb = a_b[i] as usize;
+            let jc = a_c[i] as usize;
+            let pb = &probs_b[li * self.p..(li + 1) * self.p];
+            let pc = &probs_c[li * self.c..(li + 1) * self.c];
+            std[li] = log_std[li].exp();
+            z[li] = (a_p[i] - mu[li]) / std[li];
             let lp = pb[jb].clamp(PROB_FLOOR, 1.0).ln()
                 + pc[jc].clamp(PROB_FLOOR, 1.0).ln()
-                + (-0.5 * z[i] * z[i] - cache.log_std[i] - 0.5 * LOG_2PI);
+                + (-0.5 * z[li] * z[li] - log_std[li] - 0.5 * LOG_2PI);
             let ratio = (lp - old_logp[i]).exp();
             let surr1 = ratio * adv[i];
             let surr2 = ratio.clamp(1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv[i];
-            l_clip_sum += surr1.min(surr2);
+            *l_clip_sum += surr1.min(surr2);
             if (ratio - 1.0).abs() > CLIP_EPS {
-                clip_count += 1;
+                *clip_count += 1;
             }
             // d l_clip / d ratio: 1·adv on the unclipped branch
             // (jnp.minimum picks the first arg on ties), 1{in clip range}·adv
@@ -575,37 +746,34 @@ impl ActorProgram {
                 0.0
             };
             // loss = -(l_clip + coef * entropy)
-            d_logp[i] = -d_ratio * ratio;
+            d_logp[li] = -d_ratio * ratio;
 
             // entropy (for the reported scalar)
-            let mut ent = 0.5 * (1.0 + LOG_2PI) + cache.log_std[i];
+            let mut ent = 0.5 * (1.0 + LOG_2PI) + log_std[li];
             for &q in pb.iter().chain(pc.iter()) {
                 let qc = q.clamp(PROB_FLOOR, 1.0);
                 ent -= qc * qc.ln();
             }
-            ent_sum += ent;
+            *ent_sum += ent;
         }
-        let loss = -(l_clip_sum * inv_b + ENTROPY_COEF * ent_sum * inv_b);
-        let entropy = ent_sum * inv_b;
-        let clip_frac = clip_count as f32 * inv_b;
-        let ent_coef_b = ENTROPY_COEF * inv_b;
 
         // ---- gradients on the branch outputs ----
-        let mut d_logits_b = vec![0.0f32; b * self.p];
-        let mut d_logits_c = vec![0.0f32; b * self.c];
-        let mut dhdp = vec![0.0f32; self.p.max(self.c)];
-        for i in 0..b {
+        update::zeroed(d_logits_b, rows * self.p);
+        update::zeroed(d_logits_c, rows * self.c);
+        update::zeroed(dhdp, self.p.max(self.c));
+        for li in 0..rows {
+            let i = range.start + li;
             for (probs, d_logits, cols, act) in [
-                (&cache.probs_b, &mut d_logits_b, self.p, a_b[i] as usize),
-                (&cache.probs_c, &mut d_logits_c, self.c, a_c[i] as usize),
+                (&*probs_b, &mut *d_logits_b, self.p, a_b[i] as usize),
+                (&*probs_c, &mut *d_logits_c, self.c, a_c[i] as usize),
             ] {
-                let pr = &probs[i * cols..(i + 1) * cols];
-                let row = &mut d_logits[i * cols..(i + 1) * cols];
+                let pr = &probs[li * cols..(li + 1) * cols];
+                let row = &mut d_logits[li * cols..(li + 1) * cols];
                 // log-prob term: d_logp * (onehot − p)
                 for (slot, &q) in row.iter_mut().zip(pr) {
-                    *slot = -q * d_logp[i];
+                    *slot = -q * d_logp[li];
                 }
-                row[act] += d_logp[i];
+                row[act] += d_logp[li];
                 // entropy bonus term: −coef/B · p ⊙ (dH/dp − Σ p dH/dp)
                 let mut s = 0.0f32;
                 for (tmp, &q) in dhdp.iter_mut().zip(pr) {
@@ -619,73 +787,60 @@ impl ActorProgram {
         }
 
         // gaussian head: interleaved (mu, log_std) gradient rows
-        let mut d_mu_std = vec![0.0f32; b * 2];
-        for i in 0..b {
-            d_mu_std[2 * i] = d_logp[i] * z[i] / std[i];
-            let mut dls = d_logp[i] * (z[i] * z[i] - 1.0) - ent_coef_b;
-            if !(LOG_STD_MIN..=LOG_STD_MAX).contains(&cache.ls_raw[i]) {
+        update::zeroed(d_mu_std, rows * 2);
+        for li in 0..rows {
+            d_mu_std[2 * li] = d_logp[li] * z[li] / std[li];
+            let mut dls = d_logp[li] * (z[li] * z[li] - 1.0) - ent_coef_b;
+            if !(LOG_STD_MIN..=LOG_STD_MAX).contains(&ls_raw[li]) {
                 dls = 0.0; // clip gate
             }
-            d_mu_std[2 * i + 1] = dls;
+            d_mu_std[2 * li + 1] = dls;
         }
 
-        // ---- backprop through the dense stack ----
-        let mut g = vec![0.0f32; self.size];
+        // ---- backprop through the dense stack, into the shard partial ----
+        update::zeroed(g, self.size);
 
         // power branch — the mu/log_std biases live in two 1-wide slots, so
         // accumulate its dW/db by hand instead of through `acc_into`
-        for i in 0..b {
-            g[self.b_p1_mu.off] += d_mu_std[2 * i];
-            g[self.b_p1_ls.off] += d_mu_std[2 * i + 1];
-            let xr = &cache.hp[i * self.h..(i + 1) * self.h];
+        for li in 0..rows {
+            g[self.b_p1_mu.off] += d_mu_std[2 * li];
+            g[self.b_p1_ls.off] += d_mu_std[2 * li + 1];
+            let xr = &hp[li * self.h..(li + 1) * self.h];
             for (k, &xv) in xr.iter().enumerate() {
                 let base = self.w_p1.off + k * 2;
-                g[base] += xv * d_mu_std[2 * i];
-                g[base + 1] += xv * d_mu_std[2 * i + 1];
+                g[base] += xv * d_mu_std[2 * li];
+                g[base + 1] += xv * d_mu_std[2 * li + 1];
             }
         }
-        let mut d_hp = matmul_bt(&d_mu_std, b, 2, seg(params, self.w_p1), self.h);
-        tanh_backward(&mut d_hp, &cache.hp);
-        acc_into(&mut g, self.w_p0, self.b_p0, &cache.h1, b, self.t1, &d_hp, self.h);
-        let d_h1_p = matmul_bt(&d_hp, b, self.h, seg(params, self.w_p0), self.t1);
+        matmul_bt_into(d_mu_std, rows, 2, seg(params, self.w_p1), self.h, d_hp, wt);
+        tanh_backward(d_hp, hp);
+        acc_into(g, self.w_p0, self.b_p0, h1, rows, self.t1, d_hp, self.h);
+        matmul_bt_into(d_hp, rows, self.h, seg(params, self.w_p0), self.t1, d_h1_p, wt);
 
         // partition branch
-        acc_into(&mut g, self.w_b1, self.b_b1, &cache.hb, b, self.h, &d_logits_b, self.p);
-        let mut d_hb = matmul_bt(&d_logits_b, b, self.p, seg(params, self.w_b1), self.h);
-        tanh_backward(&mut d_hb, &cache.hb);
-        acc_into(&mut g, self.w_b0, self.b_b0, &cache.h1, b, self.t1, &d_hb, self.h);
-        let d_h1_b = matmul_bt(&d_hb, b, self.h, seg(params, self.w_b0), self.t1);
+        acc_into(g, self.w_b1, self.b_b1, hb, rows, self.h, d_logits_b, self.p);
+        matmul_bt_into(d_logits_b, rows, self.p, seg(params, self.w_b1), self.h, d_hb, wt);
+        tanh_backward(d_hb, hb);
+        acc_into(g, self.w_b0, self.b_b0, h1, rows, self.t1, d_hb, self.h);
+        matmul_bt_into(d_hb, rows, self.h, seg(params, self.w_b0), self.t1, d_h1_b, wt);
 
         // channel branch
-        acc_into(&mut g, self.w_c1, self.b_c1, &cache.hc, b, self.h, &d_logits_c, self.c);
-        let mut d_hc = matmul_bt(&d_logits_c, b, self.c, seg(params, self.w_c1), self.h);
-        tanh_backward(&mut d_hc, &cache.hc);
-        acc_into(&mut g, self.w_c0, self.b_c0, &cache.h1, b, self.t1, &d_hc, self.h);
-        let d_h1_c = matmul_bt(&d_hc, b, self.h, seg(params, self.w_c0), self.t1);
+        acc_into(g, self.w_c1, self.b_c1, hc, rows, self.h, d_logits_c, self.c);
+        matmul_bt_into(d_logits_c, rows, self.c, seg(params, self.w_c1), self.h, d_hc, wt);
+        tanh_backward(d_hc, hc);
+        acc_into(g, self.w_c0, self.b_c0, h1, rows, self.t1, d_hc, self.h);
+        matmul_bt_into(d_hc, rows, self.h, seg(params, self.w_c0), self.t1, d_h1_c, wt);
 
         // trunk
-        let mut d_h1: Vec<f32> = d_h1_p
-            .iter()
-            .zip(&d_h1_b)
-            .zip(&d_h1_c)
-            .map(|((p, q), r)| p + q + r)
-            .collect();
-        tanh_backward(&mut d_h1, &cache.h1);
-        acc_into(&mut g, self.w_t1, self.b_t1, &cache.h0, b, self.t0, &d_h1, self.t1);
-        let mut d_h0 = matmul_bt(&d_h1, b, self.t1, seg(params, self.w_t1), self.t0);
-        tanh_backward(&mut d_h0, &cache.h0);
-        acc_into(&mut g, self.w_t0, self.b_t0, state, b, self.d, &d_h0, self.t0);
-
-        // ---- Adam ----
-        let (p2, m2, v2) = adam_step(params, &g, m, v, t, lr);
-        Ok(vec![
-            TensorView::f32(p2, vec![self.size])?,
-            TensorView::f32(m2, vec![self.size])?,
-            TensorView::f32(v2, vec![self.size])?,
-            TensorView::from_scalar(loss),
-            TensorView::from_scalar(entropy),
-            TensorView::from_scalar(clip_frac),
-        ])
+        update::zeroed(d_h1, rows * self.t1);
+        for (j, slot) in d_h1.iter_mut().enumerate() {
+            *slot = d_h1_p[j] + d_h1_b[j] + d_h1_c[j];
+        }
+        tanh_backward(d_h1, h1);
+        acc_into(g, self.w_t1, self.b_t1, h0, rows, self.t0, d_h1, self.t1);
+        matmul_bt_into(d_h1, rows, self.t1, seg(params, self.w_t1), self.t0, d_h0, wt);
+        tanh_backward(d_h0, h0);
+        acc_into(g, self.w_t0, self.b_t0, shard_state, rows, self.d, d_h0, self.t0);
     }
 }
 
@@ -708,13 +863,30 @@ pub(super) struct CriticProgram {
     b_2: Slot,
     w_3: Slot,
     b_3: Slot,
+    ws: Arena<CriticWs>,
 }
 
-struct CriticCache {
+/// One shard's pooled `UpdateWorkspace` for the critic — same ownership
+/// story as [`ActorWs`].
+#[derive(Default)]
+struct CriticWs {
+    // forward activations
     h0: Vec<f32>,
     h1: Vec<f32>,
     h2: Vec<f32>,
     value: Vec<f32>,
+    /// int8 activation codes (only the warmed Q8 forward path uses it)
+    xq: Vec<u8>,
+    // backward scratch
+    dv: Vec<f32>,
+    d_h2: Vec<f32>,
+    d_h1: Vec<f32>,
+    d_h0: Vec<f32>,
+    /// transpose scratch for [`matmul_bt_into`]
+    wt: Vec<f32>,
+    // shard partials, folded shard-ascending by `run_update`
+    g: Vec<f32>,
+    loss_sum: f32,
 }
 
 /// Prepared per-layer forward state for one critic parameter vector.
@@ -749,6 +921,7 @@ impl CriticProgram {
             b_2: slot(spec, "b_2")?.0,
             w_3: slot(spec, "w_3")?.0,
             b_3: slot(spec, "b_3")?.0,
+            ws: Arena::new(),
         })
     }
 
@@ -788,14 +961,17 @@ impl CriticProgram {
         Ok(())
     }
 
-    fn forward(
+    /// Forward `b` rows into `ws` — per-row bit-identical for any batch
+    /// split, same contract as [`ActorProgram::forward_into`].
+    fn forward_into(
         &self,
         params: &[f32],
         state: &[f32],
         b: usize,
         prep: Option<&CriticPrep>,
-    ) -> CriticCache {
-        let h0 = run_layer(
+        ws: &mut CriticWs,
+    ) {
+        run_layer_into(
             prep.map(|p| &p.l0),
             state,
             b,
@@ -804,38 +980,45 @@ impl CriticProgram {
             seg(params, self.b_0),
             self.c0,
             Act::Tanh,
+            &mut ws.h0,
+            &mut ws.xq,
         );
-        let h1 = run_layer(
+        run_layer_into(
             prep.map(|p| &p.l1),
-            &h0,
+            &ws.h0,
             b,
             self.c0,
             seg(params, self.w_1),
             seg(params, self.b_1),
             self.c1,
             Act::Tanh,
+            &mut ws.h1,
+            &mut ws.xq,
         );
-        let h2 = run_layer(
+        run_layer_into(
             prep.map(|p| &p.l2),
-            &h1,
+            &ws.h1,
             b,
             self.c1,
             seg(params, self.w_2),
             seg(params, self.b_2),
             self.c2,
             Act::Tanh,
+            &mut ws.h2,
+            &mut ws.xq,
         );
-        let value = run_layer(
+        run_layer_into(
             prep.map(|p| &p.l3),
-            &h2,
+            &ws.h2,
             b,
             self.c2,
             seg(params, self.w_3),
             seg(params, self.b_3),
             1,
             Act::Linear,
+            &mut ws.value,
+            &mut ws.xq,
         );
-        CriticCache { h0, h1, h2, value }
     }
 
     /// `(params, state) -> (value,)`.
@@ -860,8 +1043,11 @@ impl CriticProgram {
             }
             (None, Precision::F32) => None,
         };
-        let cache = self.forward(params, state, b, prep);
-        Ok(vec![TensorView::f32(cache.value, vec![b, 1])?])
+        let mut wss = self.ws.take(1);
+        self.forward_into(params, state, b, prep, &mut wss[0]);
+        let out = vec![TensorView::f32(wss[0].value.clone(), vec![b, 1])?];
+        self.ws.put(wss);
+        Ok(out)
     }
 
     /// One MSE + Adam step toward the sampled returns (Eq. 16):
@@ -884,36 +1070,82 @@ impl CriticProgram {
             bail!("{what}: parameter/Adam state size mismatch");
         }
 
-        // updates always run the un-prepped f32 kernels: the training and
-        // bit-exact-resume contracts are defined on them
-        let cache = self.forward(params, state, b, None);
         let inv_b = 1.0 / b as f32;
-        let mut loss = 0.0f32;
-        let mut dv = vec![0.0f32; b];
-        for i in 0..b {
-            let err = cache.value[i] - returns[i];
-            loss += err * err * inv_b;
-            dv[i] = 2.0 * err * inv_b;
+        let shards = update::shard_count(b);
+        let threads = update::effective_threads(shards);
+        let mut wss = self.ws.take(shards);
+        update::run_sharded(&mut wss, threads, |ws, s| {
+            self.update_shard(params, state, returns, inv_b, update::shard_range(s, b), ws)
+        })?;
+
+        // deterministic shard-ascending reduction (see the actor's)
+        let isa = simd::active();
+        let (acc, rest) = wss.split_first_mut().expect("at least one shard");
+        for ws in rest.iter() {
+            simd::axpy(isa, &mut acc.g, 1.0, &ws.g);
+            acc.loss_sum += ws.loss_sum;
         }
+        let loss = acc.loss_sum;
 
-        let mut g = vec![0.0f32; self.size];
-        acc_into(&mut g, self.w_3, self.b_3, &cache.h2, b, self.c2, &dv, 1);
-        let mut d = matmul_bt(&dv, b, 1, seg(params, self.w_3), self.c2);
-        tanh_backward(&mut d, &cache.h2);
-        acc_into(&mut g, self.w_2, self.b_2, &cache.h1, b, self.c1, &d, self.c2);
-        let mut d = matmul_bt(&d, b, self.c2, seg(params, self.w_2), self.c1);
-        tanh_backward(&mut d, &cache.h1);
-        acc_into(&mut g, self.w_1, self.b_1, &cache.h0, b, self.c0, &d, self.c1);
-        let mut d = matmul_bt(&d, b, self.c1, seg(params, self.w_1), self.c0);
-        tanh_backward(&mut d, &cache.h0);
-        acc_into(&mut g, self.w_0, self.b_0, state, b, self.d, &d, self.c0);
-
-        let (p2, m2, v2) = adam_step(params, &g, m, v, t, lr);
+        let (p2, m2, v2) = adam_step(params, &acc.g, m, v, t, lr);
+        self.ws.put(wss);
         Ok(vec![
             TensorView::f32(p2, vec![self.size])?,
             TensorView::f32(m2, vec![self.size])?,
             TensorView::f32(v2, vec![self.size])?,
             TensorView::from_scalar(loss),
         ])
+    }
+
+    /// Forward + MSE loss + backward for one shard's rows — the critic
+    /// half of the update engine's per-shard work.
+    fn update_shard(
+        &self,
+        params: &[f32],
+        state: &[f32],
+        returns: &[f32],
+        inv_b: f32,
+        range: Range<usize>,
+        ws: &mut CriticWs,
+    ) {
+        let rows = range.len();
+        let shard_state = &state[range.start * self.d..range.end * self.d];
+        // updates always run the un-prepped f32 kernels: the training and
+        // bit-exact-resume contracts are defined on them
+        self.forward_into(params, shard_state, rows, None, ws);
+        let CriticWs {
+            h0,
+            h1,
+            h2,
+            value,
+            dv,
+            d_h2,
+            d_h1,
+            d_h0,
+            wt,
+            g,
+            loss_sum,
+            ..
+        } = ws;
+
+        update::zeroed(dv, rows);
+        *loss_sum = 0.0;
+        for li in 0..rows {
+            let err = value[li] - returns[range.start + li];
+            *loss_sum += err * err * inv_b;
+            dv[li] = 2.0 * err * inv_b;
+        }
+
+        update::zeroed(g, self.size);
+        acc_into(g, self.w_3, self.b_3, h2, rows, self.c2, dv, 1);
+        matmul_bt_into(dv, rows, 1, seg(params, self.w_3), self.c2, d_h2, wt);
+        tanh_backward(d_h2, h2);
+        acc_into(g, self.w_2, self.b_2, h1, rows, self.c1, d_h2, self.c2);
+        matmul_bt_into(d_h2, rows, self.c2, seg(params, self.w_2), self.c1, d_h1, wt);
+        tanh_backward(d_h1, h1);
+        acc_into(g, self.w_1, self.b_1, h0, rows, self.c0, d_h1, self.c1);
+        matmul_bt_into(d_h1, rows, self.c1, seg(params, self.w_1), self.c0, d_h0, wt);
+        tanh_backward(d_h0, h0);
+        acc_into(g, self.w_0, self.b_0, shard_state, rows, self.d, d_h0, self.c0);
     }
 }

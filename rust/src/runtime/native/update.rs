@@ -1,0 +1,263 @@
+//! The data-parallel PPO update engine: fixed row sharding, a named
+//! worker pool, and a deterministic shard-ascending gradient reduction.
+//!
+//! **Thread-count invariance.** A minibatch of `b` rows is cut into
+//! `shard_count(b)` contiguous shards of [`SHARD_ROWS`] rows each — a
+//! partition that depends only on `b`, never on the worker count. Each
+//! shard produces its own gradient partial in its own pooled workspace,
+//! and the caller folds the partials
+//! together in ascending shard order. Workers only decide *when* a
+//! shard's partial gets computed, never *what* is summed with what, so
+//! the update is bit-identical for 1 vs N workers — the same contract
+//! PR 4's rollout engine established for lane chunking (DESIGN.md
+//! §Update-Engine). For `b ≤ SHARD_ROWS` there is a single shard and the
+//! engine reproduces the original serial accumulation exactly.
+//!
+//! **Workspace arena.** [`Arena`] keeps per-shard scratch alive across
+//! update calls (gradient partials, forward activations, backward
+//! temporaries), so steady-state training allocates nothing beyond the
+//! output tensors the executable ABI returns.
+//!
+//! The requested worker count travels as a thread-local scoped by
+//! [`with_threads`] — `ActorNet`/`CriticNet` set it around their
+//! executable calls from `TrainConfig::update_threads`, so the shared,
+//! memoized update programs need no per-caller state.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// Fixed shard width in minibatch rows. Part of the numeric contract:
+/// changing it regroups the gradient reduction and thus changes training
+/// bit-streams (like editing the loss), so it is a constant, not a knob.
+pub const SHARD_ROWS: usize = 32;
+
+/// Number of shards a `b`-row minibatch is cut into.
+pub fn shard_count(b: usize) -> usize {
+    b.div_ceil(SHARD_ROWS)
+}
+
+/// Row range of shard `s` (the final shard may be short).
+pub fn shard_range(s: usize, b: usize) -> Range<usize> {
+    s * SHARD_ROWS..((s + 1) * SHARD_ROWS).min(b)
+}
+
+thread_local! {
+    /// Worker count requested by the calling net for the current update
+    /// executable call; 0 means "not set, use the process default".
+    static REQUESTED: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Scope a requested update worker count around `f` (0 = auto). Restores
+/// the previous request on exit so nested calls compose.
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            REQUESTED.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(REQUESTED.with(|c| c.replace(threads)));
+    f()
+}
+
+/// Resolve the worker count for a `shards`-shard update: the scoped
+/// request when one is set, else `MACCI_UPDATE_THREADS`, else the
+/// machine's parallelism — always clamped to `1..=shards`. Mirrors the
+/// `rollout_threads` resolution in `rl::rollout`.
+pub fn effective_threads(shards: usize) -> usize {
+    let req = REQUESTED.with(|c| c.get());
+    let t = if req == 0 {
+        crate::util::config::update_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    } else {
+        req
+    };
+    t.clamp(1, shards.max(1))
+}
+
+/// Run `f(workspace, shard_index)` once per shard on up to `threads`
+/// named `update-{i}` workers. Shards are assigned to workers in fixed
+/// contiguous chunks (the rollout engine's `chunks_mut` idiom); with one
+/// worker everything runs inline on the caller. `f` must be infallible —
+/// validate inputs before sharding.
+pub fn run_sharded<W, F>(workspaces: &mut [W], threads: usize, f: F) -> Result<()>
+where
+    W: Send,
+    F: Fn(&mut W, usize) + Sync,
+{
+    let shards = workspaces.len();
+    let threads = threads.clamp(1, shards.max(1));
+    if threads == 1 {
+        for (s, ws) in workspaces.iter_mut().enumerate() {
+            f(ws, s);
+        }
+        return Ok(());
+    }
+    let chunk = shards.div_ceil(threads);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(threads);
+        for (i, slab) in workspaces.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let h = std::thread::Builder::new()
+                .name(format!("update-{i}"))
+                .spawn_scoped(scope, move || {
+                    for (j, ws) in slab.iter_mut().enumerate() {
+                        f(ws, i * chunk + j);
+                    }
+                })?;
+            handles.push(h);
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("update worker panicked"))?;
+        }
+        Ok(())
+    })
+}
+
+/// A pool of reusable per-shard workspaces. `take` hands out `n`
+/// (recycled first, `Default` for the shortfall), `put` returns them;
+/// the pool never shrinks below the high-water shard count, which keeps
+/// steady-state updates allocation-free.
+pub struct Arena<W> {
+    pool: Mutex<Vec<W>>,
+}
+
+impl<W: Default> Arena<W> {
+    pub fn new() -> Arena<W> {
+        Arena {
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn take(&self, n: usize) -> Vec<W> {
+        let mut pool = self.pool.lock().unwrap();
+        let have = pool.len().min(n);
+        let mut out: Vec<W> = pool.drain(pool.len() - have..).collect();
+        drop(pool);
+        out.resize_with(n, W::default);
+        out
+    }
+
+    pub fn put(&self, workspaces: Vec<W>) {
+        self.pool.lock().unwrap().extend(workspaces);
+    }
+}
+
+impl<W: Default> Default for Arena<W> {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+/// Reset `buf` to `n` zeros, keeping its capacity (the arena's buffers
+/// warm up once and then never reallocate).
+pub fn zeroed(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_partition_covers_batch_exactly() {
+        for b in [1usize, 31, 32, 33, 64, 100, 256, 511] {
+            let s = shard_count(b);
+            assert_eq!(shard_range(0, b).start, 0);
+            assert_eq!(shard_range(s - 1, b).end, b);
+            let mut covered = 0usize;
+            for i in 0..s {
+                let r = shard_range(i, b);
+                assert_eq!(r.start, covered, "b={b} shard {i} contiguous");
+                assert!(!r.is_empty());
+                assert!(r.len() <= SHARD_ROWS);
+                covered = r.end;
+            }
+            assert_eq!(covered, b);
+        }
+    }
+
+    #[test]
+    fn small_batches_are_single_shard() {
+        // the serial-equivalence guarantee: b ≤ SHARD_ROWS never shards
+        for b in 1..=SHARD_ROWS {
+            assert_eq!(shard_count(b), 1);
+        }
+        assert_eq!(shard_count(SHARD_ROWS + 1), 2);
+    }
+
+    #[test]
+    fn with_threads_scopes_and_restores() {
+        assert_eq!(REQUESTED.with(|c| c.get()), 0);
+        let seen = with_threads(3, || {
+            let inner = with_threads(7, || REQUESTED.with(|c| c.get()));
+            assert_eq!(inner, 7);
+            REQUESTED.with(|c| c.get())
+        });
+        assert_eq!(seen, 3);
+        assert_eq!(REQUESTED.with(|c| c.get()), 0);
+    }
+
+    #[test]
+    fn effective_threads_clamps_to_shards() {
+        with_threads(8, || {
+            assert_eq!(effective_threads(1), 1);
+            assert_eq!(effective_threads(3), 3);
+            assert_eq!(effective_threads(100), 8);
+        });
+        with_threads(1, || assert_eq!(effective_threads(64), 1));
+    }
+
+    #[test]
+    fn run_sharded_is_worker_count_invariant() {
+        // every worker count must produce the same per-shard results in
+        // the same slots; only scheduling may differ
+        let shards = 11;
+        for threads in [1usize, 2, 4, 8, 16] {
+            let mut ws: Vec<(usize, String)> = vec![(0, String::new()); shards];
+            run_sharded(&mut ws, threads, |slot, s| {
+                slot.0 = s * s + 1;
+                slot.1 = std::thread::current().name().unwrap_or("main").to_string();
+            })
+            .unwrap();
+            for (s, slot) in ws.iter().enumerate() {
+                assert_eq!(slot.0, s * s + 1, "threads={threads} shard {s}");
+                if threads > 1 {
+                    assert!(slot.1.starts_with("update-"), "unnamed worker: {}", slot.1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_recycles_workspaces() {
+        let arena: Arena<Vec<f32>> = Arena::new();
+        let mut first = arena.take(3);
+        for w in &mut first {
+            w.resize(64, 1.0);
+        }
+        let caps: Vec<usize> = first.iter().map(|w| w.capacity()).collect();
+        arena.put(first);
+        let again = arena.take(3);
+        let caps2: Vec<usize> = again.iter().map(|w| w.capacity()).collect();
+        assert_eq!(caps, caps2, "recycled buffers keep their capacity");
+        // asking for more than pooled tops up with defaults
+        arena.put(again);
+        assert_eq!(arena.take(5).len(), 5);
+    }
+
+    #[test]
+    fn zeroed_keeps_capacity() {
+        let mut v = Vec::with_capacity(128);
+        v.resize(100, 7.0f32);
+        zeroed(&mut v, 64);
+        assert_eq!(v.len(), 64);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert!(v.capacity() >= 128);
+    }
+}

@@ -149,6 +149,10 @@ pub struct ActorNet {
     updates: HashMap<usize, Arc<dyn Executable>>, // by minibatch size
     state_dim: usize,
     cache: ParamCache,
+    /// Requested PPO update worker count (0 = auto). Scoped around the
+    /// update executable call; never changes the trained bits — see
+    /// `runtime::native::update`.
+    update_threads: usize,
 }
 
 impl ActorNet {
@@ -187,7 +191,16 @@ impl ActorNet {
             updates,
             state_dim: 4 * n_ues,
             cache: ParamCache::default(),
+            update_threads: 0,
         })
+    }
+
+    /// Request a PPO update worker count (0 = auto: `MACCI_UPDATE_THREADS`,
+    /// else the machine's parallelism). Purely a scheduling knob — the
+    /// sharded update engine produces bit-identical parameters for any
+    /// worker count (`runtime::native::update`).
+    pub fn set_update_threads(&mut self, threads: usize) {
+        self.update_threads = threads;
     }
 
     /// Build the cached backend-input copy of `params` now (it is
@@ -367,19 +380,21 @@ impl ActorNet {
             .ok_or_else(|| anyhow!("no actor_update artifact for batch {b} (have {:?})", self.updates.keys()))?;
         self.t += 1;
         let n = self.params.len();
-        let mut outs = exe.call(&[
-            TensorView::f32(self.params.clone(), vec![n])?,
-            TensorView::f32(self.m.clone(), vec![n])?,
-            TensorView::f32(self.v.clone(), vec![n])?,
-            TensorView::from_scalar(self.t as f32),
-            TensorView::from_scalar(lr),
-            TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
-            TensorView::i32(a_b.to_vec(), vec![b])?,
-            TensorView::i32(a_c.to_vec(), vec![b])?,
-            TensorView::f32(a_p.to_vec(), vec![b])?,
-            TensorView::f32(old_logp.to_vec(), vec![b])?,
-            TensorView::f32(adv.to_vec(), vec![b])?,
-        ])?;
+        let mut outs = crate::runtime::native::update::with_threads(self.update_threads, || {
+            exe.call(&[
+                TensorView::f32(self.params.clone(), vec![n])?,
+                TensorView::f32(self.m.clone(), vec![n])?,
+                TensorView::f32(self.v.clone(), vec![n])?,
+                TensorView::from_scalar(self.t as f32),
+                TensorView::from_scalar(lr),
+                TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
+                TensorView::i32(a_b.to_vec(), vec![b])?,
+                TensorView::i32(a_c.to_vec(), vec![b])?,
+                TensorView::f32(a_p.to_vec(), vec![b])?,
+                TensorView::f32(old_logp.to_vec(), vec![b])?,
+                TensorView::f32(adv.to_vec(), vec![b])?,
+            ])
+        })?;
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;
@@ -408,6 +423,8 @@ pub struct CriticNet {
     updates: HashMap<usize, Arc<dyn Executable>>,
     state_dim: usize,
     cache: ParamCache,
+    /// See [`ActorNet`]: requested update worker count (0 = auto).
+    update_threads: usize,
 }
 
 impl CriticNet {
@@ -446,7 +463,13 @@ impl CriticNet {
             updates,
             state_dim: 4 * n_ues,
             cache: ParamCache::default(),
+            update_threads: 0,
         })
+    }
+
+    /// See [`ActorNet::set_update_threads`].
+    pub fn set_update_threads(&mut self, threads: usize) {
+        self.update_threads = threads;
     }
 
     /// See [`ActorNet::warm_cache`].
@@ -549,15 +572,17 @@ impl CriticNet {
             .ok_or_else(|| anyhow!("no critic_update artifact for batch {b}"))?;
         self.t += 1;
         let n = self.params.len();
-        let mut outs = exe.call(&[
-            TensorView::f32(self.params.clone(), vec![n])?,
-            TensorView::f32(self.m.clone(), vec![n])?,
-            TensorView::f32(self.v.clone(), vec![n])?,
-            TensorView::from_scalar(self.t as f32),
-            TensorView::from_scalar(lr),
-            TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
-            TensorView::f32(returns.to_vec(), vec![b])?,
-        ])?;
+        let mut outs = crate::runtime::native::update::with_threads(self.update_threads, || {
+            exe.call(&[
+                TensorView::f32(self.params.clone(), vec![n])?,
+                TensorView::f32(self.m.clone(), vec![n])?,
+                TensorView::f32(self.v.clone(), vec![n])?,
+                TensorView::from_scalar(self.t as f32),
+                TensorView::from_scalar(lr),
+                TensorView::f32(states.to_vec(), vec![b, self.state_dim])?,
+                TensorView::f32(returns.to_vec(), vec![b])?,
+            ])
+        })?;
         self.params = std::mem::take(&mut outs[0]).into_f32s()?;
         self.m = std::mem::take(&mut outs[1]).into_f32s()?;
         self.v = std::mem::take(&mut outs[2]).into_f32s()?;

@@ -14,6 +14,7 @@
 //! | `MACCI_PRECISION`          | [`precision`]            | raw spelling; parsed by `Precision` |
 //! | `MACCI_BACKEND`            | [`backend`]              | raw spelling; parsed by `default_backend` |
 //! | `MACCI_N_ENVS`             | [`n_envs`]               | rollout lanes (≥ 1) |
+//! | `MACCI_UPDATE_THREADS`     | [`update_threads`]       | PPO update workers (≥ 1) |
 //! | `MACCI_BENCH_MS`           | [`bench_ms`]             | per-case bench budget |
 //! | `MACCI_BENCH_SERVING_TASKS`| [`bench_serving_tasks`]  | serving-bench tasks per UE |
 //! | `MACCI_BENCH_LOAD_UES`     | [`bench_load_ues`]       | load-bench fleet size cap |
@@ -38,6 +39,8 @@ static PRECISION: Lazy<Option<String>> = Lazy::new(|| raw_nonempty("MACCI_PRECIS
 static BACKEND: Lazy<Option<String>> = Lazy::new(|| raw_nonempty("MACCI_BACKEND"));
 static N_ENVS: Lazy<Option<usize>> =
     Lazy::new(|| raw("MACCI_N_ENVS").and_then(|v| v.parse().ok()).filter(|&e| e >= 1));
+static UPDATE_THREADS: Lazy<Option<usize>> =
+    Lazy::new(|| raw("MACCI_UPDATE_THREADS").and_then(|v| v.parse().ok()).filter(|&t| t >= 1));
 static BENCH_MS: Lazy<Option<u64>> =
     Lazy::new(|| raw("MACCI_BENCH_MS").and_then(|v| v.parse().ok()));
 static BENCH_SERVING_TASKS: Lazy<Option<u64>> =
@@ -68,6 +71,14 @@ pub fn backend() -> Option<&'static str> {
 /// spellings fall back to `default`.
 pub fn n_envs(default: usize) -> usize {
     N_ENVS.unwrap_or(default)
+}
+
+/// `MACCI_UPDATE_THREADS`: process-default PPO update worker count, used
+/// when a net has no explicit `update_threads` request (values < 1 and
+/// unparsable spellings count as unset). Worker count never changes the
+/// trained bits — see `runtime::native::update`.
+pub fn update_threads() -> Option<usize> {
+    *UPDATE_THREADS
 }
 
 /// `MACCI_BENCH_MS`: per-case benchmark time budget in milliseconds.

@@ -150,10 +150,19 @@ impl Rng {
 
     /// k distinct indices out of [0, n) (k <= n), in random order.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..n).collect();
-        self.shuffle(&mut idx);
-        idx.truncate(k);
+        let mut idx = Vec::new();
+        self.sample_indices_into(n, k, &mut idx);
         idx
+    }
+
+    /// [`Rng::sample_indices`] into a caller-provided buffer — reads the
+    /// exact same stream positions (same shuffle of 0..n, truncated to k),
+    /// so callers can swap between the two without changing any draw.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, idx: &mut Vec<usize>) {
+        idx.clear();
+        idx.extend(0..n);
+        self.shuffle(idx);
+        idx.truncate(k);
     }
 }
 

@@ -18,7 +18,8 @@ use macci::rl::checkpoint::{self, TrainerCheckpoint};
 use macci::rl::gae;
 use macci::rl::mahppo::TrainConfig;
 use macci::rl::rollout::{EngineSnapshot, LaneSnapshot};
-use macci::runtime::nets::NetState;
+use macci::runtime::artifacts::ArtifactStore;
+use macci::runtime::nets::{ActorNet, CriticNet, NetState};
 use macci::util::check::forall;
 use macci::util::rng::Rng;
 
@@ -874,6 +875,82 @@ fn shard_view_isolates_cross_shard_traffic() {
                     Downlink::Result(r) if r.ue_id == lo + i && r.task_id == i as u64 => {}
                     other => return Err(format!("downlink {i} mangled: {other:?}")),
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// f32 slices compared as raw bit patterns — "close enough" is not the
+/// contract here, byte identity is.
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn net_states_identical(a: &NetState, b: &NetState) -> Result<(), String> {
+    if f32_bits(&a.params) != f32_bits(&b.params) {
+        return Err("params diverged".into());
+    }
+    if f32_bits(&a.m) != f32_bits(&b.m) || f32_bits(&a.v) != f32_bits(&b.v) {
+        return Err("Adam moments diverged".into());
+    }
+    if a.t != b.t {
+        return Err(format!("step counters diverged: {} vs {}", a.t, b.t));
+    }
+    Ok(())
+}
+
+#[test]
+fn update_is_thread_count_invariant() {
+    // the PR-4 contract, extended to training: for random nets and random
+    // minibatches, K epochs of PPO updates produce byte-identical params
+    // AND Adam moments whether the sharded update engine runs on 1, 2, or
+    // 4 workers — the fixed shard partition and shard-ascending reduction
+    // make worker count a pure wall-time knob
+    let store = ArtifactStore::native_demo();
+    forall(
+        61,
+        4,
+        |g| {
+            let n = g.usize_in(3, 10).clamp(3, 10);
+            let b = 256usize; // 8 shards of 32 rows, compiled for every N
+            let d = 4 * n;
+            let states = g.vec_f32(b * d, -1.0, 1.0);
+            let a_b: Vec<i32> = (0..b).map(|_| g.usize_in(0, 5) as i32).collect();
+            let a_c: Vec<i32> = (0..b).map(|_| g.usize_in(0, 1) as i32).collect();
+            let a_p = g.vec_f32(b, 0.05, 0.95);
+            let old_logp = g.vec_f32(b, -4.0, 0.0);
+            let adv = g.vec_f32(b, -1.5, 1.5);
+            let returns = g.vec_f32(b, -2.0, 0.5);
+            let epochs = g.usize_in(2, 4).clamp(2, 4);
+            let seed = g.rng.next_u64();
+            (n, states, a_b, a_c, a_p, old_logp, adv, returns, epochs, seed)
+        },
+        |(n, states, a_b, a_c, a_p, old_logp, adv, returns, epochs, seed)| {
+            let mut runs = Vec::new();
+            for w in [1usize, 2, 4] {
+                let mut actor =
+                    ActorNet::new(&store, *n, *seed).map_err(|e| format!("actor: {e}"))?;
+                let mut critic =
+                    CriticNet::new(&store, *n, seed ^ 1).map_err(|e| format!("critic: {e}"))?;
+                actor.set_update_threads(w);
+                critic.set_update_threads(w);
+                for _ in 0..*epochs {
+                    actor
+                        .update(3e-3, states, a_b, a_c, a_p, old_logp, adv)
+                        .map_err(|e| format!("actor update (w={w}): {e}"))?;
+                    critic
+                        .update(1e-2, states, returns)
+                        .map_err(|e| format!("critic update (w={w}): {e}"))?;
+                }
+                runs.push((w, actor.snapshot(), critic.snapshot()));
+            }
+            let (_, a1, c1) = &runs[0];
+            for (w, aw, cw) in &runs[1..] {
+                net_states_identical(a1, aw)
+                    .map_err(|e| format!("actor n={n} w=1 vs w={w}: {e}"))?;
+                net_states_identical(c1, cw)
+                    .map_err(|e| format!("critic n={n} w=1 vs w={w}: {e}"))?;
             }
             Ok(())
         },

@@ -62,6 +62,16 @@ fn r6_catches_anonymous_spawn() {
 }
 
 #[test]
+fn update_engine_module_is_patrolled_by_r2_and_r6() {
+    // the sharded PPO update engine lives in the R2 bit-exactness zone
+    // (prefix match under runtime::native) and, like every module, in the
+    // R6 named-threads zone — it must stay clean with zero pragmas, so
+    // both rules have to actually fire there
+    assert_eq!(rules_of("runtime::native::update", R2_BAD), ["R2", "R2"]);
+    assert_eq!(rules_of("runtime::native::update", R6_BAD), ["R6"]);
+}
+
+#[test]
 fn pragmas_suppress_each_rule_and_record_the_reason() {
     let cases = [
         ("coordinator::wire", R1_SUPPRESSED, "R1"),
