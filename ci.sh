@@ -17,6 +17,12 @@ echo "== kernel tests, forced-scalar dispatch =="
 MACCI_FORCE_SCALAR=1 cargo test -q --lib runtime::native
 MACCI_FORCE_SCALAR=1 cargo test -q --test proptests kernel_
 
+echo "== zero-alloc data plane (counting global allocator) =="
+# the steady-state serving paths must never touch the allocator
+# (DESIGN.md §Data-Plane); runs as its own step/process because the
+# counting #[global_allocator] must own the whole binary
+cargo test -q --test zero_alloc
+
 echo "== lint (repo invariants) =="
 # self-test the rule engine first, then sweep the tree; any unsuppressed
 # finding exits 1 and fails CI. Machine-readable report lands in LINT.json.

@@ -53,9 +53,7 @@ fn main() -> Result<()> {
     let actions: Vec<HybridAction> = (0..n_ues)
         .map(|i| HybridAction::new(i % (num_points + 1), i % 2, 1.0, 1.0))
         .collect();
-    let decisions = DecisionMaker::new(Box::new(StaticDecision {
-        actions: actions.clone(),
-    }));
+    let decisions = DecisionMaker::new(Box::new(StaticDecision::new(actions.clone())));
     let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(20), 10_000);
     cfg.exec.workers = workers;
     let max_batch = cfg.exec.max_batch;

@@ -40,9 +40,10 @@ fn main() -> Result<()> {
             d_max: 100.0,
         },
     );
-    let decisions = DecisionMaker::new(Box::new(StaticDecision {
-        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n_ues],
-    }));
+    let decisions = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+        HybridAction::new(0, 0, 0.0, 1.0);
+        n_ues
+    ])));
     let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(20), usize::MAX);
     cfg.exec.workers = 2;
 

@@ -11,14 +11,20 @@
 //! downlink counted (`downlink_drops` — satellite of ISSUE 8's drop
 //! audit), never silent.
 
+use std::hint::black_box;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use macci::coordinator::decision::{DecisionMaker, StaticDecision};
 use macci::coordinator::executor::{ExecutorConfig, OffloadCompute, SyntheticCompute};
+use macci::coordinator::protocol::{Downlink, FrameDecision};
 use macci::coordinator::server::ServerConfig;
 use macci::coordinator::shard::{spawn_shards, ShardMap};
 use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::coordinator::wire::{
+    encode_decision_body, encode_down_to_raw, encode_frame, encode_frame_append,
+    encode_frame_into, Frame,
+};
 use macci::env::HybridAction;
 use macci::loadgen::{run_fleet, ArrivalMode, FleetConfig};
 use macci::transport::reactor::{ReactorConfig, TcpReactor};
@@ -61,9 +67,10 @@ fn run_one(n_ues: usize, n_shards: usize, run: Duration) -> Cell {
                     d_max: 100.0,
                 },
             );
-            let dm = DecisionMaker::new(Box::new(StaticDecision {
-                actions: vec![HybridAction::new(0, 0, 0.0, 1.0); len],
-            }));
+            let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+                HybridAction::new(0, 0, 0.0, 1.0);
+                len
+            ])));
             (t, pool, dm)
         })
         .collect();
@@ -124,6 +131,88 @@ fn run_one(n_ues: usize, n_shards: usize, run: Duration) -> Cell {
     }
 }
 
+/// Data-plane micro-gauges (DESIGN.md §Data-Plane): the allocating
+/// encoder vs the reused-buffer `_into` path, and the per-subscriber
+/// re-encode fan-out vs the single-encode + raw-stamp broadcast. Pure
+/// CPU, no sockets — isolates what pooling buys before the fleet run
+/// measures it end to end.
+fn wire_gauges() -> Json {
+    const SUBS: usize = 512; // one shard's slice of a 10k-UE broadcast
+    const REPS: usize = 2_000;
+    const FAN_REPS: usize = 20;
+
+    let actions: std::sync::Arc<[HybridAction]> = (0..SUBS)
+        .map(|i| HybridAction::new(i % 5, i % 4, 0.0, 1.0))
+        .collect();
+    let d = FrameDecision { frame: 1, actions };
+    let joint = Frame::Down(Downlink::Decision(d.clone()));
+
+    // allocating: a fresh Vec per frame (the pre-pooling encoder)
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        black_box(encode_frame(&joint));
+    }
+    let alloc_per_s = REPS as f64 / t0.elapsed().as_secs_f64();
+
+    // pooled: one reused buffer, allocation-free at steady state
+    // (proven by tests/zero_alloc.rs; this gauge prices it)
+    let mut buf = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        encode_frame_into(&joint, &mut buf);
+        black_box(buf.as_slice());
+    }
+    let pooled_per_s = REPS as f64 / t0.elapsed().as_secs_f64();
+
+    // fan-out, re-encode: every subscriber pays a full body encode
+    let mut out = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..FAN_REPS {
+        for ue in 0..SUBS {
+            out.clear();
+            encode_frame_append(
+                &Frame::DownTo {
+                    ue_id: ue,
+                    down: Downlink::Decision(d.clone()),
+                },
+                &mut out,
+            );
+            black_box(out.as_slice());
+        }
+    }
+    let reencode_per_s = (FAN_REPS * SUBS) as f64 / t0.elapsed().as_secs_f64();
+
+    // fan-out, single-encode: body bytes once, then a stamp (copy + CRC)
+    // per subscriber — the reactor's broadcast path
+    let mut body = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..FAN_REPS {
+        body.clear();
+        let tag = encode_decision_body(d.frame, &d.actions, &mut body);
+        for ue in 0..SUBS {
+            out.clear();
+            encode_down_to_raw(ue, tag, &body, &mut out);
+            black_box(out.as_slice());
+        }
+    }
+    let single_per_s = (FAN_REPS * SUBS) as f64 / t0.elapsed().as_secs_f64();
+
+    println!(
+        "  wire: encode alloc {alloc_per_s:>10.0}/s vs pooled {pooled_per_s:>10.0}/s \
+         ({:.2}x) | fan-out re-encode {reencode_per_s:>9.0}/s vs single-encode \
+         {single_per_s:>9.0}/s ({:.2}x)",
+        pooled_per_s / alloc_per_s,
+        single_per_s / reencode_per_s
+    );
+    Json::obj()
+        .set("encode_alloc_frames_per_s", alloc_per_s)
+        .set("encode_pooled_frames_per_s", pooled_per_s)
+        .set("encode_pooled_speedup", pooled_per_s / alloc_per_s)
+        .set("fanout_reencode_frames_per_s", reencode_per_s)
+        .set("fanout_single_encode_frames_per_s", single_per_s)
+        .set("fanout_single_encode_speedup", single_per_s / reencode_per_s)
+}
+
 fn main() {
     let run = Duration::from_millis(macci::util::config::bench_ms(1500));
     let big = macci::util::config::bench_load_ues(10_000) as usize;
@@ -136,6 +225,7 @@ fn main() {
         fleets
     );
     let mut json = Json::obj();
+    json = json.set("wire", wire_gauges());
     for &n_ues in &fleets {
         for &shards in &[1usize, 2, 4] {
             let c = run_one(n_ues, shards, run);

@@ -22,8 +22,18 @@ use macci::util::json::Json;
 
 const ITEM_COST: Duration = Duration::from_micros(500);
 
-/// One serving run; returns end-to-end throughput in requests/s.
-fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
+/// One serving run; returns end-to-end throughput in requests/s plus the
+/// offload-cache counters. `cache_entries` sizes the content-addressed
+/// result cache (0 = off); `distinct` > 0 draws each task's payload from
+/// that many distinct contents (shared across UEs), so the steady-state
+/// hit ratio approaches `1 - distinct / total_tasks`.
+fn run_one(
+    n_ues: usize,
+    workers: usize,
+    tasks_per_ue: u64,
+    cache_entries: usize,
+    distinct: u64,
+) -> (f64, macci::coordinator::offload_cache::CacheStats) {
     let compute = Arc::new(SyntheticCompute::new(ITEM_COST));
     let elems = compute.image_elems;
     let pool = StatePool::new(
@@ -35,10 +45,12 @@ fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
             d_max: 100.0,
         },
     );
-    let decisions = DecisionMaker::new(Box::new(StaticDecision {
-        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n_ues],
-    }));
+    let decisions = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+        HybridAction::new(0, 0, 0.0, 1.0);
+        n_ues
+    ])));
     let mut cfg = ServerConfig::new(n_ues, Duration::from_millis(10), usize::MAX);
+    cfg.offload_cache = cache_entries;
     cfg.exec = ExecutorConfig {
         workers,
         max_batch: 8,
@@ -66,12 +78,20 @@ fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
                     }))
                     .unwrap();
                 for task in 0..tasks_per_ue {
+                    // distinct = 0 keeps the original constant payload;
+                    // otherwise rotate through `distinct` contents so the
+                    // offload cache sees a controlled duplicate ratio
+                    let fill = if distinct == 0 {
+                        1u8
+                    } else {
+                        (task % distinct.min(250)) as u8 + 1
+                    };
                     uplink
                         .send(Uplink::Offload(OffloadRequest {
                             ue_id: ue,
                             task_id: task,
                             b: 0,
-                            payload: vec![1u8; 4 * elems],
+                            payload: vec![fill; 4 * elems],
                             calibration: None,
                         }))
                         .unwrap();
@@ -95,7 +115,7 @@ fn run_one(n_ues: usize, workers: usize, tasks_per_ue: u64) -> f64 {
     let wall = t0.elapsed().as_secs_f64();
     let total = n_ues as u64 * tasks_per_ue;
     assert_eq!(stats.offloads_served as u64, total, "bench run lost tasks");
-    total as f64 / wall
+    (total as f64 / wall, stats.cache)
 }
 
 fn main() {
@@ -110,8 +130,8 @@ fn main() {
     );
     let mut json = Json::obj();
     for &n_ues in &[1usize, 4, 16] {
-        let inline = run_one(n_ues, 0, tasks);
-        let pooled = run_one(n_ues, pooled_workers, tasks);
+        let (inline, _) = run_one(n_ues, 0, tasks, 0, 0);
+        let (pooled, _) = run_one(n_ues, pooled_workers, tasks, 0, 0);
         println!(
             "  {n_ues:>2} UEs: inline-serial {inline:>8.1} req/s | \
              pooled-batched {pooled:>8.1} req/s | speedup {:.2}x",
@@ -127,6 +147,35 @@ fn main() {
                 Json::obj().set("req_per_s", pooled),
             )
             .set(&format!("serving/speedup_ues{n_ues}"), pooled / inline);
+    }
+
+    // offload-cache sweep: the same closed-loop run, 4 UEs × pooled
+    // executor, with the payload pool shrunk so the duplicate ratio (and
+    // thus the hit ratio) climbs — the uncached row is the baseline
+    let sweep_ues = 4usize;
+    let (baseline, _) = run_one(sweep_ues, pooled_workers, tasks, 0, 8);
+    json = json.set(
+        "serving/cache_off_distinct8",
+        Json::obj().set("req_per_s", baseline),
+    );
+    for &distinct in &[64u64, 8, 1] {
+        let (rate, cache) = run_one(sweep_ues, pooled_workers, tasks, 256, distinct);
+        let lookups = cache.hits + cache.misses;
+        let hit_ratio = cache.hits as f64 / (lookups.max(1)) as f64;
+        println!(
+            "  cache sweep ({sweep_ues} UEs, {distinct:>2} distinct payloads): \
+             {rate:>8.1} req/s | hit ratio {:.2} | {} hits / {} misses",
+            hit_ratio, cache.hits, cache.misses
+        );
+        json = json.set(
+            &format!("serving/cache_distinct{distinct}"),
+            Json::obj()
+                .set("req_per_s", rate)
+                .set("hit_ratio", hit_ratio)
+                .set("hits", cache.hits as usize)
+                .set("misses", cache.misses as usize)
+                .set("bytes_saved", cache.bytes_saved as usize),
+        );
     }
     json.write_file("BENCH_serving.json").unwrap();
     println!("wrote BENCH_serving.json");

@@ -54,7 +54,7 @@ fn report_frame() -> Frame {
 fn decision_frame(n_ues: usize) -> Frame {
     Frame::Down(Downlink::Decision(FrameDecision {
         frame: 7,
-        actions: vec![HybridAction::new(2, 1, 0.3, 1.0); n_ues],
+        actions: vec![HybridAction::new(2, 1, 0.3, 1.0); n_ues].into(),
     }))
 }
 

@@ -24,7 +24,10 @@ use crate::util::sync::lock_unpoisoned;
 
 /// A serving-time decision source.
 pub trait DecisionSource: Send {
-    fn decide(&mut self, state: &[f32]) -> Result<Vec<HybridAction>>;
+    /// The joint action for one frame. Shared, not owned: a fixed policy
+    /// returns the same `Arc` every tick (a refcount bump, no copy), and
+    /// the broadcast path clones it for free however many UEs subscribe.
+    fn decide(&mut self, state: &[f32]) -> Result<Arc<[HybridAction]>>;
 
     /// Install a published policy snapshot. `Ok(true)` means the source
     /// now serves the new policy; the default `Ok(false)` means this
@@ -124,7 +127,7 @@ impl ActorDecision {
 }
 
 impl DecisionSource for ActorDecision {
-    fn decide(&mut self, state: &[f32]) -> Result<Vec<HybridAction>> {
+    fn decide(&mut self, state: &[f32]) -> Result<Arc<[HybridAction]>> {
         let mut out = Vec::with_capacity(self.actors.len());
         for actor in self.actors.iter_mut() {
             let o = actor.forward(state)?;
@@ -136,7 +139,7 @@ impl DecisionSource for ActorDecision {
                 self.p_max,
             ));
         }
-        Ok(out)
+        Ok(out.into())
     }
 
     /// Swap in new actor parameter vectors. All-or-nothing: lengths are
@@ -164,14 +167,25 @@ impl DecisionSource for ActorDecision {
     }
 }
 
-/// A fixed decision (Local / FixedSplit serving baselines).
+/// A fixed decision (Local / FixedSplit serving baselines). The joint
+/// action is held behind an `Arc`, so every broadcast tick hands out the
+/// same allocation — cloning the full vector per tick (the old behavior)
+/// made the fixed baselines pay a per-frame copy that scaled with N.
 pub struct StaticDecision {
-    pub actions: Vec<HybridAction>,
+    pub actions: Arc<[HybridAction]>,
+}
+
+impl StaticDecision {
+    pub fn new(actions: impl Into<Arc<[HybridAction]>>) -> StaticDecision {
+        StaticDecision {
+            actions: actions.into(),
+        }
+    }
 }
 
 impl DecisionSource for StaticDecision {
-    fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
-        Ok(self.actions.clone())
+    fn decide(&mut self, _state: &[f32]) -> Result<Arc<[HybridAction]>> {
+        Ok(Arc::clone(&self.actions))
     }
 }
 
@@ -317,7 +331,7 @@ mod tests {
     #[test]
     fn static_source_numbers_frames() {
         let a = vec![HybridAction::new(5, 0, 0.0, 1.0); 3];
-        let mut dm = DecisionMaker::new(Box::new(StaticDecision { actions: a }));
+        let mut dm = DecisionMaker::new(Box::new(StaticDecision::new(a)));
         let d0 = dm.next_decision(&[0.0; 12]).unwrap();
         let d1 = dm.next_decision(&[0.0; 12]).unwrap();
         assert_eq!(d0.frame, 0);
@@ -327,16 +341,33 @@ mod tests {
     }
 
     #[test]
+    fn static_source_shares_one_allocation_across_ticks() {
+        // the per-tick cost must be a refcount bump, not a vector clone:
+        // every decision hands out the SAME allocation, with unchanged
+        // contents (behavior-identical to the old cloning path)
+        let a = vec![HybridAction::new(5, 0, 0.0, 1.0); 4];
+        let mut dm = DecisionMaker::new(Box::new(StaticDecision::new(a.clone())));
+        let d0 = dm.next_decision(&[0.0; 12]).unwrap();
+        let d1 = dm.next_decision(&[0.0; 12]).unwrap();
+        assert!(
+            Arc::ptr_eq(&d0.actions, &d1.actions),
+            "ticks must share one allocation"
+        );
+        assert_eq!(&d0.actions[..], &a[..], "shared actions must match the baseline");
+        assert_eq!(d0.actions, d1.actions);
+    }
+
+    #[test]
     fn swap_to_static_source_is_ignored_not_fatal() {
         let a = vec![HybridAction::new(5, 0, 0.0, 1.0); 2];
-        let mut dm = DecisionMaker::new(Box::new(StaticDecision { actions: a.clone() }));
+        let mut dm = DecisionMaker::new(Box::new(StaticDecision::new(a.clone())));
         let handle = dm.policy_handle();
         assert!(handle.publish(PolicySnapshot {
             version: 1,
             actors: vec![vec![0.0; 4]; 2],
         }));
         let d = dm.next_decision(&[0.0; 8]).unwrap();
-        assert_eq!(d.actions, a, "static decisions unchanged");
+        assert_eq!(&d.actions[..], &a[..], "static decisions unchanged");
         assert_eq!(dm.swaps_applied(), 0);
         assert_eq!(dm.swap_errors(), 0);
         assert_eq!(dm.policy_version(), None);
@@ -344,7 +375,7 @@ mod tests {
 
     #[test]
     fn publish_after_maker_drop_reports_failure() {
-        let dm = DecisionMaker::new(Box::new(StaticDecision { actions: vec![] }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![])));
         let handle = dm.policy_handle();
         drop(dm);
         assert!(!handle.publish(PolicySnapshot {
@@ -358,8 +389,8 @@ mod tests {
     struct Swappable;
 
     impl DecisionSource for Swappable {
-        fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
-            Ok(vec![])
+        fn decide(&mut self, _state: &[f32]) -> Result<Arc<[HybridAction]>> {
+            Ok(vec![].into())
         }
         fn install(&mut self, _snap: &PolicySnapshot) -> Result<bool> {
             Ok(true)

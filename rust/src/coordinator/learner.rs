@@ -47,8 +47,10 @@ pub struct TelemetryFrame {
     pub frame: usize,
     /// The assembled state-pool vector the decision was computed from.
     pub state: Vec<f32>,
-    /// The joint action that was broadcast.
-    pub actions: Vec<HybridAction>,
+    /// The joint action that was broadcast — the same shared slice the
+    /// decision maker produced (exporting telemetry clones an `Arc`, not
+    /// the action vector).
+    pub actions: std::sync::Arc<[HybridAction]>,
 }
 
 /// Online-learning knobs. Defaults are sized for a serving loop: small
@@ -258,7 +260,7 @@ impl Learner {
             Vec::with_capacity(n),
             Vec::with_capacity(n),
         );
-        for (actor, a) in self.actors.iter_mut().zip(&f.actions) {
+        for (actor, a) in self.actors.iter_mut().zip(f.actions.iter()) {
             let out = actor.forward(&f.state)?;
             let b = a.b.min(out.probs_b.len() - 1);
             let c = a.c.min(out.probs_c.len() - 1);
@@ -397,9 +399,10 @@ mod tests {
         let buffer = cfg.buffer_size;
 
         // a throwaway maker supplies the swap channel end to observe
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            n
+        ])));
         let handle = dm.policy_handle();
 
         let (tx, rx) = channel();
@@ -408,7 +411,7 @@ mod tests {
         let mut rng = Rng::new(5);
         for frame in 0..2 * buffer {
             let state: Vec<f32> = (0..4 * n).map(|_| rng.f32()).collect();
-            let actions: Vec<HybridAction> = (0..n)
+            let actions: std::sync::Arc<[HybridAction]> = (0..n)
                 .map(|_| HybridAction::new(rng.below(6), rng.below(2), rng.normal() as f32, 1.0))
                 .collect();
             tx.send(TelemetryFrame {
@@ -436,9 +439,10 @@ mod tests {
         let mut cfg = LearnerConfig::for_store(&store, 3).unwrap();
         cfg.buffer_size = cfg.minibatch + 1; // not a multiple
         let (_tx, rx) = channel();
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 3],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            3
+        ])));
         assert!(spawn(&store, &profile, &sc, cfg, None, rx, dm.policy_handle()).is_err());
 
         let mut cfg = LearnerConfig::for_store(&store, 3).unwrap();

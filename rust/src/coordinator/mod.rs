@@ -25,6 +25,10 @@
 //!   raw-input offloads (flush policy + batch runner).
 //! * [`executor`] — the offload executor: a worker pool serving offloads
 //!   off the server thread, with the batcher wired into its dispatch side.
+//! * [`offload_cache`] — a bounded-LRU content-addressed result cache
+//!   consulted before the executor: identical payloads under the same
+//!   (partition, calibration) key are served from memory, bit-identical
+//!   to a recompute (DESIGN.md §Data-Plane).
 //! * [`server`] — the threaded event loop tying it together (std threads +
 //!   mpsc; tokio is unavailable in the offline build).
 //! * [`shard`] — fleet-scale serving: a contiguous ue-id ownership map,
@@ -37,6 +41,7 @@ pub mod decision;
 pub mod executor;
 pub mod inference;
 pub mod learner;
+pub mod offload_cache;
 pub mod protocol;
 pub mod server;
 pub mod shard;

@@ -1,0 +1,531 @@
+//! Content-addressed offload result cache (DESIGN.md §Data-Plane,
+//! ROADMAP item 5's `EdgeCache` shape).
+//!
+//! Identical offloads recur constantly in the paper's regime — a fleet of
+//! UEs sampling the same task distribution re-sends byte-identical
+//! payloads at the same partition point — yet every one costs a full
+//! back-model pass. This cache short-circuits them: results are keyed on
+//! **content**, `(partition point b, calibration bits, payload bytes)`,
+//! so a hit is *bit-identical* to a recompute by construction (same
+//! deterministic compute, same inputs), never "close enough".
+//!
+//! Layout:
+//!
+//! * The hashed **key head** — FNV-1a 64 of the payload, its length, `b`,
+//!   and the calibration `f32::to_bits` pair — addresses a bucket; the
+//!   stored payload bytes are then compared in full, so a forced hash
+//!   collision degrades to a miss, never a wrong result (property-tested
+//!   in `rust/tests/proptests.rs`).
+//! * Entries live in a slab threaded onto a doubly-linked LRU list;
+//!   capacity is enforced by evicting the tail. Evicted payload buffers
+//!   return to a [`FramePool`], so a churning cache recycles its buffers
+//!   instead of re-allocating per insert.
+//! * Results are inserted when a completion arrives, via a **bounded**
+//!   pending map noted at submit time (an unbounded in-flight map would
+//!   be a memory hole under an offload flood).
+//!
+//! Single-threaded by design: the cache is owned by one `server_loop`
+//! (one per shard), consulted before the executor — no lock anywhere.
+
+use std::collections::HashMap;
+
+use super::protocol::{InferenceResult, OffloadRequest};
+use super::wire::FramePool;
+
+/// Pending-insert notes retained at once, as a multiple of the cache
+/// capacity (in-flight offloads beyond this simply go uncached).
+const PENDING_FACTOR: usize = 2;
+
+/// FNV-1a 64-bit — the hand-rolled content hash (no external deps; the
+/// full-key byte compare backstops its collisions).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The hashed head of a cache key: everything *except* the payload bytes
+/// themselves. Two requests with equal heads are only the same entry if
+/// their payloads also compare equal byte-for-byte — the head addresses,
+/// the bytes decide.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KeyHead {
+    /// FNV-1a 64 of the payload bytes.
+    pub payload_hash: u64,
+    pub payload_len: usize,
+    /// Partition point (0 = raw input, 1..=4 = AE-coded cut).
+    pub b: usize,
+    /// AE calibration as exact bit patterns (`f32::to_bits`), `None` for
+    /// raw offloads — bitwise, so `-0.0` vs `0.0` or NaN payloads can
+    /// never alias across calibrations.
+    pub calibration: Option<(u32, u32)>,
+}
+
+/// Build the key head for one request's identifying fields.
+#[doc(hidden)]
+pub fn key_head(b: usize, calibration: Option<(f32, f32)>, payload: &[u8]) -> KeyHead {
+    KeyHead {
+        payload_hash: fnv1a64(payload),
+        payload_len: payload.len(),
+        b,
+        calibration: calibration.map(|(lo, hi)| (lo.to_bits(), hi.to_bits())),
+    }
+}
+
+/// Cache counters, folded into `ServerStats::cache` after shutdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups served from memory (the executor never saw the request).
+    pub hits: u64,
+    /// Lookups that fell through to compute.
+    pub misses: u64,
+    /// Results inserted after a completed compute.
+    pub insertions: u64,
+    /// Entries evicted by the LRU capacity bound.
+    pub evictions: u64,
+    /// Payload bytes whose edge compute was skipped (sum over hits).
+    pub bytes_saved: u64,
+}
+
+/// One cached result plus its LRU threading.
+struct Entry {
+    head: KeyHead,
+    /// The full payload bytes — the collision backstop.
+    payload: Vec<u8>,
+    logits: Vec<f32>,
+    argmax: usize,
+    edge_latency_s: f64,
+    prev: Option<usize>,
+    next: Option<usize>,
+}
+
+/// An offload noted at submit time, awaiting its completion.
+struct Pending {
+    head: KeyHead,
+    payload: Vec<u8>,
+}
+
+/// Bounded-LRU content-addressed offload result cache. `cap` = 0
+/// disables every operation (today's recompute-always behavior at zero
+/// cost: one branch per call).
+pub struct OffloadCache {
+    cap: usize,
+    /// `head → slab indices` (a tiny chain: only true hash collisions
+    /// share a bucket).
+    map: HashMap<KeyHead, Vec<usize>>,
+    slots: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    /// Most-recently-used end of the LRU list.
+    lru_head: Option<usize>,
+    /// Eviction end.
+    lru_tail: Option<usize>,
+    len: usize,
+    /// In-flight (ue_id, task_id) → key + payload copy, bounded by
+    /// `PENDING_FACTOR * cap`.
+    pending: HashMap<(usize, u64), Pending>,
+    /// Recycler for payload buffers (insert copies in, eviction puts
+    /// back) — a churning cache stops allocating once warm.
+    pool: FramePool,
+    stats: CacheStats,
+}
+
+impl OffloadCache {
+    pub fn new(cap: usize) -> OffloadCache {
+        OffloadCache {
+            cap,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            lru_head: None,
+            lru_tail: None,
+            len: 0,
+            pending: HashMap::new(),
+            pool: FramePool::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Whether lookups can ever hit (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look one request up. A hit rebuilds the stored result under the
+    /// requester's `(ue_id, task_id)` — logits, argmax and latency are
+    /// the cached compute's exact values — and refreshes LRU order.
+    pub fn lookup(&mut self, req: &OffloadRequest) -> Option<InferenceResult> {
+        if self.cap == 0 {
+            return None;
+        }
+        let head = key_head(req.b, req.calibration, &req.payload);
+        self.lookup_keyed(head, &req.payload, req.ue_id, req.task_id)
+    }
+
+    /// [`OffloadCache::lookup`] with a caller-supplied head — exposed so
+    /// collision tests can force two different payloads onto one head and
+    /// prove the byte compare still separates them.
+    #[doc(hidden)]
+    pub fn lookup_keyed(
+        &mut self,
+        head: KeyHead,
+        payload: &[u8],
+        ue_id: usize,
+        task_id: u64,
+    ) -> Option<InferenceResult> {
+        if self.cap == 0 {
+            return None;
+        }
+        let found = self.map.get(&head).and_then(|chain| {
+            chain.iter().copied().find(|&i| {
+                self.slots
+                    .get(i)
+                    .and_then(Option::as_ref)
+                    .is_some_and(|e| e.payload == payload)
+            })
+        });
+        let Some(i) = found else {
+            self.stats.misses += 1;
+            return None;
+        };
+        self.detach(i);
+        self.push_front(i);
+        self.stats.hits += 1;
+        self.stats.bytes_saved += payload.len() as u64;
+        let e = self.slots.get(i).and_then(Option::as_ref)?;
+        Some(InferenceResult {
+            ue_id,
+            task_id,
+            logits: e.logits.clone(),
+            argmax: e.argmax,
+            edge_latency_s: e.edge_latency_s,
+        })
+    }
+
+    /// Note an in-flight offload so its completion can be inserted.
+    /// Bounded: once `PENDING_FACTOR * cap` notes are outstanding, new
+    /// offloads simply go uncached.
+    pub fn note_pending(&mut self, req: &OffloadRequest) {
+        if self.cap == 0 || self.pending.len() >= PENDING_FACTOR * self.cap {
+            return;
+        }
+        let head = key_head(req.b, req.calibration, &req.payload);
+        let mut payload = self.pool.get(req.payload.len());
+        payload.extend_from_slice(&req.payload);
+        self.pending.insert((req.ue_id, req.task_id), Pending { head, payload });
+    }
+
+    /// Settle the pending note for `(ue_id, task_id)`: insert the result
+    /// on success, recycle the payload copy on failure. A completion with
+    /// no note (cache off, note bound hit) is a no-op.
+    pub fn complete(&mut self, ue_id: usize, task_id: u64, result: Option<&InferenceResult>) {
+        let Some(p) = self.pending.remove(&(ue_id, task_id)) else {
+            return;
+        };
+        match result {
+            Some(r) => self.insert_keyed(p.head, p.payload, r),
+            None => self.pool.put(p.payload),
+        }
+    }
+
+    /// Insert one computed result (takes ownership of the payload copy).
+    /// Re-inserting an existing key only refreshes its LRU position.
+    #[doc(hidden)]
+    pub fn insert_keyed(&mut self, head: KeyHead, payload: Vec<u8>, result: &InferenceResult) {
+        if self.cap == 0 {
+            self.pool.put(payload);
+            return;
+        }
+        // already cached (a duplicate completed while this one was in
+        // flight)? refresh recency, recycle the copy, done
+        let existing = self.map.get(&head).and_then(|chain| {
+            chain.iter().copied().find(|&i| {
+                self.slots
+                    .get(i)
+                    .and_then(Option::as_ref)
+                    .is_some_and(|e| e.payload == payload)
+            })
+        });
+        if let Some(i) = existing {
+            self.detach(i);
+            self.push_front(i);
+            self.pool.put(payload);
+            return;
+        }
+        while self.len >= self.cap {
+            self.evict_tail();
+        }
+        let entry = Entry {
+            head,
+            payload,
+            logits: result.logits.clone(),
+            argmax: result.argmax,
+            edge_latency_s: result.edge_latency_s,
+            prev: None,
+            next: None,
+        };
+        let i = match self.free.pop() {
+            Some(i) => {
+                if let Some(slot) = self.slots.get_mut(i) {
+                    *slot = Some(entry);
+                }
+                i
+            }
+            None => {
+                self.slots.push(Some(entry));
+                self.slots.len() - 1
+            }
+        };
+        self.map.entry(head).or_default().push(i);
+        self.push_front(i);
+        self.len += 1;
+        self.stats.insertions += 1;
+    }
+
+    /// Unlink slab index `i` from the LRU list (no-op if absent).
+    fn detach(&mut self, i: usize) {
+        let Some((prev, next)) = self
+            .slots
+            .get(i)
+            .and_then(Option::as_ref)
+            .map(|e| (e.prev, e.next))
+        else {
+            return;
+        };
+        match prev {
+            Some(p) => {
+                if let Some(Some(e)) = self.slots.get_mut(p) {
+                    e.next = next;
+                }
+            }
+            None => self.lru_head = next,
+        }
+        match next {
+            Some(n) => {
+                if let Some(Some(e)) = self.slots.get_mut(n) {
+                    e.prev = prev;
+                }
+            }
+            None => self.lru_tail = prev,
+        }
+        if let Some(Some(e)) = self.slots.get_mut(i) {
+            e.prev = None;
+            e.next = None;
+        }
+    }
+
+    /// Link slab index `i` in as most-recently-used.
+    fn push_front(&mut self, i: usize) {
+        let old = self.lru_head;
+        if let Some(Some(e)) = self.slots.get_mut(i) {
+            e.prev = None;
+            e.next = old;
+        }
+        if let Some(h) = old {
+            if let Some(Some(e)) = self.slots.get_mut(h) {
+                e.prev = Some(i);
+            }
+        }
+        self.lru_head = Some(i);
+        if self.lru_tail.is_none() {
+            self.lru_tail = Some(i);
+        }
+    }
+
+    /// Evict the least-recently-used entry, recycling its payload buffer.
+    fn evict_tail(&mut self) {
+        let Some(t) = self.lru_tail else {
+            return;
+        };
+        self.detach(t);
+        let Some(entry) = self.slots.get_mut(t).and_then(Option::take) else {
+            return;
+        };
+        if let Some(chain) = self.map.get_mut(&entry.head) {
+            chain.retain(|&i| i != t);
+            if chain.is_empty() {
+                self.map.remove(&entry.head);
+            }
+        }
+        self.pool.put(entry.payload);
+        self.free.push(t);
+        self.len -= 1;
+        self.stats.evictions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(ue_id: usize, task_id: u64, b: usize, payload: &[u8]) -> OffloadRequest {
+        OffloadRequest {
+            ue_id,
+            task_id,
+            b,
+            payload: payload.to_vec(),
+            calibration: if b >= 1 { Some((-1.0, 1.0)) } else { None },
+        }
+    }
+
+    fn result_for(r: &OffloadRequest, salt: f32) -> InferenceResult {
+        InferenceResult {
+            ue_id: r.ue_id,
+            task_id: r.task_id,
+            logits: vec![salt, salt + 1.0, salt + 2.0],
+            argmax: 2,
+            edge_latency_s: 0.004,
+        }
+    }
+
+    /// note → complete → lookup under a new (ue, task) serves the exact
+    /// stored numbers, re-addressed to the requester.
+    #[test]
+    fn hit_replays_the_stored_result_for_a_new_requester() {
+        let mut cache = OffloadCache::new(4);
+        let a = req(0, 1, 2, b"payload-bytes");
+        cache.note_pending(&a);
+        assert!(cache.lookup(&a).is_none(), "cold cache must miss");
+        cache.complete(0, 1, Some(&result_for(&a, 5.0)));
+        assert_eq!(cache.len(), 1);
+
+        let b = req(3, 99, 2, b"payload-bytes"); // different UE, same content
+        let hit = cache.lookup(&b).expect("identical content must hit");
+        assert_eq!(hit.ue_id, 3);
+        assert_eq!(hit.task_id, 99);
+        assert_eq!(hit.logits, vec![5.0, 6.0, 7.0]);
+        assert_eq!(hit.argmax, 2);
+        assert_eq!(hit.edge_latency_s, 0.004);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert_eq!(s.bytes_saved, b"payload-bytes".len() as u64);
+    }
+
+    /// Same payload, different partition point or calibration: distinct
+    /// keys, no cross-serving.
+    #[test]
+    fn partition_and_calibration_partition_the_key_space() {
+        let mut cache = OffloadCache::new(8);
+        let a = req(0, 1, 1, b"shared");
+        cache.note_pending(&a);
+        cache.complete(0, 1, Some(&result_for(&a, 1.0)));
+
+        let other_b = req(0, 2, 2, b"shared");
+        assert!(cache.lookup(&other_b).is_none(), "different b must miss");
+        let mut other_cal = req(0, 3, 1, b"shared");
+        other_cal.calibration = Some((-1.0, 1.5));
+        assert!(cache.lookup(&other_cal).is_none(), "different calibration must miss");
+        let raw = req(0, 4, 0, b"shared");
+        assert!(cache.lookup(&raw).is_none(), "raw (no calibration) must miss");
+    }
+
+    /// Two payloads forced onto one key head (a simulated FNV collision)
+    /// stay separate entries: the full byte compare decides.
+    #[test]
+    fn forced_head_collision_still_misses_on_byte_compare() {
+        let mut cache = OffloadCache::new(8);
+        let shared = key_head(1, Some((-1.0, 1.0)), b"aaaa");
+        let r1 = InferenceResult {
+            ue_id: 0,
+            task_id: 1,
+            logits: vec![1.0],
+            argmax: 0,
+            edge_latency_s: 0.001,
+        };
+        cache.insert_keyed(shared, b"aaaa".to_vec(), &r1);
+        // same head, different bytes: must MISS, never serve r1
+        assert!(cache.lookup_keyed(shared, b"bbbb", 5, 50).is_none());
+        // and inserting the second under the same head keeps both
+        let r2 = InferenceResult {
+            ue_id: 0,
+            task_id: 2,
+            logits: vec![2.0],
+            argmax: 0,
+            edge_latency_s: 0.002,
+        };
+        cache.insert_keyed(shared, b"bbbb".to_vec(), &r2);
+        assert_eq!(cache.len(), 2);
+        let h1 = cache.lookup_keyed(shared, b"aaaa", 9, 90).expect("first entry");
+        assert_eq!(h1.logits, vec![1.0]);
+        let h2 = cache.lookup_keyed(shared, b"bbbb", 9, 91).expect("second entry");
+        assert_eq!(h2.logits, vec![2.0]);
+    }
+
+    /// Capacity evicts least-recently-used first; a lookup refreshes
+    /// recency; eviction recycles payload buffers through the pool.
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let mut cache = OffloadCache::new(2);
+        for (t, p) in [(1u64, b"one!"), (2, b"two!")] {
+            let r = req(0, t, 0, p);
+            cache.note_pending(&r);
+            cache.complete(0, t, Some(&result_for(&r, t as f32)));
+        }
+        // touch "one!" so "two!" is the LRU tail
+        assert!(cache.lookup(&req(0, 10, 0, b"one!")).is_some());
+        let r3 = req(0, 3, 0, b"three");
+        cache.note_pending(&r3);
+        cache.complete(0, 3, Some(&result_for(&r3, 3.0)));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.lookup(&req(0, 11, 0, b"one!")).is_some(), "refreshed entry survives");
+        assert!(cache.lookup(&req(0, 12, 0, b"two!")).is_none(), "LRU tail was evicted");
+        assert!(cache.lookup(&req(0, 13, 0, b"three")).is_some());
+        let (pool_hits, _) = (cache.pool.stats().0, ());
+        assert!(pool_hits >= 1, "evicted buffers must recycle through the pool");
+    }
+
+    /// cap = 0 disables everything — no notes, no inserts, no hits.
+    #[test]
+    fn zero_capacity_is_fully_off() {
+        let mut cache = OffloadCache::new(0);
+        assert!(!cache.enabled());
+        let a = req(0, 1, 0, b"x");
+        cache.note_pending(&a);
+        cache.complete(0, 1, Some(&result_for(&a, 1.0)));
+        assert!(cache.lookup(&a).is_none());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    /// Failed completions recycle the note without inserting; the pending
+    /// map is bounded by `PENDING_FACTOR * cap`.
+    #[test]
+    fn failures_and_floods_never_grow_state() {
+        let mut cache = OffloadCache::new(2);
+        let a = req(0, 1, 0, b"will-fail");
+        cache.note_pending(&a);
+        cache.complete(0, 1, None);
+        assert_eq!(cache.len(), 0);
+        assert!(cache.lookup(&req(0, 2, 0, b"will-fail")).is_none());
+        // flood the pending map: it must stop at the bound
+        for t in 0..100u64 {
+            cache.note_pending(&req(0, t + 10, 0, &t.to_le_bytes()));
+        }
+        assert!(cache.pending.len() <= PENDING_FACTOR * 2, "pending map must stay bounded");
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

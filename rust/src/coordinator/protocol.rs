@@ -7,6 +7,8 @@
 //! tests, or real TCP sockets using the byte-level codec in
 //! [`super::wire`] (frame layouts in DESIGN.md §Wire-Protocol).
 
+use std::sync::Arc;
+
 use crate::env::HybridAction;
 
 /// Reserved `task_id` for session-level [`Downlink::Error`] frames
@@ -29,11 +31,15 @@ pub struct UeStateReport {
 }
 
 /// The decision broadcast for one frame.
+///
+/// The joint action is shared (`Arc<[..]>`), not owned: a fleet broadcast
+/// clones the decision once per transport hop for the price of a refcount
+/// bump, instead of copying the full action vector per UE per tick.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrameDecision {
     pub frame: usize,
     /// One hybrid action per UE, indexed by ue_id.
-    pub actions: Vec<HybridAction>,
+    pub actions: Arc<[HybridAction]>,
 }
 
 /// An offloaded payload arriving at the edge.

@@ -31,7 +31,8 @@ use anyhow::Result;
 use super::decision::DecisionMaker;
 use super::executor::{Completion, ExecutorConfig, ExecutorStats, OffloadCompute, OffloadExecutor};
 use super::learner::TelemetryFrame;
-use super::protocol::{Downlink, FrameDecision, UeStateReport, Uplink};
+use super::offload_cache::{CacheStats, OffloadCache};
+use super::protocol::{Downlink, UeStateReport, Uplink};
 use super::state_pool::StatePool;
 use crate::env::mdp::MultiAgentEnv;
 use crate::env::{Action, HybridAction};
@@ -64,6 +65,10 @@ pub struct ServerStats {
     /// Executor counters (queue depth / queue wait / batch occupancy);
     /// default-zero when serving ran inline on the server thread.
     pub exec: ExecutorStats,
+    /// Content-addressed offload cache counters (hits / misses / bytes
+    /// saved / evictions); default-zero when the cache is off
+    /// (`ServerConfig::offload_cache` = 0).
+    pub cache: CacheStats,
 }
 
 /// Handle to a running edge server on the in-process channel transport.
@@ -135,6 +140,12 @@ pub struct ServerConfig {
     /// thousands of churning UEs the pool is essentially never complete,
     /// and stale slots are served their last-known state.
     pub decide_on_partial: bool,
+    /// Capacity (entries) of the content-addressed offload result cache
+    /// consulted before the executor: identical payloads under the same
+    /// (partition, calibration) key are served from memory, bit-identical
+    /// to a recompute. 0 disables the cache (the historical behavior).
+    /// Defaults to `MACCI_OFFLOAD_CACHE` (see [`crate::util::config`]).
+    pub offload_cache: usize,
 }
 
 impl ServerConfig {
@@ -149,6 +160,7 @@ impl ServerConfig {
             per_ue_decisions: false,
             exit_when_empty: true,
             decide_on_partial: false,
+            offload_cache: crate::util::config::offload_cache(),
         }
     }
 }
@@ -218,17 +230,26 @@ impl EdgeServer {
 }
 
 /// Send a finished offload to its owner — a `Result` on success, an
-/// `Error` NACK on failure (the owner must never wait forever).
-fn route_completion(c: Completion, transport: &mut dyn ServerTransport, stats: &mut ServerStats) {
+/// `Error` NACK on failure (the owner must never wait forever). Successes
+/// also settle the cache's pending note for this task, so identical
+/// future payloads are served from memory.
+fn route_completion(
+    c: Completion,
+    transport: &mut dyn ServerTransport,
+    stats: &mut ServerStats,
+    cache: &mut OffloadCache,
+) {
     match c.outcome {
         Ok(result) => {
             stats.offloads_served += 1;
             stats.edge_compute_s += result.edge_latency_s;
+            cache.complete(c.ue_id, c.task_id, Some(&result));
             let ue_id = result.ue_id;
             transport.send_to(ue_id, Downlink::Result(result));
         }
         Err(e) => {
             stats.offload_errors += 1;
+            cache.complete(c.ue_id, c.task_id, None);
             log::error!("offload task {} from UE {}: {e:#}", c.task_id, c.ue_id);
             transport.send_to(
                 c.ue_id,
@@ -250,6 +271,9 @@ pub(crate) fn server_loop(
 ) -> ServerStats {
     let mut stats = ServerStats::default();
     let mut alive: HashMap<usize, bool> = (0..cfg.n_ues).map(|i| (i, true)).collect();
+    let mut cache = OffloadCache::new(cfg.offload_cache);
+    // reused (ue, action-index) target scratch for the decision fan-out
+    let mut bcast_targets: Vec<(usize, usize)> = Vec::with_capacity(cfg.n_ues);
     let mut last_decision = Instant::now();
     // issue an initial decision as soon as the first full pool assembles
     let mut first_decision_done = false;
@@ -323,6 +347,16 @@ pub(crate) fn server_loop(
                     } else {
                         stats.feature_offloads += 1;
                     }
+                    // content-addressed cache: an identical payload under
+                    // the same (partition, calibration) key skips the
+                    // executor entirely — the stored result is
+                    // bit-identical to a recompute
+                    if let Some(hit) = cache.lookup(&req) {
+                        stats.offloads_served += 1;
+                        transport.send_to(req.ue_id, Downlink::Result(hit));
+                        continue;
+                    }
+                    cache.note_pending(&req);
                     match executor.as_mut() {
                         Some(ex) => ex.submit(req),
                         None => {
@@ -333,7 +367,7 @@ pub(crate) fn server_loop(
                                 queue_wait: Duration::ZERO,
                                 batch_size: 1,
                             };
-                            route_completion(done, transport, &mut stats);
+                            route_completion(done, transport, &mut stats, &mut cache);
                             // inline serving runs model math inside this
                             // loop: bound the drain by time too, not just
                             // message count, so a flood cannot defer the
@@ -371,7 +405,7 @@ pub(crate) fn server_loop(
             ex.pump(Instant::now());
             for c in ex.try_completions() {
                 worked = true;
-                route_completion(c, transport, &mut stats);
+                route_completion(c, transport, &mut stats, &mut cache);
             }
         }
 
@@ -397,7 +431,14 @@ pub(crate) fn server_loop(
                 Ok(d) => {
                     stats.frames += 1;
                     first_decision_done = true;
-                    broadcast_decision(transport, &alive, &d, cfg.per_ue_decisions);
+                    // fan out through the transport's broadcast: every
+                    // live UE is a target addressing its own action row
+                    // (channel/tcp loop per UE; the reactor encodes the
+                    // shared body once for the whole set)
+                    bcast_targets.clear();
+                    bcast_targets
+                        .extend(alive.iter().filter(|&(_, &a)| a).map(|(&ue, _)| (ue, ue)));
+                    transport.broadcast_decision(&d, &bcast_targets, cfg.per_ue_decisions);
                     // export serving telemetry for the online learner —
                     // non-blocking: a full queue (learner mid-update)
                     // drops the frame and is counted; a gone consumer is
@@ -427,7 +468,7 @@ pub(crate) fn server_loop(
     if let Some(ex) = executor.take() {
         let (rest, xstats) = ex.drain_shutdown();
         for c in rest {
-            route_completion(c, transport, &mut stats);
+            route_completion(c, transport, &mut stats, &mut cache);
         }
         stats.exec = xstats;
     }
@@ -437,6 +478,7 @@ pub(crate) fn server_loop(
     }
     stats.policy_swaps = decisions.swaps_applied();
     stats.downlink_drops = transport.take_drops();
+    stats.cache = cache.stats();
     stats
 }
 
@@ -509,36 +551,6 @@ pub fn drive_env_ues(
     Ok(received)
 }
 
-/// One decision frame to every UE still in the system. With `per_ue`
-/// each UE gets a single-action slim frame (its own action at index 0)
-/// instead of a clone of the full joint vector.
-fn broadcast_decision(
-    transport: &mut dyn ServerTransport,
-    alive: &HashMap<usize, bool>,
-    d: &FrameDecision,
-    per_ue: bool,
-) {
-    for (&ue_id, &is_alive) in alive {
-        if !is_alive {
-            continue;
-        }
-        if per_ue {
-            let Some(&action) = d.actions.get(ue_id) else {
-                continue;
-            };
-            transport.send_to(
-                ue_id,
-                Downlink::Decision(FrameDecision {
-                    frame: d.frame,
-                    actions: vec![action],
-                }),
-            );
-        } else {
-            transport.send_to(ue_id, Downlink::Decision(d.clone()));
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,9 +571,10 @@ mod tests {
                 d_max: 100.0,
             },
         );
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            n
+        ])));
         let cfg = ServerConfig::new(n, Duration::from_millis(5), 3);
         let (server, downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
 
@@ -605,9 +618,10 @@ mod tests {
                 d_max: 100.0,
             },
         );
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 1],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            1
+        ])));
         let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
         let (server, downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();
         server
@@ -647,9 +661,10 @@ mod tests {
                 d_max: 100.0,
             },
         );
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); 1],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            1
+        ])));
         let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
         let compute = Arc::new(crate::coordinator::executor::SyntheticCompute::new(
             Duration::from_micros(10),
@@ -696,9 +711,10 @@ mod tests {
                 d_max: 100.0,
             },
         );
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            n
+        ])));
         let mut cfg = ServerConfig::new(n, Duration::from_millis(1), 5);
         // capacity-1 feed that nobody drains: a learner stuck in a long
         // PPO round, as far as the server can tell
@@ -740,9 +756,10 @@ mod tests {
                 d_max: 100.0,
             },
         );
-        let dm = DecisionMaker::new(Box::new(StaticDecision {
-            actions: vec![HybridAction::new(5, 0, 0.0, 1.0); n],
-        }));
+        let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![
+            HybridAction::new(5, 0, 0.0, 1.0);
+            n
+        ])));
         // huge frame budget: only disconnection can end the loop quickly
         let cfg = ServerConfig::new(n, Duration::from_millis(5), usize::MAX);
         let (server, _downlinks) = EdgeServer::spawn(cfg, pool, dm, None).unwrap();

@@ -113,6 +113,9 @@ pub struct ShardView<T: ServerTransport> {
     lo: usize,
     len: usize,
     misrouted: usize,
+    /// Reused global-id target scratch for `broadcast_decision` — the
+    /// per-tick translation allocates nothing at steady state.
+    bcast_scratch: Vec<(usize, usize)>,
 }
 
 impl<T: ServerTransport> ShardView<T> {
@@ -122,6 +125,7 @@ impl<T: ServerTransport> ShardView<T> {
             lo,
             len,
             misrouted: 0,
+            bcast_scratch: Vec::new(),
         }
     }
 
@@ -193,6 +197,26 @@ impl<T: ServerTransport> ServerTransport for ShardView<T> {
             other => other,
         };
         self.inner.send_to(global, frame);
+    }
+
+    fn broadcast_decision(
+        &mut self,
+        d: &super::protocol::FrameDecision,
+        targets: &[(usize, usize)],
+        per_ue: bool,
+    ) {
+        // translate slice-local targets to the fleet-wide ids the inner
+        // transport speaks; action indices stay local (the decision's
+        // action table is the shard's own). The scratch is reused, so a
+        // tick's translation is alloc-free at steady state.
+        self.bcast_scratch.clear();
+        self.bcast_scratch.extend(
+            targets
+                .iter()
+                .filter(|&&(ue, _)| ue < self.len)
+                .map(|&(ue, idx)| (self.lo + ue, idx)),
+        );
+        self.inner.broadcast_decision(d, &self.bcast_scratch, per_ue);
     }
 
     fn take_drops(&mut self) -> usize {

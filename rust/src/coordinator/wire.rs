@@ -222,9 +222,12 @@ fn crc32_update(mut c: u32, data: &[u8]) -> u32 {
 
 // ---------------------------------------------------------------- encoding
 
-struct Enc(Vec<u8>);
+/// Little-endian field writer appending to a caller buffer — every encode
+/// path borrows the destination, so a reused buffer means zero
+/// allocations at steady state (the PR-9 `_into` idiom).
+struct Enc<'a>(&'a mut Vec<u8>);
 
-impl Enc {
+impl Enc<'_> {
     fn u8(&mut self, v: u8) {
         self.0.push(v);
     }
@@ -246,11 +249,12 @@ impl Enc {
     }
 }
 
-/// Tag + body bytes of a frame (ids are encoded as u32 — the protocol
-/// caps a deployment at 2^32 UEs/classes, far beyond the state vector).
-fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
-    let mut e = Enc(Vec::with_capacity(64));
-    let tag = match frame {
+/// Append one frame's body to `out` and return its tag (ids are encoded
+/// as u32 — the protocol caps a deployment at 2^32 UEs/classes, far
+/// beyond the state vector).
+fn encode_body_append(frame: &Frame, out: &mut Vec<u8>) -> u8 {
+    let mut e = Enc(out);
+    match frame {
         Frame::Hello { ue_id } => {
             e.u32(*ue_id as u32);
             TAG_HELLO
@@ -289,31 +293,31 @@ fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
         Frame::Down(d) => encode_down(&mut e, d),
         Frame::DownTo { ue_id, down } => {
             e.u32(*ue_id as u32);
-            let mut inner = Enc(Vec::with_capacity(64));
-            let inner_tag = encode_down(&mut inner, down);
-            e.u8(inner_tag);
-            e.bytes(&inner.0);
+            // inner downlink: tag byte + length-prefixed body, encoded in
+            // place — the placeholders are patched once the body size is
+            // known, so no intermediate buffer is ever materialized
+            let slot_at = e.0.len();
+            e.u8(0); // inner-tag placeholder
+            e.u32(0); // inner-length placeholder
+            let body_at = e.0.len();
+            let inner_tag = encode_down(&mut e, down);
+            let inner_len = (e.0.len() - body_at) as u32;
+            if let Some(t) = e.0.get_mut(slot_at) {
+                *t = inner_tag;
+            }
+            if let Some(slot) = e.0.get_mut(slot_at + 1..body_at) {
+                slot.copy_from_slice(&inner_len.to_le_bytes());
+            }
             TAG_DOWN_TO
         }
-    };
-    (tag, e.0)
+    }
 }
 
 /// Body of one downlink frame, shared by the plain [`Frame::Down`]
 /// encoding and the addressed [`Frame::DownTo`] envelope.
 fn encode_down(e: &mut Enc, down: &Downlink) -> u8 {
     match down {
-        Downlink::Decision(d) => {
-            e.u32(d.frame as u32);
-            e.u32(d.actions.len() as u32);
-            for a in &d.actions {
-                e.u32(a.b as u32);
-                e.u32(a.c as u32);
-                e.f32(a.p_raw);
-                e.f64(a.p_watts);
-            }
-            TAG_DECISION
-        }
+        Downlink::Decision(d) => encode_decision_body(d.frame, &d.actions, e.0),
         Downlink::Result(r) => {
             e.u32(r.ue_id as u32);
             e.u64(r.task_id);
@@ -342,16 +346,106 @@ fn header_prefix(tag: u8, body_len: usize) -> [u8; 8] {
     [m0, m1, VERSION, tag, l0, l1, l2, l3]
 }
 
-/// Encode one frame into a fresh buffer (header + body).
+/// Patch the placeholder header of the frame starting at `start`:
+/// `out[start..]` must hold `HEADER_LEN` reserved bytes followed by the
+/// body. Writes the prefix and the CRC over prefix + body.
+fn finish_frame(out: &mut Vec<u8>, start: usize, tag: u8) {
+    let body_len = out.len().saturating_sub(start + HEADER_LEN);
+    let prefix = header_prefix(tag, body_len);
+    let body = out.get(start + HEADER_LEN..).unwrap_or(&[]);
+    let crc = crc32_parts(&[&prefix, body]);
+    if let Some(slot) = out.get_mut(start..start + 8) {
+        slot.copy_from_slice(&prefix);
+    }
+    if let Some(slot) = out.get_mut(start + 8..start + HEADER_LEN) {
+        slot.copy_from_slice(&crc.to_le_bytes());
+    }
+}
+
+/// Encode one frame (header + body), **appending** to `out` — the
+/// write-buffer form: a transport encodes straight into its per-connection
+/// buffer with no intermediate `Vec`. Returns the frame's byte length.
+pub fn encode_frame_append(frame: &Frame, out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; HEADER_LEN]);
+    let tag = encode_body_append(frame, out);
+    finish_frame(out, start, tag);
+    out.len() - start
+}
+
+/// Encode one frame into a caller buffer, replacing its contents. A
+/// buffer reused across frames makes the encode path allocation-free at
+/// steady state (asserted by `rust/tests/zero_alloc.rs`).
+pub fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) {
+    out.clear();
+    encode_frame_append(frame, out);
+}
+
+/// Encode one frame into a fresh buffer (header + body) — thin wrapper
+/// over [`encode_frame_into`] for callers that don't reuse buffers.
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
-    let (tag, body) = encode_body(frame);
-    let prefix = header_prefix(tag, body.len());
-    let crc = crc32_parts(&[&prefix, &body]);
-    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
-    out.extend_from_slice(&prefix);
-    out.extend_from_slice(&crc.to_le_bytes());
-    out.extend_from_slice(&body);
+    let mut out = Vec::new();
+    encode_frame_append(frame, &mut out);
     out
+}
+
+// ----------------------------------------------- single-encode fan-out
+
+/// Append the **body bytes** of one downlink (no header) to `out` and
+/// return its tag. This is the single-encode half of a fan-out: encode
+/// the shared `Decision` body once, then stamp it into per-connection
+/// frames with [`encode_down_to_raw`] / [`encode_down_raw`] — a byte copy
+/// per subscriber instead of a re-encode per subscriber.
+pub fn encode_down_body(down: &Downlink, out: &mut Vec<u8>) -> u8 {
+    let mut e = Enc(out);
+    encode_down(&mut e, down)
+}
+
+/// Append the body bytes of a `Decision` downlink built from a frame
+/// number and an action slice, returning [`TAG_DECISION`]. Lets a per-UE
+/// fan-out stamp slim one-action decisions straight from the shared
+/// action table without materializing a `FrameDecision` (and its `Arc`
+/// allocation) per target.
+pub fn encode_decision_body(frame: usize, actions: &[HybridAction], out: &mut Vec<u8>) -> u8 {
+    let mut e = Enc(out);
+    e.u32(frame as u32);
+    e.u32(actions.len() as u32);
+    for a in actions {
+        e.u32(a.b as u32);
+        e.u32(a.c as u32);
+        e.f32(a.p_raw);
+        e.f64(a.p_watts);
+    }
+    TAG_DECISION
+}
+
+/// Append a complete [`Frame::Down`] frame built around a pre-encoded
+/// downlink body (from [`encode_down_body`]). Byte-identical to
+/// `encode_frame_append(&Frame::Down(d), out)` for the same downlink.
+/// Returns the frame's byte length.
+pub fn encode_down_raw(tag: u8, body: &[u8], out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; HEADER_LEN]);
+    out.extend_from_slice(body);
+    finish_frame(out, start, tag);
+    out.len() - start
+}
+
+/// Append a complete [`Frame::DownTo`] envelope around a pre-encoded
+/// downlink body (from [`encode_down_body`]). Byte-identical to
+/// `encode_frame_append(&Frame::DownTo { ue_id, down }, out)` for the
+/// same downlink — only the outer CRC differs per `ue_id`, so a fleet
+/// broadcast encodes the body once and pays a copy + CRC per connection.
+/// Returns the frame's byte length.
+pub fn encode_down_to_raw(ue_id: usize, tag: u8, body: &[u8], out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; HEADER_LEN]);
+    let mut e = Enc(out);
+    e.u32(ue_id as u32);
+    e.u8(tag);
+    e.bytes(body);
+    finish_frame(out, start, TAG_DOWN_TO);
+    out.len() - start
 }
 
 // ---------------------------------------------------------------- decoding
@@ -476,7 +570,7 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
             }
             Frame::Down(Downlink::Decision(FrameDecision {
                 frame: frame_no,
-                actions,
+                actions: actions.into(),
             }))
         }
         TAG_RESULT => {
@@ -505,8 +599,10 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
         }
         TAG_ERROR => {
             let task_id = d.u64()?;
-            let error = String::from_utf8(d.bytes()?.to_vec())
-                .map_err(|e| WireError::Malformed(format!("error text is not utf-8: {e}")))?;
+            // lossy on purpose: the error text is diagnostic, and a
+            // hostile or corrupt string must not kill an otherwise-valid
+            // NACK frame — replacement characters beat a dead session
+            let error = String::from_utf8_lossy(d.bytes()?).into_owned();
             Frame::Down(Downlink::Error { task_id, error })
         }
         TAG_SHUTDOWN => Frame::Down(Downlink::Shutdown),
@@ -624,11 +720,21 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> 
     w.write_all(&buf).map_err(WireError::Io)
 }
 
-/// Read exactly one frame from a blocking byte stream.
+/// Read exactly one frame from a blocking byte stream — thin wrapper
+/// over [`read_frame_into`] for callers that don't reuse buffers.
 ///
 /// A clean EOF *between* frames is [`WireError::Closed`] (the peer hung
 /// up); an EOF *inside* a frame is [`WireError::Truncated`].
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut body = Vec::new();
+    read_frame_into(r, &mut body)
+}
+
+/// [`read_frame`] with a caller-owned body scratch buffer: `body` is
+/// cleared and refilled with the frame body, so a buffer reused across
+/// frames makes the read path allocation-free once it has grown to the
+/// session's largest body (asserted by `rust/tests/zero_alloc.rs`).
+pub fn read_frame_into<R: Read>(r: &mut R, body: &mut Vec<u8>) -> Result<Frame, WireError> {
     let mut header = [0u8; HEADER_LEN];
     let mut have = 0usize;
     while have < HEADER_LEN {
@@ -650,8 +756,9 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         }
     }
     let h = parse_header(&header)?;
-    let mut body = vec![0u8; h.body_len];
-    r.read_exact(&mut body).map_err(|e| {
+    body.clear();
+    body.resize(h.body_len, 0);
+    r.read_exact(body).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof {
             WireError::Truncated {
                 have: HEADER_LEN,
@@ -661,11 +768,88 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
             WireError::Io(e)
         }
     })?;
-    let got = crc32_parts(&[&h.prefix, &body]);
+    let got = crc32_parts(&[&h.prefix, body]);
     if got != h.crc {
         return Err(WireError::Corrupt { expect: h.crc, got });
     }
-    decode_body(h.tag, &body)
+    decode_body(h.tag, body)
+}
+
+// ---------------------------------------------------------------- pooling
+
+/// How many recycled buffers one size class retains — enough to cover a
+/// handful of in-flight bodies per size without hoarding memory.
+const POOL_PER_CLASS: usize = 8;
+/// Size classes: powers of two from 2^0 up to 2^POOL_CLASSES-1 bytes
+/// (1 MiB). Larger buffers are allocated and dropped normally — at that
+/// size the allocation is noise next to the copy.
+const POOL_CLASSES: usize = 21;
+
+/// A small size-keyed recycler for frame/payload byte buffers.
+///
+/// Buffers are binned by power-of-two capacity class; [`FramePool::get`]
+/// pops a cleared buffer of at least the requested capacity (allocating
+/// one on miss), [`FramePool::put`] returns a spent buffer to its class.
+/// Each class keeps at most [`POOL_PER_CLASS`] buffers, so the pool's
+/// footprint is bounded by construction. Single-threaded by design —
+/// every user owns its pool (reactor sweep loop, offload cache); there is
+/// no lock on the hot path.
+#[derive(Debug)]
+pub struct FramePool {
+    classes: Vec<Vec<Vec<u8>>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Power-of-two size class of a capacity (0 → class 0).
+fn pool_class(capacity: usize) -> usize {
+    capacity.next_power_of_two().trailing_zeros() as usize
+}
+
+impl Default for FramePool {
+    fn default() -> FramePool {
+        FramePool::new()
+    }
+}
+
+impl FramePool {
+    pub fn new() -> FramePool {
+        FramePool {
+            classes: (0..POOL_CLASSES).map(|_| Vec::new()).collect(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// An empty buffer with at least `min_capacity` bytes of capacity —
+    /// recycled when the class has one, freshly allocated otherwise.
+    pub fn get(&mut self, min_capacity: usize) -> Vec<u8> {
+        let class = pool_class(min_capacity);
+        if let Some(buf) = self.classes.get_mut(class).and_then(|c| c.pop()) {
+            self.hits += 1;
+            return buf;
+        }
+        self.misses += 1;
+        // allocate the full class size so the buffer re-bins to the same
+        // class on return, whatever length it ends up holding
+        Vec::with_capacity(min_capacity.max(1).next_power_of_two())
+    }
+
+    /// Return a spent buffer to the pool (cleared). Buffers above the
+    /// largest class, and overflow beyond the per-class cap, are dropped.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        let class = pool_class(buf.capacity());
+        let Some(bin) = self.classes.get_mut(class) else { return };
+        if bin.len() < POOL_PER_CLASS {
+            buf.clear();
+            bin.push(buf);
+        }
+    }
+
+    /// (recycled, freshly-allocated) counts since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
 }
 
 #[cfg(test)]
@@ -712,7 +896,7 @@ mod tests {
             Frame::Up(Uplink::Goodbye { ue_id: 2 }),
             Frame::Down(Downlink::Decision(FrameDecision {
                 frame: 11,
-                actions: vec![HybridAction::new(3, 1, 0.5, 1.0); 4],
+                actions: vec![HybridAction::new(3, 1, 0.5, 1.0); 4].into(),
             })),
             Frame::Down(Downlink::Result(InferenceResult {
                 ue_id: 5,
@@ -730,7 +914,7 @@ mod tests {
                 ue_id: 9_001,
                 down: Downlink::Decision(FrameDecision {
                     frame: 4,
-                    actions: vec![HybridAction::new(1, 0, -0.25, 1.0)],
+                    actions: vec![HybridAction::new(1, 0, -0.25, 1.0)].into(),
                 }),
             },
             Frame::DownTo {
@@ -860,5 +1044,204 @@ mod tests {
         let mut buf = encode_frame(&Frame::Down(Downlink::Shutdown));
         buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(decode_frame(&buf), Err(WireError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn non_utf8_error_text_is_decoded_lossily_not_rejected() {
+        // regression: a NACK whose error string is invalid UTF-8 must
+        // still decode (lossily) — it used to kill the whole frame
+        let mut body = Vec::new();
+        body.extend_from_slice(&13u64.to_le_bytes()); // task_id
+        let text = [b'b', b'a', b'd', 0xFF, 0xFE, b'!'];
+        body.extend_from_slice(&(text.len() as u32).to_le_bytes());
+        body.extend_from_slice(&text);
+        let prefix = header_prefix(TAG_ERROR, body.len());
+        let crc = crc32_parts(&[&prefix, &body]);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&prefix);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&body);
+        match decode_frame(&buf) {
+            Ok((Frame::Down(Downlink::Error { task_id, error }), used)) => {
+                assert_eq!(task_id, 13);
+                assert_eq!(used, buf.len());
+                assert!(error.starts_with("bad"), "got: {error:?}");
+                assert!(error.contains('\u{FFFD}'), "lossy replacement expected: {error:?}");
+            }
+            other => panic!("expected a decoded Error frame, got {other:?}"),
+        }
+        // same bytes inside a DownTo envelope must survive too
+        let mut outer_body = Vec::new();
+        outer_body.extend_from_slice(&7u32.to_le_bytes());
+        outer_body.push(TAG_ERROR);
+        outer_body.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        outer_body.extend_from_slice(&body);
+        let prefix = header_prefix(TAG_DOWN_TO, outer_body.len());
+        let crc = crc32_parts(&[&prefix, &outer_body]);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&prefix);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&outer_body);
+        match decode_frame(&buf) {
+            Ok((Frame::DownTo { ue_id: 7, down: Downlink::Error { .. } }, _)) => {}
+            other => panic!("expected a decoded DownTo NACK, got {other:?}"),
+        }
+    }
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { ue_id: 7 },
+            Frame::Welcome { ue_id: 7 },
+            offload_frame(),
+            Frame::Down(Downlink::Decision(FrameDecision {
+                frame: 11,
+                actions: vec![HybridAction::new(3, 1, 0.5, 1.0); 4].into(),
+            })),
+            Frame::Down(Downlink::Result(InferenceResult {
+                ue_id: 5,
+                task_id: 77,
+                logits: vec![0.1, -0.2, 0.9],
+                argmax: 2,
+                edge_latency_s: 0.003,
+            })),
+            Frame::Down(Downlink::Error {
+                task_id: 13,
+                error: "no calibration".into(),
+            }),
+            Frame::DownTo {
+                ue_id: 9_001,
+                down: Downlink::Decision(FrameDecision {
+                    frame: 4,
+                    actions: vec![HybridAction::new(1, 0, -0.25, 1.0)].into(),
+                }),
+            },
+            Frame::DownTo {
+                ue_id: 123,
+                down: Downlink::Shutdown,
+            },
+        ]
+    }
+
+    #[test]
+    fn into_and_append_variants_match_the_allocating_encoder() {
+        let mut reused = Vec::new();
+        let mut appended = Vec::new();
+        let mut expect_cat = Vec::new();
+        for f in all_frames() {
+            let fresh = encode_frame(&f);
+            encode_frame_into(&f, &mut reused);
+            assert_eq!(reused, fresh, "encode_frame_into diverged on {f:?}");
+            let n = encode_frame_append(&f, &mut appended);
+            assert_eq!(n, fresh.len());
+            expect_cat.extend_from_slice(&fresh);
+        }
+        assert_eq!(appended, expect_cat, "appended frames must concatenate cleanly");
+        // and the concatenation decodes back frame by frame
+        let mut rest = &appended[..];
+        for f in all_frames() {
+            let (back, used) = decode_frame(rest).expect("decode appended");
+            assert_eq!(back, f);
+            rest = &rest[used..];
+        }
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn raw_fanout_frames_are_byte_identical_to_reencoding() {
+        let downs = vec![
+            Downlink::Decision(FrameDecision {
+                frame: 3,
+                actions: vec![HybridAction::new(2, 1, 0.25, 1.0); 6].into(),
+            }),
+            Downlink::Result(InferenceResult {
+                ue_id: 1,
+                task_id: 5,
+                logits: vec![1.0, 2.0],
+                argmax: 1,
+                edge_latency_s: 0.01,
+            }),
+            Downlink::Error {
+                task_id: 9,
+                error: "nope".into(),
+            },
+            Downlink::Shutdown,
+        ];
+        let mut body = Vec::new();
+        for down in downs {
+            body.clear();
+            let tag = encode_down_body(&down, &mut body);
+            // plain Down frame from the shared body
+            let mut raw = Vec::new();
+            let n = encode_down_raw(tag, &body, &mut raw);
+            assert_eq!(n, raw.len());
+            assert_eq!(raw, encode_frame(&Frame::Down(down.clone())));
+            // DownTo envelopes for several UEs from the SAME body bytes
+            for ue_id in [0usize, 7, 41_000] {
+                let mut raw = Vec::new();
+                let n = encode_down_to_raw(ue_id, tag, &body, &mut raw);
+                assert_eq!(n, raw.len());
+                assert_eq!(
+                    raw,
+                    encode_frame(&Frame::DownTo {
+                        ue_id,
+                        down: down.clone()
+                    }),
+                    "fan-out frame for UE {ue_id} diverged on {down:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn read_frame_into_reuses_the_body_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &offload_frame()).unwrap();
+        write_frame(&mut wire, &Frame::Down(Downlink::Shutdown)).unwrap();
+        let mut r = &wire[..];
+        let mut body = Vec::new();
+        assert_eq!(read_frame_into(&mut r, &mut body).unwrap(), offload_frame());
+        let cap = body.capacity();
+        assert_eq!(
+            read_frame_into(&mut r, &mut body).unwrap(),
+            Frame::Down(Downlink::Shutdown)
+        );
+        assert_eq!(body.capacity(), cap, "smaller frame must reuse the grown buffer");
+        assert!(matches!(read_frame_into(&mut r, &mut body), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn frame_pool_recycles_by_size_class() {
+        let mut pool = FramePool::new();
+        let mut a = pool.get(100); // class 7 (128)
+        assert!(a.capacity() >= 100);
+        a.extend_from_slice(&[1; 90]);
+        let a_ptr = a.as_ptr();
+        pool.put(a);
+        // same class: the exact buffer comes back, cleared
+        let b = pool.get(128);
+        assert_eq!(b.as_ptr(), a_ptr, "same-class get must recycle");
+        assert!(b.is_empty() && b.capacity() >= 128);
+        // different class: a fresh allocation
+        let c = pool.get(4096);
+        assert!(c.capacity() >= 4096);
+        let (hits, misses) = pool.stats();
+        assert_eq!((hits, misses), (1, 2));
+        // the per-class cap bounds retention
+        for _ in 0..(POOL_PER_CLASS + 5) {
+            pool.put(Vec::with_capacity(64));
+        }
+        let mut served = 0;
+        for _ in 0..(POOL_PER_CLASS + 5) {
+            let before = pool.stats().0;
+            let _ = pool.get(64);
+            if pool.stats().0 > before {
+                served += 1;
+            }
+        }
+        assert_eq!(served, POOL_PER_CLASS, "retention must stop at the cap");
+        // oversized buffers are dropped, never binned
+        pool.put(Vec::with_capacity(4 << 20));
+        let huge = pool.get(4 << 20);
+        assert!(huge.capacity() >= 4 << 20);
     }
 }

@@ -33,7 +33,7 @@ pub mod ue;
 
 use std::time::Duration;
 
-use crate::coordinator::protocol::{Downlink, Uplink};
+use crate::coordinator::protocol::{Downlink, FrameDecision, Uplink};
 use crate::coordinator::wire::WireError;
 
 /// Why a transport can no longer move frames.
@@ -88,6 +88,35 @@ pub trait ServerTransport: Send {
     /// and a client whose bounded write queue overflows may be evicted —
     /// the routing thread never stalls on one peer.
     fn send_to(&mut self, ue_id: usize, frame: Downlink);
+
+    /// Fan one frame's decision out to `targets` — pairs of
+    /// `(ue_id, action_index)` into `d.actions`. With `per_ue` false
+    /// every target receives the full joint decision (sharing the
+    /// action table is an `Arc` refcount bump per target); with `per_ue`
+    /// true each target receives a slim decision holding only its own
+    /// action row. The default is a plain `send_to` loop — transports
+    /// with a cheaper fan-out (the reactor's single-encode broadcast)
+    /// override it, and must stay frame-for-frame equivalent to this
+    /// loop (asserted by `rust/tests/integration_transport.rs`).
+    fn broadcast_decision(&mut self, d: &FrameDecision, targets: &[(usize, usize)], per_ue: bool) {
+        for &(ue_id, idx) in targets {
+            if per_ue {
+                let Some(&action) = d.actions.get(idx) else {
+                    continue;
+                };
+                let actions: std::sync::Arc<[_]> = std::sync::Arc::new([action]);
+                self.send_to(
+                    ue_id,
+                    Downlink::Decision(FrameDecision {
+                        frame: d.frame,
+                        actions,
+                    }),
+                );
+            } else {
+                self.send_to(ue_id, Downlink::Decision(d.clone()));
+            }
+        }
+    }
 
     /// Downlink frames dropped on the floor by backpressure (a bounded
     /// queue or write buffer was full) since the last call — drains the

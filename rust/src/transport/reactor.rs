@@ -34,7 +34,6 @@
 //!   connection: best-effort NACK, close, synthesized `Goodbye`s for its
 //!   registered UEs. Unknown-but-well-framed tags are skipped in place.
 
-use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -46,9 +45,12 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::{ServerTransport, TransportError};
-use crate::coordinator::protocol::{Downlink, SESSION_ERROR_TASK, Uplink};
+use crate::coordinator::protocol::{Downlink, FrameDecision, SESSION_ERROR_TASK, Uplink};
 use crate::coordinator::shard::ShardMap;
-use crate::coordinator::wire::{decode_frame, encode_frame, Frame, WireError};
+use crate::coordinator::wire::{
+    decode_frame, encode_decision_body, encode_down_to_raw, encode_frame_append, Frame, WireError,
+    TAG_DECISION,
+};
 
 /// Reactor sweep knobs. `max_ues`/`n_shards` define the [`ShardMap`]
 /// used for uplink routing; the rest bound per-connection memory.
@@ -90,13 +92,27 @@ pub struct ReactorStats {
     pub goodbyes_synthesized: usize,
 }
 
+/// One message from a shard's server loop to the reactor thread.
+enum DownMsg {
+    /// An individually-addressed downlink frame.
+    One(usize, Downlink),
+    /// A whole tick's decision fan-out as a single channel message: the
+    /// reactor encodes the shared body once and stamps it per target
+    /// connection, instead of N re-encoded `(ue, frame)` sends.
+    Broadcast {
+        d: FrameDecision,
+        targets: Vec<(usize, usize)>,
+        per_ue: bool,
+    },
+}
+
 /// One shard's endpoint on the reactor: an ordinary [`ServerTransport`]
 /// carrying **global** ue ids (wrap it in
 /// [`crate::coordinator::shard::ShardView`] for a slice-local view).
 pub struct ReactorShardTransport {
     shard: usize,
     uplink: Receiver<Uplink>,
-    down_tx: SyncSender<(usize, Downlink)>,
+    down_tx: SyncSender<DownMsg>,
     drops: Arc<AtomicUsize>,
 }
 
@@ -112,7 +128,7 @@ impl ServerTransport for ReactorShardTransport {
     }
 
     fn send_to(&mut self, ue_id: usize, frame: Downlink) {
-        match self.down_tx.try_send((ue_id, frame)) {
+        match self.down_tx.try_send(DownMsg::One(ue_id, frame)) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => {
                 // the reactor is behind on this shard's downlink: drop
@@ -121,6 +137,32 @@ impl ServerTransport for ReactorShardTransport {
                 log::warn!("shard {} downlink queue full — frame to UE {ue_id} dropped", self.shard);
             }
             // reactor gone: the server loop will see Closed on try_recv
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    fn broadcast_decision(&mut self, d: &FrameDecision, targets: &[(usize, usize)], per_ue: bool) {
+        if targets.is_empty() {
+            return;
+        }
+        // the whole fan-out crosses the channel as ONE message — the
+        // reactor side does the single-encode stamping
+        let msg = DownMsg::Broadcast {
+            d: d.clone(),
+            targets: targets.to_vec(),
+            per_ue,
+        };
+        match self.down_tx.try_send(msg) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                // every target misses this tick's decision: count each
+                self.drops.fetch_add(targets.len(), Ordering::Relaxed);
+                log::warn!(
+                    "shard {} downlink queue full — decision broadcast to {} UEs dropped",
+                    self.shard,
+                    targets.len()
+                );
+            }
             Err(TrySendError::Disconnected(_)) => {}
         }
     }
@@ -159,7 +201,7 @@ impl TcpReactor {
             let slice_len = map.slice_of(shard).map(|(_, len)| len).unwrap_or(0);
             // a full per-UE broadcast must fit without forcing drops
             let (up_tx, up_rx) = sync_channel::<Uplink>((2 * slice_len).max(4096));
-            let (down_tx, down_rx) = sync_channel::<(usize, Downlink)>((2 * slice_len).max(1024));
+            let (down_tx, down_rx) = sync_channel::<DownMsg>((2 * slice_len).max(1024));
             let ctr = Arc::new(AtomicUsize::new(0));
             transports.push(ReactorShardTransport {
                 shard,
@@ -187,6 +229,7 @@ impl TcpReactor {
                         shard_drops: drops,
                         conns: Vec::new(),
                         by_ue: vec![None; cfg.max_ues],
+                        body_scratch: Vec::new(),
                         stats: ReactorStats::default(),
                         stop,
                     }
@@ -231,13 +274,72 @@ impl Drop for TcpReactor {
     }
 }
 
+/// A flat per-connection write buffer, drained from the front without
+/// shifting on every flush: `pos` marks how far the socket has consumed;
+/// frames are appended in place (the wire encoders write straight into
+/// [`WriteBuf::append_vec`], no intermediate `Vec` per frame). Once the
+/// flushed prefix dominates, the unflushed tail is compacted down — so at
+/// steady state one grown allocation is reused for the connection's
+/// lifetime (asserted by `rust/tests/zero_alloc.rs`).
+#[derive(Debug, Default)]
+struct WriteBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteBuf {
+    /// Unflushed byte count.
+    fn len(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// The bytes still awaiting the socket.
+    fn pending(&self) -> &[u8] {
+        self.buf.get(self.pos..).unwrap_or(&[])
+    }
+
+    /// The socket accepted `n` more bytes.
+    fn advance(&mut self, n: usize) {
+        self.pos = self.pos.saturating_add(n).min(self.buf.len());
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 && self.pos >= self.buf.len() / 2 {
+            // the flushed prefix dominates: one copy_within reclaims it
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(self.buf.len() - self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Current end of the buffer — pair with [`WriteBuf::truncate_to`]
+    /// to roll back a frame that overflowed the cap (encode first, then
+    /// enforce: cheaper than a pre-encode size pass).
+    fn mark(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn truncate_to(&mut self, mark: usize) {
+        self.buf.truncate(mark);
+    }
+
+    /// The raw append end for the wire encoders.
+    fn append_vec(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
 /// One live connection in the sweep.
 struct Conn {
     stream: TcpStream,
     /// Undecoded inbound bytes (frames straddle reads).
     rbuf: Vec<u8>,
     /// Encoded outbound bytes awaiting socket readiness.
-    wbuf: VecDeque<u8>,
+    wbuf: WriteBuf,
     /// Global ue ids registered on this connection.
     ues: Vec<usize>,
     /// Consecutive dropped downlink frames (slow-consumer eviction).
@@ -258,13 +360,17 @@ struct Reactor {
     map: ShardMap,
     listener: TcpListener,
     up_txs: Vec<SyncSender<Uplink>>,
-    down_rxs: Vec<Receiver<(usize, Downlink)>>,
+    down_rxs: Vec<Receiver<DownMsg>>,
     /// Per-shard backpressure-drop counters, shared with the shard
     /// transports so `take_drops` sees reactor-side write-buffer drops.
     shard_drops: Vec<Arc<AtomicUsize>>,
     conns: Vec<Option<Conn>>,
     /// `by_ue[global_id]` → index into `conns` of the owning connection.
     by_ue: Vec<Option<usize>>,
+    /// Reused downlink-body scratch for the single-encode fan-out: a
+    /// broadcast encodes the shared body here once, then stamps it into
+    /// each target connection's write buffer.
+    body_scratch: Vec<u8>,
     stats: ReactorStats,
     stop: Arc<AtomicBool>,
 }
@@ -307,7 +413,7 @@ impl Reactor {
                     let conn = Conn {
                         stream,
                         rbuf: Vec::new(),
-                        wbuf: VecDeque::new(),
+                        wbuf: WriteBuf::default(),
                         ues: Vec::new(),
                         drop_streak: 0,
                     };
@@ -330,45 +436,103 @@ impl Reactor {
         any
     }
 
-    /// Move every queued (ue, frame) pair from the shards into the
-    /// owning connection's write buffer, as [`Frame::DownTo`] envelopes.
+    /// Move every queued downlink from the shards into the owning
+    /// connections' write buffers, as [`Frame::DownTo`] envelopes. Frames
+    /// are encoded **in place** at the buffer's append end (and rolled
+    /// back if they overflow the cap) — no intermediate `Vec` per frame.
+    /// A [`DownMsg::Broadcast`] encodes its shared decision body once and
+    /// stamps it per target: copy + outer CRC per subscriber, one encode
+    /// per tick.
     fn drain_downlinks(&mut self) -> bool {
         let mut any = false;
         let mut evict: Vec<usize> = Vec::new();
         for shard in 0..self.down_rxs.len() {
             loop {
-                let (ue_id, down) = match self.down_rxs.get(shard).map(|rx| rx.try_recv()) {
-                    Some(Ok(pair)) => pair,
+                let msg = match self.down_rxs.get(shard).map(|rx| rx.try_recv()) {
+                    Some(Ok(m)) => m,
                     // Empty now, or the shard's server loop exited and
                     // dropped its sender — either way nothing to move
                     _ => break,
                 };
                 any = true;
-                let Some(&Some(slot)) = self.by_ue.get(ue_id) else {
-                    // no live session for this UE: expected churn (the
-                    // shard keeps broadcasting through disconnects), not
-                    // a backpressure drop — not counted
-                    continue;
-                };
-                let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
-                    continue;
-                };
-                let bytes = encode_frame(&Frame::DownTo { ue_id, down });
-                if conn.wbuf.len() + bytes.len() > self.cfg.write_buf_cap {
-                    // slow consumer: drop, count against the shard, and
-                    // evict the connection once the streak is long enough
-                    conn.drop_streak += 1;
-                    if let Some(ctr) = self.shard_drops.get(shard) {
-                        ctr.fetch_add(1, Ordering::Relaxed);
+                match msg {
+                    DownMsg::One(ue_id, down) => {
+                        let Some(&Some(slot)) = self.by_ue.get(ue_id) else {
+                            // no live session for this UE: expected churn
+                            // (the shard keeps sending through
+                            // disconnects), not a backpressure drop
+                            continue;
+                        };
+                        let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                            continue;
+                        };
+                        let mark = conn.wbuf.mark();
+                        encode_frame_append(&Frame::DownTo { ue_id, down }, conn.wbuf.append_vec());
+                        if conn.wbuf.len() > self.cfg.write_buf_cap {
+                            conn.wbuf.truncate_to(mark);
+                            Self::count_drop(
+                                conn,
+                                slot,
+                                &self.cfg,
+                                self.shard_drops.get(shard),
+                                &mut evict,
+                            );
+                        } else {
+                            conn.drop_streak = 0;
+                        }
                     }
-                    if conn.drop_streak >= self.cfg.evict_after_drops.max(1)
-                        && !evict.contains(&slot)
-                    {
-                        evict.push(slot);
+                    DownMsg::Broadcast { d, targets, per_ue } => {
+                        let tag = if per_ue {
+                            TAG_DECISION
+                        } else {
+                            // single-encode fan-out: the shared joint body
+                            // is encoded once for the whole target set
+                            self.body_scratch.clear();
+                            encode_decision_body(d.frame, &d.actions, &mut self.body_scratch)
+                        };
+                        for &(ue_id, idx) in &targets {
+                            let Some(&Some(slot)) = self.by_ue.get(ue_id) else {
+                                continue;
+                            };
+                            if per_ue {
+                                // slim per-target body straight from the
+                                // shared action table (no Arc per UE; the
+                                // tag is TAG_DECISION by construction)
+                                let Some(act) = d.actions.get(idx) else {
+                                    continue;
+                                };
+                                self.body_scratch.clear();
+                                encode_decision_body(
+                                    d.frame,
+                                    std::slice::from_ref(act),
+                                    &mut self.body_scratch,
+                                );
+                            }
+                            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut)
+                            else {
+                                continue;
+                            };
+                            let mark = conn.wbuf.mark();
+                            encode_down_to_raw(
+                                ue_id,
+                                tag,
+                                &self.body_scratch,
+                                conn.wbuf.append_vec(),
+                            );
+                            if conn.wbuf.len() > self.cfg.write_buf_cap {
+                                conn.wbuf.truncate_to(mark);
+                                Self::count_drop(
+                                    conn,
+                                    slot,
+                                    &self.cfg,
+                                    self.shard_drops.get(shard),
+                                    &mut evict,
+                                );
+                            } else {
+                                conn.drop_streak = 0;
+                            }
+                        }
                     }
-                } else {
-                    conn.wbuf.extend(bytes);
-                    conn.drop_streak = 0;
                 }
             }
         }
@@ -382,6 +546,25 @@ impl Reactor {
         any
     }
 
+    /// Bookkeeping for one backpressure-dropped downlink frame: count it
+    /// against the shard and queue the connection for eviction once its
+    /// drop streak is long enough.
+    fn count_drop(
+        conn: &mut Conn,
+        slot: usize,
+        cfg: &ReactorConfig,
+        ctr: Option<&Arc<AtomicUsize>>,
+        evict: &mut Vec<usize>,
+    ) {
+        conn.drop_streak += 1;
+        if let Some(ctr) = ctr {
+            ctr.fetch_add(1, Ordering::Relaxed);
+        }
+        if conn.drop_streak >= cfg.evict_after_drops.max(1) && !evict.contains(&slot) {
+            evict.push(slot);
+        }
+    }
+
     /// Write as much buffered output as each socket accepts.
     fn flush_writes(&mut self) -> bool {
         let mut any = false;
@@ -391,14 +574,13 @@ impl Reactor {
             };
             let mut dead = false;
             while !conn.wbuf.is_empty() {
-                let (front, _) = conn.wbuf.as_slices();
-                match conn.stream.write(front) {
+                match conn.stream.write(conn.wbuf.pending()) {
                     Ok(0) => {
                         dead = true;
                         break;
                     }
                     Ok(n) => {
-                        conn.wbuf.drain(..n);
+                        conn.wbuf.advance(n);
                         conn.drop_streak = 0;
                         any = true;
                     }
@@ -522,11 +704,12 @@ impl Reactor {
                 if !conn.ues.contains(&ue_id) {
                     conn.ues.push(ue_id);
                 }
-                let bytes = encode_frame(&Frame::Welcome { ue_id });
-                if conn.wbuf.len() + bytes.len() > self.cfg.write_buf_cap {
+                let mark = conn.wbuf.mark();
+                encode_frame_append(&Frame::Welcome { ue_id }, conn.wbuf.append_vec());
+                if conn.wbuf.len() > self.cfg.write_buf_cap {
+                    conn.wbuf.truncate_to(mark);
                     return Some(Close::Evicted);
                 }
-                conn.wbuf.extend(bytes);
                 None
             }
             Frame::Up(up) => {
@@ -586,12 +769,16 @@ impl Reactor {
 
     /// Best-effort session NACK into the connection's write buffer.
     fn queue_nack(&mut self, conn: &mut Conn, error: String) {
-        let bytes = encode_frame(&Frame::Down(Downlink::Error {
-            task_id: SESSION_ERROR_TASK,
-            error,
-        }));
-        if conn.wbuf.len() + bytes.len() <= self.cfg.write_buf_cap {
-            conn.wbuf.extend(bytes);
+        let mark = conn.wbuf.mark();
+        encode_frame_append(
+            &Frame::Down(Downlink::Error {
+                task_id: SESSION_ERROR_TASK,
+                error,
+            }),
+            conn.wbuf.append_vec(),
+        );
+        if conn.wbuf.len() > self.cfg.write_buf_cap {
+            conn.wbuf.truncate_to(mark);
         }
     }
 
@@ -608,8 +795,7 @@ impl Reactor {
         log::debug!("reactor: closing connection ({label}, {} UEs)", conn.ues.len());
         // last-gasp flush so NACKs/Welcomes already buffered get a chance
         if !conn.wbuf.is_empty() {
-            let (front, _) = conn.wbuf.as_slices();
-            let _ = conn.stream.write(front);
+            let _ = conn.stream.write(conn.wbuf.pending());
         }
         let ues = std::mem::take(&mut conn.ues);
         for ue_id in ues {

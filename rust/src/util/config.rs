@@ -18,6 +18,7 @@
 //! | `MACCI_BENCH_MS`           | [`bench_ms`]             | per-case bench budget |
 //! | `MACCI_BENCH_SERVING_TASKS`| [`bench_serving_tasks`]  | serving-bench tasks per UE |
 //! | `MACCI_BENCH_LOAD_UES`     | [`bench_load_ues`]       | load-bench fleet size cap |
+//! | `MACCI_OFFLOAD_CACHE`      | [`offload_cache`]        | offload result cache entries (0 = off) |
 //! | `MACCI_LOG`                | [`log_level`]            | raw level spelling |
 
 use once_cell::sync::Lazy;
@@ -47,6 +48,8 @@ static BENCH_SERVING_TASKS: Lazy<Option<u64>> =
     Lazy::new(|| raw("MACCI_BENCH_SERVING_TASKS").and_then(|v| v.parse().ok()));
 static BENCH_LOAD_UES: Lazy<Option<u64>> =
     Lazy::new(|| raw("MACCI_BENCH_LOAD_UES").and_then(|v| v.parse().ok()).filter(|&u| u >= 1));
+static OFFLOAD_CACHE: Lazy<Option<usize>> =
+    Lazy::new(|| raw("MACCI_OFFLOAD_CACHE").and_then(|v| v.parse().ok()));
 static LOG_LEVEL: Lazy<Option<String>> = Lazy::new(|| raw("MACCI_LOG"));
 
 /// `MACCI_FORCE_SCALAR`: pin the scalar reference kernels (any non-empty
@@ -96,6 +99,14 @@ pub fn bench_serving_tasks(default: u64) -> u64 {
 /// this low so the smoke step stays bounded.
 pub fn bench_load_ues(default: u64) -> u64 {
     BENCH_LOAD_UES.unwrap_or(default)
+}
+
+/// `MACCI_OFFLOAD_CACHE`: capacity (entries) of the server's
+/// content-addressed offload result cache. 0 (the default, and any
+/// unparsable spelling) disables the cache — today's recompute-always
+/// behavior. See `coordinator::offload_cache`.
+pub fn offload_cache() -> usize {
+    OFFLOAD_CACHE.unwrap_or(0)
 }
 
 /// `MACCI_LOG`: the raw log-level spelling ("debug", "trace", ...).

@@ -50,11 +50,11 @@ fn report(ue_id: usize) -> Uplink {
 /// tests counter-verify that a fan-out publish reached a shard (its
 /// `ServerStats::policy_swaps` ticks).
 struct SwappableStatic {
-    actions: Vec<HybridAction>,
+    actions: std::sync::Arc<[HybridAction]>,
 }
 
 impl DecisionSource for SwappableStatic {
-    fn decide(&mut self, _state: &[f32]) -> Result<Vec<HybridAction>> {
+    fn decide(&mut self, _state: &[f32]) -> Result<std::sync::Arc<[HybridAction]>> {
         Ok(self.actions.clone())
     }
 
@@ -102,7 +102,7 @@ fn sharded_fleet_serves_1k_ues_through_churn() {
         .map(|(shard, t)| {
             let len = map.slice_of(shard).unwrap().1;
             let dm = DecisionMaker::new(Box::new(SwappableStatic {
-                actions: vec![HybridAction::new(0, 0, 0.0, 1.0); len],
+                actions: vec![HybridAction::new(0, 0, 0.0, 1.0); len].into(),
             }));
             (t, pool(len), dm)
         })
@@ -261,7 +261,7 @@ fn reactor_survives_corrupt_and_midframe_peers() {
         1,
         Downlink::Decision(FrameDecision {
             frame: 0,
-            actions: vec![HybridAction::new(0, 0, 0.0, 1.0)],
+            actions: vec![HybridAction::new(0, 0, 0.0, 1.0)].into(),
         }),
     );
     let deadline = Instant::now() + Duration::from_secs(5);
@@ -347,9 +347,9 @@ fn flooded_ue_downlink_drops_are_counted() {
     let (down_tx, down_rx) = sync_channel::<Downlink>(1);
     let transport = ChannelServerTransport::from_parts(uplink_rx, vec![down_tx]);
 
-    let dm = DecisionMaker::new(Box::new(StaticDecision {
-        actions: vec![HybridAction::new(0, 0, 0.0, 1.0)],
-    }));
+    let dm = DecisionMaker::new(Box::new(StaticDecision::new(vec![HybridAction::new(
+        0, 0, 0.0, 1.0,
+    )])));
     let cfg = ServerConfig::new(1, Duration::from_millis(5), usize::MAX);
     let handle = EdgeServer::spawn_on(cfg, pool(1), dm, None, transport).unwrap();
 

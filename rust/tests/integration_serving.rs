@@ -27,9 +27,10 @@ fn pool(n: usize) -> StatePool {
 }
 
 fn decisions(n: usize) -> DecisionMaker {
-    DecisionMaker::new(Box::new(StaticDecision {
-        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n],
-    }))
+    DecisionMaker::new(Box::new(StaticDecision::new(vec![
+        HybridAction::new(0, 0, 0.0, 1.0);
+        n
+    ])))
 }
 
 fn report(ue: usize) -> Uplink {
@@ -326,7 +327,7 @@ fn policy_swap_mid_serve_loses_no_broadcasts() {
 
     // read a few pre-swap frames from UE 0, then publish a new policy
     let pre_swap = 4;
-    let mut first: Option<Vec<HybridAction>> = None;
+    let mut first: Option<std::sync::Arc<[HybridAction]>> = None;
     let mut got = vec![0usize; n];
     for _ in 0..pre_swap {
         match downlinks[0].recv_timeout(Duration::from_secs(5)).unwrap() {
@@ -350,7 +351,7 @@ fn policy_swap_mid_serve_loses_no_broadcasts() {
     assert!(handle.publish(snap));
 
     // drain everything until shutdown, counting per-UE broadcasts
-    let mut last: Option<Vec<HybridAction>> = None;
+    let mut last: Option<std::sync::Arc<[HybridAction]>> = None;
     for (ue, rx) in downlinks.iter().enumerate() {
         loop {
             match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
@@ -436,4 +437,75 @@ fn from_checkpoint_serves_identically_to_from_actors() {
         assert_eq!(a.actions, b.actions, "frame {frame} diverged");
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The offload cache must be invisible in the data: an identical request
+/// stream yields bit-identical per-task logits with the cache on and
+/// off, because a hit replays the stored result verbatim (only the
+/// requester's ids are rewritten). One closed-loop UE keeps the stream
+/// serial, so the hit/miss split is exact: the first occurrence of each
+/// distinct payload misses, every repeat hits.
+#[test]
+fn cached_results_are_bit_identical_to_uncached() {
+    let tasks = 24u64;
+    let distinct = 4u64;
+
+    let run = |cache_entries: usize| -> (Vec<Vec<u32>>, ServerStats) {
+        let compute = Arc::new(SyntheticCompute::new(Duration::from_micros(50)));
+        let elems = compute.image_elems;
+        let mut cfg = ServerConfig::new(1, Duration::from_millis(10), usize::MAX);
+        cfg.offload_cache = cache_entries;
+        cfg.exec = ExecutorConfig {
+            workers: 2,
+            max_wait: Duration::from_micros(100),
+            ..ExecutorConfig::default()
+        };
+        let compute = Some(compute as Arc<dyn OffloadCompute>);
+        let (server, mut downlinks) =
+            EdgeServer::spawn(cfg, pool(1), decisions(1), compute).unwrap();
+        let rx = downlinks.remove(0);
+        server.uplink.send(report(0)).unwrap();
+
+        let mut logits: Vec<Vec<u32>> = Vec::new();
+        for task in 0..tasks {
+            server
+                .uplink
+                .send(Uplink::Offload(OffloadRequest {
+                    ue_id: 0,
+                    task_id: task,
+                    b: 0,
+                    payload: vec![(task % distinct) as u8 + 1; 4 * elems],
+                    calibration: None,
+                }))
+                .unwrap();
+            loop {
+                match rx.recv_timeout(Duration::from_secs(15)).unwrap() {
+                    Downlink::Result(r) => {
+                        assert_eq!(r.task_id, task);
+                        logits.push(r.logits.iter().map(|l| l.to_bits()).collect());
+                        break;
+                    }
+                    Downlink::Decision(_) => {}
+                    other => panic!("unexpected downlink: {other:?}"),
+                }
+            }
+        }
+        server.uplink.send(Uplink::Goodbye { ue_id: 0 }).unwrap();
+        (logits, server.join())
+    };
+
+    let (uncached, off_stats) = run(0);
+    let (cached, on_stats) = run(64);
+
+    assert_eq!(uncached, cached, "cache changed some task's logits");
+    assert_eq!(
+        off_stats.cache.hits + off_stats.cache.misses,
+        0,
+        "a disabled cache must never be consulted"
+    );
+    assert_eq!(on_stats.cache.misses, distinct, "one miss per distinct payload");
+    assert_eq!(on_stats.cache.hits, tasks - distinct, "every repeat is a hit");
+    assert!(on_stats.cache.bytes_saved > 0);
+    assert_eq!(off_stats.offloads_served as u64, tasks);
+    assert_eq!(on_stats.offloads_served as u64, tasks);
 }

@@ -9,13 +9,16 @@ use std::time::Duration;
 
 use macci::coordinator::decision::{DecisionMaker, StaticDecision};
 use macci::coordinator::executor::{OffloadCompute, SyntheticCompute};
-use macci::coordinator::protocol::UeStateReport;
+use macci::coordinator::protocol::{Downlink, FrameDecision, UeStateReport};
 use macci::coordinator::server::{EdgeServer, ServerConfig};
 use macci::coordinator::state_pool::{StateNorm, StatePool};
+use macci::coordinator::wire::{encode_frame, read_frame, write_frame, Frame, HEADER_LEN};
 use macci::env::HybridAction;
 use macci::transport::channel::channel_transport;
+use macci::transport::reactor::{ReactorConfig, TcpReactor};
 use macci::transport::tcp::{TcpClientTransport, TcpServerTransport};
 use macci::transport::ue::UeClient;
+use macci::transport::{ClientTransport, ServerTransport};
 
 fn pool(n: usize) -> StatePool {
     StatePool::new(
@@ -30,9 +33,10 @@ fn pool(n: usize) -> StatePool {
 }
 
 fn decisions(n: usize) -> DecisionMaker {
-    DecisionMaker::new(Box::new(StaticDecision {
-        actions: vec![HybridAction::new(0, 0, 0.0, 1.0); n],
-    }))
+    DecisionMaker::new(Box::new(StaticDecision::new(vec![
+        HybridAction::new(0, 0, 0.0, 1.0);
+        n
+    ])))
 }
 
 fn report(ue: usize) -> UeStateReport {
@@ -173,6 +177,89 @@ fn server_exits_when_remote_ue_vanishes() {
     );
     assert_eq!(stats.reports, 1);
     assert!(stats.frames >= 1);
+}
+
+/// Read one whole frame (header + body) off a raw socket, bytes as sent.
+fn read_raw_frame(sock: &mut std::net::TcpStream) -> Vec<u8> {
+    use std::io::Read;
+    let mut frame = vec![0u8; HEADER_LEN];
+    sock.read_exact(&mut frame).expect("frame header");
+    let len = u32::from_le_bytes([frame[4], frame[5], frame[6], frame[7]]) as usize;
+    frame.resize(HEADER_LEN + len, 0);
+    sock.read_exact(&mut frame[HEADER_LEN..]).expect("frame body");
+    frame
+}
+
+/// The reactor's single-encode broadcast must stay frame-for-frame
+/// equivalent to the trait-default per-target `send_to` loop (the
+/// contract documented on `ServerTransport::broadcast_decision`).
+/// Asserted end to end, for both fan-out shapes: the bytes a multiplexed
+/// connection reads off its socket are identical to re-encoding the
+/// `DownTo` envelopes around whatever the default loop delivers, and a
+/// plain single-UE client decodes the same downlink value.
+#[test]
+fn reactor_broadcast_matches_the_per_ue_send_loop() {
+    let (reactor, mut shards) =
+        TcpReactor::bind("127.0.0.1:0", ReactorConfig::new(3, 1)).unwrap();
+    let addr = reactor.local_addr();
+
+    // UEs 0 and 1 share one multiplexed socket; UE 2 rides the plain
+    // single-UE client transport
+    let mut multi = std::net::TcpStream::connect(addr).unwrap();
+    multi.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for ue in [0usize, 1] {
+        write_frame(&mut multi, &Frame::Hello { ue_id: ue }).unwrap();
+        match read_frame(&mut multi).unwrap() {
+            Frame::Welcome { ue_id } => assert_eq!(ue_id, ue),
+            other => panic!("expected a welcome, got {other:?}"),
+        }
+    }
+    let mut single = TcpClientTransport::connect(addr, 2).unwrap();
+
+    // an asymmetric action table and a shuffled target → index mapping:
+    // any mix-up in addressing or slicing changes some frame's bytes
+    let d = FrameDecision {
+        frame: 7,
+        actions: vec![
+            HybridAction::new(1, 0, -0.5, 1.0),
+            HybridAction::new(2, 1, 0.25, 1.0),
+            HybridAction::new(3, 0, 0.75, 1.0),
+        ]
+        .into(),
+    };
+    let targets = [(0usize, 2usize), (1, 0), (2, 1)];
+
+    for per_ue in [false, true] {
+        // reference: the default send_to loop on the in-process
+        // transport, fed the same decision and targets
+        let (mut reference, ref_clients) = channel_transport(3);
+        reference.broadcast_decision(&d, &targets, per_ue);
+        let expected: Vec<Downlink> = ref_clients
+            .into_iter()
+            .map(|mut c| {
+                c.recv_timeout(Duration::from_secs(5))
+                    .unwrap()
+                    .expect("reference downlink")
+            })
+            .collect();
+
+        shards[0].broadcast_decision(&d, &targets, per_ue);
+
+        for ue in [0usize, 1] {
+            let got = read_raw_frame(&mut multi);
+            let want = encode_frame(&Frame::DownTo {
+                ue_id: ue,
+                down: expected[ue].clone(),
+            });
+            assert_eq!(got, want, "frame to UE {ue} (per_ue = {per_ue}) diverged");
+        }
+        let got = single
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap()
+            .expect("broadcast to UE 2");
+        assert_eq!(got, expected[2], "UE 2 (per_ue = {per_ue}) diverged");
+    }
+    reactor.stop();
 }
 
 /// Reconnection after a clean goodbye: the server frees the ue_id slot

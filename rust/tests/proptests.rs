@@ -147,7 +147,7 @@ fn arbitrary_frame(g: &mut macci::util::check::Gen) -> Frame {
             ue_id: g.usize_in(0, 10_000),
             down: Downlink::Decision(FrameDecision {
                 frame: g.usize_in(0, 10_000),
-                actions: vec![HybridAction::new(g.usize_in(0, 5), 0, 0.0, 1.0)],
+                actions: vec![HybridAction::new(g.usize_in(0, 5), 0, 0.0, 1.0)].into(),
             }),
         },
         _ => Frame::Down(Downlink::Shutdown),
@@ -951,6 +951,130 @@ fn update_is_thread_count_invariant() {
                     .map_err(|e| format!("actor n={n} w=1 vs w={w}: {e}"))?;
                 net_states_identical(c1, cw)
                     .map_err(|e| format!("critic n={n} w=1 vs w={w}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ offload cache
+
+use macci::coordinator::offload_cache::{key_head, OffloadCache};
+
+/// A random offload: partition, optional calibration, random payload.
+fn arbitrary_offload(g: &mut macci::util::check::Gen, ue_id: usize) -> OffloadRequest {
+    let len = g.usize_in(0, 48);
+    OffloadRequest {
+        ue_id,
+        task_id: g.rng.next_u64(),
+        b: g.usize_in(0, 5),
+        payload: (0..len).map(|_| (g.rng.next_u64() & 0xFF) as u8).collect(),
+        calibration: if g.bool() {
+            Some((g.f64_in(-4.0, 0.0) as f32, g.f64_in(0.0, 4.0) as f32))
+        } else {
+            None
+        },
+    }
+}
+
+/// Calibration compared the way the cache key compares it: exact bits.
+fn cal_bits(c: Option<(f32, f32)>) -> Option<(u32, u32)> {
+    c.map(|(lo, hi)| (lo.to_bits(), hi.to_bits()))
+}
+
+#[test]
+fn offload_cache_serves_exactly_byte_identical_requests() {
+    // the content-addressed key: a cached result is replayed for a later
+    // request iff partition, calibration bits and payload bytes all match
+    // — never across any difference, whatever the requester's ids are
+    forall(
+        51,
+        200,
+        |g| {
+            let first = arbitrary_offload(g, 1);
+            // half the probes are exact content clones (forced hit path),
+            // half are independent draws (usually a forced miss)
+            let probe = if g.bool() {
+                OffloadRequest {
+                    ue_id: 2,
+                    task_id: g.rng.next_u64(),
+                    b: first.b,
+                    payload: first.payload.clone(),
+                    calibration: first.calibration,
+                }
+            } else {
+                arbitrary_offload(g, 2)
+            };
+            (first, probe)
+        },
+        |(first, probe)| {
+            let mut cache = OffloadCache::new(64);
+            let result = InferenceResult {
+                ue_id: first.ue_id,
+                task_id: first.task_id,
+                logits: vec![0.25, -1.5],
+                argmax: 0,
+                edge_latency_s: 0.125,
+            };
+            cache.note_pending(first);
+            cache.complete(first.ue_id, first.task_id, Some(&result));
+            let same = first.b == probe.b
+                && cal_bits(first.calibration) == cal_bits(probe.calibration)
+                && first.payload == probe.payload;
+            match cache.lookup(probe) {
+                Some(hit) if same => {
+                    if hit.ue_id != probe.ue_id || hit.task_id != probe.task_id {
+                        return Err("hit not rebuilt under the requester's ids".into());
+                    }
+                    if hit.logits != result.logits || hit.argmax != result.argmax {
+                        return Err("hit replayed the wrong result".into());
+                    }
+                    Ok(())
+                }
+                None if !same => Ok(()),
+                Some(_) => Err(format!("cross-served: {probe:?} hit the entry for {first:?}")),
+                None => Err("a byte-identical request missed".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn offload_cache_forced_head_collision_misses_on_byte_compare() {
+    // two different payloads forced onto one KeyHead — a simulated FNV
+    // collision, which `lookup` could never produce on its own — must be
+    // separated by the full byte compare: the impostor misses, the
+    // genuine payload still hits
+    forall(
+        52,
+        200,
+        |g| {
+            let len = g.usize_in(1, 48);
+            let p1: Vec<u8> = (0..len).map(|_| (g.rng.next_u64() & 0xFF) as u8).collect();
+            let mut p2 = p1.clone();
+            // flip one byte: same length, same forced head, new content
+            let at = g.usize_in(0, len);
+            if let Some(byte) = p2.get_mut(at) {
+                *byte ^= 0x5A;
+            }
+            (p1, p2, g.usize_in(0, 5))
+        },
+        |(p1, p2, b)| {
+            let mut cache = OffloadCache::new(8);
+            let head = key_head(*b, None, p1);
+            let result = InferenceResult {
+                ue_id: 0,
+                task_id: 0,
+                logits: vec![1.0],
+                argmax: 0,
+                edge_latency_s: 0.01,
+            };
+            cache.insert_keyed(head, p1.clone(), &result);
+            if cache.lookup_keyed(head, p2, 9, 9).is_some() {
+                return Err("a forced head collision was served across payloads".into());
+            }
+            if cache.lookup_keyed(head, p1, 9, 9).is_none() {
+                return Err("the genuine payload no longer hits".into());
             }
             Ok(())
         },

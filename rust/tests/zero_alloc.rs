@@ -1,0 +1,163 @@
+//! Proof of the data plane's alloc-free steady state (DESIGN.md
+//! §Data-Plane): a counting global allocator wraps the system allocator
+//! and the single test in this binary (single on purpose — a sibling
+//! test running in parallel would pollute the counters) drives the
+//! serving hot paths with warmed buffers, asserting the allocation
+//! counter does not move:
+//!
+//! * encode → write: [`encode_frame_into`] / [`encode_frame_append`]
+//!   into a reused wire buffer,
+//! * decision fan-out: one [`encode_decision_body`] plus per-connection
+//!   [`encode_down_to_raw`] stamps,
+//! * read → route: [`read_frame_into`] with a reused body scratch,
+//! * [`FramePool`] get/put recycling within one size class.
+//!
+//! ci.sh runs this file as its own step (`cargo test --test zero_alloc`)
+//! so a regression fails CI loudly instead of surfacing as a slow drift
+//! in bench numbers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use macci::coordinator::protocol::{UeStateReport, Uplink};
+use macci::coordinator::wire::{
+    encode_decision_body, encode_down_to_raw, encode_frame_append, encode_frame_into,
+    read_frame_into, Frame, FramePool, TAG_DECISION,
+};
+use macci::env::HybridAction;
+
+/// Counts every allocator entry point that hands out or regrows memory.
+/// Frees are deliberately uncounted: the invariant under test is "no new
+/// memory on the steady-state path", and shrinking churn would surface
+/// as the matching alloc when the buffer regrows.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocator calls made while running `f`.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    f();
+    ALLOC_CALLS.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn steady_state_serving_paths_do_not_allocate() {
+    let report = Frame::Up(Uplink::Report(UeStateReport {
+        ue_id: 7,
+        tasks_left: 42,
+        compute_left_s: 0.25,
+        offload_left_bits: 1.5e5,
+        distance_m: 63.0,
+    }));
+    let actions: Vec<HybridAction> = (0..32)
+        .map(|i| HybridAction::new(i % 5, i % 4, 0.5, 1.0))
+        .collect();
+
+    // warm every reused buffer once: the first touch may grow capacity.
+    // `wire` is warmed to its *worst case* — the two-frame batch below —
+    // so no measured loop ever outgrows it
+    let mut wire = Vec::new();
+    encode_frame_into(&report, &mut wire);
+    let report_bytes = wire.clone();
+    encode_frame_append(&report, &mut wire);
+    let mut body = Vec::new();
+    let mut conn_buf = Vec::new();
+    encode_decision_body(0, &actions, &mut body);
+    encode_down_to_raw(0, TAG_DECISION, &body, &mut conn_buf);
+    let mut rx_body = Vec::new();
+    read_frame_into(&mut Cursor::new(report_bytes.as_slice()), &mut rx_body)
+        .expect("warmup read");
+
+    // encode → write: a reused buffer takes frame after frame without
+    // touching the allocator
+    let n = allocs_during(|| {
+        for _ in 0..1000 {
+            encode_frame_into(black_box(&report), &mut wire);
+            black_box(wire.as_slice());
+        }
+    });
+    assert_eq!(n, 0, "encode_frame_into allocated on the steady state");
+
+    // appended multi-frame batches: same invariant via _append + clear
+    let n = allocs_during(|| {
+        for _ in 0..1000 {
+            wire.clear();
+            encode_frame_append(black_box(&report), &mut wire);
+            encode_frame_append(black_box(&report), &mut wire);
+            black_box(wire.as_slice());
+        }
+    });
+    assert_eq!(n, 0, "encode_frame_append allocated on the steady state");
+
+    // decision fan-out: the body is encoded once per frame, then stamped
+    // once per connection — no per-subscriber encode, no per-subscriber
+    // allocation
+    let n = allocs_during(|| {
+        for frame in 0..200usize {
+            body.clear();
+            let tag = encode_decision_body(black_box(frame), &actions, &mut body);
+            for ue in 0..32usize {
+                conn_buf.clear();
+                encode_down_to_raw(ue, tag, &body, &mut conn_buf);
+                black_box(conn_buf.as_slice());
+            }
+        }
+    });
+    assert_eq!(n, 0, "decision fan-out allocated on the steady state");
+
+    // read → route: scalar frames decode into a reused body scratch with
+    // nothing left on the heap
+    let n = allocs_during(|| {
+        for _ in 0..1000 {
+            let mut r = Cursor::new(report_bytes.as_slice());
+            let f = read_frame_into(&mut r, &mut rx_body).expect("read warm frame");
+            black_box(&f);
+        }
+    });
+    assert_eq!(n, 0, "read_frame_into allocated on the steady state");
+
+    // pool recycling: after one warmup miss, a get/put cycle inside one
+    // size class never allocates
+    let mut pool = FramePool::new();
+    let warm = pool.get(4096);
+    pool.put(warm);
+    let n = allocs_during(|| {
+        for _ in 0..1000 {
+            let mut buf = pool.get(4096);
+            buf.extend_from_slice(&[0u8; 64]);
+            black_box(buf.as_slice());
+            pool.put(buf);
+        }
+    });
+    assert_eq!(n, 0, "FramePool get/put allocated on the steady state");
+    let (hits, misses) = pool.stats();
+    assert_eq!(misses, 1, "only the warmup get may miss");
+    assert_eq!(hits, 1000, "every steady-state get is a recycle");
+}

@@ -21,6 +21,7 @@ const R1_ZONES: &[&str] = &[
     "coordinator::server",
     "coordinator::executor",
     "coordinator::shard",
+    "coordinator::offload_cache",
     "loadgen",
     "transport",
 ];

@@ -72,6 +72,15 @@ fn update_engine_module_is_patrolled_by_r2_and_r6() {
 }
 
 #[test]
+fn offload_cache_module_is_a_no_panic_zone() {
+    // the content-addressed result cache sits on the serving hot path and
+    // digests request-supplied payload bytes, so it carries the same
+    // no-panic contract as the wire codec and the server loop — R1 must
+    // fire there, with zero pragmas in the real module
+    assert_eq!(rules_of("coordinator::offload_cache", R1_BAD), ["R1", "R1", "R1"]);
+}
+
+#[test]
 fn pragmas_suppress_each_rule_and_record_the_reason() {
     let cases = [
         ("coordinator::wire", R1_SUPPRESSED, "R1"),
